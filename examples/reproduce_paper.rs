@@ -1,0 +1,33 @@
+//! Regenerate every table and figure in the paper's evaluation.
+//!
+//! ```bash
+//! cargo run --release --example reproduce_paper            # all figures
+//! cargo run --release --example reproduce_paper fig15      # one figure
+//! cargo run --release --example reproduce_paper all out/   # + CSV files
+//! ```
+//!
+//! Prints the same rows/series the paper reports, with anchor notes
+//! comparing our values against the numbers printed in the paper text
+//! (Figs. 15, 16, 18). See EXPERIMENTS.md for the recorded comparison.
+
+use dlt::experiments::{run, ALL};
+
+fn main() -> anyhow::Result<()> {
+    dlt::util::logger::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let which = args.first().map(String::as_str).unwrap_or("all");
+    let csv_dir = args.get(1).cloned();
+
+    let names: Vec<&str> =
+        if which == "all" { ALL.to_vec() } else { vec![which] };
+
+    for name in names {
+        let t = run(name)?;
+        println!("{}", t.render_text());
+        if let Some(dir) = &csv_dir {
+            let path = t.write_csv(dir)?;
+            println!("  wrote {path}\n");
+        }
+    }
+    Ok(())
+}

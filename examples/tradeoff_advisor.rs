@@ -1,0 +1,81 @@
+//! §6 trade-off advisor walkthrough — the paper's three user stories
+//! on the Table 5 system.
+//!
+//! ```bash
+//! cargo run --release --example tradeoff_advisor
+//! ```
+
+use dlt::cost::{advise, Advice, Budgets, TradeoffTable};
+use dlt::experiments::params;
+
+fn show(label: &str, advice: &Advice) {
+    match advice {
+        Advice::Use { m, tf, cost } => {
+            println!("{label}: use {m} processors  (T_f {tf:.2}, cost ${cost:.2})")
+        }
+        Advice::Range { lo, hi, recommended } => println!(
+            "{label}: any m in [{lo}, {hi}] works; cheapest is m = {recommended}"
+        ),
+        Advice::Infeasible { min_cost_meeting_time, min_time_within_cost } => {
+            println!("{label}: INFEASIBLE");
+            if let Some(c) = min_cost_meeting_time {
+                println!("   -> meeting the deadline needs >= ${c:.2}");
+            }
+            if let Some(t) = min_time_within_cost {
+                println!("   -> staying in budget needs a deadline >= {t:.2}");
+            }
+        }
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    dlt::util::logger::init();
+    let spec = params::table5();
+    let sweep = TradeoffTable::sweep(&spec)?;
+
+    println!("{:>4} {:>10} {:>10} {:>10}", "m", "T_f", "cost", "grad %");
+    for (k, p) in sweep.points.iter().enumerate() {
+        let g = if k == 0 {
+            String::new()
+        } else {
+            format!("{:+.2}", sweep.gradients[k - 1] * 100.0)
+        };
+        println!("{:>4} {:>10.3} {:>10.2} {:>10}", p.m, p.tf, p.cost, g);
+    }
+    println!();
+
+    // §6.2 — the paper's worked example: budget $3450, 6% rule -> m=5.
+    let s1 = advise(
+        &sweep,
+        &Budgets { cost: Some(3450.0), time: None, gradient_threshold: 0.06 },
+    );
+    show("cost budget $3450 + 6% gradient rule (paper §6.2)", &s1);
+
+    // §6.3 — deadline of 32 s -> paper picks m = 10.
+    let s2 = advise(&sweep, &Budgets { cost: None, time: Some(32.0), gradient_threshold: 0.0 });
+    show("time budget 32s (paper §6.3)", &s2);
+
+    // §6.4 case 1 — overlapping areas (Fig. 19).
+    let s3 = advise(
+        &sweep,
+        &Budgets {
+            cost: Some(sweep.at(12).cost),
+            time: Some(sweep.at(6).tf),
+            gradient_threshold: 0.06,
+        },
+    );
+    show("both budgets, overlap (Fig. 19)", &s3);
+
+    // §6.4 case 2 — disjoint areas (Fig. 20).
+    let s4 = advise(
+        &sweep,
+        &Budgets {
+            cost: Some(sweep.at(4).cost),
+            time: Some(sweep.at(10).tf),
+            gradient_threshold: 0.06,
+        },
+    );
+    show("both budgets, no overlap (Fig. 20)", &s4);
+
+    Ok(())
+}

@@ -1,0 +1,118 @@
+"""AOT compilation: lower the L2 models to HLO text artifacts.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which the rust
+side's XLA (xla_extension 0.5.1) rejects; the text parser reassigns ids
+and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits:
+  pdhg_nv{NV}_nc{NC}_s{STEPS}.hlo.txt   (one per padded LP shape)
+  workload_r{R}_c{C}.hlo.txt            (the per-unit compute kernel)
+  manifest.json                         (shapes + metadata for rust)
+"""
+
+import argparse
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from compile import model  # noqa: E402
+
+# Padded LP shape variants (nv = variables, nc = constraint rows).
+# Small covers every sweep in the paper (N<=3, M<=20 -> NFE needs
+# 181 vars / 183 rows); large covers the solver-scaling benches.
+PDHG_VARIANTS = [
+    (128, 192),
+    (256, 384),
+    (512, 768),
+]
+PDHG_STEPS = 200
+
+WORKLOAD_SHAPE = (128, 128)  # rows x cols, f32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_pdhg(nv: int, nc: int, steps: int) -> str:
+    f64 = jnp.float64
+    spec = jax.ShapeDtypeStruct
+    lowered = jax.jit(model.pdhg_fn(steps)).lower(
+        spec((nc, nv), f64),  # a
+        spec((nv, nc), f64),  # at
+        spec((nc,), f64),     # b
+        spec((nv,), f64),     # c
+        spec((nc,), f64),     # eq_mask
+        spec((nv,), f64),     # x0
+        spec((nc,), f64),     # y0
+        spec((), f64),        # tau
+        spec((), f64),        # sigma
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_workload(rows: int, cols: int) -> str:
+    f32 = jnp.float32
+    spec = jax.ShapeDtypeStruct
+    lowered = jax.jit(model.workload).lower(
+        spec((rows, cols), f32), spec((cols, cols), f32)
+    )
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=PDHG_STEPS)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"pdhg": [], "workload": []}
+
+    for nv, nc in PDHG_VARIANTS:
+        name = f"pdhg_nv{nv}_nc{nc}_s{args.steps}"
+        text = lower_pdhg(nv, nc, args.steps)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["pdhg"].append(
+            {"name": name, "file": f"{name}.hlo.txt", "nv": nv, "nc": nc,
+             "steps": args.steps, "dtype": "f64"}
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    r, c = WORKLOAD_SHAPE
+    name = f"workload_r{r}_c{c}"
+    text = lower_workload(r, c)
+    path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    manifest["workload"].append(
+        {"name": name, "file": f"{name}.hlo.txt", "rows": r, "cols": c,
+         "dtype": "f32"}
+    )
+    print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+        f.write("\n")
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into the L2 HLO)."""
+
+from compile.kernels.chunk import workload_chunk
+from compile.kernels.matvec import matvec
+
+__all__ = ["matvec", "workload_chunk"]

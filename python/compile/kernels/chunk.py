@@ -1,0 +1,56 @@
+"""Layer-1 Pallas kernel: the divisible-load work unit.
+
+The paper's processors burn through "arbitrarily divisible" data. The
+motivating applications (§1.2) are image feature extraction and video
+processing: per-chunk, embarrassingly parallel compute. This kernel is
+that work unit — a feature-extraction-like pipeline over one data
+chunk:
+
+    scores = sum_axis1( relu( chunk @ weights ) )
+
+Tiled over row blocks; the weight matrix stays resident in VMEM across
+the grid (it is a broadcast block), the chunk streams through. One
+execution of the compiled artifact == one work unit; the cluster's
+processors run ``ceil(load * units_per_load)`` executions per received
+fraction, which is how an abstract ``A_j`` maps onto real compute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_R = 128
+
+
+def _chunk_kernel(d_ref, w_ref, o_ref):
+    """One row-block: matmul against the full weight tile, ReLU, reduce."""
+    acc = jnp.maximum(d_ref[...] @ w_ref[...], 0.0)
+    o_ref[...] = jnp.sum(acc, axis=1)
+
+
+def _pick_block(dim: int, preferred: int) -> int:
+    b = min(preferred, dim)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("block_r",))
+def workload_chunk(data, weights, *, block_r: int = DEFAULT_BLOCK_R):
+    """Feature scores for one chunk. ``data``: (r, c), ``weights``: (c, c)."""
+    r, c = data.shape
+    assert weights.shape == (c, c), f"weights {weights.shape} != ({c},{c})"
+    br = _pick_block(r, block_r)
+    return pl.pallas_call(
+        _chunk_kernel,
+        grid=(r // br,),
+        in_specs=[
+            pl.BlockSpec((br, c), lambda i: (i, 0)),
+            pl.BlockSpec((c, c), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((r,), data.dtype),
+        interpret=True,
+    )(data, weights)

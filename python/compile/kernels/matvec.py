@@ -1,0 +1,69 @@
+"""Layer-1 Pallas kernel: blocked dense matrix-vector product.
+
+This is the hot spot of the PDHG LP solver (two matvecs per iteration).
+The kernel tiles ``A`` into ``(bm, bk)`` VMEM blocks and accumulates
+partial dot products over the ``k`` grid dimension — the BlockSpec
+expresses the HBM->VMEM schedule that a CUDA implementation would do
+with threadblocks.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute
+Mosaic custom-calls; interpret mode lowers the kernel to plain HLO so
+the AOT artifact runs on the rust CPU client. On a real TPU the same
+BlockSpecs compile via Mosaic (see DESIGN.md §Hardware-Adaptation).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default VMEM tile. 128 is the MXU-native lane width; a (128, 128) f32
+# block is 64 KiB, so A-block + x-block + out-block stay far below the
+# ~16 MiB VMEM budget even with double buffering.
+DEFAULT_BLOCK_M = 128
+DEFAULT_BLOCK_K = 128
+
+
+def _matvec_kernel(a_ref, x_ref, o_ref):
+    """One (bm, bk) tile: accumulate a_ref @ x_ref into o_ref."""
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += a_ref[...] @ x_ref[...]
+
+
+def _pick_block(dim: int, preferred: int) -> int:
+    """Largest block <= preferred that divides dim."""
+    b = min(preferred, dim)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_k"))
+def matvec(a, x, *, block_m: int = DEFAULT_BLOCK_M, block_k: int = DEFAULT_BLOCK_K):
+    """``a @ x`` via the blocked Pallas kernel.
+
+    ``a``: (m, k), ``x``: (k,). Shapes need not be multiples of the
+    block; the largest divisor <= the preferred block is used.
+    """
+    m, k = a.shape
+    assert x.shape == (k,), f"shape mismatch: {a.shape} @ {x.shape}"
+    bm = _pick_block(m, block_m)
+    bk = _pick_block(k, block_k)
+    grid = (m // bm, k // bk)
+    return pl.pallas_call(
+        _matvec_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+            pl.BlockSpec((bk,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), a.dtype),
+        interpret=True,
+    )(a, x)

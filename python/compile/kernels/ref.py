@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has its reference implementation here;
+``python/tests`` sweeps shapes and dtypes (hypothesis) asserting
+``assert_allclose(kernel, ref)``.
+"""
+
+import jax.numpy as jnp
+
+
+def matvec_ref(a, x):
+    """Reference for ``matvec.matvec``."""
+    return a @ x
+
+
+def workload_chunk_ref(data, weights):
+    """Reference for ``chunk.workload_chunk``."""
+    return jnp.sum(jnp.maximum(data @ weights, 0.0), axis=1)
+
+
+def pdhg_step_ref(a, at, b, c, eq_mask, x, y, tau, sigma):
+    """One PDHG iteration, textbook form (reference for model.pdhg_run).
+
+    LP: min c'x  s.t.  (Ax)_k <= b_k (ineq rows) / == b_k (eq rows),
+    x >= 0. Chambolle-Pock with over-relaxation z = 2x' - x.
+    """
+    xn = jnp.maximum(x - tau * (c + at @ y), 0.0)
+    z = 2.0 * xn - x
+    yn = y + sigma * (a @ z - b)
+    yn = jnp.where(eq_mask, yn, jnp.maximum(yn, 0.0))
+    return xn, yn

@@ -1,0 +1,77 @@
+"""Layer-2 JAX models, calling the Layer-1 Pallas kernels.
+
+Two compute graphs are AOT-compiled for the rust coordinator:
+
+- ``pdhg_run`` — a fixed-step block of PDHG (Chambolle-Pock) iterations
+  for the standardized DLT scheduling LP
+  ``min c'x  s.t.  (Ax)_k <= b_k (ineq) / == b_k (eq),  x >= 0``.
+  The rust driver (rust/src/pdhg) standardizes + pads the LP, picks
+  step sizes from a power-iteration estimate of ||A||, and calls the
+  compiled block in a loop until the KKT residuals converge. Everything
+  matrix-vector inside goes through the Pallas matvec kernel.
+
+- ``workload`` — the divisible-load work unit executed by cluster
+  processors (see kernels/chunk.py).
+
+All arrays are f64 (the rust LP substrate is f64; jax_enable_x64 is set
+in aot.py / tests before tracing).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.chunk import workload_chunk
+from compile.kernels.matvec import matvec
+
+
+def pdhg_run(a, at, b, c, eq_mask, x0, y0, tau, sigma, *, steps: int):
+    """Run ``steps`` PDHG iterations; return iterates and residuals.
+
+    Args:
+      a:       (nc, nv) constraint matrix (padded rows: zeros, b=1).
+      at:      (nv, nc) transpose (passed in to avoid a transpose op on
+               the request path).
+      b:       (nc,) right-hand side.
+      c:       (nv,) objective (padded cols: +1 keeps padding at zero).
+      eq_mask: (nc,) 1.0 where the row is an equality (dual free),
+               0.0 for inequality rows (dual projected onto y >= 0).
+      x0, y0:  warm-start iterates.
+      tau, sigma: scalar step sizes with tau*sigma*||A||^2 < 1.
+      steps:   static iteration count per compiled call.
+
+    Returns:
+      (x, y, primal_res, dual_res, gap): final iterates, infinity-norm
+      primal feasibility residual, dual stationarity residual, and
+      |c'x + b'y| duality gap surrogate.
+    """
+
+    def step(carry, _):
+        x, y = carry
+        xn = jnp.maximum(x - tau * (c + matvec(at, y)), 0.0)
+        z = 2.0 * xn - x
+        yn = y + sigma * (matvec(a, z) - b)
+        yn = jnp.where(eq_mask > 0.5, yn, jnp.maximum(yn, 0.0))
+        return (xn, yn), None
+
+    (x, y), _ = jax.lax.scan(step, (x0, y0), None, length=steps)
+
+    ax_b = matvec(a, x) - b
+    primal = jnp.max(jnp.where(eq_mask > 0.5, jnp.abs(ax_b), jnp.maximum(ax_b, 0.0)))
+    station = c + matvec(at, y)
+    dual = jnp.max(jnp.maximum(-station, 0.0))
+    gap = jnp.abs(jnp.dot(c, x) + jnp.dot(b, y))
+    return x, y, primal, dual, gap
+
+
+def workload(data, weights):
+    """The divisible-load work unit (tuple-wrapped for AOT export)."""
+    return (workload_chunk(data, weights),)
+
+
+def pdhg_fn(steps: int):
+    """Tuple-returning wrapper for AOT export with a fixed step count."""
+
+    def fn(a, at, b, c, eq_mask, x0, y0, tau, sigma):
+        return pdhg_run(a, at, b, c, eq_mask, x0, y0, tau, sigma, steps=steps)
+
+    return fn

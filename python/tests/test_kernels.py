@@ -1,0 +1,93 @@
+"""Hypothesis sweeps: Pallas kernels vs pure-jnp oracles.
+
+The core Layer-1 correctness signal: for every (shape, dtype, block)
+combination, the blocked Pallas kernel must agree with ref.py.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.chunk import workload_chunk
+from compile.kernels.matvec import matvec
+
+DTYPES = [np.float32, np.float64]
+
+
+def tol(dtype):
+    return dict(rtol=2e-4, atol=2e-4) if dtype == np.float32 else dict(rtol=1e-9, atol=1e-9)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.integers(1, 300),
+    k=st.integers(1, 300),
+    dtype=st.sampled_from(DTYPES),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matvec_matches_ref(m, k, dtype, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((m, k)).astype(dtype)
+    x = rng.standard_normal(k).astype(dtype)
+    got = matvec(jnp.asarray(a), jnp.asarray(x))
+    want = ref.matvec_ref(a, x)
+    assert got.dtype == a.dtype
+    np.testing.assert_allclose(np.asarray(got), want, **tol(dtype))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.sampled_from([64, 128, 256, 384]),
+    k=st.sampled_from([64, 128, 256]),
+    bm=st.sampled_from([32, 64, 128]),
+    bk=st.sampled_from([32, 64, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matvec_block_size_invariance(m, k, bm, bk, seed):
+    """The result must not depend on the tiling."""
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((m, k))
+    x = rng.standard_normal(k)
+    got = matvec(jnp.asarray(a), jnp.asarray(x), block_m=bm, block_k=bk)
+    np.testing.assert_allclose(np.asarray(got), ref.matvec_ref(a, x), rtol=1e-9, atol=1e-9)
+
+
+def test_matvec_rejects_bad_shapes():
+    with pytest.raises(AssertionError):
+        matvec(jnp.zeros((4, 5)), jnp.zeros(6))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    r=st.sampled_from([1, 7, 64, 128, 200, 256]),
+    c=st.sampled_from([16, 64, 128]),
+    dtype=st.sampled_from(DTYPES),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_workload_chunk_matches_ref(r, c, dtype, seed):
+    rng = np.random.default_rng(seed)
+    d = rng.standard_normal((r, c)).astype(dtype)
+    w = rng.standard_normal((c, c)).astype(dtype)
+    got = workload_chunk(jnp.asarray(d), jnp.asarray(w))
+    want = ref.workload_chunk_ref(d, w)
+    rt = dict(rtol=5e-3, atol=5e-3) if dtype == np.float32 else dict(rtol=1e-9, atol=1e-9)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **rt)
+
+
+def test_workload_chunk_nonnegative():
+    rng = np.random.default_rng(0)
+    d = rng.standard_normal((128, 128)).astype(np.float32)
+    w = rng.standard_normal((128, 128)).astype(np.float32)
+    out = np.asarray(workload_chunk(jnp.asarray(d), jnp.asarray(w)))
+    assert (out >= 0).all(), "ReLU + sum of nonnegatives must be >= 0"
+
+
+def test_matvec_zero_matrix():
+    got = matvec(jnp.zeros((32, 48)), jnp.ones(48))
+    np.testing.assert_array_equal(np.asarray(got), np.zeros(32))

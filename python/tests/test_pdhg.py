@@ -1,0 +1,178 @@
+"""PDHG (Layer-2 model) vs scipy.linprog on randomized LPs.
+
+The rust driver consumes the AOT artifact of ``model.pdhg_fn``; these
+tests validate the algorithm itself (same code path, traced in-process)
+against an exact simplex/HiGHS oracle.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from scipy.optimize import linprog
+
+from compile import model
+
+
+def solve_pdhg(a, b, c, eq_mask, rounds=40, steps=200):
+    """Drive pdhg_run the way the rust driver does: fixed-step blocks
+    until the residuals are small."""
+    nc, nv = a.shape
+    norm = np.linalg.norm(a, 2)
+    tau = sigma = 0.9 / max(norm, 1e-12)
+    x = jnp.zeros(nv)
+    y = jnp.zeros(nc)
+    aj = jnp.asarray(a)
+    atj = jnp.asarray(a.T)
+    bj = jnp.asarray(b)
+    cj = jnp.asarray(c)
+    mj = jnp.asarray(eq_mask)
+    for _ in range(rounds):
+        x, y, primal, dual, gap = model.pdhg_run(
+            aj, atj, bj, cj, mj, x, y, jnp.float64(tau), jnp.float64(sigma), steps=steps
+        )
+        scale = 1.0 + max(abs(float(jnp.dot(cj, x))), 1.0)
+        if float(primal) < 1e-7 and float(dual) < 1e-7 and float(gap) < 1e-6 * scale:
+            break
+    return np.asarray(x), float(primal), float(dual)
+
+
+def random_lp(rng, nv, nc_ineq):
+    """Random feasible, bounded LP with one equality (mass) row —
+    the same shape class as the paper's scheduling LPs."""
+    a_ineq = rng.uniform(-1.0, 1.0, size=(nc_ineq, nv))
+    x_feas = rng.uniform(0.0, 2.0, size=nv)
+    b_ineq = a_ineq @ x_feas + rng.uniform(0.1, 1.0, size=nc_ineq)
+    mass = x_feas.sum()
+    a = np.vstack([a_ineq, np.ones((1, nv))])
+    b = np.concatenate([b_ineq, [mass]])
+    eq = np.zeros(nc_ineq + 1)
+    eq[-1] = 1.0
+    c = rng.uniform(0.1, 2.0, size=nv)
+    return a, b, c, eq
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    nv=st.integers(4, 24),
+    nc=st.integers(2, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pdhg_matches_scipy_on_random_lps(nv, nc, seed):
+    rng = np.random.default_rng(seed)
+    a, b, c, eq = random_lp(rng, nv, nc)
+    x, primal, dual = solve_pdhg(a, b, c, eq)
+
+    res = linprog(
+        c,
+        A_ub=a[:-1],
+        b_ub=b[:-1],
+        A_eq=a[-1:],
+        b_eq=b[-1:],
+        bounds=[(0, None)] * nv,
+        method="highs",
+    )
+    assert res.status == 0, f"scipy failed: {res.message}"
+    obj_pdhg = float(c @ x)
+    assert primal < 1e-5, f"primal residual {primal}"
+    # First-order methods: accept ~0.1% relative objective gap.
+    assert obj_pdhg <= res.fun + 1e-3 * max(abs(res.fun), 1.0) + 1e-6, (
+        f"pdhg {obj_pdhg} vs scipy {res.fun}"
+    )
+
+
+def test_pdhg_on_dlt_shaped_lp():
+    """A hand-built instance of the paper's §3.1 LP (N=2, M=3)."""
+    g = [0.2, 0.4]
+    r = [1.0, 2.0]
+    a_speed = [2.0, 3.0, 4.0]
+    job = 10.0
+    n, m = 2, 3
+    nv = n * m + 1  # betas + T_f
+    tf = n * m
+
+    rows, rhs, eq = [], [], []
+
+    def bidx(i, j):
+        return i * m + j
+
+    # release: -beta[0][0]*A_1 <= -(R_2 - R_1)
+    row = np.zeros(nv)
+    row[bidx(0, 0)] = -a_speed[0]
+    rows.append(row)
+    rhs.append(-(r[1] - r[0]))
+    eq.append(0.0)
+    # continuity
+    for i in range(n - 1):
+        for j in range(m - 1):
+            row = np.zeros(nv)
+            row[bidx(i, j)] = a_speed[j] - g[i]
+            row[bidx(i + 1, j)] = g[i + 1]
+            row[bidx(i, j + 1)] = -a_speed[j + 1]
+            rows.append(row)
+            rhs.append(0.0)
+            eq.append(0.0)
+    # finish: -T_f + sum_{k<j} beta[0][k] G_1 + sum_i beta[i][j] A_j <= -R_1
+    for j in range(m):
+        row = np.zeros(nv)
+        row[tf] = -1.0
+        for k in range(j):
+            row[bidx(0, k)] = g[0]
+        for i in range(n):
+            row[bidx(i, j)] += a_speed[j]
+        rows.append(row)
+        rhs.append(-r[0])
+        eq.append(0.0)
+    # normalize
+    row = np.zeros(nv)
+    row[: n * m] = 1.0
+    rows.append(row)
+    rhs.append(job)
+    eq.append(1.0)
+
+    a = np.array(rows)
+    b = np.array(rhs)
+    c = np.zeros(nv)
+    c[tf] = 1.0
+    x, primal, dual = solve_pdhg(a, b, c, np.array(eq), rounds=80)
+
+    res = linprog(
+        c,
+        A_ub=a[np.array(eq) == 0.0],
+        b_ub=b[np.array(eq) == 0.0],
+        A_eq=a[np.array(eq) == 1.0],
+        b_eq=b[np.array(eq) == 1.0],
+        bounds=[(0, None)] * nv,
+        method="highs",
+    )
+    assert res.status == 0
+    assert abs(x[tf] - res.fun) < 2e-3 * max(res.fun, 1.0), (
+        f"pdhg T_f {x[tf]} vs scipy {res.fun}"
+    )
+
+
+def test_pdhg_padding_is_inert():
+    """Zero rows (b=1) and +1-cost columns must not change the optimum —
+    this is the padding contract the rust driver relies on."""
+    rng = np.random.default_rng(42)
+    a, b, c, eq = random_lp(rng, 8, 6)
+    x0, _, _ = solve_pdhg(a, b, c, eq)
+
+    nv_pad, nc_pad = 16, 12
+    a_pad = np.zeros((nc_pad, nv_pad))
+    a_pad[: a.shape[0], : a.shape[1]] = a
+    b_pad = np.ones(nc_pad)
+    b_pad[: len(b)] = b
+    c_pad = np.ones(nv_pad)
+    c_pad[: len(c)] = c
+    eq_pad = np.zeros(nc_pad)
+    eq_pad[: len(eq)] = eq
+    x1, _, _ = solve_pdhg(a_pad, b_pad, c_pad, eq_pad)
+
+    np.testing.assert_allclose(
+        float(c @ x0), float(c_pad @ x1), rtol=5e-3, atol=5e-3
+    )
+    np.testing.assert_allclose(x1[a.shape[1]:], 0.0, atol=1e-6)

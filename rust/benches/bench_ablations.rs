@@ -1,0 +1,111 @@
+//! Ablations for the design choices DESIGN.md calls out, plus the
+//! paper's §8 future-work extensions measured on the paper's own
+//! parameters.
+//!
+//! 1. eq. 5 variant (`k ≤ j−1` prose vs `k ≤ j` summary block) — how
+//!    much does the ambiguous constraint move `T_f`?
+//! 2. eq. 12 (`TF_{i−1,1} ≥ R_i` keep-source-busy) — cost of the
+//!    constraint, and when it turns instances infeasible.
+//! 3. §8 concurrent distribution vs the paper's sequential protocol.
+//! 4. §8 multi-job pipelining vs serial job execution.
+
+use dlt::benchkit::{Bencher, Reporter};
+use dlt::dlt::frontend::{self, FeOptions};
+use dlt::dlt::no_frontend::{self, NfeOptions};
+use dlt::dlt::{concurrent, multi_job};
+use dlt::experiments::params;
+
+fn main() {
+    let b = Bencher::from_env();
+    let mut rep = Reporter::new("ablations (design choices + §8 extensions)");
+
+    // --- 1. eq. 5 variant ---
+    let t5 = params::table5();
+    println!("\n-- eq.5 finish-sum variant (Table 5, FE) --");
+    println!("{:>4} {:>14} {:>14} {:>8}", "m", "tf (k<=j-1)", "tf (k<=j)", "delta%");
+    for m in [1usize, 5, 10, 20] {
+        let sub = t5.with_m_processors(m);
+        let a = frontend::solve_opts(&sub, &FeOptions::default()).unwrap().makespan;
+        let c = frontend::solve_opts(
+            &sub,
+            &FeOptions { finish_sum_includes_j: true, ..Default::default() },
+        )
+        .unwrap()
+        .makespan;
+        println!("{m:>4} {a:>14.4} {c:>14.4} {:>8.2}", (c / a - 1.0) * 100.0);
+    }
+
+    // --- 2. eq. 12 keep-source-busy ---
+    println!("\n-- eq.12 source-busy constraint (Table 2-like, NFE) --");
+    println!("{:>8} {:>14} {:>14}", "R2", "tf (with)", "tf (without)");
+    for r2 in [2.0f64, 5.0, 10.0, 15.0] {
+        let spec = dlt::model::SystemSpec::builder()
+            .source(0.2, 0.0)
+            .source(0.2, r2)
+            .processors(&[2.0, 3.0, 4.0])
+            .job(100.0)
+            .build()
+            .unwrap();
+        let with = no_frontend::solve_opts(&spec, &NfeOptions::default())
+            .map(|s| format!("{:.4}", s.makespan))
+            .unwrap_or_else(|_| "infeasible".into());
+        let without = no_frontend::solve_opts(
+            &spec,
+            &NfeOptions { drop_source_busy_constraint: true, ..Default::default() },
+        )
+        .map(|s| format!("{:.4}", s.makespan))
+        .unwrap_or_else(|_| "infeasible".into());
+        println!("{r2:>8} {with:>14} {without:>14}");
+    }
+
+    // --- 3. §8 concurrent vs sequential distribution ---
+    let t3 = params::table3();
+    println!("\n-- §8 concurrent distribution vs sequential (Table 3, NFE) --");
+    println!(
+        "{:>4} {:>14} {:>14} {:>14} {:>10}",
+        "m", "sequential", "proportional", "staggered", "speedup"
+    );
+    for m in [2usize, 5, 10, 20] {
+        let sub = t3.with_m_processors(m);
+        let seq = no_frontend::solve(&sub).unwrap().makespan;
+        let prop = concurrent::solve_mode(&sub, concurrent::Mode::Proportional)
+            .unwrap()
+            .makespan;
+        let stag = concurrent::solve_mode(&sub, concurrent::Mode::Staggered)
+            .unwrap()
+            .makespan;
+        println!("{m:>4} {seq:>14.4} {prop:>14.4} {stag:>14.4} {:>9.2}x", seq / stag);
+    }
+    let sub = t3.with_m_processors(10);
+    rep.report("solve_concurrent_n3_m10", b.bench_val(|| concurrent::solve(&sub).unwrap()));
+    rep.report("solve_sequential_n3_m10", b.bench_val(|| no_frontend::solve(&sub).unwrap()));
+
+    // --- 4. §8 multi-job pipelining ---
+    println!("\n-- §8 multi-job FIFO pipeline vs serial (FE) --");
+    // Comm-heavy regime (G comparable to effective compute rate):
+    // pipelining overlaps job k+1's distribution under job k's compute.
+    let spec = dlt::model::SystemSpec::builder()
+        .source(0.30, 0.0)
+        .source(0.40, 1.0)
+        .processors(&[1.0, 1.5, 2.0, 2.5])
+        .job(1.0)
+        .build()
+        .unwrap();
+    for (count, gap) in [(4usize, 5.0f64), (8, 2.0)] {
+        let jobs = multi_job::synth_jobs(count, gap, 30.0, 11);
+        let r = multi_job::schedule_fifo(&spec, &jobs).unwrap();
+        println!(
+            "{count} jobs (mean gap {gap}): pipeline makespan {:.2} vs serial {:.2} ({:.2}x), mean sojourn {:.2}",
+            r.makespan,
+            r.serial_makespan,
+            r.serial_makespan / r.makespan,
+            r.mean_sojourn
+        );
+    }
+    let jobs = multi_job::synth_jobs(6, 3.0, 30.0, 11);
+    rep.report(
+        "pipeline_6_jobs",
+        b.bench_val(|| multi_job::schedule_fifo(&spec, &jobs).unwrap()),
+    );
+    rep.finish();
+}

@@ -1,0 +1,24 @@
+//! Bench: Table 3 / Fig. 12 — finish time vs sources × processors
+//! (no front-ends).
+
+use dlt::benchkit::{Bencher, Reporter};
+use dlt::dlt::no_frontend;
+use dlt::experiments::{params, run};
+
+fn main() {
+    let b = Bencher::from_env();
+    let mut rep = Reporter::new("fig12 (T_f vs N sources x M processors, NFE)");
+
+    let spec = params::table3();
+    for (n, m) in [(1usize, 5usize), (2, 10), (3, 20)] {
+        let sub = spec.with_n_sources(n).with_m_processors(m);
+        rep.report(
+            &format!("solve_nfe_n{n}_m{m}"),
+            b.bench_val(|| no_frontend::solve(&sub).unwrap()),
+        );
+    }
+    let full = run("fig12").unwrap();
+    rep.note("full 3x20 sweep below");
+    rep.finish();
+    println!("{}", full.render_text());
+}

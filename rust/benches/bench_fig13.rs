@@ -1,0 +1,23 @@
+//! Bench: Fig. 13 — finish time vs processors for different job sizes
+//! (front-ends). The LP is job-size independent in structure, so the
+//! solve cost is flat across J — the bench demonstrates that too.
+
+use dlt::benchkit::{Bencher, Reporter};
+use dlt::dlt::frontend;
+use dlt::experiments::{params, run};
+
+fn main() {
+    let b = Bencher::from_env();
+    let mut rep = Reporter::new("fig13 (T_f vs M for J=100/300/500, FE)");
+
+    let spec = params::table3();
+    for &j in params::FIG13_JOB_SIZES {
+        let sub = spec.with_job(j).with_m_processors(10);
+        rep.report(
+            &format!("solve_fe_m10_J{j}"),
+            b.bench_val(|| frontend::solve(&sub).unwrap()),
+        );
+    }
+    rep.finish();
+    println!("{}", run("fig13").unwrap().render_text());
+}

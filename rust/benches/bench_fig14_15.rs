@@ -1,0 +1,25 @@
+//! Bench: Table 4 / Figs. 14–15 — homogeneous speedup analysis.
+//! The N=10 no-front-end LP (541 vars) is the heaviest solve in the
+//! paper's evaluation; this bench tracks it explicitly.
+
+use dlt::benchkit::{Bencher, Reporter};
+use dlt::dlt::no_frontend;
+use dlt::experiments::{params, run};
+
+fn main() {
+    let b = Bencher::from_env();
+    let mut rep = Reporter::new("fig14_15 (homogeneous speedup, NFE)");
+
+    let spec = params::table4();
+    for n in [1usize, 3, 10] {
+        let sub = spec.with_n_sources(n).with_m_processors(12);
+        rep.report(
+            &format!("solve_nfe_n{n}_m12"),
+            b.bench_val(|| no_frontend::solve(&sub).unwrap()),
+        );
+    }
+    rep.finish();
+
+    println!("{}", run("fig14").unwrap().render_text());
+    println!("{}", run("fig15").unwrap().render_text());
+}

@@ -1,0 +1,19 @@
+//! Bench: Table 5 / Figs. 16–18 — cost / finish time / gradient sweep.
+
+use dlt::benchkit::{Bencher, Reporter};
+use dlt::cost::TradeoffTable;
+use dlt::experiments::{params, series};
+
+fn main() {
+    let b = Bencher::from_env();
+    let mut rep = Reporter::new("fig16_18 (trade-off sweep, Table 5)");
+
+    let spec = params::table5();
+    rep.report("tradeoff_sweep_m1_to_20", b.bench_val(|| TradeoffTable::sweep(&spec).unwrap()));
+    rep.finish();
+
+    let (f16, f17, f18) = series::fig16_17_18().unwrap();
+    println!("{}", f16.render_text());
+    println!("{}", f17.render_text());
+    println!("{}", f18.render_text());
+}

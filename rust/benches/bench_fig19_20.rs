@@ -1,0 +1,23 @@
+//! Bench: Figs. 19–20 — budget-intersection analysis (the advisor).
+
+use dlt::benchkit::{Bencher, Reporter};
+use dlt::cost::{advise, Budgets, TradeoffTable};
+use dlt::experiments::{params, run};
+
+fn main() {
+    let b = Bencher::from_env();
+    let mut rep = Reporter::new("fig19_20 (budget advisor)");
+
+    let spec = params::table5();
+    let sweep = TradeoffTable::sweep(&spec).unwrap();
+    let budgets = Budgets {
+        cost: Some(sweep.at(12).cost),
+        time: Some(sweep.at(6).tf),
+        gradient_threshold: 0.06,
+    };
+    rep.report("advise_given_sweep", b.bench_val(|| advise(&sweep, &budgets)));
+    rep.finish();
+
+    println!("{}", run("fig19").unwrap().render_text());
+    println!("{}", run("fig20").unwrap().render_text());
+}

@@ -1,0 +1,24 @@
+//! Bench: Tables 1–2 / Figs. 10–11 — the paper's numerical tests.
+//!
+//! Regenerates both numerical-test tables (printing the same rows the
+//! paper plots) and times the solves.
+
+use dlt::benchkit::{Bencher, Reporter};
+use dlt::dlt::{frontend, no_frontend};
+use dlt::experiments::{params, run};
+
+fn main() {
+    let b = Bencher::from_env();
+    let mut rep = Reporter::new("numerical_tests (Tables 1-2, Figs 10-11)");
+
+    let t1 = params::table1();
+    rep.report("solve_table1_frontend", b.bench_val(|| frontend::solve(&t1).unwrap()));
+    let t2 = params::table2();
+    rep.report("solve_table2_no_frontend", b.bench_val(|| no_frontend::solve(&t2).unwrap()));
+    rep.finish();
+
+    // The paper's data series.
+    for fig in ["fig10", "fig11"] {
+        println!("{}", run(fig).unwrap().render_text());
+    }
+}

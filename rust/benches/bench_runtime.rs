@@ -1,0 +1,41 @@
+//! Bench: PJRT artifact execution — workload units and PDHG blocks.
+//!
+//! §Perf harness for Layer 1/2 as seen from the rust hot path
+//! (artifact execution latency; compile time is amortized and cached).
+
+use dlt::benchkit::{Bencher, Reporter};
+use dlt::runtime::{Runtime, WorkloadExecutable};
+
+fn main() {
+    let b = Bencher::from_env();
+    let mut rep = Reporter::new("runtime (PJRT artifact execution)");
+
+    if !Runtime::artifacts_available() {
+        rep.note("artifacts/ not built (run `make artifacts`); nothing to measure");
+        rep.finish();
+        return;
+    }
+
+    let mut w = WorkloadExecutable::open("artifacts", 42).expect("open workload");
+    rep.report("workload_unit_128x128", b.bench_val(|| w.run_unit().unwrap()));
+
+    // One PDHG block on the smallest variant.
+    let mut rt = Runtime::open_default().expect("runtime");
+    let var = rt.manifest().pdhg.first().expect("pdhg variant").clone();
+    let mut p = dlt::lp::LpProblem::new(8);
+    p.set_objective(&[1.0; 8]);
+    p.add_constraint(&(0..8).map(|v| (v, 1.0)).collect::<Vec<_>>(), dlt::lp::Cmp::Eq, 4.0);
+    let pad = dlt::pdhg::PaddedLp::build(&p, var.nv, var.nc);
+    let mut exec =
+        dlt::runtime::PdhgExecutable::for_shape(&mut rt, 8, 1).expect("bind pdhg");
+    let x = vec![0.0; pad.nv];
+    let y = vec![0.0; pad.nc];
+    rep.report(
+        &format!("pdhg_block_{}x{}_{}steps", var.nv, var.nc, var.steps),
+        b.bench_val(|| {
+            exec.run_block(&pad.a, &pad.at, &pad.b, &pad.c, &pad.eq_mask, &x, &y, 0.1, 0.1)
+                .unwrap()
+        }),
+    );
+    rep.finish();
+}

@@ -1,0 +1,51 @@
+//! Bench: discrete-event simulator throughput and cluster overhead.
+//!
+//! §Perf harness for Layer 3 beyond the LP: the DES must stay far off
+//! the critical path (millions of events/s), and the cluster's
+//! realized-vs-predicted error is the end-to-end fidelity metric.
+
+use dlt::benchkit::{Bencher, Reporter};
+use dlt::cluster::{run_cluster, ClusterConfig, Compute};
+use dlt::dlt::no_frontend;
+use dlt::model::SystemSpec;
+use dlt::sim::{simulate, SimOptions};
+
+fn spec(n: usize, m: usize) -> SystemSpec {
+    let mut b = SystemSpec::builder();
+    for i in 0..n {
+        b = b.source(0.4 + 0.02 * i as f64, 0.2 * i as f64);
+    }
+    let a: Vec<f64> = (0..m).map(|k| 1.0 + 0.05 * k as f64).collect();
+    b.processors(&a).job(100.0).build().unwrap()
+}
+
+fn main() {
+    let b = Bencher::from_env();
+    let mut rep = Reporter::new("sim + cluster");
+
+    for (n, m) in [(2usize, 8usize), (5, 32), (10, 64)] {
+        let s = spec(n, m);
+        // Uniform beta is fine for engine-throughput measurement.
+        let beta = vec![s.job / (n * m) as f64; n * m];
+        let events = (n * m + m) as f64;
+        let r = b.bench_val(|| simulate(&s, &beta, &SimOptions::default()));
+        let evps = events / (r.ns.median * 1e-9);
+        rep.report(&format!("des_n{n}_m{m} ({:.1}M events/s)", evps / 1e6), r);
+    }
+
+    // One real cluster run (wall-clock bound; report, don't loop).
+    let s = spec(2, 4);
+    let sched = no_frontend::solve(&s).unwrap();
+    let cfg = ClusterConfig { time_scale: 0.0005, compute: Compute::Modeled, fe_splits: 16 };
+    let t0 = std::time::Instant::now();
+    let report = run_cluster(&s, &sched, &cfg).unwrap();
+    rep.note(&format!(
+        "cluster 2x4: predicted {:.3}, realized {:.3} ({:+.2}% err), wall {:?} (single run, t={:?})",
+        report.predicted_makespan,
+        report.realized_makespan,
+        report.relative_error * 100.0,
+        report.wall,
+        t0.elapsed()
+    ));
+    rep.finish();
+}

@@ -1,0 +1,62 @@
+//! Bench: LP solver back-ends — simplex vs pure-rust PDHG vs the AOT
+//! PDHG artifact (PJRT), across growing N × M scheduling instances.
+//!
+//! Not a paper figure; this is the §Perf harness for the solving hot
+//! path (see EXPERIMENTS.md §Perf).
+
+use dlt::benchkit::{Bencher, Reporter};
+use dlt::dlt::{frontend, no_frontend};
+use dlt::lp::solve;
+use dlt::model::SystemSpec;
+use dlt::pdhg::{solve_artifact, solve_rust, PdhgOptions};
+use dlt::runtime::Runtime;
+
+fn spec(n: usize, m: usize) -> SystemSpec {
+    let mut b = SystemSpec::builder();
+    for i in 0..n {
+        b = b.source(0.5 + 0.01 * i as f64, i as f64 * 0.5);
+    }
+    let a: Vec<f64> = (0..m).map(|k| 1.1 + 0.1 * k as f64).collect();
+    b.processors(&a).job(100.0).build().unwrap()
+}
+
+fn main() {
+    let b = Bencher::from_env();
+    let mut rep = Reporter::new("solver backends (simplex vs PDHG vs PDHG artifact)");
+
+    for (n, m) in [(2usize, 5usize), (3, 10), (3, 20)] {
+        let s = spec(n, m);
+        let lp_fe = frontend::build_lp(&s, &Default::default());
+        rep.report(
+            &format!("simplex_fe_n{n}_m{m} ({} vars)", lp_fe.num_vars()),
+            b.bench_val(|| solve(&lp_fe).unwrap()),
+        );
+        let lp_nfe = no_frontend::build_lp(&s, &Default::default());
+        rep.report(
+            &format!("simplex_nfe_n{n}_m{m} ({} vars)", lp_nfe.num_vars()),
+            b.bench_val(|| solve(&lp_nfe).unwrap()),
+        );
+    }
+
+    // PDHG comparisons on the Table-1-shaped FE LP.
+    let s = spec(2, 5);
+    let lp = frontend::build_lp(&s, &Default::default());
+    let opts = PdhgOptions::default();
+    rep.report(
+        "pdhg_rust_fe_n2_m5",
+        b.bench_val(|| solve_rust(&lp, 64, 64, &opts).unwrap()),
+    );
+
+    if Runtime::artifacts_available() {
+        let mut rt = Runtime::open_default().expect("open runtime");
+        // Warm the compile cache outside the timed region.
+        let _ = solve_artifact(&mut rt, &lp, &opts).expect("warm");
+        rep.report(
+            "pdhg_artifact_fe_n2_m5",
+            b.bench_val(|| solve_artifact(&mut rt, &lp, &opts).unwrap()),
+        );
+    } else {
+        rep.note("artifacts/ not built; skipping pdhg_artifact bench");
+    }
+    rep.finish();
+}

@@ -1,0 +1,200 @@
+//! Micro-benchmark harness (the offline crate set has no `criterion`).
+//!
+//! Usage in a `harness = false` bench target:
+//!
+//! ```no_run
+//! use dlt::benchkit::{Bencher, Reporter};
+//! let mut rep = Reporter::new("my_bench_group");
+//! let b = Bencher::default();
+//! rep.report("solve_small", b.bench(|| {
+//!     // work under test
+//!     std::hint::black_box(2 + 2);
+//! }));
+//! rep.finish();
+//! ```
+//!
+//! The harness warms up, then runs timed batches until both a minimum
+//! wall-clock budget and a minimum sample count are met, and reports
+//! robust statistics (median/p95 rather than best-of).
+
+use crate::util::stats::Summary;
+use std::time::{Duration, Instant};
+
+/// Benchmark runner configuration.
+#[derive(Debug, Clone)]
+pub struct Bencher {
+    /// Warm-up time before measurement.
+    pub warmup: Duration,
+    /// Minimum total measurement time.
+    pub min_time: Duration,
+    /// Minimum number of samples.
+    pub min_samples: usize,
+    /// Maximum number of samples (cap for very fast functions).
+    pub max_samples: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(200),
+            min_time: Duration::from_millis(800),
+            min_samples: 20,
+            max_samples: 100_000,
+        }
+    }
+}
+
+impl Bencher {
+    /// Fast settings for CI-ish runs (set `DLT_BENCH_FAST=1`).
+    pub fn from_env() -> Bencher {
+        if std::env::var("DLT_BENCH_FAST").is_ok() {
+            Bencher {
+                warmup: Duration::from_millis(20),
+                min_time: Duration::from_millis(100),
+                min_samples: 5,
+                max_samples: 10_000,
+            }
+        } else {
+            Bencher::default()
+        }
+    }
+}
+
+/// Result of one benchmark: per-iteration timings in nanoseconds.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Summary over per-iteration nanoseconds.
+    pub ns: Summary,
+    /// Iterations per timed batch that was used.
+    pub batch: usize,
+}
+
+impl Bencher {
+    /// Benchmark a closure.
+    pub fn bench<F: FnMut()>(&self, mut f: F) -> BenchResult {
+        // Warm-up and batch sizing: aim for batches of >= ~100 µs so
+        // timer overhead stays below ~0.1 %.
+        let warm_start = Instant::now();
+        let mut iters_during_warmup = 0u64;
+        while warm_start.elapsed() < self.warmup || iters_during_warmup == 0 {
+            f();
+            iters_during_warmup += 1;
+            if iters_during_warmup > 10_000_000 {
+                break;
+            }
+        }
+        let per_iter = warm_start.elapsed().as_nanos() as f64 / iters_during_warmup as f64;
+        let batch = ((100_000.0 / per_iter.max(1.0)).ceil() as usize).clamp(1, 1_000_000);
+
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while (start.elapsed() < self.min_time || samples.len() < self.min_samples)
+            && samples.len() < self.max_samples
+        {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            let dt = t0.elapsed().as_nanos() as f64 / batch as f64;
+            samples.push(dt);
+        }
+        BenchResult { ns: Summary::of(&samples), batch }
+    }
+
+    /// Benchmark a closure that returns a value (kept alive via
+    /// `black_box` to prevent the optimizer from deleting the work).
+    pub fn bench_val<T, F: FnMut() -> T>(&self, mut f: F) -> BenchResult {
+        self.bench(|| {
+            std::hint::black_box(f());
+        })
+    }
+}
+
+/// Pretty-printer for bench results; also emits a machine-readable
+/// JSON line per entry when `DLT_BENCH_JSON` is set.
+pub struct Reporter {
+    group: String,
+    rows: Vec<(String, BenchResult)>,
+}
+
+impl Reporter {
+    /// Start a report group.
+    pub fn new(group: impl Into<String>) -> Reporter {
+        let group = group.into();
+        println!("\n== bench group: {group} ==");
+        println!(
+            "{:<44} {:>12} {:>12} {:>12} {:>12} {:>8}",
+            "benchmark", "median", "mean", "p95", "max", "samples"
+        );
+        Reporter { group, rows: Vec::new() }
+    }
+
+    /// Report one benchmark.
+    pub fn report(&mut self, name: &str, r: BenchResult) {
+        println!(
+            "{:<44} {:>12} {:>12} {:>12} {:>12} {:>8}",
+            name,
+            fmt_ns(r.ns.median),
+            fmt_ns(r.ns.mean),
+            fmt_ns(r.ns.p95),
+            fmt_ns(r.ns.max),
+            r.ns.n
+        );
+        if std::env::var("DLT_BENCH_JSON").is_ok() {
+            println!(
+                "{{\"group\":\"{}\",\"name\":\"{}\",\"median_ns\":{},\"mean_ns\":{},\"p95_ns\":{}}}",
+                self.group, name, r.ns.median, r.ns.mean, r.ns.p95
+            );
+        }
+        self.rows.push((name.to_string(), r));
+    }
+
+    /// Print a free-form note under the table.
+    pub fn note(&mut self, text: &str) {
+        println!("   note: {text}");
+    }
+
+    /// Finish the group and return the collected rows.
+    pub fn finish(self) -> Vec<(String, BenchResult)> {
+        self.rows
+    }
+}
+
+/// Human-friendly nanosecond formatting.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let b = Bencher {
+            warmup: Duration::from_millis(5),
+            min_time: Duration::from_millis(20),
+            min_samples: 5,
+            max_samples: 1000,
+        };
+        let r = b.bench_val(|| (0..100).sum::<u64>());
+        assert!(r.ns.n >= 5);
+        assert!(r.ns.median >= 0.0);
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(1500.0), "1.50 µs");
+        assert_eq!(fmt_ns(2.5e6), "2.50 ms");
+        assert_eq!(fmt_ns(3.2e9), "3.20 s");
+    }
+}

@@ -1,0 +1,139 @@
+//! Tiny flag parser: `--key value`, `--flag`, one positional
+//! subcommand.
+
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+
+/// Parsed arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First positional token.
+    pub subcommand: String,
+    flags: HashMap<String, String>,
+}
+
+/// Flags that take no value.
+const BOOL_FLAGS: &[&str] = &["trace", "real-compute", "csv", "quiet"];
+
+impl Args {
+    /// Parse argv (without the binary name).
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                out.subcommand = it.next().unwrap().clone();
+            }
+        }
+        while let Some(tok) = it.next() {
+            let Some(key) = tok.strip_prefix("--") else {
+                return Err(Error::Usage(format!("unexpected positional `{tok}`")));
+            };
+            if BOOL_FLAGS.contains(&key) {
+                out.flags.insert(key.to_string(), "true".to_string());
+            } else {
+                let val = it
+                    .next()
+                    .ok_or_else(|| Error::Usage(format!("flag --{key} needs a value")))?;
+                out.flags.insert(key.to_string(), val.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    /// String flag.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    /// String flag with default.
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Float flag.
+    pub fn get_f64(&self, key: &str) -> Result<Option<f64>> {
+        self.get(key)
+            .map(|v| {
+                v.parse::<f64>()
+                    .map_err(|_| Error::Usage(format!("--{key} expects a number, got `{v}`")))
+            })
+            .transpose()
+    }
+
+    /// Integer flag.
+    pub fn get_usize(&self, key: &str) -> Result<Option<usize>> {
+        self.get(key)
+            .map(|v| {
+                v.parse::<usize>()
+                    .map_err(|_| Error::Usage(format!("--{key} expects an integer, got `{v}`")))
+            })
+            .transpose()
+    }
+
+    /// Boolean flag presence.
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    /// Comma-separated usize list.
+    pub fn get_usize_list(&self, key: &str) -> Result<Option<Vec<usize>>> {
+        self.get(key)
+            .map(|v| {
+                v.split(',')
+                    .map(|s| {
+                        s.trim().parse::<usize>().map_err(|_| {
+                            Error::Usage(format!("--{key}: bad integer `{s}`"))
+                        })
+                    })
+                    .collect()
+            })
+            .transpose()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        let v: Vec<String> = s.split_whitespace().map(String::from).collect();
+        Args::parse(&v).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("solve --spec x.json --model nfe --trace");
+        assert_eq!(a.subcommand, "solve");
+        assert_eq!(a.get("spec"), Some("x.json"));
+        assert_eq!(a.get_or("model", "fe"), "nfe");
+        assert!(a.has("trace"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn typed_flags() {
+        let a = parse("x --jitter 0.25 --seed 7 --sources 1,2,10");
+        assert_eq!(a.get_f64("jitter").unwrap(), Some(0.25));
+        assert_eq!(a.get_usize("seed").unwrap(), Some(7));
+        assert_eq!(a.get_usize_list("sources").unwrap(), Some(vec![1, 2, 10]));
+        assert_eq!(a.get_f64("missing").unwrap(), None);
+    }
+
+    #[test]
+    fn errors() {
+        let v: Vec<String> = vec!["x".into(), "--spec".into()];
+        assert!(Args::parse(&v).is_err());
+        let a = parse("x --jitter abc");
+        assert!(a.get_f64("jitter").is_err());
+        let v: Vec<String> = vec!["x".into(), "stray".into()];
+        assert!(Args::parse(&v).is_err());
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = parse("--csv");
+        assert_eq!(a.subcommand, "");
+        assert!(a.has("csv"));
+    }
+}

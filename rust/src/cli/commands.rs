@@ -1,0 +1,324 @@
+//! CLI subcommand implementations.
+
+use crate::cli::args::Args;
+use crate::cluster::{run_cluster, ClusterConfig, Compute};
+use crate::config::spec::load_spec;
+use crate::cost::{advise, Advice, Budgets, TradeoffTable};
+use crate::dlt::schedule::{Schedule, TimingModel};
+use crate::dlt::{frontend, no_frontend, validate};
+use crate::error::{Error, Result};
+use crate::model::SystemSpec;
+use crate::sim::{simulate as sim_run, SimOptions};
+
+fn load(a: &Args) -> Result<SystemSpec> {
+    let path = a
+        .get("spec")
+        .ok_or_else(|| Error::Usage("--spec FILE is required".into()))?;
+    load_spec(path)
+}
+
+fn model_of(a: &Args) -> Result<TimingModel> {
+    match a.get_or("model", "fe").as_str() {
+        "fe" => Ok(TimingModel::FrontEnd),
+        "nfe" => Ok(TimingModel::NoFrontEnd),
+        other => Err(Error::Usage(format!("--model must be fe|nfe, got `{other}`"))),
+    }
+}
+
+fn solve_spec(spec: &SystemSpec, model: TimingModel, solver: &str) -> Result<Schedule> {
+    match solver {
+        "simplex" => match model {
+            TimingModel::FrontEnd => frontend::solve(spec),
+            TimingModel::NoFrontEnd => no_frontend::solve(spec),
+        },
+        "pdhg" | "pdhg-artifact" => {
+            // PDHG yields the LP solution; reconstruct the schedule by
+            // re-solving the β extraction path with the simplex types.
+            // The LP itself is what PDHG replaces.
+            let lp = match model {
+                TimingModel::FrontEnd => frontend::build_lp(spec, &Default::default()),
+                TimingModel::NoFrontEnd => no_frontend::build_lp(spec, &Default::default()),
+            };
+            let x = if solver == "pdhg" {
+                let var = pick_variant(lp.num_vars(), lp.num_constraints());
+                crate::pdhg::solve_rust(&lp, var.0, var.1, &Default::default())?.x
+            } else {
+                let mut rt = crate::runtime::Runtime::open_default()?;
+                crate::pdhg::solve_artifact(&mut rt, &lp, &Default::default())?.x
+            };
+            schedule_from_lp_x(spec, model, &x)
+        }
+        other => Err(Error::Usage(format!("--solver must be simplex|pdhg|pdhg-artifact, got `{other}`"))),
+    }
+}
+
+/// Pad shape for the rust PDHG backend when no artifact is loaded.
+fn pick_variant(nv: usize, nc: usize) -> (usize, usize) {
+    let round = |x: usize| x.next_power_of_two().max(64);
+    (round(nv), round(nc + nc / 2))
+}
+
+/// Rebuild a full `Schedule` from a raw LP solution vector.
+pub fn schedule_from_lp_x(
+    spec: &SystemSpec,
+    model: TimingModel,
+    x: &[f64],
+) -> Result<Schedule> {
+    let n = spec.n();
+    let m = spec.m();
+    let beta: Vec<f64> = x[..n * m]
+        .iter()
+        .map(|&b| crate::util::float::snap_nonneg(b, 1e-7))
+        .collect();
+    match model {
+        TimingModel::FrontEnd => {
+            let (ts, tf) = frontend::reconstruct_comm_windows(spec, &beta);
+            let a = spec.a();
+            let mut compute_start = vec![0.0; m];
+            let mut compute_end = vec![0.0; m];
+            for j in 0..m {
+                let first = (0..n).find(|&i| beta[i * m + j] > 1e-12);
+                let start = first.map(|i| ts[i * m + j]).unwrap_or(0.0);
+                let total: f64 = (0..n).map(|i| beta[i * m + j]).sum::<f64>() * a[j];
+                compute_start[j] = start;
+                compute_end[j] = start + total;
+            }
+            let makespan = x[n * m];
+            Ok(Schedule {
+                n,
+                m,
+                model,
+                beta,
+                comm_start: ts,
+                comm_end: tf,
+                compute_start,
+                compute_end,
+                makespan,
+                lp_iterations: 0,
+            })
+        }
+        TimingModel::NoFrontEnd => {
+            let v = no_frontend::NfeVars::new(n, m);
+            let mut comm_start = vec![0.0; n * m];
+            let mut comm_end = vec![0.0; n * m];
+            for i in 0..n {
+                for j in 0..m {
+                    comm_start[i * m + j] = x[v.ts(i, j)];
+                    comm_end[i * m + j] = x[v.tf(i, j)];
+                }
+            }
+            let a = spec.a();
+            let mut compute_start = vec![0.0; m];
+            let mut compute_end = vec![0.0; m];
+            for j in 0..m {
+                let last = comm_end[(n - 1) * m + j];
+                let total: f64 = (0..n).map(|i| beta[i * m + j]).sum();
+                compute_start[j] = last;
+                compute_end[j] = last + total * a[j];
+            }
+            Ok(Schedule {
+                n,
+                m,
+                model,
+                beta,
+                comm_start,
+                comm_end,
+                compute_start,
+                compute_end,
+                makespan: x[v.makespan()],
+                lp_iterations: 0,
+            })
+        }
+    }
+}
+
+/// `dlt solve`
+pub fn solve(a: &Args) -> Result<()> {
+    let spec = load(a)?;
+    let model = model_of(a)?;
+    let solver = a.get_or("solver", "simplex");
+    let sched = solve_spec(&spec, model, &solver)?;
+    println!("model: {model:?}   solver: {solver}");
+    println!("T_f = {:.6}", sched.makespan);
+    print!("{}", sched.render_beta_table());
+    let report = validate(&spec, &sched);
+    if !report.is_valid() {
+        println!("VALIDATION FAILED:");
+        for v in &report.violations {
+            println!("  - {v}");
+        }
+    } else {
+        println!("schedule validated OK ({} warnings)", report.warnings.len());
+    }
+    if spec.cost_rates().iter().any(|&c| c > 0.0) {
+        println!("monetary cost = {:.2}", crate::cost::schedule_cost(&spec, &sched));
+    }
+    Ok(())
+}
+
+/// `dlt simulate`
+pub fn simulate(a: &Args) -> Result<()> {
+    let spec = load(a)?;
+    let model = model_of(a)?;
+    let sched = solve_spec(&spec, model, &a.get_or("solver", "simplex"))?;
+    let opts = SimOptions {
+        model,
+        link_jitter: a.get_f64("jitter")?.unwrap_or(0.0),
+        compute_jitter: a.get_f64("jitter")?.unwrap_or(0.0),
+        seed: a.get_usize("seed")?.unwrap_or(0) as u64,
+        trace: a.has("trace"),
+    };
+    let res = sim_run(&spec, &sched.beta, &opts);
+    println!("LP predicted T_f  = {:.6}", sched.makespan);
+    println!("simulated makespan = {:.6}", res.makespan);
+    println!("events processed   = {}", res.events);
+    if let Some(tr) = res.trace {
+        print!("{}", tr.render());
+    }
+    Ok(())
+}
+
+/// `dlt cluster`
+pub fn cluster(a: &Args) -> Result<()> {
+    let spec = load(a)?;
+    let model = model_of(a)?;
+    let sched = solve_spec(&spec, model, "simplex")?;
+    let compute = if a.has("real-compute") {
+        let dir = a.get_or("artifacts", "artifacts");
+        let a_vec = spec.a();
+        let scale = a.get_f64("time-scale")?.unwrap_or(0.002);
+        // Calibrate: seconds per work unit -> units per load so that
+        // one load unit on P_j costs A_j * scale wall seconds.
+        let mut probe = crate::runtime::WorkloadExecutable::open(&dir, 42)?;
+        let sec_per_unit = probe.calibrate(8)?;
+        println!("calibration: {:.3} ms per work unit", sec_per_unit * 1e3);
+        let dir2 = dir.clone();
+        Compute::Custom(std::sync::Arc::new(move |j: usize| {
+            let mut w = crate::runtime::WorkloadExecutable::open(&dir2, 42)
+                .expect("open workload in processor thread");
+            let units_per_load = (a_vec[j] * scale / sec_per_unit).max(1e-9);
+            let mut carry = 0.0f64;
+            Box::new(move |load: f64| {
+                let want = load * units_per_load + carry;
+                let n = want.floor() as usize;
+                carry = want - n as f64;
+                w.run_units(n).expect("workload execution");
+            })
+        }))
+    } else {
+        Compute::Modeled
+    };
+    let cfg = ClusterConfig {
+        time_scale: a.get_f64("time-scale")?.unwrap_or(0.002),
+        compute,
+        fe_splits: a.get_usize("fe-splits")?.unwrap_or(16),
+    };
+    let rep = run_cluster(&spec, &sched, &cfg)?;
+    println!("predicted T_f       = {:.4}", rep.predicted_makespan);
+    println!("realized  T_f       = {:.4}", rep.realized_makespan);
+    println!("relative error      = {:+.2}%", rep.relative_error * 100.0);
+    println!("wall clock          = {:?}", rep.wall);
+    for (j, (&done, &load)) in rep.proc_done.iter().zip(rep.proc_load.iter()).enumerate() {
+        println!("  P{}: load {:8.3}  done at {:8.3}", j + 1, load, done);
+    }
+    Ok(())
+}
+
+/// `dlt tradeoff`
+pub fn tradeoff(a: &Args) -> Result<()> {
+    let spec = load(a)?;
+    let sweep = TradeoffTable::sweep(&spec)?;
+    println!("{:>4} {:>12} {:>12} {:>12}", "m", "T_f", "cost", "gradient%");
+    for (k, p) in sweep.points.iter().enumerate() {
+        let g = if k == 0 {
+            "".to_string()
+        } else {
+            format!("{:+.2}", sweep.gradients[k - 1] * 100.0)
+        };
+        println!("{:>4} {:>12.4} {:>12.2} {:>12}", p.m, p.tf, p.cost, g);
+    }
+    let budgets = Budgets {
+        cost: a.get_f64("budget-cost")?,
+        time: a.get_f64("budget-time")?,
+        gradient_threshold: a.get_f64("gradient")?.unwrap_or(0.06),
+    };
+    match advise(&sweep, &budgets) {
+        Advice::Use { m, tf, cost } => {
+            println!("advice: use {m} processors (T_f {tf:.3}, cost {cost:.2})")
+        }
+        Advice::Range { lo, hi, recommended } => println!(
+            "advice: any m in [{lo}, {hi}] meets both budgets; cheapest m = {recommended}"
+        ),
+        Advice::Infeasible { min_cost_meeting_time, min_time_within_cost } => {
+            println!("advice: no processor count satisfies both budgets");
+            if let Some(c) = min_cost_meeting_time {
+                println!("  meeting the deadline needs a cost budget >= {c:.2}");
+            }
+            if let Some(t) = min_time_within_cost {
+                println!("  staying in budget needs a time budget >= {t:.3}");
+            }
+        }
+    }
+    Ok(())
+}
+
+/// `dlt speedup`
+pub fn speedup_cmd(a: &Args) -> Result<()> {
+    let spec = load(a)?;
+    let sources = a.get_usize_list("sources")?.unwrap_or_else(|| vec![1, 2]);
+    let max_src = *sources.iter().max().unwrap_or(&1);
+    if max_src > spec.n() {
+        return Err(Error::Usage(format!(
+            "--sources asks for {max_src} sources but the spec has {}",
+            spec.n()
+        )));
+    }
+    let pts = crate::speedup::sweep(&spec, &sources, spec.m())?;
+    print!("{:>4}", "m");
+    for p in &sources {
+        print!(" {:>10}", format!("S({p}src)"));
+    }
+    println!();
+    for m in 1..=spec.m() {
+        print!("{m:>4}");
+        for &p in &sources {
+            let pt = pts.iter().find(|x| x.sources == p && x.processors == m).unwrap();
+            print!(" {:>10.4}", pt.speedup);
+        }
+        println!();
+    }
+    Ok(())
+}
+
+/// `dlt experiments`
+pub fn experiments(a: &Args) -> Result<()> {
+    let names: Vec<&str> = match a.get("exp") {
+        Some(one) => vec![one],
+        None => crate::experiments::ALL.to_vec(),
+    };
+    for name in names {
+        let t = crate::experiments::run(name)?;
+        println!("{}", t.render_text());
+        if let Some(dir) = a.get("csv-dir") {
+            let path = t.write_csv(dir)?;
+            println!("  wrote {path}");
+        }
+    }
+    Ok(())
+}
+
+/// `dlt artifacts`
+pub fn artifacts(a: &Args) -> Result<()> {
+    let dir = a.get_or("artifacts", "artifacts");
+    let rt = crate::runtime::Runtime::open(&dir)?;
+    println!("platform: {}", rt.platform());
+    println!("pdhg variants:");
+    for v in &rt.manifest().pdhg {
+        println!("  {:30} nv={:5} nc={:5} steps={}", v.name, v.nv, v.nc, v.steps);
+    }
+    println!("workload variants:");
+    for w in &rt.manifest().workload {
+        println!("  {:30} {}x{}", w.name, w.rows, w.cols);
+    }
+    Ok(())
+}

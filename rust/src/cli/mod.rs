@@ -1,0 +1,103 @@
+//! Command-line interface (from-scratch arg parsing — no `clap` in the
+//! offline crate set).
+//!
+//! ```text
+//! dlt solve     --spec spec.json [--model fe|nfe] [--solver simplex|pdhg|pdhg-artifact]
+//! dlt simulate  --spec spec.json [--model fe|nfe] [--jitter 0.1] [--seed 7] [--trace]
+//! dlt cluster   --spec spec.json [--model fe|nfe] [--time-scale 0.002] [--real-compute]
+//! dlt tradeoff  --spec spec.json [--budget-cost X] [--budget-time Y] [--gradient 0.06]
+//! dlt speedup   --spec spec.json --sources 1,2,3
+//! dlt experiments [--exp fig12] [--csv-dir out/]
+//! dlt artifacts
+//! ```
+
+pub mod args;
+pub mod commands;
+
+use crate::error::{Error, Result};
+
+/// Run the CLI with raw argv.
+pub fn run(argv: &[String]) -> Result<()> {
+    let parsed = args::Args::parse(&argv[1..])?;
+    match parsed.subcommand.as_str() {
+        "solve" => commands::solve(&parsed),
+        "simulate" => commands::simulate(&parsed),
+        "cluster" => commands::cluster(&parsed),
+        "tradeoff" => commands::tradeoff(&parsed),
+        "speedup" => commands::speedup_cmd(&parsed),
+        "experiments" => commands::experiments(&parsed),
+        "artifacts" => commands::artifacts(&parsed),
+        "help" | "" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => Err(Error::Usage(format!("unknown subcommand `{other}`\n{HELP}"))),
+    }
+}
+
+/// Top-level help text.
+pub const HELP: &str = "\
+dlt — multi-source multi-processor divisible-load scheduling
+  (reproduction of Cao/Wu/Robertazzi 2019)
+
+USAGE: dlt <subcommand> [flags]
+
+SUBCOMMANDS
+  solve        solve one scheduling instance, print the beta table
+  simulate     run the discrete-event simulator on the solved schedule
+  cluster      execute the schedule on the threaded cluster runtime
+  tradeoff     §6 trade-off advisor (cost/time budgets)
+  speedup      §5 speedup analysis
+  experiments  regenerate the paper's figures (tables / CSV)
+  artifacts    inspect the AOT artifact manifest
+  help         this text
+
+COMMON FLAGS
+  --spec FILE        system spec JSON (see config::spec)
+  --model fe|nfe     timing model (default fe)
+  --solver NAME      simplex | pdhg | pdhg-artifact (default simplex)
+  --csv-dir DIR      also write CSV output
+  --exp NAME         experiment id (fig10..fig20; default: all)
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        std::iter::once("dlt".to_string()).chain(s.split_whitespace().map(String::from)).collect()
+    }
+
+    #[test]
+    fn help_runs() {
+        run(&argv("help")).unwrap();
+    }
+
+    #[test]
+    fn unknown_subcommand_errors() {
+        assert!(run(&argv("frobnicate")).is_err());
+    }
+
+    #[test]
+    fn experiments_single_figure() {
+        run(&argv("experiments --exp fig10")).unwrap();
+    }
+
+    #[test]
+    fn solve_with_inline_spec() {
+        let path = "/tmp/dlt_cli_spec.json";
+        std::fs::write(
+            path,
+            r#"{"sources":[{"g":0.2},{"g":0.4,"release":1}],
+                "processors":[{"a":2},{"a":3}],"job":10}"#,
+        )
+        .unwrap();
+        run(&argv(&format!("solve --spec {path}"))).unwrap();
+        run(&argv(&format!("solve --spec {path} --model nfe"))).unwrap();
+        run(&argv(&format!("solve --spec {path} --solver pdhg"))).unwrap();
+        run(&argv(&format!("simulate --spec {path} --model nfe --jitter 0.05"))).unwrap();
+        run(&argv(&format!("tradeoff --spec {path} --budget-time 100"))).unwrap();
+        run(&argv(&format!("speedup --spec {path} --sources 1,2"))).unwrap();
+        std::fs::remove_file(path).ok();
+    }
+}

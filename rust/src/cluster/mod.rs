@@ -1,0 +1,18 @@
+//! In-process cluster runtime: the schedule, executed for real.
+//!
+//! Threads play the roles of the paper's nodes: one thread per source
+//! and one per processor, connected by channels. Transfers occupy real
+//! (scaled) wall-clock time according to `β·G_i`; the paper's
+//! sequential-communication rules are enforced with per-processor turn
+//! locks; processors either *model* their compute (scaled sleep) or do
+//! *real* compute through a work function — the e2e example plugs in
+//! the AOT-compiled XLA workload artifact there.
+//!
+//! (The offline crate set has no `tokio`; this is a from-scratch
+//! thread+channel actor runtime with an interface shaped like one.)
+
+pub mod harness;
+pub mod turn;
+
+pub use harness::{run_cluster, ClusterConfig, ClusterReport, Compute};
+pub use turn::TurnGate;

@@ -1,0 +1,9 @@
+//! Configuration substrate: a from-scratch JSON parser/serializer and
+//! the (de)serialization of [`crate::model::SystemSpec`] and experiment
+//! configs. (The offline crate set has no `serde`/`serde_json`.)
+
+pub mod json;
+pub mod spec;
+
+pub use json::Json;
+pub use spec::{load_spec, save_spec, spec_from_json, spec_to_json};

@@ -1,0 +1,149 @@
+//! JSON (de)serialization of [`SystemSpec`].
+//!
+//! The on-disk format mirrors the paper's parameter tables:
+//!
+//! ```json
+//! {
+//!   "sources":    [{"g": 0.2, "release": 10.0}, {"g": 0.4, "release": 50.0}],
+//!   "processors": [{"a": 2.0, "cost": 29.0}, {"a": 3.0, "cost": 28.0}],
+//!   "job": 100.0
+//! }
+//! ```
+
+use crate::config::json::Json;
+use crate::error::{Error, Result};
+use crate::model::{Processor, Source, SystemSpec};
+
+/// Serialize a spec to JSON.
+pub fn spec_to_json(spec: &SystemSpec) -> Json {
+    let sources = spec
+        .sources
+        .iter()
+        .map(|s| {
+            Json::Object(vec![
+                ("g".into(), Json::Num(s.g)),
+                ("release".into(), Json::Num(s.release)),
+                ("name".into(), Json::Str(s.name.clone())),
+            ])
+        })
+        .collect();
+    let processors = spec
+        .processors
+        .iter()
+        .map(|p| {
+            Json::Object(vec![
+                ("a".into(), Json::Num(p.a)),
+                ("cost".into(), Json::Num(p.cost_rate)),
+                ("name".into(), Json::Str(p.name.clone())),
+            ])
+        })
+        .collect();
+    Json::Object(vec![
+        ("sources".into(), Json::Array(sources)),
+        ("processors".into(), Json::Array(processors)),
+        ("job".into(), Json::Num(spec.job)),
+    ])
+}
+
+/// Deserialize a spec from JSON (validates before returning).
+pub fn spec_from_json(v: &Json) -> Result<SystemSpec> {
+    let sources = v
+        .req("sources")?
+        .as_array()?
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            Ok(Source {
+                g: s.req("g")?.as_f64()?,
+                release: s.get("release").map(|r| r.as_f64()).transpose()?.unwrap_or(0.0),
+                name: s
+                    .get("name")
+                    .map(|n| n.as_str().map(str::to_string))
+                    .transpose()?
+                    .unwrap_or_else(|| format!("S{}", i + 1)),
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let processors = v
+        .req("processors")?
+        .as_array()?
+        .iter()
+        .enumerate()
+        .map(|(j, p)| {
+            Ok(Processor {
+                a: p.req("a")?.as_f64()?,
+                cost_rate: p.get("cost").map(|c| c.as_f64()).transpose()?.unwrap_or(0.0),
+                name: p
+                    .get("name")
+                    .map(|n| n.as_str().map(str::to_string))
+                    .transpose()?
+                    .unwrap_or_else(|| format!("P{}", j + 1)),
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let spec = SystemSpec { sources, processors, job: v.req("job")?.as_f64()? };
+    spec.validate().map_err(|e| Error::Config(format!("{e}")))?;
+    Ok(spec)
+}
+
+/// Load a spec from a JSON file.
+pub fn load_spec(path: &str) -> Result<SystemSpec> {
+    let text = std::fs::read_to_string(path).map_err(|e| Error::io(path, e))?;
+    spec_from_json(&Json::parse(&text)?)
+}
+
+/// Save a spec to a JSON file (pretty-printed).
+pub fn save_spec(path: &str, spec: &SystemSpec) -> Result<()> {
+    std::fs::write(path, spec_to_json(spec).to_string_pretty()).map_err(|e| Error::io(path, e))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table1() -> SystemSpec {
+        SystemSpec::builder()
+            .source(0.2, 10.0)
+            .source(0.4, 50.0)
+            .processors(&[2.0, 3.0, 4.0, 5.0, 6.0])
+            .job(100.0)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn roundtrip() {
+        let spec = table1();
+        let j = spec_to_json(&spec);
+        let back = spec_from_json(&j).unwrap();
+        assert_eq!(spec, back);
+    }
+
+    #[test]
+    fn defaults_for_optional_fields() {
+        let j = Json::parse(
+            r#"{"sources": [{"g": 0.5}], "processors": [{"a": 2.0}], "job": 10}"#,
+        )
+        .unwrap();
+        let spec = spec_from_json(&j).unwrap();
+        assert_eq!(spec.sources[0].release, 0.0);
+        assert_eq!(spec.sources[0].name, "S1");
+        assert_eq!(spec.processors[0].cost_rate, 0.0);
+    }
+
+    #[test]
+    fn invalid_spec_rejected() {
+        let j = Json::parse(r#"{"sources": [], "processors": [{"a": 1}], "job": 10}"#).unwrap();
+        assert!(spec_from_json(&j).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let spec = table1();
+        let path = "/tmp/dlt_spec_test.json";
+        save_spec(path, &spec).unwrap();
+        let back = load_spec(path).unwrap();
+        assert_eq!(spec, back);
+        std::fs::remove_file(path).ok();
+    }
+}

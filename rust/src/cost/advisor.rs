@@ -1,0 +1,282 @@
+//! §6.2–6.4 — the trade-off advisor.
+//!
+//! Sweeps the number of processors `m = 1..M`, solving the schedule and
+//! computing `(T_f(m), Cost(m))`, then answers the paper's three user
+//! questions:
+//!
+//! - **cost budget** (§6.2): largest feasible `m` under the budget,
+//!   then walk back while the finish-time gradient is below the
+//!   user's "not worth it" threshold (paper example: 6 %).
+//! - **time budget** (§6.3): smallest `m` with `T_f(m) ≤ budget`
+//!   (cheapest solution that meets the deadline).
+//! - **both** (§6.4): the overlap of the two solution areas, or a
+//!   report that no solution exists (paper Fig. 19 / Fig. 20).
+
+use crate::cost::model::{gradient_series, schedule_cost};
+use crate::dlt::frontend;
+use crate::error::Result;
+use crate::model::SystemSpec;
+
+/// One row of the trade-off sweep.
+#[derive(Debug, Clone)]
+pub struct TradeoffPoint {
+    /// Number of processors used (prefix of the sorted list).
+    pub m: usize,
+    /// Optimal finish time with `m` processors.
+    pub tf: f64,
+    /// Total monetary cost (eq. 17).
+    pub cost: f64,
+}
+
+/// The full sweep plus gradients.
+#[derive(Debug, Clone)]
+pub struct TradeoffTable {
+    /// Points for `m = 1..=M`.
+    pub points: Vec<TradeoffPoint>,
+    /// `gradient[k]` = relative change of `T_f` from `m=k+1` to `m=k+2`.
+    pub gradients: Vec<f64>,
+}
+
+impl TradeoffTable {
+    /// Sweep `m = 1..=spec.m()` with the front-end solver (the paper's
+    /// §6 simulations all use the front-end network).
+    pub fn sweep(spec: &SystemSpec) -> Result<TradeoffTable> {
+        let mut points = Vec::with_capacity(spec.m());
+        for m in 1..=spec.m() {
+            let sub = spec.with_m_processors(m);
+            let sched = frontend::solve(&sub)?;
+            points.push(TradeoffPoint {
+                m,
+                tf: sched.makespan,
+                cost: schedule_cost(&sub, &sched),
+            });
+        }
+        let tf: Vec<f64> = points.iter().map(|p| p.tf).collect();
+        Ok(TradeoffTable { points, gradients: gradient_series(&tf) })
+    }
+
+    /// Point for a given `m` (1-based).
+    pub fn at(&self, m: usize) -> &TradeoffPoint {
+        &self.points[m - 1]
+    }
+}
+
+/// User budgets. `None` means unconstrained.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Budgets {
+    /// Maximum money the user will spend.
+    pub cost: Option<f64>,
+    /// Maximum acceptable finish time.
+    pub time: Option<f64>,
+    /// "Not worth another processor" gradient threshold (e.g. 0.06 for
+    /// the paper's 6 %). Only used with a cost budget.
+    pub gradient_threshold: f64,
+}
+
+/// Advisor outcome.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Advice {
+    /// Use exactly this many processors.
+    Use { m: usize, tf: f64, cost: f64 },
+    /// A whole range satisfies both budgets (Fig. 19): any `m` in
+    /// `lo..=hi` works; `recommended` minimizes cost (i.e. `lo`).
+    Range { lo: usize, hi: usize, recommended: usize },
+    /// No feasible processor count (Fig. 20): report the closest
+    /// misses so the user can relax a budget.
+    Infeasible {
+        /// Cheapest cost achievable within the time budget, if any m
+        /// meets the deadline at all.
+        min_cost_meeting_time: Option<f64>,
+        /// Fastest finish achievable within the cost budget, if any m
+        /// is affordable at all.
+        min_time_within_cost: Option<f64>,
+    },
+}
+
+/// Run the advisor against a sweep.
+pub fn advise(table: &TradeoffTable, budgets: &Budgets) -> Advice {
+    let pts = &table.points;
+    match (budgets.cost, budgets.time) {
+        (Some(cb), None) => {
+            // §6.2: all m with cost <= budget are candidates; prefer the
+            // largest, then walk back while the *next* processor's
+            // improvement was below the threshold.
+            let mut best: Option<usize> = None;
+            for p in pts {
+                if p.cost <= cb {
+                    best = Some(p.m);
+                }
+            }
+            let Some(mut m) = best else {
+                return Advice::Infeasible {
+                    min_cost_meeting_time: None,
+                    min_time_within_cost: None,
+                };
+            };
+            // gradients[k] is the improvement from m=k+1 to m=k+2; going
+            // from m-1 to m is gradients[m-2].
+            while m >= 2 {
+                let grad = table.gradients[m - 2];
+                if -grad < budgets.gradient_threshold {
+                    m -= 1;
+                } else {
+                    break;
+                }
+            }
+            let p = table.at(m);
+            Advice::Use { m, tf: p.tf, cost: p.cost }
+        }
+        (None, Some(tb)) => {
+            // §6.3: smallest m meeting the deadline (cost grows with m).
+            for p in pts {
+                if p.tf <= tb {
+                    return Advice::Use { m: p.m, tf: p.tf, cost: p.cost };
+                }
+            }
+            Advice::Infeasible { min_cost_meeting_time: None, min_time_within_cost: None }
+        }
+        (Some(cb), Some(tb)) => {
+            // §6.4: intersection of the two solution areas.
+            let feas: Vec<&TradeoffPoint> =
+                pts.iter().filter(|p| p.cost <= cb && p.tf <= tb).collect();
+            if feas.is_empty() {
+                let min_cost_meeting_time = pts
+                    .iter()
+                    .filter(|p| p.tf <= tb)
+                    .map(|p| p.cost)
+                    .fold(None, |acc: Option<f64>, c| Some(acc.map_or(c, |a| a.min(c))));
+                let min_time_within_cost = pts
+                    .iter()
+                    .filter(|p| p.cost <= cb)
+                    .map(|p| p.tf)
+                    .fold(None, |acc: Option<f64>, t| Some(acc.map_or(t, |a| a.min(t))));
+                return Advice::Infeasible { min_cost_meeting_time, min_time_within_cost };
+            }
+            let lo = feas.iter().map(|p| p.m).min().unwrap();
+            let hi = feas.iter().map(|p| p.m).max().unwrap();
+            if lo == hi {
+                let p = table.at(lo);
+                Advice::Use { m: lo, tf: p.tf, cost: p.cost }
+            } else {
+                Advice::Range { lo, hi, recommended: lo }
+            }
+        }
+        (None, None) => {
+            // Unconstrained: fastest system.
+            let p = pts.iter().min_by(|a, b| a.tf.partial_cmp(&b.tf).unwrap()).unwrap();
+            Advice::Use { m: p.m, tf: p.tf, cost: p.cost }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Paper Table 5 parameters.
+    fn table5_spec() -> SystemSpec {
+        let ac: Vec<(f64, f64)> =
+            (0..20).map(|k| (1.1 + 0.1 * k as f64, 29.0 - k as f64)).collect();
+        SystemSpec::builder()
+            .source(0.5, 2.0)
+            .source(0.6, 3.0)
+            .priced_processors(&ac)
+            .job(100.0)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn sweep_shapes() {
+        let t = TradeoffTable::sweep(&table5_spec()).unwrap();
+        assert_eq!(t.points.len(), 20);
+        assert_eq!(t.gradients.len(), 19);
+        // T_f non-increasing; cost non-decreasing while processors still
+        // matter (paper Figs. 16–17). At the far tail the LP may shift a
+        // sliver of load to a cheaper processor, so allow a tiny dip.
+        for w in t.points.windows(2) {
+            assert!(w[1].tf <= w[0].tf + 1e-6);
+            assert!(w[1].cost >= w[0].cost - 1.0, "{} -> {}", w[0].cost, w[1].cost);
+        }
+        // Paper anchor values (Fig. 16): Cost(6)=3433.77, Cost(7)=3451.67.
+        assert!((t.at(6).cost - 3433.77).abs() < 0.5, "cost(6)={}", t.at(6).cost);
+        assert!((t.at(7).cost - 3451.67).abs() < 0.5, "cost(7)={}", t.at(7).cost);
+    }
+
+    #[test]
+    fn cost_budget_advice() {
+        let t = TradeoffTable::sweep(&table5_spec()).unwrap();
+        let advice = advise(
+            &t,
+            &Budgets { cost: Some(3450.0), time: None, gradient_threshold: 0.06 },
+        );
+        // Paper §6.2: budget 3450 admits m<=6; the 6% gradient rule
+        // walks back to m=5.
+        match advice {
+            Advice::Use { m, .. } => assert_eq!(m, 5, "paper recommends 5 processors"),
+            other => panic!("unexpected advice {other:?}"),
+        }
+    }
+
+    #[test]
+    fn time_budget_advice_picks_cheapest() {
+        let t = TradeoffTable::sweep(&table5_spec()).unwrap();
+        let tb = t.at(10).tf + 1e-9; // deadline exactly at m=10's T_f
+        let advice = advise(&t, &Budgets { cost: None, time: Some(tb), gradient_threshold: 0.0 });
+        match advice {
+            Advice::Use { m, .. } => assert_eq!(m, 10, "paper §6.3 picks the smallest m"),
+            other => panic!("unexpected advice {other:?}"),
+        }
+    }
+
+    #[test]
+    fn both_budgets_overlap_gives_range() {
+        let t = TradeoffTable::sweep(&table5_spec()).unwrap();
+        // Budgets spanning m in [6, 12] (Fig. 19).
+        let cb = t.at(12).cost + 1e-9;
+        let tb = t.at(6).tf + 1e-9;
+        let advice =
+            advise(&t, &Budgets { cost: Some(cb), time: Some(tb), gradient_threshold: 0.0 });
+        match advice {
+            Advice::Range { lo, hi, recommended } => {
+                assert_eq!((lo, hi), (6, 12));
+                assert_eq!(recommended, 6);
+            }
+            other => panic!("unexpected advice {other:?}"),
+        }
+    }
+
+    #[test]
+    fn both_budgets_disjoint_is_infeasible() {
+        let t = TradeoffTable::sweep(&table5_spec()).unwrap();
+        // Cost budget only allows m<=4 but deadline needs m>=10.
+        let cb = t.at(4).cost + 1e-9;
+        let tb = t.at(10).tf + 1e-9;
+        let advice =
+            advise(&t, &Budgets { cost: Some(cb), time: Some(tb), gradient_threshold: 0.0 });
+        match advice {
+            Advice::Infeasible { min_cost_meeting_time, min_time_within_cost } => {
+                assert!(min_cost_meeting_time.unwrap() > cb);
+                assert!(min_time_within_cost.unwrap() > tb);
+            }
+            other => panic!("unexpected advice {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unconstrained_picks_fastest() {
+        let t = TradeoffTable::sweep(&table5_spec()).unwrap();
+        match advise(&t, &Budgets::default()) {
+            Advice::Use { m, .. } => assert_eq!(m, 20),
+            other => panic!("unexpected advice {other:?}"),
+        }
+    }
+
+    #[test]
+    fn impossible_cost_budget() {
+        let t = TradeoffTable::sweep(&table5_spec()).unwrap();
+        let advice =
+            advise(&t, &Budgets { cost: Some(0.01), time: None, gradient_threshold: 0.06 });
+        assert!(matches!(advice, Advice::Infeasible { .. }));
+    }
+}

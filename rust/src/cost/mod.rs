@@ -1,0 +1,7 @@
+//! §6 — monetary cost model and the cost/time trade-off advisor.
+
+pub mod advisor;
+pub mod model;
+
+pub use advisor::{advise, Advice, Budgets, TradeoffPoint, TradeoffTable};
+pub use model::{gradient_series, schedule_cost, tf_gradient};

@@ -1,0 +1,99 @@
+//! Monetary cost (paper eq. 17) and the finish-time gradient (eq. 18).
+
+use crate::dlt::Schedule;
+use crate::model::SystemSpec;
+
+/// Total monetary cost of a schedule:
+/// `Cost_total = Σ_i Σ_j β_{i,j} · A_j · C_j` (eq. 17).
+pub fn schedule_cost(spec: &SystemSpec, sched: &Schedule) -> f64 {
+    let a = spec.a();
+    let c = spec.cost_rates();
+    let mut total = 0.0;
+    for j in 0..sched.m {
+        total += sched.load_on_processor(j) * a[j] * c[j];
+    }
+    total
+}
+
+/// Gradient of the finish time when going from `m−1` to `m` processors
+/// (eq. 18): `(T_f(m) − T_f(m−1)) / T_f(m−1)`. Negative values mean
+/// the extra processor helped.
+pub fn tf_gradient(tf_m: f64, tf_m_minus_1: f64) -> f64 {
+    (tf_m - tf_m_minus_1) / tf_m_minus_1
+}
+
+/// Gradient series over a finish-time sweep indexed by processor count
+/// (entry `k` is the gradient of going from `k` to `k+1` processors,
+/// 0-based over the input slice).
+pub fn gradient_series(tf: &[f64]) -> Vec<f64> {
+    tf.windows(2).map(|w| tf_gradient(w[1], w[0])).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dlt::frontend;
+    use crate::model::SystemSpec;
+
+    fn priced_spec(m: usize) -> SystemSpec {
+        let ac: Vec<(f64, f64)> =
+            (0..m).map(|k| (1.1 + 0.1 * k as f64, 29.0 - k as f64)).collect();
+        SystemSpec::builder()
+            .source(0.5, 2.0)
+            .source(0.6, 3.0)
+            .priced_processors(&ac)
+            .job(100.0)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn cost_is_positive_and_bounded() {
+        let spec = priced_spec(5);
+        let s = frontend::solve(&spec).unwrap();
+        let cost = schedule_cost(&spec, &s);
+        assert!(cost > 0.0);
+        // Upper bound: all load on the most expensive processor-time.
+        let max_rate = spec
+            .processors
+            .iter()
+            .map(|p| p.a * p.cost_rate)
+            .fold(0.0f64, f64::max);
+        assert!(cost <= 100.0 * max_rate + 1e-9);
+    }
+
+    #[test]
+    fn cost_zero_when_free() {
+        let spec = SystemSpec::builder()
+            .source(0.5, 0.0)
+            .processors(&[1.0, 2.0])
+            .job(10.0)
+            .build()
+            .unwrap();
+        let s = frontend::solve(&spec).unwrap();
+        assert_eq!(schedule_cost(&spec, &s), 0.0);
+    }
+
+    #[test]
+    fn gradient_math() {
+        assert!((tf_gradient(90.0, 100.0) + 0.10).abs() < 1e-12);
+        let g = gradient_series(&[100.0, 80.0, 70.0]);
+        assert_eq!(g.len(), 2);
+        assert!((g[0] + 0.2).abs() < 1e-12);
+        assert!((g[1] + 0.125).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cost_grows_with_more_processors() {
+        // Paper Fig. 16: total cost grows with processor count (with
+        // decreasing rate). Check monotonicity on the paper's params.
+        let mut prev = 0.0;
+        for m in 1..=8 {
+            let spec = priced_spec(m);
+            let s = frontend::solve(&spec).unwrap();
+            let cost = schedule_cost(&spec, &s);
+            assert!(cost >= prev - 1e-6, "m={m}: {cost} < {prev}");
+            prev = cost;
+        }
+    }
+}

@@ -1,0 +1,332 @@
+//! Extension (paper §8, "simultaneous communication with a bandwidth
+//! limitation"): concurrent distribution under a per-source bandwidth
+//! cap, in two fluid models.
+//!
+//! Each source `S_i` has fixed bandwidth `b_i = 1/G_i` but may serve
+//! several processors at once (and a processor may receive from several
+//! sources at once) — the paper's sequential-communication rules are
+//! lifted, only the bandwidth cap remains.
+//!
+//! **Proportional** — the source splits `b_i` proportionally to its
+//! fraction sizes, so all of its streams finish together at
+//! `D_i = R_i + α_i G_i` (`α_i = Σ_j β_{i,j}`). Two extra LP variables.
+//!
+//! **Staggered** — the source schedules its outgoing fluid freely
+//! (water-filling); a set of per-stream completion deadlines
+//! `t_{i,1} ≤ … ≤ t_{i,M}` is achievable iff the cumulative demand
+//! meets the capacity: `Σ_{k≤j} β_{i,k} G_i ≤ t_{i,j} − R_i` (EDF
+//! feasibility for fluid streams). This strictly generalizes both the
+//! proportional model and the paper's sequential protocol, so its
+//! optimum dominates both.
+//!
+//! Measured on the paper's Table 3 (see `bench_ablations`):
+//! proportional wins over sequential only for small `m` (everyone
+//! waiting for the common drain time wastes the early-start advantage
+//! as `m` grows — a finding the paper's future-work section does not
+//! anticipate), while staggered concurrency dominates everywhere.
+
+use crate::dlt::schedule::{Schedule, TimingModel};
+use crate::error::Result;
+use crate::lp::{solve_with, Cmp, LpProblem, SimplexOptions};
+use crate::model::SystemSpec;
+
+/// Which fluid model to use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Mode {
+    /// Equal-finish proportional bandwidth sharing.
+    Proportional,
+    /// Free (EDF/water-filling) bandwidth scheduling.
+    #[default]
+    Staggered,
+}
+
+/// Build the concurrent-distribution LP (no-front-end semantics).
+pub fn build_lp(spec: &SystemSpec, mode: Mode) -> LpProblem {
+    match mode {
+        Mode::Proportional => build_proportional(spec),
+        Mode::Staggered => build_staggered(spec),
+    }
+}
+
+fn build_proportional(spec: &SystemSpec) -> LpProblem {
+    let n = spec.n();
+    let m = spec.m();
+    let g = spec.g();
+    let r = spec.releases();
+    let a = spec.a();
+    let d = n * m; // shared arrival-deadline variable
+    let tf = n * m + 1;
+    let mut p = LpProblem::new(n * m + 2);
+    for i in 0..n {
+        for j in 0..m {
+            p.name_var(i * m + j, format!("beta[{i}][{j}]"));
+        }
+    }
+    p.name_var(d, "D");
+    p.name_var(tf, "T_f");
+    p.set_objective_coeff(tf, 1.0);
+
+    // D >= R_i + alpha_i G_i
+    for i in 0..n {
+        let mut coeffs: Vec<(usize, f64)> = vec![(d, 1.0)];
+        for j in 0..m {
+            coeffs.push((i * m + j, -g[i]));
+        }
+        p.add_labeled(&coeffs, Cmp::Ge, r[i], format!("arrival[{i}]"));
+    }
+    // T_f >= D + sum_i beta[i][j] A_j
+    for j in 0..m {
+        let mut coeffs: Vec<(usize, f64)> = vec![(tf, 1.0), (d, -1.0)];
+        for i in 0..n {
+            coeffs.push((i * m + j, -a[j]));
+        }
+        p.add_labeled(&coeffs, Cmp::Ge, 0.0, format!("finish[{j}]"));
+    }
+    normalize(&mut p, spec);
+    p
+}
+
+fn build_staggered(spec: &SystemSpec) -> LpProblem {
+    let n = spec.n();
+    let m = spec.m();
+    let g = spec.g();
+    let r = spec.releases();
+    let a = spec.a();
+    // Variables: beta (n*m), t (n*m, per-stream completion), T_f.
+    let tvar = |i: usize, j: usize| n * m + i * m + j;
+    let tf = 2 * n * m;
+    let mut p = LpProblem::new(2 * n * m + 1);
+    for i in 0..n {
+        for j in 0..m {
+            p.name_var(i * m + j, format!("beta[{i}][{j}]"));
+            p.name_var(tvar(i, j), format!("t[{i}][{j}]"));
+        }
+    }
+    p.name_var(tf, "T_f");
+    p.set_objective_coeff(tf, 1.0);
+
+    for i in 0..n {
+        for j in 0..m {
+            // Deadline ordering (paper convention: fast processors first).
+            if j + 1 < m {
+                p.add_labeled(
+                    &[(tvar(i, j), 1.0), (tvar(i, j + 1), -1.0)],
+                    Cmp::Le,
+                    0.0,
+                    format!("order[{i}][{j}]"),
+                );
+            }
+            // EDF capacity: sum_{k<=j} beta[i][k] G_i <= t[i][j] - R_i.
+            let mut coeffs: Vec<(usize, f64)> = vec![(tvar(i, j), 1.0)];
+            for k in 0..=j {
+                coeffs.push((i * m + k, -g[i]));
+            }
+            p.add_labeled(&coeffs, Cmp::Ge, r[i], format!("capacity[{i}][{j}]"));
+            // Finish: T_f >= t[i][j] + sum_k beta[k][j] A_j.
+            // (For beta[i][j] = 0 streams this still ties t >= R_i into
+            // the bound — same zero-window artifact the paper's own
+            // §3.2 LP has; negligible when releases are small.)
+            let mut coeffs: Vec<(usize, f64)> = vec![(tf, 1.0), (tvar(i, j), -1.0)];
+            for k in 0..n {
+                coeffs.push((k * m + j, -a[j]));
+            }
+            p.add_labeled(&coeffs, Cmp::Ge, 0.0, format!("finish[{i}][{j}]"));
+        }
+    }
+    normalize(&mut p, spec);
+    p
+}
+
+fn normalize(p: &mut LpProblem, spec: &SystemSpec) {
+    let (n, m) = (spec.n(), spec.m());
+    let all: Vec<(usize, f64)> =
+        (0..n).flat_map(|i| (0..m).map(move |j| (i * m + j, 1.0))).collect();
+    p.add_labeled(&all, Cmp::Eq, spec.job, "normalize");
+}
+
+/// Solve with the default (staggered) model.
+pub fn solve(spec: &SystemSpec) -> Result<Schedule> {
+    solve_mode(spec, Mode::default())
+}
+
+/// Solve and reconstruct the timed schedule.
+pub fn solve_mode(spec: &SystemSpec, mode: Mode) -> Result<Schedule> {
+    spec.validate()?;
+    let n = spec.n();
+    let m = spec.m();
+    let g = spec.g();
+    let r = spec.releases();
+    let a = spec.a();
+    let lp = build_lp(spec, mode);
+    let sol = solve_with(&lp, &SimplexOptions::default())?;
+
+    let beta: Vec<f64> = sol.x[..n * m]
+        .iter()
+        .map(|&b| crate::util::float::snap_nonneg(b, 1e-9))
+        .collect();
+    let makespan = *sol.x.last().unwrap();
+
+    // Per-stream completion times.
+    let t_ij: Vec<f64> = match mode {
+        Mode::Proportional => {
+            let alpha: Vec<f64> =
+                (0..n).map(|i| (0..m).map(|j| beta[i * m + j]).sum()).collect();
+            (0..n * m).map(|k| r[k / m] + alpha[k / m] * g[k / m]).collect()
+        }
+        Mode::Staggered => sol.x[n * m..2 * n * m].to_vec(),
+    };
+
+    // Bandwidth-equivalent windows ending at the completion time.
+    let mut comm_start = vec![0.0; n * m];
+    let mut comm_end = vec![0.0; n * m];
+    for i in 0..n {
+        for j in 0..m {
+            let k = i * m + j;
+            comm_end[k] = t_ij[k];
+            comm_start[k] = t_ij[k] - beta[k] * g[i];
+        }
+    }
+    let mut compute_start = vec![0.0; m];
+    let mut compute_end = vec![0.0; m];
+    for j in 0..m {
+        let total: f64 = (0..n).map(|i| beta[i * m + j]).sum();
+        let arrive = (0..n)
+            .filter(|&i| beta[i * m + j] > 1e-12)
+            .map(|i| t_ij[i * m + j])
+            .fold(0.0f64, f64::max);
+        compute_start[j] = arrive;
+        compute_end[j] = arrive + total * a[j];
+    }
+
+    Ok(Schedule {
+        n,
+        m,
+        model: TimingModel::NoFrontEnd,
+        beta,
+        comm_start,
+        comm_end,
+        compute_start,
+        compute_end,
+        makespan,
+        lp_iterations: sol.iterations,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dlt::no_frontend;
+    use crate::experiments::params;
+
+    #[test]
+    fn staggered_dominates_sequential() {
+        // The §8 hypothesis, in the model that subsumes the sequential
+        // protocol: simultaneous communication can only help.
+        let spec = params::table3();
+        for mprocs in [2usize, 5, 10, 20] {
+            let sub = spec.with_m_processors(mprocs);
+            let seq = no_frontend::solve(&sub).unwrap();
+            let con = solve_mode(&sub, Mode::Staggered).unwrap();
+            assert!(
+                con.makespan <= seq.makespan + 1e-6,
+                "m={mprocs}: staggered {} > sequential {}",
+                con.makespan,
+                seq.makespan
+            );
+        }
+    }
+
+    #[test]
+    fn staggered_dominates_proportional() {
+        let spec = params::table3();
+        for mprocs in [2usize, 6, 12] {
+            let sub = spec.with_m_processors(mprocs);
+            let prop = solve_mode(&sub, Mode::Proportional).unwrap();
+            let stag = solve_mode(&sub, Mode::Staggered).unwrap();
+            assert!(
+                stag.makespan <= prop.makespan + 1e-6,
+                "m={mprocs}: staggered {} > proportional {}",
+                stag.makespan,
+                prop.makespan
+            );
+        }
+    }
+
+    #[test]
+    fn proportional_crossover_documented() {
+        // Proportional sharing helps at small m but *hurts* at large m
+        // (everyone waits for the common drain) — the finding recorded
+        // in EXPERIMENTS.md.
+        let spec = params::table3();
+        let seq_small = no_frontend::solve(&spec.with_m_processors(1)).unwrap().makespan;
+        let prop_small =
+            solve_mode(&spec.with_m_processors(1), Mode::Proportional).unwrap().makespan;
+        assert!(prop_small < seq_small, "{prop_small} !< {seq_small}");
+        let seq_large = no_frontend::solve(&spec.with_m_processors(20)).unwrap().makespan;
+        let prop_large =
+            solve_mode(&spec.with_m_processors(20), Mode::Proportional).unwrap().makespan;
+        assert!(prop_large > seq_large, "{prop_large} !> {seq_large}");
+    }
+
+    #[test]
+    fn realized_makespan_within_lp_bound() {
+        let spec = params::table3().with_m_processors(8);
+        for mode in [Mode::Proportional, Mode::Staggered] {
+            let s = solve_mode(&spec, mode).unwrap();
+            assert!(
+                s.realized_makespan() <= s.makespan + 1e-6,
+                "{mode:?}: realized {} > lp {}",
+                s.realized_makespan(),
+                s.makespan
+            );
+            assert!((s.total_load() - 100.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn staggered_capacity_respected() {
+        let spec = params::table3().with_m_processors(6);
+        let g = spec.g();
+        let r = spec.releases();
+        let s = solve_mode(&spec, Mode::Staggered).unwrap();
+        for i in 0..s.n {
+            let mut cum = 0.0;
+            for j in 0..s.m {
+                cum += s.beta(i, j) * g[i];
+                let t = s.comm_end[i * s.m + j];
+                assert!(
+                    cum <= t - r[i] + 1e-6,
+                    "source {i} overcommitted by stream {j}: {cum} > {}",
+                    t - r[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn single_source_single_processor_closed_form() {
+        // T_f = R + J G + J A (no concurrency to exploit).
+        let spec = crate::model::SystemSpec::builder()
+            .source(0.5, 2.0)
+            .processor(1.5)
+            .job(10.0)
+            .build()
+            .unwrap();
+        for mode in [Mode::Proportional, Mode::Staggered] {
+            let s = solve_mode(&spec, mode).unwrap();
+            assert!((s.makespan - (2.0 + 5.0 + 15.0)).abs() < 1e-6, "{mode:?}: {}", s.makespan);
+        }
+    }
+
+    #[test]
+    fn improvement_grows_with_sources() {
+        let spec = params::table3();
+        let ratio = |n: usize| {
+            let sub = spec.with_n_sources(n).with_m_processors(12);
+            let seq = no_frontend::solve(&sub).unwrap().makespan;
+            let con = solve_mode(&sub, Mode::Staggered).unwrap().makespan;
+            seq / con
+        };
+        assert!(ratio(3) >= ratio(1) - 1e-9);
+    }
+}

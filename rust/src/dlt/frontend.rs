@@ -1,0 +1,362 @@
+//! §3.1 — multi-source scheduling for processors **with** front-ends.
+//!
+//! LP variables: `β_{i,j} ≥ 0` (N·M of them) and the makespan `T_f`.
+//! Constraints (paper eqs. 3–6):
+//!
+//! 1. release:    `R_{i+1} − R_i ≤ β_{i,1} A_1`
+//! 2. continuity: `β_{i,j} A_j + β_{i+1,j} G_{i+1} ≤ β_{i,j} G_i + β_{i,j+1} A_{j+1}`
+//! 3. finish:     `T_f ≥ R_1 + Σ_{k≤j−1} β_{1,k} G_1 + Σ_i β_{i,j} A_j`
+//! 4. normalize:  `Σ_{i,j} β_{i,j} = J`
+//!
+//! The paper's eq. 5 sums `k = 1..j−1` in the text but `k = 1..j` in its
+//! summary block; [`FeOptions::finish_sum_includes_j`] selects the
+//! variant (default: `j−1`, which matches the timing diagram).
+//!
+//! After the LP solve, explicit communication windows are reconstructed
+//! with the sequential-distribution recurrence so the schedule can be
+//! validated, simulated and executed.
+
+use crate::dlt::schedule::{Schedule, TimingModel};
+use crate::error::Result;
+use crate::lp::{solve_with, Cmp, LpProblem, SimplexOptions};
+use crate::model::SystemSpec;
+
+/// Options for the §3.1 builder.
+#[derive(Debug, Clone)]
+pub struct FeOptions {
+    /// Use the paper's summary-block variant of eq. 5 (`k = 1..j`)
+    /// instead of the text variant (`k = 1..j−1`).
+    pub finish_sum_includes_j: bool,
+    /// Per-processor compute-ready times (extension for multi-job
+    /// pipelining, [`crate::dlt::multi_job`]): processor `j` cannot
+    /// start computing before `proc_ready[j]` (it is still finishing
+    /// the previous job), adding finish constraints
+    /// `T_f ≥ ready_j + Σ_i β_{i,j} A_j`. `None` means all zeros.
+    pub proc_ready: Option<Vec<f64>>,
+    /// Simplex options.
+    pub simplex: SimplexOptions,
+}
+
+impl Default for FeOptions {
+    fn default() -> Self {
+        FeOptions {
+            finish_sum_includes_j: false,
+            proc_ready: None,
+            simplex: SimplexOptions::default(),
+        }
+    }
+}
+
+/// Index of `β_{i,j}` in the LP variable vector.
+#[inline]
+fn bidx(i: usize, j: usize, m: usize) -> usize {
+    i * m + j
+}
+
+/// Build the §3.1 LP for a (validated, sorted) spec.
+pub fn build_lp(spec: &SystemSpec, opts: &FeOptions) -> LpProblem {
+    let n = spec.n();
+    let m = spec.m();
+    let g = spec.g();
+    let r = spec.releases();
+    let a = spec.a();
+    let tf = n * m; // T_f variable index
+    let mut p = LpProblem::new(n * m + 1);
+
+    for i in 0..n {
+        for j in 0..m {
+            p.name_var(bidx(i, j, m), format!("beta[{i}][{j}]"));
+        }
+    }
+    p.name_var(tf, "T_f");
+    p.set_objective_coeff(tf, 1.0);
+
+    // (3) release: beta[i][0] * A_1 >= R_{i+1} - R_i
+    for i in 0..n.saturating_sub(1) {
+        p.add_labeled(
+            &[(bidx(i, 0, m), a[0])],
+            Cmp::Ge,
+            r[i + 1] - r[i],
+            format!("release[{i}]"),
+        );
+    }
+
+    // (4) continuity:
+    // beta[i][j](A_j - G_i) + beta[i+1][j] G_{i+1} - beta[i][j+1] A_{j+1} <= 0
+    for i in 0..n.saturating_sub(1) {
+        for j in 0..m.saturating_sub(1) {
+            p.add_labeled(
+                &[
+                    (bidx(i, j, m), a[j] - g[i]),
+                    (bidx(i + 1, j, m), g[i + 1]),
+                    (bidx(i, j + 1, m), -a[j + 1]),
+                ],
+                Cmp::Le,
+                0.0,
+                format!("continuity[{i}][{j}]"),
+            );
+        }
+    }
+
+    // (5) finish: T_f - Σ_{k<=j-1} beta[0][k] G_1 - Σ_i beta[i][j] A_j >= R_1
+    for j in 0..m {
+        let mut coeffs: Vec<(usize, f64)> = vec![(tf, 1.0)];
+        let upper = if opts.finish_sum_includes_j { j + 1 } else { j };
+        for k in 0..upper.min(m) {
+            coeffs.push((bidx(0, k, m), -g[0]));
+        }
+        for i in 0..n {
+            coeffs.push((bidx(i, j, m), -a[j]));
+        }
+        p.add_labeled(&coeffs, Cmp::Ge, r[0], format!("finish[{j}]"));
+    }
+
+    // (6) normalization.
+    let all: Vec<(usize, f64)> =
+        (0..n).flat_map(|i| (0..m).map(move |j| (bidx(i, j, m), 1.0))).collect();
+    p.add_labeled(&all, Cmp::Eq, spec.job, "normalize");
+
+    // (ext) multi-job pipelining: the processor is still busy with the
+    // previous job until ready_j.
+    if let Some(ready) = &opts.proc_ready {
+        assert_eq!(ready.len(), m, "proc_ready length mismatch");
+        for j in 0..m {
+            if ready[j] > 0.0 {
+                let mut coeffs: Vec<(usize, f64)> = vec![(tf, 1.0)];
+                for i in 0..n {
+                    coeffs.push((bidx(i, j, m), -a[j]));
+                }
+                p.add_labeled(&coeffs, Cmp::Ge, ready[j], format!("proc_ready[{j}]"));
+            }
+        }
+    }
+
+    p
+}
+
+/// Solve §3.1 with default options.
+pub fn solve(spec: &SystemSpec) -> Result<Schedule> {
+    solve_opts(spec, &FeOptions::default())
+}
+
+/// Solve §3.1 with explicit options.
+pub fn solve_opts(spec: &SystemSpec, opts: &FeOptions) -> Result<Schedule> {
+    spec.validate()?;
+    let n = spec.n();
+    let m = spec.m();
+    let lp = build_lp(spec, opts);
+    let sol = solve_with(&lp, &opts.simplex)?;
+
+    let mut beta = vec![0.0; n * m];
+    beta.copy_from_slice(&sol.x[..n * m]);
+    for b in beta.iter_mut() {
+        *b = crate::util::float::snap_nonneg(*b, 1e-9);
+    }
+    let makespan = sol.x[n * m];
+
+    let (comm_start, comm_end) = reconstruct_comm_windows(spec, &beta);
+
+    // Front-end semantics: processor j computes continuously starting
+    // when its first (nonzero) fraction begins arriving.
+    let g = spec.g();
+    let a = spec.a();
+    let r = spec.releases();
+    let _ = (&g, &r);
+    let mut compute_start = vec![0.0; m];
+    let mut compute_end = vec![0.0; m];
+    for j in 0..m {
+        let first = (0..n).find(|&i| beta[bidx(i, j, m)] > 1e-12);
+        let start = match first {
+            Some(i) => comm_start[bidx(i, j, m)],
+            None => 0.0,
+        };
+        let total_compute: f64 = (0..n).map(|i| beta[bidx(i, j, m)]).sum::<f64>() * a[j];
+        compute_start[j] = start;
+        // Compute cannot outrun communication at fraction granularity:
+        // the end is at least each fraction's arrival plus the compute
+        // time of everything after it.
+        let mut end = start + total_compute;
+        for i in 0..n {
+            let arrived = comm_end[bidx(i, j, m)];
+            let remaining: f64 =
+                ((i + 1)..n).map(|k| beta[bidx(k, j, m)]).sum::<f64>() * a[j];
+            end = end.max(arrived + remaining);
+        }
+        compute_end[j] = if total_compute > 0.0 { end } else { start };
+    }
+
+    Ok(Schedule {
+        n,
+        m,
+        model: TimingModel::FrontEnd,
+        beta,
+        comm_start,
+        comm_end,
+        compute_start,
+        compute_end,
+        makespan,
+        lp_iterations: sol.iterations,
+    })
+}
+
+/// Sequential-distribution recurrence shared by the FE reconstruction:
+/// source `i` sends to `P_1..P_M` in order; it may start fraction
+/// `(i, j)` only after it finished `(i, j−1)`, after the previous
+/// source finished sending to `P_j` (one receive at a time), and — for
+/// `j = 1` — not before its release time.
+pub fn reconstruct_comm_windows(spec: &SystemSpec, beta: &[f64]) -> (Vec<f64>, Vec<f64>) {
+    let n = spec.n();
+    let m = spec.m();
+    let g = spec.g();
+    let r = spec.releases();
+    let mut ts = vec![0.0; n * m];
+    let mut tf = vec![0.0; n * m];
+    for i in 0..n {
+        for j in 0..m {
+            let mut start = if j == 0 { r[i] } else { tf[bidx(i, j - 1, m)] };
+            if i > 0 {
+                start = start.max(tf[bidx(i - 1, j, m)]);
+            }
+            if j == 0 {
+                start = start.max(r[i]);
+            }
+            ts[bidx(i, j, m)] = start;
+            tf[bidx(i, j, m)] = start + beta[bidx(i, j, m)] * g[i];
+        }
+    }
+    (ts, tf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::float::approx_eq_eps;
+
+    fn table1_spec() -> SystemSpec {
+        SystemSpec::builder()
+            .source(0.2, 10.0)
+            .source(0.4, 50.0)
+            .processors(&[2.0, 3.0, 4.0, 5.0, 6.0])
+            .job(100.0)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn table1_solves_and_normalizes() {
+        let s = solve(&table1_spec()).unwrap();
+        assert!(approx_eq_eps(s.total_load(), 100.0, 1e-7, 1e-7));
+        assert!(s.makespan > 0.0);
+        assert!(s.beta.iter().all(|&b| b >= 0.0));
+    }
+
+    #[test]
+    fn faster_processors_do_more_work() {
+        let s = solve(&table1_spec()).unwrap();
+        // Paper Fig. 10/11: processors with faster computing speeds do
+        // more processing work.
+        for j in 0..s.m - 1 {
+            assert!(
+                s.load_on_processor(j) >= s.load_on_processor(j + 1) - 1e-6,
+                "P{} load {} < P{} load {}",
+                j + 1,
+                s.load_on_processor(j),
+                j + 2,
+                s.load_on_processor(j + 1)
+            );
+        }
+    }
+
+    #[test]
+    fn release_constraint_respected() {
+        let spec = table1_spec();
+        let s = solve(&spec).unwrap();
+        // beta[0][0] * A_1 >= R_2 - R_1 = 40 -> beta[0][0] >= 20
+        assert!(s.beta(0, 0) * 2.0 >= 40.0 - 1e-6, "beta11={}", s.beta(0, 0));
+    }
+
+    #[test]
+    fn single_source_reduces_to_section2_when_r0() {
+        // With N=1, R=0 the FE LP's finish constraints are exactly
+        // T_f >= sum_{k<j} beta_k G + total compute on j; the optimum
+        // is bounded by the §2 closed form (FE can only be faster or
+        // equal because compute overlaps comm).
+        let spec = SystemSpec::builder()
+            .source(0.2, 0.0)
+            .processors(&[2.0, 3.0, 4.0])
+            .job(100.0)
+            .build()
+            .unwrap();
+        let fe = solve(&spec).unwrap();
+        let ss = crate::dlt::single_source::solve(0.2, &[2.0, 3.0, 4.0], 100.0, 0.0).unwrap();
+        assert!(fe.makespan <= ss.makespan + 1e-6, "fe {} > ss {}", fe.makespan, ss.makespan);
+    }
+
+    #[test]
+    fn makespan_decreases_with_more_processors() {
+        let spec = SystemSpec::builder()
+            .source(0.5, 2.0)
+            .source(0.6, 3.0)
+            .processors(&(0..10).map(|k| 1.1 + 0.1 * k as f64).collect::<Vec<_>>())
+            .job(100.0)
+            .build()
+            .unwrap();
+        let mut prev = f64::INFINITY;
+        for m in 1..=10 {
+            let s = solve(&spec.with_m_processors(m)).unwrap();
+            assert!(s.makespan <= prev + 1e-9, "m={m}");
+            prev = s.makespan;
+        }
+    }
+
+    #[test]
+    fn comm_windows_are_consistent() {
+        let s = solve(&table1_spec()).unwrap();
+        let spec = table1_spec();
+        let g = spec.g();
+        for i in 0..s.n {
+            for j in 0..s.m {
+                let k = i * s.m + j;
+                assert!(
+                    approx_eq_eps(s.comm_end[k] - s.comm_start[k], s.beta[k] * g[i], 1e-9, 1e-9)
+                );
+                if j > 0 {
+                    assert!(s.comm_start[k] >= s.comm_end[k - 1] - 1e-9, "source busy overlap");
+                }
+                if i > 0 {
+                    assert!(
+                        s.comm_start[k] >= s.comm_end[(i - 1) * s.m + j] - 1e-9,
+                        "processor receive overlap"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn finish_sum_variant_is_no_faster() {
+        // Including beta[0][j] G_1 in the waiting sum only tightens the
+        // constraint, so T_f can only grow.
+        let spec = table1_spec();
+        let default = solve_opts(&spec, &FeOptions::default()).unwrap();
+        let variant = solve_opts(
+            &spec,
+            &FeOptions { finish_sum_includes_j: true, ..FeOptions::default() },
+        )
+        .unwrap();
+        assert!(variant.makespan >= default.makespan - 1e-9);
+    }
+
+    #[test]
+    fn one_processor_edge_case() {
+        let spec = SystemSpec::builder()
+            .source(0.2, 0.0)
+            .source(0.4, 1.0)
+            .processors(&[2.0])
+            .job(10.0)
+            .build()
+            .unwrap();
+        let s = solve(&spec).unwrap();
+        assert!(approx_eq_eps(s.total_load(), 10.0, 1e-8, 1e-8));
+    }
+}

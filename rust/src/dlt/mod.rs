@@ -1,0 +1,26 @@
+//! The paper's scheduling formulations.
+//!
+//! - [`single_source`] — §2: classic one-source DLT with the recursive
+//!   closed-form solution (also solved via a dense linear system as a
+//!   cross-check oracle).
+//! - [`frontend`] — §3.1: multi-source LP for processors *with*
+//!   front-end co-processors (receive and compute simultaneously).
+//! - [`no_frontend`] — §3.2: multi-source LP for processors *without*
+//!   front-ends (compute only after all data arrived), with explicit
+//!   per-fraction transmission windows `TS_{i,j}` / `TF_{i,j}`.
+//! - [`schedule`] — the unified [`schedule::Schedule`] produced by all
+//!   solvers: load fractions, communication windows, compute windows,
+//!   makespan.
+//! - [`validate`] — post-hoc validation of a schedule against the
+//!   paper's timing semantics (independent of the LP).
+
+pub mod concurrent;
+pub mod frontend;
+pub mod multi_job;
+pub mod no_frontend;
+pub mod schedule;
+pub mod single_source;
+pub mod validate;
+
+pub use schedule::Schedule;
+pub use validate::{validate, ValidationReport};

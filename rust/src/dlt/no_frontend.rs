@@ -1,0 +1,364 @@
+//! §3.2 — multi-source scheduling for processors **without**
+//! front-ends.
+//!
+//! LP variables: `β_{i,j}`, `TS_{i,j}`, `TF_{i,j}` (3·N·M) and `T_f`.
+//! Constraints (paper eqs. 7–14):
+//!
+//! - length:   `TF_{i,j} − TS_{i,j} = β_{i,j} G_i`
+//! - proc seq: `TF_{i,j} ≤ TS_{i+1,j}` (one receive at a time)
+//! - src seq:  `TF_{i,j} ≤ TS_{i,j+1}` (one send at a time)
+//! - release:  `TS_{1,1} = R_1`, `TS_{i,1} ≥ R_i`, `TF_{i−1,1} ≥ R_i`
+//! - finish:   `T_f ≥ TF_{N,j} + Σ_i β_{i,j} A_j`
+//! - normalize: `ΣΣ β = J`
+//!
+//! The paper's eq. 12 text uses a strict `>`; LPs cannot express strict
+//! inequalities and the paper's own problem-summary uses `≥`, which is
+//! what we implement.
+
+use crate::dlt::schedule::{Schedule, TimingModel};
+use crate::error::Result;
+use crate::lp::{solve_with, Cmp, LpProblem, SimplexOptions};
+use crate::model::SystemSpec;
+
+/// Options for the §3.2 builder.
+#[derive(Debug, Clone, Default)]
+pub struct NfeOptions {
+    /// Enforce `TF_{i−1,1} ≥ R_i` ("keep every source busy before the
+    /// next one becomes available", eq. 12). On by default to match the
+    /// paper; can be disabled to study its effect (it can make
+    /// instances infeasible when a slow first source cannot stretch its
+    /// first transmission long enough).
+    pub drop_source_busy_constraint: bool,
+    /// Simplex options.
+    pub simplex: SimplexOptions,
+}
+
+/// Variable indexing for the §3.2 LP.
+#[derive(Debug, Clone, Copy)]
+pub struct NfeVars {
+    n: usize,
+    m: usize,
+}
+
+impl NfeVars {
+    /// Create an index helper.
+    pub fn new(n: usize, m: usize) -> NfeVars {
+        NfeVars { n, m }
+    }
+    /// `β_{i,j}`
+    pub fn beta(&self, i: usize, j: usize) -> usize {
+        i * self.m + j
+    }
+    /// `TS_{i,j}`
+    pub fn ts(&self, i: usize, j: usize) -> usize {
+        self.n * self.m + i * self.m + j
+    }
+    /// `TF_{i,j}`
+    pub fn tf(&self, i: usize, j: usize) -> usize {
+        2 * self.n * self.m + i * self.m + j
+    }
+    /// `T_f`
+    pub fn makespan(&self) -> usize {
+        3 * self.n * self.m
+    }
+    /// Total LP variable count.
+    pub fn count(&self) -> usize {
+        3 * self.n * self.m + 1
+    }
+}
+
+/// Build the §3.2 LP for a (validated, sorted) spec.
+pub fn build_lp(spec: &SystemSpec, opts: &NfeOptions) -> LpProblem {
+    let n = spec.n();
+    let m = spec.m();
+    let g = spec.g();
+    let r = spec.releases();
+    let a = spec.a();
+    let v = NfeVars::new(n, m);
+    let mut p = LpProblem::new(v.count());
+
+    for i in 0..n {
+        for j in 0..m {
+            p.name_var(v.beta(i, j), format!("beta[{i}][{j}]"));
+            p.name_var(v.ts(i, j), format!("TS[{i}][{j}]"));
+            p.name_var(v.tf(i, j), format!("TF[{i}][{j}]"));
+        }
+    }
+    p.name_var(v.makespan(), "T_f");
+    p.set_objective_coeff(v.makespan(), 1.0);
+
+    // (7) length: TF - TS - beta*G = 0
+    for i in 0..n {
+        for j in 0..m {
+            p.add_labeled(
+                &[(v.tf(i, j), 1.0), (v.ts(i, j), -1.0), (v.beta(i, j), -g[i])],
+                Cmp::Eq,
+                0.0,
+                format!("length[{i}][{j}]"),
+            );
+        }
+    }
+
+    // (8) processor sequence: TF[i][j] <= TS[i+1][j]
+    for i in 0..n.saturating_sub(1) {
+        for j in 0..m {
+            p.add_labeled(
+                &[(v.tf(i, j), 1.0), (v.ts(i + 1, j), -1.0)],
+                Cmp::Le,
+                0.0,
+                format!("proc_seq[{i}][{j}]"),
+            );
+        }
+    }
+
+    // (9) source sequence: TF[i][j] <= TS[i][j+1]
+    for i in 0..n {
+        for j in 0..m.saturating_sub(1) {
+            p.add_labeled(
+                &[(v.tf(i, j), 1.0), (v.ts(i, j + 1), -1.0)],
+                Cmp::Le,
+                0.0,
+                format!("src_seq[{i}][{j}]"),
+            );
+        }
+    }
+
+    // (10) TS[0][0] = R_1
+    p.add_labeled(&[(v.ts(0, 0), 1.0)], Cmp::Eq, r[0], "release_first");
+    // (11) TS[i][0] >= R_i
+    for i in 1..n {
+        p.add_labeled(&[(v.ts(i, 0), 1.0)], Cmp::Ge, r[i], format!("release[{i}]"));
+    }
+    // (12) TF[i-1][0] >= R_i
+    if !opts.drop_source_busy_constraint {
+        for i in 1..n {
+            p.add_labeled(&[(v.tf(i - 1, 0), 1.0)], Cmp::Ge, r[i], format!("src_busy[{i}]"));
+        }
+    }
+
+    // (13) finish: T_f - TF[N-1][j] - sum_i beta[i][j] A_j >= 0
+    for j in 0..m {
+        let mut coeffs: Vec<(usize, f64)> = vec![(v.makespan(), 1.0), (v.tf(n - 1, j), -1.0)];
+        for i in 0..n {
+            coeffs.push((v.beta(i, j), -a[j]));
+        }
+        p.add_labeled(&coeffs, Cmp::Ge, 0.0, format!("finish[{j}]"));
+    }
+
+    // (14) normalization
+    let all: Vec<(usize, f64)> =
+        (0..n).flat_map(|i| (0..m).map(move |j| (v.beta(i, j), 1.0))).collect();
+    p.add_labeled(&all, Cmp::Eq, spec.job, "normalize");
+
+    p
+}
+
+/// Solve §3.2 with default options.
+pub fn solve(spec: &SystemSpec) -> Result<Schedule> {
+    solve_opts(spec, &NfeOptions::default())
+}
+
+/// Solve §3.2 with explicit options.
+pub fn solve_opts(spec: &SystemSpec, opts: &NfeOptions) -> Result<Schedule> {
+    spec.validate()?;
+    let n = spec.n();
+    let m = spec.m();
+    let v = NfeVars::new(n, m);
+    let lp = build_lp(spec, opts);
+    let sol = solve_with(&lp, &opts.simplex)?;
+
+    let a = spec.a();
+    let mut beta = vec![0.0; n * m];
+    let mut comm_start = vec![0.0; n * m];
+    let mut comm_end = vec![0.0; n * m];
+    for i in 0..n {
+        for j in 0..m {
+            beta[i * m + j] = crate::util::float::snap_nonneg(sol.x[v.beta(i, j)], 1e-9);
+            comm_start[i * m + j] = sol.x[v.ts(i, j)];
+            comm_end[i * m + j] = sol.x[v.tf(i, j)];
+        }
+    }
+    // No front-end: compute starts after the LAST fraction arrives.
+    let mut compute_start = vec![0.0; m];
+    let mut compute_end = vec![0.0; m];
+    for j in 0..m {
+        let last_arrival = comm_end[(n - 1) * m + j];
+        let total: f64 = (0..n).map(|i| beta[i * m + j]).sum();
+        compute_start[j] = last_arrival;
+        compute_end[j] = last_arrival + total * a[j];
+    }
+
+    Ok(Schedule {
+        n,
+        m,
+        model: TimingModel::NoFrontEnd,
+        beta,
+        comm_start,
+        comm_end,
+        compute_start,
+        compute_end,
+        makespan: sol.x[v.makespan()],
+        lp_iterations: sol.iterations,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::float::approx_eq_eps;
+
+    fn table2_spec() -> SystemSpec {
+        SystemSpec::builder()
+            .source(0.2, 0.0)
+            .source(0.2, 5.0)
+            .processors(&[2.0, 3.0, 4.0])
+            .job(100.0)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn table2_solves() {
+        let s = solve(&table2_spec()).unwrap();
+        assert!(approx_eq_eps(s.total_load(), 100.0, 1e-7, 1e-7));
+        assert!(s.makespan > 0.0);
+        assert_eq!(s.model, TimingModel::NoFrontEnd);
+    }
+
+    #[test]
+    fn makespan_equals_max_compute_end() {
+        let s = solve(&table2_spec()).unwrap();
+        assert!(
+            approx_eq_eps(s.makespan, s.realized_makespan(), 1e-6, 1e-6),
+            "T_f={} realized={}",
+            s.makespan,
+            s.realized_makespan()
+        );
+    }
+
+    #[test]
+    fn single_source_matches_closed_form() {
+        // N=1, R=0: LP-NFE must reproduce the §2 closed form.
+        let spec = SystemSpec::builder()
+            .source(0.2, 0.0)
+            .processors(&[2.0, 3.0, 4.0, 5.0, 6.0])
+            .job(100.0)
+            .build()
+            .unwrap();
+        let nfe = solve(&spec).unwrap();
+        let cf = crate::dlt::single_source::solve(0.2, &spec.a(), 100.0, 0.0).unwrap();
+        assert!(
+            approx_eq_eps(nfe.makespan, cf.makespan, 1e-6, 1e-6),
+            "LP {} vs closed form {}",
+            nfe.makespan,
+            cf.makespan
+        );
+        for (b_lp, b_cf) in nfe.beta.iter().zip(cf.beta.iter()) {
+            assert!(approx_eq_eps(*b_lp, *b_cf, 1e-5, 1e-5), "{:?} vs {:?}", nfe.beta, cf.beta);
+        }
+    }
+
+    #[test]
+    fn window_lengths_match_beta() {
+        let spec = table2_spec();
+        let s = solve(&spec).unwrap();
+        let g = spec.g();
+        for i in 0..s.n {
+            for j in 0..s.m {
+                let k = i * s.m + j;
+                assert!(approx_eq_eps(
+                    s.comm_end[k] - s.comm_start[k],
+                    s.beta[k] * g[i],
+                    1e-6,
+                    1e-6
+                ));
+            }
+        }
+    }
+
+    #[test]
+    fn sequencing_respected() {
+        let s = solve(&table2_spec()).unwrap();
+        for i in 0..s.n {
+            for j in 0..s.m {
+                let k = i * s.m + j;
+                if j + 1 < s.m {
+                    assert!(s.comm_end[k] <= s.comm_start[k + 1] + 1e-7, "src seq");
+                }
+                if i + 1 < s.n {
+                    assert!(s.comm_end[k] <= s.comm_start[k + s.m] + 1e-7, "proc seq");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn release_times_respected() {
+        let spec = table2_spec();
+        let s = solve(&spec).unwrap();
+        let r = spec.releases();
+        for i in 0..s.n {
+            assert!(s.comm_start[i * s.m] >= r[i] - 1e-7);
+        }
+        // eq. 10: TS[0][0] == R_1 exactly.
+        assert!(approx_eq_eps(s.comm_start[0], r[0], 1e-7, 1e-7));
+    }
+
+    #[test]
+    fn two_sources_beat_one() {
+        // Same processors; adding a second source reduces T_f.
+        let one = SystemSpec::builder()
+            .source(0.5, 0.0)
+            .processors(&[1.0, 1.5, 2.0, 2.5])
+            .job(100.0)
+            .build()
+            .unwrap();
+        let two = SystemSpec::builder()
+            .source(0.5, 0.0)
+            .source(0.5, 0.0)
+            .processors(&[1.0, 1.5, 2.0, 2.5])
+            .job(100.0)
+            .build()
+            .unwrap();
+        let s1 = solve(&one).unwrap();
+        let s2 = solve(&two).unwrap();
+        assert!(s2.makespan < s1.makespan, "{} !< {}", s2.makespan, s1.makespan);
+    }
+
+    #[test]
+    fn fe_at_least_as_fast_as_nfe() {
+        // Front-ends overlap compute with comm, so the FE optimum can
+        // only be <= the NFE optimum on the same spec.
+        let spec = table2_spec();
+        let nfe = solve(&spec).unwrap();
+        let fe = crate::dlt::frontend::solve(&spec).unwrap();
+        assert!(fe.makespan <= nfe.makespan + 1e-6, "fe {} > nfe {}", fe.makespan, nfe.makespan);
+    }
+
+    #[test]
+    fn src_busy_constraint_can_bind() {
+        // Dropping eq. 12 can only help (or tie) the makespan.
+        let spec = table2_spec();
+        let with = solve_opts(&spec, &NfeOptions::default()).unwrap();
+        let without = solve_opts(
+            &spec,
+            &NfeOptions { drop_source_busy_constraint: true, ..NfeOptions::default() },
+        )
+        .unwrap();
+        assert!(without.makespan <= with.makespan + 1e-7);
+    }
+
+    #[test]
+    fn m1_n3_edge_case() {
+        let spec = SystemSpec::builder()
+            .source(0.1, 0.0)
+            .source(0.2, 0.1)
+            .source(0.3, 0.2)
+            .processors(&[1.0])
+            .job(12.0)
+            .build()
+            .unwrap();
+        let s = solve(&spec).unwrap();
+        assert!(approx_eq_eps(s.total_load(), 12.0, 1e-7, 1e-7));
+    }
+}

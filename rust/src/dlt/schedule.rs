@@ -1,0 +1,175 @@
+//! The unified schedule produced by every solver in [`crate::dlt`].
+
+/// Which timing model produced a schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TimingModel {
+    /// §3.1 — processors have front-ends (compute while receiving).
+    FrontEnd,
+    /// §3.2 / §2 — processors compute only after receiving everything.
+    NoFrontEnd,
+}
+
+/// A fully-timed load-distribution schedule for an `N × M` system.
+///
+/// All matrices are row-major `N × M` flattened: entry `(i, j)` is
+/// source `i` → processor `j`.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    /// Number of sources.
+    pub n: usize,
+    /// Number of processors.
+    pub m: usize,
+    /// Timing model that produced the schedule.
+    pub model: TimingModel,
+    /// Load fractions `β_{i,j}` (absolute load units; sums to `J`).
+    pub beta: Vec<f64>,
+    /// Communication window start `TS_{i,j}`.
+    pub comm_start: Vec<f64>,
+    /// Communication window end `TF_{i,j}`.
+    pub comm_end: Vec<f64>,
+    /// Per-processor compute start.
+    pub compute_start: Vec<f64>,
+    /// Per-processor compute end.
+    pub compute_end: Vec<f64>,
+    /// The LP's optimal finish time `T_f`.
+    pub makespan: f64,
+    /// Simplex iterations used to solve the LP (0 for closed form).
+    pub lp_iterations: usize,
+}
+
+impl Schedule {
+    /// `β_{i,j}`.
+    pub fn beta(&self, i: usize, j: usize) -> f64 {
+        self.beta[i * self.m + j]
+    }
+
+    /// Total load processed by processor `j`: `Σ_i β_{i,j}`.
+    pub fn load_on_processor(&self, j: usize) -> f64 {
+        (0..self.n).map(|i| self.beta(i, j)).sum()
+    }
+
+    /// Total load distributed by source `i`: `α_i = Σ_j β_{i,j}`.
+    pub fn load_from_source(&self, i: usize) -> f64 {
+        (0..self.m).map(|j| self.beta(i, j)).sum()
+    }
+
+    /// Sum of all fractions (should equal `J`).
+    pub fn total_load(&self) -> f64 {
+        self.beta.iter().sum()
+    }
+
+    /// Compute busy time of processor `j` given its `A_j`.
+    pub fn busy_time(&self, j: usize, a_j: f64) -> f64 {
+        self.load_on_processor(j) * a_j
+    }
+
+    /// Utilization of processor `j` relative to the makespan.
+    pub fn utilization(&self, j: usize, a_j: f64) -> f64 {
+        if self.makespan <= 0.0 {
+            0.0
+        } else {
+            self.busy_time(j, a_j) / self.makespan
+        }
+    }
+
+    /// Realized makespan from the timed windows (`max` compute end);
+    /// equal to [`Schedule::makespan`] for tight LP solutions.
+    pub fn realized_makespan(&self) -> f64 {
+        self.compute_end.iter().fold(0.0f64, |acc, &x| acc.max(x))
+    }
+
+    /// Communication gap on source `i` between consecutive fractions
+    /// `j` and `j+1` (time the link sits idle).
+    pub fn source_gap(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(j + 1 < self.m);
+        self.comm_start[i * self.m + j + 1] - self.comm_end[i * self.m + j]
+    }
+
+    /// Sum of idle-link time across all sources.
+    pub fn total_source_idle(&self) -> f64 {
+        let mut idle = 0.0;
+        for i in 0..self.n {
+            for j in 0..self.m.saturating_sub(1) {
+                idle += self.source_gap(i, j).max(0.0);
+            }
+        }
+        idle
+    }
+
+    /// Render a compact text table of the fractions (for CLI output).
+    pub fn render_beta_table(&self) -> String {
+        let mut out = String::new();
+        out.push_str("       ");
+        for j in 0..self.m {
+            out.push_str(&format!("{:>10}", format!("P{}", j + 1)));
+        }
+        out.push_str(&format!("{:>10}\n", "alpha_i"));
+        for i in 0..self.n {
+            out.push_str(&format!("S{:<6}", i + 1));
+            for j in 0..self.m {
+                out.push_str(&format!("{:>10.4}", self.beta(i, j)));
+            }
+            out.push_str(&format!("{:>10.4}\n", self.load_from_source(i)));
+        }
+        out.push_str("sum    ");
+        for j in 0..self.m {
+            out.push_str(&format!("{:>10.4}", self.load_on_processor(j)));
+        }
+        out.push_str(&format!("{:>10.4}\n", self.total_load()));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Schedule {
+        // 2x2, trivially timed.
+        Schedule {
+            n: 2,
+            m: 2,
+            model: TimingModel::NoFrontEnd,
+            beta: vec![1.0, 2.0, 3.0, 4.0],
+            comm_start: vec![0.0, 1.0, 1.0, 3.0],
+            comm_end: vec![1.0, 3.0, 3.0, 5.0],
+            compute_start: vec![3.0, 5.0],
+            compute_end: vec![7.0, 11.0],
+            makespan: 11.0,
+            lp_iterations: 0,
+        }
+    }
+
+    #[test]
+    fn accessors() {
+        let s = toy();
+        assert_eq!(s.beta(0, 1), 2.0);
+        assert_eq!(s.load_on_processor(0), 4.0);
+        assert_eq!(s.load_from_source(1), 7.0);
+        assert_eq!(s.total_load(), 10.0);
+        assert_eq!(s.realized_makespan(), 11.0);
+    }
+
+    #[test]
+    fn utilization_and_busy() {
+        let s = toy();
+        assert_eq!(s.busy_time(0, 2.0), 8.0);
+        assert!((s.utilization(0, 2.0) - 8.0 / 11.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gaps() {
+        let s = toy();
+        assert_eq!(s.source_gap(0, 0), 0.0);
+        assert_eq!(s.source_gap(1, 0), 0.0);
+        assert_eq!(s.total_source_idle(), 0.0);
+    }
+
+    #[test]
+    fn table_renders() {
+        let s = toy();
+        let t = s.render_beta_table();
+        assert!(t.contains("P1"));
+        assert!(t.contains("alpha_i"));
+    }
+}

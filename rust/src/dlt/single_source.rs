@@ -1,0 +1,174 @@
+//! §2 — classic single-source DLT with the recursive closed form.
+//!
+//! Timing model of Fig. 2: the source sends `β_1..β_M` back-to-back;
+//! processor `P_i` computes only after fully receiving its fraction
+//! (no front-end), and all processors finish simultaneously:
+//!
+//! `T_f = Σ_{k≤i} β_k G + β_i A_i` for every `i`, `Σ β_i = J`.
+//!
+//! Subtracting consecutive equations gives the recursion
+//! `β_{i+1} = β_i · A_i / (G + A_{i+1})`.
+
+use crate::dlt::schedule::{Schedule, TimingModel};
+use crate::error::{Error, Result};
+use crate::linalg::{lu_solve, Matrix};
+
+/// Closed-form solution. Returns the fully-timed [`Schedule`]
+/// (communication windows are back-to-back starting at `release`).
+pub fn solve(g: f64, a: &[f64], job: f64, release: f64) -> Result<Schedule> {
+    if !(g > 0.0) {
+        return Err(Error::InvalidSpec(format!("G must be > 0, got {g}")));
+    }
+    if a.is_empty() {
+        return Err(Error::InvalidSpec("need at least one processor".into()));
+    }
+    if a.iter().any(|&x| !(x > 0.0)) {
+        return Err(Error::InvalidSpec("all A_j must be > 0".into()));
+    }
+    if !(job > 0.0) {
+        return Err(Error::InvalidSpec("job must be > 0".into()));
+    }
+    let m = a.len();
+    // Unnormalized fractions via the recursion.
+    let mut beta = vec![0.0; m];
+    beta[0] = 1.0;
+    for i in 1..m {
+        beta[i] = beta[i - 1] * a[i - 1] / (g + a[i]);
+    }
+    let total: f64 = beta.iter().sum();
+    for b in beta.iter_mut() {
+        *b *= job / total;
+    }
+    let tf = release + beta[0] * (g + a[0]);
+
+    // Timed windows.
+    let mut comm_start = vec![0.0; m];
+    let mut comm_end = vec![0.0; m];
+    let mut t = release;
+    for j in 0..m {
+        comm_start[j] = t;
+        t += beta[j] * g;
+        comm_end[j] = t;
+    }
+    let compute_start = comm_end.clone();
+    let compute_end: Vec<f64> = (0..m).map(|j| comm_end[j] + beta[j] * a[j]).collect();
+
+    Ok(Schedule {
+        n: 1,
+        m,
+        model: TimingModel::NoFrontEnd,
+        beta,
+        comm_start,
+        comm_end,
+        compute_start,
+        compute_end,
+        makespan: tf,
+        lp_iterations: 0,
+    })
+}
+
+/// Oracle variant: solve the `(M+1) × (M+1)` linear system of §2
+/// directly with LU. Exists purely to cross-check the recursion.
+pub fn solve_linear_system(g: f64, a: &[f64], job: f64) -> Result<(Vec<f64>, f64)> {
+    let m = a.len();
+    // Unknowns: beta_0..beta_{m-1}, T_f.
+    let n = m + 1;
+    let mut mat = Matrix::zeros(n, n);
+    let mut rhs = vec![0.0; n];
+    for i in 0..m {
+        // sum_{k<=i} beta_k * G + beta_i * A_i - T_f = 0
+        for k in 0..=i {
+            mat[(i, k)] += g;
+        }
+        mat[(i, i)] += a[i];
+        mat[(i, m)] = -1.0;
+    }
+    // normalization
+    for k in 0..m {
+        mat[(m, k)] = 1.0;
+    }
+    rhs[m] = job;
+    let x = lu_solve(&mat, &rhs)?;
+    Ok((x[..m].to_vec(), x[m]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::float::approx_eq_eps;
+
+    #[test]
+    fn homogeneous_two_processors() {
+        // G=1, A=[1,1], J=1: beta2 = beta1 * 1/(1+1) = beta1/2
+        // => beta = [2/3, 1/3], T_f = (2/3)(1+1) = 4/3.
+        let s = solve(1.0, &[1.0, 1.0], 1.0, 0.0).unwrap();
+        assert!(approx_eq_eps(s.beta[0], 2.0 / 3.0, 1e-12, 1e-12));
+        assert!(approx_eq_eps(s.beta[1], 1.0 / 3.0, 1e-12, 1e-12));
+        assert!(approx_eq_eps(s.makespan, 4.0 / 3.0, 1e-12, 1e-12));
+    }
+
+    #[test]
+    fn all_processors_finish_simultaneously() {
+        let s = solve(0.3, &[1.0, 1.5, 2.0, 4.0], 50.0, 0.0).unwrap();
+        for j in 0..s.m {
+            assert!(
+                approx_eq_eps(s.compute_end[j], s.makespan, 1e-9, 1e-9),
+                "P{j} ends at {} != {}",
+                s.compute_end[j],
+                s.makespan
+            );
+        }
+    }
+
+    #[test]
+    fn matches_linear_system_oracle() {
+        let g = 0.2;
+        let a = [2.0, 3.0, 4.0, 5.0, 6.0];
+        let s = solve(g, &a, 100.0, 0.0).unwrap();
+        let (beta, tf) = solve_linear_system(g, &a, 100.0).unwrap();
+        assert!(approx_eq_eps(s.makespan, tf, 1e-9, 1e-9), "{} vs {tf}", s.makespan);
+        for (b1, b2) in s.beta.iter().zip(beta.iter()) {
+            assert!(approx_eq_eps(*b1, *b2, 1e-9, 1e-9));
+        }
+    }
+
+    #[test]
+    fn release_time_shifts_everything() {
+        let s0 = solve(0.5, &[1.0, 2.0], 10.0, 0.0).unwrap();
+        let s5 = solve(0.5, &[1.0, 2.0], 10.0, 5.0).unwrap();
+        assert!(approx_eq_eps(s5.makespan, s0.makespan + 5.0, 1e-12, 1e-12));
+        assert_eq!(s5.beta, s0.beta);
+    }
+
+    #[test]
+    fn faster_processors_get_more_load() {
+        let s = solve(0.2, &[1.0, 2.0, 4.0], 30.0, 0.0).unwrap();
+        assert!(s.beta[0] > s.beta[1]);
+        assert!(s.beta[1] > s.beta[2]);
+    }
+
+    #[test]
+    fn adding_processors_reduces_makespan() {
+        let mut prev = f64::INFINITY;
+        let a: Vec<f64> = (0..8).map(|k| 1.0 + 0.2 * k as f64).collect();
+        for m in 1..=8 {
+            let s = solve(0.4, &a[..m], 100.0, 0.0).unwrap();
+            assert!(s.makespan < prev, "m={m}: {} !< {prev}", s.makespan);
+            prev = s.makespan;
+        }
+    }
+
+    #[test]
+    fn normalization_holds() {
+        let s = solve(0.7, &[1.1, 1.2, 1.3], 42.0, 0.0).unwrap();
+        assert!(approx_eq_eps(s.total_load(), 42.0, 1e-9, 1e-9));
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        assert!(solve(0.0, &[1.0], 1.0, 0.0).is_err());
+        assert!(solve(1.0, &[], 1.0, 0.0).is_err());
+        assert!(solve(1.0, &[0.0], 1.0, 0.0).is_err());
+        assert!(solve(1.0, &[1.0], 0.0, 0.0).is_err());
+    }
+}

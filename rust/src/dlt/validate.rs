@@ -1,0 +1,272 @@
+//! Post-hoc schedule validation, independent of the LP.
+//!
+//! Checks the paper's operational semantics directly on the timed
+//! windows: window lengths, sequential-communication exclusivity,
+//! release times, normalization, and the compute-timing rules for the
+//! front-end / no-front-end models. This is the referee between the LP
+//! solutions and the discrete-event simulator.
+
+use crate::dlt::schedule::{Schedule, TimingModel};
+use crate::model::SystemSpec;
+
+/// Outcome of validating one schedule.
+#[derive(Debug, Clone)]
+pub struct ValidationReport {
+    /// Hard violations (schedule is not executable as timed).
+    pub violations: Vec<String>,
+    /// Soft findings (executable but noteworthy: gaps, slack, ...).
+    pub warnings: Vec<String>,
+    /// Max absolute normalization error.
+    pub normalization_error: f64,
+    /// `realized_makespan − makespan` (positive means the LP value is
+    /// optimistic relative to the reconstructed timing).
+    pub makespan_slack: f64,
+}
+
+impl ValidationReport {
+    /// True when no hard violations were found.
+    pub fn is_valid(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+const EPS: f64 = 1e-6;
+
+/// Validate `sched` against `spec`.
+pub fn validate(spec: &SystemSpec, sched: &Schedule) -> ValidationReport {
+    let mut v = Vec::new();
+    let mut w = Vec::new();
+    let n = sched.n;
+    let m = sched.m;
+    let g = spec.g();
+    let a = spec.a();
+    let r = spec.releases();
+
+    if spec.n() != n || spec.m() != m {
+        v.push(format!("shape mismatch: spec {}x{}, schedule {n}x{m}", spec.n(), spec.m()));
+    }
+
+    // Non-negative fractions, normalization.
+    for (k, &b) in sched.beta.iter().enumerate() {
+        if b < -EPS {
+            v.push(format!("beta[{}][{}] = {b} < 0", k / m, k % m));
+        }
+    }
+    let norm_err = (sched.total_load() - spec.job).abs();
+    if norm_err > EPS * spec.job.max(1.0) {
+        v.push(format!("normalization error {norm_err}: total {} != J {}", sched.total_load(), spec.job));
+    }
+
+    // Window lengths.
+    for i in 0..n {
+        for j in 0..m {
+            let k = i * m + j;
+            let len = sched.comm_end[k] - sched.comm_start[k];
+            let want = sched.beta[k] * g[i];
+            if (len - want).abs() > EPS * want.max(1.0) {
+                v.push(format!("window[{i}][{j}] length {len} != beta*G {want}"));
+            }
+        }
+    }
+
+    // Source sequential exclusivity (one send at a time, in P order).
+    for i in 0..n {
+        for j in 0..m.saturating_sub(1) {
+            let k = i * m + j;
+            if sched.comm_end[k] > sched.comm_start[k + 1] + EPS {
+                v.push(format!(
+                    "source {i} overlaps sends to P{} and P{}",
+                    j + 1,
+                    j + 2
+                ));
+            }
+        }
+    }
+
+    // Processor receive exclusivity (receives in S order).
+    for j in 0..m {
+        for i in 0..n.saturating_sub(1) {
+            let k = i * m + j;
+            if sched.comm_end[k] > sched.comm_start[k + m] + EPS {
+                v.push(format!(
+                    "processor {j} receives from S{} and S{} concurrently",
+                    i + 1,
+                    i + 2
+                ));
+            }
+        }
+    }
+
+    // Release times.
+    for i in 0..n {
+        if sched.comm_start[i * m] < r[i] - EPS {
+            v.push(format!(
+                "source {i} starts at {} before release {}",
+                sched.comm_start[i * m],
+                r[i]
+            ));
+        }
+    }
+
+    // Compute-timing rules.
+    match sched.model {
+        TimingModel::NoFrontEnd => {
+            for j in 0..m {
+                let total: f64 = (0..n).map(|i| sched.beta[i * m + j]).sum();
+                if total <= EPS {
+                    continue;
+                }
+                let last_arrival =
+                    (0..n).fold(0.0f64, |acc, i| acc.max(sched.comm_end[i * m + j]));
+                if sched.compute_start[j] < last_arrival - EPS {
+                    v.push(format!(
+                        "P{j} starts computing at {} before last arrival {last_arrival}",
+                        sched.compute_start[j]
+                    ));
+                }
+                let want_end = sched.compute_start[j] + total * a[j];
+                if (sched.compute_end[j] - want_end).abs() > EPS * want_end.max(1.0) {
+                    v.push(format!(
+                        "P{j} compute window {} != start + busy {want_end}",
+                        sched.compute_end[j]
+                    ));
+                }
+            }
+        }
+        TimingModel::FrontEnd => {
+            for j in 0..m {
+                let total: f64 = (0..n).map(|i| sched.beta[i * m + j]).sum();
+                if total <= EPS {
+                    continue;
+                }
+                // Compute cannot start before the first byte arrives.
+                let first = (0..n).find(|&i| sched.beta[i * m + j] > EPS).unwrap();
+                if sched.compute_start[j] < sched.comm_start[first * m + j] - EPS {
+                    v.push(format!("P{j} computes before any data arrives"));
+                }
+                // Compute cannot end before the last byte arrives.
+                let last_arrival =
+                    (0..n).fold(0.0f64, |acc, i| acc.max(sched.comm_end[i * m + j]));
+                if sched.compute_end[j] < last_arrival - EPS {
+                    v.push(format!(
+                        "P{j} finishes computing at {} before last arrival {last_arrival}",
+                        sched.compute_end[j]
+                    ));
+                }
+                // Busy time fits inside the window.
+                let window = sched.compute_end[j] - sched.compute_start[j];
+                let busy = total * a[j];
+                if window < busy - EPS * busy.max(1.0) {
+                    v.push(format!("P{j} window {window} shorter than busy time {busy}"));
+                }
+                if window > busy + EPS * busy.max(1.0) {
+                    w.push(format!(
+                        "P{j} idles {:.6} inside its compute window (starvation gap)",
+                        window - busy
+                    ));
+                }
+            }
+        }
+    }
+
+    // Makespan consistency.
+    let realized = sched.realized_makespan();
+    let slack = realized - sched.makespan;
+    if slack > EPS * sched.makespan.max(1.0) {
+        w.push(format!(
+            "realized makespan {realized} exceeds LP T_f {} by {slack}",
+            sched.makespan
+        ));
+    }
+
+    // Idle-link diagnostics.
+    let idle = sched.total_source_idle();
+    if idle > EPS {
+        w.push(format!("total source idle time {idle:.6}"));
+    }
+
+    ValidationReport {
+        violations: v,
+        warnings: w,
+        normalization_error: norm_err,
+        makespan_slack: slack,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dlt::{frontend, no_frontend, single_source};
+    use crate::model::SystemSpec;
+
+    fn table1() -> SystemSpec {
+        SystemSpec::builder()
+            .source(0.2, 10.0)
+            .source(0.4, 50.0)
+            .processors(&[2.0, 3.0, 4.0, 5.0, 6.0])
+            .job(100.0)
+            .build()
+            .unwrap()
+    }
+
+    fn table2() -> SystemSpec {
+        SystemSpec::builder()
+            .source(0.2, 0.0)
+            .source(0.2, 5.0)
+            .processors(&[2.0, 3.0, 4.0])
+            .job(100.0)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn frontend_schedule_validates() {
+        let spec = table1();
+        let s = frontend::solve(&spec).unwrap();
+        let rep = validate(&spec, &s);
+        assert!(rep.is_valid(), "violations: {:?}", rep.violations);
+    }
+
+    #[test]
+    fn no_frontend_schedule_validates() {
+        let spec = table2();
+        let s = no_frontend::solve(&spec).unwrap();
+        let rep = validate(&spec, &s);
+        assert!(rep.is_valid(), "violations: {:?}", rep.violations);
+        assert!(rep.makespan_slack.abs() < 1e-5, "slack {}", rep.makespan_slack);
+    }
+
+    #[test]
+    fn closed_form_schedule_validates() {
+        let s = single_source::solve(0.2, &[2.0, 3.0, 4.0], 100.0, 0.0).unwrap();
+        let spec = SystemSpec::builder()
+            .source(0.2, 0.0)
+            .processors(&[2.0, 3.0, 4.0])
+            .job(100.0)
+            .build()
+            .unwrap();
+        let rep = validate(&spec, &s);
+        assert!(rep.is_valid(), "{:?}", rep.violations);
+    }
+
+    #[test]
+    fn corrupted_schedule_is_caught() {
+        let spec = table2();
+        let mut s = no_frontend::solve(&spec).unwrap();
+        s.beta[0] += 5.0; // break normalization & window length
+        let rep = validate(&spec, &s);
+        assert!(!rep.is_valid());
+        assert!(rep.violations.iter().any(|v| v.contains("normalization")));
+    }
+
+    #[test]
+    fn overlapping_windows_are_caught() {
+        let spec = table2();
+        let mut s = no_frontend::solve(&spec).unwrap();
+        // Force source 0's second window to start before the first ends.
+        s.comm_start[1] = s.comm_start[0];
+        s.comm_end[1] = s.comm_start[1] + s.beta[1] * 0.2;
+        let rep = validate(&spec, &s);
+        assert!(!rep.is_valid());
+    }
+}

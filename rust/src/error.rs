@@ -1,0 +1,69 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Unified error type for the `dlt` crate.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// A system specification failed validation.
+    #[error("invalid system spec: {0}")]
+    InvalidSpec(String),
+
+    /// The LP was infeasible (e.g. release times violate eq. 3).
+    #[error("linear program infeasible: {0}")]
+    Infeasible(String),
+
+    /// The LP was unbounded — indicates a malformed formulation.
+    #[error("linear program unbounded: {0}")]
+    Unbounded(String),
+
+    /// The solver hit its iteration limit before converging.
+    #[error("solver iteration limit reached after {iterations} iterations")]
+    IterationLimit { iterations: usize },
+
+    /// Numerical trouble (singular matrix, NaN in the tableau, ...).
+    #[error("numerical error: {0}")]
+    Numerical(String),
+
+    /// A schedule failed post-hoc validation against the timing model.
+    #[error("schedule validation failed: {0}")]
+    InvalidSchedule(String),
+
+    /// Configuration / JSON parse problems.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// CLI usage problems.
+    #[error("usage error: {0}")]
+    Usage(String),
+
+    /// Artifact missing / malformed / shape mismatch.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// Errors bubbling up from the XLA/PJRT runtime.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Cluster runtime failure (actor panicked, channel closed, ...).
+    #[error("cluster error: {0}")]
+    Cluster(String),
+
+    /// I/O errors with path context.
+    #[error("io error on {path}: {source}")]
+    Io {
+        path: String,
+        #[source]
+        source: std::io::Error,
+    },
+}
+
+impl Error {
+    /// Helper to wrap an I/O error with its path.
+    pub fn io(path: impl Into<String>, source: std::io::Error) -> Self {
+        Error::Io { path: path.into(), source }
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

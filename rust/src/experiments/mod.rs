@@ -1,0 +1,80 @@
+//! The paper's experiment registry: every table and figure in the
+//! evaluation, as code.
+//!
+//! [`params`] holds the parameter tables (Tables 1–5) exactly as
+//! printed in the paper; [`series`] regenerates each figure's data
+//! series; [`table::ExpTable`] is the common row/column container the
+//! CLI, benches and examples all render from.
+//!
+//! | Paper artifact | Generator |
+//! |---|---|
+//! | Table 1 + Fig 10 | [`series::fig10`] |
+//! | Table 2 + Fig 11 | [`series::fig11`] |
+//! | Table 3 + Fig 12 | [`series::fig12`] |
+//! | Fig 13           | [`series::fig13`] |
+//! | Table 4 + Fig 14 | [`series::fig14`] |
+//! | Fig 15           | [`series::fig15`] |
+//! | Table 5 + Fig 16–18 | [`series::fig16_17_18`] |
+//! | Fig 19           | [`series::fig19`] |
+//! | Fig 20           | [`series::fig20`] |
+
+pub mod params;
+pub mod series;
+pub mod table;
+
+pub use table::ExpTable;
+
+use crate::error::{Error, Result};
+
+/// All experiment names, in paper order.
+pub const ALL: &[&str] =
+    &["fig10", "fig11", "fig12", "fig13", "fig14", "fig15", "fig16", "fig17", "fig18", "fig19", "fig20"];
+
+/// Run one experiment by name.
+pub fn run(name: &str) -> Result<ExpTable> {
+    match name {
+        "fig10" => series::fig10(),
+        "fig11" => series::fig11(),
+        "fig12" => series::fig12(),
+        "fig13" => series::fig13(),
+        "fig14" => series::fig14(),
+        "fig15" => series::fig15(),
+        "fig16" | "fig17" | "fig18" => {
+            let (f16, f17, f18) = series::fig16_17_18()?;
+            Ok(match name {
+                "fig16" => f16,
+                "fig17" => f17,
+                _ => f18,
+            })
+        }
+        "fig19" => series::fig19(),
+        "fig20" => series::fig20(),
+        _ => Err(Error::Usage(format!(
+            "unknown experiment `{name}` (expected one of {})",
+            ALL.join(", ")
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_all_figures() {
+        for name in ALL {
+            let t = run(name).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(!t.rows.is_empty(), "{name} produced no rows");
+            assert_eq!(
+                t.rows[0].len(),
+                t.columns.len(),
+                "{name}: row width != column count"
+            );
+        }
+    }
+
+    #[test]
+    fn unknown_name_errors() {
+        assert!(run("fig99").is_err());
+    }
+}

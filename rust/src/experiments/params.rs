@@ -1,0 +1,114 @@
+//! The paper's parameter tables, verbatim.
+
+use crate::model::SystemSpec;
+
+/// Table 1 — numerical test, **with** front-ends:
+/// `G = (0.2, 0.4)`, `R = (10, 50)`, `A = (2..6)`, `J = 100`.
+pub fn table1() -> SystemSpec {
+    SystemSpec::builder()
+        .source(0.2, 10.0)
+        .source(0.4, 50.0)
+        .processors(&[2.0, 3.0, 4.0, 5.0, 6.0])
+        .job(100.0)
+        .build()
+        .expect("table 1 params are valid")
+}
+
+/// Table 2 — numerical test, **without** front-ends:
+/// `G = (0.2, 0.2)`, `R = (0, 5)`, `A = (2, 3, 4)`, `J = 100`.
+pub fn table2() -> SystemSpec {
+    SystemSpec::builder()
+        .source(0.2, 0.0)
+        .source(0.2, 5.0)
+        .processors(&[2.0, 3.0, 4.0])
+        .job(100.0)
+        .build()
+        .expect("table 2 params are valid")
+}
+
+/// Table 3 — finish-time sweeps (Figs. 12, 13):
+/// `G = (0.5, 0.6, 0.7)`, `R = (2, 3, 4)`, `A = 1.1, 1.2, …, 3.0`
+/// (20 processors), `J = 100`.
+pub fn table3() -> SystemSpec {
+    let a: Vec<f64> = (0..20).map(|k| 1.1 + 0.1 * k as f64).collect();
+    SystemSpec::builder()
+        .source(0.5, 2.0)
+        .source(0.6, 3.0)
+        .source(0.7, 4.0)
+        .processors(&a)
+        .job(100.0)
+        .build()
+        .expect("table 3 params are valid")
+}
+
+/// Table 4 — speedup analysis (Figs. 14, 15), homogeneous nodes:
+/// `G = 0.5 ×10`, `R = 0 ×10`, `A = 2 ×18`, `J = 100`.
+pub fn table4() -> SystemSpec {
+    let mut b = SystemSpec::builder();
+    for _ in 0..10 {
+        b = b.source(0.5, 0.0);
+    }
+    b.processors(&[2.0; 18]).job(100.0).build().expect("table 4 params are valid")
+}
+
+/// Table 5 — trade-off analysis (Figs. 16–20):
+/// `G = (0.5, 0.6)`, `R = (2, 3)`, `A = 1.1…3.0`, `C = 29, 28, …, 10`,
+/// `J = 100`.
+pub fn table5() -> SystemSpec {
+    let ac: Vec<(f64, f64)> = (0..20).map(|k| (1.1 + 0.1 * k as f64, 29.0 - k as f64)).collect();
+    SystemSpec::builder()
+        .source(0.5, 2.0)
+        .source(0.6, 3.0)
+        .priced_processors(&ac)
+        .job(100.0)
+        .build()
+        .expect("table 5 params are valid")
+}
+
+/// Source counts plotted in Figs. 14/15.
+pub const FIG14_SOURCE_COUNTS: &[usize] = &[1, 2, 3, 5, 10];
+
+/// Job sizes plotted in Fig. 13.
+pub const FIG13_JOB_SIZES: &[f64] = &[100.0, 300.0, 500.0];
+
+/// Fig. 19 budgets (chosen to reproduce the paper's overlapping
+/// solution areas m ∈ [6, 12]; the paper plots budgets without printing
+/// their values, so ours are pinned to the sweep's own m=12 cost and
+/// m=6 finish time).
+pub const FIG19_GRADIENT_THRESHOLD: f64 = 0.06;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_tables_valid() {
+        for (name, spec) in [
+            ("t1", table1()),
+            ("t2", table2()),
+            ("t3", table3()),
+            ("t4", table4()),
+            ("t5", table5()),
+        ] {
+            spec.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+    }
+
+    #[test]
+    fn table3_matches_paper_text() {
+        let s = table3();
+        assert_eq!(s.n(), 3);
+        assert_eq!(s.m(), 20);
+        assert!((s.a()[0] - 1.1).abs() < 1e-12);
+        assert!((s.a()[19] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table5_costs_descend() {
+        let s = table5();
+        let c = s.cost_rates();
+        assert_eq!(c[0], 29.0);
+        assert_eq!(c[19], 10.0);
+        assert!(c.windows(2).all(|w| w[0] > w[1]), "paper: C_1 > C_2 > ...");
+    }
+}

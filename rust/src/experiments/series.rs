@@ -1,0 +1,325 @@
+//! Generators for every figure in the paper's evaluation.
+
+use crate::cost::{advise, Advice, Budgets, TradeoffTable};
+use crate::dlt::{frontend, no_frontend};
+use crate::error::Result;
+use crate::experiments::params;
+use crate::experiments::table::ExpTable;
+use crate::speedup;
+
+/// Fig. 10 — per-processor load split by source (Table 1, front-ends).
+pub fn fig10() -> Result<ExpTable> {
+    let spec = params::table1();
+    let s = frontend::solve(&spec)?;
+    let mut t = ExpTable::new(
+        "fig10",
+        "load per processor from each source (Table 1, with front-ends)",
+        &["processor", "from_S1", "from_S2", "total"],
+    );
+    for j in 0..s.m {
+        t.push_row(vec![(j + 1) as f64, s.beta(0, j), s.beta(1, j), s.load_on_processor(j)]);
+    }
+    t.note(format!("T_f = {:.4}", s.makespan));
+    t.note("paper: faster processors do more processing work");
+    Ok(t)
+}
+
+/// Fig. 11 — per-processor load split by source (Table 2, no front-ends).
+pub fn fig11() -> Result<ExpTable> {
+    let spec = params::table2();
+    let s = no_frontend::solve(&spec)?;
+    let mut t = ExpTable::new(
+        "fig11",
+        "load per processor from each source (Table 2, without front-ends)",
+        &["processor", "from_S1", "from_S2", "total"],
+    );
+    for j in 0..s.m {
+        t.push_row(vec![(j + 1) as f64, s.beta(0, j), s.beta(1, j), s.load_on_processor(j)]);
+    }
+    t.note(format!("T_f = {:.4}", s.makespan));
+    Ok(t)
+}
+
+/// Fig. 12 — minimal finish time vs processors for 1/2/3 sources
+/// (Table 3, no front-ends).
+pub fn fig12() -> Result<ExpTable> {
+    let spec = params::table3();
+    let mut t = ExpTable::new(
+        "fig12",
+        "T_f vs processors for 1/2/3 sources (Table 3, without front-ends)",
+        &["m", "tf_1src", "tf_2src", "tf_3src"],
+    );
+    for m in 1..=spec.m() {
+        let mut row = vec![m as f64];
+        for n in 1..=3usize {
+            let sub = spec.with_n_sources(n).with_m_processors(m);
+            row.push(no_frontend::solve(&sub)?.makespan);
+        }
+        t.push_row(row);
+    }
+    t.note("paper: more sources and more processors both reduce T_f, with diminishing returns");
+    Ok(t)
+}
+
+/// Fig. 13 — finish time vs processors for different job sizes
+/// (Table 3, 3 sources, front-ends).
+pub fn fig13() -> Result<ExpTable> {
+    let spec = params::table3();
+    let mut t = ExpTable::new(
+        "fig13",
+        "T_f vs processors for J = 100/300/500 (Table 3, with front-ends)",
+        &["m", "tf_J100", "tf_J300", "tf_J500"],
+    );
+    for m in 1..=spec.m() {
+        let mut row = vec![m as f64];
+        for &job in params::FIG13_JOB_SIZES {
+            let sub = spec.with_job(job).with_m_processors(m);
+            row.push(frontend::solve(&sub)?.makespan);
+        }
+        t.push_row(row);
+    }
+    // Paper's headline: for J=500 going from 3 to 7 processors saves
+    // about 50% of the finish time.
+    let tf3 = t.at(2, "tf_J500");
+    let tf7 = t.at(6, "tf_J500");
+    t.note(format!(
+        "J=500: T_f(3 procs) = {tf3:.2}, T_f(7 procs) = {tf7:.2} -> saves {:.0}% (paper: ~50%)",
+        (1.0 - tf7 / tf3) * 100.0
+    ));
+    Ok(t)
+}
+
+/// Fig. 14 — finish time, homogeneous nodes, 1/2/3/5/10 sources
+/// (Table 4, no front-ends).
+pub fn fig14() -> Result<ExpTable> {
+    let spec = params::table4();
+    let cols: Vec<String> = std::iter::once("m".to_string())
+        .chain(params::FIG14_SOURCE_COUNTS.iter().map(|p| format!("tf_{p}src")))
+        .collect();
+    let col_refs: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+    let mut t = ExpTable::new(
+        "fig14",
+        "T_f, homogeneous nodes (Table 4, without front-ends)",
+        &col_refs,
+    );
+    let pts = speedup::sweep(&spec, params::FIG14_SOURCE_COUNTS, spec.m())?;
+    for m in 1..=spec.m() {
+        let mut row = vec![m as f64];
+        for &p in params::FIG14_SOURCE_COUNTS {
+            let pt = pts.iter().find(|x| x.sources == p && x.processors == m).unwrap();
+            row.push(pt.tf);
+        }
+        t.push_row(row);
+    }
+    Ok(t)
+}
+
+/// Fig. 15 — speedup over the single-source system (from Fig. 14).
+pub fn fig15() -> Result<ExpTable> {
+    let spec = params::table4();
+    let cols: Vec<String> = std::iter::once("m".to_string())
+        .chain(params::FIG14_SOURCE_COUNTS.iter().map(|p| format!("speedup_{p}src")))
+        .collect();
+    let col_refs: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+    let mut t = ExpTable::new("fig15", "speedup vs single source (Table 4)", &col_refs);
+    let pts = speedup::sweep(&spec, params::FIG14_SOURCE_COUNTS, spec.m())?;
+    for m in 1..=spec.m() {
+        let mut row = vec![m as f64];
+        for &p in params::FIG14_SOURCE_COUNTS {
+            let pt = pts.iter().find(|x| x.sources == p && x.processors == m).unwrap();
+            row.push(pt.speedup);
+        }
+        t.push_row(row);
+    }
+    // Paper anchors at 12 processors.
+    let r = 11; // m = 12
+    t.note(format!(
+        "m=12 speedups: 2src {:.2} (paper 1.59), 3src {:.2} (1.90), 5src {:.2} (2.21), 10src {:.2} (2.49)",
+        t.at(r, "speedup_2src"),
+        t.at(r, "speedup_3src"),
+        t.at(r, "speedup_5src"),
+        t.at(r, "speedup_10src"),
+    ));
+    Ok(t)
+}
+
+/// Figs. 16, 17, 18 — cost, finish time and gradient vs processors
+/// (Table 5, front-ends). One sweep feeds all three figures.
+pub fn fig16_17_18() -> Result<(ExpTable, ExpTable, ExpTable)> {
+    let spec = params::table5();
+    let sweep = TradeoffTable::sweep(&spec)?;
+
+    let mut f16 = ExpTable::new(
+        "fig16",
+        "total monetary cost vs processors (Table 5, with front-ends)",
+        &["m", "cost"],
+    );
+    let mut f17 = ExpTable::new("fig17", "minimal finish time vs processors (Table 5)", &["m", "tf"]);
+    let mut f18 =
+        ExpTable::new("fig18", "gradient of finish time vs processors (Table 5)", &["m", "gradient_pct"]);
+    for p in &sweep.points {
+        f16.push_row(vec![p.m as f64, p.cost]);
+        f17.push_row(vec![p.m as f64, p.tf]);
+    }
+    for (k, g) in sweep.gradients.iter().enumerate() {
+        // gradient entering m = k+2
+        f18.push_row(vec![(k + 2) as f64, g * 100.0]);
+    }
+    f16.note(format!(
+        "cost(6) = {:.2} (paper 3433.77), cost(7) = {:.2} (paper 3451.67)",
+        sweep.at(6).cost,
+        sweep.at(7).cost
+    ));
+    f18.note(format!(
+        "|gradient(5)| = {:.1}% (paper ~8.4%), |gradient(6)| = {:.1}% (paper ~5.3%)",
+        sweep.gradients[3].abs() * 100.0,
+        sweep.gradients[4].abs() * 100.0
+    ));
+    Ok((f16, f17, f18))
+}
+
+/// Budget-area table shared by Figs. 19/20.
+fn budget_table(
+    name: &str,
+    title: &str,
+    budget_cost: f64,
+    budget_time: f64,
+) -> Result<ExpTable> {
+    let spec = params::table5();
+    let sweep = TradeoffTable::sweep(&spec)?;
+    let mut t = ExpTable::new(
+        name,
+        title,
+        &["m", "cost", "tf", "within_cost", "within_time", "within_both"],
+    );
+    for p in &sweep.points {
+        let wc = (p.cost <= budget_cost) as i64 as f64;
+        let wt = (p.tf <= budget_time) as i64 as f64;
+        t.push_row(vec![p.m as f64, p.cost, p.tf, wc, wt, wc * wt]);
+    }
+    let advice = advise(
+        &sweep,
+        &Budgets {
+            cost: Some(budget_cost),
+            time: Some(budget_time),
+            gradient_threshold: params::FIG19_GRADIENT_THRESHOLD,
+        },
+    );
+    t.note(format!("Budget_cost = {budget_cost:.2}, Budget_time = {budget_time:.2}"));
+    t.note(match advice {
+        Advice::Use { m, tf, cost } => {
+            format!("advice: use m = {m} (T_f {tf:.2}, cost {cost:.2})")
+        }
+        Advice::Range { lo, hi, recommended } => format!(
+            "advice: any m in [{lo}, {hi}] satisfies both budgets; cheapest is m = {recommended}"
+        ),
+        Advice::Infeasible { min_cost_meeting_time, min_time_within_cost } => format!(
+            "advice: INFEASIBLE — meeting the deadline costs >= {:.2}; staying in budget takes >= {:.2} time",
+            min_cost_meeting_time.unwrap_or(f64::NAN),
+            min_time_within_cost.unwrap_or(f64::NAN)
+        ),
+    });
+    Ok(t)
+}
+
+/// Fig. 19 — both budgets, overlapping solution areas (m ∈ [6, 12]).
+pub fn fig19() -> Result<ExpTable> {
+    let spec = params::table5();
+    let sweep = TradeoffTable::sweep(&spec)?;
+    // Pin the budgets to the sweep so the overlap is exactly [6, 12],
+    // matching the paper's plot.
+    budget_table(
+        "fig19",
+        "two solution areas, overlapped (Table 5)",
+        sweep.at(12).cost,
+        sweep.at(6).tf,
+    )
+}
+
+/// Fig. 20 — both budgets, disjoint solution areas (no feasible m).
+pub fn fig20() -> Result<ExpTable> {
+    let spec = params::table5();
+    let sweep = TradeoffTable::sweep(&spec)?;
+    // Cost budget only affords m <= 4; deadline needs m >= 10.
+    budget_table(
+        "fig20",
+        "two solution areas, no overlap (Table 5)",
+        sweep.at(4).cost,
+        sweep.at(10).tf,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig10_normalizes_and_orders() {
+        let t = fig10().unwrap();
+        let total: f64 = t.column("total").iter().sum();
+        assert!((total - 100.0).abs() < 1e-6);
+        let loads = t.column("total");
+        assert!(loads.windows(2).all(|w| w[0] >= w[1] - 1e-6), "faster procs do more");
+    }
+
+    #[test]
+    fn fig12_monotone_in_sources_and_processors() {
+        let t = fig12().unwrap();
+        for r in 0..t.rows.len() {
+            assert!(t.at(r, "tf_2src") <= t.at(r, "tf_1src") + 1e-6);
+            assert!(t.at(r, "tf_3src") <= t.at(r, "tf_2src") + 1e-6);
+        }
+        let c1 = t.column("tf_1src");
+        assert!(c1.windows(2).all(|w| w[1] <= w[0] + 1e-6));
+    }
+
+    #[test]
+    fn fig13_larger_jobs_take_longer() {
+        let t = fig13().unwrap();
+        for r in 0..t.rows.len() {
+            assert!(t.at(r, "tf_J100") < t.at(r, "tf_J300"));
+            assert!(t.at(r, "tf_J300") < t.at(r, "tf_J500"));
+        }
+    }
+
+    #[test]
+    fn fig15_speedup_anchors_close_to_paper() {
+        let t = fig15().unwrap();
+        let r = 11; // m = 12
+        // Shape-level reproduction: within 15% of the paper's values.
+        for (col, paper) in [
+            ("speedup_2src", 1.59),
+            ("speedup_3src", 1.90),
+            ("speedup_5src", 2.21),
+            ("speedup_10src", 2.49),
+        ] {
+            let got = t.at(r, col);
+            assert!(
+                (got - paper).abs() / paper < 0.15,
+                "{col}: got {got}, paper {paper}"
+            );
+        }
+    }
+
+    #[test]
+    fn fig19_overlap_is_6_to_12() {
+        let t = fig19().unwrap();
+        let both = t.column("within_both");
+        let ms: Vec<usize> = t
+            .column("m")
+            .iter()
+            .zip(both.iter())
+            .filter(|(_, &b)| b > 0.5)
+            .map(|(&m, _)| m as usize)
+            .collect();
+        assert_eq!(ms.first(), Some(&6));
+        assert_eq!(ms.last(), Some(&12));
+    }
+
+    #[test]
+    fn fig20_has_no_overlap() {
+        let t = fig20().unwrap();
+        assert!(t.column("within_both").iter().all(|&b| b < 0.5));
+        assert!(t.notes.iter().any(|n| n.contains("INFEASIBLE")));
+    }
+}

@@ -1,0 +1,150 @@
+//! Generic experiment-result table (render to text or CSV).
+
+/// Column-labeled numeric table with provenance notes.
+#[derive(Debug, Clone)]
+pub struct ExpTable {
+    /// Experiment id (`fig12`, ...).
+    pub name: String,
+    /// What the paper shows there.
+    pub title: String,
+    /// Column headers.
+    pub columns: Vec<String>,
+    /// Data rows.
+    pub rows: Vec<Vec<f64>>,
+    /// Free-form notes (paper anchor comparisons, advice text, ...).
+    pub notes: Vec<String>,
+}
+
+impl ExpTable {
+    /// New empty table.
+    pub fn new(name: &str, title: &str, columns: &[&str]) -> ExpTable {
+        ExpTable {
+            name: name.to_string(),
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    /// Append a row (must match the column count).
+    pub fn push_row(&mut self, row: Vec<f64>) {
+        assert_eq!(row.len(), self.columns.len(), "row width mismatch");
+        self.rows.push(row);
+    }
+
+    /// Append a note.
+    pub fn note(&mut self, s: impl Into<String>) {
+        self.notes.push(s.into());
+    }
+
+    /// Column index by header name.
+    pub fn col(&self, header: &str) -> usize {
+        self.columns
+            .iter()
+            .position(|c| c == header)
+            .unwrap_or_else(|| panic!("no column `{header}` in {}", self.name))
+    }
+
+    /// Value at (row, column-name).
+    pub fn at(&self, row: usize, header: &str) -> f64 {
+        self.rows[row][self.col(header)]
+    }
+
+    /// Extract a whole column.
+    pub fn column(&self, header: &str) -> Vec<f64> {
+        let c = self.col(header);
+        self.rows.iter().map(|r| r[c]).collect()
+    }
+
+    /// Render as an aligned text table.
+    pub fn render_text(&self) -> String {
+        let mut out = format!("## {} — {}\n", self.name, self.title);
+        out.push_str(&self.columns.iter().map(|c| format!("{c:>14}")).collect::<String>());
+        out.push('\n');
+        for row in &self.rows {
+            for v in row {
+                if v.fract() == 0.0 && v.abs() < 1e9 {
+                    out.push_str(&format!("{:>14}", *v as i64));
+                } else {
+                    out.push_str(&format!("{v:>14.4}"));
+                }
+            }
+            out.push('\n');
+        }
+        for n in &self.notes {
+            out.push_str(&format!("  note: {n}\n"));
+        }
+        out
+    }
+
+    /// Render as CSV.
+    pub fn render_csv(&self) -> String {
+        let mut out = self.columns.join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(
+                &row.iter().map(|v| format!("{v}")).collect::<Vec<_>>().join(","),
+            );
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write the CSV to `dir/<name>.csv`; returns the path.
+    pub fn write_csv(&self, dir: &str) -> crate::error::Result<String> {
+        std::fs::create_dir_all(dir).map_err(|e| crate::error::Error::io(dir, e))?;
+        let path = format!("{dir}/{}.csv", self.name);
+        std::fs::write(&path, self.render_csv())
+            .map_err(|e| crate::error::Error::io(&path, e))?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t() -> ExpTable {
+        let mut t = ExpTable::new("figX", "demo", &["m", "tf"]);
+        t.push_row(vec![1.0, 10.5]);
+        t.push_row(vec![2.0, 8.25]);
+        t.note("hello");
+        t
+    }
+
+    #[test]
+    fn accessors() {
+        let t = t();
+        assert_eq!(t.col("tf"), 1);
+        assert_eq!(t.at(1, "tf"), 8.25);
+        assert_eq!(t.column("m"), vec![1.0, 2.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn row_width_checked() {
+        let mut t = t();
+        t.push_row(vec![1.0]);
+    }
+
+    #[test]
+    fn renders() {
+        let t = t();
+        let txt = t.render_text();
+        assert!(txt.contains("figX"));
+        assert!(txt.contains("note: hello"));
+        let csv = t.render_csv();
+        assert!(csv.starts_with("m,tf\n"));
+        assert!(csv.contains("2,8.25"));
+    }
+
+    #[test]
+    fn csv_file_roundtrip() {
+        let t = t();
+        let path = t.write_csv("/tmp/dlt_exp_test").unwrap();
+        let content = std::fs::read_to_string(&path).unwrap();
+        assert!(content.contains("8.25"));
+        std::fs::remove_dir_all("/tmp/dlt_exp_test").ok();
+    }
+}

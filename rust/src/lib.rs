@@ -1,0 +1,67 @@
+//! # `dlt` — Multi-Source Multi-Processor Divisible-Load Scheduling
+//!
+//! A production-shaped reproduction of *"Scheduling and Trade-off Analysis
+//! for Multi-Source Multi-Processor Systems with Divisible Loads"*
+//! (Cao, Wu, Robertazzi, 2019).
+//!
+//! The crate is organized bottom-up:
+//!
+//! - [`util`], [`linalg`] — numeric substrates (PRNG, stats, dense LA).
+//! - [`lp`] — a from-scratch two-phase primal simplex solver; every
+//!   scheduling problem in the paper is solved through it.
+//! - [`model`] — the system specification (sources `G_i`/`R_i`,
+//!   processors `A_j`/`C_j`, job `J`).
+//! - [`dlt`] — the paper's scheduling formulations: §2 single-source
+//!   closed form, §3.1 multi-source with front-ends, §3.2 without
+//!   front-ends; schedule extraction and validation.
+//! - [`cost`], [`speedup`] — §6 monetary-cost/trade-off analysis and
+//!   §5 Amdahl-style speedup analysis.
+//! - [`sim`] — a deterministic discrete-event simulator that *executes*
+//!   schedules and independently measures the realized makespan.
+//! - [`cluster`] — a threaded in-process cluster runtime whose
+//!   processors perform real compute via AOT-compiled XLA artifacts.
+//! - [`runtime`], [`pdhg`] — the PJRT artifact runtime and the
+//!   first-order (PDHG) LP solving path compiled from JAX + Pallas.
+//! - [`config`], [`cli`], [`benchkit`], [`testkit`], [`experiments`] —
+//!   framework glue: JSON config, CLI, bench harness, property-test
+//!   harness, and the paper's experiment registry.
+//!
+//! ## Quickstart
+//!
+//! ```
+//! use dlt::model::SystemSpec;
+//! use dlt::dlt::frontend;
+//!
+//! // Table 1 of the paper: 2 sources, 5 processors, J = 100.
+//! let spec = SystemSpec::builder()
+//!     .source(0.2, 10.0)
+//!     .source(0.4, 50.0)
+//!     .processors(&[2.0, 3.0, 4.0, 5.0, 6.0])
+//!     .job(100.0)
+//!     .build()
+//!     .unwrap();
+//! let sched = frontend::solve(&spec).unwrap();
+//! assert!(sched.makespan > 0.0);
+//! let total: f64 = sched.beta.iter().sum();
+//! assert!((total - 100.0).abs() < 1e-6);
+//! ```
+
+pub mod benchkit;
+pub mod cli;
+pub mod cluster;
+pub mod config;
+pub mod cost;
+pub mod dlt;
+pub mod error;
+pub mod experiments;
+pub mod linalg;
+pub mod lp;
+pub mod model;
+pub mod pdhg;
+pub mod runtime;
+pub mod sim;
+pub mod speedup;
+pub mod testkit;
+pub mod util;
+
+pub use error::{Error, Result};

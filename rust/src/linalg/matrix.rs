@@ -1,0 +1,311 @@
+//! Row-major dense `f64` matrix with LU factorization.
+
+use crate::error::{Error, Result};
+
+/// Row-major dense matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Matrix {
+    /// Zero matrix of the given shape.
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Matrix {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a row-major vec. Panics if sizes disagree.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Matrix {
+        assert_eq!(data.len(), rows * cols, "shape mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    /// Build from nested rows. Panics on ragged input.
+    pub fn from_rows(rows: &[Vec<f64>]) -> Matrix {
+        let r = rows.len();
+        let c = if r == 0 { 0 } else { rows[0].len() };
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Matrix { rows: r, cols: c, data }
+    }
+
+    /// Number of rows.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Borrow a row as a slice.
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutable row access.
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Flat data access (row-major).
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Matrix–vector product `A x`.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0; self.rows];
+        for i in 0..self.rows {
+            y[i] = super::dot(self.row(i), x);
+        }
+        y
+    }
+
+    /// Transposed matrix–vector product `Aᵀ y`.
+    pub fn matvec_t(&self, y: &[f64]) -> Vec<f64> {
+        assert_eq!(y.len(), self.rows);
+        let mut x = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            let yi = y[i];
+            if yi == 0.0 {
+                continue;
+            }
+            let row = self.row(i);
+            for j in 0..self.cols {
+                x[j] += row[j] * yi;
+            }
+        }
+        x
+    }
+
+    /// Matrix product `A B`.
+    pub fn matmul(&self, b: &Matrix) -> Matrix {
+        assert_eq!(self.cols, b.rows);
+        let mut out = Matrix::zeros(self.rows, b.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let aik = self[(i, k)];
+                if aik == 0.0 {
+                    continue;
+                }
+                for j in 0..b.cols {
+                    out[(i, j)] += aik * b[(k, j)];
+                }
+            }
+        }
+        out
+    }
+
+    /// Largest singular value estimate via power iteration on `AᵀA`.
+    /// Used to pick PDHG step sizes. `iters` ~ 50 is plenty here.
+    pub fn spectral_norm_est(&self, iters: usize, seed: u64) -> f64 {
+        use crate::util::rng::{Pcg32, Rng};
+        if self.rows == 0 || self.cols == 0 {
+            return 0.0;
+        }
+        let mut rng = Pcg32::new(seed);
+        let mut v: Vec<f64> = (0..self.cols).map(|_| rng.f64() - 0.5).collect();
+        let mut norm = super::norm2(&v);
+        if norm == 0.0 {
+            v[0] = 1.0;
+            norm = 1.0;
+        }
+        for x in v.iter_mut() {
+            *x /= norm;
+        }
+        let mut sigma = 0.0;
+        for _ in 0..iters {
+            let av = self.matvec(&v);
+            let atav = self.matvec_t(&av);
+            let n = super::norm2(&atav);
+            if n == 0.0 {
+                return 0.0;
+            }
+            sigma = n.sqrt();
+            for (vi, &ai) in v.iter_mut().zip(atav.iter()) {
+                *vi = ai / n;
+            }
+        }
+        sigma
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Matrix {
+    type Output = f64;
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Matrix {
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// Solve `A x = b` by LU with partial pivoting. `A` must be square.
+pub fn lu_solve(a: &Matrix, b: &[f64]) -> Result<Vec<f64>> {
+    let n = a.rows();
+    if a.cols() != n {
+        return Err(Error::Numerical(format!("lu_solve: non-square {}x{}", a.rows(), a.cols())));
+    }
+    if b.len() != n {
+        return Err(Error::Numerical("lu_solve: rhs length mismatch".into()));
+    }
+    let mut lu = a.clone();
+    let mut x = b.to_vec();
+    let mut perm: Vec<usize> = (0..n).collect();
+
+    for k in 0..n {
+        // Partial pivot.
+        let mut p = k;
+        let mut max = lu[(k, k)].abs();
+        for i in (k + 1)..n {
+            let v = lu[(i, k)].abs();
+            if v > max {
+                max = v;
+                p = i;
+            }
+        }
+        if max < 1e-13 {
+            return Err(Error::Numerical(format!("lu_solve: singular at pivot {k}")));
+        }
+        if p != k {
+            perm.swap(p, k);
+            // Swap rows p and k.
+            for j in 0..n {
+                let tmp = lu[(k, j)];
+                lu[(k, j)] = lu[(p, j)];
+                lu[(p, j)] = tmp;
+            }
+            x.swap(p, k);
+        }
+        let pivot = lu[(k, k)];
+        for i in (k + 1)..n {
+            let factor = lu[(i, k)] / pivot;
+            lu[(i, k)] = factor;
+            if factor != 0.0 {
+                for j in (k + 1)..n {
+                    let v = lu[(k, j)];
+                    lu[(i, j)] -= factor * v;
+                }
+                x[i] -= factor * x[k];
+            }
+        }
+    }
+    // Back substitution.
+    for i in (0..n).rev() {
+        let mut acc = x[i];
+        for j in (i + 1)..n {
+            acc -= lu[(i, j)] * x[j];
+        }
+        x[i] = acc / lu[(i, i)];
+    }
+    Ok(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::float::approx_eq_eps;
+
+    #[test]
+    fn index_and_eye() {
+        let m = Matrix::eye(3);
+        assert_eq!(m[(0, 0)], 1.0);
+        assert_eq!(m[(0, 1)], 0.0);
+    }
+
+    #[test]
+    fn matvec_basic() {
+        let a = Matrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        assert_eq!(a.matvec(&[1.0, 1.0]), vec![3.0, 7.0]);
+        assert_eq!(a.matvec_t(&[1.0, 1.0]), vec![4.0, 6.0]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = Matrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let i = Matrix::eye(2);
+        assert_eq!(a.matmul(&i), a);
+    }
+
+    #[test]
+    fn lu_solves_small_system() {
+        let a = Matrix::from_rows(&[
+            vec![2.0, 1.0, -1.0],
+            vec![-3.0, -1.0, 2.0],
+            vec![-2.0, 1.0, 2.0],
+        ]);
+        let x = lu_solve(&a, &[8.0, -11.0, -3.0]).unwrap();
+        let expect = [2.0, 3.0, -1.0];
+        for (xi, ei) in x.iter().zip(expect.iter()) {
+            assert!(approx_eq_eps(*xi, *ei, 1e-10, 1e-10), "{x:?}");
+        }
+    }
+
+    #[test]
+    fn lu_requires_pivoting() {
+        // Zero on the diagonal forces a row swap.
+        let a = Matrix::from_rows(&[vec![0.0, 1.0], vec![1.0, 0.0]]);
+        let x = lu_solve(&a, &[2.0, 3.0]).unwrap();
+        assert!(approx_eq_eps(x[0], 3.0, 1e-12, 1e-12));
+        assert!(approx_eq_eps(x[1], 2.0, 1e-12, 1e-12));
+    }
+
+    #[test]
+    fn lu_detects_singular() {
+        let a = Matrix::from_rows(&[vec![1.0, 2.0], vec![2.0, 4.0]]);
+        assert!(lu_solve(&a, &[1.0, 2.0]).is_err());
+    }
+
+    #[test]
+    fn spectral_norm_of_diagonal() {
+        let mut a = Matrix::zeros(3, 3);
+        a[(0, 0)] = 3.0;
+        a[(1, 1)] = 1.0;
+        a[(2, 2)] = 0.5;
+        let s = a.spectral_norm_est(100, 42);
+        assert!((s - 3.0).abs() < 1e-6, "{s}");
+    }
+
+    #[test]
+    fn lu_random_roundtrip() {
+        use crate::util::rng::{Pcg32, Rng};
+        let mut rng = Pcg32::new(9);
+        for n in [1usize, 2, 5, 20] {
+            let mut a = Matrix::zeros(n, n);
+            for i in 0..n {
+                for j in 0..n {
+                    a[(i, j)] = rng.f64() - 0.5;
+                }
+                a[(i, i)] += 2.0; // diagonally dominant => nonsingular
+            }
+            let x_true: Vec<f64> = (0..n).map(|_| rng.f64() * 10.0).collect();
+            let b = a.matvec(&x_true);
+            let x = lu_solve(&a, &b).unwrap();
+            for (xi, ti) in x.iter().zip(x_true.iter()) {
+                assert!(approx_eq_eps(*xi, *ti, 1e-8, 1e-8));
+            }
+        }
+    }
+}

@@ -1,0 +1,58 @@
+//! Small dense linear-algebra substrate.
+//!
+//! Used by the §2 closed-form oracle (solving the M+1 linear equations
+//! directly), the simplex tableau, and PDHG standardization. Everything
+//! is `f64`, row-major, and allocation-explicit — instances in this
+//! paper are at most a few thousand variables.
+
+pub mod matrix;
+
+pub use matrix::{lu_solve, Matrix};
+
+/// Dot product of two equal-length slices.
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0;
+    for i in 0..a.len() {
+        acc += a[i] * b[i];
+    }
+    acc
+}
+
+/// Euclidean norm.
+pub fn norm2(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+/// Infinity norm.
+pub fn norm_inf(a: &[f64]) -> f64 {
+    a.iter().fold(0.0f64, |m, &x| m.max(x.abs()))
+}
+
+/// `y += alpha * x`.
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for i in 0..x.len() {
+        y[i] += alpha * x[i];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_and_norms() {
+        let a = [1.0, 2.0, 2.0];
+        assert_eq!(dot(&a, &a), 9.0);
+        assert_eq!(norm2(&a), 3.0);
+        assert_eq!(norm_inf(&[-5.0, 3.0]), 5.0);
+    }
+
+    #[test]
+    fn axpy_works() {
+        let mut y = [1.0, 1.0];
+        axpy(2.0, &[3.0, 4.0], &mut y);
+        assert_eq!(y, [7.0, 9.0]);
+    }
+}

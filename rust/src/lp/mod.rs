@@ -1,0 +1,32 @@
+//! From-scratch linear-programming substrate.
+//!
+//! The paper solves every scheduling instance "by linear programming
+//! techniques"; this module is that solver. It is a dense two-phase
+//! primal simplex with Dantzig pricing, Bland anti-cycling fallback,
+//! a light presolve, and dual extraction — no external LP dependency.
+//!
+//! All variables are non-negative (`x ≥ 0`), which matches every
+//! formulation in the paper (load fractions, timestamps and the
+//! makespan are all non-negative physical quantities).
+//!
+//! ```
+//! use dlt::lp::{LpProblem, Cmp, solve};
+//! // min -x0 - 2 x1  s.t.  x0 + x1 <= 4,  x1 <= 2
+//! let mut p = LpProblem::new(2);
+//! p.set_objective(&[-1.0, -2.0]);
+//! p.add_constraint(&[(0, 1.0), (1, 1.0)], Cmp::Le, 4.0);
+//! p.add_constraint(&[(1, 1.0)], Cmp::Le, 2.0);
+//! let s = solve(&p).unwrap();
+//! assert!((s.objective - (-6.0)).abs() < 1e-9);
+//! ```
+
+pub mod presolve;
+pub mod problem;
+pub mod simplex;
+pub mod solution;
+pub mod standard;
+
+pub use problem::{Cmp, Constraint, LpProblem};
+pub use simplex::{solve, solve_with, SimplexOptions};
+pub use solution::LpSolution;
+pub use standard::StandardForm;

@@ -1,0 +1,126 @@
+//! Light LP presolve: drop empty rows, detect trivial infeasibility,
+//! and report simple statistics. The DLT builders generate clean
+//! problems, so presolve is deliberately conservative — it never
+//! changes the feasible set, it only removes rows that are vacuous.
+
+use super::problem::{Cmp, LpProblem};
+use crate::error::{Error, Result};
+
+/// Presolve statistics.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PresolveStats {
+    /// Rows with no coefficients that were trivially satisfied.
+    pub empty_rows_dropped: usize,
+    /// Exact duplicate rows removed.
+    pub duplicate_rows_dropped: usize,
+}
+
+/// Presolve in place. Errors if an empty row is trivially infeasible
+/// (e.g. `0 <= -1`).
+pub fn presolve(p: &LpProblem) -> Result<(LpProblem, PresolveStats)> {
+    let mut out = LpProblem::new(p.num_vars());
+    out.set_objective(p.objective());
+    for v in 0..p.num_vars() {
+        out.name_var(v, p.var_name(v));
+    }
+    let mut stats = PresolveStats::default();
+    let mut seen: Vec<(Vec<(usize, u64)>, Cmp, u64)> = Vec::new();
+
+    for con in p.constraints() {
+        // Merge duplicate indices, drop explicit zeros.
+        let mut merged: Vec<(usize, f64)> = Vec::with_capacity(con.coeffs.len());
+        let mut sorted = con.coeffs.clone();
+        sorted.sort_by_key(|&(v, _)| v);
+        for (v, a) in sorted {
+            if let Some(last) = merged.last_mut() {
+                if last.0 == v {
+                    last.1 += a;
+                    continue;
+                }
+            }
+            merged.push((v, a));
+        }
+        merged.retain(|&(_, a)| a != 0.0);
+
+        if merged.is_empty() {
+            let ok = match con.cmp {
+                Cmp::Le => 0.0 <= con.rhs + 1e-12,
+                Cmp::Ge => 0.0 >= con.rhs - 1e-12,
+                Cmp::Eq => con.rhs.abs() <= 1e-12,
+            };
+            if !ok {
+                return Err(Error::Infeasible(format!(
+                    "empty row `{}` requires 0 {} {}",
+                    con.label, con.cmp, con.rhs
+                )));
+            }
+            stats.empty_rows_dropped += 1;
+            continue;
+        }
+
+        // Exact duplicate detection on bit patterns.
+        let key: (Vec<(usize, u64)>, Cmp, u64) = (
+            merged.iter().map(|&(v, a)| (v, a.to_bits())).collect(),
+            con.cmp,
+            con.rhs.to_bits(),
+        );
+        if seen.contains(&key) {
+            stats.duplicate_rows_dropped += 1;
+            continue;
+        }
+        seen.push(key);
+        out.add_labeled(&merged, con.cmp, con.rhs, con.label.clone());
+    }
+    Ok((out, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lp::{solve, Cmp, LpProblem};
+
+    #[test]
+    fn drops_empty_and_duplicate_rows() {
+        let mut p = LpProblem::new(2);
+        p.set_objective(&[1.0, 1.0]);
+        p.add_constraint(&[], Cmp::Le, 5.0); // vacuous
+        p.add_constraint(&[(0, 1.0)], Cmp::Ge, 1.0);
+        p.add_constraint(&[(0, 1.0)], Cmp::Ge, 1.0); // duplicate
+        p.add_constraint(&[(1, 0.0)], Cmp::Le, 3.0); // zero coeff -> empty
+        let (q, stats) = presolve(&p).unwrap();
+        assert_eq!(stats.empty_rows_dropped, 2);
+        assert_eq!(stats.duplicate_rows_dropped, 1);
+        assert_eq!(q.num_constraints(), 1);
+        let s = solve(&q).unwrap();
+        assert!((s.objective - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn detects_trivially_infeasible_empty_row() {
+        let mut p = LpProblem::new(1);
+        p.add_constraint(&[], Cmp::Ge, 2.0);
+        assert!(presolve(&p).is_err());
+    }
+
+    #[test]
+    fn merges_duplicate_indices() {
+        let mut p = LpProblem::new(1);
+        p.set_objective(&[1.0]);
+        p.add_constraint(&[(0, 1.0), (0, 1.0)], Cmp::Ge, 4.0);
+        let (q, _) = presolve(&p).unwrap();
+        let s = solve(&q).unwrap();
+        assert!((s.x[0] - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn presolve_preserves_optimum() {
+        let mut p = LpProblem::new(2);
+        p.set_objective(&[2.0, 3.0]);
+        p.add_constraint(&[(0, 1.0), (1, 1.0)], Cmp::Ge, 4.0);
+        p.add_constraint(&[(0, 1.0)], Cmp::Le, 3.0);
+        let s0 = solve(&p).unwrap();
+        let (q, _) = presolve(&p).unwrap();
+        let s1 = solve(&q).unwrap();
+        assert!((s0.objective - s1.objective).abs() < 1e-9);
+    }
+}

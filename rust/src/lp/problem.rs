@@ -1,0 +1,190 @@
+//! LP problem description: `min c'x  s.t.  a_k' x {<=,>=,=} b_k, x >= 0`.
+
+/// Constraint comparison operator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Cmp {
+    /// `a'x <= b`
+    Le,
+    /// `a'x >= b`
+    Ge,
+    /// `a'x == b`
+    Eq,
+}
+
+impl std::fmt::Display for Cmp {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Cmp::Le => write!(f, "<="),
+            Cmp::Ge => write!(f, ">="),
+            Cmp::Eq => write!(f, "=="),
+        }
+    }
+}
+
+/// One linear constraint in sparse form.
+#[derive(Debug, Clone)]
+pub struct Constraint {
+    /// `(variable index, coefficient)` pairs. Duplicate indices are summed.
+    pub coeffs: Vec<(usize, f64)>,
+    /// Comparison operator.
+    pub cmp: Cmp,
+    /// Right-hand side.
+    pub rhs: f64,
+    /// Optional label for diagnostics (`release[2]`, `finish[7]`, ...).
+    pub label: String,
+}
+
+/// A linear program over non-negative variables.
+#[derive(Debug, Clone)]
+pub struct LpProblem {
+    num_vars: usize,
+    objective: Vec<f64>,
+    constraints: Vec<Constraint>,
+    var_names: Vec<String>,
+}
+
+impl LpProblem {
+    /// New problem with `num_vars` non-negative variables and zero
+    /// objective.
+    pub fn new(num_vars: usize) -> LpProblem {
+        LpProblem {
+            num_vars,
+            objective: vec![0.0; num_vars],
+            constraints: Vec::new(),
+            var_names: (0..num_vars).map(|i| format!("x{i}")).collect(),
+        }
+    }
+
+    /// Number of decision variables.
+    pub fn num_vars(&self) -> usize {
+        self.num_vars
+    }
+
+    /// Number of constraints.
+    pub fn num_constraints(&self) -> usize {
+        self.constraints.len()
+    }
+
+    /// Set the full objective vector (minimization).
+    pub fn set_objective(&mut self, c: &[f64]) {
+        assert_eq!(c.len(), self.num_vars, "objective length mismatch");
+        self.objective.copy_from_slice(c);
+    }
+
+    /// Set a single objective coefficient.
+    pub fn set_objective_coeff(&mut self, var: usize, c: f64) {
+        assert!(var < self.num_vars);
+        self.objective[var] = c;
+    }
+
+    /// Objective vector.
+    pub fn objective(&self) -> &[f64] {
+        &self.objective
+    }
+
+    /// Name a variable (diagnostics only).
+    pub fn name_var(&mut self, var: usize, name: impl Into<String>) {
+        self.var_names[var] = name.into();
+    }
+
+    /// Variable name.
+    pub fn var_name(&self, var: usize) -> &str {
+        &self.var_names[var]
+    }
+
+    /// Add a constraint from sparse coefficients.
+    pub fn add_constraint(&mut self, coeffs: &[(usize, f64)], cmp: Cmp, rhs: f64) -> usize {
+        self.add_labeled(coeffs, cmp, rhs, String::new())
+    }
+
+    /// Add a labeled constraint from sparse coefficients.
+    pub fn add_labeled(
+        &mut self,
+        coeffs: &[(usize, f64)],
+        cmp: Cmp,
+        rhs: f64,
+        label: impl Into<String>,
+    ) -> usize {
+        for &(v, _) in coeffs {
+            assert!(v < self.num_vars, "constraint references unknown var {v}");
+        }
+        self.constraints.push(Constraint {
+            coeffs: coeffs.to_vec(),
+            cmp,
+            rhs,
+            label: label.into(),
+        });
+        self.constraints.len() - 1
+    }
+
+    /// Constraints slice.
+    pub fn constraints(&self) -> &[Constraint] {
+        &self.constraints
+    }
+
+    /// Evaluate the objective at a point.
+    pub fn objective_at(&self, x: &[f64]) -> f64 {
+        crate::linalg::dot(&self.objective, x)
+    }
+
+    /// Check feasibility of a point within tolerance `eps`; returns the
+    /// first violated constraint description, or `None` if feasible.
+    pub fn check_feasible(&self, x: &[f64], eps: f64) -> Option<String> {
+        if x.len() != self.num_vars {
+            return Some(format!("point has {} vars, problem has {}", x.len(), self.num_vars));
+        }
+        for (i, &xi) in x.iter().enumerate() {
+            if xi < -eps {
+                return Some(format!("{} = {} < 0", self.var_names[i], xi));
+            }
+        }
+        for (k, c) in self.constraints.iter().enumerate() {
+            let lhs: f64 = c.coeffs.iter().map(|&(v, a)| a * x[v]).sum();
+            let ok = match c.cmp {
+                Cmp::Le => lhs <= c.rhs + eps,
+                Cmp::Ge => lhs >= c.rhs - eps,
+                Cmp::Eq => (lhs - c.rhs).abs() <= eps,
+            };
+            if !ok {
+                return Some(format!(
+                    "constraint {k} `{}`: {} {} {} violated (lhs={})",
+                    c.label, lhs, c.cmp, c.rhs, lhs
+                ));
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_and_inspect() {
+        let mut p = LpProblem::new(3);
+        p.set_objective(&[1.0, 0.0, -1.0]);
+        p.name_var(0, "beta_0");
+        let idx = p.add_labeled(&[(0, 1.0), (2, 2.0)], Cmp::Le, 5.0, "cap");
+        assert_eq!(idx, 0);
+        assert_eq!(p.num_constraints(), 1);
+        assert_eq!(p.var_name(0), "beta_0");
+        assert_eq!(p.constraints()[0].label, "cap");
+    }
+
+    #[test]
+    fn feasibility_check() {
+        let mut p = LpProblem::new(2);
+        p.add_constraint(&[(0, 1.0), (1, 1.0)], Cmp::Eq, 1.0);
+        assert!(p.check_feasible(&[0.5, 0.5], 1e-9).is_none());
+        assert!(p.check_feasible(&[0.9, 0.5], 1e-9).is_some());
+        assert!(p.check_feasible(&[-0.1, 1.1], 1e-9).is_some());
+    }
+
+    #[test]
+    fn objective_eval() {
+        let mut p = LpProblem::new(2);
+        p.set_objective(&[2.0, -3.0]);
+        assert_eq!(p.objective_at(&[1.0, 1.0]), -1.0);
+    }
+}

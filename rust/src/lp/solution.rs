@@ -1,0 +1,21 @@
+//! LP solution container.
+
+/// Result of a successful LP solve.
+#[derive(Debug, Clone)]
+pub struct LpSolution {
+    /// Optimal values for the structural variables.
+    pub x: Vec<f64>,
+    /// Optimal objective value (minimization).
+    pub objective: f64,
+    /// Total simplex iterations across both phases.
+    pub iterations: usize,
+    /// Dual values per constraint (if requested and extractable).
+    pub duals: Option<Vec<f64>>,
+}
+
+impl LpSolution {
+    /// Value of variable `i`.
+    pub fn value(&self, i: usize) -> f64 {
+        self.x[i]
+    }
+}

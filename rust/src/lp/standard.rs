@@ -1,0 +1,187 @@
+//! Conversion of an [`LpProblem`] to computational standard forms.
+//!
+//! Two consumers:
+//! - the simplex solver wants `min c'x  s.t.  Ax = b, x >= 0, b >= 0`
+//!   with explicit slack/surplus columns ([`StandardForm::equality`]);
+//! - the PDHG path wants the row-wise form `Ax <= b` / `Ax == b`
+//!   with an equality mask ([`StandardForm::rowwise`]).
+
+use super::problem::{Cmp, LpProblem};
+use crate::linalg::Matrix;
+
+/// Kind of auxiliary column appended for a constraint row.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AuxKind {
+    /// Slack (`+1` coefficient, from a `<=` row).
+    Slack,
+    /// Surplus (`-1` coefficient, from a `>=` row).
+    Surplus,
+    /// No auxiliary column (equality row).
+    None,
+}
+
+/// Equality standard form for the simplex: `min c'x, Ax = b, x >= 0`,
+/// with `b >= 0` (rows are sign-flipped as needed).
+#[derive(Debug, Clone)]
+pub struct StandardForm {
+    /// Constraint matrix including slack/surplus columns.
+    pub a: Matrix,
+    /// Right-hand side, all entries `>= 0`.
+    pub b: Vec<f64>,
+    /// Objective over all columns (zeros for aux columns).
+    pub c: Vec<f64>,
+    /// Number of original (structural) variables.
+    pub num_structural: usize,
+    /// Per-row auxiliary column kind (after sign normalization).
+    pub aux: Vec<AuxKind>,
+    /// Per-row: was the row sign-flipped to make `b >= 0`?
+    pub flipped: Vec<bool>,
+}
+
+impl StandardForm {
+    /// Build the equality standard form used by the simplex.
+    pub fn equality(p: &LpProblem) -> StandardForm {
+        let n = p.num_vars();
+        let m = p.num_constraints();
+
+        // First pass: determine aux column per row (post flip).
+        // Flipping a row negates coefficients and rhs and swaps Le/Ge.
+        let mut aux = Vec::with_capacity(m);
+        let mut flipped = Vec::with_capacity(m);
+        for c in p.constraints() {
+            let flip = c.rhs < 0.0;
+            let cmp = match (c.cmp, flip) {
+                (Cmp::Le, false) | (Cmp::Ge, true) => Cmp::Le,
+                (Cmp::Ge, false) | (Cmp::Le, true) => Cmp::Ge,
+                (Cmp::Eq, _) => Cmp::Eq,
+            };
+            aux.push(match cmp {
+                Cmp::Le => AuxKind::Slack,
+                Cmp::Ge => AuxKind::Surplus,
+                Cmp::Eq => AuxKind::None,
+            });
+            flipped.push(flip);
+        }
+        let num_aux = aux.iter().filter(|k| **k != AuxKind::None).count();
+        let total = n + num_aux;
+
+        let mut a = Matrix::zeros(m, total);
+        let mut b = vec![0.0; m];
+        let mut c_vec = vec![0.0; total];
+        c_vec[..n].copy_from_slice(p.objective());
+
+        let mut next_aux = n;
+        for (i, con) in p.constraints().iter().enumerate() {
+            let sign = if flipped[i] { -1.0 } else { 1.0 };
+            for &(v, coef) in &con.coeffs {
+                a[(i, v)] += sign * coef;
+            }
+            b[i] = sign * con.rhs;
+            match aux[i] {
+                AuxKind::Slack => {
+                    a[(i, next_aux)] = 1.0;
+                    next_aux += 1;
+                }
+                AuxKind::Surplus => {
+                    a[(i, next_aux)] = -1.0;
+                    next_aux += 1;
+                }
+                AuxKind::None => {}
+            }
+        }
+        debug_assert_eq!(next_aux, total);
+
+        StandardForm { a, b, c: c_vec, num_structural: n, aux, flipped }
+    }
+}
+
+/// Row-wise inequality form for first-order methods:
+/// `min c'x  s.t.  (Ax)_k <= b_k` for inequality rows, `(Ax)_k == b_k`
+/// for equality rows (`eq_mask[k] == true`), `x >= 0`.
+/// `>=` rows are negated into `<=` rows.
+#[derive(Debug, Clone)]
+pub struct RowwiseForm {
+    /// Dense constraint matrix (rows × structural vars).
+    pub a: Matrix,
+    /// Right-hand side.
+    pub b: Vec<f64>,
+    /// Objective over structural vars.
+    pub c: Vec<f64>,
+    /// `true` where the row is an equality.
+    pub eq_mask: Vec<bool>,
+}
+
+impl StandardForm {
+    /// Build the row-wise form used by the PDHG path.
+    pub fn rowwise(p: &LpProblem) -> RowwiseForm {
+        let n = p.num_vars();
+        let m = p.num_constraints();
+        let mut a = Matrix::zeros(m, n);
+        let mut b = vec![0.0; m];
+        let mut eq_mask = vec![false; m];
+        for (i, con) in p.constraints().iter().enumerate() {
+            let sign = match con.cmp {
+                Cmp::Ge => -1.0,
+                _ => 1.0,
+            };
+            for &(v, coef) in &con.coeffs {
+                a[(i, v)] += sign * coef;
+            }
+            b[i] = sign * con.rhs;
+            eq_mask[i] = con.cmp == Cmp::Eq;
+        }
+        RowwiseForm { a, b, c: p.objective().to_vec(), eq_mask }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lp::problem::{Cmp, LpProblem};
+
+    #[test]
+    fn equality_adds_slack_and_surplus() {
+        let mut p = LpProblem::new(2);
+        p.set_objective(&[1.0, 1.0]);
+        p.add_constraint(&[(0, 1.0)], Cmp::Le, 4.0);
+        p.add_constraint(&[(1, 1.0)], Cmp::Ge, 2.0);
+        p.add_constraint(&[(0, 1.0), (1, 1.0)], Cmp::Eq, 5.0);
+        let sf = StandardForm::equality(&p);
+        assert_eq!(sf.a.cols(), 4); // 2 structural + slack + surplus
+        assert_eq!(sf.aux, vec![AuxKind::Slack, AuxKind::Surplus, AuxKind::None]);
+        assert_eq!(sf.a[(0, 2)], 1.0);
+        assert_eq!(sf.a[(1, 3)], -1.0);
+        assert_eq!(sf.b, vec![4.0, 2.0, 5.0]);
+    }
+
+    #[test]
+    fn negative_rhs_flips_row() {
+        let mut p = LpProblem::new(1);
+        // x0 <= -3  (infeasible with x >= 0, but the form is mechanical)
+        p.add_constraint(&[(0, 1.0)], Cmp::Le, -3.0);
+        let sf = StandardForm::equality(&p);
+        assert!(sf.flipped[0]);
+        assert_eq!(sf.aux[0], AuxKind::Surplus); // Le flipped to Ge
+        assert_eq!(sf.b[0], 3.0);
+        assert_eq!(sf.a[(0, 0)], -1.0);
+    }
+
+    #[test]
+    fn rowwise_negates_ge() {
+        let mut p = LpProblem::new(2);
+        p.add_constraint(&[(0, 2.0)], Cmp::Ge, 1.0);
+        p.add_constraint(&[(1, 1.0)], Cmp::Eq, 3.0);
+        let rw = StandardForm::rowwise(&p);
+        assert_eq!(rw.a[(0, 0)], -2.0);
+        assert_eq!(rw.b[0], -1.0);
+        assert_eq!(rw.eq_mask, vec![false, true]);
+    }
+
+    #[test]
+    fn duplicate_indices_sum() {
+        let mut p = LpProblem::new(1);
+        p.add_constraint(&[(0, 1.0), (0, 2.0)], Cmp::Le, 4.0);
+        let sf = StandardForm::equality(&p);
+        assert_eq!(sf.a[(0, 0)], 3.0);
+    }
+}

@@ -1,0 +1,9 @@
+//! `dlt` CLI entrypoint.
+fn main() {
+    dlt::util::logger::init();
+    let args: Vec<String> = std::env::args().collect();
+    if let Err(e) = dlt::cli::run(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

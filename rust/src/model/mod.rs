@@ -1,0 +1,10 @@
+//! System specification: sources, processors, and the job.
+//!
+//! Mirrors the paper's notation: source `S_i` has inverse link speed
+//! `G_i` and release time `R_i`; processor `P_j` has inverse compute
+//! speed `A_j` and price `C_j` per unit busy time; the job has total
+//! size `J`.
+
+pub mod spec;
+
+pub use spec::{Processor, Source, SpecBuilder, SystemSpec};

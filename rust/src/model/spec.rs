@@ -1,0 +1,346 @@
+//! `SystemSpec` and its builder / validation / sorting.
+
+use crate::error::{Error, Result};
+
+/// A load source `S_i`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Source {
+    /// Inverse communication speed `G_i` (time per unit load).
+    pub g: f64,
+    /// Release time `R_i` (when the source first becomes available).
+    pub release: f64,
+    /// Display name.
+    pub name: String,
+}
+
+/// A processing node `P_j`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Processor {
+    /// Inverse computation speed `A_j` (time per unit load).
+    pub a: f64,
+    /// Monetary cost `C_j` per unit of busy time (0 when unused).
+    pub cost_rate: f64,
+    /// Display name.
+    pub name: String,
+}
+
+/// Full system description for one scheduling instance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SystemSpec {
+    /// Sources, expected sorted by ascending `G_i` (paper §3: the
+    /// fastest links distribute first).
+    pub sources: Vec<Source>,
+    /// Processors, expected sorted by ascending `A_j` (paper §2: the
+    /// fastest processors receive load first).
+    pub processors: Vec<Processor>,
+    /// Total job size `J`.
+    pub job: f64,
+}
+
+impl SystemSpec {
+    /// Start building a spec.
+    pub fn builder() -> SpecBuilder {
+        SpecBuilder::default()
+    }
+
+    /// Number of sources `N`.
+    pub fn n(&self) -> usize {
+        self.sources.len()
+    }
+
+    /// Number of processors `M`.
+    pub fn m(&self) -> usize {
+        self.processors.len()
+    }
+
+    /// `G_i` as a vector.
+    pub fn g(&self) -> Vec<f64> {
+        self.sources.iter().map(|s| s.g).collect()
+    }
+
+    /// `R_i` as a vector.
+    pub fn releases(&self) -> Vec<f64> {
+        self.sources.iter().map(|s| s.release).collect()
+    }
+
+    /// `A_j` as a vector.
+    pub fn a(&self) -> Vec<f64> {
+        self.processors.iter().map(|p| p.a).collect()
+    }
+
+    /// `C_j` as a vector.
+    pub fn cost_rates(&self) -> Vec<f64> {
+        self.processors.iter().map(|p| p.cost_rate).collect()
+    }
+
+    /// Validate physical sanity and the paper's ordering conventions.
+    pub fn validate(&self) -> Result<()> {
+        if self.sources.is_empty() {
+            return Err(Error::InvalidSpec("no sources".into()));
+        }
+        if self.processors.is_empty() {
+            return Err(Error::InvalidSpec("no processors".into()));
+        }
+        if !(self.job > 0.0) {
+            return Err(Error::InvalidSpec(format!("job size must be > 0, got {}", self.job)));
+        }
+        for (i, s) in self.sources.iter().enumerate() {
+            if !(s.g > 0.0) || !s.g.is_finite() {
+                return Err(Error::InvalidSpec(format!("source {i}: G = {} must be > 0", s.g)));
+            }
+            if s.release < 0.0 || !s.release.is_finite() {
+                return Err(Error::InvalidSpec(format!(
+                    "source {i}: release = {} must be >= 0",
+                    s.release
+                )));
+            }
+        }
+        for (j, p) in self.processors.iter().enumerate() {
+            if !(p.a > 0.0) || !p.a.is_finite() {
+                return Err(Error::InvalidSpec(format!("processor {j}: A = {} must be > 0", p.a)));
+            }
+            if p.cost_rate < 0.0 {
+                return Err(Error::InvalidSpec(format!(
+                    "processor {j}: cost rate {} must be >= 0",
+                    p.cost_rate
+                )));
+            }
+        }
+        for w in self.sources.windows(2) {
+            if w[0].g > w[1].g + 1e-12 {
+                return Err(Error::InvalidSpec(
+                    "sources must be sorted by ascending G (use sorted())".into(),
+                ));
+            }
+        }
+        for w in self.processors.windows(2) {
+            if w[0].a > w[1].a + 1e-12 {
+                return Err(Error::InvalidSpec(
+                    "processors must be sorted by ascending A (use sorted())".into(),
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Return a copy sorted into the paper's canonical order
+    /// (sources by ascending `G`, processors by ascending `A`), plus
+    /// the permutations mapping sorted index -> original index.
+    pub fn sorted(&self) -> (SystemSpec, Vec<usize>, Vec<usize>) {
+        let mut src_idx: Vec<usize> = (0..self.sources.len()).collect();
+        src_idx.sort_by(|&x, &y| self.sources[x].g.partial_cmp(&self.sources[y].g).unwrap());
+        let mut proc_idx: Vec<usize> = (0..self.processors.len()).collect();
+        proc_idx.sort_by(|&x, &y| self.processors[x].a.partial_cmp(&self.processors[y].a).unwrap());
+        let spec = SystemSpec {
+            sources: src_idx.iter().map(|&i| self.sources[i].clone()).collect(),
+            processors: proc_idx.iter().map(|&j| self.processors[j].clone()).collect(),
+            job: self.job,
+        };
+        (spec, src_idx, proc_idx)
+    }
+
+    /// Restrict to the first `m` processors (they are the fastest when
+    /// sorted) — used by every "vs number of processors" sweep.
+    pub fn with_m_processors(&self, m: usize) -> SystemSpec {
+        assert!(m >= 1 && m <= self.processors.len());
+        SystemSpec {
+            sources: self.sources.clone(),
+            processors: self.processors[..m].to_vec(),
+            job: self.job,
+        }
+    }
+
+    /// Restrict to the first `n` sources.
+    pub fn with_n_sources(&self, n: usize) -> SystemSpec {
+        assert!(n >= 1 && n <= self.sources.len());
+        SystemSpec {
+            sources: self.sources[..n].to_vec(),
+            processors: self.processors.clone(),
+            job: self.job,
+        }
+    }
+
+    /// Copy with a different job size.
+    pub fn with_job(&self, job: f64) -> SystemSpec {
+        SystemSpec { job, ..self.clone() }
+    }
+}
+
+/// Fluent builder for [`SystemSpec`].
+#[derive(Debug, Default, Clone)]
+pub struct SpecBuilder {
+    sources: Vec<Source>,
+    processors: Vec<Processor>,
+    job: f64,
+}
+
+impl SpecBuilder {
+    /// Add a source with inverse link speed `g` and release time.
+    pub fn source(mut self, g: f64, release: f64) -> Self {
+        let name = format!("S{}", self.sources.len() + 1);
+        self.sources.push(Source { g, release, name });
+        self
+    }
+
+    /// Add several sources with the same release time 0.
+    pub fn sources_g(mut self, gs: &[f64]) -> Self {
+        for &g in gs {
+            self = self.source(g, 0.0);
+        }
+        self
+    }
+
+    /// Add a processor with inverse compute speed `a` (free of charge).
+    pub fn processor(self, a: f64) -> Self {
+        self.processor_with_cost(a, 0.0)
+    }
+
+    /// Add a processor with inverse compute speed `a` and price.
+    pub fn processor_with_cost(mut self, a: f64, cost_rate: f64) -> Self {
+        let name = format!("P{}", self.processors.len() + 1);
+        self.processors.push(Processor { a, cost_rate, name });
+        self
+    }
+
+    /// Add several processors from their `A_j` values.
+    pub fn processors(mut self, a: &[f64]) -> Self {
+        for &ai in a {
+            self = self.processor(ai);
+        }
+        self
+    }
+
+    /// Add several priced processors from `(A_j, C_j)` pairs.
+    pub fn priced_processors(mut self, ac: &[(f64, f64)]) -> Self {
+        for &(a, c) in ac {
+            self = self.processor_with_cost(a, c);
+        }
+        self
+    }
+
+    /// Set the job size `J`.
+    pub fn job(mut self, j: f64) -> Self {
+        self.job = j;
+        self
+    }
+
+    /// Finish, validating the result.
+    pub fn build(self) -> Result<SystemSpec> {
+        let spec = SystemSpec { sources: self.sources, processors: self.processors, job: self.job };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Finish without the sorted-order checks (callers that intend to
+    /// call `sorted()` themselves).
+    pub fn build_unsorted(self) -> Result<SystemSpec> {
+        let spec = SystemSpec { sources: self.sources, processors: self.processors, job: self.job };
+        let (sorted, _, _) = spec.sorted();
+        sorted.validate()?;
+        Ok(spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table1_spec() -> SystemSpec {
+        SystemSpec::builder()
+            .source(0.2, 10.0)
+            .source(0.4, 50.0)
+            .processors(&[2.0, 3.0, 4.0, 5.0, 6.0])
+            .job(100.0)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn builder_produces_paper_table1() {
+        let spec = table1_spec();
+        assert_eq!(spec.n(), 2);
+        assert_eq!(spec.m(), 5);
+        assert_eq!(spec.g(), vec![0.2, 0.4]);
+        assert_eq!(spec.releases(), vec![10.0, 50.0]);
+        assert_eq!(spec.a(), vec![2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(spec.job, 100.0);
+    }
+
+    #[test]
+    fn validation_rejects_bad_specs() {
+        assert!(SystemSpec::builder().job(1.0).build().is_err()); // no nodes
+        assert!(SystemSpec::builder().source(0.1, 0.0).job(1.0).build().is_err()); // no procs
+        assert!(SystemSpec::builder()
+            .source(0.1, 0.0)
+            .processor(1.0)
+            .job(0.0)
+            .build()
+            .is_err()); // zero job
+        assert!(SystemSpec::builder()
+            .source(-0.1, 0.0)
+            .processor(1.0)
+            .job(1.0)
+            .build()
+            .is_err()); // negative G
+        assert!(SystemSpec::builder()
+            .source(0.1, -1.0)
+            .processor(1.0)
+            .job(1.0)
+            .build()
+            .is_err()); // negative release
+    }
+
+    #[test]
+    fn validation_enforces_sorting() {
+        let r = SystemSpec::builder()
+            .source(0.4, 0.0)
+            .source(0.2, 0.0)
+            .processor(1.0)
+            .job(1.0)
+            .build();
+        assert!(r.is_err());
+        let r = SystemSpec::builder()
+            .source(0.2, 0.0)
+            .processors(&[3.0, 2.0])
+            .job(1.0)
+            .build();
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn sorted_returns_permutations() {
+        let spec = SystemSpec {
+            sources: vec![
+                Source { g: 0.4, release: 1.0, name: "a".into() },
+                Source { g: 0.2, release: 2.0, name: "b".into() },
+            ],
+            processors: vec![
+                Processor { a: 3.0, cost_rate: 0.0, name: "x".into() },
+                Processor { a: 2.0, cost_rate: 0.0, name: "y".into() },
+            ],
+            job: 10.0,
+        };
+        let (sorted, src_perm, proc_perm) = spec.sorted();
+        assert_eq!(sorted.g(), vec![0.2, 0.4]);
+        assert_eq!(sorted.a(), vec![2.0, 3.0]);
+        assert_eq!(src_perm, vec![1, 0]);
+        assert_eq!(proc_perm, vec![1, 0]);
+        assert!(sorted.validate().is_ok());
+    }
+
+    #[test]
+    fn with_m_processors_takes_prefix() {
+        let spec = table1_spec();
+        let s3 = spec.with_m_processors(3);
+        assert_eq!(s3.a(), vec![2.0, 3.0, 4.0]);
+        assert_eq!(s3.n(), 2);
+    }
+
+    #[test]
+    fn with_n_sources_takes_prefix() {
+        let spec = table1_spec();
+        let s1 = spec.with_n_sources(1);
+        assert_eq!(s1.g(), vec![0.2]);
+        assert_eq!(s1.m(), 5);
+    }
+}

@@ -1,0 +1,21 @@
+//! First-order LP solving path (PDHG / Chambolle–Pock).
+//!
+//! The simplex ([`crate::lp`]) is the exact reference solver; PDHG is
+//! the accelerator for large `N × M` sweeps, compiled AOT from
+//! JAX + Pallas and executed through PJRT ([`crate::runtime`]).
+//!
+//! This module owns everything around the compiled block:
+//! standardization of an [`crate::lp::LpProblem`] to the row-wise
+//! `Ax ≤ b / Ax = b, x ≥ 0` form, padding to the artifact's fixed
+//! shape (with *inert* padding: zero rows with `b = 1`, unit-cost
+//! columns), step-size selection via power iteration, and the
+//! convergence loop. A pure-rust implementation of the identical
+//! iteration ([`rust_impl`]) serves as a baseline and as the fallback
+//! when artifacts have not been built.
+
+pub mod driver;
+pub mod rust_impl;
+pub mod standardize;
+
+pub use driver::{solve_artifact, solve_rust, PdhgOptions, PdhgSolution};
+pub use standardize::PaddedLp;

@@ -1,0 +1,171 @@
+//! Pure-rust PDHG block — bit-for-bit the same iteration as the JAX
+//! artifact (see `python/compile/model.py::pdhg_run`).
+//!
+//! Exists for three reasons: (1) baseline for the artifact benches,
+//! (2) fallback when `make artifacts` has not run, (3) an oracle that
+//! the artifact executes the intended math (integration test compares
+//! the two trajectories).
+
+use crate::pdhg::standardize::PaddedLp;
+
+/// Residuals after a block.
+#[derive(Debug, Clone, Copy)]
+pub struct Residuals {
+    /// Infinity-norm primal feasibility violation.
+    pub primal: f64,
+    /// Dual stationarity violation.
+    pub dual: f64,
+    /// |c'x + b'y|.
+    pub gap: f64,
+}
+
+/// Run `steps` PDHG iterations in place on `(x, y)`.
+pub fn run_block(
+    lp: &PaddedLp,
+    x: &mut [f64],
+    y: &mut [f64],
+    tau: f64,
+    sigma: f64,
+    steps: usize,
+) -> Residuals {
+    let (nv, nc) = (lp.nv, lp.nc);
+    debug_assert_eq!(x.len(), nv);
+    debug_assert_eq!(y.len(), nc);
+    let mut aty = vec![0.0; nv];
+    let mut az = vec![0.0; nc];
+    let mut z = vec![0.0; nv];
+
+    for _ in 0..steps {
+        // aty = A' y
+        matvec_t(&lp.a, nc, nv, y, &mut aty);
+        // x' = max(0, x - tau (c + A'y));  z = 2x' - x
+        for j in 0..nv {
+            let xn = (x[j] - tau * (lp.c[j] + aty[j])).max(0.0);
+            z[j] = 2.0 * xn - x[j];
+            x[j] = xn;
+        }
+        // y' = proj(y + sigma (A z - b))
+        matvec(&lp.a, nc, nv, &z, &mut az);
+        for i in 0..nc {
+            let yn = y[i] + sigma * (az[i] - lp.b[i]);
+            y[i] = if lp.eq_mask[i] > 0.5 { yn } else { yn.max(0.0) };
+        }
+    }
+    residuals(lp, x, y)
+}
+
+/// KKT residuals at `(x, y)`.
+pub fn residuals(lp: &PaddedLp, x: &[f64], y: &[f64]) -> Residuals {
+    let (nv, nc) = (lp.nv, lp.nc);
+    let mut ax = vec![0.0; nc];
+    matvec(&lp.a, nc, nv, x, &mut ax);
+    let mut primal = 0.0f64;
+    for i in 0..nc {
+        let v = ax[i] - lp.b[i];
+        let viol = if lp.eq_mask[i] > 0.5 { v.abs() } else { v.max(0.0) };
+        primal = primal.max(viol);
+    }
+    let mut aty = vec![0.0; nv];
+    matvec_t(&lp.a, nc, nv, y, &mut aty);
+    let mut dual = 0.0f64;
+    for j in 0..nv {
+        dual = dual.max((-(lp.c[j] + aty[j])).max(0.0));
+    }
+    let gap = (crate::linalg::dot(&lp.c, x) + crate::linalg::dot(&lp.b, y)).abs();
+    Residuals { primal, dual, gap }
+}
+
+#[inline]
+fn matvec(a: &[f64], nc: usize, nv: usize, x: &[f64], out: &mut [f64]) {
+    for i in 0..nc {
+        out[i] = crate::linalg::dot(&a[i * nv..(i + 1) * nv], x);
+    }
+}
+
+#[inline]
+fn matvec_t(a: &[f64], nc: usize, nv: usize, y: &[f64], out: &mut [f64]) {
+    out.iter_mut().for_each(|v| *v = 0.0);
+    for i in 0..nc {
+        let yi = y[i];
+        if yi == 0.0 {
+            continue;
+        }
+        let row = &a[i * nv..(i + 1) * nv];
+        for j in 0..nv {
+            out[j] += row[j] * yi;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lp::{solve, Cmp, LpProblem};
+    use crate::pdhg::standardize::PaddedLp;
+
+    fn run_to_convergence(lp: &PaddedLp, max_blocks: usize) -> (Vec<f64>, Residuals) {
+        let tau = 0.9 / lp.a_norm.max(1e-12);
+        let mut x = vec![0.0; lp.nv];
+        let mut y = vec![0.0; lp.nc];
+        let mut res = residuals(lp, &x, &y);
+        for _ in 0..max_blocks {
+            res = run_block(lp, &mut x, &mut y, tau, tau, 200);
+            if res.primal < 1e-8 && res.dual < 1e-8 && res.gap < 1e-7 {
+                break;
+            }
+        }
+        (x, res)
+    }
+
+    #[test]
+    fn converges_to_simplex_optimum() {
+        // min x + 2y st x + y = 3, x <= 2 -> x=2, y=1, obj=4
+        let mut p = LpProblem::new(2);
+        p.set_objective(&[1.0, 2.0]);
+        p.add_constraint(&[(0, 1.0), (1, 1.0)], Cmp::Eq, 3.0);
+        p.add_constraint(&[(0, 1.0)], Cmp::Le, 2.0);
+        let exact = solve(&p).unwrap();
+
+        let pad = PaddedLp::build(&p, 8, 6);
+        let (x, res) = run_to_convergence(&pad, 50);
+        let obj = crate::linalg::dot(&pad.c[..2], &x[..2]);
+        assert!(res.primal < 1e-6, "primal {res:?}");
+        assert!((obj - exact.objective).abs() < 1e-4, "{obj} vs {}", exact.objective);
+    }
+
+    #[test]
+    fn padding_stays_at_zero() {
+        let mut p = LpProblem::new(2);
+        p.set_objective(&[1.0, 1.0]);
+        p.add_constraint(&[(0, 1.0), (1, 1.0)], Cmp::Eq, 1.0);
+        let pad = PaddedLp::build(&p, 16, 8);
+        let (x, _) = run_to_convergence(&pad, 30);
+        for &xi in &x[2..] {
+            assert!(xi.abs() < 1e-9, "padding leaked: {xi}");
+        }
+    }
+
+    #[test]
+    fn matches_dlt_frontend_lp() {
+        // Full §3.1 LP (Table 1 shape) vs simplex.
+        let spec = crate::model::SystemSpec::builder()
+            .source(0.2, 1.0)
+            .source(0.4, 2.0)
+            .processors(&[2.0, 3.0, 4.0])
+            .job(10.0)
+            .build()
+            .unwrap();
+        let lp = crate::dlt::frontend::build_lp(&spec, &Default::default());
+        let exact = solve(&lp).unwrap();
+        let pad = PaddedLp::build(&lp, 16, 16);
+        let (x, res) = run_to_convergence(&pad, 400);
+        assert!(res.primal < 1e-6, "{res:?}");
+        let tf_idx = lp.num_vars() - 1;
+        assert!(
+            (x[tf_idx] - exact.objective).abs() < 5e-3 * exact.objective.max(1.0),
+            "pdhg {} vs simplex {}",
+            x[tf_idx],
+            exact.objective
+        );
+    }
+}

@@ -1,0 +1,175 @@
+//! LP standardization + inert padding for the fixed-shape artifact.
+
+use crate::lp::standard::StandardForm;
+use crate::lp::LpProblem;
+
+/// A padded row-wise LP ready for the PDHG block.
+///
+/// Padding contract (validated by `python/tests/test_pdhg.py::
+/// test_pdhg_padding_is_inert`): padded rows are all-zero with
+/// `b = 1` (slack inequality, dual pinned at 0); padded columns have
+/// cost `+1` and no constraint coefficients (primal pinned at 0).
+#[derive(Debug, Clone)]
+pub struct PaddedLp {
+    /// Row-major `nc × nv` constraint matrix.
+    pub a: Vec<f64>,
+    /// Row-major `nv × nc` transpose.
+    pub at: Vec<f64>,
+    /// RHS, length `nc`.
+    pub b: Vec<f64>,
+    /// Objective, length `nv`.
+    pub c: Vec<f64>,
+    /// Equality-row mask (1.0 = equality), length `nc`.
+    pub eq_mask: Vec<f64>,
+    /// Padded variable count.
+    pub nv: usize,
+    /// Padded row count.
+    pub nc: usize,
+    /// Original (unpadded) variable count.
+    pub nv0: usize,
+    /// Original row count.
+    pub nc0: usize,
+    /// Spectral-norm estimate of the padded matrix.
+    pub a_norm: f64,
+}
+
+impl PaddedLp {
+    /// Standardize `p` and pad to `(nv, nc)`. Panics if the problem is
+    /// larger than the target shape (callers pick the variant first).
+    pub fn build(p: &LpProblem, nv: usize, nc: usize) -> PaddedLp {
+        let rw = StandardForm::rowwise(p);
+        let nv0 = p.num_vars();
+        let nc0 = rw.b.len();
+        assert!(nv0 <= nv, "problem has {nv0} vars, artifact takes {nv}");
+        assert!(nc0 <= nc, "problem has {nc0} rows, artifact takes {nc}");
+
+        let mut a = vec![0.0; nc * nv];
+        for i in 0..nc0 {
+            let row = rw.a.row(i);
+            a[i * nv..i * nv + nv0].copy_from_slice(row);
+        }
+        let mut at = vec![0.0; nv * nc];
+        for i in 0..nc0 {
+            for j in 0..nv0 {
+                at[j * nc + i] = a[i * nv + j];
+            }
+        }
+        let mut b = vec![1.0; nc];
+        b[..nc0].copy_from_slice(&rw.b);
+        let mut c = vec![1.0; nv];
+        c[..nv0].copy_from_slice(&rw.c);
+        let mut eq_mask = vec![0.0; nc];
+        for (i, &is_eq) in rw.eq_mask.iter().enumerate() {
+            eq_mask[i] = if is_eq { 1.0 } else { 0.0 };
+        }
+
+        let a_norm = spectral_norm(&a, nc, nv);
+        PaddedLp { a, at, b, c, eq_mask, nv, nc, nv0, nc0, a_norm }
+    }
+
+    /// Strip padding from a primal iterate.
+    pub fn unpad_x(&self, x: &[f64]) -> Vec<f64> {
+        x[..self.nv0].to_vec()
+    }
+}
+
+/// Power-iteration estimate of the largest singular value of the
+/// row-major `nc × nv` matrix `a`.
+pub fn spectral_norm(a: &[f64], nc: usize, nv: usize) -> f64 {
+    use crate::util::rng::{Pcg32, Rng};
+    let mut rng = Pcg32::new(0x5eed);
+    let mut v: Vec<f64> = (0..nv).map(|_| rng.f64() - 0.5).collect();
+    let norm = crate::linalg::norm2(&v).max(1e-30);
+    v.iter_mut().for_each(|x| *x /= norm);
+    let mut sigma = 0.0;
+    let mut av = vec![0.0; nc];
+    let mut atav = vec![0.0; nv];
+    for _ in 0..60 {
+        for i in 0..nc {
+            av[i] = crate::linalg::dot(&a[i * nv..(i + 1) * nv], &v);
+        }
+        atav.iter_mut().for_each(|x| *x = 0.0);
+        for i in 0..nc {
+            let yi = av[i];
+            if yi != 0.0 {
+                for j in 0..nv {
+                    atav[j] += a[i * nv + j] * yi;
+                }
+            }
+        }
+        let n = crate::linalg::norm2(&atav);
+        if n == 0.0 {
+            return 0.0;
+        }
+        sigma = n.sqrt();
+        for (vi, &ai) in v.iter_mut().zip(atav.iter()) {
+            *vi = ai / n;
+        }
+    }
+    sigma
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lp::{Cmp, LpProblem};
+
+    fn tiny_lp() -> LpProblem {
+        let mut p = LpProblem::new(2);
+        p.set_objective(&[1.0, 2.0]);
+        p.add_constraint(&[(0, 1.0), (1, 1.0)], Cmp::Eq, 3.0);
+        p.add_constraint(&[(0, 1.0)], Cmp::Le, 2.0);
+        p.add_constraint(&[(1, 1.0)], Cmp::Ge, 0.5);
+        p
+    }
+
+    #[test]
+    fn padding_layout() {
+        let p = tiny_lp();
+        let pad = PaddedLp::build(&p, 8, 6);
+        assert_eq!(pad.nv0, 2);
+        assert_eq!(pad.nc0, 3);
+        // Ge row negated by rowwise form.
+        assert_eq!(pad.a[2 * 8 + 1], -1.0);
+        assert_eq!(pad.b[2], -0.5);
+        // Padded rows: zero with b=1.
+        assert!(pad.a[3 * 8..4 * 8].iter().all(|&x| x == 0.0));
+        assert_eq!(pad.b[3], 1.0);
+        // Padded cols: cost 1.
+        assert_eq!(pad.c[5], 1.0);
+        // Eq mask only on row 0.
+        assert_eq!(pad.eq_mask[0], 1.0);
+        assert_eq!(pad.eq_mask[1], 0.0);
+        // Transpose consistency.
+        for i in 0..pad.nc {
+            for j in 0..pad.nv {
+                assert_eq!(pad.a[i * pad.nv + j], pad.at[j * pad.nc + i]);
+            }
+        }
+    }
+
+    #[test]
+    fn spectral_norm_identityish() {
+        // 2x2 diag(3, 1) embedded in 4x4 padding.
+        let mut a = vec![0.0; 16];
+        a[0] = 3.0;
+        a[5] = 1.0;
+        let s = spectral_norm(&a, 4, 4);
+        assert!((s - 3.0).abs() < 1e-6, "{s}");
+    }
+
+    #[test]
+    #[should_panic(expected = "vars")]
+    fn oversize_panics() {
+        let p = LpProblem::new(10);
+        PaddedLp::build(&p, 4, 4);
+    }
+
+    #[test]
+    fn unpad() {
+        let p = tiny_lp();
+        let pad = PaddedLp::build(&p, 8, 6);
+        let x = vec![1.0, 2.0, 9.0, 9.0, 9.0, 9.0, 9.0, 9.0];
+        assert_eq!(pad.unpad_x(&x), vec![1.0, 2.0]);
+    }
+}

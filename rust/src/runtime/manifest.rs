@@ -1,0 +1,139 @@
+//! `artifacts/manifest.json` — metadata emitted by `compile/aot.py`.
+
+use crate::config::json::Json;
+use crate::error::{Error, Result};
+use std::path::Path;
+
+/// A compiled PDHG block variant (padded LP shape).
+#[derive(Debug, Clone)]
+pub struct PdhgVariant {
+    /// Artifact name (cache key).
+    pub name: String,
+    /// File name inside the artifact dir.
+    pub file: String,
+    /// Padded variable count.
+    pub nv: usize,
+    /// Padded constraint-row count.
+    pub nc: usize,
+    /// PDHG iterations per execution.
+    pub steps: usize,
+}
+
+/// A compiled workload-kernel variant.
+#[derive(Debug, Clone)]
+pub struct WorkloadVariant {
+    /// Artifact name (cache key).
+    pub name: String,
+    /// File name inside the artifact dir.
+    pub file: String,
+    /// Chunk rows.
+    pub rows: usize,
+    /// Chunk cols.
+    pub cols: usize,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    /// PDHG variants, ascending by size.
+    pub pdhg: Vec<PdhgVariant>,
+    /// Workload variants.
+    pub workload: Vec<WorkloadVariant>,
+}
+
+impl Manifest {
+    /// Load and parse `manifest.json`.
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::io(path.display().to_string(), e))?;
+        Manifest::parse(&text)
+    }
+
+    /// Parse manifest JSON text.
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let v = Json::parse(text)?;
+        let mut pdhg = Vec::new();
+        for e in v.req("pdhg")?.as_array()? {
+            pdhg.push(PdhgVariant {
+                name: e.req("name")?.as_str()?.to_string(),
+                file: e.req("file")?.as_str()?.to_string(),
+                nv: e.req("nv")?.as_usize()?,
+                nc: e.req("nc")?.as_usize()?,
+                steps: e.req("steps")?.as_usize()?,
+            });
+        }
+        pdhg.sort_by_key(|p| p.nv);
+        let mut workload = Vec::new();
+        for e in v.req("workload")?.as_array()? {
+            workload.push(WorkloadVariant {
+                name: e.req("name")?.as_str()?.to_string(),
+                file: e.req("file")?.as_str()?.to_string(),
+                rows: e.req("rows")?.as_usize()?,
+                cols: e.req("cols")?.as_usize()?,
+            });
+        }
+        Ok(Manifest { pdhg, workload })
+    }
+
+    /// File name for an artifact, if known.
+    pub fn file_for(&self, name: &str) -> Option<&str> {
+        self.pdhg
+            .iter()
+            .find(|p| p.name == name)
+            .map(|p| p.file.as_str())
+            .or_else(|| self.workload.iter().find(|w| w.name == name).map(|w| w.file.as_str()))
+    }
+
+    /// Smallest PDHG variant that fits an `nv × nc` LP.
+    pub fn pdhg_variant_for(&self, nv: usize, nc: usize) -> Option<&PdhgVariant> {
+        self.pdhg.iter().find(|p| p.nv >= nv && p.nc >= nc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "pdhg": [
+        {"name": "pdhg_big", "file": "big.hlo.txt", "nv": 256, "nc": 384, "steps": 200, "dtype": "f64"},
+        {"name": "pdhg_small", "file": "small.hlo.txt", "nv": 128, "nc": 192, "steps": 200, "dtype": "f64"}
+      ],
+      "workload": [
+        {"name": "workload_r128_c128", "file": "w.hlo.txt", "rows": 128, "cols": 128, "dtype": "f32"}
+      ]
+    }"#;
+
+    #[test]
+    fn parse_and_sort() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.pdhg.len(), 2);
+        assert_eq!(m.pdhg[0].name, "pdhg_small", "sorted ascending by nv");
+        assert_eq!(m.workload[0].rows, 128);
+    }
+
+    #[test]
+    fn variant_selection() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.pdhg_variant_for(61, 61).unwrap().name, "pdhg_small");
+        assert_eq!(m.pdhg_variant_for(181, 183).unwrap().name, "pdhg_big");
+        assert!(m.pdhg_variant_for(1000, 10).is_none());
+    }
+
+    #[test]
+    fn file_lookup() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.file_for("pdhg_big").unwrap(), "big.hlo.txt");
+        assert_eq!(m.file_for("workload_r128_c128").unwrap(), "w.hlo.txt");
+        assert!(m.file_for("nope").is_none());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        if let Ok(text) = std::fs::read_to_string("artifacts/manifest.json") {
+            let m = Manifest::parse(&text).unwrap();
+            assert!(!m.pdhg.is_empty());
+            assert!(!m.workload.is_empty());
+        }
+    }
+}

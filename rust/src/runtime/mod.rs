@@ -1,0 +1,132 @@
+//! PJRT artifact runtime.
+//!
+//! Loads the HLO-text artifacts produced by `python/compile/aot.py`,
+//! compiles them once on the PJRT CPU client, caches the executables,
+//! and exposes typed entry points for the PDHG solver block and the
+//! workload kernel. Python never runs at request time — the artifacts
+//! are self-contained.
+//!
+//! NOTE: `xla::PjRtClient` is `Rc`-based and **not `Send`**; a
+//! [`Runtime`] lives and dies on one thread. Threads that need compute
+//! (cluster processors) construct their own `Runtime` locally.
+
+pub mod manifest;
+pub mod pdhg_exec;
+pub mod workload;
+
+pub use manifest::{Manifest, PdhgVariant, WorkloadVariant};
+pub use pdhg_exec::PdhgExecutable;
+pub use workload::WorkloadExecutable;
+
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A loaded PJRT CPU runtime with an executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (reads `manifest.json`, creates the
+    /// PJRT CPU client).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::Runtime(format!("PjRtClient::cpu: {e}")))?;
+        Ok(Runtime { client, dir, manifest, cache: HashMap::new() })
+    }
+
+    /// Default artifact directory: `$DLT_ARTIFACTS` or `./artifacts`.
+    pub fn open_default() -> Result<Runtime> {
+        let dir = std::env::var("DLT_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Runtime::open(dir)
+    }
+
+    /// The manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) the named artifact.
+    pub fn load(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let file = self
+                .manifest
+                .file_for(name)
+                .ok_or_else(|| Error::Artifact(format!("unknown artifact `{name}`")))?;
+            let path = self.dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| Error::Artifact(format!("parse {}: {e}", path.display())))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| Error::Runtime(format!("compile `{name}`: {e}")))?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Execute a cached artifact on literal inputs; returns the
+    /// flattened tuple of output literals.
+    pub fn execute(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.load(name)?;
+        let out = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| Error::Runtime(format!("execute `{name}`: {e}")))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("fetch output of `{name}`: {e}")))?;
+        lit.to_tuple().map_err(|e| Error::Runtime(format!("untuple `{name}`: {e}")))
+    }
+
+    /// True when the artifact directory exists and has a manifest —
+    /// used by tests/benches to skip gracefully before `make artifacts`.
+    pub fn artifacts_available() -> bool {
+        let dir = std::env::var("DLT_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Path::new(&dir).join("manifest.json").exists()
+    }
+}
+
+/// Build an f64 vector literal with shape `dims`.
+pub fn lit_f64(data: &[f64], dims: &[i64]) -> Result<xla::Literal> {
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| Error::Runtime(format!("literal reshape: {e}")))
+}
+
+/// Build an f32 vector literal with shape `dims`.
+pub fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| Error::Runtime(format!("literal reshape: {e}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lit_roundtrip() {
+        let l = lit_f64(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(l.to_vec::<f64>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(Runtime::open("/nonexistent/artifacts").is_err());
+    }
+
+    // Runtime execution tests live in rust/tests/runtime_integration.rs
+    // and are gated on `make artifacts` having run.
+}

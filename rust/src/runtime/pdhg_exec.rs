@@ -1,0 +1,92 @@
+//! Typed wrapper around the PDHG-block artifact.
+
+use crate::error::{Error, Result};
+use crate::runtime::{lit_f64, Runtime};
+
+/// One PDHG block execution's outputs.
+#[derive(Debug, Clone)]
+pub struct PdhgBlockOut {
+    /// Primal iterate (padded length `nv`).
+    pub x: Vec<f64>,
+    /// Dual iterate (padded length `nc`).
+    pub y: Vec<f64>,
+    /// Infinity-norm primal feasibility residual.
+    pub primal_res: f64,
+    /// Dual stationarity residual.
+    pub dual_res: f64,
+    /// |c'x + b'y| duality-gap surrogate.
+    pub gap: f64,
+}
+
+/// A bound PDHG artifact: fixed padded shape, reusable across calls.
+pub struct PdhgExecutable<'rt> {
+    rt: &'rt mut Runtime,
+    name: String,
+    /// Padded variable count.
+    pub nv: usize,
+    /// Padded constraint count.
+    pub nc: usize,
+    /// Iterations per execution.
+    pub steps: usize,
+}
+
+impl<'rt> PdhgExecutable<'rt> {
+    /// Bind the smallest variant that fits `nv × nc`, compiling it.
+    pub fn for_shape(rt: &'rt mut Runtime, nv: usize, nc: usize) -> Result<PdhgExecutable<'rt>> {
+        let var = rt
+            .manifest()
+            .pdhg_variant_for(nv, nc)
+            .ok_or_else(|| {
+                Error::Artifact(format!("no PDHG variant fits nv={nv}, nc={nc}"))
+            })?
+            .clone();
+        rt.load(&var.name)?;
+        Ok(PdhgExecutable { rt, name: var.name, nv: var.nv, nc: var.nc, steps: var.steps })
+    }
+
+    /// Run one block of `steps` iterations.
+    ///
+    /// All slices must already be padded to (`nv`, `nc`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_block(
+        &mut self,
+        a: &[f64],       // nc*nv row-major
+        at: &[f64],      // nv*nc row-major
+        b: &[f64],       // nc
+        c: &[f64],       // nv
+        eq_mask: &[f64], // nc
+        x: &[f64],       // nv
+        y: &[f64],       // nc
+        tau: f64,
+        sigma: f64,
+    ) -> Result<PdhgBlockOut> {
+        let (nv, nc) = (self.nv, self.nc);
+        debug_assert_eq!(a.len(), nc * nv);
+        debug_assert_eq!(at.len(), nv * nc);
+        let inputs = [
+            lit_f64(a, &[nc as i64, nv as i64])?,
+            lit_f64(at, &[nv as i64, nc as i64])?,
+            lit_f64(b, &[nc as i64])?,
+            lit_f64(c, &[nv as i64])?,
+            lit_f64(eq_mask, &[nc as i64])?,
+            lit_f64(x, &[nv as i64])?,
+            lit_f64(y, &[nc as i64])?,
+            xla::Literal::scalar(tau),
+            xla::Literal::scalar(sigma),
+        ];
+        let outs = self.rt.execute(&self.name, &inputs)?;
+        if outs.len() != 5 {
+            return Err(Error::Runtime(format!("pdhg block returned {} outputs", outs.len())));
+        }
+        let x = outs[0].to_vec::<f64>().map_err(wrap)?;
+        let y = outs[1].to_vec::<f64>().map_err(wrap)?;
+        let primal_res = outs[2].to_vec::<f64>().map_err(wrap)?[0];
+        let dual_res = outs[3].to_vec::<f64>().map_err(wrap)?[0];
+        let gap = outs[4].to_vec::<f64>().map_err(wrap)?[0];
+        Ok(PdhgBlockOut { x, y, primal_res, dual_res, gap })
+    }
+}
+
+fn wrap(e: xla::Error) -> Error {
+    Error::Runtime(format!("pdhg output fetch: {e}"))
+}

@@ -1,0 +1,72 @@
+//! Typed wrapper around the workload-kernel artifact — the "real
+//! compute" cluster processors execute per unit of divisible load.
+
+use crate::error::{Error, Result};
+use crate::runtime::{lit_f32, Runtime};
+use crate::util::rng::{Pcg32, Rng};
+
+/// A bound workload artifact plus a reusable input chunk.
+pub struct WorkloadExecutable {
+    rt: Runtime,
+    name: String,
+    /// Chunk rows.
+    pub rows: usize,
+    /// Chunk cols.
+    pub cols: usize,
+    data: Vec<f32>,
+    weights: Vec<f32>,
+}
+
+impl WorkloadExecutable {
+    /// Open the default runtime and bind the first workload variant.
+    /// `seed` generates the synthetic chunk contents deterministically.
+    pub fn open(dir: &str, seed: u64) -> Result<WorkloadExecutable> {
+        let mut rt = Runtime::open(dir)?;
+        let var = rt
+            .manifest()
+            .workload
+            .first()
+            .ok_or_else(|| Error::Artifact("manifest has no workload variants".into()))?
+            .clone();
+        rt.load(&var.name)?;
+        let mut rng = Pcg32::new(seed);
+        let data: Vec<f32> =
+            (0..var.rows * var.cols).map(|_| rng.f64() as f32 - 0.5).collect();
+        let weights: Vec<f32> =
+            (0..var.cols * var.cols).map(|_| rng.f64() as f32 - 0.5).collect();
+        Ok(WorkloadExecutable { rt, name: var.name, rows: var.rows, cols: var.cols, data, weights })
+    }
+
+    /// Execute one work unit; returns a checksum of the scores (so the
+    /// work cannot be optimized away and results can be sanity-checked).
+    pub fn run_unit(&mut self) -> Result<f64> {
+        let inputs = [
+            lit_f32(&self.data, &[self.rows as i64, self.cols as i64])?,
+            lit_f32(&self.weights, &[self.cols as i64, self.cols as i64])?,
+        ];
+        let outs = self.rt.execute(&self.name, &inputs)?;
+        let scores = outs[0]
+            .to_vec::<f32>()
+            .map_err(|e| Error::Runtime(format!("workload output: {e}")))?;
+        Ok(scores.iter().map(|&s| s as f64).sum())
+    }
+
+    /// Execute `n` work units, returning the accumulated checksum.
+    pub fn run_units(&mut self, n: usize) -> Result<f64> {
+        let mut acc = 0.0;
+        for _ in 0..n {
+            acc += self.run_unit()?;
+        }
+        Ok(acc)
+    }
+
+    /// Measure seconds per work unit (for calibrating `A_j` in the
+    /// cluster e2e example).
+    pub fn calibrate(&mut self, units: usize) -> Result<f64> {
+        // One untimed warm-up unit.
+        self.run_unit()?;
+        let t0 = std::time::Instant::now();
+        self.run_units(units.max(1))?;
+        Ok(t0.elapsed().as_secs_f64() / units.max(1) as f64)
+    }
+}

@@ -1,0 +1,394 @@
+//! The discrete-event engine.
+//!
+//! Inputs: a system spec, a β matrix (the *decisions* of a schedule)
+//! and the timing model. The engine re-derives all timing greedily
+//! (ASAP under the paper's sequential-communication rules) and reports
+//! the realized makespan — an independent check of the LP's `T_f`.
+
+use crate::dlt::schedule::TimingModel;
+use crate::model::SystemSpec;
+use crate::sim::event::{EventKind, EventQueue};
+use crate::sim::trace::{Trace, TraceKind};
+use crate::util::rng::{Pcg32, Rng};
+
+/// Simulation options.
+#[derive(Debug, Clone)]
+pub struct SimOptions {
+    /// Timing model to execute under.
+    pub model: TimingModel,
+    /// Multiplicative jitter amplitude on per-fraction link times
+    /// (uniform in `[1−j, 1+j]`). 0 disables.
+    pub link_jitter: f64,
+    /// Multiplicative jitter amplitude on per-processor compute times.
+    pub compute_jitter: f64,
+    /// RNG seed for jitter.
+    pub seed: u64,
+    /// Record a full trace.
+    pub trace: bool,
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        SimOptions {
+            model: TimingModel::NoFrontEnd,
+            link_jitter: 0.0,
+            compute_jitter: 0.0,
+            seed: 0,
+            trace: false,
+        }
+    }
+}
+
+/// Simulation outcome.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// Time the last processor finished computing.
+    pub makespan: f64,
+    /// Per-processor compute completion times.
+    pub compute_done: Vec<f64>,
+    /// Per-fraction realized send start times.
+    pub send_start: Vec<f64>,
+    /// Per-fraction realized send completion times.
+    pub send_done: Vec<f64>,
+    /// Events processed.
+    pub events: u64,
+    /// Optional trace.
+    pub trace: Option<Trace>,
+}
+
+/// Run the simulation for the given β matrix (row-major `N × M`).
+pub fn simulate(spec: &SystemSpec, beta: &[f64], opts: &SimOptions) -> SimResult {
+    let n = spec.n();
+    let m = spec.m();
+    assert_eq!(beta.len(), n * m, "beta shape mismatch");
+    let g = spec.g();
+    let r = spec.releases();
+    let a = spec.a();
+
+    let mut rng = Pcg32::new(opts.seed);
+    // Pre-draw jitter factors deterministically (order-independent).
+    let link_factor: Vec<f64> = (0..n * m)
+        .map(|_| {
+            if opts.link_jitter > 0.0 {
+                1.0 + opts.link_jitter * (2.0 * rng.f64() - 1.0)
+            } else {
+                1.0
+            }
+        })
+        .collect();
+    let compute_factor: Vec<f64> = (0..m)
+        .map(|_| {
+            if opts.compute_jitter > 0.0 {
+                1.0 + opts.compute_jitter * (2.0 * rng.f64() - 1.0)
+            } else {
+                1.0
+            }
+        })
+        .collect();
+
+    let mut q = EventQueue::new();
+    let mut trace = if opts.trace { Some(Trace::default()) } else { None };
+
+    // State.
+    let mut next_j = vec![0usize; n]; // next fraction each source sends
+    let mut src_free_at = r.clone(); // source can't start before release
+    let mut proc_next_src = vec![0usize; m]; // next source each proc expects
+    let mut proc_recv_free_at = vec![0.0f64; m];
+    let mut send_start = vec![0.0f64; n * m];
+    let mut send_done = vec![0.0f64; n * m];
+    let mut compute_done = vec![0.0f64; m];
+    // Front-end streaming state: current end of the compute pipeline.
+    let mut fe_compute_end = vec![0.0f64; m];
+    let mut fe_started = vec![false; m];
+
+    // Try to start send (i, next_j[i]) if the processor is ready for i.
+    // Returns true if the send was scheduled.
+    let try_start = |i: usize,
+                     q: &mut EventQueue,
+                     next_j: &[usize],
+                     proc_next_src: &[usize],
+                     src_free_at: &[f64],
+                     proc_recv_free_at: &[f64],
+                     send_start: &mut [f64],
+                     trace: &mut Option<Trace>|
+     -> bool {
+        let j = next_j[i];
+        if j >= m {
+            return false;
+        }
+        if proc_next_src[j] != i {
+            return false; // processor still expects an earlier source
+        }
+        let start = src_free_at[i].max(proc_recv_free_at[j]);
+        let dur = beta[i * m + j] * g[i] * link_factor[i * m + j];
+        send_start[i * m + j] = start;
+        if let Some(t) = trace.as_mut() {
+            t.push(start, TraceKind::SendStart, i, j);
+        }
+        q.push(start + dur, EventKind::SendComplete { source: i, processor: j });
+        true
+    };
+
+    // Seed: every source tries its first send (only sources whose
+    // processor expects them will schedule; that's exactly S1 on P1,
+    // and later sources block until their predecessor passes).
+    let mut sending = vec![false; n];
+    for i in 0..n {
+        sending[i] = try_start(
+            i,
+            &mut q,
+            &next_j,
+            &proc_next_src,
+            &src_free_at,
+            &proc_recv_free_at,
+            &mut send_start,
+            &mut trace,
+        );
+    }
+
+    let mut events = 0u64;
+    while let Some(ev) = q.pop() {
+        events += 1;
+        match ev.kind {
+            EventKind::SendComplete { source: i, processor: j } => {
+                let t = ev.time;
+                send_done[i * m + j] = t;
+                if let Some(tr) = trace.as_mut() {
+                    tr.push(t, TraceKind::SendComplete, i, j);
+                }
+                src_free_at[i] = t;
+                proc_recv_free_at[j] = t;
+                next_j[i] += 1;
+                proc_next_src[j] += 1;
+                sending[i] = false;
+
+                // Front-end: fraction (i, j) enters the compute pipe.
+                if opts.model == TimingModel::FrontEnd {
+                    let load = beta[i * m + j];
+                    if load > 0.0 {
+                        let arrival_began = send_start[i * m + j];
+                        if !fe_started[j] {
+                            fe_started[j] = true;
+                            fe_compute_end[j] = arrival_began;
+                            if let Some(tr) = trace.as_mut() {
+                                tr.push(arrival_began, TraceKind::ComputeStart, usize::MAX, j);
+                            }
+                        }
+                        // Streaming rule: the pipeline resumes at
+                        // max(pipe end, arrival start), burns load*A,
+                        // and cannot finish before the data finished
+                        // arriving.
+                        let resume = fe_compute_end[j].max(arrival_began);
+                        fe_compute_end[j] =
+                            (resume + load * a[j] * compute_factor[j]).max(t);
+                    }
+                    if proc_next_src[j] == n {
+                        // Last fraction for this processor delivered.
+                        compute_done[j] = fe_compute_end[j];
+                        q.push(fe_compute_end[j], EventKind::ComputeComplete { processor: j });
+                    }
+                } else if proc_next_src[j] == n {
+                    // No front-end: compute starts now (all data here).
+                    let total: f64 = (0..n).map(|s| beta[s * m + j]).sum();
+                    let done = t + total * a[j] * compute_factor[j];
+                    compute_done[j] = done;
+                    if let Some(tr) = trace.as_mut() {
+                        tr.push(t, TraceKind::ComputeStart, usize::MAX, j);
+                    }
+                    q.push(done, EventKind::ComputeComplete { processor: j });
+                }
+
+                // Unblock: this source's next send; and the next source
+                // waiting on processor j.
+                for cand in 0..n {
+                    if !sending[cand] && next_j[cand] < m {
+                        let started = try_start(
+                            cand,
+                            &mut q,
+                            &next_j,
+                            &proc_next_src,
+                            &src_free_at,
+                            &proc_recv_free_at,
+                            &mut send_start,
+                            &mut trace,
+                        );
+                        sending[cand] = started;
+                    }
+                }
+            }
+            EventKind::ComputeComplete { processor: j } => {
+                if let Some(tr) = trace.as_mut() {
+                    tr.push(ev.time, TraceKind::ComputeComplete, usize::MAX, j);
+                }
+            }
+        }
+    }
+
+    let makespan = compute_done.iter().fold(0.0f64, |acc, &x| acc.max(x));
+    SimResult { makespan, compute_done, send_start, send_done, events, trace }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dlt::{frontend, no_frontend, single_source};
+    use crate::model::SystemSpec;
+    use crate::util::float::approx_eq_eps;
+
+    #[test]
+    fn single_source_matches_closed_form() {
+        let g = 0.2;
+        let a = [2.0, 3.0, 4.0];
+        let cf = single_source::solve(g, &a, 100.0, 0.0).unwrap();
+        let spec = SystemSpec::builder()
+            .source(g, 0.0)
+            .processors(&a)
+            .job(100.0)
+            .build()
+            .unwrap();
+        let res = simulate(&spec, &cf.beta, &SimOptions::default());
+        assert!(
+            approx_eq_eps(res.makespan, cf.makespan, 1e-9, 1e-9),
+            "sim {} vs cf {}",
+            res.makespan,
+            cf.makespan
+        );
+    }
+
+    #[test]
+    fn nfe_lp_schedule_is_achievable() {
+        let spec = SystemSpec::builder()
+            .source(0.2, 0.0)
+            .source(0.2, 5.0)
+            .processors(&[2.0, 3.0, 4.0])
+            .job(100.0)
+            .build()
+            .unwrap();
+        let sched = no_frontend::solve(&spec).unwrap();
+        let res = simulate(&spec, &sched.beta, &SimOptions::default());
+        // ASAP execution can only match or beat the LP's T_f (the LP may
+        // stretch windows; ASAP closes gaps).
+        assert!(
+            res.makespan <= sched.makespan + 1e-6,
+            "sim {} > LP {}",
+            res.makespan,
+            sched.makespan
+        );
+    }
+
+    #[test]
+    fn fe_lp_schedule_is_achievable() {
+        let spec = SystemSpec::builder()
+            .source(0.2, 10.0)
+            .source(0.4, 50.0)
+            .processors(&[2.0, 3.0, 4.0, 5.0, 6.0])
+            .job(100.0)
+            .build()
+            .unwrap();
+        let sched = frontend::solve(&spec).unwrap();
+        let res = simulate(
+            &spec,
+            &sched.beta,
+            &SimOptions { model: crate::dlt::schedule::TimingModel::FrontEnd, ..Default::default() },
+        );
+        assert!(
+            res.makespan <= sched.makespan + 1e-6,
+            "sim {} > LP {}",
+            res.makespan,
+            sched.makespan
+        );
+    }
+
+    #[test]
+    fn trace_is_ordered_and_complete() {
+        let spec = SystemSpec::builder()
+            .source(0.2, 0.0)
+            .source(0.3, 1.0)
+            .processors(&[1.0, 2.0])
+            .job(10.0)
+            .build()
+            .unwrap();
+        let sched = no_frontend::solve(&spec).unwrap();
+        let res = simulate(
+            &spec,
+            &sched.beta,
+            &SimOptions { trace: true, ..Default::default() },
+        );
+        let trace = res.trace.unwrap();
+        // 2x2 sends (start+complete) + 2 compute starts + 2 completes.
+        assert_eq!(trace.events.len(), 2 * 2 * 2 + 2 + 2);
+        let mut sorted = trace.events.clone();
+        sorted.sort_by(|x, y| x.time.partial_cmp(&y.time).unwrap());
+        // All events present regardless of emission order.
+        assert_eq!(sorted.len(), trace.events.len());
+    }
+
+    #[test]
+    fn jitter_changes_makespan_deterministically() {
+        let spec = SystemSpec::builder()
+            .source(0.2, 0.0)
+            .source(0.2, 1.0)
+            .processors(&[2.0, 3.0])
+            .job(50.0)
+            .build()
+            .unwrap();
+        let sched = no_frontend::solve(&spec).unwrap();
+        let base = simulate(&spec, &sched.beta, &SimOptions::default());
+        let j1 = simulate(
+            &spec,
+            &sched.beta,
+            &SimOptions { link_jitter: 0.2, compute_jitter: 0.2, seed: 7, ..Default::default() },
+        );
+        let j2 = simulate(
+            &spec,
+            &sched.beta,
+            &SimOptions { link_jitter: 0.2, compute_jitter: 0.2, seed: 7, ..Default::default() },
+        );
+        assert_eq!(j1.makespan, j2.makespan, "same seed, same result");
+        assert!((j1.makespan - base.makespan).abs() > 1e-9, "jitter had no effect");
+    }
+
+    #[test]
+    fn sequential_rules_respected_in_sim() {
+        let spec = SystemSpec::builder()
+            .source(0.2, 0.0)
+            .source(0.25, 0.5)
+            .source(0.3, 1.0)
+            .processors(&[1.0, 1.5, 2.0, 2.5])
+            .job(60.0)
+            .build()
+            .unwrap();
+        let sched = no_frontend::solve(&spec).unwrap();
+        let res = simulate(&spec, &sched.beta, &SimOptions::default());
+        let (n, m) = (3, 4);
+        for i in 0..n {
+            for j in 0..m - 1 {
+                assert!(
+                    res.send_done[i * m + j] <= res.send_start[i * m + j + 1] + 1e-9,
+                    "source {i} overlap"
+                );
+            }
+        }
+        for j in 0..m {
+            for i in 0..n - 1 {
+                assert!(
+                    res.send_done[i * m + j] <= res.send_start[(i + 1) * m + j] + 1e-9,
+                    "proc {j} overlap"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn event_count_is_linear() {
+        let spec = SystemSpec::builder()
+            .source(0.2, 0.0)
+            .processors(&[1.0, 2.0, 3.0])
+            .job(10.0)
+            .build()
+            .unwrap();
+        let sched = no_frontend::solve(&spec).unwrap();
+        let res = simulate(&spec, &sched.beta, &SimOptions::default());
+        assert_eq!(res.events, 3 + 3); // 3 sends + 3 computes
+    }
+}

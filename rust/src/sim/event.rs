@@ -1,0 +1,129 @@
+//! Event queue for the discrete-event engine.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Events the engine processes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// Source `i` finished transmitting fraction `(i, j)`.
+    SendComplete { source: usize, processor: usize },
+    /// Processor `j` finished computing everything assigned to it.
+    ComputeComplete { processor: usize },
+}
+
+/// A timestamped event.
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    /// Simulation time.
+    pub time: f64,
+    /// Tie-break sequence number (FIFO among equal times).
+    pub seq: u64,
+    /// Payload.
+    pub kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Min-heap: earlier time first; FIFO on ties. BinaryHeap is a
+        // max-heap, so reverse.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .expect("NaN event time")
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Monotonic event queue.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Event>,
+    next_seq: u64,
+    /// Total events ever pushed (for engine metrics).
+    pub pushed: u64,
+}
+
+impl EventQueue {
+    /// Empty queue.
+    pub fn new() -> EventQueue {
+        EventQueue::default()
+    }
+
+    /// Schedule an event.
+    pub fn push(&mut self, time: f64, kind: EventKind) {
+        debug_assert!(time.is_finite(), "non-finite event time");
+        self.heap.push(Event { time, seq: self.next_seq, kind });
+        self.next_seq += 1;
+        self.pushed += 1;
+    }
+
+    /// Pop the earliest event.
+    pub fn pop(&mut self) -> Option<Event> {
+        self.heap.pop()
+    }
+
+    /// Number of pending events.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// True when no events remain.
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn orders_by_time() {
+        let mut q = EventQueue::new();
+        q.push(3.0, EventKind::ComputeComplete { processor: 0 });
+        q.push(1.0, EventKind::SendComplete { source: 0, processor: 0 });
+        q.push(2.0, EventKind::SendComplete { source: 0, processor: 1 });
+        assert_eq!(q.pop().unwrap().time, 1.0);
+        assert_eq!(q.pop().unwrap().time, 2.0);
+        assert_eq!(q.pop().unwrap().time, 3.0);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn fifo_on_ties() {
+        let mut q = EventQueue::new();
+        q.push(1.0, EventKind::SendComplete { source: 0, processor: 0 });
+        q.push(1.0, EventKind::SendComplete { source: 1, processor: 1 });
+        match q.pop().unwrap().kind {
+            EventKind::SendComplete { source, .. } => assert_eq!(source, 0),
+            _ => panic!(),
+        }
+        match q.pop().unwrap().kind {
+            EventKind::SendComplete { source, .. } => assert_eq!(source, 1),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn len_tracking() {
+        let mut q = EventQueue::new();
+        assert!(q.is_empty());
+        q.push(1.0, EventKind::ComputeComplete { processor: 0 });
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.pushed, 1);
+    }
+}

@@ -1,0 +1,20 @@
+//! Deterministic discrete-event simulator.
+//!
+//! Executes a [`crate::dlt::Schedule`]'s *decisions* (the β matrix and
+//! the paper's fixed communication orders) under the operational timing
+//! semantics, independently of the LP's own timing variables. The
+//! realized makespan from the simulator is the ground truth the LP
+//! solutions are checked against.
+//!
+//! The engine supports multiplicative jitter on link and compute speeds
+//! (seeded, deterministic) for robustness experiments: how much does
+//! the realized makespan degrade when the real system deviates from
+//! the parameters the schedule was optimized for?
+
+pub mod engine;
+pub mod timevary;
+pub mod event;
+pub mod trace;
+
+pub use engine::{simulate, SimOptions, SimResult};
+pub use trace::{Trace, TraceEvent, TraceKind};

@@ -1,0 +1,271 @@
+//! Extension (paper §8, "processing speed become time-varying"):
+//! piecewise-constant speed profiles and schedule re-evaluation.
+//!
+//! The paper's future work asks what happens when processor speeds
+//! (and link speeds) vary over time, e.g. because other jobs are
+//! injected. This module models a speed profile as a piecewise-
+//! constant *capacity multiplier* `c(t) > 0` (1.0 = nominal): work
+//! that nominally takes `w` time units completes when the integral of
+//! `c` reaches `w`. [`evaluate`] replays a β-matrix under profiles and
+//! reports the realized makespan — quantifying how brittle a schedule
+//! optimized for nominal speeds is under load injection.
+
+use crate::dlt::schedule::TimingModel;
+use crate::model::SystemSpec;
+
+/// Piecewise-constant capacity multiplier.
+#[derive(Debug, Clone)]
+pub struct Profile {
+    /// Breakpoints: `(start_time, multiplier)`; first entry must start
+    /// at 0. Multipliers must be > 0.
+    pub pieces: Vec<(f64, f64)>,
+}
+
+impl Profile {
+    /// Constant nominal capacity.
+    pub fn nominal() -> Profile {
+        Profile { pieces: vec![(0.0, 1.0)] }
+    }
+
+    /// A background job occupies `share` of the node during
+    /// `[from, to)` (capacity drops to `1 − share`).
+    pub fn with_interference(from: f64, to: f64, share: f64) -> Profile {
+        assert!((0.0..1.0).contains(&share), "share in [0,1)");
+        assert!(from >= 0.0 && to > from);
+        let mut pieces = vec![(0.0, 1.0)];
+        if from > 0.0 {
+            pieces.push((from, 1.0 - share));
+        } else {
+            pieces[0].1 = 1.0 - share;
+        }
+        pieces.push((to, 1.0));
+        Profile { pieces }
+    }
+
+    /// Validate invariants.
+    pub fn check(&self) -> Result<(), String> {
+        if self.pieces.is_empty() || self.pieces[0].0 != 0.0 {
+            return Err("profile must start at t = 0".into());
+        }
+        for w in self.pieces.windows(2) {
+            if w[1].0 <= w[0].0 {
+                return Err("breakpoints must increase".into());
+            }
+        }
+        if self.pieces.iter().any(|&(_, c)| c <= 0.0) {
+            return Err("multipliers must be > 0".into());
+        }
+        Ok(())
+    }
+
+    /// Time at which `work` nominal units complete when started at
+    /// `start` under this profile.
+    pub fn finish_time(&self, start: f64, work: f64) -> f64 {
+        debug_assert!(self.check().is_ok());
+        if work <= 0.0 {
+            return start;
+        }
+        let mut remaining = work;
+        let mut t = start;
+        let mut idx = match self.pieces.iter().rposition(|&(s, _)| s <= t) {
+            Some(i) => i,
+            None => 0,
+        };
+        loop {
+            let (_, cap) = self.pieces[idx];
+            let piece_end = self.pieces.get(idx + 1).map(|&(s, _)| s).unwrap_or(f64::INFINITY);
+            let span = piece_end - t;
+            let doable = span * cap;
+            if doable >= remaining {
+                return t + remaining / cap;
+            }
+            remaining -= doable;
+            t = piece_end;
+            idx += 1;
+        }
+    }
+}
+
+/// Result of replaying a schedule under profiles.
+#[derive(Debug, Clone)]
+pub struct TimeVaryResult {
+    /// Realized makespan.
+    pub makespan: f64,
+    /// Per-processor completion times.
+    pub compute_done: Vec<f64>,
+}
+
+/// Replay the β matrix under per-source link profiles and
+/// per-processor compute profiles (sequential protocol, ASAP, same
+/// semantics as [`crate::sim::simulate`] but with time-varying rates).
+pub fn evaluate(
+    spec: &SystemSpec,
+    beta: &[f64],
+    model: TimingModel,
+    link_profiles: &[Profile],
+    compute_profiles: &[Profile],
+) -> TimeVaryResult {
+    let n = spec.n();
+    let m = spec.m();
+    assert_eq!(beta.len(), n * m);
+    assert_eq!(link_profiles.len(), n);
+    assert_eq!(compute_profiles.len(), m);
+    let g = spec.g();
+    let r = spec.releases();
+    let a = spec.a();
+
+    // Greedy replay of the sequential protocol (source order × proc
+    // order is a DAG; a fixed-point sweep suffices and stays simple).
+    let mut ts = vec![0.0; n * m];
+    let mut tf = vec![0.0; n * m];
+    for i in 0..n {
+        for j in 0..m {
+            let mut start = if j == 0 { r[i] } else { tf[i * m + j - 1] };
+            if i > 0 {
+                start = start.max(tf[(i - 1) * m + j]);
+            }
+            ts[i * m + j] = start;
+            tf[i * m + j] = link_profiles[i].finish_time(start, beta[i * m + j] * g[i]);
+        }
+    }
+    let mut compute_done = vec![0.0; m];
+    for j in 0..m {
+        let total: f64 = (0..n).map(|i| beta[i * m + j]).sum();
+        if total <= 0.0 {
+            continue;
+        }
+        match model {
+            TimingModel::NoFrontEnd => {
+                let last = (0..n).fold(0.0f64, |acc, i| acc.max(tf[i * m + j]));
+                compute_done[j] = compute_profiles[j].finish_time(last, total * a[j]);
+            }
+            TimingModel::FrontEnd => {
+                // Stream fraction by fraction.
+                let mut end = 0.0f64;
+                let mut started = false;
+                for i in 0..n {
+                    let amount = beta[i * m + j];
+                    if amount <= 0.0 {
+                        continue;
+                    }
+                    let begin = if started { end.max(ts[i * m + j]) } else { ts[i * m + j] };
+                    started = true;
+                    end = compute_profiles[j]
+                        .finish_time(begin, amount * a[j])
+                        .max(tf[i * m + j]);
+                }
+                compute_done[j] = end;
+            }
+        }
+    }
+    let makespan = compute_done.iter().cloned().fold(0.0, f64::max);
+    TimeVaryResult { makespan, compute_done }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dlt::no_frontend;
+    use crate::model::SystemSpec;
+
+    fn spec() -> SystemSpec {
+        SystemSpec::builder()
+            .source(0.2, 0.0)
+            .source(0.2, 5.0)
+            .processors(&[2.0, 3.0, 4.0])
+            .job(100.0)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn profile_finish_time_math() {
+        let p = Profile::nominal();
+        assert_eq!(p.finish_time(3.0, 4.0), 7.0);
+        // Half capacity from t=2 to t=6: work 4 starting at 0 ->
+        // 2 units done by t=2, remaining 2 at half speed -> 4 more.
+        let p = Profile::with_interference(2.0, 6.0, 0.5);
+        assert!((p.finish_time(0.0, 4.0) - 6.0).abs() < 1e-12);
+        // Work entirely inside the slow window.
+        assert!((p.finish_time(2.0, 1.0) - 4.0).abs() < 1e-12);
+        // Zero work is free.
+        assert_eq!(p.finish_time(1.5, 0.0), 1.5);
+    }
+
+    #[test]
+    fn profile_validation() {
+        assert!(Profile::nominal().check().is_ok());
+        assert!(Profile { pieces: vec![(1.0, 1.0)] }.check().is_err());
+        assert!(Profile { pieces: vec![(0.0, 1.0), (0.0, 0.5)] }.check().is_err());
+        assert!(Profile { pieces: vec![(0.0, 0.0)] }.check().is_err());
+    }
+
+    #[test]
+    fn nominal_profiles_match_des() {
+        let s = spec();
+        let sched = no_frontend::solve(&s).unwrap();
+        let res = evaluate(
+            &s,
+            &sched.beta,
+            TimingModel::NoFrontEnd,
+            &vec![Profile::nominal(); 2],
+            &vec![Profile::nominal(); 3],
+        );
+        let des = crate::sim::simulate(&s, &sched.beta, &Default::default());
+        assert!(
+            (res.makespan - des.makespan).abs() < 1e-9,
+            "timevary {} vs des {}",
+            res.makespan,
+            des.makespan
+        );
+    }
+
+    #[test]
+    fn interference_only_hurts() {
+        let s = spec();
+        let sched = no_frontend::solve(&s).unwrap();
+        let nominal = evaluate(
+            &s,
+            &sched.beta,
+            TimingModel::NoFrontEnd,
+            &vec![Profile::nominal(); 2],
+            &vec![Profile::nominal(); 3],
+        );
+        // A background job steals 60% of P1 during the compute phase.
+        let mut cp = vec![Profile::nominal(); 3];
+        cp[0] = Profile::with_interference(30.0, 90.0, 0.6);
+        let hit = evaluate(
+            &s,
+            &sched.beta,
+            TimingModel::NoFrontEnd,
+            &vec![Profile::nominal(); 2],
+            &cp,
+        );
+        assert!(hit.makespan > nominal.makespan, "{} !> {}", hit.makespan, nominal.makespan);
+        // ...and only P1 is affected.
+        assert!(hit.compute_done[1] - nominal.compute_done[1] < 1e-9);
+    }
+
+    #[test]
+    fn link_interference_delays_downstream() {
+        let s = spec();
+        let sched = no_frontend::solve(&s).unwrap();
+        let mut lp = vec![Profile::nominal(); 2];
+        lp[0] = Profile::with_interference(0.0, 10.0, 0.5);
+        let res = evaluate(
+            &s,
+            &sched.beta,
+            TimingModel::NoFrontEnd,
+            &lp,
+            &vec![Profile::nominal(); 3],
+        );
+        let nominal = evaluate(
+            &s,
+            &sched.beta,
+            TimingModel::NoFrontEnd,
+            &vec![Profile::nominal(); 2],
+            &vec![Profile::nominal(); 3],
+        );
+        assert!(res.makespan > nominal.makespan);
+    }
+}

@@ -1,0 +1,84 @@
+//! Execution traces emitted by the simulator.
+
+/// What happened.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceKind {
+    /// Source began transmitting a fraction.
+    SendStart,
+    /// Source finished transmitting a fraction.
+    SendComplete,
+    /// Processor began computing.
+    ComputeStart,
+    /// Processor finished all its compute.
+    ComputeComplete,
+}
+
+/// One trace record.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceEvent {
+    /// Simulation time.
+    pub time: f64,
+    /// Event kind.
+    pub kind: TraceKind,
+    /// Source index (usize::MAX when not applicable).
+    pub source: usize,
+    /// Processor index.
+    pub processor: usize,
+}
+
+/// Ordered list of trace records.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    /// Records in emission order.
+    pub events: Vec<TraceEvent>,
+}
+
+impl Trace {
+    /// Append a record.
+    pub fn push(&mut self, time: f64, kind: TraceKind, source: usize, processor: usize) {
+        self.events.push(TraceEvent { time, kind, source, processor });
+    }
+
+    /// Verify the trace is time-ordered (within fp wiggle).
+    pub fn is_time_ordered(&self) -> bool {
+        self.events.windows(2).all(|w| w[0].time <= w[1].time + 1e-9)
+    }
+
+    /// Render as a human-readable timeline (for CLI / debugging).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for e in &self.events {
+            let who = match e.kind {
+                TraceKind::SendStart | TraceKind::SendComplete => {
+                    format!("S{} -> P{}", e.source + 1, e.processor + 1)
+                }
+                _ => format!("P{}", e.processor + 1),
+            };
+            out.push_str(&format!("{:10.4}  {:16} {}\n", e.time, format!("{:?}", e.kind), who));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordering_check() {
+        let mut t = Trace::default();
+        t.push(0.0, TraceKind::SendStart, 0, 0);
+        t.push(1.0, TraceKind::SendComplete, 0, 0);
+        assert!(t.is_time_ordered());
+        t.push(0.5, TraceKind::ComputeStart, usize::MAX, 0);
+        assert!(!t.is_time_ordered());
+    }
+
+    #[test]
+    fn render_contains_nodes() {
+        let mut t = Trace::default();
+        t.push(0.0, TraceKind::SendStart, 1, 2);
+        let s = t.render();
+        assert!(s.contains("S2 -> P3"));
+    }
+}

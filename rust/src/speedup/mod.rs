@@ -1,0 +1,107 @@
+//! §5 — Amdahl-style speedup analysis.
+//!
+//! `S(p, n) = T_f(1 source, n processors) / T_f(p sources, n processors)`
+//! (paper eq. 16). The paper's Figure 14/15 sweep uses homogeneous
+//! nodes with the no-front-end solver.
+
+use crate::dlt::no_frontend;
+use crate::error::Result;
+use crate::model::SystemSpec;
+
+/// Speedup of `p` sources over one source at fixed `n` processors
+/// (eq. 16): ratio of single-source to multi-source finish time.
+pub fn speedup(tf_single: f64, tf_multi: f64) -> f64 {
+    tf_single / tf_multi
+}
+
+/// One cell of the Fig. 14/15 sweep.
+#[derive(Debug, Clone)]
+pub struct SpeedupPoint {
+    /// Number of sources used.
+    pub sources: usize,
+    /// Number of processors used.
+    pub processors: usize,
+    /// Optimal finish time.
+    pub tf: f64,
+    /// Speedup vs the single-source system with the same processors.
+    pub speedup: f64,
+}
+
+/// Sweep finish time and speedup over `sources × processors` grids
+/// using the no-front-end solver (paper §5.2).
+pub fn sweep(
+    spec: &SystemSpec,
+    source_counts: &[usize],
+    max_processors: usize,
+) -> Result<Vec<SpeedupPoint>> {
+    let mut out = Vec::new();
+    for &m in &(1..=max_processors).collect::<Vec<_>>() {
+        // Single-source baseline for this m.
+        let base = no_frontend::solve(&spec.with_n_sources(1).with_m_processors(m))?;
+        for &p in source_counts {
+            let tf = if p == 1 {
+                base.makespan
+            } else {
+                no_frontend::solve(&spec.with_n_sources(p).with_m_processors(m))?.makespan
+            };
+            out.push(SpeedupPoint {
+                sources: p,
+                processors: m,
+                tf,
+                speedup: speedup(base.makespan, tf),
+            });
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Paper Table 4: homogeneous G=0.5, R=0, A=2.
+    fn table4_spec(n_sources: usize, m_procs: usize) -> SystemSpec {
+        let mut b = SystemSpec::builder();
+        for _ in 0..n_sources {
+            b = b.source(0.5, 0.0);
+        }
+        b.processors(&vec![2.0; m_procs]).job(100.0).build().unwrap()
+    }
+
+    #[test]
+    fn speedup_of_one_source_is_one() {
+        let pts = sweep(&table4_spec(3, 4), &[1], 4).unwrap();
+        for p in pts {
+            assert!((p.speedup - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn more_sources_never_slower() {
+        let pts = sweep(&table4_spec(3, 6), &[1, 2, 3], 6).unwrap();
+        for m in 1..=6 {
+            let at = |src: usize| {
+                pts.iter()
+                    .find(|p| p.sources == src && p.processors == m)
+                    .unwrap()
+                    .speedup
+            };
+            assert!(at(2) >= at(1) - 1e-7, "m={m}");
+            assert!(at(3) >= at(2) - 1e-7, "m={m}");
+        }
+    }
+
+    #[test]
+    fn speedup_grows_with_processors() {
+        // Paper Fig. 15: fitted speedup grows with processor count.
+        let pts = sweep(&table4_spec(2, 8), &[2], 8).unwrap();
+        let s1 = pts.iter().find(|p| p.processors == 1).unwrap().speedup;
+        let s8 = pts.iter().find(|p| p.processors == 8).unwrap().speedup;
+        assert!(s8 > s1, "{s8} !> {s1}");
+    }
+
+    #[test]
+    fn speedup_ratio_definition() {
+        assert!((speedup(10.0, 5.0) - 2.0).abs() < 1e-12);
+    }
+}

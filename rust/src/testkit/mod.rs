@@ -1,0 +1,196 @@
+//! Mini property-testing harness (the offline crate set has no
+//! `proptest`/`quickcheck`).
+//!
+//! ```
+//! use dlt::testkit::props;
+//! props("addition commutes", 100, |g| {
+//!     let a = g.f64_in(-1e6, 1e6);
+//!     let b = g.f64_in(-1e6, 1e6);
+//!     if a + b == b + a { Ok(()) } else { Err(format!("{a} {b}")) }
+//! });
+//! ```
+//!
+//! Each case runs with a deterministic seed derived from the property
+//! name and the case index; failures report the seed so a case can be
+//! replayed exactly with [`replay`].
+
+use crate::util::rng::{Pcg32, Rng};
+
+/// Case-local generator handed to each property execution.
+pub struct Gen {
+    rng: Pcg32,
+    /// Seed this case was created from (for failure reports).
+    pub seed: u64,
+}
+
+impl Gen {
+    /// Create from an explicit seed.
+    pub fn from_seed(seed: u64) -> Gen {
+        Gen { rng: Pcg32::new(seed), seed }
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    /// Uniform usize in `[lo, hi)`.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range_usize(lo, hi)
+    }
+
+    /// Random bool.
+    pub fn bool(&mut self) -> bool {
+        self.rng.bool_with(0.5)
+    }
+
+    /// Vector of uniform f64s.
+    pub fn f64_vec(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..len).map(|_| self.f64_in(lo, hi)).collect()
+    }
+
+    /// Sorted (ascending) vector of uniform f64s.
+    pub fn sorted_f64_vec(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        let mut v = self.f64_vec(len, lo, hi);
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v
+    }
+
+    /// Access the raw RNG.
+    pub fn rng(&mut self) -> &mut Pcg32 {
+        &mut self.rng
+    }
+}
+
+fn name_seed(name: &str) -> u64 {
+    // FNV-1a over the property name keeps seeds stable across runs.
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Run `cases` executions of a property. Panics on the first failure,
+/// reporting the case index and seed.
+pub fn props<F>(name: &str, cases: usize, mut property: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let base = name_seed(name);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen::from_seed(seed);
+        if let Err(msg) = property(&mut g) {
+            panic!(
+                "property `{name}` failed at case {case} (seed {seed:#x}): {msg}\n\
+                 replay with: dlt::testkit::replay({seed:#x}, ...)"
+            );
+        }
+    }
+}
+
+/// Replay a single failing case by seed.
+pub fn replay<F>(seed: u64, mut property: F) -> Result<(), String>
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let mut g = Gen::from_seed(seed);
+    property(&mut g)
+}
+
+/// Generate a random *valid, sorted* [`crate::model::SystemSpec`] —
+/// the workhorse generator for scheduling property tests.
+pub fn arb_spec(g: &mut Gen, max_n: usize, max_m: usize) -> crate::model::SystemSpec {
+    let n = g.usize_in(1, max_n + 1);
+    let m = g.usize_in(1, max_m + 1);
+    let gs = g.sorted_f64_vec(n, 0.05, 1.0);
+    let rs = g.sorted_f64_vec(n, 0.0, 3.0);
+    let a = g.sorted_f64_vec(m, 0.5, 5.0);
+    let mut b = crate::model::SystemSpec::builder();
+    for i in 0..n {
+        b = b.source(gs[i], rs[i]);
+    }
+    for j in 0..m {
+        // Paper §6: faster processors cost more; generate descending
+        // cost rates consistent with ascending A.
+        b = b.processor_with_cost(a[j], 30.0 - j as f64);
+    }
+    b.job(g.f64_in(10.0, 200.0)).build().expect("arb_spec generates valid specs")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        props("sort is idempotent", 50, |g| {
+            let len = g.usize_in(0, 20);
+            let mut v = g.f64_vec(len, -100.0, 100.0);
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let w = {
+                let mut w = v.clone();
+                w.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                w
+            };
+            if v == w {
+                Ok(())
+            } else {
+                Err("not idempotent".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always fails`")]
+    fn failing_property_panics_with_seed() {
+        props("always fails", 5, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut first = Vec::new();
+        props("capture", 5, |g| {
+            first.push(g.f64_in(0.0, 1.0));
+            Ok(())
+        });
+        let mut second = Vec::new();
+        props("capture", 5, |g| {
+            second.push(g.f64_in(0.0, 1.0));
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn replay_reproduces() {
+        let mut g1 = Gen::from_seed(0xabc);
+        let x1 = g1.f64_in(0.0, 1.0);
+        let ok = replay(0xabc, |g| {
+            let x = g.f64_in(0.0, 1.0);
+            if x == x1 {
+                Ok(())
+            } else {
+                Err("mismatch".into())
+            }
+        });
+        assert!(ok.is_ok());
+    }
+
+    #[test]
+    fn sorted_vec_is_sorted() {
+        let mut g = Gen::from_seed(1);
+        let v = g.sorted_f64_vec(50, 0.0, 10.0);
+        assert!(v.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn arb_spec_always_valid() {
+        props("arb_spec validates", 100, |g| {
+            let spec = arb_spec(g, 5, 8);
+            spec.validate().map_err(|e| format!("{e}"))
+        });
+    }
+}

@@ -1,0 +1,75 @@
+//! Floating-point comparison helpers.
+//!
+//! Scheduling quantities in this crate span roughly 1e-6 .. 1e5, so the
+//! default comparison is *relative* with an absolute floor.
+
+/// Default relative tolerance used across the crate's checks.
+pub const DEFAULT_REL_TOL: f64 = 1e-9;
+/// Default absolute floor (values below this are "equal to zero").
+pub const DEFAULT_ABS_TOL: f64 = 1e-9;
+
+/// Relative difference `|a-b| / max(|a|, |b|, 1)`.
+pub fn relative_diff(a: f64, b: f64) -> f64 {
+    let scale = a.abs().max(b.abs()).max(1.0);
+    (a - b).abs() / scale
+}
+
+/// Approximate equality with the crate default tolerances.
+pub fn approx_eq(a: f64, b: f64) -> bool {
+    approx_eq_eps(a, b, DEFAULT_REL_TOL, DEFAULT_ABS_TOL)
+}
+
+/// Approximate equality with explicit relative/absolute tolerances.
+pub fn approx_eq_eps(a: f64, b: f64, rel: f64, abs: f64) -> bool {
+    let d = (a - b).abs();
+    if d <= abs {
+        return true;
+    }
+    d <= rel * a.abs().max(b.abs())
+}
+
+/// `a <= b` up to tolerance (used by schedule validators).
+pub fn leq_eps(a: f64, b: f64, eps: f64) -> bool {
+    a <= b + eps
+}
+
+/// Clamp tiny negatives (LP roundoff) to zero; leave other values alone.
+pub fn snap_nonneg(x: f64, eps: f64) -> f64 {
+    if x < 0.0 && x > -eps {
+        0.0
+    } else {
+        x
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn approx_eq_basic() {
+        assert!(approx_eq(1.0, 1.0 + 1e-12));
+        assert!(!approx_eq(1.0, 1.001));
+        assert!(approx_eq(0.0, 1e-12));
+        assert!(approx_eq(1e9, 1e9 * (1.0 + 1e-10)));
+    }
+
+    #[test]
+    fn leq_with_tolerance() {
+        assert!(leq_eps(1.0, 1.0 - 1e-12, 1e-9));
+        assert!(!leq_eps(1.0, 0.9, 1e-9));
+    }
+
+    #[test]
+    fn snap_behavior() {
+        assert_eq!(snap_nonneg(-1e-12, 1e-9), 0.0);
+        assert_eq!(snap_nonneg(-1.0, 1e-9), -1.0);
+        assert_eq!(snap_nonneg(2.0, 1e-9), 2.0);
+    }
+
+    #[test]
+    fn relative_diff_scales() {
+        assert!(relative_diff(1000.0, 1001.0) < 2e-3);
+        assert!(relative_diff(0.0, 0.0) == 0.0);
+    }
+}

@@ -1,0 +1,72 @@
+//! Minimal `log` facade backend (stderr, level from `DLT_LOG`).
+//!
+//! The vendored `log` crate is built without its `std` feature, so a
+//! `&'static` logger with an atomic level is used instead of
+//! `set_boxed_logger`.
+
+use log::{Level, LevelFilter, Log, Metadata, Record};
+use std::io::Write;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Once;
+
+static LEVEL: AtomicU8 = AtomicU8::new(2); // warn
+
+fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        1 => Level::Error,
+        2 => Level::Warn,
+        3 => Level::Info,
+        4 => Level::Debug,
+        _ => Level::Trace,
+    }
+}
+
+struct StderrLogger;
+
+impl Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= level()
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let mut err = std::io::stderr().lock();
+        let _ = writeln!(err, "[{:5} {}] {}", record.level(), record.target(), record.args());
+    }
+
+    fn flush(&self) {}
+}
+
+static LOGGER: StderrLogger = StderrLogger;
+static INIT: Once = Once::new();
+
+/// Initialize logging once. Level comes from `DLT_LOG`
+/// (`error|warn|info|debug|trace`, default `warn`). Safe to call many
+/// times; only the first call installs the logger.
+pub fn init() {
+    INIT.call_once(|| {
+        let lvl = match std::env::var("DLT_LOG").as_deref() {
+            Ok("error") => 1,
+            Ok("info") => 3,
+            Ok("debug") => 4,
+            Ok("trace") => 5,
+            _ => 2,
+        };
+        LEVEL.store(lvl, Ordering::Relaxed);
+        if log::set_logger(&LOGGER).is_ok() {
+            log::set_max_level(level().to_level_filter().min(LevelFilter::Trace));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_idempotent() {
+        super::init();
+        super::init();
+        log::warn!("logger smoke test");
+    }
+}

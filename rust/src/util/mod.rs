@@ -1,0 +1,15 @@
+//! Numeric and infrastructure utilities: PRNG, statistics, float
+//! comparison, logging.
+//!
+//! The offline crate set for this build has no `rand`, `approx` or
+//! `env_logger`, so these are small from-scratch implementations with
+//! interfaces mirroring the familiar crates.
+
+pub mod float;
+pub mod logger;
+pub mod rng;
+pub mod stats;
+
+pub use float::{approx_eq, approx_eq_eps, relative_diff};
+pub use rng::{Pcg32, Rng, SplitMix64};
+pub use stats::{OnlineStats, Summary};

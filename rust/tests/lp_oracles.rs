@@ -1,0 +1,146 @@
+//! Cross-solver oracle tests for the LP substrate:
+//! simplex vs (a) the §2 closed form, (b) brute-force vertex
+//! enumeration on tiny problems, (c) duality relations.
+
+use dlt::dlt::single_source;
+use dlt::lp::{solve, Cmp, LpProblem};
+use dlt::model::SystemSpec;
+use dlt::testkit::props;
+
+/// §2 closed form == LP-NFE with N = 1, R = 0, across random systems.
+#[test]
+fn closed_form_equals_lp() {
+    props("closed form == lp", 40, |g| {
+        let m = g.usize_in(1, 8);
+        let a = g.sorted_f64_vec(m, 0.5, 5.0);
+        let gg = g.f64_in(0.05, 1.0);
+        let job = g.f64_in(10.0, 200.0);
+        let cf = single_source::solve(gg, &a, job, 0.0).map_err(|e| format!("{e}"))?;
+        let mut b = SystemSpec::builder().source(gg, 0.0);
+        for &ai in &a {
+            b = b.processor(ai);
+        }
+        let spec = b.job(job).build().map_err(|e| format!("{e}"))?;
+        let lp = dlt::dlt::no_frontend::solve(&spec).map_err(|e| format!("{e}"))?;
+        let rel = (cf.makespan - lp.makespan).abs() / cf.makespan;
+        if rel < 1e-6 {
+            Ok(())
+        } else {
+            Err(format!("cf {} vs lp {}", cf.makespan, lp.makespan))
+        }
+    });
+}
+
+/// The closed-form recursion equals the direct linear-system solve.
+#[test]
+fn recursion_equals_linear_system() {
+    props("recursion == linsys", 50, |g| {
+        let m = g.usize_in(1, 10);
+        let a = g.sorted_f64_vec(m, 0.3, 6.0);
+        let gg = g.f64_in(0.05, 1.5);
+        let job = g.f64_in(1.0, 500.0);
+        let cf = single_source::solve(gg, &a, job, 0.0).map_err(|e| format!("{e}"))?;
+        let (beta, tf) =
+            single_source::solve_linear_system(gg, &a, job).map_err(|e| format!("{e}"))?;
+        if (cf.makespan - tf).abs() > 1e-7 * tf {
+            return Err(format!("tf {} vs {}", cf.makespan, tf));
+        }
+        for (b1, b2) in cf.beta.iter().zip(beta.iter()) {
+            if (b1 - b2).abs() > 1e-7 * job {
+                return Err(format!("beta {:?} vs {:?}", cf.beta, beta));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Brute force over a fine grid on 2-variable LPs never beats the
+/// simplex optimum.
+#[test]
+fn brute_force_never_beats_simplex() {
+    props("grid never beats simplex", 25, |g| {
+        // min c'x st a1'x >= b1, a2'x <= b2 over x in [0, 10]^2
+        let c = [g.f64_in(0.1, 3.0), g.f64_in(0.1, 3.0)];
+        let a1 = [g.f64_in(0.1, 2.0), g.f64_in(0.1, 2.0)];
+        let b1 = g.f64_in(0.5, 5.0);
+        let a2 = [g.f64_in(0.1, 2.0), g.f64_in(0.1, 2.0)];
+        let b2 = g.f64_in(6.0, 30.0);
+        let mut p = LpProblem::new(2);
+        p.set_objective(&c);
+        p.add_constraint(&[(0, a1[0]), (1, a1[1])], Cmp::Ge, b1);
+        p.add_constraint(&[(0, a2[0]), (1, a2[1])], Cmp::Le, b2);
+        // Keep the box to make the grid exhaustive.
+        p.add_constraint(&[(0, 1.0)], Cmp::Le, 10.0);
+        p.add_constraint(&[(1, 1.0)], Cmp::Le, 10.0);
+        let Ok(s) = solve(&p) else { return Ok(()) };
+        let n = 220;
+        for i in 0..=n {
+            for j in 0..=n {
+                let x = [10.0 * i as f64 / n as f64, 10.0 * j as f64 / n as f64];
+                if p.check_feasible(&x, 1e-9).is_none() {
+                    let obj = c[0] * x[0] + c[1] * x[1];
+                    if obj < s.objective - 1e-6 {
+                        return Err(format!("grid point {x:?} beats simplex: {obj} < {}", s.objective));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Weak duality on random feasible LPs: for any dual-feasible y,
+/// b'y <= c'x*, with equality at the simplex optimum (strong duality).
+#[test]
+fn strong_duality_on_random_lps() {
+    props("strong duality", 30, |g| {
+        let n = g.usize_in(2, 6);
+        let m = g.usize_in(1, 4);
+        let mut p = LpProblem::new(n);
+        let c = g.f64_vec(n, 0.1, 2.0);
+        p.set_objective(&c);
+        let mut rhs = Vec::new();
+        for _ in 0..m {
+            let coeffs: Vec<(usize, f64)> =
+                (0..n).map(|v| (v, g.f64_in(0.1, 1.0))).collect();
+            let b = g.f64_in(0.5, 3.0);
+            p.add_constraint(&coeffs, Cmp::Ge, b);
+            rhs.push(b);
+        }
+        let s = solve(&p).map_err(|e| format!("{e}"))?;
+        let Some(y) = s.duals.as_ref() else { return Ok(()) };
+        let by: f64 = y.iter().zip(rhs.iter()).map(|(yi, bi)| yi * bi).sum();
+        if (by - s.objective).abs() < 1e-5 * s.objective.abs().max(1.0) {
+            Ok(())
+        } else {
+            Err(format!("b'y {} != c'x {}", by, s.objective))
+        }
+    });
+}
+
+/// Presolve never changes the optimum.
+#[test]
+fn presolve_preserves_optimum() {
+    props("presolve invariant", 30, |g| {
+        let n = g.usize_in(2, 6);
+        let mut p = LpProblem::new(n);
+        p.set_objective(&g.f64_vec(n, 0.1, 2.0));
+        let rows = g.usize_in(1, 5);
+        for _ in 0..rows {
+            let coeffs: Vec<(usize, f64)> =
+                (0..n).map(|v| (v, g.f64_in(0.1, 1.0))).collect();
+            p.add_constraint(&coeffs, Cmp::Ge, g.f64_in(0.5, 3.0));
+        }
+        // Inject noise rows that presolve should remove.
+        p.add_constraint(&[], Cmp::Le, 1.0);
+        p.add_constraint(&[(0, 0.0)], Cmp::Le, 5.0);
+        let (q, _) = dlt::lp::presolve::presolve(&p).map_err(|e| format!("{e}"))?;
+        let s0 = solve(&p).map_err(|e| format!("{e}"))?;
+        let s1 = solve(&q).map_err(|e| format!("{e}"))?;
+        if (s0.objective - s1.objective).abs() < 1e-7 * s0.objective.abs().max(1.0) {
+            Ok(())
+        } else {
+            Err(format!("{} vs {}", s0.objective, s1.objective))
+        }
+    });
+}

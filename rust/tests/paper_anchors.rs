@@ -1,0 +1,127 @@
+//! Paper-anchor checks: every number the paper prints in its text is
+//! asserted here against our reproduction (shape-level tolerance; our
+//! substrate is not the authors' machine, but these are all
+//! machine-independent LP optima, so most match tightly).
+
+use dlt::cost::TradeoffTable;
+use dlt::dlt::{frontend, no_frontend};
+use dlt::experiments::{params, run};
+
+/// §6.2 / Fig. 16: Cost(6) = 3433.77, Cost(7) = 3451.67 dollars.
+#[test]
+fn fig16_cost_anchors() {
+    let sweep = TradeoffTable::sweep(&params::table5()).unwrap();
+    assert!((sweep.at(6).cost - 3433.77).abs() < 0.5, "cost(6) = {}", sweep.at(6).cost);
+    assert!((sweep.at(7).cost - 3451.67).abs() < 0.5, "cost(7) = {}", sweep.at(7).cost);
+}
+
+/// §6.2 / Fig. 18: |gradient(5)| ≈ 8.4 %, |gradient(6)| ≈ 5.3 %.
+#[test]
+fn fig18_gradient_anchors() {
+    let sweep = TradeoffTable::sweep(&params::table5()).unwrap();
+    let g5 = sweep.gradients[3].abs() * 100.0;
+    let g6 = sweep.gradients[4].abs() * 100.0;
+    assert!((g5 - 8.4).abs() < 1.0, "gradient(5) = {g5}%");
+    assert!((g6 - 5.3).abs() < 1.0, "gradient(6) = {g6}%");
+}
+
+/// §6.2: with a cost budget of $3450 the feasible counts are m <= 6,
+/// and the 6% gradient rule recommends 5 processors.
+#[test]
+fn section_6_2_worked_example() {
+    use dlt::cost::{advise, Advice, Budgets};
+    let sweep = TradeoffTable::sweep(&params::table5()).unwrap();
+    assert!(sweep.at(6).cost <= 3450.0);
+    assert!(sweep.at(7).cost > 3450.0);
+    match advise(
+        &sweep,
+        &Budgets { cost: Some(3450.0), time: None, gradient_threshold: 0.06 },
+    ) {
+        Advice::Use { m, .. } => assert_eq!(m, 5),
+        other => panic!("{other:?}"),
+    }
+}
+
+/// §5.2 / Fig. 15: speedups at 12 processors for 2/3/5/10 sources are
+/// ≈ 1.59 / 1.90 / 2.21 / 2.49, and the quoted relative improvements
+/// (3 vs 2 sources ≈ +19%, 10 vs 2 ≈ +57%) hold.
+#[test]
+fn fig15_speedup_anchors() {
+    let t = run("fig15").unwrap();
+    let r = 11; // m = 12
+    let s2 = t.at(r, "speedup_2src");
+    let s3 = t.at(r, "speedup_3src");
+    let s5 = t.at(r, "speedup_5src");
+    let s10 = t.at(r, "speedup_10src");
+    for (got, paper) in [(s2, 1.59), (s3, 1.90), (s5, 2.21), (s10, 2.49)] {
+        assert!((got - paper).abs() / paper < 0.15, "got {got}, paper {paper}");
+    }
+    let improvement_3v2 = (s3 / s2 - 1.0) * 100.0;
+    let improvement_10v2 = (s10 / s2 - 1.0) * 100.0;
+    assert!((improvement_3v2 - 19.0).abs() < 6.0, "3v2 = {improvement_3v2}%");
+    assert!((improvement_10v2 - 57.0).abs() < 12.0, "10v2 = {improvement_10v2}%");
+}
+
+/// §4.3 / Fig. 13: at J = 500, going from 3 to 7 processors saves
+/// about 50 % of the finish time.
+#[test]
+fn fig13_headline_saving() {
+    let t = run("fig13").unwrap();
+    let tf3 = t.at(2, "tf_J500");
+    let tf7 = t.at(6, "tf_J500");
+    let saving = (1.0 - tf7 / tf3) * 100.0;
+    assert!((saving - 50.0).abs() < 10.0, "saving = {saving}% (paper ~50%)");
+}
+
+/// Fig. 12's qualitative claims: T_f decreases in both N and M with
+/// diminishing returns in M.
+#[test]
+fn fig12_shape() {
+    let t = run("fig12").unwrap();
+    for col in ["tf_1src", "tf_2src", "tf_3src"] {
+        let tf = t.column(col);
+        assert!(tf.windows(2).all(|w| w[1] <= w[0] + 1e-6), "{col} not decreasing");
+        // Diminishing returns: late deltas smaller than early ones.
+        let d_early = tf[0] - tf[4];
+        let d_late = tf[14] - tf[18];
+        assert!(d_late < d_early, "{col}: no diminishing returns");
+    }
+    for r in 0..t.rows.len() {
+        assert!(t.at(r, "tf_3src") <= t.at(r, "tf_2src") + 1e-6);
+        assert!(t.at(r, "tf_2src") <= t.at(r, "tf_1src") + 1e-6);
+    }
+}
+
+/// Fig. 19 / 20: the budget-overlap and no-overlap cases.
+#[test]
+fn fig19_20_solution_areas() {
+    let f19 = run("fig19").unwrap();
+    let both: Vec<f64> = f19.column("within_both");
+    let count = both.iter().filter(|&&b| b > 0.5).count();
+    assert_eq!(count, 7, "m = 6..=12 feasible");
+    let f20 = run("fig20").unwrap();
+    assert!(f20.column("within_both").iter().all(|&b| b < 0.5));
+}
+
+/// Table 1 front-end solve: release constraint binds exactly as the
+/// paper's eq. 3 demands (β_{1,1} A_1 >= R_2 − R_1 = 40).
+#[test]
+fn table1_release_binding() {
+    let spec = params::table1();
+    let s = frontend::solve(&spec).unwrap();
+    assert!(s.beta(0, 0) * 2.0 >= 40.0 - 1e-6);
+    // And the schedule validates.
+    let rep = dlt::dlt::validate(&spec, &s);
+    assert!(rep.is_valid(), "{:?}", rep.violations);
+}
+
+/// Table 2's published shape: without front-ends both sources feed
+/// P1 more than the slower processors, and everything normalizes.
+#[test]
+fn table2_no_frontend_shape() {
+    let spec = params::table2();
+    let s = no_frontend::solve(&spec).unwrap();
+    assert!((s.total_load() - 100.0).abs() < 1e-6);
+    assert!(s.load_on_processor(0) > s.load_on_processor(1));
+    assert!(s.load_on_processor(1) > s.load_on_processor(2));
+}

@@ -1,0 +1,213 @@
+//! Property tests over the scheduling core (testkit harness):
+//! solver invariants on randomly generated, valid systems.
+
+use dlt::dlt::schedule::TimingModel;
+use dlt::dlt::{frontend, no_frontend, validate};
+use dlt::error::Error;
+use dlt::sim::{simulate, SimOptions};
+use dlt::testkit::{arb_spec, props};
+
+/// Some random specs make the §3.2 LP infeasible (eq. 12 can demand
+/// more first-fraction load than J provides) — that is a legitimate
+/// outcome, not a failure. Everything *returned* must be valid.
+#[test]
+fn prop_nfe_schedules_validate() {
+    props("nfe schedules validate", 60, |g| {
+        let spec = arb_spec(g, 4, 6);
+        match no_frontend::solve(&spec) {
+            Ok(s) => {
+                let rep = validate(&spec, &s);
+                if !rep.is_valid() {
+                    return Err(format!("{:?} on {spec:?}", rep.violations));
+                }
+                if (s.total_load() - spec.job).abs() > 1e-6 * spec.job {
+                    return Err(format!("normalization broke: {}", s.total_load()));
+                }
+                Ok(())
+            }
+            Err(Error::Infeasible(_)) => Ok(()),
+            Err(e) => Err(format!("unexpected error {e}")),
+        }
+    });
+}
+
+#[test]
+fn prop_fe_schedules_validate() {
+    props("fe schedules validate", 60, |g| {
+        let spec = arb_spec(g, 4, 6);
+        match frontend::solve(&spec) {
+            Ok(s) => {
+                let rep = validate(&spec, &s);
+                if !rep.is_valid() {
+                    return Err(format!("{:?} on {spec:?}", rep.violations));
+                }
+                Ok(())
+            }
+            Err(Error::Infeasible(_)) => Ok(()),
+            Err(e) => Err(format!("unexpected error {e}")),
+        }
+    });
+}
+
+/// Front-ends never hurt: FE optimum <= NFE optimum on the same spec.
+#[test]
+fn prop_fe_never_slower_than_nfe() {
+    props("fe <= nfe", 40, |g| {
+        let spec = arb_spec(g, 3, 5);
+        let (Ok(fe), Ok(nfe)) = (frontend::solve(&spec), no_frontend::solve(&spec)) else {
+            return Ok(()); // either model infeasible -> nothing to compare
+        };
+        if fe.makespan <= nfe.makespan + 1e-6 {
+            Ok(())
+        } else {
+            Err(format!("fe {} > nfe {}", fe.makespan, nfe.makespan))
+        }
+    });
+}
+
+/// The DES, executing the LP's β greedily (ASAP), never finishes later
+/// than the LP's own T_f — the LP's timing is achievable.
+#[test]
+fn prop_des_achieves_lp_makespan() {
+    props("des <= lp", 50, |g| {
+        let spec = arb_spec(g, 3, 5);
+        let Ok(s) = no_frontend::solve(&spec) else { return Ok(()) };
+        let res = simulate(&spec, &s.beta, &SimOptions::default());
+        if res.makespan <= s.makespan + 1e-6 {
+            Ok(())
+        } else {
+            Err(format!("sim {} > lp {}", res.makespan, s.makespan))
+        }
+    });
+}
+
+/// NOTE: the §3.1 formulation leans on the paper's stated assumption
+/// that "it always takes a much longer time to compute the data rather
+/// than transfer it" (§3). When a link is *slower* than a processor
+/// (G_i > A_j), a front-end processor can starve mid-stream and the
+/// LP's T_f becomes optimistic (found by this very property — see
+/// DESIGN.md §Paper wrinkles). The property therefore generates specs
+/// in the paper's regime: every G strictly below every A.
+#[test]
+fn prop_des_achieves_fe_makespan() {
+    props("des fe <= lp", 50, |g| {
+        let mut spec = arb_spec(g, 3, 5);
+        let min_a = spec.processors.iter().map(|p| p.a).fold(f64::INFINITY, f64::min);
+        let max_g = spec.sources.iter().map(|s| s.g).fold(0.0f64, f64::max);
+        if max_g > 0.8 * min_a {
+            let scale = 0.8 * min_a / max_g;
+            for s in spec.sources.iter_mut() {
+                s.g *= scale;
+            }
+        }
+        let Ok(s) = frontend::solve(&spec) else { return Ok(()) };
+        let res = simulate(
+            &spec,
+            &s.beta,
+            &SimOptions { model: TimingModel::FrontEnd, ..Default::default() },
+        );
+        if res.makespan <= s.makespan + 1e-6 {
+            Ok(())
+        } else {
+            Err(format!("sim {} > lp {}", res.makespan, s.makespan))
+        }
+    });
+}
+
+/// Adding a (fast) processor never makes the optimum worse.
+#[test]
+fn prop_monotone_in_processors() {
+    props("monotone in m", 30, |g| {
+        let spec = arb_spec(g, 3, 6);
+        if spec.m() < 2 {
+            return Ok(());
+        }
+        let (Ok(full), Ok(fewer)) = (
+            frontend::solve(&spec),
+            frontend::solve(&spec.with_m_processors(spec.m() - 1)),
+        ) else {
+            return Ok(());
+        };
+        if full.makespan <= fewer.makespan + 1e-6 {
+            Ok(())
+        } else {
+            Err(format!("m={}: {} > m={}: {}", spec.m(), full.makespan, spec.m() - 1, fewer.makespan))
+        }
+    });
+}
+
+/// Scaling the job scales the FE schedule linearly when releases are
+/// zero (the LP is homogeneous in (β, T_f) then).
+#[test]
+fn prop_job_scaling_linear_when_no_release() {
+    props("job scaling", 30, |g| {
+        let mut spec = arb_spec(g, 3, 4);
+        for s in spec.sources.iter_mut() {
+            s.release = 0.0;
+        }
+        let k = g.f64_in(1.5, 4.0);
+        let (Ok(s1), Ok(sk)) = (frontend::solve(&spec), frontend::solve(&spec.with_job(spec.job * k)))
+        else {
+            return Ok(());
+        };
+        let rel = (sk.makespan - k * s1.makespan).abs() / (k * s1.makespan);
+        if rel < 1e-6 {
+            Ok(())
+        } else {
+            Err(format!("T_f({k}J) = {} != {k} * {}", sk.makespan, s1.makespan))
+        }
+    });
+}
+
+/// PDHG (rust backend) agrees with the simplex optimum on random FE
+/// scheduling LPs.
+#[test]
+fn prop_pdhg_matches_simplex_on_fe_lps() {
+    props("pdhg == simplex", 12, |g| {
+        let spec = arb_spec(g, 2, 4);
+        let lp = frontend::build_lp(&spec, &Default::default());
+        let Ok(exact) = dlt::lp::solve(&lp) else { return Ok(()) };
+        let nv = lp.num_vars().next_power_of_two().max(32);
+        let nc = (lp.num_constraints() * 2).next_power_of_two().max(32);
+        let sol = dlt::pdhg::solve_rust(&lp, nv, nc, &Default::default())
+            .map_err(|e| format!("{e}"))?;
+        let rel = (sol.objective - exact.objective).abs() / exact.objective.abs().max(1.0);
+        if rel < 5e-3 {
+            Ok(())
+        } else {
+            Err(format!(
+                "pdhg {} vs simplex {} (rel {rel:.2e}, converged={})",
+                sol.objective, exact.objective, sol.converged
+            ))
+        }
+    });
+}
+
+/// Jittered simulations degrade gracefully: makespan under ±j jitter
+/// stays within (1 ± 2j) of nominal.
+#[test]
+fn prop_jitter_bounded_degradation() {
+    props("jitter bounded", 30, |g| {
+        let spec = arb_spec(g, 3, 4);
+        let Ok(s) = no_frontend::solve(&spec) else { return Ok(()) };
+        let j = g.f64_in(0.01, 0.2);
+        let res = simulate(
+            &spec,
+            &s.beta,
+            &SimOptions {
+                link_jitter: j,
+                compute_jitter: j,
+                seed: g.seed,
+                ..Default::default()
+            },
+        );
+        let hi = s.makespan * (1.0 + 2.0 * j) + 1e-9;
+        // Lower bound is loose: jitter can shrink both comm and compute.
+        let lo = s.makespan * (1.0 - 2.0 * j) - 1e-9;
+        if res.makespan <= hi && res.makespan >= lo {
+            Ok(())
+        } else {
+            Err(format!("jitter {j}: {} outside [{lo}, {hi}]", res.makespan))
+        }
+    });
+}

@@ -1,0 +1,91 @@
+//! Integration tests over the PJRT runtime + AOT artifacts.
+//!
+//! Gated: skipped (with a note) when `make artifacts` has not run.
+
+use dlt::dlt::frontend;
+use dlt::lp::{solve, Cmp, LpProblem};
+use dlt::model::SystemSpec;
+use dlt::pdhg::{solve_artifact, solve_rust, PdhgOptions};
+use dlt::runtime::{Runtime, WorkloadExecutable};
+
+fn artifacts_or_skip() -> Option<Runtime> {
+    if !Runtime::artifacts_available() {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::open_default().expect("open runtime"))
+}
+
+#[test]
+fn manifest_lists_expected_variants() {
+    let Some(rt) = artifacts_or_skip() else { return };
+    assert!(!rt.manifest().pdhg.is_empty());
+    assert!(!rt.manifest().workload.is_empty());
+    assert!(rt.manifest().pdhg_variant_for(61, 61).is_some(), "paper sweeps must fit");
+    assert!(rt.manifest().pdhg_variant_for(181, 183).is_some(), "NFE N=3 M=20 must fit");
+}
+
+#[test]
+fn workload_artifact_executes_and_is_deterministic() {
+    if !Runtime::artifacts_available() {
+        eprintln!("SKIP: artifacts/ not built");
+        return;
+    }
+    let mut w1 = WorkloadExecutable::open("artifacts", 7).expect("open workload");
+    let a = w1.run_unit().expect("run");
+    let b = w1.run_unit().expect("run");
+    assert_eq!(a, b, "same chunk -> same checksum");
+    assert!(a.is_finite() && a > 0.0, "relu-sum checksum must be positive, got {a}");
+    // Different seed -> different chunk -> different checksum.
+    let mut w2 = WorkloadExecutable::open("artifacts", 8).expect("open workload");
+    assert_ne!(a, w2.run_unit().expect("run"));
+}
+
+#[test]
+fn pdhg_artifact_matches_rust_backend() {
+    let Some(mut rt) = artifacts_or_skip() else { return };
+    // Small generic LP.
+    let mut p = LpProblem::new(3);
+    p.set_objective(&[3.0, 2.0, 4.0]);
+    p.add_constraint(&[(0, 1.0), (1, 1.0), (2, 1.0)], Cmp::Eq, 10.0);
+    p.add_constraint(&[(0, 1.0)], Cmp::Le, 4.0);
+    p.add_constraint(&[(2, 1.0)], Cmp::Ge, 1.0);
+    let opts = PdhgOptions::default();
+    let art = solve_artifact(&mut rt, &p, &opts).expect("artifact solve");
+    let (nv, nc) = {
+        let v = rt.manifest().pdhg_variant_for(3, 3).unwrap();
+        (v.nv, v.nc)
+    };
+    let rust = solve_rust(&p, nv, nc, &opts).expect("rust solve");
+    assert!(art.converged, "artifact residuals {:?}", art.residuals);
+    // Identical iteration, identical padding, identical step sizes:
+    // trajectories must agree to fp noise.
+    assert!(
+        (art.objective - rust.objective).abs() < 1e-8 * rust.objective.abs().max(1.0),
+        "artifact {} vs rust {}",
+        art.objective,
+        rust.objective
+    );
+}
+
+#[test]
+fn pdhg_artifact_solves_paper_frontend_lp() {
+    let Some(mut rt) = artifacts_or_skip() else { return };
+    // Table 1 system, solved via simplex (exact) and PDHG artifact.
+    let spec = SystemSpec::builder()
+        .source(0.2, 10.0)
+        .source(0.4, 50.0)
+        .processors(&[2.0, 3.0, 4.0, 5.0, 6.0])
+        .job(100.0)
+        .build()
+        .unwrap();
+    let lp = frontend::build_lp(&spec, &Default::default());
+    let exact = solve(&lp).unwrap();
+    let sol = solve_artifact(&mut rt, &lp, &PdhgOptions::default()).expect("artifact");
+    let tf = sol.x[lp.num_vars() - 1];
+    assert!(
+        (tf - exact.objective).abs() < 5e-3 * exact.objective,
+        "PDHG T_f {tf} vs simplex {}",
+        exact.objective
+    );
+}

@@ -1,0 +1,131 @@
+//! Whole-stack integration: CLI flows, config round-trips through the
+//! solvers, experiments CSV emission, cluster-vs-LP fidelity.
+
+use dlt::cluster::{run_cluster, ClusterConfig, Compute};
+use dlt::config::spec::{load_spec, save_spec};
+use dlt::dlt::{frontend, no_frontend};
+use dlt::experiments;
+use dlt::model::SystemSpec;
+
+fn tmpdir(name: &str) -> String {
+    let d = format!("/tmp/dlt_it_{name}_{}", std::process::id());
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn spec_file_roundtrip_through_solver() {
+    let dir = tmpdir("roundtrip");
+    let spec = SystemSpec::builder()
+        .source(0.3, 1.0)
+        .source(0.4, 2.0)
+        .priced_processors(&[(1.0, 20.0), (2.0, 10.0)])
+        .job(50.0)
+        .build()
+        .unwrap();
+    let path = format!("{dir}/spec.json");
+    save_spec(&path, &spec).unwrap();
+    let loaded = load_spec(&path).unwrap();
+    assert_eq!(spec, loaded);
+    let s1 = frontend::solve(&spec).unwrap();
+    let s2 = frontend::solve(&loaded).unwrap();
+    assert_eq!(s1.makespan, s2.makespan);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn cli_experiments_writes_csv() {
+    let dir = tmpdir("csv");
+    let argv: Vec<String> = ["dlt", "experiments", "--exp", "fig10", "--csv-dir", &dir]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    dlt::cli::run(&argv).unwrap();
+    let csv = std::fs::read_to_string(format!("{dir}/fig10.csv")).unwrap();
+    assert!(csv.starts_with("processor,from_S1,from_S2,total"));
+    assert_eq!(csv.lines().count(), 6, "header + 5 processors");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn cli_full_pipeline_on_spec_file() {
+    let dir = tmpdir("pipeline");
+    let path = format!("{dir}/s.json");
+    std::fs::write(
+        &path,
+        r#"{"sources":[{"g":0.2},{"g":0.3,"release":1}],
+            "processors":[{"a":1.5,"cost":12},{"a":2.5,"cost":8}],"job":30}"#,
+    )
+    .unwrap();
+    for cmd in [
+        format!("solve --spec {path}"),
+        format!("solve --spec {path} --model nfe"),
+        format!("simulate --spec {path} --model fe --trace"),
+        format!("tradeoff --spec {path} --budget-cost 2000 --budget-time 50"),
+        format!("speedup --spec {path} --sources 1,2"),
+        format!("cluster --spec {path} --time-scale 0.001"),
+    ] {
+        let argv: Vec<String> = std::iter::once("dlt".to_string())
+            .chain(cmd.split_whitespace().map(String::from))
+            .collect();
+        dlt::cli::run(&argv).unwrap_or_else(|e| panic!("`{cmd}` failed: {e}"));
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn cluster_fidelity_nfe_multi_source() {
+    // A medium system: the realized makespan must track the LP within
+    // scheduler noise.
+    let spec = SystemSpec::builder()
+        .source(0.2, 0.0)
+        .source(0.25, 1.0)
+        .source(0.3, 2.0)
+        .processors(&[1.0, 1.4, 1.9, 2.5])
+        .job(40.0)
+        .build()
+        .unwrap();
+    let sched = no_frontend::solve(&spec).unwrap();
+    let cfg = ClusterConfig { time_scale: 0.004, compute: Compute::Modeled, fe_splits: 8 };
+    let rep = run_cluster(&spec, &sched, &cfg).unwrap();
+    assert!(
+        rep.relative_error.abs() < 0.25,
+        "predicted {} realized {} ({:+.1}%)",
+        rep.predicted_makespan,
+        rep.realized_makespan,
+        rep.relative_error * 100.0
+    );
+    // Load conservation.
+    let total: f64 = rep.proc_load.iter().sum();
+    assert!((total - 40.0).abs() < 1e-9);
+}
+
+#[test]
+fn every_experiment_emits_consistent_csv() {
+    let dir = tmpdir("all_csv");
+    for name in experiments::ALL {
+        let t = experiments::run(name).unwrap();
+        let path = t.write_csv(&dir).unwrap();
+        let content = std::fs::read_to_string(&path).unwrap();
+        let mut lines = content.lines();
+        let header = lines.next().unwrap();
+        assert_eq!(header.split(',').count(), t.columns.len(), "{name}");
+        assert_eq!(lines.count(), t.rows.len(), "{name}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn fe_and_nfe_agree_on_trivial_system() {
+    // One source, one processor: both models reduce to
+    // T_f = R + J G + J A (receive everything, then compute — FE can
+    // stream but the finish-time constraint is identical here).
+    let spec = SystemSpec::builder().source(0.5, 2.0).processor(1.5).job(10.0).build().unwrap();
+    let fe = frontend::solve(&spec).unwrap();
+    let nfe = no_frontend::solve(&spec).unwrap();
+    let expect_nfe = 2.0 + 10.0 * 0.5 + 10.0 * 1.5;
+    assert!((nfe.makespan - expect_nfe).abs() < 1e-6, "nfe {}", nfe.makespan);
+    // FE streams: compute starts at R, bounded by compute time alone.
+    let expect_fe = 2.0 + 10.0 * 1.5;
+    assert!((fe.makespan - expect_fe).abs() < 1e-6, "fe {}", fe.makespan);
+}
