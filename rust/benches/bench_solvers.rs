@@ -1,12 +1,18 @@
-//! Bench: LP solver back-ends — simplex vs pure-rust PDHG vs the AOT
-//! PDHG artifact (PJRT), across growing N × M scheduling instances.
+//! Bench: LP solver back-ends — dense tableau vs sparse revised
+//! simplex (cold and warm-started), plus the pure-rust PDHG and the
+//! AOT PDHG artifact (PJRT), across growing N × M scheduling
+//! instances, and warm/parallel scenario sweeps.
 //!
 //! Not a paper figure; this is the §Perf harness for the solving hot
-//! path (see EXPERIMENTS.md §Perf).
+//! path. With `DLT_BENCH_JSON_DIR=dir` the results land in
+//! `dir/BENCH_solvers.json` so the perf trajectory is tracked across
+//! commits.
 
 use dlt::benchkit::{Bencher, Reporter};
+use dlt::dlt::schedule::TimingModel;
 use dlt::dlt::{frontend, no_frontend};
-use dlt::lp::solve;
+use dlt::experiments::sweep::{job_grid, run_scenarios, SweepOptions};
+use dlt::lp::{solve_with, SimplexOptions, SolverBackend};
 use dlt::model::SystemSpec;
 use dlt::pdhg::{solve_artifact, solve_rust, PdhgOptions};
 use dlt::runtime::Runtime;
@@ -22,19 +28,59 @@ fn spec(n: usize, m: usize) -> SystemSpec {
 
 fn main() {
     let b = Bencher::from_env();
-    let mut rep = Reporter::new("solver backends (simplex vs PDHG vs PDHG artifact)");
+    let mut rep =
+        Reporter::new("solver backends (dense vs revised-sparse vs PDHG)").slug("solvers");
+
+    let dense = SimplexOptions { backend: SolverBackend::DenseTableau, ..Default::default() };
+    let revised = SimplexOptions::default(); // RevisedSparse
 
     for (n, m) in [(2usize, 5usize), (3, 10), (3, 20)] {
         let s = spec(n, m);
         let lp_fe = frontend::build_lp(&s, &Default::default());
         rep.report(
-            &format!("simplex_fe_n{n}_m{m} ({} vars)", lp_fe.num_vars()),
-            b.bench_val(|| solve(&lp_fe).unwrap()),
+            &format!("dense_fe_n{n}_m{m} ({} vars)", lp_fe.num_vars()),
+            b.bench_val(|| solve_with(&lp_fe, &dense).unwrap()),
+        );
+        rep.report(
+            &format!("revised_fe_n{n}_m{m} ({} vars)", lp_fe.num_vars()),
+            b.bench_val(|| solve_with(&lp_fe, &revised).unwrap()),
         );
         let lp_nfe = no_frontend::build_lp(&s, &Default::default());
         rep.report(
-            &format!("simplex_nfe_n{n}_m{m} ({} vars)", lp_nfe.num_vars()),
-            b.bench_val(|| solve(&lp_nfe).unwrap()),
+            &format!("dense_nfe_n{n}_m{m} ({} vars)", lp_nfe.num_vars()),
+            b.bench_val(|| solve_with(&lp_nfe, &dense).unwrap()),
+        );
+        rep.report(
+            &format!("revised_nfe_n{n}_m{m} ({} vars)", lp_nfe.num_vars()),
+            b.bench_val(|| solve_with(&lp_nfe, &revised).unwrap()),
+        );
+    }
+
+    // Warm-started 50-point job sweep vs 50 cold solves on the largest
+    // instance, then the same sweep fanned across all cores.
+    let s = spec(3, 20);
+    let jobs: Vec<f64> = (0..50).map(|k| 100.0 + 4.0 * k as f64).collect();
+    for (tag, model) in
+        [("fe", TimingModel::FrontEnd), ("nfe", TimingModel::NoFrontEnd)]
+    {
+        let grid = job_grid(&s, &jobs, model);
+        rep.report(
+            &format!("sweep50_cold_{tag}_n3_m20"),
+            b.bench_val(|| {
+                run_scenarios(&grid, &SweepOptions { threads: 1, warm_start: false }).unwrap()
+            }),
+        );
+        rep.report(
+            &format!("sweep50_warm_{tag}_n3_m20"),
+            b.bench_val(|| {
+                run_scenarios(&grid, &SweepOptions { threads: 1, warm_start: true }).unwrap()
+            }),
+        );
+        rep.report(
+            &format!("sweep50_warm_par_{tag}_n3_m20"),
+            b.bench_val(|| {
+                run_scenarios(&grid, &SweepOptions { threads: 0, warm_start: true }).unwrap()
+            }),
         );
     }
 

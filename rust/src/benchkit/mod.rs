@@ -110,11 +110,17 @@ impl Bencher {
     }
 }
 
-/// Pretty-printer for bench results; also emits a machine-readable
-/// JSON line per entry when `DLT_BENCH_JSON` is set.
+/// Pretty-printer for bench results. Machine-readable output:
+///
+/// - `DLT_BENCH_JSON` set — one JSON line per entry on stdout;
+/// - `DLT_BENCH_JSON_DIR=dir` set — [`Reporter::finish`] additionally
+///   writes `dir/BENCH_<slug>.json` with every entry and note, so CI
+///   can archive the perf trajectory across commits.
 pub struct Reporter {
     group: String,
+    slug: Option<String>,
     rows: Vec<(String, BenchResult)>,
+    notes: Vec<String>,
 }
 
 impl Reporter {
@@ -126,7 +132,14 @@ impl Reporter {
             "{:<44} {:>12} {:>12} {:>12} {:>12} {:>8}",
             "benchmark", "median", "mean", "p95", "max", "samples"
         );
-        Reporter { group, rows: Vec::new() }
+        Reporter { group, slug: None, rows: Vec::new(), notes: Vec::new() }
+    }
+
+    /// Short machine name for the JSON artifact (`BENCH_<slug>.json`).
+    /// Without one, a sanitized group name is used.
+    pub fn slug(mut self, s: impl Into<String>) -> Reporter {
+        self.slug = Some(s.into());
+        self
     }
 
     /// Report one benchmark.
@@ -152,12 +165,62 @@ impl Reporter {
     /// Print a free-form note under the table.
     pub fn note(&mut self, text: &str) {
         println!("   note: {text}");
+        self.notes.push(text.to_string());
     }
 
-    /// Finish the group and return the collected rows.
+    /// Finish the group and return the collected rows. When
+    /// `DLT_BENCH_JSON_DIR` is set, also writes `BENCH_<slug>.json`
+    /// into that directory.
     pub fn finish(self) -> Vec<(String, BenchResult)> {
+        if let Ok(dir) = std::env::var("DLT_BENCH_JSON_DIR") {
+            if let Err(e) = self.write_json(&dir) {
+                eprintln!("benchkit: failed to write JSON report: {e}");
+            }
+        }
         self.rows
     }
+
+    fn write_json(&self, dir: &str) -> std::io::Result<()> {
+        use crate::config::json::Json;
+        let slug = self.slug.clone().unwrap_or_else(|| sanitize_slug(&self.group));
+        let entries: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|(name, r)| {
+                Json::Object(vec![
+                    ("name".to_string(), Json::Str(name.clone())),
+                    ("median_ns".to_string(), Json::Num(r.ns.median)),
+                    ("mean_ns".to_string(), Json::Num(r.ns.mean)),
+                    ("p95_ns".to_string(), Json::Num(r.ns.p95)),
+                    ("max_ns".to_string(), Json::Num(r.ns.max)),
+                    ("samples".to_string(), Json::Num(r.ns.n as f64)),
+                ])
+            })
+            .collect();
+        let doc = Json::Object(vec![
+            ("group".to_string(), Json::Str(self.group.clone())),
+            ("entries".to_string(), Json::Array(entries)),
+            (
+                "notes".to_string(),
+                Json::Array(self.notes.iter().map(|n| Json::Str(n.clone())).collect()),
+            ),
+        ]);
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(
+            std::path::Path::new(dir).join(format!("BENCH_{slug}.json")),
+            doc.to_string_pretty(),
+        )
+    }
+}
+
+/// Group name -> filesystem-safe slug.
+fn sanitize_slug(group: &str) -> String {
+    let mut out: String = group
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c.to_ascii_lowercase() } else { '_' })
+        .collect();
+    out.truncate(48);
+    out
 }
 
 /// Human-friendly nanosecond formatting.
@@ -188,6 +251,32 @@ mod tests {
         let r = b.bench_val(|| (0..100).sum::<u64>());
         assert!(r.ns.n >= 5);
         assert!(r.ns.median >= 0.0);
+    }
+
+    #[test]
+    fn json_report_format() {
+        let mut rep = Reporter::new("group \"quoted\"").slug("testgrp");
+        let b = Bencher {
+            warmup: Duration::from_millis(1),
+            min_time: Duration::from_millis(5),
+            min_samples: 3,
+            max_samples: 100,
+        };
+        rep.report("entry_one", b.bench_val(|| (0..10).sum::<u64>()));
+        rep.note("a note with \"quotes\"");
+        let dir = std::env::temp_dir().join(format!("dlt_benchkit_{}", std::process::id()));
+        rep.write_json(dir.to_str().unwrap()).unwrap();
+        let content = std::fs::read_to_string(dir.join("BENCH_testgrp.json")).unwrap();
+        assert!(content.contains("\"group\": \"group \\\"quoted\\\"\""), "{content}");
+        assert!(content.contains("\"name\": \"entry_one\""));
+        assert!(content.contains("median_ns"));
+        assert!(content.contains("a note with \\\"quotes\\\""));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn slug_sanitization() {
+        assert_eq!(sanitize_slug("Solver Backends (v2)"), "solver_backends__v2_");
     }
 
     #[test]

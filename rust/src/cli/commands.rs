@@ -262,6 +262,51 @@ pub fn tradeoff(a: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `dlt sweep` — fan a scenario grid across worker threads with
+/// warm-started per-thread solver state.
+pub fn sweep_cmd(a: &Args) -> Result<()> {
+    use crate::experiments::sweep::{job_grid, processor_grid, run_scenarios, SweepOptions};
+
+    let spec = load(a)?;
+    let model = model_of(a)?;
+    let threads = a.get_usize("threads")?.unwrap_or(0);
+    let opts = SweepOptions { threads, warm_start: !a.has("cold") };
+
+    let param = a.get_or("param", "job");
+    let scenarios = match param.as_str() {
+        "job" => {
+            let from = a.get_f64("from")?.unwrap_or(spec.job);
+            let to = a.get_f64("to")?.unwrap_or(spec.job * 5.0);
+            let points = a.get_usize("points")?.unwrap_or(50).max(1);
+            let step = if points > 1 { (to - from) / (points - 1) as f64 } else { 0.0 };
+            let jobs: Vec<f64> = (0..points).map(|k| from + step * k as f64).collect();
+            job_grid(&spec, &jobs, model)
+        }
+        "procs" => processor_grid(&spec, model),
+        other => {
+            return Err(Error::Usage(format!("--param must be job|procs, got `{other}`")))
+        }
+    };
+
+    let t0 = std::time::Instant::now();
+    let pts = run_scenarios(&scenarios, &opts)?;
+    let wall = t0.elapsed();
+
+    println!("{:>14} {:>14} {:>10}", "scenario", "T_f", "lp_iters");
+    for p in &pts {
+        println!("{:>14} {:>14.6} {:>10}", p.label, p.makespan, p.lp_iterations);
+    }
+    let total_iters: usize = pts.iter().map(|p| p.lp_iterations).sum();
+    println!(
+        "{} scenarios in {wall:?} ({} LP iterations total, warm_start={}, threads={})",
+        pts.len(),
+        total_iters,
+        opts.warm_start,
+        if threads == 0 { "auto".to_string() } else { threads.to_string() },
+    );
+    Ok(())
+}
+
 /// `dlt speedup`
 pub fn speedup_cmd(a: &Args) -> Result<()> {
     let spec = load(a)?;

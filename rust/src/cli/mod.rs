@@ -6,6 +6,8 @@
 //! dlt simulate  --spec spec.json [--model fe|nfe] [--jitter 0.1] [--seed 7] [--trace]
 //! dlt cluster   --spec spec.json [--model fe|nfe] [--time-scale 0.002] [--real-compute]
 //! dlt tradeoff  --spec spec.json [--budget-cost X] [--budget-time Y] [--gradient 0.06]
+//! dlt sweep     --spec spec.json [--param job|procs] [--from A --to B --points N]
+//!               [--threads T] [--cold] [--model fe|nfe]
 //! dlt speedup   --spec spec.json --sources 1,2,3
 //! dlt experiments [--exp fig12] [--csv-dir out/]
 //! dlt artifacts
@@ -24,6 +26,7 @@ pub fn run(argv: &[String]) -> Result<()> {
         "simulate" => commands::simulate(&parsed),
         "cluster" => commands::cluster(&parsed),
         "tradeoff" => commands::tradeoff(&parsed),
+        "sweep" => commands::sweep_cmd(&parsed),
         "speedup" => commands::speedup_cmd(&parsed),
         "experiments" => commands::experiments(&parsed),
         "artifacts" => commands::artifacts(&parsed),
@@ -47,6 +50,7 @@ SUBCOMMANDS
   simulate     run the discrete-event simulator on the solved schedule
   cluster      execute the schedule on the threaded cluster runtime
   tradeoff     §6 trade-off advisor (cost/time budgets)
+  sweep        solve a scenario grid in parallel with warm-started LPs
   speedup      §5 speedup analysis
   experiments  regenerate the paper's figures (tables / CSV)
   artifacts    inspect the AOT artifact manifest
@@ -58,6 +62,13 @@ COMMON FLAGS
   --solver NAME      simplex | pdhg | pdhg-artifact (default simplex)
   --csv-dir DIR      also write CSV output
   --exp NAME         experiment id (fig10..fig20; default: all)
+
+SWEEP FLAGS
+  --param job|procs  grid dimension (default job)
+  --from A --to B    job-size range (default J .. 5J)
+  --points N         grid resolution (default 50)
+  --threads T        worker threads (default: one per core)
+  --cold             disable basis warm starts (baseline measurement)
 ";
 
 #[cfg(test)]
@@ -98,6 +109,8 @@ mod tests {
         run(&argv(&format!("simulate --spec {path} --model nfe --jitter 0.05"))).unwrap();
         run(&argv(&format!("tradeoff --spec {path} --budget-time 100"))).unwrap();
         run(&argv(&format!("speedup --spec {path} --sources 1,2"))).unwrap();
+        run(&argv(&format!("sweep --spec {path} --points 5 --threads 2"))).unwrap();
+        run(&argv(&format!("sweep --spec {path} --param procs --cold --model nfe"))).unwrap();
         std::fs::remove_file(path).ok();
     }
 }

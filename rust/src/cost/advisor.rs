@@ -15,6 +15,7 @@
 use crate::cost::model::{gradient_series, schedule_cost};
 use crate::dlt::frontend;
 use crate::error::Result;
+use crate::lp::WarmCache;
 use crate::model::SystemSpec;
 
 /// One row of the trade-off sweep.
@@ -41,10 +42,18 @@ impl TradeoffTable {
     /// Sweep `m = 1..=spec.m()` with the front-end solver (the paper's
     /// §6 simulations all use the front-end network).
     pub fn sweep(spec: &SystemSpec) -> Result<TradeoffTable> {
+        Self::sweep_cached(spec, &mut WarmCache::new())
+    }
+
+    /// Sweep with an external [`WarmCache`]: repeated sweeps (the
+    /// advisor is queried many times per session, and Figs. 19/20 each
+    /// re-sweep Table 5) warm-start every `m`'s LP from the previous
+    /// sweep's optimal basis for that shape.
+    pub fn sweep_cached(spec: &SystemSpec, cache: &mut WarmCache) -> Result<TradeoffTable> {
         let mut points = Vec::with_capacity(spec.m());
         for m in 1..=spec.m() {
             let sub = spec.with_m_processors(m);
-            let sched = frontend::solve(&sub)?;
+            let sched = frontend::solve_cached(&sub, &Default::default(), cache)?;
             points.push(TradeoffPoint {
                 m,
                 tf: sched.makespan,

@@ -18,7 +18,7 @@
 
 use crate::dlt::schedule::{Schedule, TimingModel};
 use crate::error::Result;
-use crate::lp::{solve_with, Cmp, LpProblem, SimplexOptions};
+use crate::lp::{solve_with, Cmp, LpProblem, LpSolution, SimplexOptions, WarmCache};
 use crate::model::SystemSpec;
 
 /// Options for the §3.1 builder.
@@ -142,10 +142,29 @@ pub fn solve(spec: &SystemSpec) -> Result<Schedule> {
 /// Solve §3.1 with explicit options.
 pub fn solve_opts(spec: &SystemSpec, opts: &FeOptions) -> Result<Schedule> {
     spec.validate()?;
-    let n = spec.n();
-    let m = spec.m();
     let lp = build_lp(spec, opts);
     let sol = solve_with(&lp, &opts.simplex)?;
+    schedule_from_solution(spec, &sol)
+}
+
+/// Solve §3.1 through a [`WarmCache`]: repeated solves of
+/// structurally identical instances (job-size sweeps, perturbed specs)
+/// start from the previous optimal basis instead of from scratch.
+pub fn solve_cached(
+    spec: &SystemSpec,
+    opts: &FeOptions,
+    cache: &mut WarmCache,
+) -> Result<Schedule> {
+    spec.validate()?;
+    let lp = build_lp(spec, opts);
+    let sol = cache.solve(&lp, &opts.simplex)?;
+    schedule_from_solution(spec, &sol)
+}
+
+/// Reconstruct the full schedule from an LP solution of the §3.1 LP.
+fn schedule_from_solution(spec: &SystemSpec, sol: &LpSolution) -> Result<Schedule> {
+    let n = spec.n();
+    let m = spec.m();
 
     let mut beta = vec![0.0; n * m];
     beta.copy_from_slice(&sol.x[..n * m]);

@@ -17,7 +17,7 @@
 
 use crate::dlt::schedule::{Schedule, TimingModel};
 use crate::error::Result;
-use crate::lp::{solve_with, Cmp, LpProblem, SimplexOptions};
+use crate::lp::{solve_with, Cmp, LpProblem, LpSolution, SimplexOptions, WarmCache};
 use crate::model::SystemSpec;
 
 /// Options for the §3.2 builder.
@@ -161,11 +161,29 @@ pub fn solve(spec: &SystemSpec) -> Result<Schedule> {
 /// Solve §3.2 with explicit options.
 pub fn solve_opts(spec: &SystemSpec, opts: &NfeOptions) -> Result<Schedule> {
     spec.validate()?;
+    let lp = build_lp(spec, opts);
+    let sol = solve_with(&lp, &opts.simplex)?;
+    schedule_from_solution(spec, &sol)
+}
+
+/// Solve §3.2 through a [`WarmCache`] (see
+/// [`crate::dlt::frontend::solve_cached`]).
+pub fn solve_cached(
+    spec: &SystemSpec,
+    opts: &NfeOptions,
+    cache: &mut WarmCache,
+) -> Result<Schedule> {
+    spec.validate()?;
+    let lp = build_lp(spec, opts);
+    let sol = cache.solve(&lp, &opts.simplex)?;
+    schedule_from_solution(spec, &sol)
+}
+
+/// Reconstruct the full schedule from an LP solution of the §3.2 LP.
+fn schedule_from_solution(spec: &SystemSpec, sol: &LpSolution) -> Result<Schedule> {
     let n = spec.n();
     let m = spec.m();
     let v = NfeVars::new(n, m);
-    let lp = build_lp(spec, opts);
-    let sol = solve_with(&lp, &opts.simplex)?;
 
     let a = spec.a();
     let mut beta = vec![0.0; n * m];

@@ -1,61 +1,87 @@
 //! Crate-wide error type.
+//!
+//! `Display`/`Error` are implemented by hand: the offline crate set has
+//! no `thiserror`, and keeping the crate dependency-free means
+//! `cargo build` needs nothing but the toolchain.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Unified error type for the `dlt` crate.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// A system specification failed validation.
-    #[error("invalid system spec: {0}")]
     InvalidSpec(String),
 
     /// The LP was infeasible (e.g. release times violate eq. 3).
-    #[error("linear program infeasible: {0}")]
     Infeasible(String),
 
     /// The LP was unbounded — indicates a malformed formulation.
-    #[error("linear program unbounded: {0}")]
     Unbounded(String),
 
     /// The solver hit its iteration limit before converging.
-    #[error("solver iteration limit reached after {iterations} iterations")]
-    IterationLimit { iterations: usize },
+    IterationLimit {
+        /// Iterations performed before giving up.
+        iterations: usize,
+    },
 
     /// Numerical trouble (singular matrix, NaN in the tableau, ...).
-    #[error("numerical error: {0}")]
     Numerical(String),
 
     /// A schedule failed post-hoc validation against the timing model.
-    #[error("schedule validation failed: {0}")]
     InvalidSchedule(String),
 
     /// Configuration / JSON parse problems.
-    #[error("config error: {0}")]
     Config(String),
 
     /// CLI usage problems.
-    #[error("usage error: {0}")]
     Usage(String),
 
     /// Artifact missing / malformed / shape mismatch.
-    #[error("artifact error: {0}")]
     Artifact(String),
 
     /// Errors bubbling up from the XLA/PJRT runtime.
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Cluster runtime failure (actor panicked, channel closed, ...).
-    #[error("cluster error: {0}")]
     Cluster(String),
 
     /// I/O errors with path context.
-    #[error("io error on {path}: {source}")]
     Io {
+        /// Path the operation failed on.
         path: String,
-        #[source]
+        /// Underlying I/O error.
         source: std::io::Error,
     },
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::InvalidSpec(s) => write!(f, "invalid system spec: {s}"),
+            Error::Infeasible(s) => write!(f, "linear program infeasible: {s}"),
+            Error::Unbounded(s) => write!(f, "linear program unbounded: {s}"),
+            Error::IterationLimit { iterations } => {
+                write!(f, "solver iteration limit reached after {iterations} iterations")
+            }
+            Error::Numerical(s) => write!(f, "numerical error: {s}"),
+            Error::InvalidSchedule(s) => write!(f, "schedule validation failed: {s}"),
+            Error::Config(s) => write!(f, "config error: {s}"),
+            Error::Usage(s) => write!(f, "usage error: {s}"),
+            Error::Artifact(s) => write!(f, "artifact error: {s}"),
+            Error::Runtime(s) => write!(f, "runtime error: {s}"),
+            Error::Cluster(s) => write!(f, "cluster error: {s}"),
+            Error::Io { path, source } => write!(f, "io error on {path}: {source}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
 }
 
 impl Error {
@@ -67,3 +93,30 @@ impl Error {
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_matches_previous_formats() {
+        assert_eq!(
+            Error::Infeasible("x".into()).to_string(),
+            "linear program infeasible: x"
+        );
+        assert_eq!(
+            Error::IterationLimit { iterations: 7 }.to_string(),
+            "solver iteration limit reached after 7 iterations"
+        );
+        let io = Error::io("f.json", std::io::Error::new(std::io::ErrorKind::NotFound, "gone"));
+        assert!(io.to_string().starts_with("io error on f.json:"));
+    }
+
+    #[test]
+    fn io_source_is_chained() {
+        use std::error::Error as _;
+        let e = super::Error::io("p", std::io::Error::new(std::io::ErrorKind::Other, "inner"));
+        assert!(e.source().is_some());
+        assert!(super::Error::Usage("u".into()).source().is_none());
+    }
+}

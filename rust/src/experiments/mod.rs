@@ -20,6 +20,7 @@
 
 pub mod params;
 pub mod series;
+pub mod sweep;
 pub mod table;
 
 pub use table::ExpTable;

@@ -5,6 +5,7 @@ use crate::dlt::{frontend, no_frontend};
 use crate::error::Result;
 use crate::experiments::params;
 use crate::experiments::table::ExpTable;
+use crate::lp::WarmCache;
 use crate::speedup;
 
 /// Fig. 10 — per-processor load split by source (Table 1, front-ends).
@@ -49,11 +50,12 @@ pub fn fig12() -> Result<ExpTable> {
         "T_f vs processors for 1/2/3 sources (Table 3, without front-ends)",
         &["m", "tf_1src", "tf_2src", "tf_3src"],
     );
+    let mut cache = WarmCache::new();
     for m in 1..=spec.m() {
         let mut row = vec![m as f64];
         for n in 1..=3usize {
             let sub = spec.with_n_sources(n).with_m_processors(m);
-            row.push(no_frontend::solve(&sub)?.makespan);
+            row.push(no_frontend::solve_cached(&sub, &Default::default(), &mut cache)?.makespan);
         }
         t.push_row(row);
     }
@@ -70,11 +72,14 @@ pub fn fig13() -> Result<ExpTable> {
         "T_f vs processors for J = 100/300/500 (Table 3, with front-ends)",
         &["m", "tf_J100", "tf_J300", "tf_J500"],
     );
+    // For each m the three job sizes share one LP shape, so the second
+    // and third solves warm-start from the first one's basis.
+    let mut cache = WarmCache::new();
     for m in 1..=spec.m() {
         let mut row = vec![m as f64];
         for &job in params::FIG13_JOB_SIZES {
             let sub = spec.with_job(job).with_m_processors(m);
-            row.push(frontend::solve(&sub)?.makespan);
+            row.push(frontend::solve_cached(&sub, &Default::default(), &mut cache)?.makespan);
         }
         t.push_row(row);
     }
@@ -178,15 +183,15 @@ pub fn fig16_17_18() -> Result<(ExpTable, ExpTable, ExpTable)> {
     Ok((f16, f17, f18))
 }
 
-/// Budget-area table shared by Figs. 19/20.
+/// Budget-area table shared by Figs. 19/20 (the caller supplies the
+/// sweep so each figure runs exactly one).
 fn budget_table(
     name: &str,
     title: &str,
+    sweep: &TradeoffTable,
     budget_cost: f64,
     budget_time: f64,
 ) -> Result<ExpTable> {
-    let spec = params::table5();
-    let sweep = TradeoffTable::sweep(&spec)?;
     let mut t = ExpTable::new(
         name,
         title,
@@ -198,7 +203,7 @@ fn budget_table(
         t.push_row(vec![p.m as f64, p.cost, p.tf, wc, wt, wc * wt]);
     }
     let advice = advise(
-        &sweep,
+        sweep,
         &Budgets {
             cost: Some(budget_cost),
             time: Some(budget_time),
@@ -228,12 +233,8 @@ pub fn fig19() -> Result<ExpTable> {
     let sweep = TradeoffTable::sweep(&spec)?;
     // Pin the budgets to the sweep so the overlap is exactly [6, 12],
     // matching the paper's plot.
-    budget_table(
-        "fig19",
-        "two solution areas, overlapped (Table 5)",
-        sweep.at(12).cost,
-        sweep.at(6).tf,
-    )
+    let (cost, tf) = (sweep.at(12).cost, sweep.at(6).tf);
+    budget_table("fig19", "two solution areas, overlapped (Table 5)", &sweep, cost, tf)
 }
 
 /// Fig. 20 — both budgets, disjoint solution areas (no feasible m).
@@ -241,12 +242,8 @@ pub fn fig20() -> Result<ExpTable> {
     let spec = params::table5();
     let sweep = TradeoffTable::sweep(&spec)?;
     // Cost budget only affords m <= 4; deadline needs m >= 10.
-    budget_table(
-        "fig20",
-        "two solution areas, no overlap (Table 5)",
-        sweep.at(4).cost,
-        sweep.at(10).tf,
-    )
+    let (cost, tf) = (sweep.at(4).cost, sweep.at(10).tf);
+    budget_table("fig20", "two solution areas, no overlap (Table 5)", &sweep, cost, tf)
 }
 
 #[cfg(test)]

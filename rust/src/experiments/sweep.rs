@@ -1,0 +1,229 @@
+//! Parallel scenario sweeps with per-thread, warm-started solver state.
+//!
+//! The paper's trade-off figures and the follow-up resource-sharing /
+//! Amdahl analyses (arXiv:1902.01898, 1902.01952) all boil down to the
+//! same shape of computation: *solve hundreds of near-identical DLT
+//! LPs over a parameter grid*. This module fans such a grid across
+//! `std::thread` scoped workers. Each worker owns a private
+//! [`WarmCache`], and the grid is split into **contiguous chunks** so
+//! neighbouring scenarios (which differ by one small parameter step)
+//! warm-start from each other's optimal bases.
+//!
+//! Used by the `dlt sweep` CLI subcommand and the solver benches;
+//! [`parallel_map`] is the reusable primitive for anything else that
+//! wants "per-thread solver state over a work list".
+
+use crate::dlt::schedule::TimingModel;
+use crate::dlt::{frontend, no_frontend};
+use crate::error::Result;
+use crate::lp::WarmCache;
+use crate::model::SystemSpec;
+
+/// One point of a scenario grid.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    /// Display label (e.g. `J=250`).
+    pub label: String,
+    /// Full system description for this point.
+    pub spec: SystemSpec,
+    /// Timing model to solve under.
+    pub model: TimingModel,
+}
+
+/// Result for one scenario.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    /// Scenario label.
+    pub label: String,
+    /// Optimal finish time.
+    pub makespan: f64,
+    /// Simplex iterations the solve took (lower on warm starts).
+    pub lp_iterations: usize,
+}
+
+/// Sweep execution options.
+#[derive(Debug, Clone)]
+pub struct SweepOptions {
+    /// Worker threads. `0` = one per available core.
+    pub threads: usize,
+    /// Warm-start consecutive solves within each worker (disable to
+    /// measure cold-solve baselines).
+    pub warm_start: bool,
+}
+
+impl Default for SweepOptions {
+    fn default() -> Self {
+        SweepOptions { threads: 0, warm_start: true }
+    }
+}
+
+/// Scenario grid over job sizes (fixed system, one LP shape — the
+/// ideal warm-start family).
+pub fn job_grid(spec: &SystemSpec, jobs: &[f64], model: TimingModel) -> Vec<Scenario> {
+    jobs.iter()
+        .map(|&j| Scenario {
+            label: format!("J={j:.4}"),
+            spec: spec.with_job(j),
+            model,
+        })
+        .collect()
+}
+
+/// Scenario grid over processor counts `m = 1..=spec.m()`.
+pub fn processor_grid(spec: &SystemSpec, model: TimingModel) -> Vec<Scenario> {
+    (1..=spec.m())
+        .map(|m| Scenario {
+            label: format!("m={m}"),
+            spec: spec.with_m_processors(m),
+            model,
+        })
+        .collect()
+}
+
+/// Solve every scenario, in input order, fanning across worker threads.
+pub fn run_scenarios(scenarios: &[Scenario], opts: &SweepOptions) -> Result<Vec<SweepPoint>> {
+    let warm = opts.warm_start;
+    let results = parallel_map(scenarios, opts.threads, move |cache, sc| {
+        let sched = match (sc.model, warm) {
+            (TimingModel::FrontEnd, true) => {
+                frontend::solve_cached(&sc.spec, &Default::default(), cache)
+            }
+            (TimingModel::FrontEnd, false) => frontend::solve(&sc.spec),
+            (TimingModel::NoFrontEnd, true) => {
+                no_frontend::solve_cached(&sc.spec, &Default::default(), cache)
+            }
+            (TimingModel::NoFrontEnd, false) => no_frontend::solve(&sc.spec),
+        }?;
+        Ok(SweepPoint {
+            label: sc.label.clone(),
+            makespan: sched.makespan,
+            lp_iterations: sched.lp_iterations,
+        })
+    });
+    results.into_iter().collect()
+}
+
+/// Run `f` over `items` on scoped worker threads, each worker owning a
+/// private [`WarmCache`]. Items are split into contiguous chunks (one
+/// per worker) and results come back in input order. `threads == 0`
+/// uses one worker per available core; the count is always capped by
+/// the item count.
+pub fn parallel_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&mut WarmCache, &T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = effective_threads(threads, n);
+    if threads <= 1 {
+        let mut cache = WarmCache::new();
+        return items.iter().map(|it| f(&mut cache, it)).collect();
+    }
+
+    let chunk = (n + threads - 1) / threads;
+    let mut out: Vec<R> = Vec::with_capacity(n);
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(threads);
+        for part in items.chunks(chunk) {
+            let fref = &f;
+            handles.push(s.spawn(move || {
+                let mut cache = WarmCache::new();
+                part.iter().map(|it| fref(&mut cache, it)).collect::<Vec<R>>()
+            }));
+        }
+        for h in handles {
+            out.extend(h.join().expect("sweep worker panicked"));
+        }
+    });
+    out
+}
+
+fn effective_threads(requested: usize, items: usize) -> usize {
+    let t = if requested == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        requested
+    };
+    t.clamp(1, items)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table1_spec() -> SystemSpec {
+        SystemSpec::builder()
+            .source(0.2, 10.0)
+            .source(0.4, 50.0)
+            .processors(&[2.0, 3.0, 4.0, 5.0, 6.0])
+            .job(100.0)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn parallel_matches_serial_on_job_grid() {
+        let spec = table1_spec();
+        let jobs: Vec<f64> = (0..16).map(|k| 100.0 + 10.0 * k as f64).collect();
+        let grid = job_grid(&spec, &jobs, TimingModel::FrontEnd);
+        let serial =
+            run_scenarios(&grid, &SweepOptions { threads: 1, warm_start: true }).unwrap();
+        let par = run_scenarios(&grid, &SweepOptions { threads: 4, warm_start: true }).unwrap();
+        assert_eq!(serial.len(), par.len());
+        for (a, b) in serial.iter().zip(par.iter()) {
+            assert_eq!(a.label, b.label, "order preserved");
+            assert!(
+                (a.makespan - b.makespan).abs() < 1e-7 * (1.0 + a.makespan.abs()),
+                "{}: {} vs {}",
+                a.label,
+                a.makespan,
+                b.makespan
+            );
+        }
+    }
+
+    #[test]
+    fn warm_start_agrees_with_cold() {
+        let spec = table1_spec();
+        let jobs: Vec<f64> = (0..12).map(|k| 80.0 + 15.0 * k as f64).collect();
+        let grid = job_grid(&spec, &jobs, TimingModel::NoFrontEnd);
+        let cold = run_scenarios(&grid, &SweepOptions { threads: 1, warm_start: false }).unwrap();
+        let warm = run_scenarios(&grid, &SweepOptions { threads: 1, warm_start: true }).unwrap();
+        let mut warm_total = 0usize;
+        let mut cold_total = 0usize;
+        for (a, b) in cold.iter().zip(warm.iter()) {
+            assert!((a.makespan - b.makespan).abs() < 1e-7 * (1.0 + a.makespan.abs()));
+            cold_total += a.lp_iterations;
+            warm_total += b.lp_iterations;
+        }
+        assert!(
+            warm_total <= cold_total,
+            "warm sweeps should not iterate more: {warm_total} vs {cold_total}"
+        );
+    }
+
+    #[test]
+    fn processor_grid_covers_all_m() {
+        let grid = processor_grid(&table1_spec(), TimingModel::FrontEnd);
+        assert_eq!(grid.len(), 5);
+        let pts = run_scenarios(&grid, &SweepOptions::default()).unwrap();
+        // More processors never hurt.
+        for w in pts.windows(2) {
+            assert!(w[1].makespan <= w[0].makespan + 1e-6);
+        }
+    }
+
+    #[test]
+    fn parallel_map_empty_and_oversubscribed() {
+        let none: Vec<u32> = Vec::new();
+        let out = parallel_map(&none, 8, |_, x| *x);
+        assert!(out.is_empty());
+        let items = [1u32, 2, 3];
+        let out = parallel_map(&items, 64, |_, x| x * 2);
+        assert_eq!(out, vec![2, 4, 6]);
+    }
+}

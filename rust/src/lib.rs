@@ -6,9 +6,12 @@
 //!
 //! The crate is organized bottom-up:
 //!
-//! - [`util`], [`linalg`] — numeric substrates (PRNG, stats, dense LA).
-//! - [`lp`] — a from-scratch two-phase primal simplex solver; every
-//!   scheduling problem in the paper is solved through it.
+//! - [`util`], [`linalg`] — numeric substrates (PRNG, stats, dense +
+//!   sparse-CSC linear algebra, reusable LU factors).
+//! - [`lp`] — a from-scratch simplex solver: sparse revised simplex
+//!   with basis warm starts by default, the dense two-phase tableau as
+//!   fallback; every scheduling problem in the paper is solved
+//!   through it.
 //! - [`model`] — the system specification (sources `G_i`/`R_i`,
 //!   processors `A_j`/`C_j`, job `J`).
 //! - [`dlt`] — the paper's scheduling formulations: §2 single-source

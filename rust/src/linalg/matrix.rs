@@ -70,18 +70,34 @@ impl Matrix {
 
     /// Matrix–vector product `A x`.
     pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
-        assert_eq!(x.len(), self.cols);
         let mut y = vec![0.0; self.rows];
+        self.matvec_into(x, &mut y);
+        y
+    }
+
+    /// Matrix–vector product `A x` into a caller-owned buffer
+    /// (allocation-free variant for hot loops).
+    pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
         for i in 0..self.rows {
             y[i] = super::dot(self.row(i), x);
         }
-        y
     }
 
     /// Transposed matrix–vector product `Aᵀ y`.
     pub fn matvec_t(&self, y: &[f64]) -> Vec<f64> {
-        assert_eq!(y.len(), self.rows);
         let mut x = vec![0.0; self.cols];
+        self.matvec_t_into(y, &mut x);
+        x
+    }
+
+    /// Transposed matrix–vector product `Aᵀ y` into a caller-owned
+    /// buffer (allocation-free variant for hot loops).
+    pub fn matvec_t_into(&self, y: &[f64], x: &mut [f64]) {
+        assert_eq!(y.len(), self.rows);
+        assert_eq!(x.len(), self.cols);
+        x.iter_mut().for_each(|v| *v = 0.0);
         for i in 0..self.rows {
             let yi = y[i];
             if yi == 0.0 {
@@ -92,7 +108,6 @@ impl Matrix {
                 x[j] += row[j] * yi;
             }
         }
-        x
     }
 
     /// Matrix product `A B`.
@@ -131,9 +146,11 @@ impl Matrix {
             *x /= norm;
         }
         let mut sigma = 0.0;
+        let mut av = vec![0.0; self.rows];
+        let mut atav = vec![0.0; self.cols];
         for _ in 0..iters {
-            let av = self.matvec(&v);
-            let atav = self.matvec_t(&av);
+            self.matvec_into(&v, &mut av);
+            self.matvec_t_into(&av, &mut atav);
             let n = super::norm2(&atav);
             if n == 0.0 {
                 return 0.0;
@@ -163,64 +180,192 @@ impl std::ops::IndexMut<(usize, usize)> for Matrix {
 }
 
 /// Solve `A x = b` by LU with partial pivoting. `A` must be square.
+///
+/// One-shot convenience over [`LuFactors`]; callers that solve against
+/// the same matrix repeatedly should factor once and reuse.
 pub fn lu_solve(a: &Matrix, b: &[f64]) -> Result<Vec<f64>> {
-    let n = a.rows();
-    if a.cols() != n {
-        return Err(Error::Numerical(format!("lu_solve: non-square {}x{}", a.rows(), a.cols())));
-    }
-    if b.len() != n {
+    if b.len() != a.rows() {
         return Err(Error::Numerical("lu_solve: rhs length mismatch".into()));
     }
-    let mut lu = a.clone();
-    let mut x = b.to_vec();
-    let mut perm: Vec<usize> = (0..n).collect();
-
-    for k in 0..n {
-        // Partial pivot.
-        let mut p = k;
-        let mut max = lu[(k, k)].abs();
-        for i in (k + 1)..n {
-            let v = lu[(i, k)].abs();
-            if v > max {
-                max = v;
-                p = i;
-            }
-        }
-        if max < 1e-13 {
-            return Err(Error::Numerical(format!("lu_solve: singular at pivot {k}")));
-        }
-        if p != k {
-            perm.swap(p, k);
-            // Swap rows p and k.
-            for j in 0..n {
-                let tmp = lu[(k, j)];
-                lu[(k, j)] = lu[(p, j)];
-                lu[(p, j)] = tmp;
-            }
-            x.swap(p, k);
-        }
-        let pivot = lu[(k, k)];
-        for i in (k + 1)..n {
-            let factor = lu[(i, k)] / pivot;
-            lu[(i, k)] = factor;
-            if factor != 0.0 {
-                for j in (k + 1)..n {
-                    let v = lu[(k, j)];
-                    lu[(i, j)] -= factor * v;
-                }
-                x[i] -= factor * x[k];
-            }
-        }
-    }
-    // Back substitution.
-    for i in (0..n).rev() {
-        let mut acc = x[i];
-        for j in (i + 1)..n {
-            acc -= lu[(i, j)] * x[j];
-        }
-        x[i] = acc / lu[(i, i)];
-    }
+    let f = LuFactors::factor(a)?;
+    let mut x = vec![0.0; b.len()];
+    f.solve_into(b, &mut x);
     Ok(x)
+}
+
+/// Reusable LU factorization with partial pivoting (`P A = L U`).
+///
+/// The factors are stored *row/column sparse*: basis matrices of DLT
+/// LPs are ~95 % zeros and mostly stay sparse after elimination, so a
+/// triangular solve costs O(nnz(L) + nnz(U)) instead of O(n²). Both
+/// `A x = b` and `Aᵀ x = b` solves are supported (the revised simplex
+/// needs FTRAN and BTRAN against the same basis factorization).
+#[derive(Debug, Clone)]
+pub struct LuFactors {
+    n: usize,
+    /// `perm[i]` = original row that ended up in pivot position `i`.
+    perm: Vec<usize>,
+    /// Row `i` of `L` strictly below the diagonal: `(col j < i, l_ij)`.
+    l_rows: Vec<Vec<(usize, f64)>>,
+    /// Row `i` of `U` strictly above the diagonal: `(col j > i, u_ij)`.
+    u_rows: Vec<Vec<(usize, f64)>>,
+    /// Diagonal of `U`.
+    u_diag: Vec<f64>,
+    /// Column `j` of `L` strictly below the diagonal: `(row i > j, l_ij)`.
+    l_cols: Vec<Vec<(usize, f64)>>,
+    /// Column `j` of `U` strictly above the diagonal: `(row i < j, u_ij)`.
+    u_cols: Vec<Vec<(usize, f64)>>,
+}
+
+impl LuFactors {
+    /// Factorization of the identity (the all-slack/artificial simplex
+    /// start basis).
+    pub fn identity(n: usize) -> LuFactors {
+        LuFactors {
+            n,
+            perm: (0..n).collect(),
+            l_rows: vec![Vec::new(); n],
+            u_rows: vec![Vec::new(); n],
+            u_diag: vec![1.0; n],
+            l_cols: vec![Vec::new(); n],
+            u_cols: vec![Vec::new(); n],
+        }
+    }
+
+    /// Factor a square matrix. Errors when (numerically) singular.
+    pub fn factor(a: &Matrix) -> Result<LuFactors> {
+        let n = a.rows();
+        if a.cols() != n {
+            return Err(Error::Numerical(format!(
+                "lu factor: non-square {}x{}",
+                a.rows(),
+                a.cols()
+            )));
+        }
+        let mut lu = a.data().to_vec();
+        let mut perm: Vec<usize> = (0..n).collect();
+
+        for k in 0..n {
+            // Partial pivot.
+            let mut p = k;
+            let mut max = lu[k * n + k].abs();
+            for i in (k + 1)..n {
+                let v = lu[i * n + k].abs();
+                if v > max {
+                    max = v;
+                    p = i;
+                }
+            }
+            if max < 1e-13 {
+                return Err(Error::Numerical(format!("lu factor: singular at pivot {k}")));
+            }
+            if p != k {
+                perm.swap(p, k);
+                for j in 0..n {
+                    lu.swap(k * n + j, p * n + j);
+                }
+            }
+            let pivot = lu[k * n + k];
+            for i in (k + 1)..n {
+                let factor = lu[i * n + k] / pivot;
+                lu[i * n + k] = factor;
+                if factor != 0.0 {
+                    for j in (k + 1)..n {
+                        let v = lu[k * n + j];
+                        if v != 0.0 {
+                            lu[i * n + j] -= factor * v;
+                        }
+                    }
+                }
+            }
+        }
+
+        // Extract sparse row/column views of the factors.
+        let mut l_rows: Vec<Vec<(usize, f64)>> = vec![Vec::new(); n];
+        let mut u_rows: Vec<Vec<(usize, f64)>> = vec![Vec::new(); n];
+        let mut l_cols: Vec<Vec<(usize, f64)>> = vec![Vec::new(); n];
+        let mut u_cols: Vec<Vec<(usize, f64)>> = vec![Vec::new(); n];
+        let mut u_diag = vec![0.0; n];
+        for i in 0..n {
+            for j in 0..n {
+                let v = lu[i * n + j];
+                if i == j {
+                    u_diag[i] = v;
+                } else if v != 0.0 {
+                    if j < i {
+                        l_rows[i].push((j, v));
+                        l_cols[j].push((i, v));
+                    } else {
+                        u_rows[i].push((j, v));
+                        u_cols[j].push((i, v));
+                    }
+                }
+            }
+        }
+        Ok(LuFactors { n, perm, l_rows, u_rows, u_diag, l_cols, u_cols })
+    }
+
+    /// Dimension.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Solve `A x = b` into `out` (allocation-free).
+    pub fn solve_into(&self, b: &[f64], out: &mut [f64]) {
+        let n = self.n;
+        debug_assert_eq!(b.len(), n);
+        debug_assert_eq!(out.len(), n);
+        // out = P b
+        for i in 0..n {
+            out[i] = b[self.perm[i]];
+        }
+        // Forward: L y = P b (unit diagonal).
+        for i in 0..n {
+            let mut acc = out[i];
+            for &(j, l) in &self.l_rows[i] {
+                acc -= l * out[j];
+            }
+            out[i] = acc;
+        }
+        // Backward: U x = y.
+        for i in (0..n).rev() {
+            let mut acc = out[i];
+            for &(j, u) in &self.u_rows[i] {
+                acc -= u * out[j];
+            }
+            out[i] = acc / self.u_diag[i];
+        }
+    }
+
+    /// Solve `Aᵀ x = b` into `out`, using `scratch` (both length `n`,
+    /// allocation-free). With `P A = L U`: `Aᵀ = Uᵀ Lᵀ P`, so solve
+    /// `Uᵀ z = b`, then `Lᵀ w = z`, then `x = Pᵀ w`.
+    pub fn solve_transpose_into(&self, b: &[f64], scratch: &mut [f64], out: &mut [f64]) {
+        let n = self.n;
+        debug_assert_eq!(b.len(), n);
+        debug_assert_eq!(scratch.len(), n);
+        debug_assert_eq!(out.len(), n);
+        // Forward: Uᵀ z = b (row i of Uᵀ is column i of U).
+        for i in 0..n {
+            let mut acc = b[i];
+            for &(j, u) in &self.u_cols[i] {
+                acc -= u * scratch[j];
+            }
+            scratch[i] = acc / self.u_diag[i];
+        }
+        // Backward: Lᵀ w = z (unit diagonal; row i of Lᵀ is column i of L).
+        for i in (0..n).rev() {
+            let mut acc = scratch[i];
+            for &(j, l) in &self.l_cols[i] {
+                acc -= l * scratch[j];
+            }
+            scratch[i] = acc;
+        }
+        // x = Pᵀ w.
+        for i in 0..n {
+            out[self.perm[i]] = scratch[i];
+        }
+    }
 }
 
 #[cfg(test)]
@@ -286,6 +431,65 @@ mod tests {
         a[(2, 2)] = 0.5;
         let s = a.spectral_norm_est(100, 42);
         assert!((s - 3.0).abs() < 1e-6, "{s}");
+    }
+
+    #[test]
+    fn matvec_into_matches_alloc() {
+        let a = Matrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]]);
+        let x = [1.0, -1.0];
+        let y = [2.0, 0.0, 1.0];
+        let mut buf_r = vec![9.0; 3];
+        a.matvec_into(&x, &mut buf_r);
+        assert_eq!(buf_r, a.matvec(&x));
+        let mut buf_c = vec![9.0; 2];
+        a.matvec_t_into(&y, &mut buf_c);
+        assert_eq!(buf_c, a.matvec_t(&y));
+    }
+
+    #[test]
+    fn lu_factors_reuse_and_transpose() {
+        use crate::util::rng::{Pcg32, Rng};
+        let mut rng = Pcg32::new(77);
+        for n in [1usize, 3, 8, 25] {
+            let mut a = Matrix::zeros(n, n);
+            for i in 0..n {
+                for j in 0..n {
+                    // Sparse-ish test matrix (LP bases are mostly zeros).
+                    if i == j || rng.f64() < 0.3 {
+                        a[(i, j)] = rng.f64() - 0.5;
+                    }
+                }
+                a[(i, i)] += 2.0;
+            }
+            let f = LuFactors::factor(&a).unwrap();
+            let x_true: Vec<f64> = (0..n).map(|_| rng.f64() * 4.0 - 2.0).collect();
+            // A x = b
+            let b = a.matvec(&x_true);
+            let mut x = vec![0.0; n];
+            f.solve_into(&b, &mut x);
+            for (xi, ti) in x.iter().zip(x_true.iter()) {
+                assert!(approx_eq_eps(*xi, *ti, 1e-8, 1e-8), "n={n}");
+            }
+            // Aᵀ x = b
+            let bt = a.matvec_t(&x_true);
+            let mut scratch = vec![0.0; n];
+            f.solve_transpose_into(&bt, &mut scratch, &mut x);
+            for (xi, ti) in x.iter().zip(x_true.iter()) {
+                assert!(approx_eq_eps(*xi, *ti, 1e-8, 1e-8), "transpose n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn lu_factors_identity() {
+        let f = LuFactors::identity(4);
+        let b = [1.0, -2.0, 3.0, 0.5];
+        let mut x = vec![0.0; 4];
+        f.solve_into(&b, &mut x);
+        assert_eq!(x, b.to_vec());
+        let mut scratch = vec![0.0; 4];
+        f.solve_transpose_into(&b, &mut scratch, &mut x);
+        assert_eq!(x, b.to_vec());
     }
 
     #[test]

@@ -1,13 +1,19 @@
-//! Small dense linear-algebra substrate.
+//! Small linear-algebra substrate.
 //!
 //! Used by the §2 closed-form oracle (solving the M+1 linear equations
-//! directly), the simplex tableau, and PDHG standardization. Everything
-//! is `f64`, row-major, and allocation-explicit — instances in this
-//! paper are at most a few thousand variables.
+//! directly), both simplex backends, and PDHG standardization.
+//! Everything is `f64` and allocation-explicit — instances in this
+//! paper are at most a few thousand variables. [`matrix::Matrix`] is
+//! dense row-major; [`sparse::SparseMatrix`] is CSC and carries the LP
+//! constraint matrices (which are ~95 % zeros for DLT instances);
+//! [`matrix::LuFactors`] is the reusable basis factorization behind
+//! the revised simplex.
 
 pub mod matrix;
+pub mod sparse;
 
-pub use matrix::{lu_solve, Matrix};
+pub use matrix::{lu_solve, LuFactors, Matrix};
+pub use sparse::SparseMatrix;
 
 /// Dot product of two equal-length slices.
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {

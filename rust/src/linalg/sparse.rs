@@ -1,0 +1,263 @@
+//! Compressed-sparse-column (CSC) matrix.
+//!
+//! The DLT constraint matrices are ~95 % zeros (each row touches a
+//! handful of `β`/`TS`/`TF` variables), and the revised simplex is
+//! column-oriented: pricing and FTRAN both walk one column at a time.
+//! CSC makes both O(nnz) instead of O(rows × cols).
+
+use crate::linalg::Matrix;
+
+/// Referenced by the `Index` impl for absent entries.
+static ZERO: f64 = 0.0;
+
+/// Immutable CSC matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SparseMatrix {
+    rows: usize,
+    cols: usize,
+    /// `col_ptr[j]..col_ptr[j+1]` indexes column `j` in `row_idx`/`vals`.
+    col_ptr: Vec<usize>,
+    /// Row index per stored entry, ascending within each column.
+    row_idx: Vec<usize>,
+    /// Value per stored entry.
+    vals: Vec<f64>,
+}
+
+impl SparseMatrix {
+    /// Empty matrix of the given shape.
+    pub fn zeros(rows: usize, cols: usize) -> SparseMatrix {
+        SparseMatrix {
+            rows,
+            cols,
+            col_ptr: vec![0; cols + 1],
+            row_idx: Vec::new(),
+            vals: Vec::new(),
+        }
+    }
+
+    /// Build from `(row, col, value)` triplets. Duplicates are summed;
+    /// entries that sum to exactly zero are dropped. Panics on
+    /// out-of-range indices.
+    pub fn from_triplets(rows: usize, cols: usize, triplets: &[(usize, usize, f64)]) -> SparseMatrix {
+        let mut entries: Vec<(usize, usize, f64)> = triplets.to_vec();
+        for &(r, c, _) in &entries {
+            assert!(r < rows && c < cols, "triplet ({r}, {c}) outside {rows}x{cols}");
+        }
+        entries.sort_by(|a, b| (a.1, a.0).cmp(&(b.1, b.0)));
+
+        let mut col_ptr = vec![0usize; cols + 1];
+        let mut row_idx = Vec::with_capacity(entries.len());
+        let mut vals = Vec::with_capacity(entries.len());
+        let mut k = 0;
+        for c in 0..cols {
+            while k < entries.len() && entries[k].1 == c {
+                let r = entries[k].0;
+                let mut v = entries[k].2;
+                k += 1;
+                while k < entries.len() && entries[k].1 == c && entries[k].0 == r {
+                    v += entries[k].2;
+                    k += 1;
+                }
+                if v != 0.0 {
+                    row_idx.push(r);
+                    vals.push(v);
+                }
+            }
+            col_ptr[c + 1] = row_idx.len();
+        }
+        SparseMatrix { rows, cols, col_ptr, row_idx, vals }
+    }
+
+    /// Build from a dense matrix, keeping entries with `|v| > drop_tol`.
+    pub fn from_dense(m: &Matrix, drop_tol: f64) -> SparseMatrix {
+        let mut trips = Vec::new();
+        for i in 0..m.rows() {
+            for (j, &v) in m.row(i).iter().enumerate() {
+                if v.abs() > drop_tol {
+                    trips.push((i, j, v));
+                }
+            }
+        }
+        SparseMatrix::from_triplets(m.rows(), m.cols(), &trips)
+    }
+
+    /// Number of rows.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Number of stored entries.
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Fraction of entries stored (1.0 = fully dense).
+    pub fn density(&self) -> f64 {
+        if self.rows == 0 || self.cols == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / (self.rows * self.cols) as f64
+    }
+
+    /// Iterate the `(row, value)` entries of column `j`.
+    pub fn col(&self, j: usize) -> impl Iterator<Item = (usize, f64)> + '_ {
+        let lo = self.col_ptr[j];
+        let hi = self.col_ptr[j + 1];
+        self.row_idx[lo..hi].iter().copied().zip(self.vals[lo..hi].iter().copied())
+    }
+
+    /// Stored entries in column `j`.
+    pub fn col_nnz(&self, j: usize) -> usize {
+        self.col_ptr[j + 1] - self.col_ptr[j]
+    }
+
+    /// Entry accessor (binary search within the column).
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        let lo = self.col_ptr[j];
+        let hi = self.col_ptr[j + 1];
+        match self.row_idx[lo..hi].binary_search(&i) {
+            Ok(k) => self.vals[lo + k],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Dot product of column `j` with a dense vector indexed by row:
+    /// `Σ_i A_ij y_i`. This is the revised-simplex pricing kernel.
+    pub fn col_dot(&self, j: usize, y: &[f64]) -> f64 {
+        debug_assert_eq!(y.len(), self.rows);
+        self.col(j).map(|(i, v)| v * y[i]).sum()
+    }
+
+    /// Scatter column `j` into a dense buffer (`out` is zeroed first).
+    pub fn col_into(&self, j: usize, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), self.rows);
+        out.iter_mut().for_each(|x| *x = 0.0);
+        for (i, v) in self.col(j) {
+            out[i] = v;
+        }
+    }
+
+    /// Dense `A x` (column-major accumulation).
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0; self.rows];
+        for j in 0..self.cols {
+            let xj = x[j];
+            if xj == 0.0 {
+                continue;
+            }
+            for (i, v) in self.col(j) {
+                y[i] += v * xj;
+            }
+        }
+        y
+    }
+
+    /// Materialize as a dense [`Matrix`].
+    pub fn to_dense(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.rows, self.cols);
+        for j in 0..self.cols {
+            for (i, v) in self.col(j) {
+                m[(i, j)] = v;
+            }
+        }
+        m
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for SparseMatrix {
+    type Output = f64;
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        let lo = self.col_ptr[j];
+        let hi = self.col_ptr[j + 1];
+        match self.row_idx[lo..hi].binary_search(&i) {
+            Ok(k) => &self.vals[lo + k],
+            Err(_) => &ZERO,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> SparseMatrix {
+        // [[1, 0, 2],
+        //  [0, 3, 0]]
+        SparseMatrix::from_triplets(2, 3, &[(0, 0, 1.0), (1, 1, 3.0), (0, 2, 2.0)])
+    }
+
+    #[test]
+    fn shape_and_nnz() {
+        let a = sample();
+        assert_eq!((a.rows(), a.cols(), a.nnz()), (2, 3, 3));
+        assert!((a.density() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn indexing_and_get() {
+        let a = sample();
+        assert_eq!(a[(0, 0)], 1.0);
+        assert_eq!(a[(1, 0)], 0.0);
+        assert_eq!(a.get(0, 2), 2.0);
+        assert_eq!(a.get(1, 2), 0.0);
+    }
+
+    #[test]
+    fn duplicates_sum_and_zeros_drop() {
+        let a = SparseMatrix::from_triplets(
+            2,
+            2,
+            &[(0, 0, 1.0), (0, 0, 2.0), (1, 1, 5.0), (1, 1, -5.0)],
+        );
+        assert_eq!(a[(0, 0)], 3.0);
+        assert_eq!(a.nnz(), 1, "exact cancellation is dropped");
+    }
+
+    #[test]
+    fn col_iteration_sorted() {
+        let a = SparseMatrix::from_triplets(3, 1, &[(2, 0, 9.0), (0, 0, 7.0)]);
+        let entries: Vec<(usize, f64)> = a.col(0).collect();
+        assert_eq!(entries, vec![(0, 7.0), (2, 9.0)]);
+        assert_eq!(a.col_nnz(0), 2);
+    }
+
+    #[test]
+    fn col_dot_and_scatter() {
+        let a = sample();
+        assert_eq!(a.col_dot(0, &[2.0, 5.0]), 2.0);
+        assert_eq!(a.col_dot(1, &[2.0, 5.0]), 15.0);
+        let mut buf = [9.0; 2];
+        a.col_into(2, &mut buf);
+        assert_eq!(buf, [2.0, 0.0]);
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let a = sample();
+        let d = a.to_dense();
+        let x = [1.0, 2.0, 3.0];
+        assert_eq!(a.matvec(&x), d.matvec(&x));
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let a = sample();
+        let back = SparseMatrix::from_dense(&a.to_dense(), 0.0);
+        assert_eq!(a, back);
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let a = SparseMatrix::zeros(0, 0);
+        assert_eq!(a.nnz(), 0);
+        assert_eq!(a.density(), 0.0);
+    }
+}

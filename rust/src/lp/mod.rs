@@ -1,9 +1,13 @@
 //! From-scratch linear-programming substrate.
 //!
 //! The paper solves every scheduling instance "by linear programming
-//! techniques"; this module is that solver. It is a dense two-phase
-//! primal simplex with Dantzig pricing, Bland anti-cycling fallback,
-//! a light presolve, and dual extraction — no external LP dependency.
+//! techniques"; this module is that solver. The default backend is a
+//! revised simplex over sparse column storage with LU basis
+//! factorization, eta updates and basis warm starts ([`revised`]);
+//! the original dense two-phase tableau remains available as a
+//! fallback/oracle ([`simplex::SolverBackend::DenseTableau`]). Both
+//! use Dantzig pricing with a Bland anti-cycling fallback, and both
+//! extract duals — no external LP dependency.
 //!
 //! All variables are non-negative (`x ≥ 0`), which matches every
 //! formulation in the paper (load fractions, timestamps and the
@@ -22,11 +26,15 @@
 
 pub mod presolve;
 pub mod problem;
+pub mod revised;
 pub mod simplex;
 pub mod solution;
 pub mod standard;
+pub mod warm;
 
 pub use problem::{Cmp, Constraint, LpProblem};
-pub use simplex::{solve, solve_with, SimplexOptions};
+pub use revised::Basis;
+pub use simplex::{solve, solve_warm, solve_with, SimplexOptions, SolverBackend};
 pub use solution::LpSolution;
 pub use standard::StandardForm;
+pub use warm::WarmCache;

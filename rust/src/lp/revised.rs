@@ -1,0 +1,699 @@
+//! Revised simplex over sparse column storage.
+//!
+//! Instead of carrying the full dense tableau (O(m·width) per pivot),
+//! the revised method keeps only the basis factorization and derives
+//! everything per iteration from the *original* sparse columns:
+//!
+//! - **BTRAN** `y = B⁻ᵀ c_B`, then pricing as `d_j = c_j − y·A_j` — a
+//!   sparse dot per column, O(nnz(A)) per pass;
+//! - **FTRAN** `w = B⁻¹ A_q` for the ratio test;
+//! - a **product-form eta update** per pivot (one sparse column), with
+//!   a full LU refactorization every [`REFACTOR_EVERY`] pivots to
+//!   bound numerical drift — DLT basis matrices stay sparse under LU
+//!   ([`LuFactors`] stores its factors sparsely), so both triangular
+//!   solves are O(nnz) too.
+//!
+//! Pricing is Dantzig with the same permanent Bland fallback and stall
+//! detection as the dense tableau. Phase 1 starts from the
+//! slack/artificial identity basis; [`solve_revised`] can instead
+//! **warm-start** from a previous optimal [`Basis`] of a structurally
+//! identical problem, skipping phase 1 entirely when that basis is
+//! still primal feasible — the common case across the paper's
+//! parameter sweeps, where consecutive scenarios differ only in rhs or
+//! objective data.
+
+use super::problem::LpProblem;
+use super::simplex::SimplexOptions;
+use super::solution::LpSolution;
+use super::standard::{AuxKind, StandardForm};
+use crate::error::{Error, Result};
+use crate::linalg::{LuFactors, Matrix};
+
+/// Refactorize after this many eta updates.
+const REFACTOR_EVERY: usize = 48;
+
+/// A simplex basis: for each constraint row, the column (structural or
+/// auxiliary, in [`StandardForm`] numbering) basic in that row.
+/// `usize::MAX` marks a row still held by an artificial variable (only
+/// possible for redundant rows); warm starts treat any such entry as
+/// "no information" and fall back to a cold start.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Basis {
+    /// Basic column per row.
+    pub cols: Vec<usize>,
+}
+
+impl Basis {
+    /// True when every row has a usable (non-artificial) basic column.
+    pub fn is_complete(&self) -> bool {
+        self.cols.iter().all(|&c| c != usize::MAX)
+    }
+}
+
+/// Solve `p`, optionally warm-starting from `warm`.
+pub fn solve_revised(
+    p: &LpProblem,
+    opts: &SimplexOptions,
+    warm: Option<&Basis>,
+) -> Result<LpSolution> {
+    let sf = StandardForm::equality(p);
+    let mut s = Revised::new(&sf, opts);
+    let warmed = match warm {
+        Some(w) => s.try_warm_start(w),
+        None => false,
+    };
+    if !warmed {
+        s.cold_start();
+        s.phase1()?;
+    }
+    s.run(Phase::Two)?;
+    s.extract(p, opts)
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    One,
+    Two,
+}
+
+/// One product-form eta: the pivot column `w = B_prev⁻¹ A_q` recorded
+/// at pivot row `r` (entries exclude row `r`, whose value is `wr`).
+struct Eta {
+    r: usize,
+    wr: f64,
+    entries: Vec<(usize, f64)>,
+}
+
+struct Revised<'a> {
+    sf: &'a StandardForm,
+    m: usize,
+    /// Structural + auxiliary column count; artificial for row `r` is
+    /// represented as column id `ncols + r`.
+    ncols: usize,
+    basis: Vec<usize>,
+    in_basis: Vec<bool>,
+    /// Current basic-variable values `x_B` per row.
+    xb: Vec<f64>,
+    lu: LuFactors,
+    etas: Vec<Eta>,
+    eps: f64,
+    feas_eps: f64,
+    max_iters: usize,
+    stall_limit: usize,
+    iterations: usize,
+    // Scratch buffers (all length m), reused across iterations.
+    col_buf: Vec<f64>,
+    w: Vec<f64>,
+    y: Vec<f64>,
+    u: Vec<f64>,
+    t: Vec<f64>,
+    cb: Vec<f64>,
+}
+
+impl<'a> Revised<'a> {
+    fn new(sf: &'a StandardForm, opts: &SimplexOptions) -> Revised<'a> {
+        let m = sf.b.len();
+        let ncols = sf.a.cols();
+        let max_iters =
+            if opts.max_iters == 0 { 200 * (m + ncols + 1) } else { opts.max_iters };
+        Revised {
+            sf,
+            m,
+            ncols,
+            basis: vec![usize::MAX; m],
+            in_basis: vec![false; ncols],
+            xb: vec![0.0; m],
+            lu: LuFactors::identity(m),
+            etas: Vec::new(),
+            eps: opts.eps,
+            feas_eps: opts.feas_eps,
+            max_iters,
+            stall_limit: opts.stall_limit,
+            iterations: 0,
+            col_buf: vec![0.0; m],
+            w: vec![0.0; m],
+            y: vec![0.0; m],
+            u: vec![0.0; m],
+            t: vec![0.0; m],
+            cb: vec![0.0; m],
+        }
+    }
+
+    /// Identity start basis: slack where a row has one, artificial
+    /// otherwise. Both columns are `e_r`, so `B = I` and `x_B = b`.
+    fn cold_start(&mut self) {
+        self.in_basis.iter_mut().for_each(|b| *b = false);
+        let mut aux_col = self.sf.num_structural;
+        for i in 0..self.m {
+            match self.sf.aux[i] {
+                AuxKind::Slack => {
+                    self.basis[i] = aux_col;
+                    self.in_basis[aux_col] = true;
+                    aux_col += 1;
+                }
+                AuxKind::Surplus => {
+                    aux_col += 1;
+                    self.basis[i] = self.ncols + i;
+                }
+                AuxKind::None => {
+                    self.basis[i] = self.ncols + i;
+                }
+            }
+        }
+        self.xb.copy_from_slice(&self.sf.b);
+        self.lu = LuFactors::identity(self.m);
+        self.etas.clear();
+    }
+
+    /// Adopt a previous basis when it factorizes and is still primal
+    /// feasible for this problem's data. Returns false (leaving `self`
+    /// ready for a cold start) otherwise.
+    fn try_warm_start(&mut self, warm: &Basis) -> bool {
+        if warm.cols.len() != self.m || !warm.is_complete() {
+            return false;
+        }
+        if warm.cols.iter().any(|&c| c >= self.ncols) {
+            return false;
+        }
+        let b = self.basis_matrix(&warm.cols);
+        let Ok(lu) = LuFactors::factor(&b) else {
+            return false;
+        };
+        lu.solve_into(&self.sf.b, &mut self.xb);
+        if self.xb.iter().any(|&v| v < -self.feas_eps) {
+            return false;
+        }
+        for v in self.xb.iter_mut() {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+        self.basis.copy_from_slice(&warm.cols);
+        self.in_basis.iter_mut().for_each(|x| *x = false);
+        for &c in &warm.cols {
+            self.in_basis[c] = true;
+        }
+        self.lu = lu;
+        self.etas.clear();
+        true
+    }
+
+    /// Dense basis matrix for a candidate set of basic columns
+    /// (artificial ids become unit columns).
+    fn basis_matrix(&self, cols: &[usize]) -> Matrix {
+        let mut b = Matrix::zeros(self.m, self.m);
+        for (k, &bv) in cols.iter().enumerate() {
+            if bv < self.ncols {
+                for (i, v) in self.sf.a.col(bv) {
+                    b[(i, k)] = v;
+                }
+            } else {
+                b[(bv - self.ncols, k)] = 1.0;
+            }
+        }
+        b
+    }
+
+    /// Rebuild the LU from the current basis, drop the eta file, and
+    /// recompute `x_B` at full accuracy.
+    fn refactorize(&mut self) -> Result<()> {
+        let b = self.basis_matrix(&self.basis);
+        self.lu = LuFactors::factor(&b)
+            .map_err(|e| Error::Numerical(format!("basis refactorization failed: {e}")))?;
+        self.etas.clear();
+        self.lu.solve_into(&self.sf.b, &mut self.xb);
+        for v in self.xb.iter_mut() {
+            if *v < 0.0 && *v > -self.feas_eps {
+                *v = 0.0;
+            }
+        }
+        Ok(())
+    }
+
+    /// FTRAN: `self.w = B⁻¹ v` where `v` is in `self.col_buf`.
+    fn ftran(&mut self) {
+        self.lu.solve_into(&self.col_buf, &mut self.w);
+        let w = &mut self.w;
+        for eta in &self.etas {
+            let ur = w[eta.r] / eta.wr;
+            if ur != 0.0 {
+                for &(i, wi) in &eta.entries {
+                    w[i] -= wi * ur;
+                }
+            }
+            w[eta.r] = ur;
+        }
+    }
+
+    /// BTRAN: `self.y = B⁻ᵀ v` where `v` is in `self.cb`.
+    fn btran(&mut self) {
+        self.u.copy_from_slice(&self.cb);
+        let u = &mut self.u;
+        for eta in self.etas.iter().rev() {
+            let mut acc = u[eta.r];
+            for &(i, wi) in &eta.entries {
+                acc -= wi * u[i];
+            }
+            u[eta.r] = acc / eta.wr;
+        }
+        self.lu.solve_transpose_into(&self.u, &mut self.t, &mut self.y);
+    }
+
+    #[inline]
+    fn cost_col(&self, phase: Phase, j: usize) -> f64 {
+        match phase {
+            Phase::One => 0.0,
+            Phase::Two => self.sf.c[j],
+        }
+    }
+
+    #[inline]
+    fn cost_basic(&self, phase: Phase, r: usize) -> f64 {
+        let bv = self.basis[r];
+        if bv >= self.ncols {
+            match phase {
+                Phase::One => 1.0,
+                Phase::Two => 0.0,
+            }
+        } else {
+            self.cost_col(phase, bv)
+        }
+    }
+
+    fn objective(&self, phase: Phase) -> f64 {
+        (0..self.m).map(|r| self.cost_basic(phase, r) * self.xb[r]).sum()
+    }
+
+    /// Scatter column `q` (structural/aux only) into `self.col_buf`.
+    fn load_column(&mut self, q: usize) {
+        self.sf.a.col_into(q, &mut self.col_buf);
+    }
+
+    /// Pivot: column `q` enters at row `r`, using the FTRAN result in
+    /// `self.w`. Records the eta and updates `x_B` and the basis maps.
+    fn pivot(&mut self, q: usize, r: usize) {
+        let wr = self.w[r];
+        debug_assert!(wr.abs() > 1e-14);
+        let theta = self.xb[r].max(0.0) / wr;
+        let mut entries = Vec::new();
+        for i in 0..self.m {
+            let wi = self.w[i];
+            if i == r || wi == 0.0 {
+                continue;
+            }
+            if wi.abs() > 1e-12 {
+                entries.push((i, wi));
+            }
+            if theta != 0.0 {
+                let v = self.xb[i] - theta * wi;
+                self.xb[i] = if v < 0.0 && v > -self.feas_eps { 0.0 } else { v };
+            }
+        }
+        self.xb[r] = theta.max(0.0);
+        let old = self.basis[r];
+        if old < self.ncols {
+            self.in_basis[old] = false;
+        }
+        self.basis[r] = q;
+        self.in_basis[q] = true;
+        self.etas.push(Eta { r, wr, entries });
+    }
+
+    /// Simplex iterations for one phase's cost vector. Artificial
+    /// columns never (re-)enter; on an optimality or unboundedness
+    /// verdict reached through a non-empty eta file, the basis is
+    /// refactorized first and the verdict re-checked at full accuracy.
+    fn run(&mut self, phase: Phase) -> Result<()> {
+        let mut stall = 0usize;
+        let mut bland = false;
+        let mut last_obj = f64::INFINITY;
+
+        loop {
+            self.iterations += 1;
+            if self.iterations > self.max_iters {
+                return Err(Error::IterationLimit { iterations: self.iterations });
+            }
+
+            // BTRAN for the pricing vector y = B^{-T} c_B.
+            for r in 0..self.m {
+                self.cb[r] = self.cost_basic(phase, r);
+            }
+            self.btran();
+
+            // Pricing: d_j = c_j - y·A_j over nonbasic columns.
+            let mut enter: Option<usize> = None;
+            if bland {
+                for j in 0..self.ncols {
+                    if self.in_basis[j] {
+                        continue;
+                    }
+                    let d = self.cost_col(phase, j) - self.sf.a.col_dot(j, &self.y);
+                    if d < -self.eps {
+                        enter = Some(j);
+                        break;
+                    }
+                }
+            } else {
+                let mut best = -self.eps;
+                for j in 0..self.ncols {
+                    if self.in_basis[j] {
+                        continue;
+                    }
+                    let d = self.cost_col(phase, j) - self.sf.a.col_dot(j, &self.y);
+                    if d < best {
+                        best = d;
+                        enter = Some(j);
+                    }
+                }
+            }
+            let Some(q) = enter else {
+                if !self.etas.is_empty() {
+                    // Rule out eta-accumulated drift before declaring
+                    // optimality.
+                    self.refactorize()?;
+                    continue;
+                }
+                return Ok(());
+            };
+
+            // FTRAN: w = B^{-1} A_q.
+            self.load_column(q);
+            self.ftran();
+
+            // Ratio test.
+            let mut leave: Option<usize> = None;
+            let mut best_ratio = f64::INFINITY;
+            for i in 0..self.m {
+                let wi = self.w[i];
+                if wi > self.eps {
+                    let ratio = self.xb[i].max(0.0) / wi;
+                    let better = if bland {
+                        ratio < best_ratio - self.eps
+                            || (ratio < best_ratio + self.eps
+                                && leave.map_or(true, |l| self.basis[i] < self.basis[l]))
+                    } else {
+                        ratio < best_ratio
+                    };
+                    if better {
+                        best_ratio = ratio;
+                        leave = Some(i);
+                    }
+                }
+            }
+            let Some(r) = leave else {
+                if !self.etas.is_empty() {
+                    self.refactorize()?;
+                    continue;
+                }
+                return Err(Error::Unbounded(format!("column {q} has no positive entries")));
+            };
+
+            self.pivot(q, r);
+
+            // Degeneracy detection -> switch to Bland permanently.
+            let obj = self.objective(phase);
+            if obj < last_obj - 1e-12 {
+                last_obj = obj;
+                stall = 0;
+            } else {
+                stall += 1;
+                if stall > self.stall_limit {
+                    bland = true;
+                }
+            }
+
+            if self.etas.len() >= REFACTOR_EVERY {
+                self.refactorize()?;
+            }
+        }
+    }
+
+    fn phase1(&mut self) -> Result<()> {
+        if !self.basis.iter().any(|&b| b >= self.ncols) {
+            return Ok(());
+        }
+        self.run(Phase::One)?;
+        let obj = self.objective(Phase::One);
+        if obj > self.feas_eps {
+            return Err(Error::Infeasible(format!("phase-1 objective {obj:.3e} > 0")));
+        }
+        self.drive_out_artificials()
+    }
+
+    /// Pivot any artificial still basic (at value ~0) out on a
+    /// non-artificial column. Rows where no such column exists are
+    /// redundant: their artificial stays basic at zero and is inert —
+    /// `e_rᵀ B⁻¹ A_j = 0` for every real column, so no later pivot can
+    /// move it.
+    fn drive_out_artificials(&mut self) -> Result<()> {
+        if self.basis.iter().all(|&b| b < self.ncols) {
+            return Ok(());
+        }
+        // Work at full accuracy: the eta file is about to be probed
+        // row-by-row.
+        self.refactorize()?;
+        for r in 0..self.m {
+            if self.basis[r] < self.ncols {
+                continue;
+            }
+            // rho = B^{-T} e_r, then alpha_j = rho·A_j per column.
+            self.cb.iter_mut().for_each(|v| *v = 0.0);
+            self.cb[r] = 1.0;
+            self.btran();
+            let mut found = None;
+            for j in 0..self.ncols {
+                if self.in_basis[j] {
+                    continue;
+                }
+                if self.sf.a.col_dot(j, &self.y).abs() > self.eps {
+                    found = Some(j);
+                    break;
+                }
+            }
+            if let Some(q) = found {
+                self.load_column(q);
+                self.ftran();
+                if self.w[r].abs() > self.eps {
+                    // Degenerate pivot (theta ~ 0): swaps the basis
+                    // without moving the point.
+                    self.pivot(q, r);
+                    if self.etas.len() >= REFACTOR_EVERY {
+                        self.refactorize()?;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn extract(&mut self, p: &LpProblem, opts: &SimplexOptions) -> Result<LpSolution> {
+        // Residual artificial mass means numerical trouble.
+        let art_mass: f64 = (0..self.m)
+            .filter(|&r| self.basis[r] >= self.ncols)
+            .map(|r| self.xb[r].abs())
+            .sum();
+        if art_mass > self.feas_eps * 10.0 {
+            return Err(Error::Numerical(format!("artificial mass {art_mass:.3e} after phase 2")));
+        }
+
+        let mut x_full = vec![0.0; self.ncols];
+        for r in 0..self.m {
+            if self.basis[r] < self.ncols {
+                x_full[self.basis[r]] = self.xb[r];
+            }
+        }
+        let x: Vec<f64> = x_full[..p.num_vars()]
+            .iter()
+            .map(|&v| crate::util::float::snap_nonneg(v, 1e-9))
+            .collect();
+        let objective = p.objective_at(&x);
+
+        let duals = if opts.compute_duals { Some(self.compute_duals()) } else { None };
+
+        let basis = Basis {
+            cols: self
+                .basis
+                .iter()
+                .map(|&b| if b < self.ncols { b } else { usize::MAX })
+                .collect(),
+        };
+
+        Ok(LpSolution { x, objective, iterations: self.iterations, duals, basis: Some(basis) })
+    }
+
+    /// Duals `y = B⁻ᵀ c_B` (phase-2 costs), with standardization row
+    /// flips undone.
+    fn compute_duals(&mut self) -> Vec<f64> {
+        for r in 0..self.m {
+            self.cb[r] = self.cost_basic(Phase::Two, r);
+        }
+        self.btran();
+        self.y
+            .iter()
+            .zip(self.sf.flipped.iter())
+            .map(|(&yi, &f)| if f { -yi } else { yi })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lp::problem::{Cmp, LpProblem};
+    use crate::lp::simplex::{solve_warm, SolverBackend};
+
+    fn opts() -> SimplexOptions {
+        SimplexOptions::default() // RevisedSparse is the default backend
+    }
+
+    fn assert_close(a: f64, b: f64) {
+        assert!((a - b).abs() < 1e-7, "{a} vs {b}");
+    }
+
+    fn textbook() -> LpProblem {
+        // max 3x + 5y st x<=4, 2y<=12, 3x+2y<=18 -> x=2, y=6, obj=36
+        let mut p = LpProblem::new(2);
+        p.set_objective(&[-3.0, -5.0]);
+        p.add_constraint(&[(0, 1.0)], Cmp::Le, 4.0);
+        p.add_constraint(&[(1, 2.0)], Cmp::Le, 12.0);
+        p.add_constraint(&[(0, 3.0), (1, 2.0)], Cmp::Le, 18.0);
+        p
+    }
+
+    #[test]
+    fn textbook_optimum_and_basis() {
+        let p = textbook();
+        let s = solve_revised(&p, &opts(), None).unwrap();
+        assert_close(s.objective, -36.0);
+        assert_close(s.x[0], 2.0);
+        assert_close(s.x[1], 6.0);
+        let b = s.basis.as_ref().unwrap();
+        assert!(b.is_complete());
+        assert_eq!(b.cols.len(), 3);
+    }
+
+    #[test]
+    fn warm_start_reaches_same_optimum_faster() {
+        let p = textbook();
+        let cold = solve_revised(&p, &opts(), None).unwrap();
+        // Same structure, perturbed rhs.
+        let mut p2 = LpProblem::new(2);
+        p2.set_objective(&[-3.0, -5.0]);
+        p2.add_constraint(&[(0, 1.0)], Cmp::Le, 4.4);
+        p2.add_constraint(&[(1, 2.0)], Cmp::Le, 13.0);
+        p2.add_constraint(&[(0, 3.0), (1, 2.0)], Cmp::Le, 19.0);
+        let cold2 = solve_revised(&p2, &opts(), None).unwrap();
+        let warm2 = solve_revised(&p2, &opts(), cold.basis.as_ref()).unwrap();
+        assert_close(warm2.objective, cold2.objective);
+        assert!(
+            warm2.iterations <= cold2.iterations,
+            "warm {} > cold {}",
+            warm2.iterations,
+            cold2.iterations
+        );
+    }
+
+    #[test]
+    fn warm_start_with_garbage_basis_falls_back() {
+        let p = textbook();
+        let junk = Basis { cols: vec![0, 0, 0] }; // singular
+        let s = solve_revised(&p, &opts(), Some(&junk)).unwrap();
+        assert_close(s.objective, -36.0);
+        let wrong_len = Basis { cols: vec![0] };
+        let s = solve_revised(&p, &opts(), Some(&wrong_len)).unwrap();
+        assert_close(s.objective, -36.0);
+    }
+
+    #[test]
+    fn infeasible_detected() {
+        let mut p = LpProblem::new(1);
+        p.add_constraint(&[(0, 1.0)], Cmp::Le, 1.0);
+        p.add_constraint(&[(0, 1.0)], Cmp::Ge, 2.0);
+        match solve_revised(&p, &opts(), None) {
+            Err(Error::Infeasible(_)) => {}
+            other => panic!("expected infeasible, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unbounded_detected() {
+        let mut p = LpProblem::new(1);
+        p.set_objective(&[-1.0]);
+        p.add_constraint(&[(0, 1.0)], Cmp::Ge, 0.0);
+        match solve_revised(&p, &opts(), None) {
+            Err(Error::Unbounded(_)) => {}
+            other => panic!("expected unbounded, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn degenerate_terminates() {
+        let mut p = LpProblem::new(2);
+        p.set_objective(&[-1.0, -1.0]);
+        p.add_constraint(&[(0, 1.0), (1, 1.0)], Cmp::Le, 1.0);
+        p.add_constraint(&[(0, 1.0)], Cmp::Le, 1.0);
+        p.add_constraint(&[(1, 1.0)], Cmp::Le, 1.0);
+        p.add_constraint(&[(0, 1.0), (1, -1.0)], Cmp::Le, 0.0);
+        p.add_constraint(&[(0, -1.0), (1, 1.0)], Cmp::Le, 0.0);
+        let s = solve_revised(&p, &opts(), None).unwrap();
+        assert_close(s.objective, -1.0);
+    }
+
+    #[test]
+    fn redundant_equality_rows() {
+        let mut p = LpProblem::new(2);
+        p.set_objective(&[-1.0, 0.0]);
+        p.add_constraint(&[(0, 1.0), (1, 1.0)], Cmp::Eq, 1.0);
+        p.add_constraint(&[(0, 1.0), (1, 1.0)], Cmp::Eq, 1.0);
+        let s = solve_revised(&p, &opts(), None).unwrap();
+        assert_close(s.x[0], 1.0);
+    }
+
+    #[test]
+    fn duals_satisfy_strong_duality() {
+        let p = textbook();
+        let s = solve_revised(&p, &opts(), None).unwrap();
+        let y = s.duals.as_ref().unwrap();
+        let by = 4.0 * y[0] + 12.0 * y[1] + 18.0 * y[2];
+        assert_close(by, s.objective);
+    }
+
+    #[test]
+    fn agrees_with_dense_backend_on_random_lps() {
+        use crate::util::rng::{Pcg32, Rng};
+        let dense = SimplexOptions {
+            backend: SolverBackend::DenseTableau,
+            ..SimplexOptions::default()
+        };
+        let mut rng = Pcg32::new(4242);
+        for trial in 0..40 {
+            let n = rng.range_usize(2, 7);
+            let m = rng.range_usize(1, 6);
+            let mut p = LpProblem::new(n);
+            let c: Vec<f64> = (0..n).map(|_| rng.range_f64(0.1, 2.0)).collect();
+            p.set_objective(&c);
+            for k in 0..m {
+                let coeffs: Vec<(usize, f64)> =
+                    (0..n).map(|v| (v, rng.range_f64(0.1, 1.0))).collect();
+                let cmp = if k % 3 == 0 { Cmp::Eq } else { Cmp::Ge };
+                p.add_constraint(&coeffs, cmp, rng.range_f64(0.5, 3.0));
+            }
+            let a = solve_revised(&p, &opts(), None);
+            let b = solve_warm(&p, &dense, None);
+            match (a, b) {
+                (Ok(sa), Ok(sb)) => {
+                    assert!(
+                        (sa.objective - sb.objective).abs()
+                            < 1e-6 * (1.0 + sb.objective.abs()),
+                        "trial {trial}: revised {} vs dense {}",
+                        sa.objective,
+                        sb.objective
+                    );
+                    assert!(p.check_feasible(&sa.x, 1e-6).is_none(), "trial {trial}");
+                }
+                (Err(_), Err(_)) => {}
+                (a, b) => panic!("trial {trial}: backends disagree: {a:?} vs {b:?}"),
+            }
+        }
+    }
+}

@@ -1,18 +1,35 @@
-//! Two-phase dense primal simplex.
+//! Simplex front door: backend selection + the dense-tableau fallback.
 //!
-//! Phase 1 minimizes the sum of artificial variables to find a basic
-//! feasible solution; phase 2 minimizes the real objective. Pricing is
-//! Dantzig (most negative reduced cost) with a permanent switch to
-//! Bland's rule once degeneracy stalls progress, which guarantees
-//! termination. The tableau is dense — paper instances top out around
-//! a few thousand columns, where dense pivots are faster than sparse
-//! bookkeeping.
+//! Two backends sit behind [`solve`]/[`solve_with`]:
+//!
+//! - [`SolverBackend::RevisedSparse`] (default) — revised simplex over
+//!   CSC columns with a reusable LU basis factorization and
+//!   product-form eta updates ([`super::revised`]). Supports basis
+//!   warm starts via [`solve_warm`].
+//! - [`SolverBackend::DenseTableau`] — the original two-phase dense
+//!   tableau, kept in this module as a fallback and as the oracle the
+//!   revised backend is property-tested against.
+//!
+//! Both phases use Dantzig pricing (most negative reduced cost) with a
+//! permanent switch to Bland's rule once degeneracy stalls progress,
+//! which guarantees termination.
 
 use super::problem::LpProblem;
+use super::revised::{self, Basis};
 use super::solution::LpSolution;
 use super::standard::{AuxKind, StandardForm};
 use crate::error::{Error, Result};
 use crate::linalg::{lu_solve, Matrix};
+
+/// Which simplex implementation runs a solve.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SolverBackend {
+    /// Revised simplex over sparse column storage (default).
+    #[default]
+    RevisedSparse,
+    /// Dense two-phase tableau (fallback / cross-check oracle).
+    DenseTableau,
+}
 
 /// Solver tuning knobs.
 #[derive(Debug, Clone)]
@@ -28,6 +45,8 @@ pub struct SimplexOptions {
     pub stall_limit: usize,
     /// Extract dual values on success.
     pub compute_duals: bool,
+    /// Simplex implementation to run.
+    pub backend: SolverBackend,
 }
 
 impl Default for SimplexOptions {
@@ -38,6 +57,7 @@ impl Default for SimplexOptions {
             max_iters: 0,
             stall_limit: 64,
             compute_duals: true,
+            backend: SolverBackend::default(),
         }
     }
 }
@@ -49,11 +69,27 @@ pub fn solve(p: &LpProblem) -> Result<LpSolution> {
 
 /// Solve with explicit options.
 pub fn solve_with(p: &LpProblem, opts: &SimplexOptions) -> Result<LpSolution> {
-    let sf = StandardForm::equality(p);
-    let mut t = Tableau::new(&sf, opts);
-    t.phase1()?;
-    t.phase2()?;
-    t.extract(p, &sf, opts)
+    solve_warm(p, opts, None)
+}
+
+/// Solve, optionally starting from a previous optimal [`Basis`] of a
+/// structurally identical problem (same variable/constraint counts).
+///
+/// Warm starts are honored by the revised backend; an unusable basis
+/// (wrong shape, singular, or primal-infeasible for the new data)
+/// silently falls back to a cold two-phase start, so this is always
+/// safe to call. The dense backend ignores the hint.
+pub fn solve_warm(p: &LpProblem, opts: &SimplexOptions, warm: Option<&Basis>) -> Result<LpSolution> {
+    match opts.backend {
+        SolverBackend::RevisedSparse => revised::solve_revised(p, opts, warm),
+        SolverBackend::DenseTableau => {
+            let sf = StandardForm::equality(p);
+            let mut t = Tableau::new(&sf, opts);
+            t.phase1()?;
+            t.phase2()?;
+            t.extract(p, &sf, opts)
+        }
+    }
 }
 
 /// Dense simplex tableau: `m` constraint rows over `width` columns
@@ -94,16 +130,21 @@ impl Tableau {
         let num_art = needs_artificial.iter().filter(|&&x| x).count();
         let width = base + num_art;
 
-        let mut rows = vec![0.0; m * (width + 1)];
+        let stride = width + 1;
+        let mut rows = vec![0.0; m * stride];
+        // Scatter the CSC standard form into the dense tableau.
+        for j in 0..base {
+            for (i, v) in sf.a.col(j) {
+                rows[i * stride + j] = v;
+            }
+        }
         let mut basis = vec![usize::MAX; m];
         let mut next_art = base;
         // Locate each row's slack column (if any) for the initial basis.
         // Slack/surplus columns are appended in row order in StandardForm.
         let mut aux_col = sf.num_structural;
         for i in 0..m {
-            let stride = width + 1;
             let r = &mut rows[i * stride..(i + 1) * stride];
-            r[..base].copy_from_slice(sf.a.row(i));
             r[width] = sf.b[i];
             match sf.aux[i] {
                 AuxKind::Slack => {
@@ -388,11 +429,20 @@ impl Tableau {
             None
         };
 
+        // Basis in structural+aux numbering; rows still held by an
+        // artificial (redundant constraints) are marked unusable.
+        let basis_cols: Vec<usize> = self
+            .basis
+            .iter()
+            .map(|&b| if b < self.art_start { b } else { usize::MAX })
+            .collect();
+
         Ok(LpSolution {
             x,
             objective,
             iterations: self.iterations,
             duals,
+            basis: Some(Basis { cols: basis_cols }),
         })
     }
 
@@ -404,9 +454,10 @@ impl Tableau {
         for (k, &bv) in self.basis.iter().enumerate() {
             // Column of the original standard-form matrix for basic var bv;
             // artificial columns are unit vectors on their row.
-            for i in 0..m {
-                let v = if bv < sf.a.cols() { sf.a[(i, bv)] } else { 0.0 };
-                bt[(k, i)] = v;
+            if bv < sf.a.cols() {
+                for (i, v) in sf.a.col(bv) {
+                    bt[(k, i)] = v;
+                }
             }
             if bv >= sf.a.cols() {
                 // Artificial for some row r: unit column e_r. Find r by
@@ -438,6 +489,34 @@ mod tests {
 
     fn assert_close(a: f64, b: f64) {
         assert!((a - b).abs() < 1e-7, "{a} vs {b}");
+    }
+
+    fn dense_opts() -> SimplexOptions {
+        SimplexOptions { backend: SolverBackend::DenseTableau, ..SimplexOptions::default() }
+    }
+
+    #[test]
+    fn dense_backend_still_solves_textbook() {
+        let mut p = LpProblem::new(2);
+        p.set_objective(&[-3.0, -5.0]);
+        p.add_constraint(&[(0, 1.0)], Cmp::Le, 4.0);
+        p.add_constraint(&[(1, 2.0)], Cmp::Le, 12.0);
+        p.add_constraint(&[(0, 3.0), (1, 2.0)], Cmp::Le, 18.0);
+        let s = solve_with(&p, &dense_opts()).unwrap();
+        assert_close(s.objective, -36.0);
+        assert!(s.basis.is_some());
+    }
+
+    #[test]
+    fn backends_agree_on_equalities_and_degeneracy() {
+        let mut p = LpProblem::new(3);
+        p.set_objective(&[1.0, 2.0, 0.5]);
+        p.add_constraint(&[(0, 1.0), (1, 1.0), (2, 1.0)], Cmp::Eq, 6.0);
+        p.add_constraint(&[(0, 1.0)], Cmp::Ge, 1.0);
+        p.add_constraint(&[(1, 1.0), (2, 1.0)], Cmp::Le, 5.0);
+        let a = solve(&p).unwrap();
+        let b = solve_with(&p, &dense_opts()).unwrap();
+        assert_close(a.objective, b.objective);
     }
 
     #[test]

@@ -1,5 +1,7 @@
 //! LP solution container.
 
+use super::revised::Basis;
+
 /// Result of a successful LP solve.
 #[derive(Debug, Clone)]
 pub struct LpSolution {
@@ -11,6 +13,9 @@ pub struct LpSolution {
     pub iterations: usize,
     /// Dual values per constraint (if requested and extractable).
     pub duals: Option<Vec<f64>>,
+    /// Optimal basis, usable to warm-start the next solve of a
+    /// structurally identical problem (see [`super::solve_warm`]).
+    pub basis: Option<Basis>,
 }
 
 impl LpSolution {

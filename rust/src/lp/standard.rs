@@ -7,7 +7,7 @@
 //!   with an equality mask ([`StandardForm::rowwise`]).
 
 use super::problem::{Cmp, LpProblem};
-use crate::linalg::Matrix;
+use crate::linalg::{Matrix, SparseMatrix};
 
 /// Kind of auxiliary column appended for a constraint row.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -22,10 +22,15 @@ pub enum AuxKind {
 
 /// Equality standard form for the simplex: `min c'x, Ax = b, x >= 0`,
 /// with `b >= 0` (rows are sign-flipped as needed).
+///
+/// The constraint matrix is carried **sparsely end-to-end**: the DLT
+/// builders emit sparse rows, and both simplex backends consume CSC
+/// columns, so nothing densifies in between. (The dense-tableau
+/// fallback scatters columns into its own row-major buffer.)
 #[derive(Debug, Clone)]
 pub struct StandardForm {
-    /// Constraint matrix including slack/surplus columns.
-    pub a: Matrix,
+    /// Constraint matrix including slack/surplus columns (CSC).
+    pub a: SparseMatrix,
     /// Right-hand side, all entries `>= 0`.
     pub b: Vec<f64>,
     /// Objective over all columns (zeros for aux columns).
@@ -65,7 +70,8 @@ impl StandardForm {
         let num_aux = aux.iter().filter(|k| **k != AuxKind::None).count();
         let total = n + num_aux;
 
-        let mut a = Matrix::zeros(m, total);
+        let nnz_est: usize = p.constraints().iter().map(|c| c.coeffs.len()).sum();
+        let mut trips: Vec<(usize, usize, f64)> = Vec::with_capacity(nnz_est + num_aux);
         let mut b = vec![0.0; m];
         let mut c_vec = vec![0.0; total];
         c_vec[..n].copy_from_slice(p.objective());
@@ -74,22 +80,25 @@ impl StandardForm {
         for (i, con) in p.constraints().iter().enumerate() {
             let sign = if flipped[i] { -1.0 } else { 1.0 };
             for &(v, coef) in &con.coeffs {
-                a[(i, v)] += sign * coef;
+                trips.push((i, v, sign * coef));
             }
             b[i] = sign * con.rhs;
             match aux[i] {
                 AuxKind::Slack => {
-                    a[(i, next_aux)] = 1.0;
+                    trips.push((i, next_aux, 1.0));
                     next_aux += 1;
                 }
                 AuxKind::Surplus => {
-                    a[(i, next_aux)] = -1.0;
+                    trips.push((i, next_aux, -1.0));
                     next_aux += 1;
                 }
                 AuxKind::None => {}
             }
         }
         debug_assert_eq!(next_aux, total);
+        // `from_triplets` sums duplicate (row, var) pairs, matching the
+        // previous dense `a[(i, v)] += ...` accumulation.
+        let a = SparseMatrix::from_triplets(m, total, &trips);
 
         StandardForm { a, b, c: c_vec, num_structural: n, aux, flipped }
     }
@@ -183,5 +192,19 @@ mod tests {
         p.add_constraint(&[(0, 1.0), (0, 2.0)], Cmp::Le, 4.0);
         let sf = StandardForm::equality(&p);
         assert_eq!(sf.a[(0, 0)], 3.0);
+    }
+
+    #[test]
+    fn equality_form_stays_sparse() {
+        // 10 vars, each row touching 2: nnz must be per-row work, not
+        // rows × cols.
+        let mut p = LpProblem::new(10);
+        for i in 0..9 {
+            p.add_constraint(&[(i, 1.0), (i + 1, -1.0)], Cmp::Le, 1.0);
+        }
+        let sf = StandardForm::equality(&p);
+        // 2 structural + 1 slack per row.
+        assert_eq!(sf.a.nnz(), 9 * 3);
+        assert!(sf.a.density() < 0.2);
     }
 }

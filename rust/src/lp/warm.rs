@@ -1,0 +1,116 @@
+//! Warm-start cache for families of structurally identical LPs.
+//!
+//! The paper's evaluation re-solves hundreds of near-identical
+//! instances (job-size sweeps, processor-count sweeps, advisor
+//! queries). Within such a family the LP *structure* — variable and
+//! constraint counts — is fixed while rhs/objective data moves a
+//! little, so the previous optimal basis is almost always primal
+//! feasible for the next instance and phase 1 can be skipped.
+//!
+//! [`WarmCache`] keys the last optimal [`Basis`] by
+//! `(num_vars, num_constraints)`; [`WarmCache::solve`] transparently
+//! warm-starts when a basis for the shape is cached and falls back to
+//! a cold solve otherwise (or when the basis turned out unusable —
+//! see [`super::solve_warm`]). One cache per solver thread is the
+//! intended usage; see `experiments::sweep` for the parallel layer.
+
+use super::problem::LpProblem;
+use super::revised::Basis;
+use super::simplex::{solve_warm, SimplexOptions};
+use super::solution::LpSolution;
+use crate::error::Result;
+use std::collections::HashMap;
+
+/// Per-thread warm-start state: last optimal basis per LP shape.
+#[derive(Debug, Default)]
+pub struct WarmCache {
+    bases: HashMap<(usize, usize), Basis>,
+    /// Solves that found a cached basis for their shape (the solver
+    /// may still have fallen back if the basis was unusable).
+    pub warm_attempts: usize,
+    /// Solves with no cached basis for their shape.
+    pub cold_solves: usize,
+}
+
+impl WarmCache {
+    /// Empty cache.
+    pub fn new() -> WarmCache {
+        WarmCache::default()
+    }
+
+    /// Solve `p`, warm-starting from the cached basis for its shape
+    /// when one exists, and caching the new optimal basis on success.
+    pub fn solve(&mut self, p: &LpProblem, opts: &SimplexOptions) -> Result<LpSolution> {
+        let key = (p.num_vars(), p.num_constraints());
+        let warm = self.bases.get(&key);
+        if warm.is_some() {
+            self.warm_attempts += 1;
+        } else {
+            self.cold_solves += 1;
+        }
+        let sol = solve_warm(p, opts, warm)?;
+        if let Some(b) = &sol.basis {
+            if b.is_complete() {
+                self.bases.insert(key, b.clone());
+            }
+        }
+        Ok(sol)
+    }
+
+    /// Number of cached bases.
+    pub fn len(&self) -> usize {
+        self.bases.len()
+    }
+
+    /// True when nothing is cached yet.
+    pub fn is_empty(&self) -> bool {
+        self.bases.is_empty()
+    }
+
+    /// Drop all cached bases (counters are kept).
+    pub fn clear(&mut self) {
+        self.bases.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lp::problem::{Cmp, LpProblem};
+
+    fn lp(rhs: f64) -> LpProblem {
+        let mut p = LpProblem::new(2);
+        p.set_objective(&[1.0, 2.0]);
+        p.add_constraint(&[(0, 1.0), (1, 1.0)], Cmp::Ge, rhs);
+        p.add_constraint(&[(0, 1.0)], Cmp::Le, rhs * 2.0);
+        p
+    }
+
+    #[test]
+    fn caches_and_reuses_bases() {
+        let mut cache = WarmCache::new();
+        let opts = SimplexOptions::default();
+        let s1 = cache.solve(&lp(3.0), &opts).unwrap();
+        assert_eq!((cache.cold_solves, cache.warm_attempts), (1, 0));
+        assert_eq!(cache.len(), 1);
+        let s2 = cache.solve(&lp(4.5), &opts).unwrap();
+        assert_eq!((cache.cold_solves, cache.warm_attempts), (1, 1));
+        // min x + 2y st x + y >= r -> x = r.
+        assert!((s1.objective - 3.0).abs() < 1e-7);
+        assert!((s2.objective - 4.5).abs() < 1e-7);
+        assert!(s2.iterations <= s1.iterations);
+    }
+
+    #[test]
+    fn different_shapes_do_not_collide() {
+        let mut cache = WarmCache::new();
+        let opts = SimplexOptions::default();
+        cache.solve(&lp(3.0), &opts).unwrap();
+        let mut other = LpProblem::new(3);
+        other.set_objective(&[1.0, 1.0, 1.0]);
+        other.add_constraint(&[(0, 1.0), (2, 1.0)], Cmp::Ge, 1.0);
+        cache.solve(&other, &opts).unwrap();
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.cold_solves, 2);
+    }
+}

@@ -55,10 +55,12 @@ pub fn solve_rust(p: &LpProblem, nv: usize, nc: usize, opts: &PdhgOptions) -> Re
     let tau = opts.step_factor / pad.a_norm.max(1e-12);
     let mut x = vec![0.0; pad.nv];
     let mut y = vec![0.0; pad.nc];
+    // One scratch allocation for the whole solve; every block reuses it.
+    let mut scratch = rust_impl::PdhgScratch::for_shape(pad.nv, pad.nc);
     let mut blocks = 0;
-    let mut res = rust_impl::residuals(&pad, &x, &y);
+    let mut res = rust_impl::residuals_with(&pad, &x, &y, &mut scratch);
     while blocks < opts.max_blocks {
-        res = rust_impl::run_block(&pad, &mut x, &mut y, tau, tau, 200);
+        res = rust_impl::run_block_with(&pad, &mut x, &mut y, tau, tau, 200, &mut scratch);
         blocks += 1;
         let scale = crate::linalg::dot(&pad.c, &x).abs() + 1.0;
         if res.primal < opts.tol && res.dual < opts.tol && res.gap < opts.gap_tol * scale {

@@ -18,4 +18,5 @@ pub mod rust_impl;
 pub mod standardize;
 
 pub use driver::{solve_artifact, solve_rust, PdhgOptions, PdhgSolution};
+pub use rust_impl::PdhgScratch;
 pub use standardize::PaddedLp;

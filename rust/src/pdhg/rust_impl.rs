@@ -19,7 +19,34 @@ pub struct Residuals {
     pub gap: f64,
 }
 
-/// Run `steps` PDHG iterations in place on `(x, y)`.
+/// Reusable buffers for [`run_block_with`] / [`residuals_with`]: one
+/// allocation per solve instead of several per block.
+#[derive(Debug, Default)]
+pub struct PdhgScratch {
+    aty: Vec<f64>,
+    az: Vec<f64>,
+    z: Vec<f64>,
+}
+
+impl PdhgScratch {
+    /// Buffers sized for a padded `(nv, nc)` problem.
+    pub fn for_shape(nv: usize, nc: usize) -> PdhgScratch {
+        PdhgScratch { aty: vec![0.0; nv], az: vec![0.0; nc], z: vec![0.0; nv] }
+    }
+
+    fn ensure(&mut self, nv: usize, nc: usize) {
+        if self.aty.len() != nv {
+            self.aty.resize(nv, 0.0);
+            self.z.resize(nv, 0.0);
+        }
+        if self.az.len() != nc {
+            self.az.resize(nc, 0.0);
+        }
+    }
+}
+
+/// Run `steps` PDHG iterations in place on `(x, y)` (allocating
+/// convenience wrapper over [`run_block_with`]).
 pub fn run_block(
     lp: &PaddedLp,
     x: &mut [f64],
@@ -28,16 +55,32 @@ pub fn run_block(
     sigma: f64,
     steps: usize,
 ) -> Residuals {
+    let mut scratch = PdhgScratch::for_shape(lp.nv, lp.nc);
+    run_block_with(lp, x, y, tau, sigma, steps, &mut scratch)
+}
+
+/// Run `steps` PDHG iterations in place on `(x, y)`, reusing
+/// caller-owned scratch buffers across blocks.
+pub fn run_block_with(
+    lp: &PaddedLp,
+    x: &mut [f64],
+    y: &mut [f64],
+    tau: f64,
+    sigma: f64,
+    steps: usize,
+    scratch: &mut PdhgScratch,
+) -> Residuals {
     let (nv, nc) = (lp.nv, lp.nc);
     debug_assert_eq!(x.len(), nv);
     debug_assert_eq!(y.len(), nc);
-    let mut aty = vec![0.0; nv];
-    let mut az = vec![0.0; nc];
-    let mut z = vec![0.0; nv];
+    scratch.ensure(nv, nc);
+    let aty = &mut scratch.aty;
+    let az = &mut scratch.az;
+    let z = &mut scratch.z;
 
     for _ in 0..steps {
         // aty = A' y
-        matvec_t(&lp.a, nc, nv, y, &mut aty);
+        matvec_t(&lp.a, nc, nv, y, aty);
         // x' = max(0, x - tau (c + A'y));  z = 2x' - x
         for j in 0..nv {
             let xn = (x[j] - tau * (lp.c[j] + aty[j])).max(0.0);
@@ -45,28 +88,40 @@ pub fn run_block(
             x[j] = xn;
         }
         // y' = proj(y + sigma (A z - b))
-        matvec(&lp.a, nc, nv, &z, &mut az);
+        matvec(&lp.a, nc, nv, z, az);
         for i in 0..nc {
             let yn = y[i] + sigma * (az[i] - lp.b[i]);
             y[i] = if lp.eq_mask[i] > 0.5 { yn } else { yn.max(0.0) };
         }
     }
-    residuals(lp, x, y)
+    residuals_with(lp, x, y, scratch)
 }
 
-/// KKT residuals at `(x, y)`.
+/// KKT residuals at `(x, y)` (allocating convenience wrapper).
 pub fn residuals(lp: &PaddedLp, x: &[f64], y: &[f64]) -> Residuals {
+    let mut scratch = PdhgScratch::for_shape(lp.nv, lp.nc);
+    residuals_with(lp, x, y, &mut scratch)
+}
+
+/// KKT residuals at `(x, y)`, reusing caller-owned scratch buffers.
+pub fn residuals_with(
+    lp: &PaddedLp,
+    x: &[f64],
+    y: &[f64],
+    scratch: &mut PdhgScratch,
+) -> Residuals {
     let (nv, nc) = (lp.nv, lp.nc);
-    let mut ax = vec![0.0; nc];
-    matvec(&lp.a, nc, nv, x, &mut ax);
+    scratch.ensure(nv, nc);
+    let ax = &mut scratch.az;
+    matvec(&lp.a, nc, nv, x, ax);
     let mut primal = 0.0f64;
     for i in 0..nc {
         let v = ax[i] - lp.b[i];
         let viol = if lp.eq_mask[i] > 0.5 { v.abs() } else { v.max(0.0) };
         primal = primal.max(viol);
     }
-    let mut aty = vec![0.0; nv];
-    matvec_t(&lp.a, nc, nv, y, &mut aty);
+    let aty = &mut scratch.aty;
+    matvec_t(&lp.a, nc, nv, y, aty);
     let mut dual = 0.0f64;
     for j in 0..nv {
         dual = dual.max((-(lp.c[j] + aty[j])).max(0.0));

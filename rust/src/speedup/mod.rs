@@ -6,6 +6,7 @@
 
 use crate::dlt::no_frontend;
 use crate::error::Result;
+use crate::lp::WarmCache;
 use crate::model::SystemSpec;
 
 /// Speedup of `p` sources over one source at fixed `n` processors
@@ -34,15 +35,26 @@ pub fn sweep(
     source_counts: &[usize],
     max_processors: usize,
 ) -> Result<Vec<SpeedupPoint>> {
+    // One warm cache across the whole grid: each (n, m) shape keeps
+    // its last optimal basis, so re-sweeps and repeated shapes skip
+    // phase 1.
+    let mut cache = WarmCache::new();
+    let opts = no_frontend::NfeOptions::default();
     let mut out = Vec::new();
     for &m in &(1..=max_processors).collect::<Vec<_>>() {
         // Single-source baseline for this m.
-        let base = no_frontend::solve(&spec.with_n_sources(1).with_m_processors(m))?;
+        let base =
+            no_frontend::solve_cached(&spec.with_n_sources(1).with_m_processors(m), &opts, &mut cache)?;
         for &p in source_counts {
             let tf = if p == 1 {
                 base.makespan
             } else {
-                no_frontend::solve(&spec.with_n_sources(p).with_m_processors(m))?.makespan
+                no_frontend::solve_cached(
+                    &spec.with_n_sources(p).with_m_processors(m),
+                    &opts,
+                    &mut cache,
+                )?
+                .makespan
             };
             out.push(SpeedupPoint {
                 sources: p,

@@ -1,0 +1,157 @@
+//! Back-end agreement properties: the sparse revised simplex (default)
+//! vs the dense tableau (fallback/oracle) on randomized DLT LPs from
+//! both frontends, warm-start equivalence, paper-anchor agreement, and
+//! parallel-sweep determinism.
+
+use dlt::dlt::schedule::TimingModel;
+use dlt::dlt::{frontend, no_frontend};
+use dlt::experiments::params;
+use dlt::experiments::sweep::{job_grid, run_scenarios, SweepOptions};
+use dlt::lp::{solve_warm, solve_with, LpProblem, SimplexOptions, SolverBackend};
+use dlt::testkit::{arb_spec, props};
+
+fn dense() -> SimplexOptions {
+    SimplexOptions { backend: SolverBackend::DenseTableau, ..SimplexOptions::default() }
+}
+
+fn revised() -> SimplexOptions {
+    SimplexOptions::default()
+}
+
+/// Objectives agree within 1e-6 (relative) and the revised solution is
+/// feasible for the original problem.
+fn assert_backends_agree(lp: &LpProblem, ctx: &str) -> Result<(), String> {
+    match (solve_with(lp, &revised()), solve_with(lp, &dense())) {
+        (Ok(a), Ok(b)) => {
+            let tol = 1e-6 * (1.0 + b.objective.abs());
+            if (a.objective - b.objective).abs() > tol {
+                return Err(format!(
+                    "{ctx}: objectives differ: revised {} vs dense {}",
+                    a.objective, b.objective
+                ));
+            }
+            if let Some(v) = lp.check_feasible(&a.x, 1e-6) {
+                return Err(format!("{ctx}: revised solution infeasible: {v}"));
+            }
+            Ok(())
+        }
+        (Err(_), Err(_)) => Ok(()), // both reject (e.g. infeasible spec)
+        (a, b) => Err(format!("{ctx}: backends disagree on solvability: {a:?} vs {b:?}")),
+    }
+}
+
+#[test]
+fn prop_backends_agree_on_fe_lps() {
+    props("revised == dense (fe)", 50, |g| {
+        let spec = arb_spec(g, 4, 6);
+        let lp = frontend::build_lp(&spec, &Default::default());
+        assert_backends_agree(&lp, "fe")
+    });
+}
+
+#[test]
+fn prop_backends_agree_on_nfe_lps() {
+    props("revised == dense (nfe)", 50, |g| {
+        let spec = arb_spec(g, 3, 5);
+        let lp = no_frontend::build_lp(&spec, &Default::default());
+        assert_backends_agree(&lp, "nfe")
+    });
+}
+
+/// Warm-starting from a perturbed instance's optimal basis reaches the
+/// same optimum as a cold solve, without more iterations.
+#[test]
+fn prop_warm_start_matches_cold() {
+    props("warm == cold", 40, |g| {
+        let spec = arb_spec(g, 3, 5);
+        let opts = revised();
+        let base_lp = frontend::build_lp(&spec, &Default::default());
+        let Ok(base) = solve_with(&base_lp, &opts) else { return Ok(()) };
+        // Same structure, scaled job (rhs perturbation).
+        let k = g.f64_in(0.5, 2.5);
+        let lp2 = frontend::build_lp(&spec.with_job(spec.job * k), &Default::default());
+        let Ok(cold) = solve_with(&lp2, &opts) else { return Ok(()) };
+        let warm = solve_warm(&lp2, &opts, base.basis.as_ref()).map_err(|e| e.to_string())?;
+        let tol = 1e-6 * (1.0 + cold.objective.abs());
+        if (warm.objective - cold.objective).abs() > tol {
+            return Err(format!("warm {} vs cold {}", warm.objective, cold.objective));
+        }
+        if let Some(v) = lp2.check_feasible(&warm.x, 1e-6) {
+            return Err(format!("warm solution infeasible: {v}"));
+        }
+        if warm.iterations > cold.iterations {
+            return Err(format!(
+                "warm start took more iterations ({} > {})",
+                warm.iterations, cold.iterations
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Acceptance: both backends agree on every paper-anchor instance.
+#[test]
+fn paper_anchor_instances_agree() {
+    let cases: Vec<(&str, LpProblem)> = vec![
+        ("table1 fe", frontend::build_lp(&params::table1(), &Default::default())),
+        ("table2 nfe", no_frontend::build_lp(&params::table2(), &Default::default())),
+        ("table3 fe", frontend::build_lp(&params::table3(), &Default::default())),
+        ("table3 nfe", no_frontend::build_lp(&params::table3(), &Default::default())),
+        ("table4 nfe", no_frontend::build_lp(&params::table4(), &Default::default())),
+        ("table5 fe", frontend::build_lp(&params::table5(), &Default::default())),
+    ];
+    for (name, lp) in &cases {
+        assert_backends_agree(lp, name).unwrap_or_else(|e| panic!("{e}"));
+    }
+    // Processor-count sub-instances of the Table 5 advisor sweep.
+    let t5 = params::table5();
+    for m in 1..=t5.m() {
+        let lp = frontend::build_lp(&t5.with_m_processors(m), &Default::default());
+        assert_backends_agree(&lp, &format!("table5 m={m}")).unwrap_or_else(|e| panic!("{e}"));
+    }
+}
+
+/// The parallel sweep returns the same makespans as a serial sweep,
+/// in the same order, regardless of thread count.
+#[test]
+fn parallel_sweep_is_deterministic() {
+    let spec = params::table1();
+    let jobs: Vec<f64> = (0..24).map(|k| 60.0 + 20.0 * k as f64).collect();
+    for model in [TimingModel::FrontEnd, TimingModel::NoFrontEnd] {
+        let grid = job_grid(&spec, &jobs, model);
+        let serial =
+            run_scenarios(&grid, &SweepOptions { threads: 1, warm_start: true }).unwrap();
+        for threads in [2usize, 3, 8] {
+            let par =
+                run_scenarios(&grid, &SweepOptions { threads, warm_start: true }).unwrap();
+            assert_eq!(serial.len(), par.len());
+            for (a, b) in serial.iter().zip(par.iter()) {
+                assert_eq!(a.label, b.label);
+                assert!(
+                    (a.makespan - b.makespan).abs() < 1e-7 * (1.0 + a.makespan.abs()),
+                    "{model:?} {}: serial {} vs {threads}-thread {}",
+                    a.label,
+                    a.makespan,
+                    b.makespan
+                );
+            }
+        }
+    }
+}
+
+/// A warm sweep must not spend more total simplex iterations than the
+/// same sweep solved cold — that is the whole point of basis reuse.
+#[test]
+fn warm_sweep_saves_iterations() {
+    let spec = params::table1();
+    let jobs: Vec<f64> = (0..32).map(|k| 80.0 + 10.0 * k as f64).collect();
+    let grid = job_grid(&spec, &jobs, TimingModel::FrontEnd);
+    let cold = run_scenarios(&grid, &SweepOptions { threads: 1, warm_start: false }).unwrap();
+    let warm = run_scenarios(&grid, &SweepOptions { threads: 1, warm_start: true }).unwrap();
+    let cold_iters: usize = cold.iter().map(|p| p.lp_iterations).sum();
+    let warm_iters: usize = warm.iter().map(|p| p.lp_iterations).sum();
+    assert!(
+        warm_iters < cold_iters,
+        "warm sweep should save iterations: warm {warm_iters} vs cold {cold_iters}"
+    );
+}
