@@ -26,6 +26,10 @@ fn spec(n: usize, m: usize) -> SystemSpec {
     b.processors(&a).job(100.0).build().unwrap()
 }
 
+fn sweep_opts(threads: usize, warm_start: bool) -> SweepOptions {
+    SweepOptions { threads, warm_start, steal: false }
+}
+
 fn main() {
     let b = Bencher::from_env();
     let mut rep =
@@ -67,19 +71,48 @@ fn main() {
         rep.report(
             &format!("sweep50_cold_{tag}_n3_m20"),
             b.bench_val(|| {
-                run_scenarios(&grid, &SweepOptions { threads: 1, warm_start: false }).unwrap()
+                run_scenarios(&grid, &sweep_opts(1, false)).unwrap()
             }),
         );
         rep.report(
             &format!("sweep50_warm_{tag}_n3_m20"),
             b.bench_val(|| {
-                run_scenarios(&grid, &SweepOptions { threads: 1, warm_start: true }).unwrap()
+                run_scenarios(&grid, &sweep_opts(1, true)).unwrap()
             }),
         );
         rep.report(
             &format!("sweep50_warm_par_{tag}_n3_m20"),
             b.bench_val(|| {
-                run_scenarios(&grid, &SweepOptions { threads: 0, warm_start: true }).unwrap()
+                run_scenarios(&grid, &sweep_opts(0, true)).unwrap()
+            }),
+        );
+    }
+
+    // Ragged multi-dimensional grid (procs x job): chunked vs
+    // work-stealing scheduling of the same 100 scenarios.
+    {
+        use dlt::experiments::sweep::{cross_grid, Axis};
+        let s = spec(3, 20);
+        let grid = cross_grid(
+            &s,
+            TimingModel::FrontEnd,
+            &[
+                Axis::Procs((1..=20).collect()),
+                Axis::Jobs((0..5).map(|k| 100.0 + 40.0 * k as f64).collect()),
+            ],
+        );
+        rep.report(
+            "ragged100_chunked_fe_n3",
+            b.bench_val(|| {
+                run_scenarios(&grid, &SweepOptions { threads: 0, warm_start: true, steal: false })
+                    .unwrap()
+            }),
+        );
+        rep.report(
+            "ragged100_steal_fe_n3",
+            b.bench_val(|| {
+                run_scenarios(&grid, &SweepOptions { threads: 0, warm_start: true, steal: true })
+                    .unwrap()
             }),
         );
     }

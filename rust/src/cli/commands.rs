@@ -262,46 +262,89 @@ pub fn tradeoff(a: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `dlt sweep` — fan a scenario grid across worker threads with
-/// warm-started per-thread solver state.
+/// Evenly spaced grid values (inclusive endpoints).
+fn linspace(from: f64, to: f64, points: usize) -> Vec<f64> {
+    let points = points.max(1);
+    let step = if points > 1 { (to - from) / (points - 1) as f64 } else { 0.0 };
+    (0..points).map(|k| from + step * k as f64).collect()
+}
+
+/// `dlt sweep` — fan a (possibly multi-dimensional) scenario grid
+/// across worker threads with warm-started per-thread solver state.
+///
+/// `--param` takes a comma-separated list of axes (`job`, `procs`,
+/// `release`, `links`) crossed left-to-right into one grid; `--steal`
+/// switches the scheduler from contiguous chunks to work-stealing
+/// deques, which is the right choice for ragged grids (any grid with a
+/// `procs` axis).
 pub fn sweep_cmd(a: &Args) -> Result<()> {
-    use crate::experiments::sweep::{job_grid, processor_grid, run_scenarios, SweepOptions};
+    use crate::experiments::sweep::{cross_grid, run_scenarios, Axis, SweepOptions};
 
     let spec = load(a)?;
     let model = model_of(a)?;
     let threads = a.get_usize("threads")?.unwrap_or(0);
-    let opts = SweepOptions { threads, warm_start: !a.has("cold") };
+    let opts =
+        SweepOptions { threads, warm_start: !a.has("cold"), steal: a.has("steal") };
 
     let param = a.get_or("param", "job");
-    let scenarios = match param.as_str() {
-        "job" => {
-            let from = a.get_f64("from")?.unwrap_or(spec.job);
-            let to = a.get_f64("to")?.unwrap_or(spec.job * 5.0);
-            let points = a.get_usize("points")?.unwrap_or(50).max(1);
-            let step = if points > 1 { (to - from) / (points - 1) as f64 } else { 0.0 };
-            let jobs: Vec<f64> = (0..points).map(|k| from + step * k as f64).collect();
-            job_grid(&spec, &jobs, model)
+    let mut axes: Vec<Axis> = Vec::new();
+    for name in param.split(',').map(str::trim) {
+        match name {
+            "job" => {
+                let from = a.get_f64("from")?.unwrap_or(spec.job);
+                let to = a.get_f64("to")?.unwrap_or(spec.job * 5.0);
+                let points = a.get_usize("points")?.unwrap_or(50);
+                axes.push(Axis::Jobs(linspace(from, to, points)));
+            }
+            "procs" => axes.push(Axis::Procs((1..=spec.m()).collect())),
+            "release" => {
+                let from = a.get_f64("release-from")?.unwrap_or(0.0);
+                let to = a.get_f64("release-to")?.unwrap_or(2.0);
+                if !(from >= 0.0 && to >= 0.0 && from.is_finite() && to.is_finite()) {
+                    return Err(Error::Usage(format!(
+                        "--release-from/--release-to must be finite and >= 0, got {from}..{to}"
+                    )));
+                }
+                let points = a.get_usize("release-points")?.unwrap_or(9);
+                axes.push(Axis::ReleaseScale(linspace(from, to, points)));
+            }
+            "links" => {
+                let from = a.get_f64("link-from")?.unwrap_or(0.5);
+                let to = a.get_f64("link-to")?.unwrap_or(2.0);
+                if !(from > 0.0 && to > 0.0 && from.is_finite() && to.is_finite()) {
+                    return Err(Error::Usage(format!(
+                        "--link-from/--link-to must be finite and > 0, got {from}..{to}"
+                    )));
+                }
+                let points = a.get_usize("link-points")?.unwrap_or(9);
+                axes.push(Axis::LinkScale(linspace(from, to, points)));
+            }
+            other => {
+                return Err(Error::Usage(format!(
+                    "--param must be a comma list of job|procs|release|links, got `{other}`"
+                )))
+            }
         }
-        "procs" => processor_grid(&spec, model),
-        other => {
-            return Err(Error::Usage(format!("--param must be job|procs, got `{other}`")))
-        }
-    };
+    }
+    let scenarios = cross_grid(&spec, model, &axes);
 
     let t0 = std::time::Instant::now();
     let pts = run_scenarios(&scenarios, &opts)?;
     let wall = t0.elapsed();
 
-    println!("{:>14} {:>14} {:>10}", "scenario", "T_f", "lp_iters");
+    println!("{:>24} {:>14} {:>10}", "scenario", "T_f", "lp_iters");
     for p in &pts {
-        println!("{:>14} {:>14.6} {:>10}", p.label, p.makespan, p.lp_iterations);
+        println!("{:>24} {:>14.6} {:>10}", p.label, p.makespan, p.lp_iterations);
     }
     let total_iters: usize = pts.iter().map(|p| p.lp_iterations).sum();
     println!(
-        "{} scenarios in {wall:?} ({} LP iterations total, warm_start={}, threads={})",
+        "{} scenarios ({} axes) in {wall:?} ({} LP iterations total, warm_start={}, \
+         scheduler={}, threads={})",
         pts.len(),
+        axes.len(),
         total_iters,
         opts.warm_start,
+        if opts.steal { "work-stealing" } else { "chunked" },
         if threads == 0 { "auto".to_string() } else { threads.to_string() },
     );
     Ok(())

@@ -6,8 +6,10 @@
 //! dlt simulate  --spec spec.json [--model fe|nfe] [--jitter 0.1] [--seed 7] [--trace]
 //! dlt cluster   --spec spec.json [--model fe|nfe] [--time-scale 0.002] [--real-compute]
 //! dlt tradeoff  --spec spec.json [--budget-cost X] [--budget-time Y] [--gradient 0.06]
-//! dlt sweep     --spec spec.json [--param job|procs] [--from A --to B --points N]
-//!               [--threads T] [--cold] [--model fe|nfe]
+//! dlt sweep     --spec spec.json [--param job,procs,release,links] [--from A --to B --points N]
+//!               [--release-from A --release-to B --release-points N]
+//!               [--link-from A --link-to B --link-points N]
+//!               [--threads T] [--cold] [--steal] [--model fe|nfe]
 //! dlt speedup   --spec spec.json --sources 1,2,3
 //! dlt experiments [--exp fig12] [--csv-dir out/]
 //! dlt artifacts
@@ -64,11 +66,18 @@ COMMON FLAGS
   --exp NAME         experiment id (fig10..fig20; default: all)
 
 SWEEP FLAGS
-  --param job|procs  grid dimension (default job)
+  --param LIST       comma-separated axes, crossed into one grid:
+                     job | procs | release | links   (default job)
   --from A --to B    job-size range (default J .. 5J)
-  --points N         grid resolution (default 50)
+  --points N         job-axis resolution (default 50)
+  --release-from A --release-to B --release-points N
+                     release-time scale axis (defaults 0 .. 2, 9 points)
+  --link-from A --link-to B --link-points N
+                     link-speed (G) scale axis (defaults 0.5 .. 2, 9 points)
   --threads T        worker threads (default: one per core)
   --cold             disable basis warm starts (baseline measurement)
+  --steal            work-stealing scheduler (best for ragged grids,
+                     e.g. any grid with a procs axis)
 ";
 
 #[cfg(test)]
@@ -111,6 +120,20 @@ mod tests {
         run(&argv(&format!("speedup --spec {path} --sources 1,2"))).unwrap();
         run(&argv(&format!("sweep --spec {path} --points 5 --threads 2"))).unwrap();
         run(&argv(&format!("sweep --spec {path} --param procs --cold --model nfe"))).unwrap();
+        run(&argv(&format!(
+            "sweep --spec {path} --param job,procs --points 3 --steal --threads 2"
+        )))
+        .unwrap();
+        run(&argv(&format!(
+            "sweep --spec {path} --param release,links --release-points 3 --link-points 3"
+        )))
+        .unwrap();
+        // Bad axis ranges are usage errors, not panics.
+        assert!(run(&argv(&format!("sweep --spec {path} --param links --link-from 0"))).is_err());
+        assert!(run(&argv(&format!(
+            "sweep --spec {path} --param release --release-from -1"
+        )))
+        .is_err());
         std::fs::remove_file(path).ok();
     }
 }

@@ -48,7 +48,9 @@ impl TradeoffTable {
     /// Sweep with an external [`WarmCache`]: repeated sweeps (the
     /// advisor is queried many times per session, and Figs. 19/20 each
     /// re-sweep Table 5) warm-start every `m`'s LP from the previous
-    /// sweep's optimal basis for that shape.
+    /// sweep's optimal basis for that shape. Each solve flows through
+    /// the unified pipeline (`crate::pipeline`), so presolve and the
+    /// dual-simplex warm restarts apply here too.
     pub fn sweep_cached(spec: &SystemSpec, cache: &mut WarmCache) -> Result<TradeoffTable> {
         let mut points = Vec::with_capacity(spec.m());
         for m in 1..=spec.m() {

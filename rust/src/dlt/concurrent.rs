@@ -27,8 +27,9 @@
 
 use crate::dlt::schedule::{Schedule, TimingModel};
 use crate::error::Result;
-use crate::lp::{solve_with, Cmp, LpProblem, SimplexOptions};
+use crate::lp::{Cmp, LpProblem, LpSolution, SimplexOptions, WarmCache};
 use crate::model::SystemSpec;
+use crate::pipeline::{self, ScenarioModel};
 
 /// Which fluid model to use.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -38,6 +39,34 @@ pub enum Mode {
     /// Free (EDF/water-filling) bandwidth scheduling.
     #[default]
     Staggered,
+}
+
+/// Options for the §8 concurrent-distribution builders — and the
+/// family's [`ScenarioModel`].
+#[derive(Debug, Clone, Default)]
+pub struct ConcurrentOptions {
+    /// Fluid model.
+    pub mode: Mode,
+    /// Simplex options.
+    pub simplex: SimplexOptions,
+}
+
+impl ScenarioModel for ConcurrentOptions {
+    fn name(&self) -> &'static str {
+        "concurrent"
+    }
+
+    fn build_lp(&self, spec: &SystemSpec) -> LpProblem {
+        build_lp(spec, self.mode)
+    }
+
+    fn simplex(&self) -> SimplexOptions {
+        self.simplex.clone()
+    }
+
+    fn schedule(&self, spec: &SystemSpec, sol: &LpSolution) -> Result<Schedule> {
+        schedule_from_solution(spec, self.mode, sol)
+    }
 }
 
 /// Build the concurrent-distribution LP (no-front-end semantics).
@@ -149,16 +178,29 @@ pub fn solve(spec: &SystemSpec) -> Result<Schedule> {
     solve_mode(spec, Mode::default())
 }
 
-/// Solve and reconstruct the timed schedule.
+/// Solve and reconstruct the timed schedule (through the unified
+/// pipeline).
 pub fn solve_mode(spec: &SystemSpec, mode: Mode) -> Result<Schedule> {
-    spec.validate()?;
+    pipeline::solve(&ConcurrentOptions { mode, ..ConcurrentOptions::default() }, spec)
+}
+
+/// Solve §8 through a [`WarmCache`] (see [`pipeline::solve_cached`]) —
+/// the entry point job-size and bandwidth sweeps warm-start from.
+pub fn solve_cached(
+    spec: &SystemSpec,
+    opts: &ConcurrentOptions,
+    cache: &mut WarmCache,
+) -> Result<Schedule> {
+    pipeline::solve_cached(opts, spec, cache)
+}
+
+/// Reconstruct the timed schedule from an LP solution of the §8 LPs.
+fn schedule_from_solution(spec: &SystemSpec, mode: Mode, sol: &LpSolution) -> Result<Schedule> {
     let n = spec.n();
     let m = spec.m();
     let g = spec.g();
     let r = spec.releases();
     let a = spec.a();
-    let lp = build_lp(spec, mode);
-    let sol = solve_with(&lp, &SimplexOptions::default())?;
 
     let beta: Vec<f64> = sol.x[..n * m]
         .iter()

@@ -18,8 +18,9 @@
 
 use crate::dlt::schedule::{Schedule, TimingModel};
 use crate::error::Result;
-use crate::lp::{solve_with, Cmp, LpProblem, LpSolution, SimplexOptions, WarmCache};
+use crate::lp::{Cmp, LpProblem, LpSolution, SimplexOptions, WarmCache};
 use crate::model::SystemSpec;
+use crate::pipeline::{self, ScenarioModel};
 
 /// Options for the §3.1 builder.
 #[derive(Debug, Clone)]
@@ -134,35 +135,47 @@ pub fn build_lp(spec: &SystemSpec, opts: &FeOptions) -> LpProblem {
     p
 }
 
+/// The §3.1 scenario family: [`FeOptions`] *is* the model — the
+/// pipeline handles presolve, backend dispatch and warm caching.
+impl ScenarioModel for FeOptions {
+    fn name(&self) -> &'static str {
+        "frontend"
+    }
+
+    fn build_lp(&self, spec: &SystemSpec) -> LpProblem {
+        build_lp(spec, self)
+    }
+
+    fn simplex(&self) -> SimplexOptions {
+        self.simplex.clone()
+    }
+
+    fn schedule(&self, spec: &SystemSpec, sol: &LpSolution) -> Result<Schedule> {
+        schedule_from_solution(spec, sol)
+    }
+}
+
 /// Solve §3.1 with default options.
 pub fn solve(spec: &SystemSpec) -> Result<Schedule> {
     solve_opts(spec, &FeOptions::default())
 }
 
-/// Solve §3.1 with explicit options.
+/// Solve §3.1 with explicit options (through the unified pipeline).
 pub fn solve_opts(spec: &SystemSpec, opts: &FeOptions) -> Result<Schedule> {
-    spec.validate()?;
-    let lp = build_lp(spec, opts);
-    let sol = solve_with(&lp, &opts.simplex)?;
-    schedule_from_solution(spec, &sol)
+    pipeline::solve(opts, spec)
 }
 
-/// Solve §3.1 through a [`WarmCache`]: repeated solves of
-/// structurally identical instances (job-size sweeps, perturbed specs)
-/// start from the previous optimal basis instead of from scratch.
+/// Solve §3.1 through a [`WarmCache`] (see [`pipeline::solve_cached`]).
 pub fn solve_cached(
     spec: &SystemSpec,
     opts: &FeOptions,
     cache: &mut WarmCache,
 ) -> Result<Schedule> {
-    spec.validate()?;
-    let lp = build_lp(spec, opts);
-    let sol = cache.solve(&lp, &opts.simplex)?;
-    schedule_from_solution(spec, &sol)
+    pipeline::solve_cached(opts, spec, cache)
 }
 
 /// Reconstruct the full schedule from an LP solution of the §3.1 LP.
-fn schedule_from_solution(spec: &SystemSpec, sol: &LpSolution) -> Result<Schedule> {
+pub(crate) fn schedule_from_solution(spec: &SystemSpec, sol: &LpSolution) -> Result<Schedule> {
     let n = spec.n();
     let m = spec.m();
 

@@ -17,7 +17,38 @@
 use crate::dlt::frontend::{self, FeOptions};
 use crate::dlt::Schedule;
 use crate::error::Result;
+use crate::lp::{LpProblem, LpSolution, SimplexOptions, WarmCache};
 use crate::model::SystemSpec;
+use crate::pipeline::{self, ScenarioModel};
+
+/// The multi-job scenario family: one FIFO pipeline *step* — the §3.1
+/// LP with the carried-over per-processor `proc_ready` state. Each job
+/// in [`schedule_fifo`] is one instance of this model; consecutive jobs
+/// share LP shapes, so a [`WarmCache`] threads their optimal bases
+/// through the whole arrival stream.
+#[derive(Debug, Clone, Default)]
+pub struct MultiJobStepModel {
+    /// The underlying §3.1 options (carrying `proc_ready`).
+    pub fe: FeOptions,
+}
+
+impl ScenarioModel for MultiJobStepModel {
+    fn name(&self) -> &'static str {
+        "multi_job"
+    }
+
+    fn build_lp(&self, spec: &SystemSpec) -> LpProblem {
+        frontend::build_lp(spec, &self.fe)
+    }
+
+    fn simplex(&self) -> SimplexOptions {
+        self.fe.simplex.clone()
+    }
+
+    fn schedule(&self, spec: &SystemSpec, sol: &LpSolution) -> Result<Schedule> {
+        frontend::schedule_from_solution(spec, sol)
+    }
+}
 
 /// One job in the arrival stream.
 #[derive(Debug, Clone, Copy)]
@@ -72,6 +103,9 @@ pub fn schedule_fifo(spec: &SystemSpec, jobs: &[Job]) -> Result<PipelineReport> 
 
     let mut records = Vec::with_capacity(jobs.len());
     let mut serial_clock = 0.0f64;
+    // One warm cache across the stream: steady-state jobs share an LP
+    // shape, so each solve seeds from the previous job's basis.
+    let mut cache = WarmCache::new();
 
     for (index, &job) in jobs.iter().enumerate() {
         // Source release for this job: max(arrival, source free).
@@ -84,8 +118,10 @@ pub fn schedule_fifo(spec: &SystemSpec, jobs: &[Job]) -> Result<PipelineReport> 
         sub.job = job.size;
         // Re-sorting is unnecessary: G order is unchanged; but release
         // order may now violate nothing (releases are free-form).
-        let opts = FeOptions { proc_ready: Some(proc_ready.clone()), ..Default::default() };
-        let sched = frontend::solve_opts(&sub, &opts)?;
+        let step = MultiJobStepModel {
+            fe: FeOptions { proc_ready: Some(proc_ready.clone()), ..Default::default() },
+        };
+        let sched = pipeline::solve_cached(&step, &sub, &mut cache)?;
 
         // Advance node state from the timed schedule.
         for i in 0..n {

@@ -17,8 +17,9 @@
 
 use crate::dlt::schedule::{Schedule, TimingModel};
 use crate::error::Result;
-use crate::lp::{solve_with, Cmp, LpProblem, LpSolution, SimplexOptions, WarmCache};
+use crate::lp::{Cmp, LpProblem, LpSolution, SimplexOptions, WarmCache};
 use crate::model::SystemSpec;
+use crate::pipeline::{self, ScenarioModel};
 
 /// Options for the §3.2 builder.
 #[derive(Debug, Clone, Default)]
@@ -153,30 +154,42 @@ pub fn build_lp(spec: &SystemSpec, opts: &NfeOptions) -> LpProblem {
     p
 }
 
+/// The §3.2 scenario family: [`NfeOptions`] *is* the model.
+impl ScenarioModel for NfeOptions {
+    fn name(&self) -> &'static str {
+        "no_frontend"
+    }
+
+    fn build_lp(&self, spec: &SystemSpec) -> LpProblem {
+        build_lp(spec, self)
+    }
+
+    fn simplex(&self) -> SimplexOptions {
+        self.simplex.clone()
+    }
+
+    fn schedule(&self, spec: &SystemSpec, sol: &LpSolution) -> Result<Schedule> {
+        schedule_from_solution(spec, sol)
+    }
+}
+
 /// Solve §3.2 with default options.
 pub fn solve(spec: &SystemSpec) -> Result<Schedule> {
     solve_opts(spec, &NfeOptions::default())
 }
 
-/// Solve §3.2 with explicit options.
+/// Solve §3.2 with explicit options (through the unified pipeline).
 pub fn solve_opts(spec: &SystemSpec, opts: &NfeOptions) -> Result<Schedule> {
-    spec.validate()?;
-    let lp = build_lp(spec, opts);
-    let sol = solve_with(&lp, &opts.simplex)?;
-    schedule_from_solution(spec, &sol)
+    pipeline::solve(opts, spec)
 }
 
-/// Solve §3.2 through a [`WarmCache`] (see
-/// [`crate::dlt::frontend::solve_cached`]).
+/// Solve §3.2 through a [`WarmCache`] (see [`pipeline::solve_cached`]).
 pub fn solve_cached(
     spec: &SystemSpec,
     opts: &NfeOptions,
     cache: &mut WarmCache,
 ) -> Result<Schedule> {
-    spec.validate()?;
-    let lp = build_lp(spec, opts);
-    let sol = cache.solve(&lp, &opts.simplex)?;
-    schedule_from_solution(spec, &sol)
+    pipeline::solve_cached(opts, spec, cache)
 }
 
 /// Reconstruct the full schedule from an LP solution of the §3.2 LP.

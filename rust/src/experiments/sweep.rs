@@ -1,28 +1,51 @@
-//! Parallel scenario sweeps with per-thread, warm-started solver state.
+//! Multi-dimensional, parallel scenario sweeps with per-thread,
+//! warm-started solver state.
 //!
 //! The paper's trade-off figures and the follow-up resource-sharing /
 //! Amdahl analyses (arXiv:1902.01898, 1902.01952) all boil down to the
 //! same shape of computation: *solve hundreds of near-identical DLT
-//! LPs over a parameter grid*. This module fans such a grid across
-//! `std::thread` scoped workers. Each worker owns a private
-//! [`WarmCache`], and the grid is split into **contiguous chunks** so
-//! neighbouring scenarios (which differ by one small parameter step)
-//! warm-start from each other's optimal bases.
+//! LPs over a parameter grid*. This module builds such grids over four
+//! axes — job size, processor count, release-time scale, link-speed
+//! scale (compose them with [`cross_grid`]) — and fans them across
+//! `std::thread` scoped workers, every solve flowing through the
+//! unified [`crate::pipeline`].
 //!
-//! Used by the `dlt sweep` CLI subcommand and the solver benches;
-//! [`parallel_map`] is the reusable primitive for anything else that
-//! wants "per-thread solver state over a work list".
+//! Two schedulers:
+//!
+//! - **contiguous chunks** ([`parallel_map`] / [`parallel_map_with`]):
+//!   one slice per worker, ideal when all points cost about the same —
+//!   neighbouring scenarios warm-start from each other;
+//! - **work-stealing deques** ([`parallel_map_steal`], enabled with
+//!   [`SweepOptions::steal`]): each worker drains its own deque from
+//!   the front and steals from the *back* of a neighbour's when idle —
+//!   the right scheduler for **ragged** grids (a processor-count axis
+//!   makes LP sizes, and therefore point costs, wildly uneven). Output
+//!   order stays the input order either way.
+//!
+//! Within a worker, each solve warm-starts from a per-thread
+//! [`WarmCache`], and on a cache miss (the previous point had a
+//! *different* LP shape, e.g. along the processor axis) the last
+//! optimal basis is projected onto the new shape by variable name and
+//! row label ([`crate::pipeline::project`]) and used as the seed — a
+//! primal-infeasible seed is repaired by the dual simplex instead of
+//! falling back to a cold phase-1 start.
+//!
+//! Used by the `dlt sweep` CLI subcommand and the solver benches.
 
+use crate::dlt::frontend::FeOptions;
+use crate::dlt::no_frontend::NfeOptions;
 use crate::dlt::schedule::TimingModel;
-use crate::dlt::{frontend, no_frontend};
 use crate::error::Result;
-use crate::lp::WarmCache;
+use crate::lp::{Basis, LpProblem, WarmCache};
 use crate::model::SystemSpec;
+use crate::pipeline::{self, PipelineOptions};
+use std::collections::VecDeque;
+use std::sync::Mutex;
 
 /// One point of a scenario grid.
 #[derive(Debug, Clone)]
 pub struct Scenario {
-    /// Display label (e.g. `J=250`).
+    /// Display label (e.g. `J=250 m=4`).
     pub label: String,
     /// Full system description for this point.
     pub spec: SystemSpec,
@@ -49,70 +72,211 @@ pub struct SweepOptions {
     /// Warm-start consecutive solves within each worker (disable to
     /// measure cold-solve baselines).
     pub warm_start: bool,
+    /// Schedule with work-stealing deques instead of contiguous chunks
+    /// (better wall-clock on ragged grids; results are identical).
+    pub steal: bool,
 }
 
 impl Default for SweepOptions {
     fn default() -> Self {
-        SweepOptions { threads: 0, warm_start: true }
+        SweepOptions { threads: 0, warm_start: true, steal: false }
     }
+}
+
+/// One grid dimension for [`cross_grid`].
+#[derive(Debug, Clone)]
+pub enum Axis {
+    /// Job sizes `J` ([`SystemSpec::with_job`]).
+    Jobs(Vec<f64>),
+    /// Processor counts `m` ([`SystemSpec::with_m_processors`]); values
+    /// outside `1..=M` are skipped.
+    Procs(Vec<usize>),
+    /// Release-time scales ([`SystemSpec::with_scaled_releases`]).
+    ReleaseScale(Vec<f64>),
+    /// Link-speed scales ([`SystemSpec::with_scaled_links`]).
+    LinkScale(Vec<f64>),
 }
 
 /// Scenario grid over job sizes (fixed system, one LP shape — the
 /// ideal warm-start family).
 pub fn job_grid(spec: &SystemSpec, jobs: &[f64], model: TimingModel) -> Vec<Scenario> {
-    jobs.iter()
-        .map(|&j| Scenario {
-            label: format!("J={j:.4}"),
-            spec: spec.with_job(j),
-            model,
-        })
-        .collect()
+    cross_grid(spec, model, &[Axis::Jobs(jobs.to_vec())])
 }
 
 /// Scenario grid over processor counts `m = 1..=spec.m()`.
 pub fn processor_grid(spec: &SystemSpec, model: TimingModel) -> Vec<Scenario> {
-    (1..=spec.m())
-        .map(|m| Scenario {
-            label: format!("m={m}"),
-            spec: spec.with_m_processors(m),
-            model,
-        })
-        .collect()
+    cross_grid(spec, model, &[Axis::Procs((1..=spec.m()).collect())])
+}
+
+/// Scenario grid over release-time scales.
+pub fn release_grid(spec: &SystemSpec, scales: &[f64], model: TimingModel) -> Vec<Scenario> {
+    cross_grid(spec, model, &[Axis::ReleaseScale(scales.to_vec())])
+}
+
+/// Scenario grid over link-speed scales.
+pub fn link_grid(spec: &SystemSpec, scales: &[f64], model: TimingModel) -> Vec<Scenario> {
+    cross_grid(spec, model, &[Axis::LinkScale(scales.to_vec())])
+}
+
+/// Cartesian product of axes, applied left to right; labels are the
+/// space-joined per-axis labels (`J=250 m=4 R×0.5`).
+pub fn cross_grid(spec: &SystemSpec, model: TimingModel, axes: &[Axis]) -> Vec<Scenario> {
+    let mut grid =
+        vec![Scenario { label: String::new(), spec: spec.clone(), model }];
+    for axis in axes {
+        let mut next = Vec::new();
+        for sc in &grid {
+            let join = |tag: String| {
+                if sc.label.is_empty() {
+                    tag
+                } else {
+                    format!("{} {}", sc.label, tag)
+                }
+            };
+            match axis {
+                Axis::Jobs(v) => {
+                    for &j in v {
+                        next.push(Scenario {
+                            label: join(format!("J={j:.4}")),
+                            spec: sc.spec.with_job(j),
+                            model,
+                        });
+                    }
+                }
+                Axis::Procs(v) => {
+                    for &m in v {
+                        if m >= 1 && m <= sc.spec.m() {
+                            next.push(Scenario {
+                                label: join(format!("m={m}")),
+                                spec: sc.spec.with_m_processors(m),
+                                model,
+                            });
+                        }
+                    }
+                }
+                Axis::ReleaseScale(v) => {
+                    for &s in v {
+                        next.push(Scenario {
+                            label: join(format!("R\u{d7}{s:.3}")),
+                            spec: sc.spec.with_scaled_releases(s),
+                            model,
+                        });
+                    }
+                }
+                Axis::LinkScale(v) => {
+                    for &s in v {
+                        next.push(Scenario {
+                            label: join(format!("G\u{d7}{s:.3}")),
+                            spec: sc.spec.with_scaled_links(s),
+                            model,
+                        });
+                    }
+                }
+            }
+        }
+        grid = next;
+    }
+    grid
+}
+
+/// Per-worker solver state: a warm cache plus the last optimal basis
+/// (and the reduced LP it belongs to) per timing model, for
+/// cross-shape seeding when the cache misses a new shape.
+#[derive(Default)]
+struct WorkerState {
+    cache: WarmCache,
+    prev_fe: Option<(LpProblem, Basis)>,
+    prev_nfe: Option<(LpProblem, Basis)>,
+}
+
+fn solve_scenario(state: &mut WorkerState, sc: &Scenario, warm: bool) -> Result<SweepPoint> {
+    let popts = PipelineOptions::default();
+    let schedule = if warm {
+        let (prev, solved) = match sc.model {
+            TimingModel::FrontEnd => {
+                let seed = state.prev_fe.as_ref().map(|(lp, b)| (lp, b));
+                let solved = pipeline::solve_full(
+                    &FeOptions::default(),
+                    &sc.spec,
+                    &popts,
+                    Some(&mut state.cache),
+                    seed,
+                )?;
+                (&mut state.prev_fe, solved)
+            }
+            TimingModel::NoFrontEnd => {
+                let seed = state.prev_nfe.as_ref().map(|(lp, b)| (lp, b));
+                let solved = pipeline::solve_full(
+                    &NfeOptions::default(),
+                    &sc.spec,
+                    &popts,
+                    Some(&mut state.cache),
+                    seed,
+                )?;
+                (&mut state.prev_nfe, solved)
+            }
+        };
+        if let Some(basis) = solved.solution.basis.clone() {
+            if basis.is_complete() {
+                *prev = Some((solved.reduced, basis));
+            }
+        }
+        solved.schedule
+    } else {
+        match sc.model {
+            TimingModel::FrontEnd => {
+                pipeline::solve_full(&FeOptions::default(), &sc.spec, &popts, None, None)?
+                    .schedule
+            }
+            TimingModel::NoFrontEnd => {
+                pipeline::solve_full(&NfeOptions::default(), &sc.spec, &popts, None, None)?
+                    .schedule
+            }
+        }
+    };
+    Ok(SweepPoint {
+        label: sc.label.clone(),
+        makespan: schedule.makespan,
+        lp_iterations: schedule.lp_iterations,
+    })
 }
 
 /// Solve every scenario, in input order, fanning across worker threads.
 pub fn run_scenarios(scenarios: &[Scenario], opts: &SweepOptions) -> Result<Vec<SweepPoint>> {
     let warm = opts.warm_start;
-    let results = parallel_map(scenarios, opts.threads, move |cache, sc| {
-        let sched = match (sc.model, warm) {
-            (TimingModel::FrontEnd, true) => {
-                frontend::solve_cached(&sc.spec, &Default::default(), cache)
-            }
-            (TimingModel::FrontEnd, false) => frontend::solve(&sc.spec),
-            (TimingModel::NoFrontEnd, true) => {
-                no_frontend::solve_cached(&sc.spec, &Default::default(), cache)
-            }
-            (TimingModel::NoFrontEnd, false) => no_frontend::solve(&sc.spec),
-        }?;
-        Ok(SweepPoint {
-            label: sc.label.clone(),
-            makespan: sched.makespan,
-            lp_iterations: sched.lp_iterations,
-        })
-    });
+    let f = move |state: &mut WorkerState, sc: &Scenario| solve_scenario(state, sc, warm);
+    let results = if opts.steal {
+        parallel_map_steal(scenarios, opts.threads, WorkerState::default, f)
+    } else {
+        parallel_map_with(scenarios, opts.threads, WorkerState::default, f)
+    };
     results.into_iter().collect()
 }
 
 /// Run `f` over `items` on scoped worker threads, each worker owning a
-/// private [`WarmCache`]. Items are split into contiguous chunks (one
-/// per worker) and results come back in input order. `threads == 0`
-/// uses one worker per available core; the count is always capped by
-/// the item count.
+/// private [`WarmCache`]. See [`parallel_map_with`] for the
+/// generic-state version and [`parallel_map_steal`] for the
+/// work-stealing scheduler.
 pub fn parallel_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
 where
     T: Sync,
     R: Send,
     F: Fn(&mut WarmCache, &T) -> R + Sync,
+{
+    parallel_map_with(items, threads, WarmCache::new, f)
+}
+
+/// Run `f` over `items` on scoped worker threads, each worker owning
+/// private state built by `init`. Items are split into contiguous
+/// chunks (one per worker) and results come back in input order.
+/// `threads == 0` uses one worker per available core; the count is
+/// always capped by the item count.
+pub fn parallel_map_with<T, R, S, F, I>(items: &[T], threads: usize, init: I, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&mut S, &T) -> R + Sync,
+    I: Fn() -> S + Sync,
 {
     let n = items.len();
     if n == 0 {
@@ -120,19 +284,20 @@ where
     }
     let threads = effective_threads(threads, n);
     if threads <= 1 {
-        let mut cache = WarmCache::new();
-        return items.iter().map(|it| f(&mut cache, it)).collect();
+        let mut state = init();
+        return items.iter().map(|it| f(&mut state, it)).collect();
     }
 
-    let chunk = (n + threads - 1) / threads;
+    let chunk = n.div_ceil(threads);
     let mut out: Vec<R> = Vec::with_capacity(n);
     std::thread::scope(|s| {
         let mut handles = Vec::with_capacity(threads);
         for part in items.chunks(chunk) {
             let fref = &f;
+            let iref = &init;
             handles.push(s.spawn(move || {
-                let mut cache = WarmCache::new();
-                part.iter().map(|it| fref(&mut cache, it)).collect::<Vec<R>>()
+                let mut state = iref();
+                part.iter().map(|it| fref(&mut state, it)).collect::<Vec<R>>()
             }));
         }
         for h in handles {
@@ -140,6 +305,82 @@ where
         }
     });
     out
+}
+
+/// Work-stealing variant of [`parallel_map_with`] for ragged work
+/// lists: each worker is seeded with a contiguous block (so
+/// neighbouring scenarios still share warm state), drains it from the
+/// front, and when empty steals single items from the *back* of the
+/// next non-empty neighbour — the classic deque discipline, so a thief
+/// takes the work farthest from where the owner is currently warm.
+/// Results come back in input order regardless of who solved what.
+pub fn parallel_map_steal<T, R, S, F, I>(items: &[T], threads: usize, init: I, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&mut S, &T) -> R + Sync,
+    I: Fn() -> S + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = effective_threads(threads, n);
+    if threads <= 1 {
+        let mut state = init();
+        return items.iter().map(|it| f(&mut state, it)).collect();
+    }
+
+    // Contiguous blocks, one deque per worker.
+    let chunk = n.div_ceil(threads);
+    let deques: Vec<Mutex<VecDeque<usize>>> = (0..threads)
+        .map(|w| {
+            let lo = w * chunk;
+            let hi = ((w + 1) * chunk).min(n);
+            Mutex::new((lo..hi.max(lo)).collect())
+        })
+        .collect();
+
+    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(threads);
+        for w in 0..threads {
+            let fref = &f;
+            let iref = &init;
+            let dref = &deques;
+            handles.push(s.spawn(move || {
+                let mut state = iref();
+                let mut done: Vec<(usize, R)> = Vec::new();
+                loop {
+                    // Own work first (front: preserves warm locality).
+                    let mut idx = dref[w].lock().expect("deque lock").pop_front();
+                    if idx.is_none() {
+                        // Steal from the back of the first non-empty
+                        // neighbour, scanning round-robin from w+1.
+                        for off in 1..threads {
+                            let v = (w + off) % threads;
+                            if let Some(i) = dref[v].lock().expect("deque lock").pop_back() {
+                                idx = Some(i);
+                                break;
+                            }
+                        }
+                    }
+                    let Some(i) = idx else { break };
+                    done.push((i, fref(&mut state, &items[i])));
+                }
+                done
+            }));
+        }
+        for h in handles {
+            for (i, r) in h.join().expect("sweep worker panicked") {
+                slots[i] = Some(r);
+            }
+        }
+    });
+    slots
+        .into_iter()
+        .map(|r| r.expect("every item solved exactly once"))
+        .collect()
 }
 
 fn effective_threads(requested: usize, items: usize) -> usize {
@@ -170,9 +411,16 @@ mod tests {
         let spec = table1_spec();
         let jobs: Vec<f64> = (0..16).map(|k| 100.0 + 10.0 * k as f64).collect();
         let grid = job_grid(&spec, &jobs, TimingModel::FrontEnd);
-        let serial =
-            run_scenarios(&grid, &SweepOptions { threads: 1, warm_start: true }).unwrap();
-        let par = run_scenarios(&grid, &SweepOptions { threads: 4, warm_start: true }).unwrap();
+        let serial = run_scenarios(
+            &grid,
+            &SweepOptions { threads: 1, warm_start: true, steal: false },
+        )
+        .unwrap();
+        let par = run_scenarios(
+            &grid,
+            &SweepOptions { threads: 4, warm_start: true, steal: false },
+        )
+        .unwrap();
         assert_eq!(serial.len(), par.len());
         for (a, b) in serial.iter().zip(par.iter()) {
             assert_eq!(a.label, b.label, "order preserved");
@@ -191,8 +439,16 @@ mod tests {
         let spec = table1_spec();
         let jobs: Vec<f64> = (0..12).map(|k| 80.0 + 15.0 * k as f64).collect();
         let grid = job_grid(&spec, &jobs, TimingModel::NoFrontEnd);
-        let cold = run_scenarios(&grid, &SweepOptions { threads: 1, warm_start: false }).unwrap();
-        let warm = run_scenarios(&grid, &SweepOptions { threads: 1, warm_start: true }).unwrap();
+        let cold = run_scenarios(
+            &grid,
+            &SweepOptions { threads: 1, warm_start: false, steal: false },
+        )
+        .unwrap();
+        let warm = run_scenarios(
+            &grid,
+            &SweepOptions { threads: 1, warm_start: true, steal: false },
+        )
+        .unwrap();
         let mut warm_total = 0usize;
         let mut cold_total = 0usize;
         for (a, b) in cold.iter().zip(warm.iter()) {
@@ -217,6 +473,123 @@ mod tests {
         }
     }
 
+    /// A spec whose first release is 0, so release scaling only raises
+    /// the *inter*-release gaps — the formally monotone direction (all
+    /// affected constraints are `>=` rows whose rhs grows).
+    fn mild_spec() -> SystemSpec {
+        SystemSpec::builder()
+            .source(0.2, 0.0)
+            .source(0.2, 5.0)
+            .processors(&[2.0, 3.0, 4.0])
+            .job(100.0)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn release_axis_is_monotone() {
+        let spec = mild_spec();
+        let scales = [0.0, 0.5, 1.0, 1.5, 2.0];
+        for model in [TimingModel::FrontEnd, TimingModel::NoFrontEnd] {
+            // Later releases can only delay the finish.
+            let pts = run_scenarios(
+                &release_grid(&spec, &scales, model),
+                &SweepOptions { threads: 1, warm_start: true, steal: false },
+            )
+            .unwrap();
+            assert_eq!(pts.len(), scales.len());
+            for w in pts.windows(2) {
+                assert!(
+                    w[1].makespan >= w[0].makespan - 1e-6,
+                    "{model:?} release axis: {} then {}",
+                    w[0].makespan,
+                    w[1].makespan
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn link_axis_matches_direct_solves() {
+        let spec = mild_spec();
+        let scales = [0.5, 1.0, 2.0];
+        for model in [TimingModel::FrontEnd, TimingModel::NoFrontEnd] {
+            let pts = run_scenarios(
+                &link_grid(&spec, &scales, model),
+                &SweepOptions { threads: 1, warm_start: true, steal: false },
+            )
+            .unwrap();
+            for (pt, &s) in pts.iter().zip(scales.iter()) {
+                let sub = spec.with_scaled_links(s);
+                let direct = match model {
+                    TimingModel::FrontEnd => crate::dlt::frontend::solve(&sub).unwrap(),
+                    TimingModel::NoFrontEnd => crate::dlt::no_frontend::solve(&sub).unwrap(),
+                };
+                assert!(
+                    (pt.makespan - direct.makespan).abs()
+                        < 1e-7 * (1.0 + direct.makespan.abs()),
+                    "{model:?} G scale {s}: sweep {} vs direct {}",
+                    pt.makespan,
+                    direct.makespan
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn cross_grid_builds_cartesian_product() {
+        let spec = table1_spec();
+        let grid = cross_grid(
+            &spec,
+            TimingModel::FrontEnd,
+            &[
+                Axis::Jobs(vec![100.0, 200.0]),
+                Axis::Procs(vec![2, 4, 99]), // 99 > M is skipped
+                Axis::ReleaseScale(vec![0.5, 1.0]),
+            ],
+        );
+        assert_eq!(grid.len(), 2 * 2 * 2);
+        assert!(grid[0].label.contains("J=") && grid[0].label.contains("m="));
+    }
+
+    #[test]
+    fn work_stealing_matches_chunked_on_ragged_grid() {
+        // procs × job: LP sizes vary by 5x across the grid — the
+        // ragged case work stealing exists for.
+        let spec = table1_spec();
+        let grid = cross_grid(
+            &spec,
+            TimingModel::FrontEnd,
+            &[
+                Axis::Procs((1..=5).collect()),
+                Axis::Jobs((0..5).map(|k| 100.0 + 40.0 * k as f64).collect()),
+            ],
+        );
+        let serial = run_scenarios(
+            &grid,
+            &SweepOptions { threads: 1, warm_start: true, steal: false },
+        )
+        .unwrap();
+        for threads in [2usize, 3, 8] {
+            let stolen = run_scenarios(
+                &grid,
+                &SweepOptions { threads, warm_start: true, steal: true },
+            )
+            .unwrap();
+            assert_eq!(serial.len(), stolen.len());
+            for (a, b) in serial.iter().zip(stolen.iter()) {
+                assert_eq!(a.label, b.label, "input order preserved under stealing");
+                assert!(
+                    (a.makespan - b.makespan).abs() < 1e-7 * (1.0 + a.makespan.abs()),
+                    "{}: serial {} vs stolen {}",
+                    a.label,
+                    a.makespan,
+                    b.makespan
+                );
+            }
+        }
+    }
+
     #[test]
     fn parallel_map_empty_and_oversubscribed() {
         let none: Vec<u32> = Vec::new();
@@ -225,5 +598,7 @@ mod tests {
         let items = [1u32, 2, 3];
         let out = parallel_map(&items, 64, |_, x| x * 2);
         assert_eq!(out, vec![2, 4, 6]);
+        let out = parallel_map_steal(&items, 64, || (), |_, x| x * 3);
+        assert_eq!(out, vec![3, 6, 9]);
     }
 }

@@ -17,6 +17,9 @@
 //! - [`dlt`] — the paper's scheduling formulations: §2 single-source
 //!   closed form, §3.1 multi-source with front-ends, §3.2 without
 //!   front-ends; schedule extraction and validation.
+//! - [`pipeline`] — the unified solve pipeline: every scheduling
+//!   family implements [`pipeline::ScenarioModel`] and flows through
+//!   `build LP → presolve → backend → warm cache → schedule`.
 //! - [`cost`], [`speedup`] — §6 monetary-cost/trade-off analysis and
 //!   §5 Amdahl-style speedup analysis.
 //! - [`sim`] — a deterministic discrete-event simulator that *executes*
@@ -61,6 +64,7 @@ pub mod linalg;
 pub mod lp;
 pub mod model;
 pub mod pdhg;
+pub mod pipeline;
 pub mod runtime;
 pub mod sim;
 pub mod speedup;

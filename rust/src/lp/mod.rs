@@ -7,7 +7,12 @@
 //! the original dense two-phase tableau remains available as a
 //! fallback/oracle ([`simplex::SolverBackend::DenseTableau`]). Both
 //! use Dantzig pricing with a Bland anti-cycling fallback, and both
-//! extract duals — no external LP dependency.
+//! extract duals — no external LP dependency. Warm restarts whose
+//! cached basis went primal-infeasible are repaired by a dual-simplex
+//! pass ([`revised`]), and [`presolve`] reduces problems (fixed
+//! variables, vacuous/duplicate/empty rows) with exact solution and
+//! dual restoration — the scenario pipeline ([`crate::pipeline`]) runs
+//! it in front of both backends by default.
 //!
 //! All variables are non-negative (`x ≥ 0`), which matches every
 //! formulation in the paper (load fractions, timestamps and the
@@ -32,6 +37,7 @@ pub mod solution;
 pub mod standard;
 pub mod warm;
 
+pub use presolve::{presolve, Presolved, PresolveStats};
 pub use problem::{Cmp, Constraint, LpProblem};
 pub use revised::Basis;
 pub use simplex::{solve, solve_warm, solve_with, SimplexOptions, SolverBackend};

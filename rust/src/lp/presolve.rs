@@ -1,10 +1,38 @@
-//! Light LP presolve: drop empty rows, detect trivial infeasibility,
-//! and report simple statistics. The DLT builders generate clean
-//! problems, so presolve is deliberately conservative — it never
-//! changes the feasible set, it only removes rows that are vacuous.
+//! LP presolve: row cleanup + fixed-variable substitution, with exact
+//! solution restoration.
+//!
+//! The pipeline (`crate::pipeline`) runs this in front of both simplex
+//! backends by default. Reductions, applied to a fixpoint:
+//!
+//! - **empty rows** — trivially satisfied rows are dropped, trivially
+//!   violated ones report infeasibility immediately;
+//! - **vacuous singleton bounds** — `a x ≥ b` with `a > 0, b ≤ 0` (and
+//!   the mirrored `≤` form) is implied by `x ≥ 0` and dropped;
+//! - **fixed variables** — a singleton equality `a x = b` fixes
+//!   `x = b/a`; a singleton `a x ≤ 0` with `a > 0` fixes `x = 0`. The
+//!   fixed value is substituted into every other row (rhs adjustment)
+//!   and the defining row is removed, which can cascade into new empty
+//!   or singleton rows;
+//! - **duplicate rows** — exact duplicates (post-substitution bit
+//!   patterns) are dropped.
+//!
+//! The variable *count* is never changed: a fixed variable's column is
+//! simply emptied (no constraint or objective coefficients left), so a
+//! [`crate::lp::Basis`] of the reduced problem stays meaningful across
+//! a scenario family and [`Presolved::restore`] can map a reduced
+//! solution back onto the original problem — fixed values re-inserted
+//! into `x`, and duals mapped back through the row eliminations
+//! (dropped rows get the unique multiplier that keeps the original
+//! dual system tight, so strong duality holds on the *original*
+//! problem).
 
 use super::problem::{Cmp, LpProblem};
+use super::solution::LpSolution;
 use crate::error::{Error, Result};
+
+/// Absolute tolerance for presolve decisions (rhs residuals, fixed
+/// values). Paper-sized DLT data is O(100), so 1e-9 is conservative.
+const TOL: f64 = 1e-9;
 
 /// Presolve statistics.
 #[derive(Debug, Clone, Default, PartialEq)]
@@ -13,65 +41,319 @@ pub struct PresolveStats {
     pub empty_rows_dropped: usize,
     /// Exact duplicate rows removed.
     pub duplicate_rows_dropped: usize,
+    /// Singleton inequality rows implied by `x >= 0`.
+    pub vacuous_bounds_dropped: usize,
+    /// Variables fixed by singleton rows and substituted out.
+    pub fixed_vars: usize,
 }
 
-/// Presolve in place. Errors if an empty row is trivially infeasible
-/// (e.g. `0 <= -1`).
-pub fn presolve(p: &LpProblem) -> Result<(LpProblem, PresolveStats)> {
-    let mut out = LpProblem::new(p.num_vars());
-    out.set_objective(p.objective());
-    for v in 0..p.num_vars() {
-        out.name_var(v, p.var_name(v));
+impl PresolveStats {
+    /// Total rows removed by any reduction.
+    pub fn rows_dropped(&self) -> usize {
+        self.empty_rows_dropped
+            + self.duplicate_rows_dropped
+            + self.vacuous_bounds_dropped
+            + self.fixed_vars
     }
-    let mut stats = PresolveStats::default();
-    let mut seen: Vec<(Vec<(usize, u64)>, Cmp, u64)> = Vec::new();
+}
 
-    for con in p.constraints() {
-        // Merge duplicate indices, drop explicit zeros.
-        let mut merged: Vec<(usize, f64)> = Vec::with_capacity(con.coeffs.len());
-        let mut sorted = con.coeffs.clone();
-        sorted.sort_by_key(|&(v, _)| v);
-        for (v, a) in sorted {
-            if let Some(last) = merged.last_mut() {
-                if last.0 == v {
-                    last.1 += a;
-                    continue;
+/// One variable fixed by a singleton row (in elimination order).
+#[derive(Debug, Clone)]
+struct FixedVar {
+    var: usize,
+    value: f64,
+    /// Original index of the row that forced the fix.
+    row: usize,
+}
+
+/// A presolved problem plus everything needed to map a solution of the
+/// reduced problem back onto the original one.
+#[derive(Debug, Clone)]
+pub struct Presolved {
+    /// The reduced problem (same variable count, fewer rows).
+    pub problem: LpProblem,
+    /// What was removed.
+    pub stats: PresolveStats,
+    /// Reduced row index → original row index.
+    row_map: Vec<usize>,
+    /// Fixed variables in elimination order.
+    fixed: Vec<FixedVar>,
+    /// Original constraint count.
+    orig_rows: usize,
+}
+
+/// Working copy of one constraint during reduction.
+struct WorkRow {
+    coeffs: Vec<(usize, f64)>,
+    cmp: Cmp,
+    rhs: f64,
+    orig: usize,
+    alive: bool,
+}
+
+/// Presolve `p` into a reduced problem plus restoration data. Errors
+/// with [`Error::Infeasible`] when a reduction proves the problem has
+/// no solution (empty row `0 >= 2`, singleton `x <= -1`, ...).
+pub fn presolve(p: &LpProblem) -> Result<Presolved> {
+    let nv = p.num_vars();
+    let mut stats = PresolveStats::default();
+    let mut fixed: Vec<FixedVar> = Vec::new();
+    let mut fixed_mask = vec![false; nv];
+
+    // Working rows with merged duplicate indices and explicit zeros
+    // dropped (mirrors what StandardForm would do anyway).
+    let mut rows: Vec<WorkRow> = p
+        .constraints()
+        .iter()
+        .enumerate()
+        .map(|(k, con)| {
+            let mut sorted = con.coeffs.clone();
+            sorted.sort_by_key(|&(v, _)| v);
+            let mut merged: Vec<(usize, f64)> = Vec::with_capacity(sorted.len());
+            for (v, a) in sorted {
+                if let Some(last) = merged.last_mut() {
+                    if last.0 == v {
+                        last.1 += a;
+                        continue;
+                    }
+                }
+                merged.push((v, a));
+            }
+            merged.retain(|&(_, a)| a != 0.0);
+            WorkRow { coeffs: merged, cmp: con.cmp, rhs: con.rhs, orig: k, alive: true }
+        })
+        .collect();
+
+    // Reduce to a fixpoint: substitutions can empty rows or create new
+    // singletons. Each pass either changes something or terminates, and
+    // every change strictly shrinks total coefficient count, so this
+    // loop is finite without an explicit cap.
+    loop {
+        let mut changed = false;
+        // Decisions taken this pass, applied after the scan (borrow
+        // discipline: the scan reads rows, substitution writes them).
+        let mut new_fixes: Vec<FixedVar> = Vec::new();
+
+        for row in rows.iter_mut() {
+            if !row.alive {
+                continue;
+            }
+            if row.coeffs.is_empty() {
+                let ok = match row.cmp {
+                    Cmp::Le => 0.0 <= row.rhs + TOL,
+                    Cmp::Ge => 0.0 >= row.rhs - TOL,
+                    Cmp::Eq => row.rhs.abs() <= TOL,
+                };
+                if !ok {
+                    return Err(Error::Infeasible(format!(
+                        "presolve: empty row `{}` requires 0 {} {}",
+                        p.constraints()[row.orig].label,
+                        row.cmp,
+                        row.rhs
+                    )));
+                }
+                row.alive = false;
+                stats.empty_rows_dropped += 1;
+                changed = true;
+                continue;
+            }
+            if row.coeffs.len() != 1 {
+                continue;
+            }
+            let (v, a) = row.coeffs[0];
+            if fixed_mask[v] || new_fixes.iter().any(|f| f.var == v) {
+                // The variable was fixed earlier in this pass (or is
+                // stale): leave the row for the next pass, where the
+                // substitution has been applied — an inconsistent
+                // second fix then surfaces as an infeasible empty row.
+                continue;
+            }
+            let (rhs, orig) = (row.rhs, row.orig);
+            match row.cmp {
+                Cmp::Eq => {
+                    let value = rhs / a;
+                    if value < -1e-7 {
+                        return Err(Error::Infeasible(format!(
+                            "presolve: row `{}` fixes {} = {value:.3e} < 0",
+                            p.constraints()[orig].label,
+                            p.var_name(v)
+                        )));
+                    }
+                    row.alive = false;
+                    new_fixes.push(FixedVar { var: v, value: value.max(0.0), row: orig });
+                    changed = true;
+                }
+                Cmp::Le => {
+                    // a x <= rhs with x >= 0.
+                    if a > 0.0 && rhs < -TOL {
+                        return Err(Error::Infeasible(format!(
+                            "presolve: row `{}` requires {} <= {:.3e} < 0",
+                            p.constraints()[orig].label,
+                            p.var_name(v),
+                            rhs / a
+                        )));
+                    } else if a > 0.0 && rhs <= TOL {
+                        // x <= 0 with x >= 0: fixed at zero.
+                        row.alive = false;
+                        new_fixes.push(FixedVar { var: v, value: 0.0, row: orig });
+                        changed = true;
+                    } else if a < 0.0 && rhs >= -TOL {
+                        // -|a| x <= rhs with rhs >= 0: implied by x >= 0.
+                        row.alive = false;
+                        stats.vacuous_bounds_dropped += 1;
+                        changed = true;
+                    }
+                    // a > 0, rhs > 0: an upper bound — keep the row.
+                    // a < 0, rhs < 0: a lower bound — keep the row.
+                }
+                Cmp::Ge => {
+                    // Mirror of Le.
+                    if a < 0.0 && rhs > TOL {
+                        return Err(Error::Infeasible(format!(
+                            "presolve: row `{}` requires {} <= {:.3e} < 0",
+                            p.constraints()[orig].label,
+                            p.var_name(v),
+                            rhs / a
+                        )));
+                    } else if a < 0.0 && rhs >= -TOL {
+                        // -|a| x >= rhs with rhs ~ 0: x <= 0, fixed.
+                        row.alive = false;
+                        new_fixes.push(FixedVar { var: v, value: 0.0, row: orig });
+                        changed = true;
+                    } else if a > 0.0 && rhs <= TOL {
+                        // |a| x >= rhs with rhs <= 0: implied by x >= 0.
+                        row.alive = false;
+                        stats.vacuous_bounds_dropped += 1;
+                        changed = true;
+                    }
+                    // a > 0, rhs > 0: a lower bound — keep the row.
                 }
             }
-            merged.push((v, a));
         }
-        merged.retain(|&(_, a)| a != 0.0);
 
-        if merged.is_empty() {
-            let ok = match con.cmp {
-                Cmp::Le => 0.0 <= con.rhs + 1e-12,
-                Cmp::Ge => 0.0 >= con.rhs - 1e-12,
-                Cmp::Eq => con.rhs.abs() <= 1e-12,
-            };
-            if !ok {
-                return Err(Error::Infeasible(format!(
-                    "empty row `{}` requires 0 {} {}",
-                    con.label, con.cmp, con.rhs
-                )));
+        // Substitute this pass's fixes into every remaining row.
+        for f in &new_fixes {
+            fixed_mask[f.var] = true;
+            for row in rows.iter_mut().filter(|r| r.alive) {
+                if let Some(pos) = row.coeffs.iter().position(|&(v, _)| v == f.var) {
+                    let a = row.coeffs[pos].1;
+                    row.rhs -= a * f.value;
+                    row.coeffs.remove(pos);
+                }
             }
-            stats.empty_rows_dropped += 1;
-            continue;
         }
+        stats.fixed_vars += new_fixes.len();
+        fixed.extend(new_fixes);
 
-        // Exact duplicate detection on bit patterns.
+        if !changed {
+            break;
+        }
+    }
+
+    // Duplicate detection on bit patterns (post-substitution).
+    let mut seen: Vec<(Vec<(usize, u64)>, Cmp, u64)> = Vec::new();
+    let mut out = LpProblem::new(nv);
+    let mut c = p.objective().to_vec();
+    for f in &fixed {
+        c[f.var] = 0.0;
+    }
+    out.set_objective(&c);
+    for v in 0..nv {
+        out.name_var(v, p.var_name(v));
+    }
+    let mut row_map = Vec::new();
+    for row in rows.iter().filter(|r| r.alive) {
         let key: (Vec<(usize, u64)>, Cmp, u64) = (
-            merged.iter().map(|&(v, a)| (v, a.to_bits())).collect(),
-            con.cmp,
-            con.rhs.to_bits(),
+            row.coeffs.iter().map(|&(v, a)| (v, a.to_bits())).collect(),
+            row.cmp,
+            row.rhs.to_bits(),
         );
         if seen.contains(&key) {
             stats.duplicate_rows_dropped += 1;
             continue;
         }
         seen.push(key);
-        out.add_labeled(&merged, con.cmp, con.rhs, con.label.clone());
+        out.add_labeled(&row.coeffs, row.cmp, row.rhs, p.constraints()[row.orig].label.clone());
+        row_map.push(row.orig);
     }
-    Ok((out, stats))
+
+    Ok(Presolved { problem: out, stats, row_map, fixed, orig_rows: p.num_constraints() })
+}
+
+impl Presolved {
+    /// Map a solution of the reduced problem back onto the original:
+    /// fixed variables are re-inserted into `x`, the objective is
+    /// re-evaluated on the original problem, and duals are mapped back
+    /// through the row eliminations. Kept rows carry their reduced
+    /// dual, rows dropped as empty/vacuous/duplicate get zero, and each
+    /// fixing row gets the multiplier that makes its variable's dual
+    /// constraint tight — computed in reverse elimination order, which
+    /// respects the dependency structure of cascaded substitutions.
+    ///
+    /// For an *inequality* fixing row (a zero-fix like `x <= 0`) the
+    /// tight multiplier can have the wrong sign (a positive shadow
+    /// price on a `<=` row in a minimization); it is clamped to the
+    /// dual-feasible side, which leaves the variable's reduced cost
+    /// non-negative slack instead — complementary slackness holds
+    /// either way because the fixing row is binding at `x = 0` and its
+    /// rhs is ~0, so `b'y` is unaffected.
+    pub fn restore(&self, orig: &LpProblem, sol: &LpSolution) -> LpSolution {
+        let mut x = sol.x.clone();
+        for f in &self.fixed {
+            x[f.var] = f.value;
+        }
+        let objective = orig.objective_at(&x);
+
+        let duals = sol.duals.as_ref().map(|yr| {
+            let mut y = vec![0.0; self.orig_rows];
+            for (ri, &oi) in self.row_map.iter().enumerate() {
+                if ri < yr.len() {
+                    y[oi] = yr[ri];
+                }
+            }
+            // Merged coefficient of `var` in original row `k`.
+            let coeff_of = |k: usize, var: usize| -> f64 {
+                orig.constraints()[k]
+                    .coeffs
+                    .iter()
+                    .filter(|&&(v, _)| v == var)
+                    .map(|&(_, a)| a)
+                    .sum()
+            };
+            for f in self.fixed.iter().rev() {
+                let mut num = orig.objective()[f.var];
+                for k in 0..self.orig_rows {
+                    if k == f.row {
+                        continue;
+                    }
+                    let a = coeff_of(k, f.var);
+                    if a != 0.0 {
+                        num -= y[k] * a;
+                    }
+                }
+                let ar = coeff_of(f.row, f.var);
+                let tight = if ar.abs() > 1e-300 { num / ar } else { 0.0 };
+                // Sign conventions for `min c'x`: y <= 0 on `<=` rows,
+                // y >= 0 on `>=` rows, free on equalities.
+                y[f.row] = match orig.constraints()[f.row].cmp {
+                    Cmp::Eq => tight,
+                    Cmp::Le => tight.min(0.0),
+                    Cmp::Ge => tight.max(0.0),
+                };
+            }
+            y
+        });
+
+        LpSolution {
+            x,
+            objective,
+            iterations: sol.iterations,
+            phase1_iterations: sol.phase1_iterations,
+            dual_iterations: sol.dual_iterations,
+            duals,
+            basis: sol.basis.clone(),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -87,11 +369,11 @@ mod tests {
         p.add_constraint(&[(0, 1.0)], Cmp::Ge, 1.0);
         p.add_constraint(&[(0, 1.0)], Cmp::Ge, 1.0); // duplicate
         p.add_constraint(&[(1, 0.0)], Cmp::Le, 3.0); // zero coeff -> empty
-        let (q, stats) = presolve(&p).unwrap();
-        assert_eq!(stats.empty_rows_dropped, 2);
-        assert_eq!(stats.duplicate_rows_dropped, 1);
-        assert_eq!(q.num_constraints(), 1);
-        let s = solve(&q).unwrap();
+        let pre = presolve(&p).unwrap();
+        assert_eq!(pre.stats.empty_rows_dropped, 2);
+        assert_eq!(pre.stats.duplicate_rows_dropped, 1);
+        assert_eq!(pre.problem.num_constraints(), 1);
+        let s = solve(&pre.problem).unwrap();
         assert!((s.objective - 1.0).abs() < 1e-9);
     }
 
@@ -107,8 +389,8 @@ mod tests {
         let mut p = LpProblem::new(1);
         p.set_objective(&[1.0]);
         p.add_constraint(&[(0, 1.0), (0, 1.0)], Cmp::Ge, 4.0);
-        let (q, _) = presolve(&p).unwrap();
-        let s = solve(&q).unwrap();
+        let pre = presolve(&p).unwrap();
+        let s = solve(&pre.problem).unwrap();
         assert!((s.x[0] - 2.0).abs() < 1e-9);
     }
 
@@ -119,8 +401,131 @@ mod tests {
         p.add_constraint(&[(0, 1.0), (1, 1.0)], Cmp::Ge, 4.0);
         p.add_constraint(&[(0, 1.0)], Cmp::Le, 3.0);
         let s0 = solve(&p).unwrap();
-        let (q, _) = presolve(&p).unwrap();
-        let s1 = solve(&q).unwrap();
+        let pre = presolve(&p).unwrap();
+        let s1 = solve(&pre.problem).unwrap();
         assert!((s0.objective - s1.objective).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fixes_singleton_equality_and_restores() {
+        // min 2x + y  s.t.  x = 3, x + y >= 5  ->  x=3, y=2, obj=8.
+        let mut p = LpProblem::new(2);
+        p.set_objective(&[2.0, 1.0]);
+        p.add_labeled(&[(0, 1.0)], Cmp::Eq, 3.0, "fix_x");
+        p.add_labeled(&[(0, 1.0), (1, 1.0)], Cmp::Ge, 5.0, "cover");
+        let pre = presolve(&p).unwrap();
+        assert_eq!(pre.stats.fixed_vars, 1);
+        assert_eq!(pre.problem.num_constraints(), 1);
+        // The reduced row is y >= 2.
+        let sol = solve(&pre.problem).unwrap();
+        let full = pre.restore(&p, &sol);
+        assert!((full.x[0] - 3.0).abs() < 1e-9);
+        assert!((full.x[1] - 2.0).abs() < 1e-9);
+        assert!((full.objective - 8.0).abs() < 1e-9);
+        // Restored duals satisfy strong duality on the ORIGINAL rows:
+        // 3*y_fix + 5*y_cover == 8.
+        let y = full.duals.as_ref().unwrap();
+        assert_eq!(y.len(), 2);
+        let by = 3.0 * y[0] + 5.0 * y[1];
+        assert!((by - full.objective).abs() < 1e-7, "b'y {} vs obj {}", by, full.objective);
+    }
+
+    #[test]
+    fn cascading_substitution_reaches_fixpoint() {
+        // x = 2, then x + y = 5 becomes y = 3, then y + z >= 4 becomes
+        // z >= 1.
+        let mut p = LpProblem::new(3);
+        p.set_objective(&[1.0, 1.0, 1.0]);
+        p.add_labeled(&[(0, 1.0)], Cmp::Eq, 2.0, "a");
+        p.add_labeled(&[(0, 1.0), (1, 1.0)], Cmp::Eq, 5.0, "b");
+        p.add_labeled(&[(1, 1.0), (2, 1.0)], Cmp::Ge, 4.0, "c");
+        let pre = presolve(&p).unwrap();
+        assert_eq!(pre.stats.fixed_vars, 2);
+        assert_eq!(pre.problem.num_constraints(), 1);
+        let sol = solve(&pre.problem).unwrap();
+        let full = pre.restore(&p, &sol);
+        assert!((full.x[0] - 2.0).abs() < 1e-9);
+        assert!((full.x[1] - 3.0).abs() < 1e-9);
+        assert!((full.x[2] - 1.0).abs() < 1e-9);
+        assert!((full.objective - 6.0).abs() < 1e-9);
+        let y = full.duals.as_ref().unwrap();
+        let by = 2.0 * y[0] + 5.0 * y[1] + 4.0 * y[2];
+        assert!((by - full.objective).abs() < 1e-7);
+    }
+
+    #[test]
+    fn vacuous_singleton_bounds_dropped() {
+        // x >= -1 and -x <= 2 are implied by x >= 0.
+        let mut p = LpProblem::new(1);
+        p.set_objective(&[1.0]);
+        p.add_constraint(&[(0, 1.0)], Cmp::Ge, -1.0);
+        p.add_constraint(&[(0, -1.0)], Cmp::Le, 2.0);
+        p.add_constraint(&[(0, 1.0)], Cmp::Ge, 1.0); // real bound, kept
+        let pre = presolve(&p).unwrap();
+        assert_eq!(pre.stats.vacuous_bounds_dropped, 2);
+        assert_eq!(pre.problem.num_constraints(), 1);
+    }
+
+    #[test]
+    fn singleton_infeasibilities_detected() {
+        let mut p = LpProblem::new(1);
+        p.add_constraint(&[(0, 1.0)], Cmp::Eq, -2.0);
+        assert!(presolve(&p).is_err());
+        let mut q = LpProblem::new(1);
+        q.add_constraint(&[(0, 2.0)], Cmp::Le, -1.0);
+        assert!(presolve(&q).is_err());
+        let mut r = LpProblem::new(1);
+        r.add_constraint(&[(0, -1.0)], Cmp::Ge, 1.0);
+        assert!(presolve(&r).is_err());
+    }
+
+    #[test]
+    fn inconsistent_fixes_detected_via_cascade() {
+        // x = 2 and x = 3: substitution leaves an empty row 0 = 1.
+        let mut p = LpProblem::new(1);
+        p.add_constraint(&[(0, 1.0)], Cmp::Eq, 2.0);
+        p.add_constraint(&[(0, 1.0)], Cmp::Eq, 3.0);
+        assert!(presolve(&p).is_err());
+    }
+
+    #[test]
+    fn le_zero_fixes_variable_at_zero() {
+        let mut p = LpProblem::new(2);
+        p.set_objective(&[-1.0, 1.0]);
+        p.add_labeled(&[(0, 1.0)], Cmp::Le, 0.0, "cap");
+        p.add_labeled(&[(0, 1.0), (1, 1.0)], Cmp::Ge, 2.0, "cover");
+        let pre = presolve(&p).unwrap();
+        assert_eq!(pre.stats.fixed_vars, 1);
+        let sol = solve(&pre.problem).unwrap();
+        let full = pre.restore(&p, &sol);
+        assert_eq!(full.x[0], 0.0);
+        assert!((full.x[1] - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn inequality_fix_duals_stay_sign_feasible() {
+        // min 2x + y  s.t.  `cap`: x <= 0, `cover`: x + y >= 1.
+        // Optimum x=0, y=1, obj 1; y_cover = 1. The *tight* multiplier
+        // for `cap` would be (2-1)/1 = +1 — infeasible for a `<=` row
+        // in a minimization. The true shadow price is 0 (relaxing the
+        // cap leaves the optimum unchanged), so restore must clamp.
+        let mut p = LpProblem::new(2);
+        p.set_objective(&[2.0, 1.0]);
+        p.add_labeled(&[(0, 1.0)], Cmp::Le, 0.0, "cap");
+        p.add_labeled(&[(0, 1.0), (1, 1.0)], Cmp::Ge, 1.0, "cover");
+        let pre = presolve(&p).unwrap();
+        let sol = solve(&pre.problem).unwrap();
+        let full = pre.restore(&p, &sol);
+        assert!((full.objective - 1.0).abs() < 1e-9);
+        let y = full.duals.as_ref().unwrap();
+        assert!((y[1] - 1.0).abs() < 1e-7, "y_cover = {}", y[1]);
+        assert!(
+            y[0] <= 1e-12,
+            "dual on a <= row must be non-positive, got {}",
+            y[0]
+        );
+        // And it stays complementary: b'y still equals the objective.
+        let by = 0.0 * y[0] + 1.0 * y[1];
+        assert!((by - full.objective).abs() < 1e-7);
     }
 }

@@ -21,6 +21,15 @@
 //! still primal feasible — the common case across the paper's
 //! parameter sweeps, where consecutive scenarios differ only in rhs or
 //! objective data.
+//!
+//! When an rhs perturbation leaves the cached basis primal-*infeasible*
+//! but still dual-feasible (reduced costs are rhs-independent, so a
+//! previously optimal basis always is), the solver re-optimizes with a
+//! **dual simplex** pass instead of discarding the basis: pick the most
+//! negative basic value as the leaving row, price the row `B⁻¹A` via a
+//! BTRAN of `e_r`, and enter the column minimizing the dual ratio
+//! `d_j / −α_j`. Primal feasibility is restored in a handful of pivots
+//! and phase 1 never runs — [`LpSolution::phase1_iterations`] stays 0.
 
 use super::problem::LpProblem;
 use super::simplex::SimplexOptions;
@@ -50,7 +59,11 @@ impl Basis {
     }
 }
 
-/// Solve `p`, optionally warm-starting from `warm`.
+/// Solve `p`, optionally warm-starting from `warm`. A warm basis that
+/// factorizes but is primal-infeasible for the new rhs is repaired by
+/// the dual simplex when it is still dual-feasible; only unusable
+/// bases (wrong shape, singular, dual-infeasible, or a stalled dual
+/// repair) fall back to a cold two-phase start.
 pub fn solve_revised(
     p: &LpProblem,
     opts: &SimplexOptions,
@@ -58,16 +71,44 @@ pub fn solve_revised(
 ) -> Result<LpSolution> {
     let sf = StandardForm::equality(p);
     let mut s = Revised::new(&sf, opts);
-    let warmed = match warm {
-        Some(w) => s.try_warm_start(w),
-        None => false,
-    };
+    let mut warmed = false;
+    if let Some(w) = warm {
+        match s.try_warm_start(w) {
+            WarmStart::Feasible => warmed = true,
+            WarmStart::PrimalInfeasible => {
+                let before = s.iterations;
+                match s.dual_simplex() {
+                    Ok(true) => warmed = true,
+                    // Gave up (dual-infeasible basis, stall, or a
+                    // numerical wobble): pretend the warm attempt never
+                    // happened and fall back to a cold start.
+                    Ok(false) | Err(_) => {
+                        s.iterations = before;
+                        s.dual_iters = 0;
+                    }
+                }
+            }
+            WarmStart::Unusable => {}
+        }
+    }
     if !warmed {
         s.cold_start();
         s.phase1()?;
     }
     s.run(Phase::Two)?;
     s.extract(p, opts)
+}
+
+/// Outcome of adopting a warm basis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum WarmStart {
+    /// Basis rejected (shape mismatch, artificial rows, singular).
+    Unusable,
+    /// Basis adopted and primal feasible: phase 2 can start directly.
+    Feasible,
+    /// Basis adopted but some basic values are negative: a dual-simplex
+    /// repair is required before phase 2.
+    PrimalInfeasible,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -101,6 +142,8 @@ struct Revised<'a> {
     max_iters: usize,
     stall_limit: usize,
     iterations: usize,
+    phase1_iters: usize,
+    dual_iters: usize,
     // Scratch buffers (all length m), reused across iterations.
     col_buf: Vec<f64>,
     w: Vec<f64>,
@@ -108,6 +151,9 @@ struct Revised<'a> {
     u: Vec<f64>,
     t: Vec<f64>,
     cb: Vec<f64>,
+    /// Dual-simplex pivot-row vector `B⁻ᵀ e_r` (kept separate from `y`
+    /// because one dual iteration needs both the row and the duals).
+    rho: Vec<f64>,
 }
 
 impl<'a> Revised<'a> {
@@ -130,12 +176,15 @@ impl<'a> Revised<'a> {
             max_iters,
             stall_limit: opts.stall_limit,
             iterations: 0,
+            phase1_iters: 0,
+            dual_iters: 0,
             col_buf: vec![0.0; m],
             w: vec![0.0; m],
             y: vec![0.0; m],
             u: vec![0.0; m],
             t: vec![0.0; m],
             cb: vec![0.0; m],
+            rho: vec![0.0; m],
         }
     }
 
@@ -165,26 +214,27 @@ impl<'a> Revised<'a> {
         self.etas.clear();
     }
 
-    /// Adopt a previous basis when it factorizes and is still primal
-    /// feasible for this problem's data. Returns false (leaving `self`
-    /// ready for a cold start) otherwise.
-    fn try_warm_start(&mut self, warm: &Basis) -> bool {
+    /// Adopt a previous basis when it factorizes. Primal-infeasible
+    /// basic values are kept (not clamped) so a follow-up
+    /// [`Revised::dual_simplex`] pass can repair them; only tiny
+    /// negatives within `feas_eps` are snapped to zero. Returns
+    /// [`WarmStart::Unusable`] (leaving `self` ready for a cold start)
+    /// when the basis has the wrong shape or does not factorize.
+    fn try_warm_start(&mut self, warm: &Basis) -> WarmStart {
         if warm.cols.len() != self.m || !warm.is_complete() {
-            return false;
+            return WarmStart::Unusable;
         }
         if warm.cols.iter().any(|&c| c >= self.ncols) {
-            return false;
+            return WarmStart::Unusable;
         }
         let b = self.basis_matrix(&warm.cols);
         let Ok(lu) = LuFactors::factor(&b) else {
-            return false;
+            return WarmStart::Unusable;
         };
         lu.solve_into(&self.sf.b, &mut self.xb);
-        if self.xb.iter().any(|&v| v < -self.feas_eps) {
-            return false;
-        }
+        let feasible = self.xb.iter().all(|&v| v >= -self.feas_eps);
         for v in self.xb.iter_mut() {
-            if *v < 0.0 {
+            if *v < 0.0 && *v > -self.feas_eps {
                 *v = 0.0;
             }
         }
@@ -195,7 +245,120 @@ impl<'a> Revised<'a> {
         }
         self.lu = lu;
         self.etas.clear();
-        true
+        if feasible {
+            WarmStart::Feasible
+        } else {
+            WarmStart::PrimalInfeasible
+        }
+    }
+
+    /// Dual-simplex repair of a primal-infeasible but dual-feasible
+    /// basis: repeatedly drive the most negative basic value out of the
+    /// basis while keeping all reduced costs non-negative. Returns
+    /// `Ok(true)` once `x_B ≥ 0` (phase 2 may then start from a
+    /// primal- and dual-feasible basis), `Ok(false)` to request a cold
+    /// fallback (dual-infeasible start, stall, or an unrepairable row —
+    /// the cold phase 1 then gives the authoritative verdict).
+    fn dual_simplex(&mut self) -> Result<bool> {
+        // Dual feasibility of the phase-2 costs at the warm basis.
+        for r in 0..self.m {
+            self.cb[r] = self.cost_basic(Phase::Two, r);
+        }
+        self.btran();
+        for j in 0..self.ncols {
+            if self.in_basis[j] {
+                continue;
+            }
+            let d = self.cost_col(Phase::Two, j) - self.sf.a.col_dot(j, &self.y);
+            if d < -self.eps * 10.0 {
+                return Ok(false);
+            }
+        }
+
+        let budget = 400 + 8 * self.m;
+        loop {
+            // Leaving row: most negative basic value.
+            let mut leave: Option<usize> = None;
+            let mut most_neg = -self.feas_eps;
+            for (i, &v) in self.xb.iter().enumerate() {
+                if v < most_neg {
+                    most_neg = v;
+                    leave = Some(i);
+                }
+            }
+            let Some(r) = leave else {
+                // Primal feasible: snap residual noise and hand over.
+                for v in self.xb.iter_mut() {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+                return Ok(true);
+            };
+            if self.dual_iters >= budget {
+                return Ok(false);
+            }
+            self.iterations += 1;
+            self.dual_iters += 1;
+
+            // Pivot row rho = B^{-T} e_r ...
+            self.cb.iter_mut().for_each(|v| *v = 0.0);
+            self.cb[r] = 1.0;
+            self.btran();
+            self.rho.copy_from_slice(&self.y);
+            // ... and current duals y = B^{-T} c_B for the ratio test.
+            for i in 0..self.m {
+                self.cb[i] = self.cost_basic(Phase::Two, i);
+            }
+            self.btran();
+
+            // Entering column: among alpha_j = rho·A_j < 0, minimize
+            // d_j / -alpha_j (ties to the lowest index, which keeps the
+            // pass deterministic).
+            let mut enter: Option<usize> = None;
+            let mut best_ratio = f64::INFINITY;
+            for j in 0..self.ncols {
+                if self.in_basis[j] {
+                    continue;
+                }
+                let alpha = self.sf.a.col_dot(j, &self.rho);
+                if alpha < -self.eps {
+                    let d =
+                        (self.cost_col(Phase::Two, j) - self.sf.a.col_dot(j, &self.y)).max(0.0);
+                    let ratio = d / -alpha;
+                    if ratio < best_ratio - 1e-12 {
+                        best_ratio = ratio;
+                        enter = Some(j);
+                    }
+                }
+            }
+            let Some(q) = enter else {
+                if !self.etas.is_empty() {
+                    // Rule out eta drift before giving up on the row.
+                    self.refactorize()?;
+                    continue;
+                }
+                // Row r certifies primal infeasibility, but let the
+                // cold phase 1 deliver the authoritative verdict.
+                return Ok(false);
+            };
+
+            self.load_column(q);
+            self.ftran();
+            if self.w[r] > -self.eps {
+                // FTRAN disagrees with the BTRAN row (numerical drift).
+                if !self.etas.is_empty() {
+                    self.refactorize()?;
+                    continue;
+                }
+                return Ok(false);
+            }
+            self.pivot_dual(q, r);
+
+            if self.etas.len() >= REFACTOR_EVERY {
+                self.refactorize()?;
+            }
+        }
     }
 
     /// Dense basis matrix for a candidate set of basic columns
@@ -289,12 +452,29 @@ impl<'a> Revised<'a> {
         self.sf.a.col_into(q, &mut self.col_buf);
     }
 
-    /// Pivot: column `q` enters at row `r`, using the FTRAN result in
-    /// `self.w`. Records the eta and updates `x_B` and the basis maps.
+    /// Primal pivot: column `q` enters at row `r`, using the FTRAN
+    /// result in `self.w`. The step length clamps tiny negative basic
+    /// values to zero (ratio-test convention).
     fn pivot(&mut self, q: usize, r: usize) {
+        let theta = self.xb[r].max(0.0) / self.w[r];
+        self.pivot_at(q, r, theta);
+    }
+
+    /// Dual pivot: the leaving row's basic value is *negative* and the
+    /// pivot element `w[r]` is negative too, so the unclamped step
+    /// `x_B[r] / w[r]` is positive and the entering variable comes in
+    /// at a non-negative value.
+    fn pivot_dual(&mut self, q: usize, r: usize) {
+        let theta = self.xb[r] / self.w[r];
+        self.pivot_at(q, r, theta);
+    }
+
+    /// Shared pivot body: column `q` enters at row `r` with step
+    /// `theta`, using the FTRAN result in `self.w`. Records the eta and
+    /// updates `x_B` and the basis maps.
+    fn pivot_at(&mut self, q: usize, r: usize, theta: f64) {
         let wr = self.w[r];
         debug_assert!(wr.abs() > 1e-14);
-        let theta = self.xb[r].max(0.0) / wr;
         let mut entries = Vec::new();
         for i in 0..self.m {
             let wi = self.w[i];
@@ -432,12 +612,15 @@ impl<'a> Revised<'a> {
         if !self.basis.iter().any(|&b| b >= self.ncols) {
             return Ok(());
         }
+        let before = self.iterations;
         self.run(Phase::One)?;
         let obj = self.objective(Phase::One);
         if obj > self.feas_eps {
             return Err(Error::Infeasible(format!("phase-1 objective {obj:.3e} > 0")));
         }
-        self.drive_out_artificials()
+        self.drive_out_artificials()?;
+        self.phase1_iters += self.iterations - before;
+        Ok(())
     }
 
     /// Pivot any artificial still basic (at value ~0) out on a
@@ -518,7 +701,15 @@ impl<'a> Revised<'a> {
                 .collect(),
         };
 
-        Ok(LpSolution { x, objective, iterations: self.iterations, duals, basis: Some(basis) })
+        Ok(LpSolution {
+            x,
+            objective,
+            iterations: self.iterations,
+            phase1_iterations: self.phase1_iters,
+            dual_iterations: self.dual_iters,
+            duals,
+            basis: Some(basis),
+        })
     }
 
     /// Duals `y = B⁻ᵀ c_B` (phase-2 costs), with standardization row
@@ -591,6 +782,65 @@ mod tests {
             warm2.iterations,
             cold2.iterations
         );
+    }
+
+    #[test]
+    fn dual_simplex_repairs_primal_infeasible_warm_basis() {
+        // Optimal basis of the textbook problem: x, y basic with rows 2
+        // and 3 binding, slack of row 1 basic. Shrinking b3 from 18 to
+        // 10 makes that basis primal-infeasible (solving B x_B = b
+        // forces x < 0) while the reduced costs — which do not depend
+        // on b — stay dual feasible, so the warm re-solve must complete
+        // through the dual simplex without a phase-1 restart.
+        let p = textbook();
+        let cold = solve_revised(&p, &opts(), None).unwrap();
+        let mut p2 = LpProblem::new(2);
+        p2.set_objective(&[-3.0, -5.0]);
+        p2.add_constraint(&[(0, 1.0)], Cmp::Le, 4.0);
+        p2.add_constraint(&[(1, 2.0)], Cmp::Le, 12.0);
+        p2.add_constraint(&[(0, 3.0), (1, 2.0)], Cmp::Le, 10.0);
+        let cold2 = solve_revised(&p2, &opts(), None).unwrap();
+        let warm2 = solve_revised(&p2, &opts(), cold.basis.as_ref()).unwrap();
+        assert_close(warm2.objective, cold2.objective);
+        assert_eq!(warm2.phase1_iterations, 0, "dual repair must not restart phase 1");
+        assert!(warm2.dual_iterations > 0, "expected the dual-simplex path to run");
+        assert!(p2.check_feasible(&warm2.x, 1e-7).is_none());
+    }
+
+    #[test]
+    fn dual_simplex_falls_back_cold_on_infeasible_perturbation() {
+        // min x st x <= b: basis {x}? Construct a perturbation that
+        // makes the problem itself infeasible; the warm path must agree
+        // with the cold path's verdict.
+        let mut p = LpProblem::new(1);
+        p.set_objective(&[-1.0]);
+        p.add_constraint(&[(0, 1.0)], Cmp::Le, 5.0);
+        p.add_constraint(&[(0, 1.0)], Cmp::Ge, 1.0);
+        let base = solve_revised(&p, &opts(), None).unwrap();
+        let mut bad = LpProblem::new(1);
+        bad.set_objective(&[-1.0]);
+        bad.add_constraint(&[(0, 1.0)], Cmp::Le, 5.0);
+        bad.add_constraint(&[(0, 1.0)], Cmp::Ge, 7.0);
+        match solve_revised(&bad, &opts(), base.basis.as_ref()) {
+            Err(Error::Infeasible(_)) => {}
+            other => panic!("expected infeasible, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn cold_solves_report_phase1_iterations() {
+        // An equality row forces an artificial, so the cold path pays
+        // phase-1 pivots that a warm or dual-repaired start skips.
+        let mut p = LpProblem::new(2);
+        p.set_objective(&[1.0, 2.0]);
+        p.add_constraint(&[(0, 1.0), (1, 1.0)], Cmp::Eq, 4.0);
+        p.add_constraint(&[(0, 1.0)], Cmp::Ge, 1.0);
+        let s = solve_revised(&p, &opts(), None).unwrap();
+        assert!(s.phase1_iterations > 0, "equality rows require phase-1 work");
+        assert_eq!(s.dual_iterations, 0);
+        let warm = solve_revised(&p, &opts(), s.basis.as_ref()).unwrap();
+        assert_eq!(warm.phase1_iterations, 0);
+        assert_close(warm.objective, s.objective);
     }
 
     #[test]

@@ -75,10 +75,14 @@ pub fn solve_with(p: &LpProblem, opts: &SimplexOptions) -> Result<LpSolution> {
 /// Solve, optionally starting from a previous optimal [`Basis`] of a
 /// structurally identical problem (same variable/constraint counts).
 ///
-/// Warm starts are honored by the revised backend; an unusable basis
-/// (wrong shape, singular, or primal-infeasible for the new data)
-/// silently falls back to a cold two-phase start, so this is always
-/// safe to call. The dense backend ignores the hint.
+/// Warm starts are honored by the revised backend: a basis that is
+/// still primal feasible skips phase 1 outright, and one that went
+/// primal-infeasible under an rhs perturbation (but is still
+/// dual-feasible, as previously optimal bases always are) is repaired
+/// by a dual-simplex pass instead of a phase-1 restart. Only an
+/// unusable basis (wrong shape, singular, dual-infeasible) silently
+/// falls back to a cold two-phase start, so this is always safe to
+/// call. The dense backend ignores the hint.
 pub fn solve_warm(p: &LpProblem, opts: &SimplexOptions, warm: Option<&Basis>) -> Result<LpSolution> {
     match opts.backend {
         SolverBackend::RevisedSparse => revised::solve_revised(p, opts, warm),
@@ -112,6 +116,7 @@ struct Tableau {
     max_iters: usize,
     stall_limit: usize,
     iterations: usize,
+    phase1_iters: usize,
     /// Pivot-row scratch buffer (reused across pivots).
     scratch: Vec<f64>,
 }
@@ -179,6 +184,7 @@ impl Tableau {
             max_iters,
             stall_limit: opts.stall_limit,
             iterations: 0,
+            phase1_iters: 0,
             scratch: Vec::with_capacity(width + 1),
         }
     }
@@ -371,11 +377,13 @@ impl Tableau {
         if self.art_start == self.width {
             return Ok(());
         }
+        let before = self.iterations;
         let mut c1 = vec![0.0; self.width];
         for j in self.art_start..self.width {
             c1[j] = 1.0;
         }
         self.run(&c1, false)?;
+        self.phase1_iters += self.iterations - before;
         let obj = self.objective_value(&c1);
         if obj > self.feas_eps {
             return Err(Error::Infeasible(format!("phase-1 objective {obj:.3e} > 0")));
@@ -441,6 +449,8 @@ impl Tableau {
             x,
             objective,
             iterations: self.iterations,
+            phase1_iterations: self.phase1_iters,
+            dual_iterations: 0,
             duals,
             basis: Some(Basis { cols: basis_cols }),
         })

@@ -9,8 +9,15 @@ pub struct LpSolution {
     pub x: Vec<f64>,
     /// Optimal objective value (minimization).
     pub objective: f64,
-    /// Total simplex iterations across both phases.
+    /// Total simplex iterations across all phases.
     pub iterations: usize,
+    /// Iterations spent in phase 1 (feasibility search). Zero when the
+    /// solve started from a usable warm basis — including bases that
+    /// were primal-infeasible and repaired by the dual simplex.
+    pub phase1_iterations: usize,
+    /// Dual-simplex pivots spent repairing a primal-infeasible warm
+    /// basis (revised backend only; zero on cold or primal-warm solves).
+    pub dual_iterations: usize,
     /// Dual values per constraint (if requested and extractable).
     pub duals: Option<Vec<f64>>,
     /// Optimal basis, usable to warm-start the next solve of a

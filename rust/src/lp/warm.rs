@@ -41,8 +41,21 @@ impl WarmCache {
     /// Solve `p`, warm-starting from the cached basis for its shape
     /// when one exists, and caching the new optimal basis on success.
     pub fn solve(&mut self, p: &LpProblem, opts: &SimplexOptions) -> Result<LpSolution> {
+        self.solve_seeded(p, opts, None)
+    }
+
+    /// Like [`WarmCache::solve`], but with an external fallback basis:
+    /// when the cache has nothing for `p`'s shape, `seed` (typically a
+    /// basis projected from a *different* shape — see
+    /// `pipeline::project`) is tried instead of a cold start.
+    pub fn solve_seeded(
+        &mut self,
+        p: &LpProblem,
+        opts: &SimplexOptions,
+        seed: Option<&Basis>,
+    ) -> Result<LpSolution> {
         let key = (p.num_vars(), p.num_constraints());
-        let warm = self.bases.get(&key);
+        let warm = self.bases.get(&key).or(seed);
         if warm.is_some() {
             self.warm_attempts += 1;
         } else {

@@ -164,6 +164,31 @@ impl SystemSpec {
     pub fn with_job(&self, job: f64) -> SystemSpec {
         SystemSpec { job, ..self.clone() }
     }
+
+    /// Copy with all release times scaled by `s >= 0` (the sweep
+    /// engine's release-time axis; `s = 0` makes every source available
+    /// immediately). Source order is unaffected — releases play no role
+    /// in the sort.
+    pub fn with_scaled_releases(&self, s: f64) -> SystemSpec {
+        assert!(s >= 0.0 && s.is_finite(), "release scale must be >= 0, got {s}");
+        let mut out = self.clone();
+        for src in out.sources.iter_mut() {
+            src.release *= s;
+        }
+        out
+    }
+
+    /// Copy with all inverse link speeds `G_i` scaled by `s > 0` (the
+    /// sweep engine's link-speed axis; `s < 1` means faster links).
+    /// Uniform scaling preserves the ascending-`G` sort order.
+    pub fn with_scaled_links(&self, s: f64) -> SystemSpec {
+        assert!(s > 0.0 && s.is_finite(), "link scale must be > 0, got {s}");
+        let mut out = self.clone();
+        for src in out.sources.iter_mut() {
+            src.g *= s;
+        }
+        out
+    }
 }
 
 /// Fluent builder for [`SystemSpec`].
@@ -342,5 +367,18 @@ mod tests {
         let s1 = spec.with_n_sources(1);
         assert_eq!(s1.g(), vec![0.2]);
         assert_eq!(s1.m(), 5);
+    }
+
+    #[test]
+    fn scaling_helpers() {
+        let spec = table1_spec();
+        let r2 = spec.with_scaled_releases(2.0);
+        assert_eq!(r2.releases(), vec![20.0, 100.0]);
+        let r0 = spec.with_scaled_releases(0.0);
+        assert_eq!(r0.releases(), vec![0.0, 0.0]);
+        assert!(r0.validate().is_ok());
+        let g05 = spec.with_scaled_links(0.5);
+        assert_eq!(g05.g(), vec![0.1, 0.2]);
+        assert!(g05.validate().is_ok());
     }
 }

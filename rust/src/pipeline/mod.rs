@@ -1,0 +1,226 @@
+//! The unified solve pipeline every scenario family flows through:
+//!
+//! ```text
+//! ScenarioModel::build_lp ─▶ presolve ─▶ simplex backend ─▶ restore ─▶ Schedule
+//!        (per family)      (default on)  (warm cache / dual   (x, duals,
+//!                                         restart / seed)      objective)
+//! ```
+//!
+//! Before this module existed, each scenario family in [`crate::dlt`]
+//! hand-rolled its own `build_lp` / `solve` / `solve_opts` /
+//! `solve_cached` quartet and none of them ran presolve. Now a family
+//! is just a [`ScenarioModel`] implementation — build the LP, name the
+//! variables, reconstruct the schedule — and [`solve`], [`solve_cached`]
+//! and [`solve_full`] provide the shared machinery:
+//!
+//! - **presolve by default** ([`crate::lp::presolve`]): fixed-variable
+//!   substitution plus row cleanup in front of *both* simplex backends,
+//!   with `x`, objective and duals mapped back through the eliminations
+//!   before schedule reconstruction;
+//! - **warm restarts** ([`crate::lp::WarmCache`]): the cache keys the
+//!   last optimal basis by reduced-LP shape; an rhs-perturbed basis
+//!   that went primal-infeasible is repaired by the revised backend's
+//!   dual simplex instead of a cold phase-1 restart;
+//! - **cross-shape seeding** ([`project::project_basis`]): when the
+//!   cache has nothing for a shape, a basis from a *neighbouring* shape
+//!   (e.g. the `m`-processor instance of a processor-count sweep) is
+//!   projected onto the new LP by variable name and row label and used
+//!   as the fallback seed.
+
+pub mod project;
+
+use crate::dlt::Schedule;
+use crate::error::Result;
+use crate::lp::presolve::{presolve, PresolveStats};
+use crate::lp::{Basis, LpProblem, LpSolution, SimplexOptions, WarmCache};
+use crate::model::SystemSpec;
+
+/// One scenario family: how to turn a [`SystemSpec`] into an LP and an
+/// LP solution back into a timed [`Schedule`].
+///
+/// Implemented by [`crate::dlt::frontend::FeOptions`] (§3.1),
+/// [`crate::dlt::no_frontend::NfeOptions`] (§3.2),
+/// [`crate::dlt::concurrent::ConcurrentOptions`] (§8 fluid models) and
+/// [`crate::dlt::multi_job::MultiJobStepModel`] (§8 FIFO pipeline
+/// steps) — the model value *is* the family's option set.
+pub trait ScenarioModel {
+    /// Short family name (diagnostics, sweep labels).
+    fn name(&self) -> &'static str;
+
+    /// Build the family's LP for a validated, sorted spec. Variables
+    /// must be named and constraints labeled: the pipeline's
+    /// cross-shape projection matches bases between LPs by those
+    /// strings.
+    fn build_lp(&self, spec: &SystemSpec) -> LpProblem;
+
+    /// Simplex options for this model.
+    fn simplex(&self) -> SimplexOptions {
+        SimplexOptions::default()
+    }
+
+    /// Reconstruct the timed schedule from an LP solution (full-length
+    /// `x`, fixed variables already restored by the pipeline).
+    fn schedule(&self, spec: &SystemSpec, sol: &LpSolution) -> Result<Schedule>;
+}
+
+/// Pipeline tuning knobs.
+#[derive(Debug, Clone)]
+pub struct PipelineOptions {
+    /// Run [`crate::lp::presolve`] in front of the backend (default
+    /// true). Disable to measure raw-solve baselines or to debug a
+    /// presolve reduction.
+    pub presolve: bool,
+}
+
+impl Default for PipelineOptions {
+    fn default() -> Self {
+        PipelineOptions { presolve: true }
+    }
+}
+
+/// Everything a pipeline solve produced, for callers that need more
+/// than the schedule (sweep engines seed the next shape from
+/// `solution.basis` + `reduced`; tests inspect iteration counts and
+/// restored duals).
+#[derive(Debug, Clone)]
+pub struct Solved {
+    /// The reconstructed schedule.
+    pub schedule: Schedule,
+    /// The LP solution mapped back onto the *original* LP (full `x`,
+    /// duals per original constraint). `solution.basis` refers to
+    /// `reduced` — pair them when seeding another solve.
+    pub solution: LpSolution,
+    /// What presolve removed (default/empty when presolve was off).
+    pub stats: PresolveStats,
+    /// The LP the backend actually solved (post-presolve).
+    pub reduced: LpProblem,
+}
+
+/// Solve one scenario with default pipeline options (presolve on, no
+/// warm state).
+pub fn solve<S: ScenarioModel + ?Sized>(model: &S, spec: &SystemSpec) -> Result<Schedule> {
+    Ok(solve_full(model, spec, &PipelineOptions::default(), None, None)?.schedule)
+}
+
+/// Solve through a [`WarmCache`]: repeated solves of structurally
+/// identical instances (job-size sweeps, perturbed specs, advisor
+/// queries) start from the previous optimal basis instead of from
+/// scratch. One cache per solver thread is the intended usage; see
+/// [`crate::experiments::sweep`] for the parallel layer.
+pub fn solve_cached<S: ScenarioModel + ?Sized>(
+    model: &S,
+    spec: &SystemSpec,
+    cache: &mut WarmCache,
+) -> Result<Schedule> {
+    Ok(solve_full(model, spec, &PipelineOptions::default(), Some(cache), None)?.schedule)
+}
+
+/// Full-control pipeline entry: explicit options, optional warm cache,
+/// and an optional cross-shape seed `(reduced LP of the solved
+/// neighbour, its optimal basis)` used when the cache misses.
+pub fn solve_full<S: ScenarioModel + ?Sized>(
+    model: &S,
+    spec: &SystemSpec,
+    opts: &PipelineOptions,
+    cache: Option<&mut WarmCache>,
+    seed: Option<(&LpProblem, &Basis)>,
+) -> Result<Solved> {
+    spec.validate()?;
+    let lp = model.build_lp(spec);
+    let simplex = model.simplex();
+
+    let pre = if opts.presolve { Some(presolve(&lp)?) } else { None };
+    let target: &LpProblem = pre.as_ref().map(|pr| &pr.problem).unwrap_or(&lp);
+
+    let seed_basis: Option<Basis> =
+        seed.and_then(|(from_lp, basis)| project::project_basis(from_lp, target, basis));
+
+    let sol = match cache {
+        Some(c) => c.solve_seeded(target, &simplex, seed_basis.as_ref())?,
+        None => crate::lp::solve_warm(target, &simplex, seed_basis.as_ref())?,
+    };
+
+    let (solution, stats) = match &pre {
+        Some(pr) => (pr.restore(&lp, &sol), pr.stats.clone()),
+        None => (sol, PresolveStats::default()),
+    };
+    let schedule = model.schedule(spec, &solution)?;
+    let reduced = match pre {
+        Some(pr) => pr.problem,
+        None => lp,
+    };
+    Ok(Solved { schedule, solution, stats, reduced })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dlt::frontend::FeOptions;
+    use crate::dlt::no_frontend::NfeOptions;
+    use crate::model::SystemSpec;
+
+    fn table1() -> SystemSpec {
+        SystemSpec::builder()
+            .source(0.2, 10.0)
+            .source(0.4, 50.0)
+            .processors(&[2.0, 3.0, 4.0, 5.0, 6.0])
+            .job(100.0)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn pipeline_matches_raw_solve_fe() {
+        let spec = table1();
+        let with = solve_full(&FeOptions::default(), &spec, &PipelineOptions::default(), None, None)
+            .unwrap();
+        let without = solve_full(
+            &FeOptions::default(),
+            &spec,
+            &PipelineOptions { presolve: false },
+            None,
+            None,
+        )
+        .unwrap();
+        let a = with.schedule.makespan;
+        let b = without.schedule.makespan;
+        assert!((a - b).abs() < 1e-9 * (1.0 + b.abs()), "{a} vs {b}");
+    }
+
+    #[test]
+    fn presolve_fires_on_nfe_lps() {
+        // Eq. 10 (`TS[0][0] = R_1`) is a singleton equality, so the NFE
+        // family always gives presolve a variable to substitute.
+        let spec = SystemSpec::builder()
+            .source(0.2, 0.0)
+            .source(0.2, 5.0)
+            .processors(&[2.0, 3.0, 4.0])
+            .job(100.0)
+            .build()
+            .unwrap();
+        let solved =
+            solve_full(&NfeOptions::default(), &spec, &PipelineOptions::default(), None, None)
+                .unwrap();
+        assert!(solved.stats.fixed_vars >= 1, "stats: {:?}", solved.stats);
+        // The fixed TS[0][0] = R_1 = 0 must be restored into x.
+        assert!((solved.schedule.comm_start[0] - 0.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cached_pipeline_solves_agree_with_uncached() {
+        let spec = table1();
+        let mut cache = WarmCache::new();
+        for k in 0..6 {
+            let sub = spec.with_job(100.0 + 25.0 * k as f64);
+            let cached = solve_cached(&FeOptions::default(), &sub, &mut cache).unwrap();
+            let plain = solve(&FeOptions::default(), &sub).unwrap();
+            assert!(
+                (cached.makespan - plain.makespan).abs() < 1e-7 * (1.0 + plain.makespan),
+                "J step {k}: {} vs {}",
+                cached.makespan,
+                plain.makespan
+            );
+        }
+        assert!(cache.warm_attempts >= 1);
+    }
+}

@@ -1,0 +1,208 @@
+//! Cross-shape basis projection: seed one LP's simplex basis from a
+//! structurally *related* (not identical) LP that was already solved.
+//!
+//! The motivating case is the processor-count axis of a sweep: the
+//! `m+1`-processor instance shares almost all of its variables
+//! (`beta[i][j]`, `T_f`) and constraints (`release[i]`,
+//! `continuity[i][j]`, `finish[j]`, `normalize`) with the
+//! `m`-processor instance that was just solved, but the raw column
+//! indices all shift. Matching by **variable name** and **row label**
+//! instead of by index gives a model-agnostic translation:
+//!
+//! - a basic structural column maps through its variable name;
+//! - a basic slack/surplus column maps through its row's label (aux
+//!   columns are appended per non-equality row in row order in
+//!   [`crate::lp::StandardForm`], in both LPs);
+//! - rows that exist only in the target LP get their own aux column,
+//!   so the projected basis is complete and factorizable.
+//!
+//! The projected basis is a *seed*, not a guarantee: it is usually
+//! primal-infeasible for the new data (the new finish rows bind), which
+//! is exactly what the revised backend's dual-simplex repair is for,
+//! and an unusable projection just falls back to a cold start inside
+//! `solve_warm`.
+
+use crate::lp::{Basis, Cmp, LpProblem};
+use std::collections::HashMap;
+
+/// Per-row auxiliary-column rank in [`crate::lp::StandardForm`]
+/// numbering: `Some(rank)` when the row gets a slack/surplus column
+/// (any non-equality row — rhs sign flips swap slack and surplus but
+/// never add or remove the column), `None` for equality rows.
+fn aux_ranks(p: &LpProblem) -> Vec<Option<usize>> {
+    let mut rank = 0usize;
+    p.constraints()
+        .iter()
+        .map(|c| {
+            if c.cmp == Cmp::Eq {
+                None
+            } else {
+                let r = rank;
+                rank += 1;
+                Some(r)
+            }
+        })
+        .collect()
+}
+
+/// Project `basis` (optimal for `from`) onto `to`'s shape. Returns
+/// `None` when the two LPs cannot be matched reliably: duplicate or
+/// empty row labels, duplicate variable names, a basic variable or row
+/// with no counterpart, or a target row left without any usable column.
+pub fn project_basis(from: &LpProblem, to: &LpProblem, basis: &Basis) -> Option<Basis> {
+    if basis.cols.len() != from.num_constraints() || !basis.is_complete() {
+        return None;
+    }
+
+    // Unique-name maps for the target.
+    let mut var_of: HashMap<&str, usize> = HashMap::with_capacity(to.num_vars());
+    for v in 0..to.num_vars() {
+        let name = to.var_name(v);
+        if name.is_empty() || var_of.insert(name, v).is_some() {
+            return None;
+        }
+    }
+    let mut row_of: HashMap<&str, usize> = HashMap::with_capacity(to.num_constraints());
+    for (k, con) in to.constraints().iter().enumerate() {
+        if con.label.is_empty() || row_of.insert(con.label.as_str(), k).is_some() {
+            return None;
+        }
+    }
+    // Source-side labels must be unique too, or the row translation is
+    // ambiguous.
+    {
+        let mut seen: HashMap<&str, ()> = HashMap::with_capacity(from.num_constraints());
+        for con in from.constraints() {
+            if con.label.is_empty() || seen.insert(con.label.as_str(), ()).is_some() {
+                return None;
+            }
+        }
+    }
+
+    let from_aux = aux_ranks(from);
+    let to_aux = aux_ranks(to);
+    // Aux rank -> row index, source side.
+    let mut from_aux_row: Vec<usize> = Vec::new();
+    for (k, r) in from_aux.iter().enumerate() {
+        if r.is_some() {
+            from_aux_row.push(k);
+        }
+    }
+    let from_nv = from.num_vars();
+    let to_nv = to.num_vars();
+
+    let mut cols = vec![usize::MAX; to.num_constraints()];
+    for (r_old, &col) in basis.cols.iter().enumerate() {
+        // Which target row does this source row correspond to? Rows
+        // that vanished (e.g. a release row presolved away in the new
+        // instance) simply drop their basic column.
+        let Some(&r_new) = row_of.get(from.constraints()[r_old].label.as_str()) else {
+            continue;
+        };
+        let new_col = if col < from_nv {
+            match var_of.get(from.var_name(col)) {
+                Some(&v) => v,
+                None => continue, // variable gone; row falls back to its aux below
+            }
+        } else {
+            let rank = col - from_nv;
+            if rank >= from_aux_row.len() {
+                return None; // not a structural or aux column: corrupt basis
+            }
+            let src_row = from_aux_row[rank];
+            let Some(&aux_row_new) = row_of.get(from.constraints()[src_row].label.as_str())
+            else {
+                continue;
+            };
+            match to_aux[aux_row_new] {
+                Some(rk) => to_nv + rk,
+                None => continue, // the target row became an equality
+            }
+        };
+        cols[r_new] = new_col;
+    }
+
+    // Rows with no inherited column (new rows, or rows whose basic
+    // column had no counterpart) take their own aux column.
+    for (k, slot) in cols.iter_mut().enumerate() {
+        if *slot == usize::MAX {
+            match to_aux[k] {
+                Some(rk) => *slot = to_nv + rk,
+                None => return None, // a new equality row cannot self-seed
+            }
+        }
+    }
+
+    // A column may only be basic in one row.
+    let mut used: Vec<usize> = cols.clone();
+    used.sort_unstable();
+    if used.windows(2).any(|w| w[0] == w[1]) {
+        return None;
+    }
+
+    Some(Basis { cols })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dlt::frontend::{self, FeOptions};
+    use crate::lp::{solve_warm, solve_with, SimplexOptions};
+    use crate::model::SystemSpec;
+
+    fn spec(m: usize) -> SystemSpec {
+        let a: Vec<f64> = (0..m).map(|k| 2.0 + 0.5 * k as f64).collect();
+        SystemSpec::builder()
+            .source(0.2, 1.0)
+            .source(0.4, 3.0)
+            .processors(&a)
+            .job(100.0)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn identity_projection_roundtrips() {
+        let lp = frontend::build_lp(&spec(4), &FeOptions::default());
+        let opts = SimplexOptions::default();
+        let sol = solve_with(&lp, &opts).unwrap();
+        let basis = sol.basis.as_ref().unwrap();
+        let proj = project_basis(&lp, &lp, basis).expect("identity projection");
+        assert_eq!(proj.cols, basis.cols);
+        // And it warm-starts to the same optimum in few iterations.
+        let warm = solve_warm(&lp, &opts, Some(&proj)).unwrap();
+        assert!((warm.objective - sol.objective).abs() < 1e-7);
+        assert_eq!(warm.phase1_iterations, 0);
+    }
+
+    #[test]
+    fn projects_m_to_m_plus_one_and_solves() {
+        let opts = SimplexOptions::default();
+        let lp_m = frontend::build_lp(&spec(4), &FeOptions::default());
+        let sol_m = solve_with(&lp_m, &opts).unwrap();
+        let lp_m1 = frontend::build_lp(&spec(5), &FeOptions::default());
+        let proj = project_basis(&lp_m, &lp_m1, sol_m.basis.as_ref().unwrap())
+            .expect("m -> m+1 projection");
+        assert!(proj.is_complete());
+        assert_eq!(proj.cols.len(), lp_m1.num_constraints());
+        // Whatever the seed's feasibility, the warm solve must land on
+        // the cold optimum.
+        let cold = solve_with(&lp_m1, &opts).unwrap();
+        let warm = solve_warm(&lp_m1, &opts, Some(&proj)).unwrap();
+        assert!(
+            (warm.objective - cold.objective).abs() < 1e-7 * (1.0 + cold.objective.abs()),
+            "warm {} vs cold {}",
+            warm.objective,
+            cold.objective
+        );
+    }
+
+    #[test]
+    fn unlabeled_rows_refuse_projection() {
+        let mut p = LpProblem::new(2);
+        p.set_objective(&[1.0, 1.0]);
+        p.add_constraint(&[(0, 1.0), (1, 1.0)], Cmp::Ge, 1.0); // no label
+        let sol = solve_with(&p, &SimplexOptions::default()).unwrap();
+        assert!(project_basis(&p, &p, sol.basis.as_ref().unwrap()).is_none());
+    }
+}

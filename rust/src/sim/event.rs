@@ -110,11 +110,15 @@ mod tests {
         q.push(1.0, EventKind::SendComplete { source: 1, processor: 1 });
         match q.pop().unwrap().kind {
             EventKind::SendComplete { source, .. } => assert_eq!(source, 0),
-            _ => panic!(),
+            other => unreachable!(
+                "FIFO tie-break should pop the first SendComplete pushed, got {other:?}"
+            ),
         }
         match q.pop().unwrap().kind {
             EventKind::SendComplete { source, .. } => assert_eq!(source, 1),
-            _ => panic!(),
+            other => unreachable!(
+                "FIFO tie-break should pop the second SendComplete pushed, got {other:?}"
+            ),
         }
     }
 

@@ -37,7 +37,8 @@ pub fn sweep(
 ) -> Result<Vec<SpeedupPoint>> {
     // One warm cache across the whole grid: each (n, m) shape keeps
     // its last optimal basis, so re-sweeps and repeated shapes skip
-    // phase 1.
+    // phase 1. (`solve_cached` routes through `crate::pipeline`:
+    // presolve + dual-simplex warm restarts apply per solve.)
     let mut cache = WarmCache::new();
     let opts = no_frontend::NfeOptions::default();
     let mut out = Vec::new();

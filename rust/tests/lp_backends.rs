@@ -10,6 +10,10 @@ use dlt::experiments::sweep::{job_grid, run_scenarios, SweepOptions};
 use dlt::lp::{solve_warm, solve_with, LpProblem, SimplexOptions, SolverBackend};
 use dlt::testkit::{arb_spec, props};
 
+fn sweep_opts(threads: usize, warm_start: bool) -> SweepOptions {
+    SweepOptions { threads, warm_start, steal: false }
+}
+
 fn dense() -> SimplexOptions {
     SimplexOptions { backend: SolverBackend::DenseTableau, ..SimplexOptions::default() }
 }
@@ -120,10 +124,10 @@ fn parallel_sweep_is_deterministic() {
     for model in [TimingModel::FrontEnd, TimingModel::NoFrontEnd] {
         let grid = job_grid(&spec, &jobs, model);
         let serial =
-            run_scenarios(&grid, &SweepOptions { threads: 1, warm_start: true }).unwrap();
+            run_scenarios(&grid, &sweep_opts(1, true)).unwrap();
         for threads in [2usize, 3, 8] {
             let par =
-                run_scenarios(&grid, &SweepOptions { threads, warm_start: true }).unwrap();
+                run_scenarios(&grid, &sweep_opts(threads, true)).unwrap();
             assert_eq!(serial.len(), par.len());
             for (a, b) in serial.iter().zip(par.iter()) {
                 assert_eq!(a.label, b.label);
@@ -146,8 +150,8 @@ fn warm_sweep_saves_iterations() {
     let spec = params::table1();
     let jobs: Vec<f64> = (0..32).map(|k| 80.0 + 10.0 * k as f64).collect();
     let grid = job_grid(&spec, &jobs, TimingModel::FrontEnd);
-    let cold = run_scenarios(&grid, &SweepOptions { threads: 1, warm_start: false }).unwrap();
-    let warm = run_scenarios(&grid, &SweepOptions { threads: 1, warm_start: true }).unwrap();
+    let cold = run_scenarios(&grid, &sweep_opts(1, false)).unwrap();
+    let warm = run_scenarios(&grid, &sweep_opts(1, true)).unwrap();
     let cold_iters: usize = cold.iter().map(|p| p.lp_iterations).sum();
     let warm_iters: usize = warm.iter().map(|p| p.lp_iterations).sum();
     assert!(

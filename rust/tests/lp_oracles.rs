@@ -134,9 +134,9 @@ fn presolve_preserves_optimum() {
         // Inject noise rows that presolve should remove.
         p.add_constraint(&[], Cmp::Le, 1.0);
         p.add_constraint(&[(0, 0.0)], Cmp::Le, 5.0);
-        let (q, _) = dlt::lp::presolve::presolve(&p).map_err(|e| format!("{e}"))?;
+        let pre = dlt::lp::presolve::presolve(&p).map_err(|e| format!("{e}"))?;
         let s0 = solve(&p).map_err(|e| format!("{e}"))?;
-        let s1 = solve(&q).map_err(|e| format!("{e}"))?;
+        let s1 = solve(&pre.problem).map_err(|e| format!("{e}"))?;
         if (s0.objective - s1.objective).abs() < 1e-7 * s0.objective.abs().max(1.0) {
             Ok(())
         } else {

@@ -1,0 +1,301 @@
+//! Pipeline-level properties: presolve+solve vs raw solve agreement
+//! (objective and restored duals) on randomized DLT LPs from every
+//! scenario family, dual-simplex warm restarts without phase-1 work,
+//! and cross-shape basis projection along processor-count sweeps.
+
+use dlt::dlt::concurrent::{self, ConcurrentOptions};
+use dlt::dlt::frontend::{self, FeOptions};
+use dlt::dlt::multi_job::MultiJobStepModel;
+use dlt::dlt::no_frontend::{self, NfeOptions};
+use dlt::lp::presolve::presolve;
+use dlt::lp::{solve_with, LpProblem, SimplexOptions};
+use dlt::model::SystemSpec;
+use dlt::pipeline::{self, PipelineOptions, ScenarioModel};
+use dlt::testkit::{arb_spec, props, Gen};
+
+/// Solve `lp` raw and through presolve+restore; check the objectives
+/// agree within 1e-9 (relative) and that the restored duals are per
+/// *original* row and satisfy strong duality there.
+fn assert_presolve_agrees(lp: &LpProblem, ctx: &str) -> Result<(), String> {
+    let opts = SimplexOptions::default();
+    let raw = solve_with(lp, &opts);
+    let pre = match presolve(lp) {
+        Ok(pre) => pre,
+        Err(_) => {
+            // Presolve proved infeasibility: the raw solve must agree.
+            return match raw {
+                Err(_) => Ok(()),
+                Ok(s) => {
+                    Err(format!("{ctx}: presolve infeasible but raw solved to {}", s.objective))
+                }
+            };
+        }
+    };
+    let red = solve_with(&pre.problem, &opts);
+    match (raw, red) {
+        (Ok(raw), Ok(red)) => {
+            let full = pre.restore(lp, &red);
+            // Randomized LPs can terminate at eps-distinct vertices, so
+            // the property uses a looser tolerance than the 1e-9 the
+            // deterministic `all_families_flow_through_pipeline` anchor
+            // asserts.
+            let tol = 1e-7 * (1.0 + raw.objective.abs());
+            if (full.objective - raw.objective).abs() > tol {
+                return Err(format!(
+                    "{ctx}: objective drifted through presolve: raw {} vs restored {}",
+                    raw.objective, full.objective
+                ));
+            }
+            if let Some(v) = lp.check_feasible(&full.x, 1e-6) {
+                return Err(format!("{ctx}: restored point infeasible: {v}"));
+            }
+            let y = full
+                .duals
+                .as_ref()
+                .ok_or_else(|| format!("{ctx}: restored solution lost its duals"))?;
+            if y.len() != lp.num_constraints() {
+                return Err(format!(
+                    "{ctx}: duals are per reduced row ({}) not per original row ({})",
+                    y.len(),
+                    lp.num_constraints()
+                ));
+            }
+            // Strong duality on the ORIGINAL problem: b'y == c'x*.
+            let by: f64 = lp
+                .constraints()
+                .iter()
+                .zip(y.iter())
+                .map(|(con, yi)| con.rhs * yi)
+                .sum();
+            let dtol = 1e-6 * (1.0 + raw.objective.abs());
+            if (by - full.objective).abs() > dtol {
+                return Err(format!(
+                    "{ctx}: restored duals break strong duality: b'y {} vs obj {}",
+                    by, full.objective
+                ));
+            }
+            Ok(())
+        }
+        (Err(_), Err(_)) => Ok(()),
+        (a, b) => Err(format!("{ctx}: raw and presolved disagree on solvability: {a:?} vs {b:?}")),
+    }
+}
+
+fn fe_lp(g: &mut Gen) -> LpProblem {
+    let spec = arb_spec(g, 4, 6);
+    frontend::build_lp(&spec, &FeOptions::default())
+}
+
+#[test]
+fn prop_presolve_agrees_on_fe_lps() {
+    props("presolve == raw (fe)", 40, |g| {
+        let lp = fe_lp(g);
+        assert_presolve_agrees(&lp, "fe")
+    });
+}
+
+#[test]
+fn prop_presolve_agrees_on_nfe_lps() {
+    props("presolve == raw (nfe)", 40, |g| {
+        let spec = arb_spec(g, 3, 5);
+        let lp = no_frontend::build_lp(&spec, &NfeOptions::default());
+        assert_presolve_agrees(&lp, "nfe")
+    });
+}
+
+#[test]
+fn prop_presolve_agrees_on_concurrent_lps() {
+    props("presolve == raw (concurrent)", 40, |g| {
+        let spec = arb_spec(g, 3, 5);
+        let mode = if g.bool() {
+            dlt::dlt::concurrent::Mode::Staggered
+        } else {
+            dlt::dlt::concurrent::Mode::Proportional
+        };
+        let lp = concurrent::build_lp(&spec, mode);
+        assert_presolve_agrees(&lp, "concurrent")
+    });
+}
+
+#[test]
+fn prop_presolve_agrees_on_multi_job_lps() {
+    props("presolve == raw (multi_job)", 40, |g| {
+        let spec = arb_spec(g, 3, 5);
+        let ready: Vec<f64> = (0..spec.m()).map(|_| g.f64_in(0.0, 4.0)).collect();
+        let step = MultiJobStepModel {
+            fe: FeOptions { proc_ready: Some(ready), ..Default::default() },
+        };
+        let lp = step.build_lp(&spec);
+        assert_presolve_agrees(&lp, "multi_job")
+    });
+}
+
+/// All four scenario families solve through the single pipeline and
+/// agree with their presolve-off baselines.
+#[test]
+fn all_families_flow_through_pipeline() {
+    let spec = SystemSpec::builder()
+        .source(0.2, 0.0)
+        .source(0.3, 2.0)
+        .processors(&[2.0, 3.0, 4.0])
+        .job(100.0)
+        .build()
+        .unwrap();
+    let on = PipelineOptions::default();
+    let off = PipelineOptions { presolve: false };
+
+    fn check<S: ScenarioModel>(
+        model: &S,
+        spec: &SystemSpec,
+        on: &PipelineOptions,
+        off: &PipelineOptions,
+    ) {
+        let a = pipeline::solve_full(model, spec, on, None, None).unwrap();
+        let b = pipeline::solve_full(model, spec, off, None, None).unwrap();
+        assert!(
+            (a.schedule.makespan - b.schedule.makespan).abs()
+                < 1e-9 * (1.0 + b.schedule.makespan.abs()),
+            "{}: presolve on {} vs off {}",
+            model.name(),
+            a.schedule.makespan,
+            b.schedule.makespan
+        );
+    }
+    check(&FeOptions::default(), &spec, &on, &off);
+    check(&NfeOptions::default(), &spec, &on, &off);
+    check(&ConcurrentOptions::default(), &spec, &on, &off);
+    check(
+        &MultiJobStepModel {
+            fe: FeOptions { proc_ready: Some(vec![1.0, 2.0, 3.0]), ..Default::default() },
+        },
+        &spec,
+        &on,
+        &off,
+    );
+}
+
+/// Acceptance: a warm re-solve whose cached basis went
+/// primal-infeasible under an rhs perturbation completes via the dual
+/// simplex — zero phase-1 iterations — instead of a cold restart.
+#[test]
+fn rhs_perturbed_warm_resolve_skips_phase1() {
+    let base = SystemSpec::builder()
+        .source(0.2, 10.0)
+        .source(0.4, 50.0)
+        .processors(&[2.0, 3.0, 4.0, 5.0, 6.0])
+        .job(100.0)
+        .build()
+        .unwrap();
+    let popts = PipelineOptions::default();
+    let model = FeOptions::default();
+    let solved = pipeline::solve_full(&model, &base, &popts, None, None).unwrap();
+    let basis = solved.solution.basis.clone().expect("optimal basis");
+    assert!(basis.is_complete());
+
+    // A cold FE solve pays phase-1 pivots (the normalize equality and
+    // release surplus rows need artificials).
+    assert!(solved.solution.phase1_iterations > 0, "cold solve should run phase 1");
+
+    // R2 beyond ~85 makes the §3.1 LP infeasible for this spec (the
+    // release row's forced beta[0][0] collides with the continuity
+    // chain), so perturb within the feasible band.
+    let mut saw_dual_repair = false;
+    for r2 in [55.0, 65.0, 75.0, 85.0] {
+        let mut spec2 = base.clone();
+        spec2.sources[1].release = r2;
+        let cold = pipeline::solve_full(&model, &spec2, &popts, None, None).unwrap();
+        let warm = pipeline::solve_full(
+            &model,
+            &spec2,
+            &popts,
+            None,
+            Some((&solved.reduced, &basis)),
+        )
+        .unwrap();
+        assert!(
+            (warm.schedule.makespan - cold.schedule.makespan).abs()
+                < 1e-7 * (1.0 + cold.schedule.makespan.abs()),
+            "R2={r2}: warm {} vs cold {}",
+            warm.schedule.makespan,
+            cold.schedule.makespan
+        );
+        assert_eq!(
+            warm.solution.phase1_iterations, 0,
+            "R2={r2}: warm re-solve restarted phase 1"
+        );
+        if warm.solution.dual_iterations > 0 {
+            saw_dual_repair = true;
+        }
+    }
+    assert!(
+        saw_dual_repair,
+        "no perturbation exercised the dual-simplex repair path"
+    );
+}
+
+/// Cross-shape projection: walking the processor axis m -> m+1, the
+/// projected seed must give the cold optimum (it may need a dual
+/// repair, never a wrong answer).
+#[test]
+fn processor_axis_projection_reaches_cold_optima() {
+    let spec = SystemSpec::builder()
+        .source(0.2, 1.0)
+        .source(0.4, 3.0)
+        .processors(&[2.0, 2.5, 3.0, 3.5, 4.0, 4.5])
+        .job(120.0)
+        .build()
+        .unwrap();
+    let popts = PipelineOptions::default();
+    let model = FeOptions::default();
+    let mut prev: Option<(LpProblem, dlt::lp::Basis)> = None;
+    for m in 1..=spec.m() {
+        let sub = spec.with_m_processors(m);
+        let cold = pipeline::solve_full(&model, &sub, &popts, None, None).unwrap();
+        let seeded = pipeline::solve_full(
+            &model,
+            &sub,
+            &popts,
+            None,
+            prev.as_ref().map(|(lp, b)| (lp, b)),
+        )
+        .unwrap();
+        assert!(
+            (seeded.schedule.makespan - cold.schedule.makespan).abs()
+                < 1e-7 * (1.0 + cold.schedule.makespan.abs()),
+            "m={m}: seeded {} vs cold {}",
+            seeded.schedule.makespan,
+            cold.schedule.makespan
+        );
+        let basis = seeded.solution.basis.clone().expect("basis");
+        if basis.is_complete() {
+            prev = Some((seeded.reduced, basis));
+        }
+    }
+}
+
+/// The concurrent family's new cached entry point agrees with its
+/// uncached solves across a job sweep.
+#[test]
+fn concurrent_solve_cached_matches_uncached() {
+    let spec = SystemSpec::builder()
+        .source(0.2, 0.0)
+        .source(0.3, 1.0)
+        .processors(&[2.0, 3.0, 4.0])
+        .job(100.0)
+        .build()
+        .unwrap();
+    let opts = ConcurrentOptions::default();
+    let mut cache = dlt::lp::WarmCache::new();
+    for k in 0..8 {
+        let sub = spec.with_job(80.0 + 20.0 * k as f64);
+        let cached = concurrent::solve_cached(&sub, &opts, &mut cache).unwrap();
+        let plain = concurrent::solve(&sub).unwrap();
+        assert!(
+            (cached.makespan - plain.makespan).abs() < 1e-7 * (1.0 + plain.makespan.abs()),
+            "J step {k}: cached {} vs plain {}",
+            cached.makespan,
+            plain.makespan
+        );
+    }
+    assert!(cache.warm_attempts >= 7, "cache never warmed: {}", cache.warm_attempts);
+}
