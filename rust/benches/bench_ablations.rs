@@ -51,7 +51,7 @@ fn main() {
             .unwrap_or_else(|_| "infeasible".into());
         let without = no_frontend::solve_opts(
             &spec,
-            &NfeOptions { drop_source_busy_constraint: true, ..Default::default() },
+            &NfeOptions { drop_source_busy_constraint: true },
         )
         .map(|s| format!("{:.4}", s.makespan))
         .unwrap_or_else(|_| "infeasible".into());

@@ -1,0 +1,109 @@
+//! Batch-serving throughput through the `dlt::api` facade: mixed-family
+//! request vectors through `Session::solve_batch` (work-stealing, one
+//! session per worker), sequential session solves as the baseline, and
+//! the JSON wire overhead. Reports requests/sec and the warm-hit rate
+//! alongside the timings; `DLT_BENCH_JSON_DIR` emits
+//! `BENCH_api_batch.json` for the CI perf trajectory.
+
+use dlt::api::{Family, RequestOptions, SolveRequest, Solver, FAMILIES};
+use dlt::benchkit::{Bencher, Reporter};
+use dlt::dlt::concurrent::Mode;
+use dlt::model::SystemSpec;
+
+fn base_spec() -> SystemSpec {
+    SystemSpec::builder()
+        .source(0.2, 1.0)
+        .source(0.3, 3.0)
+        .processors(&[2.0, 2.5, 3.0, 3.5, 4.0, 4.5])
+        .job(100.0)
+        .build()
+        .unwrap()
+}
+
+/// A mixed-family request vector shaped like real serving traffic:
+/// job-size perturbations across all four families.
+fn request_vector(count: usize) -> Vec<SolveRequest> {
+    let spec = base_spec();
+    (0..count)
+        .map(|k| {
+            let family = FAMILIES[k % FAMILIES.len()];
+            let sub = spec.with_job(60.0 + 5.0 * (k % 17) as f64);
+            let mut req = SolveRequest::new(family, sub);
+            req.id = Some(format!("bench-{k}"));
+            if family == Family::Concurrent {
+                req.options = RequestOptions {
+                    mode: Some(if k % 2 == 0 { Mode::Staggered } else { Mode::Proportional }),
+                    ..RequestOptions::default()
+                };
+            }
+            req
+        })
+        .collect()
+}
+
+fn main() {
+    let fast = std::env::var("DLT_BENCH_FAST").is_ok();
+    let count = if fast { 48 } else { 192 };
+    let reqs = request_vector(count);
+
+    let mut rep = Reporter::new("api_batch").slug("api_batch");
+    let b = Bencher::from_env();
+
+    // Sequential baseline: one warm session, requests in order.
+    rep.report(
+        &format!("sequential_session_{count}req"),
+        b.bench_val(|| {
+            let mut session = Solver::new().build();
+            let mut ok = 0usize;
+            for req in &reqs {
+                if session.solve(req).is_ok() {
+                    ok += 1;
+                }
+            }
+            ok
+        }),
+    );
+
+    for threads in [2usize, 4] {
+        rep.report(
+            &format!("solve_batch_{count}req_t{threads}"),
+            b.bench_val(|| {
+                Solver::new().threads(threads).build().solve_batch(&reqs)
+            }),
+        );
+    }
+
+    // Wire overhead: encode + parse the whole request vector.
+    rep.report(
+        &format!("wire_roundtrip_{count}req"),
+        b.bench_val(|| {
+            reqs.iter()
+                .map(|r| {
+                    let text = r.to_json().to_string_compact();
+                    SolveRequest::parse(&text).expect("roundtrip")
+                })
+                .count()
+        }),
+    );
+
+    // Throughput + warm-hit rate from one measured batch run.
+    let t0 = std::time::Instant::now();
+    let out = Solver::new().threads(4).build().solve_batch(&reqs);
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+    let ok = out.iter().filter(|r| r.is_ok()).count();
+    let warm = out
+        .iter()
+        .filter(|r| r.as_ref().map(|x| x.diagnostics.warm_start).unwrap_or(false))
+        .count();
+    rep.note(&format!(
+        "batch throughput: {:.0} req/s ({ok}/{} ok, t4)",
+        ok as f64 / wall,
+        out.len()
+    ));
+    rep.note(&format!(
+        "warm-hit rate: {:.1}% ({warm}/{} responses warm-started)",
+        100.0 * warm as f64 / out.len().max(1) as f64,
+        out.len()
+    ));
+    rep.finish();
+}

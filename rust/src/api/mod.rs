@@ -1,0 +1,64 @@
+//! `dlt::api` — the stable service facade.
+//!
+//! Every consumer — the CLI, the sweep engine, the §6 trade-off
+//! advisor, the §5 speedup analysis, benches, and any future network
+//! server — goes through this one boundary instead of the per-family
+//! entry points scattered across [`crate::dlt`]:
+//!
+//! ```text
+//! SolveRequest ──▶ Solver (builder) ──▶ Session ──▶ SolveResponse
+//!   family            backend             owns        makespan, β/α,
+//!   spec              presolve            WarmCache +  timing windows,
+//!   options           threads             projection   diagnostics
+//!  (JSON in)          warm_start          seeds       (JSON out)
+//! ```
+//!
+//! - **Typed wire structs** ([`SolveRequest`] / [`SolveResponse`] /
+//!   [`ApiError`]) with lossless JSON encode/decode through the
+//!   zero-dependency [`crate::config::json`] — the serving contract
+//!   without a serde or network dependency.
+//! - **Sessions** ([`Solver`] → [`Session`]): repeated and perturbed
+//!   queries warm-start from the previous optimal basis (per reduced-LP
+//!   shape) and cross-shape projection seeds (per family), with the
+//!   dual simplex repairing rhs-perturbed bases — callers never touch
+//!   [`crate::lp`] types.
+//! - **Batch solving** ([`Session::solve_batch`]): heterogeneous
+//!   request vectors fan across work-stealing worker deques with one
+//!   fresh session per worker; responses come back in input order with
+//!   per-request errors in-band.
+//! - **Backend selection** ([`Backend`], re-exported from
+//!   [`crate::pipeline`]): revised simplex (default), dense tableau,
+//!   or PDHG — all behind presolve, selectable per request.
+//!
+//! The CLI front door is `dlt batch`: a JSON array of requests on a
+//! file or stdin, a JSON array of responses on stdout.
+//!
+//! ## Example
+//!
+//! ```
+//! use dlt::api::{Family, SolveRequest, Solver};
+//! use dlt::model::SystemSpec;
+//!
+//! let spec = SystemSpec::builder()
+//!     .source(0.2, 10.0)
+//!     .source(0.4, 50.0)
+//!     .processors(&[2.0, 3.0, 4.0, 5.0, 6.0])
+//!     .job(100.0)
+//!     .build()
+//!     .unwrap();
+//! let mut session = Solver::new().build();
+//! let resp = session.solve(&SolveRequest::new(Family::Frontend, spec)).unwrap();
+//! assert!(resp.makespan > 0.0);
+//! // The same request/response pair round-trips as JSON:
+//! let wire = resp.to_json().to_string_compact();
+//! assert!(wire.contains("\"makespan\""));
+//! ```
+
+pub mod session;
+pub mod wire;
+
+pub use crate::pipeline::Backend;
+pub use session::{solve_one, Session, Solver};
+pub use wire::{
+    ApiError, Diagnostics, Family, RequestOptions, SolveRequest, SolveResponse, FAMILIES,
+};

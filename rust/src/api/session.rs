@@ -1,0 +1,408 @@
+//! Sessions: warm solver state behind the request/response facade.
+//!
+//! A [`Solver`] is a reusable configuration builder; [`Solver::build`]
+//! produces a [`Session`] that owns the per-thread solver state — a
+//! [`WarmCache`] keyed by reduced-LP shape plus one cross-shape
+//! projection seed per family — so repeated or perturbed requests
+//! warm-start automatically without the caller ever touching
+//! [`crate::lp`] types. [`Session::solve_batch`] fans a heterogeneous
+//! request vector across worker threads (work-stealing deques, one
+//! fresh `Session` per worker) and returns responses in input order.
+
+use crate::api::wire::{ApiError, Diagnostics, Family, SolveRequest, SolveResponse};
+use crate::dlt::concurrent::ConcurrentOptions;
+use crate::dlt::frontend::FeOptions;
+use crate::dlt::multi_job::MultiJobStepModel;
+use crate::dlt::no_frontend::NfeOptions;
+use crate::error::Result;
+use crate::experiments::sweep::parallel_map_steal;
+use crate::lp::{Basis, LpProblem, SimplexOptions, WarmCache};
+use crate::pdhg::PdhgOptions;
+use crate::pipeline::{self, Backend, PipelineOptions, ScenarioModel};
+use std::collections::HashMap;
+
+/// Facade configuration + builder. `Clone`-able so one configuration
+/// can stamp out many per-thread [`Session`]s.
+#[derive(Debug, Clone)]
+pub struct Solver {
+    /// Default backend for requests that do not override it.
+    pub backend: Backend,
+    /// Default presolve switch.
+    pub presolve: bool,
+    /// Default simplex tuning.
+    pub simplex: SimplexOptions,
+    /// Default PDHG tuning.
+    pub pdhg: PdhgOptions,
+    /// Worker threads for [`Session::solve_batch`] (`0` = one per
+    /// core).
+    pub threads: usize,
+    /// Keep warm state between solves (disable for cold baselines).
+    pub warm_start: bool,
+}
+
+impl Default for Solver {
+    fn default() -> Self {
+        Solver {
+            backend: Backend::default(),
+            presolve: true,
+            simplex: SimplexOptions::default(),
+            pdhg: PdhgOptions::default(),
+            threads: 0,
+            warm_start: true,
+        }
+    }
+}
+
+impl Solver {
+    /// Default configuration (revised simplex, presolve on, warm
+    /// starts on, auto threads).
+    pub fn new() -> Solver {
+        Solver::default()
+    }
+
+    /// Set the default backend.
+    pub fn backend(mut self, b: Backend) -> Solver {
+        self.backend = b;
+        self
+    }
+
+    /// Enable/disable presolve by default.
+    pub fn presolve(mut self, on: bool) -> Solver {
+        self.presolve = on;
+        self
+    }
+
+    /// Set batch worker threads (`0` = one per core).
+    pub fn threads(mut self, t: usize) -> Solver {
+        self.threads = t;
+        self
+    }
+
+    /// Enable/disable warm state between solves.
+    pub fn warm_start(mut self, on: bool) -> Solver {
+        self.warm_start = on;
+        self
+    }
+
+    /// Set the default simplex tuning.
+    pub fn simplex(mut self, s: SimplexOptions) -> Solver {
+        self.simplex = s;
+        self
+    }
+
+    /// Set the default PDHG tuning.
+    pub fn pdhg(mut self, p: PdhgOptions) -> Solver {
+        self.pdhg = p;
+        self
+    }
+
+    /// Build a session owning fresh warm state.
+    pub fn build(self) -> Session {
+        Session {
+            config: self,
+            cache: WarmCache::new(),
+            seeds: HashMap::new(),
+            solves: 0,
+        }
+    }
+}
+
+/// A solving session: configuration plus private warm state. One
+/// session per thread is the intended usage — [`Session::solve_batch`]
+/// arranges exactly that.
+#[derive(Debug)]
+pub struct Session {
+    config: Solver,
+    cache: WarmCache,
+    /// Last reduced LP + optimal basis per family, for cross-shape
+    /// projection when the cache misses a new LP shape.
+    seeds: HashMap<&'static str, (LpProblem, Basis)>,
+    /// Requests solved so far (successful or not).
+    pub solves: usize,
+}
+
+impl Session {
+    /// The configuration this session was built from.
+    pub fn config(&self) -> &Solver {
+        &self.config
+    }
+
+    /// `(warm_attempts, cold_solves)` from the underlying cache.
+    pub fn cache_stats(&self) -> (usize, usize) {
+        (self.cache.warm_attempts, self.cache.cold_solves)
+    }
+
+    /// Solve one request. Warm state is consulted and updated for the
+    /// simplex backends; PDHG requests solve cold (but behind presolve
+    /// unless disabled).
+    pub fn solve(&mut self, req: &SolveRequest) -> std::result::Result<SolveResponse, ApiError> {
+        self.solves += 1;
+        self.solve_inner(req).map_err(ApiError::from)
+    }
+
+    fn solve_inner(&mut self, req: &SolveRequest) -> Result<SolveResponse> {
+        let cfg = &self.config;
+        let o = &req.options;
+        // The LP builder asserts on this; a wire request must surface
+        // it as an error, never a panic.
+        if let Some(ready) = &o.proc_ready {
+            if ready.len() != req.spec.m() {
+                return Err(crate::error::Error::Config(format!(
+                    "proc_ready has {} entries but the spec has {} processors",
+                    ready.len(),
+                    req.spec.m()
+                )));
+            }
+        }
+
+        let mut simplex = cfg.simplex.clone();
+        if let Some(eps) = o.eps {
+            simplex.eps = eps;
+        }
+        if let Some(mi) = o.max_iters {
+            simplex.max_iters = mi;
+        }
+        let mut pdhg = cfg.pdhg.clone();
+        if let Some(t) = o.pdhg_tol {
+            pdhg.tol = t;
+        }
+        if let Some(b) = o.pdhg_max_blocks {
+            pdhg.max_blocks = b;
+        }
+        let popts = PipelineOptions {
+            presolve: o.presolve.unwrap_or(cfg.presolve),
+            backend: o.backend.unwrap_or(cfg.backend),
+            simplex,
+            pdhg,
+        };
+
+        let model: Box<dyn ScenarioModel> = match req.family {
+            Family::Frontend => Box::new(FeOptions {
+                finish_sum_includes_j: o.finish_sum_includes_j.unwrap_or(false),
+                proc_ready: o.proc_ready.clone(),
+            }),
+            Family::NoFrontend => Box::new(NfeOptions {
+                drop_source_busy_constraint: o.drop_source_busy.unwrap_or(false),
+            }),
+            Family::Concurrent => Box::new(ConcurrentOptions { mode: o.mode.unwrap_or_default() }),
+            Family::MultiJob => Box::new(MultiJobStepModel {
+                fe: FeOptions {
+                    finish_sum_includes_j: o.finish_sum_includes_j.unwrap_or(false),
+                    proc_ready: o.proc_ready.clone(),
+                },
+            }),
+        };
+
+        // Only the revised backend consumes warm bases: PDHG has no
+        // basis at all and the dense tableau always runs cold, so for
+        // both the cache is skipped and `warm_start` stays honest.
+        let warm = self.config.warm_start && popts.backend == Backend::RevisedSimplex;
+        let key = req.family.as_str();
+        let attempts_before = self.cache.warm_attempts;
+        let t0 = std::time::Instant::now();
+        let solved = {
+            let seed = if warm {
+                self.seeds.get(key).map(|(lp, b)| (lp, b))
+            } else {
+                None
+            };
+            let cache = if warm { Some(&mut self.cache) } else { None };
+            pipeline::solve_full(model.as_ref(), &req.spec, &popts, cache, seed)?
+        };
+        let solve_ns = t0.elapsed().as_nanos() as u64;
+        let warm_start = self.cache.warm_attempts > attempts_before;
+
+        if warm {
+            if let Some(basis) = solved.solution.basis.as_ref() {
+                // The seed only matters on cache misses (new LP
+                // shapes), so refresh it — and pay the LpProblem
+                // clone — only when this solve changed the shape.
+                let shape = (solved.reduced.num_vars(), solved.reduced.num_constraints());
+                let stale = match self.seeds.get(key) {
+                    Some((lp, _)) => (lp.num_vars(), lp.num_constraints()) != shape,
+                    None => true,
+                };
+                if basis.is_complete() && stale {
+                    self.seeds.insert(key, (solved.reduced.clone(), basis.clone()));
+                }
+            }
+        }
+
+        let sched = &solved.schedule;
+        let alpha: Vec<f64> = (0..sched.n).map(|i| sched.load_from_source(i)).collect();
+        Ok(SolveResponse {
+            id: req.id.clone(),
+            family: req.family,
+            backend: solved.backend,
+            makespan: sched.makespan,
+            n: sched.n,
+            m: sched.m,
+            beta: sched.beta.clone(),
+            alpha,
+            comm_start: sched.comm_start.clone(),
+            comm_end: sched.comm_end.clone(),
+            compute_start: sched.compute_start.clone(),
+            compute_end: sched.compute_end.clone(),
+            diagnostics: Diagnostics {
+                iterations: solved.solution.iterations,
+                phase1_iterations: solved.solution.phase1_iterations,
+                dual_iterations: solved.solution.dual_iterations,
+                warm_start,
+                presolve: solved.stats,
+                pdhg: solved.pdhg,
+                solve_ns,
+            },
+        })
+    }
+
+    /// Solve a heterogeneous request vector in parallel: the requests
+    /// are fanned across work-stealing worker deques
+    /// ([`parallel_map_steal`]), each worker owning a fresh `Session`
+    /// built from this session's configuration, so neighbouring
+    /// requests warm-start from each other. Responses (or per-request
+    /// errors) come back in input order.
+    pub fn solve_batch(
+        &self,
+        reqs: &[SolveRequest],
+    ) -> Vec<std::result::Result<SolveResponse, ApiError>> {
+        let cfg = self.config.clone();
+        let threads = cfg.threads;
+        parallel_map_steal(
+            reqs,
+            threads,
+            || cfg.clone().build(),
+            |session: &mut Session, req: &SolveRequest| session.solve(req),
+        )
+    }
+}
+
+/// One-shot convenience: solve a single request with a throwaway
+/// default session.
+pub fn solve_one(req: &SolveRequest) -> std::result::Result<SolveResponse, ApiError> {
+    Solver::new().build().solve(req)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::SystemSpec;
+
+    fn spec() -> SystemSpec {
+        SystemSpec::builder()
+            .source(0.2, 10.0)
+            .source(0.4, 50.0)
+            .processors(&[2.0, 3.0, 4.0, 5.0, 6.0])
+            .job(100.0)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn session_matches_direct_pipeline_solve() {
+        let mut session = Solver::new().build();
+        let resp = session.solve(&SolveRequest::new(Family::Frontend, spec())).unwrap();
+        let direct = crate::dlt::frontend::solve(&spec()).unwrap();
+        assert!((resp.makespan - direct.makespan).abs() < 1e-9 * (1.0 + direct.makespan));
+        let total: f64 = resp.beta.iter().sum();
+        assert!((total - 100.0).abs() < 1e-6);
+        assert_eq!(resp.alpha.len(), 2);
+        assert!(resp.diagnostics.iterations > 0);
+    }
+
+    #[test]
+    fn repeated_requests_warm_start() {
+        let mut session = Solver::new().build();
+        let first = session.solve(&SolveRequest::new(Family::Frontend, spec())).unwrap();
+        assert!(!first.diagnostics.warm_start);
+        let second = session
+            .solve(&SolveRequest::new(Family::Frontend, spec().with_job(140.0)))
+            .unwrap();
+        assert!(second.diagnostics.warm_start, "second solve of the shape should warm-start");
+        assert_eq!(second.diagnostics.phase1_iterations, 0);
+        let (warm, cold) = session.cache_stats();
+        assert_eq!((warm, cold), (1, 1));
+    }
+
+    #[test]
+    fn cross_shape_seeding_covers_processor_sweeps() {
+        // m -> m+1 changes the LP shape; the session's per-family seed
+        // must still warm the solve via projection.
+        let mut session = Solver::new().build();
+        let base = spec();
+        for m in 1..=base.m() {
+            let sub = base.with_m_processors(m);
+            let resp = session.solve(&SolveRequest::new(Family::Frontend, sub.clone())).unwrap();
+            let direct = crate::dlt::frontend::solve(&sub).unwrap();
+            assert!(
+                (resp.makespan - direct.makespan).abs() < 1e-7 * (1.0 + direct.makespan),
+                "m={m}: {} vs {}",
+                resp.makespan,
+                direct.makespan
+            );
+        }
+    }
+
+    #[test]
+    fn batch_matches_individual_solves() {
+        // Low releases: Table 1's (10, 50) releases make the NFE LP
+        // infeasible below J = 200 (eq. 12 forces beta[0][0] >= 200).
+        let nfe_spec = SystemSpec::builder()
+            .source(0.2, 0.0)
+            .source(0.4, 2.0)
+            .processors(&[2.0, 3.0, 4.0, 5.0, 6.0])
+            .job(100.0)
+            .build()
+            .unwrap();
+        let reqs: Vec<SolveRequest> = (0..10)
+            .map(|k| {
+                SolveRequest::new(Family::NoFrontend, nfe_spec.with_job(100.0 + 10.0 * k as f64))
+            })
+            .collect();
+        let session = Solver::new().threads(3).build();
+        let batch = session.solve_batch(&reqs);
+        assert_eq!(batch.len(), reqs.len());
+        let mut single = Solver::new().build();
+        for (req, out) in reqs.iter().zip(batch.iter()) {
+            let b = out.as_ref().expect("batch solve succeeded");
+            let s = single.solve(req).unwrap();
+            assert!(
+                (b.makespan - s.makespan).abs() < 1e-7 * (1.0 + s.makespan),
+                "{:?}: batch {} vs single {}",
+                req.spec.job,
+                b.makespan,
+                s.makespan
+            );
+        }
+    }
+
+    #[test]
+    fn wrong_length_proc_ready_is_an_error_not_a_panic() {
+        let mut req = SolveRequest::new(Family::MultiJob, spec());
+        req.options.proc_ready = Some(vec![1.0, 2.0]); // spec has 5 processors
+        let err = Solver::new().build().solve(&req).unwrap_err();
+        assert_eq!(err.kind, "config", "{err}");
+    }
+
+    #[test]
+    fn batch_reports_errors_in_band() {
+        // An infeasible NFE instance (release gap larger than the job
+        // can stretch) must come back as Err at its slot, not poison
+        // the batch.
+        let bad = SystemSpec::builder()
+            .source(0.01, 0.0)
+            .source(0.01, 1000.0)
+            .processors(&[2.0])
+            .job(1.0)
+            .build()
+            .unwrap();
+        let reqs = vec![
+            SolveRequest::new(Family::Frontend, spec()),
+            SolveRequest::new(Family::NoFrontend, bad),
+            SolveRequest::new(Family::Concurrent, spec()),
+        ];
+        let out = Solver::new().threads(2).build().solve_batch(&reqs);
+        assert!(out[0].is_ok());
+        assert!(out[1].is_err(), "infeasible instance should error in-band");
+        assert!(out[2].is_ok());
+    }
+}

@@ -1,0 +1,618 @@
+//! Wire types: typed, JSON-serializable requests, responses and
+//! errors.
+//!
+//! Everything here round-trips through the zero-dependency
+//! [`crate::config::json`] value type — `struct -> Json -> text ->
+//! Json -> struct` is lossless (property-tested in
+//! `tests/api_wire.rs`), and malformed input surfaces as
+//! [`ApiError`]/[`crate::error::Error::Config`], never a panic. The
+//! format is the serving contract: the `dlt batch` subcommand consumes
+//! a JSON array of requests and emits a JSON array of
+//! response-or-error objects in the same order.
+
+use crate::config::json::Json;
+use crate::config::spec::{spec_from_json, spec_to_json};
+use crate::dlt::concurrent::Mode;
+use crate::dlt::schedule::{Schedule, TimingModel};
+use crate::error::{Error, Result};
+use crate::lp::presolve::PresolveStats;
+use crate::model::SystemSpec;
+use crate::pipeline::{Backend, PdhgDiagnostics};
+
+/// Which scheduling formulation a request asks for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Family {
+    /// §3.1 — processors with front-ends.
+    Frontend,
+    /// §3.2 — processors without front-ends.
+    NoFrontend,
+    /// §8 — concurrent (fluid) distribution under a bandwidth cap.
+    Concurrent,
+    /// §8 — one FIFO multi-job pipeline step (front-end LP with
+    /// carried-over per-processor ready times).
+    MultiJob,
+}
+
+/// All families, in wire order (handy for tests and sweeps).
+pub const FAMILIES: [Family; 4] =
+    [Family::Frontend, Family::NoFrontend, Family::Concurrent, Family::MultiJob];
+
+impl Family {
+    /// Stable wire name. Matches the family's
+    /// [`crate::pipeline::ScenarioModel::name`].
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Family::Frontend => "frontend",
+            Family::NoFrontend => "no_frontend",
+            Family::Concurrent => "concurrent",
+            Family::MultiJob => "multi_job",
+        }
+    }
+
+    /// Parse a wire name.
+    pub fn parse(s: &str) -> Result<Family> {
+        match s {
+            "frontend" => Ok(Family::Frontend),
+            "no_frontend" => Ok(Family::NoFrontend),
+            "concurrent" => Ok(Family::Concurrent),
+            "multi_job" => Ok(Family::MultiJob),
+            other => Err(Error::Config(format!(
+                "unknown family `{other}` (expected frontend|no_frontend|concurrent|multi_job)"
+            ))),
+        }
+    }
+
+    /// Timing semantics of the family's schedules.
+    pub fn timing_model(self) -> TimingModel {
+        match self {
+            Family::Frontend | Family::MultiJob => TimingModel::FrontEnd,
+            Family::NoFrontend | Family::Concurrent => TimingModel::NoFrontEnd,
+        }
+    }
+}
+
+/// The paper-core family for a timing model (`fe` → frontend, `nfe` →
+/// no-frontend) — the mapping the CLI's `--model` flag and the sweep
+/// engine's [`TimingModel`]-tagged scenarios share. The §8 extension
+/// families have no `TimingModel` of their own and are addressed by
+/// name.
+impl From<TimingModel> for Family {
+    fn from(model: TimingModel) -> Family {
+        match model {
+            TimingModel::FrontEnd => Family::Frontend,
+            TimingModel::NoFrontEnd => Family::NoFrontend,
+        }
+    }
+}
+
+fn mode_to_str(mode: Mode) -> &'static str {
+    match mode {
+        Mode::Proportional => "proportional",
+        Mode::Staggered => "staggered",
+    }
+}
+
+fn mode_from_str(s: &str) -> Result<Mode> {
+    match s {
+        "proportional" => Ok(Mode::Proportional),
+        "staggered" => Ok(Mode::Staggered),
+        other => Err(Error::Config(format!(
+            "unknown concurrent mode `{other}` (expected proportional|staggered)"
+        ))),
+    }
+}
+
+/// Per-request option overrides. Every field is optional; `None`
+/// inherits the session default (set through
+/// [`crate::api::Solver`]'s builder methods).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RequestOptions {
+    /// Backend override (`revised_simplex` | `dense_tableau` | `pdhg`).
+    pub backend: Option<Backend>,
+    /// Presolve override.
+    pub presolve: Option<bool>,
+    /// Simplex reduced-cost/pivot tolerance override.
+    pub eps: Option<f64>,
+    /// Simplex per-phase iteration cap override (`0` = auto).
+    pub max_iters: Option<usize>,
+    /// Concurrent-family fluid model (`proportional` | `staggered`).
+    pub mode: Option<Mode>,
+    /// Frontend-family eq. 5 summation variant.
+    pub finish_sum_includes_j: Option<bool>,
+    /// No-frontend-family eq. 12 relaxation.
+    pub drop_source_busy: Option<bool>,
+    /// Frontend / multi-job per-processor compute-ready times.
+    pub proc_ready: Option<Vec<f64>>,
+    /// PDHG residual tolerance override.
+    pub pdhg_tol: Option<f64>,
+    /// PDHG block-count cap override.
+    pub pdhg_max_blocks: Option<usize>,
+}
+
+impl RequestOptions {
+    /// Encode as a JSON object (only the overridden fields appear).
+    pub fn to_json(&self) -> Json {
+        let mut kv: Vec<(String, Json)> = Vec::new();
+        if let Some(b) = self.backend {
+            kv.push(("backend".into(), Json::Str(b.as_str().into())));
+        }
+        if let Some(p) = self.presolve {
+            kv.push(("presolve".into(), Json::Bool(p)));
+        }
+        if let Some(e) = self.eps {
+            kv.push(("eps".into(), Json::Num(e)));
+        }
+        if let Some(i) = self.max_iters {
+            kv.push(("max_iters".into(), Json::Num(i as f64)));
+        }
+        if let Some(m) = self.mode {
+            kv.push(("mode".into(), Json::Str(mode_to_str(m).into())));
+        }
+        if let Some(f) = self.finish_sum_includes_j {
+            kv.push(("finish_sum_includes_j".into(), Json::Bool(f)));
+        }
+        if let Some(d) = self.drop_source_busy {
+            kv.push(("drop_source_busy".into(), Json::Bool(d)));
+        }
+        if let Some(r) = &self.proc_ready {
+            kv.push(("proc_ready".into(), Json::Array(r.iter().map(|&x| Json::Num(x)).collect())));
+        }
+        if let Some(t) = self.pdhg_tol {
+            kv.push(("pdhg_tol".into(), Json::Num(t)));
+        }
+        if let Some(b) = self.pdhg_max_blocks {
+            kv.push(("pdhg_max_blocks".into(), Json::Num(b as f64)));
+        }
+        Json::Object(kv)
+    }
+
+    /// Decode from a JSON object. Strict: a non-object value or an
+    /// unknown key is `Error::Config` — a misspelled override must
+    /// fail loudly, not silently solve with the defaults.
+    pub fn from_json(v: &Json) -> Result<RequestOptions> {
+        const KNOWN: [&str; 10] = [
+            "backend",
+            "presolve",
+            "eps",
+            "max_iters",
+            "mode",
+            "finish_sum_includes_j",
+            "drop_source_busy",
+            "proc_ready",
+            "pdhg_tol",
+            "pdhg_max_blocks",
+        ];
+        let Json::Object(kv) = v else {
+            return Err(Error::Config(format!("options must be an object, got {v:?}")));
+        };
+        if let Some((k, _)) = kv.iter().find(|(k, _)| !KNOWN.contains(&k.as_str())) {
+            return Err(Error::Config(format!("unknown option key `{k}`")));
+        }
+        let mut o = RequestOptions::default();
+        if let Some(b) = v.get("backend") {
+            let s = b.as_str()?;
+            o.backend = Some(Backend::parse(s).ok_or_else(|| {
+                Error::Config(format!(
+                    "unknown backend `{s}` (expected revised_simplex|dense_tableau|pdhg)"
+                ))
+            })?);
+        }
+        if let Some(p) = v.get("presolve") {
+            o.presolve = Some(p.as_bool()?);
+        }
+        if let Some(e) = v.get("eps") {
+            o.eps = Some(e.as_f64()?);
+        }
+        if let Some(i) = v.get("max_iters") {
+            o.max_iters = Some(i.as_usize()?);
+        }
+        if let Some(m) = v.get("mode") {
+            o.mode = Some(mode_from_str(m.as_str()?)?);
+        }
+        if let Some(f) = v.get("finish_sum_includes_j") {
+            o.finish_sum_includes_j = Some(f.as_bool()?);
+        }
+        if let Some(d) = v.get("drop_source_busy") {
+            o.drop_source_busy = Some(d.as_bool()?);
+        }
+        if let Some(r) = v.get("proc_ready") {
+            o.proc_ready = Some(r.as_f64_vec()?);
+        }
+        if let Some(t) = v.get("pdhg_tol") {
+            o.pdhg_tol = Some(t.as_f64()?);
+        }
+        if let Some(b) = v.get("pdhg_max_blocks") {
+            o.pdhg_max_blocks = Some(b.as_usize()?);
+        }
+        Ok(o)
+    }
+}
+
+/// One solve request: a family, a system spec, and optional overrides.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SolveRequest {
+    /// Caller-chosen correlation id, echoed in the response.
+    pub id: Option<String>,
+    /// Scheduling formulation.
+    pub family: Family,
+    /// Full system description.
+    pub spec: SystemSpec,
+    /// Per-request option overrides.
+    pub options: RequestOptions,
+}
+
+impl SolveRequest {
+    /// Minimal request: family + spec, session defaults for the rest.
+    pub fn new(family: Family, spec: SystemSpec) -> SolveRequest {
+        SolveRequest { id: None, family, spec, options: RequestOptions::default() }
+    }
+
+    /// Encode as a JSON object.
+    pub fn to_json(&self) -> Json {
+        let mut kv: Vec<(String, Json)> = Vec::new();
+        if let Some(id) = &self.id {
+            kv.push(("id".into(), Json::Str(id.clone())));
+        }
+        kv.push(("family".into(), Json::Str(self.family.as_str().into())));
+        kv.push(("spec".into(), spec_to_json(&self.spec)));
+        kv.push(("options".into(), self.options.to_json()));
+        Json::Object(kv)
+    }
+
+    /// Decode from a JSON object (the spec is validated).
+    pub fn from_json(v: &Json) -> Result<SolveRequest> {
+        if !matches!(v, Json::Object(_)) {
+            return Err(Error::Config(format!("request must be an object, got {v:?}")));
+        }
+        let id = match v.get("id") {
+            Some(j) => Some(j.as_str()?.to_string()),
+            None => None,
+        };
+        let family = Family::parse(v.req("family")?.as_str()?)?;
+        let spec = spec_from_json(v.req("spec")?)?;
+        let options = match v.get("options") {
+            Some(o) => RequestOptions::from_json(o)?,
+            None => RequestOptions::default(),
+        };
+        Ok(SolveRequest { id, family, spec, options })
+    }
+
+    /// Parse a request from JSON text.
+    pub fn parse(text: &str) -> Result<SolveRequest> {
+        SolveRequest::from_json(&Json::parse(text)?)
+    }
+}
+
+/// Solver diagnostics attached to every response.
+#[derive(Debug, Clone, Default)]
+pub struct Diagnostics {
+    /// Total backend iterations (simplex pivots, or PDHG blocks).
+    pub iterations: usize,
+    /// Simplex phase-1 iterations (0 on warm or PDHG solves).
+    pub phase1_iterations: usize,
+    /// Dual-simplex repair pivots (warm restarts only).
+    pub dual_iterations: usize,
+    /// Whether this solve started from a cached/projected warm basis.
+    pub warm_start: bool,
+    /// What presolve removed in front of the backend.
+    pub presolve: PresolveStats,
+    /// PDHG convergence details (`backend == pdhg` only).
+    pub pdhg: Option<PdhgDiagnostics>,
+    /// Wall-clock nanoseconds the solve took inside the session.
+    pub solve_ns: u64,
+}
+
+/// One solve response: the optimum, the full timed schedule, and
+/// solver diagnostics.
+#[derive(Debug, Clone)]
+pub struct SolveResponse {
+    /// Echo of the request id.
+    pub id: Option<String>,
+    /// Echo of the request family.
+    pub family: Family,
+    /// Backend that produced the solution.
+    pub backend: Backend,
+    /// Optimal finish time `T_f`.
+    pub makespan: f64,
+    /// Number of sources.
+    pub n: usize,
+    /// Number of processors.
+    pub m: usize,
+    /// Load fractions `β_{i,j}`, row-major `n × m`.
+    pub beta: Vec<f64>,
+    /// Per-source totals `α_i = Σ_j β_{i,j}`.
+    pub alpha: Vec<f64>,
+    /// Communication window starts `TS_{i,j}`, row-major `n × m`.
+    pub comm_start: Vec<f64>,
+    /// Communication window ends `TF_{i,j}`, row-major `n × m`.
+    pub comm_end: Vec<f64>,
+    /// Per-processor compute start times.
+    pub compute_start: Vec<f64>,
+    /// Per-processor compute end times.
+    pub compute_end: Vec<f64>,
+    /// Solver diagnostics.
+    pub diagnostics: Diagnostics,
+}
+
+impl SolveResponse {
+    /// Rebuild the in-memory [`Schedule`] this response serializes —
+    /// wire clients get back exactly what a crate-level caller would.
+    pub fn schedule(&self) -> Schedule {
+        Schedule {
+            n: self.n,
+            m: self.m,
+            model: self.family.timing_model(),
+            beta: self.beta.clone(),
+            comm_start: self.comm_start.clone(),
+            comm_end: self.comm_end.clone(),
+            compute_start: self.compute_start.clone(),
+            compute_end: self.compute_end.clone(),
+            makespan: self.makespan,
+            lp_iterations: self.diagnostics.iterations,
+        }
+    }
+
+    /// Encode as a JSON object.
+    pub fn to_json(&self) -> Json {
+        let nums = |xs: &[f64]| Json::Array(xs.iter().map(|&x| Json::Num(x)).collect());
+        let d = &self.diagnostics;
+        let mut diag: Vec<(String, Json)> = vec![
+            ("iterations".into(), Json::Num(d.iterations as f64)),
+            ("phase1_iterations".into(), Json::Num(d.phase1_iterations as f64)),
+            ("dual_iterations".into(), Json::Num(d.dual_iterations as f64)),
+            ("warm_start".into(), Json::Bool(d.warm_start)),
+            (
+                "presolve".into(),
+                Json::Object(vec![
+                    ("fixed_vars".into(), Json::Num(d.presolve.fixed_vars as f64)),
+                    (
+                        "empty_rows_dropped".into(),
+                        Json::Num(d.presolve.empty_rows_dropped as f64),
+                    ),
+                    (
+                        "duplicate_rows_dropped".into(),
+                        Json::Num(d.presolve.duplicate_rows_dropped as f64),
+                    ),
+                    (
+                        "vacuous_bounds_dropped".into(),
+                        Json::Num(d.presolve.vacuous_bounds_dropped as f64),
+                    ),
+                ]),
+            ),
+        ];
+        if let Some(p) = &d.pdhg {
+            diag.push((
+                "pdhg".into(),
+                Json::Object(vec![
+                    ("blocks".into(), Json::Num(p.blocks as f64)),
+                    ("converged".into(), Json::Bool(p.converged)),
+                    ("primal_residual".into(), Json::Num(p.residuals.0)),
+                    ("dual_residual".into(), Json::Num(p.residuals.1)),
+                    ("gap".into(), Json::Num(p.residuals.2)),
+                ]),
+            ));
+        }
+        diag.push(("solve_ns".into(), Json::Num(d.solve_ns as f64)));
+
+        let mut kv: Vec<(String, Json)> = Vec::new();
+        if let Some(id) = &self.id {
+            kv.push(("id".into(), Json::Str(id.clone())));
+        }
+        kv.push(("family".into(), Json::Str(self.family.as_str().into())));
+        kv.push(("backend".into(), Json::Str(self.backend.as_str().into())));
+        kv.push(("makespan".into(), Json::Num(self.makespan)));
+        kv.push(("n".into(), Json::Num(self.n as f64)));
+        kv.push(("m".into(), Json::Num(self.m as f64)));
+        kv.push(("beta".into(), nums(&self.beta)));
+        kv.push(("alpha".into(), nums(&self.alpha)));
+        kv.push(("comm_start".into(), nums(&self.comm_start)));
+        kv.push(("comm_end".into(), nums(&self.comm_end)));
+        kv.push(("compute_start".into(), nums(&self.compute_start)));
+        kv.push(("compute_end".into(), nums(&self.compute_end)));
+        kv.push(("diagnostics".into(), Json::Object(diag)));
+        Json::Object(kv)
+    }
+
+    /// Decode from a JSON object (for wire clients and tests).
+    pub fn from_json(v: &Json) -> Result<SolveResponse> {
+        let id = match v.get("id") {
+            Some(j) => Some(j.as_str()?.to_string()),
+            None => None,
+        };
+        let d = v.req("diagnostics")?;
+        let pres = d.req("presolve")?;
+        let pdhg = match d.get("pdhg") {
+            Some(p) => Some(PdhgDiagnostics {
+                blocks: p.req("blocks")?.as_usize()?,
+                converged: p.req("converged")?.as_bool()?,
+                residuals: (
+                    p.req("primal_residual")?.as_f64()?,
+                    p.req("dual_residual")?.as_f64()?,
+                    p.req("gap")?.as_f64()?,
+                ),
+            }),
+            None => None,
+        };
+        let diagnostics = Diagnostics {
+            iterations: d.req("iterations")?.as_usize()?,
+            phase1_iterations: d.req("phase1_iterations")?.as_usize()?,
+            dual_iterations: d.req("dual_iterations")?.as_usize()?,
+            warm_start: d.req("warm_start")?.as_bool()?,
+            presolve: PresolveStats {
+                fixed_vars: pres.req("fixed_vars")?.as_usize()?,
+                empty_rows_dropped: pres.req("empty_rows_dropped")?.as_usize()?,
+                duplicate_rows_dropped: pres.req("duplicate_rows_dropped")?.as_usize()?,
+                vacuous_bounds_dropped: pres.req("vacuous_bounds_dropped")?.as_usize()?,
+            },
+            pdhg,
+            solve_ns: d.req("solve_ns")?.as_f64()? as u64,
+        };
+        let backend_s = v.req("backend")?.as_str()?;
+        Ok(SolveResponse {
+            id,
+            family: Family::parse(v.req("family")?.as_str()?)?,
+            backend: Backend::parse(backend_s)
+                .ok_or_else(|| Error::Config(format!("unknown backend `{backend_s}`")))?,
+            makespan: v.req("makespan")?.as_f64()?,
+            n: v.req("n")?.as_usize()?,
+            m: v.req("m")?.as_usize()?,
+            beta: v.req("beta")?.as_f64_vec()?,
+            alpha: v.req("alpha")?.as_f64_vec()?,
+            comm_start: v.req("comm_start")?.as_f64_vec()?,
+            comm_end: v.req("comm_end")?.as_f64_vec()?,
+            compute_start: v.req("compute_start")?.as_f64_vec()?,
+            compute_end: v.req("compute_end")?.as_f64_vec()?,
+            diagnostics,
+        })
+    }
+}
+
+/// A serializable error: the crate's [`Error`] flattened into a stable
+/// `(kind, message)` pair so batch output can carry per-request
+/// failures in-band.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ApiError {
+    /// Stable kind slug (`infeasible`, `config`, `usage`, ...).
+    pub kind: String,
+    /// Human-readable detail.
+    pub message: String,
+}
+
+impl std::fmt::Display for ApiError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {}", self.kind, self.message)
+    }
+}
+
+impl std::error::Error for ApiError {}
+
+impl From<Error> for ApiError {
+    fn from(e: Error) -> ApiError {
+        let kind = match &e {
+            Error::InvalidSpec(_) => "invalid_spec",
+            Error::Infeasible(_) => "infeasible",
+            Error::Unbounded(_) => "unbounded",
+            Error::IterationLimit { .. } => "iteration_limit",
+            Error::Numerical(_) => "numerical",
+            Error::InvalidSchedule(_) => "invalid_schedule",
+            Error::Config(_) => "config",
+            Error::Usage(_) => "usage",
+            Error::Artifact(_) => "artifact",
+            Error::Runtime(_) => "runtime",
+            Error::Cluster(_) => "cluster",
+            Error::Io { .. } => "io",
+        };
+        ApiError { kind: kind.to_string(), message: e.to_string() }
+    }
+}
+
+impl ApiError {
+    /// Map back onto the closest crate-level [`Error`] variant (for
+    /// callers whose signatures predate the facade).
+    pub fn into_error(self) -> Error {
+        match self.kind.as_str() {
+            "invalid_spec" => Error::InvalidSpec(self.message),
+            "infeasible" => Error::Infeasible(self.message),
+            "unbounded" => Error::Unbounded(self.message),
+            "invalid_schedule" => Error::InvalidSchedule(self.message),
+            "config" => Error::Config(self.message),
+            "usage" => Error::Usage(self.message),
+            "artifact" => Error::Artifact(self.message),
+            "runtime" => Error::Runtime(self.message),
+            "cluster" => Error::Cluster(self.message),
+            _ => Error::Numerical(self.message),
+        }
+    }
+
+    /// Encode as `{"error": {"kind": ..., "message": ...}}`.
+    pub fn to_json(&self) -> Json {
+        Json::Object(vec![(
+            "error".into(),
+            Json::Object(vec![
+                ("kind".into(), Json::Str(self.kind.clone())),
+                ("message".into(), Json::Str(self.message.clone())),
+            ]),
+        )])
+    }
+
+    /// Decode from the `{"error": ...}` shape.
+    pub fn from_json(v: &Json) -> Result<ApiError> {
+        let e = v.req("error")?;
+        Ok(ApiError {
+            kind: e.req("kind")?.as_str()?.to_string(),
+            message: e.req("message")?.as_str()?.to_string(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> SystemSpec {
+        SystemSpec::builder()
+            .source(0.2, 10.0)
+            .source(0.4, 50.0)
+            .processors(&[2.0, 3.0, 4.0])
+            .job(100.0)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn request_roundtrip_with_options() {
+        let req = SolveRequest {
+            id: Some("r-1".into()),
+            family: Family::Concurrent,
+            spec: spec(),
+            options: RequestOptions {
+                backend: Some(Backend::Pdhg),
+                presolve: Some(false),
+                eps: Some(1e-8),
+                mode: Some(Mode::Proportional),
+                pdhg_max_blocks: Some(1234),
+                ..RequestOptions::default()
+            },
+        };
+        let text = req.to_json().to_string_pretty();
+        let back = SolveRequest::parse(&text).unwrap();
+        assert_eq!(req, back);
+    }
+
+    #[test]
+    fn minimal_request_defaults() {
+        let text = r#"{"family": "frontend",
+                       "spec": {"sources":[{"g":0.2}],"processors":[{"a":2}],"job":10}}"#;
+        let req = SolveRequest::parse(text).unwrap();
+        assert_eq!(req.family, Family::Frontend);
+        assert_eq!(req.options, RequestOptions::default());
+        assert!(req.id.is_none());
+    }
+
+    #[test]
+    fn bad_family_and_backend_are_config_errors() {
+        let bad_family = r#"{"family": "quantum",
+            "spec": {"sources":[{"g":0.2}],"processors":[{"a":2}],"job":10}}"#;
+        assert!(matches!(SolveRequest::parse(bad_family), Err(Error::Config(_))));
+        let bad_backend = r#"{"family": "frontend",
+            "spec": {"sources":[{"g":0.2}],"processors":[{"a":2}],"job":10},
+            "options": {"backend": "gurobi"}}"#;
+        assert!(matches!(SolveRequest::parse(bad_backend), Err(Error::Config(_))));
+    }
+
+    #[test]
+    fn api_error_roundtrip() {
+        let e = ApiError::from(Error::Infeasible("release times collide".into()));
+        let back = ApiError::from_json(&e.to_json()).unwrap();
+        assert_eq!(e, back);
+        assert!(matches!(back.into_error(), Error::Infeasible(_)));
+    }
+
+    #[test]
+    fn family_names_roundtrip() {
+        for f in FAMILIES {
+            assert_eq!(Family::parse(f.as_str()).unwrap(), f);
+        }
+        assert!(Family::parse("fe").is_err());
+    }
+}

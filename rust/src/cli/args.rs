@@ -13,7 +13,7 @@ pub struct Args {
 }
 
 /// Flags that take no value.
-const BOOL_FLAGS: &[&str] = &["trace", "real-compute", "csv", "quiet", "cold", "steal"];
+const BOOL_FLAGS: &[&str] = &["trace", "real-compute", "csv", "quiet", "cold", "steal", "pretty"];
 
 impl Args {
     /// Parse argv (without the binary name).

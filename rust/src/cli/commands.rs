@@ -1,7 +1,11 @@
-//! CLI subcommand implementations.
+//! CLI subcommand implementations. Every solve goes through the
+//! [`crate::api`] facade; only the PJRT-artifact PDHG path (which
+//! needs a live [`crate::runtime::Runtime`]) is hand-wired.
 
+use crate::api::{ApiError, Backend, Family, SolveRequest, Solver};
 use crate::cli::args::Args;
 use crate::cluster::{run_cluster, ClusterConfig, Compute};
+use crate::config::json::Json;
 use crate::config::spec::load_spec;
 use crate::cost::{advise, Advice, Budgets, TradeoffTable};
 use crate::dlt::schedule::{Schedule, TimingModel};
@@ -26,36 +30,32 @@ fn model_of(a: &Args) -> Result<TimingModel> {
 }
 
 fn solve_spec(spec: &SystemSpec, model: TimingModel, solver: &str) -> Result<Schedule> {
-    match solver {
-        "simplex" => match model {
-            TimingModel::FrontEnd => frontend::solve(spec),
-            TimingModel::NoFrontEnd => no_frontend::solve(spec),
-        },
-        "pdhg" | "pdhg-artifact" => {
-            // PDHG yields the LP solution; reconstruct the schedule by
-            // re-solving the β extraction path with the simplex types.
-            // The LP itself is what PDHG replaces.
+    let backend = match solver {
+        "simplex" => Backend::RevisedSimplex,
+        "pdhg" => Backend::Pdhg,
+        "pdhg-artifact" => {
+            // The AOT-artifact path needs a live PJRT runtime, which
+            // the session facade deliberately does not own; solve the
+            // raw LP and rebuild the schedule from x.
             let lp = match model {
                 TimingModel::FrontEnd => frontend::build_lp(spec, &Default::default()),
                 TimingModel::NoFrontEnd => no_frontend::build_lp(spec, &Default::default()),
             };
-            let x = if solver == "pdhg" {
-                let var = pick_variant(lp.num_vars(), lp.num_constraints());
-                crate::pdhg::solve_rust(&lp, var.0, var.1, &Default::default())?.x
-            } else {
-                let mut rt = crate::runtime::Runtime::open_default()?;
-                crate::pdhg::solve_artifact(&mut rt, &lp, &Default::default())?.x
-            };
-            schedule_from_lp_x(spec, model, &x)
+            let mut rt = crate::runtime::Runtime::open_default()?;
+            let x = crate::pdhg::solve_artifact(&mut rt, &lp, &Default::default())?.x;
+            return schedule_from_lp_x(spec, model, &x);
         }
-        other => Err(Error::Usage(format!("--solver must be simplex|pdhg|pdhg-artifact, got `{other}`"))),
-    }
-}
-
-/// Pad shape for the rust PDHG backend when no artifact is loaded.
-fn pick_variant(nv: usize, nc: usize) -> (usize, usize) {
-    let round = |x: usize| x.next_power_of_two().max(64);
-    (round(nv), round(nc + nc / 2))
+        other => {
+            return Err(Error::Usage(format!(
+                "--solver must be simplex|pdhg|pdhg-artifact, got `{other}`"
+            )))
+        }
+    };
+    let mut session = Solver::new().backend(backend).build();
+    let resp = session
+        .solve(&SolveRequest::new(Family::from(model), spec.clone()))
+        .map_err(|e| e.into_error())?;
+    Ok(resp.schedule())
 }
 
 /// Rebuild a full `Schedule` from a raw LP solution vector.
@@ -370,11 +370,104 @@ pub fn speedup_cmd(a: &Args) -> Result<()> {
     for m in 1..=spec.m() {
         print!("{m:>4}");
         for &p in &sources {
-            let pt = pts.iter().find(|x| x.sources == p && x.processors == m).unwrap();
+            // A grid point can be missing if a scenario solve was
+            // dropped (e.g. an infeasible (p, m) cell) — report it
+            // instead of panicking mid-table.
+            let pt = pts
+                .iter()
+                .find(|x| x.sources == p && x.processors == m)
+                .ok_or_else(|| {
+                    Error::Numerical(format!(
+                        "speedup sweep lost the ({p} sources, {m} processors) grid point"
+                    ))
+                })?;
             print!(" {:>10.4}", pt.speedup);
         }
         println!();
     }
+    Ok(())
+}
+
+/// `dlt batch` — the serving front door: read a JSON array of
+/// [`SolveRequest`]s from `--requests FILE` (or stdin when the flag is
+/// absent or `-`), solve them through one work-stealing
+/// [`crate::api::Session`] batch, and emit a JSON array of
+/// response-or-error objects in the same order. A malformed element
+/// becomes an in-band `{"error": ...}` entry at its slot; only a
+/// top-level malformation (unreadable file, non-array document) fails
+/// the command.
+pub fn batch(a: &Args) -> Result<()> {
+    let text = match a.get("requests") {
+        None | Some("-") => {
+            use std::io::Read;
+            let mut buf = String::new();
+            std::io::stdin()
+                .read_to_string(&mut buf)
+                .map_err(|e| Error::io("<stdin>", e))?;
+            buf
+        }
+        Some(path) => std::fs::read_to_string(path).map_err(|e| Error::io(path, e))?,
+    };
+    let doc = Json::parse(&text)?;
+    let items = doc.as_array()?;
+
+    let backend = match a.get("backend") {
+        None => Backend::default(),
+        Some(s) => Backend::parse(s).ok_or_else(|| {
+            Error::Usage(format!(
+                "--backend must be revised_simplex|dense_tableau|pdhg, got `{s}`"
+            ))
+        })?,
+    };
+    let threads = a.get_usize("threads")?.unwrap_or(0);
+
+    let parsed: Vec<std::result::Result<SolveRequest, ApiError>> = items
+        .iter()
+        .map(|it| SolveRequest::from_json(it).map_err(ApiError::from))
+        .collect();
+    let good: Vec<SolveRequest> = parsed.iter().filter_map(|r| r.as_ref().ok().cloned()).collect();
+
+    let session = Solver::new().backend(backend).threads(threads).build();
+    let t0 = std::time::Instant::now();
+    let results = session.solve_batch(&good);
+    let wall = t0.elapsed();
+
+    let mut ok = 0usize;
+    let mut warm = 0usize;
+    let mut results = results.into_iter();
+    let out: Vec<Json> = parsed
+        .into_iter()
+        .map(|p| match p {
+            Err(e) => e.to_json(),
+            Ok(_) => match results.next() {
+                Some(Ok(resp)) => {
+                    ok += 1;
+                    if resp.diagnostics.warm_start {
+                        warm += 1;
+                    }
+                    resp.to_json()
+                }
+                Some(Err(e)) => e.to_json(),
+                None => unreachable!("one batch result per parsed request"),
+            },
+        })
+        .collect();
+    let doc = Json::Array(out);
+    if a.has("pretty") {
+        print!("{}", doc.to_string_pretty());
+    } else {
+        println!("{}", doc.to_string_compact());
+    }
+    let solved = good.len();
+    let secs = wall.as_secs_f64().max(1e-9);
+    eprintln!(
+        "{} requests ({} ok, {} failed, {} warm-started) in {wall:?} ({:.0} req/s)",
+        items.len(),
+        ok,
+        items.len() - ok,
+        warm,
+        solved as f64 / secs,
+    );
     Ok(())
 }
 

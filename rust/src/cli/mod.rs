@@ -3,6 +3,8 @@
 //!
 //! ```text
 //! dlt solve     --spec spec.json [--model fe|nfe] [--solver simplex|pdhg|pdhg-artifact]
+//! dlt batch     [--requests FILE|-] [--backend revised_simplex|dense_tableau|pdhg]
+//!               [--threads T] [--pretty]
 //! dlt simulate  --spec spec.json [--model fe|nfe] [--jitter 0.1] [--seed 7] [--trace]
 //! dlt cluster   --spec spec.json [--model fe|nfe] [--time-scale 0.002] [--real-compute]
 //! dlt tradeoff  --spec spec.json [--budget-cost X] [--budget-time Y] [--gradient 0.06]
@@ -25,6 +27,7 @@ pub fn run(argv: &[String]) -> Result<()> {
     let parsed = args::Args::parse(&argv[1..])?;
     match parsed.subcommand.as_str() {
         "solve" => commands::solve(&parsed),
+        "batch" => commands::batch(&parsed),
         "simulate" => commands::simulate(&parsed),
         "cluster" => commands::cluster(&parsed),
         "tradeoff" => commands::tradeoff(&parsed),
@@ -49,6 +52,8 @@ USAGE: dlt <subcommand> [flags]
 
 SUBCOMMANDS
   solve        solve one scheduling instance, print the beta table
+  batch        solve a JSON array of api requests (file or stdin),
+               emit a JSON array of responses — the serving front door
   simulate     run the discrete-event simulator on the solved schedule
   cluster      execute the schedule on the threaded cluster runtime
   tradeoff     §6 trade-off advisor (cost/time budgets)
@@ -64,6 +69,13 @@ COMMON FLAGS
   --solver NAME      simplex | pdhg | pdhg-artifact (default simplex)
   --csv-dir DIR      also write CSV output
   --exp NAME         experiment id (fig10..fig20; default: all)
+
+BATCH FLAGS
+  --requests FILE    JSON array of api::SolveRequest (default/-: stdin)
+  --backend NAME     default backend for requests that do not override:
+                     revised_simplex | dense_tableau | pdhg
+  --threads T        batch worker threads (default: one per core)
+  --pretty           pretty-print the response array
 
 SWEEP FLAGS
   --param LIST       comma-separated axes, crossed into one grid:
@@ -134,6 +146,33 @@ mod tests {
             "sweep --spec {path} --param release --release-from -1"
         )))
         .is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn batch_solves_mixed_family_request_file() {
+        let path = "/tmp/dlt_cli_batch_requests.json";
+        let spec = r#"{"sources":[{"g":0.2},{"g":0.4,"release":1}],
+                       "processors":[{"a":2},{"a":3}],"job":10}"#;
+        let body = format!(
+            r#"[
+              {{"id": "fe-1",  "family": "frontend",    "spec": {spec}}},
+              {{"id": "nfe-1", "family": "no_frontend", "spec": {spec}}},
+              {{"id": "con-1", "family": "concurrent",  "spec": {spec},
+                "options": {{"mode": "proportional"}}}},
+              {{"id": "mj-1",  "family": "multi_job",   "spec": {spec},
+                "options": {{"proc_ready": [0.5, 1.0]}}}},
+              {{"id": "pdhg-1","family": "frontend",    "spec": {spec},
+                "options": {{"backend": "pdhg"}}}},
+              {{"family": "not_a_family", "spec": {spec}}}
+            ]"#
+        );
+        std::fs::write(path, body).unwrap();
+        run(&argv(&format!("batch --requests {path} --threads 2"))).unwrap();
+        run(&argv(&format!("batch --requests {path} --pretty --backend dense_tableau"))).unwrap();
+        // A missing file is an io error, a bad backend a usage error.
+        assert!(run(&argv("batch --requests /tmp/does_not_exist_dlt.json")).is_err());
+        assert!(run(&argv(&format!("batch --requests {path} --backend cplex"))).is_err());
         std::fs::remove_file(path).ok();
     }
 }

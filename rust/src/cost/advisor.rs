@@ -12,6 +12,7 @@
 //! - **both** (§6.4): the overlap of the two solution areas, or a
 //!   report that no solution exists (paper Fig. 19 / Fig. 20).
 
+use crate::api::{Family, Session, Solver, SolveRequest};
 use crate::cost::model::{gradient_series, schedule_cost};
 use crate::dlt::frontend;
 use crate::error::Result;
@@ -42,15 +43,36 @@ impl TradeoffTable {
     /// Sweep `m = 1..=spec.m()` with the front-end solver (the paper's
     /// §6 simulations all use the front-end network).
     pub fn sweep(spec: &SystemSpec) -> Result<TradeoffTable> {
-        Self::sweep_cached(spec, &mut WarmCache::new())
+        Self::sweep_session(spec, &mut Solver::new().build())
     }
 
-    /// Sweep with an external [`WarmCache`]: repeated sweeps (the
-    /// advisor is queried many times per session, and Figs. 19/20 each
+    /// Sweep through an api [`Session`]: repeated sweeps (the advisor
+    /// is queried many times per session, and Figs. 19/20 each
     /// re-sweep Table 5) warm-start every `m`'s LP from the previous
-    /// sweep's optimal basis for that shape. Each solve flows through
-    /// the unified pipeline (`crate::pipeline`), so presolve and the
-    /// dual-simplex warm restarts apply here too.
+    /// sweep's optimal basis for that shape, and the session's
+    /// cross-shape projection seeds the `m+1`-processor LP from the
+    /// `m`-processor basis within one sweep.
+    pub fn sweep_session(spec: &SystemSpec, session: &mut Session) -> Result<TradeoffTable> {
+        let mut points = Vec::with_capacity(spec.m());
+        for m in 1..=spec.m() {
+            let sub = spec.with_m_processors(m);
+            let resp = session
+                .solve(&SolveRequest::new(Family::Frontend, sub.clone()))
+                .map_err(|e| e.into_error())?;
+            let sched = resp.schedule();
+            points.push(TradeoffPoint {
+                m,
+                tf: resp.makespan,
+                cost: schedule_cost(&sub, &sched),
+            });
+        }
+        let tf: Vec<f64> = points.iter().map(|p| p.tf).collect();
+        Ok(TradeoffTable { points, gradients: gradient_series(&tf) })
+    }
+
+    /// Sweep with an external [`WarmCache`]. Deprecated forward kept
+    /// for embedders that predate the [`crate::api`] facade — prefer
+    /// [`TradeoffTable::sweep_session`].
     pub fn sweep_cached(spec: &SystemSpec, cache: &mut WarmCache) -> Result<TradeoffTable> {
         let mut points = Vec::with_capacity(spec.m());
         for m in 1..=spec.m() {

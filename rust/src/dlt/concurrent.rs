@@ -27,7 +27,7 @@
 
 use crate::dlt::schedule::{Schedule, TimingModel};
 use crate::error::Result;
-use crate::lp::{Cmp, LpProblem, LpSolution, SimplexOptions, WarmCache};
+use crate::lp::{Cmp, LpProblem, LpSolution, WarmCache};
 use crate::model::SystemSpec;
 use crate::pipeline::{self, ScenarioModel};
 
@@ -42,13 +42,13 @@ pub enum Mode {
 }
 
 /// Options for the §8 concurrent-distribution builders — and the
-/// family's [`ScenarioModel`].
+/// family's [`ScenarioModel`]. Solver/backend tuning lives in
+/// [`crate::pipeline::PipelineOptions`] (or the [`crate::api`]
+/// request).
 #[derive(Debug, Clone, Default)]
 pub struct ConcurrentOptions {
     /// Fluid model.
     pub mode: Mode,
-    /// Simplex options.
-    pub simplex: SimplexOptions,
 }
 
 impl ScenarioModel for ConcurrentOptions {
@@ -58,10 +58,6 @@ impl ScenarioModel for ConcurrentOptions {
 
     fn build_lp(&self, spec: &SystemSpec) -> LpProblem {
         build_lp(spec, self.mode)
-    }
-
-    fn simplex(&self) -> SimplexOptions {
-        self.simplex.clone()
     }
 
     fn schedule(&self, spec: &SystemSpec, sol: &LpSolution) -> Result<Schedule> {
@@ -181,7 +177,7 @@ pub fn solve(spec: &SystemSpec) -> Result<Schedule> {
 /// Solve and reconstruct the timed schedule (through the unified
 /// pipeline).
 pub fn solve_mode(spec: &SystemSpec, mode: Mode) -> Result<Schedule> {
-    pipeline::solve(&ConcurrentOptions { mode, ..ConcurrentOptions::default() }, spec)
+    pipeline::solve(&ConcurrentOptions { mode }, spec)
 }
 
 /// Solve §8 through a [`WarmCache`] (see [`pipeline::solve_cached`]) —

@@ -18,12 +18,15 @@
 
 use crate::dlt::schedule::{Schedule, TimingModel};
 use crate::error::Result;
-use crate::lp::{Cmp, LpProblem, LpSolution, SimplexOptions, WarmCache};
+use crate::lp::{Cmp, LpProblem, LpSolution, WarmCache};
 use crate::model::SystemSpec;
 use crate::pipeline::{self, ScenarioModel};
 
-/// Options for the §3.1 builder.
-#[derive(Debug, Clone)]
+/// Options for the §3.1 builder. Solver/backend tuning lives in
+/// [`crate::pipeline::PipelineOptions`] (or, one level up, in the
+/// [`crate::api`] request) — the family carries only formulation
+/// choices.
+#[derive(Debug, Clone, Default)]
 pub struct FeOptions {
     /// Use the paper's summary-block variant of eq. 5 (`k = 1..j`)
     /// instead of the text variant (`k = 1..j−1`).
@@ -34,18 +37,6 @@ pub struct FeOptions {
     /// the previous job), adding finish constraints
     /// `T_f ≥ ready_j + Σ_i β_{i,j} A_j`. `None` means all zeros.
     pub proc_ready: Option<Vec<f64>>,
-    /// Simplex options.
-    pub simplex: SimplexOptions,
-}
-
-impl Default for FeOptions {
-    fn default() -> Self {
-        FeOptions {
-            finish_sum_includes_j: false,
-            proc_ready: None,
-            simplex: SimplexOptions::default(),
-        }
-    }
 }
 
 /// Index of `β_{i,j}` in the LP variable vector.
@@ -146,26 +137,29 @@ impl ScenarioModel for FeOptions {
         build_lp(spec, self)
     }
 
-    fn simplex(&self) -> SimplexOptions {
-        self.simplex.clone()
-    }
-
     fn schedule(&self, spec: &SystemSpec, sol: &LpSolution) -> Result<Schedule> {
         schedule_from_solution(spec, sol)
     }
 }
 
 /// Solve §3.1 with default options.
+///
+/// Deprecated-in-spirit: new callers should go through the
+/// [`crate::api`] facade (`Family::Frontend`), which adds sessions,
+/// backend selection and batch solving; this forward is kept for
+/// in-tree tests and existing embedders.
 pub fn solve(spec: &SystemSpec) -> Result<Schedule> {
     solve_opts(spec, &FeOptions::default())
 }
 
 /// Solve §3.1 with explicit options (through the unified pipeline).
+/// Prefer the [`crate::api`] facade for new code.
 pub fn solve_opts(spec: &SystemSpec, opts: &FeOptions) -> Result<Schedule> {
     pipeline::solve(opts, spec)
 }
 
 /// Solve §3.1 through a [`WarmCache`] (see [`pipeline::solve_cached`]).
+/// Prefer [`crate::api::Session`] for new code.
 pub fn solve_cached(
     spec: &SystemSpec,
     opts: &FeOptions,

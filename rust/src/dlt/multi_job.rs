@@ -17,7 +17,7 @@
 use crate::dlt::frontend::{self, FeOptions};
 use crate::dlt::Schedule;
 use crate::error::Result;
-use crate::lp::{LpProblem, LpSolution, SimplexOptions, WarmCache};
+use crate::lp::{LpProblem, LpSolution, WarmCache};
 use crate::model::SystemSpec;
 use crate::pipeline::{self, ScenarioModel};
 
@@ -39,10 +39,6 @@ impl ScenarioModel for MultiJobStepModel {
 
     fn build_lp(&self, spec: &SystemSpec) -> LpProblem {
         frontend::build_lp(spec, &self.fe)
-    }
-
-    fn simplex(&self) -> SimplexOptions {
-        self.fe.simplex.clone()
     }
 
     fn schedule(&self, spec: &SystemSpec, sol: &LpSolution) -> Result<Schedule> {

@@ -17,11 +17,13 @@
 
 use crate::dlt::schedule::{Schedule, TimingModel};
 use crate::error::Result;
-use crate::lp::{Cmp, LpProblem, LpSolution, SimplexOptions, WarmCache};
+use crate::lp::{Cmp, LpProblem, LpSolution, WarmCache};
 use crate::model::SystemSpec;
 use crate::pipeline::{self, ScenarioModel};
 
-/// Options for the §3.2 builder.
+/// Options for the §3.2 builder. Solver/backend tuning lives in
+/// [`crate::pipeline::PipelineOptions`] (or the [`crate::api`]
+/// request) — the family carries only formulation choices.
 #[derive(Debug, Clone, Default)]
 pub struct NfeOptions {
     /// Enforce `TF_{i−1,1} ≥ R_i` ("keep every source busy before the
@@ -30,8 +32,6 @@ pub struct NfeOptions {
     /// instances infeasible when a slow first source cannot stretch its
     /// first transmission long enough).
     pub drop_source_busy_constraint: bool,
-    /// Simplex options.
-    pub simplex: SimplexOptions,
 }
 
 /// Variable indexing for the §3.2 LP.
@@ -164,26 +164,26 @@ impl ScenarioModel for NfeOptions {
         build_lp(spec, self)
     }
 
-    fn simplex(&self) -> SimplexOptions {
-        self.simplex.clone()
-    }
-
     fn schedule(&self, spec: &SystemSpec, sol: &LpSolution) -> Result<Schedule> {
         schedule_from_solution(spec, sol)
     }
 }
 
-/// Solve §3.2 with default options.
+/// Solve §3.2 with default options. Prefer the [`crate::api`] facade
+/// (`Family::NoFrontend`) for new code; this forward is kept for
+/// in-tree tests and existing embedders.
 pub fn solve(spec: &SystemSpec) -> Result<Schedule> {
     solve_opts(spec, &NfeOptions::default())
 }
 
 /// Solve §3.2 with explicit options (through the unified pipeline).
+/// Prefer the [`crate::api`] facade for new code.
 pub fn solve_opts(spec: &SystemSpec, opts: &NfeOptions) -> Result<Schedule> {
     pipeline::solve(opts, spec)
 }
 
 /// Solve §3.2 through a [`WarmCache`] (see [`pipeline::solve_cached`]).
+/// Prefer [`crate::api::Session`] for new code.
 pub fn solve_cached(
     spec: &SystemSpec,
     opts: &NfeOptions,
@@ -373,7 +373,7 @@ mod tests {
         let with = solve_opts(&spec, &NfeOptions::default()).unwrap();
         let without = solve_opts(
             &spec,
-            &NfeOptions { drop_source_busy_constraint: true, ..NfeOptions::default() },
+            &NfeOptions { drop_source_busy_constraint: true },
         )
         .unwrap();
         assert!(without.makespan <= with.makespan + 1e-7);

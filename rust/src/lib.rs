@@ -19,9 +19,17 @@
 //!   front-ends; schedule extraction and validation.
 //! - [`pipeline`] — the unified solve pipeline: every scheduling
 //!   family implements [`pipeline::ScenarioModel`] and flows through
-//!   `build LP → presolve → backend → warm cache → schedule`.
+//!   `build LP → presolve → backend → warm cache → schedule`, with
+//!   the backend ([`pipeline::Backend`]) selectable per solve:
+//!   revised simplex, dense tableau, or PDHG.
+//! - [`api`] — **the public facade**: typed JSON-serializable
+//!   [`api::SolveRequest`]/[`api::SolveResponse`] wire structs, a
+//!   [`api::Solver`] builder producing warm [`api::Session`]s, and
+//!   work-stealing [`api::Session::solve_batch`] — what the CLI,
+//!   sweeps, advisor, speedup analysis and any future network server
+//!   all call.
 //! - [`cost`], [`speedup`] — §6 monetary-cost/trade-off analysis and
-//!   §5 Amdahl-style speedup analysis.
+//!   §5 Amdahl-style speedup analysis (both routed through [`api`]).
 //! - [`sim`] — a deterministic discrete-event simulator that *executes*
 //!   schedules and independently measures the realized makespan.
 //! - [`cluster`] — a threaded in-process cluster runtime whose
@@ -32,11 +40,11 @@
 //!   framework glue: JSON config, CLI, bench harness, property-test
 //!   harness, and the paper's experiment registry.
 //!
-//! ## Quickstart
+//! ## Quickstart: builder → session → batch
 //!
 //! ```
+//! use dlt::api::{Family, SolveRequest, Solver};
 //! use dlt::model::SystemSpec;
-//! use dlt::dlt::frontend;
 //!
 //! // Table 1 of the paper: 2 sources, 5 processors, J = 100.
 //! let spec = SystemSpec::builder()
@@ -46,12 +54,26 @@
 //!     .job(100.0)
 //!     .build()
 //!     .unwrap();
-//! let sched = frontend::solve(&spec).unwrap();
-//! assert!(sched.makespan > 0.0);
-//! let total: f64 = sched.beta.iter().sum();
+//!
+//! // One session owns the warm solver state; repeated or perturbed
+//! // requests skip simplex phase 1 automatically.
+//! let mut session = Solver::new().build();
+//! let resp = session.solve(&SolveRequest::new(Family::Frontend, spec.clone())).unwrap();
+//! assert!(resp.makespan > 0.0);
+//! let total: f64 = resp.beta.iter().sum();
 //! assert!((total - 100.0).abs() < 1e-6);
+//!
+//! // Heterogeneous batches fan across work-stealing workers and come
+//! // back in input order — this is what `dlt batch` serves.
+//! let reqs: Vec<SolveRequest> = (1..=4)
+//!     .map(|k| SolveRequest::new(Family::Frontend, spec.with_job(50.0 * k as f64)))
+//!     .collect();
+//! let out = Solver::new().threads(2).build().solve_batch(&reqs);
+//! assert_eq!(out.len(), 4);
+//! assert!(out.iter().all(|r| r.is_ok()));
 //! ```
 
+pub mod api;
 pub mod benchkit;
 pub mod cli;
 pub mod cluster;

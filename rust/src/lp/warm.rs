@@ -70,6 +70,13 @@ impl WarmCache {
         Ok(sol)
     }
 
+    /// True when a basis is cached for the `(num_vars,
+    /// num_constraints)` shape — callers can skip preparing a fallback
+    /// seed (e.g. a cross-shape projection) when the cache will hit.
+    pub fn has_shape(&self, num_vars: usize, num_constraints: usize) -> bool {
+        self.bases.contains_key(&(num_vars, num_constraints))
+    }
+
     /// Number of cached bases.
     pub fn len(&self) -> usize {
         self.bases.len()

@@ -25,6 +25,16 @@ impl Default for PdhgOptions {
     }
 }
 
+/// Padded `(nv, nc)` shape for the pure-rust PDHG backend: the next
+/// powers of two (min 64) with row headroom for the slacks the
+/// standardization keeps implicit. The same rounding the AOT artifact
+/// variants are built around, so a problem solved in-process today can
+/// move to an artifact of the same shape unchanged.
+pub fn pad_shape(nv: usize, nc: usize) -> (usize, usize) {
+    let round = |x: usize| x.next_power_of_two().max(64);
+    (round(nv), round(nc + nc / 2))
+}
+
 /// PDHG solve outcome.
 #[derive(Debug, Clone)]
 pub struct PdhgSolution {

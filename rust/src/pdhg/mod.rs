@@ -17,6 +17,6 @@ pub mod driver;
 pub mod rust_impl;
 pub mod standardize;
 
-pub use driver::{solve_artifact, solve_rust, PdhgOptions, PdhgSolution};
+pub use driver::{pad_shape, solve_artifact, solve_rust, PdhgOptions, PdhgSolution};
 pub use rust_impl::PdhgScratch;
 pub use standardize::PaddedLp;

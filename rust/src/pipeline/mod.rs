@@ -1,9 +1,10 @@
 //! The unified solve pipeline every scenario family flows through:
 //!
 //! ```text
-//! ScenarioModel::build_lp ─▶ presolve ─▶ simplex backend ─▶ restore ─▶ Schedule
-//!        (per family)      (default on)  (warm cache / dual   (x, duals,
-//!                                         restart / seed)      objective)
+//! ScenarioModel::build_lp ─▶ presolve ─▶ backend ─▶ restore ─▶ Schedule
+//!        (per family)      (default on)  (simplex with warm   (x, duals,
+//!                                         cache / dual restart  objective)
+//!                                         / seed — or PDHG)
 //! ```
 //!
 //! Before this module existed, each scenario family in [`crate::dlt`]
@@ -14,9 +15,15 @@
 //! and [`solve_full`] provide the shared machinery:
 //!
 //! - **presolve by default** ([`crate::lp::presolve`]): fixed-variable
-//!   substitution plus row cleanup in front of *both* simplex backends,
-//!   with `x`, objective and duals mapped back through the eliminations
-//!   before schedule reconstruction;
+//!   substitution plus row cleanup in front of *every* backend —
+//!   including PDHG — with `x`, objective and duals mapped back
+//!   through the eliminations before schedule reconstruction;
+//! - **backend selection** ([`Backend`]): the sparse revised simplex
+//!   (default), the dense tableau oracle, or the first-order PDHG
+//!   iteration ([`crate::pdhg`]) — all selectable per solve through
+//!   [`PipelineOptions::backend`], which is the single source of truth
+//!   for backend and solver tuning (scenario families no longer carry
+//!   their own `SimplexOptions` copies);
 //! - **warm restarts** ([`crate::lp::WarmCache`]): the cache keys the
 //!   last optimal basis by reduced-LP shape; an rhs-perturbed basis
 //!   that went primal-infeasible is repaired by the revised backend's
@@ -26,14 +33,18 @@
 //!   (e.g. the `m`-processor instance of a processor-count sweep) is
 //!   projected onto the new LP by variable name and row label and used
 //!   as the fallback seed.
+//!
+//! The service facade over this pipeline — typed requests/responses,
+//! sessions, batch solving — is [`crate::api`].
 
 pub mod project;
 
 use crate::dlt::Schedule;
 use crate::error::Result;
 use crate::lp::presolve::{presolve, PresolveStats};
-use crate::lp::{Basis, LpProblem, LpSolution, SimplexOptions, WarmCache};
+use crate::lp::{Basis, LpProblem, LpSolution, SimplexOptions, SolverBackend, WarmCache};
 use crate::model::SystemSpec;
+use crate::pdhg::PdhgOptions;
 
 /// One scenario family: how to turn a [`SystemSpec`] into an LP and an
 /// LP solution back into a timed [`Schedule`].
@@ -42,9 +53,10 @@ use crate::model::SystemSpec;
 /// [`crate::dlt::no_frontend::NfeOptions`] (§3.2),
 /// [`crate::dlt::concurrent::ConcurrentOptions`] (§8 fluid models) and
 /// [`crate::dlt::multi_job::MultiJobStepModel`] (§8 FIFO pipeline
-/// steps) — the model value *is* the family's option set.
+/// steps) — the model value *is* the family's option set. Solver
+/// tuning lives in [`PipelineOptions`], not in the family.
 pub trait ScenarioModel {
-    /// Short family name (diagnostics, sweep labels).
+    /// Short family name (diagnostics, sweep labels, seed keys).
     fn name(&self) -> &'static str;
 
     /// Build the family's LP for a validated, sorted spec. Variables
@@ -53,35 +65,96 @@ pub trait ScenarioModel {
     /// strings.
     fn build_lp(&self, spec: &SystemSpec) -> LpProblem;
 
-    /// Simplex options for this model.
-    fn simplex(&self) -> SimplexOptions {
-        SimplexOptions::default()
-    }
-
     /// Reconstruct the timed schedule from an LP solution (full-length
     /// `x`, fixed variables already restored by the pipeline).
     fn schedule(&self, spec: &SystemSpec, sol: &LpSolution) -> Result<Schedule>;
 }
 
-/// Pipeline tuning knobs.
+/// Which solver runs the (presolved) LP. The single backend switch for
+/// the whole stack — [`crate::api`] exposes it on the wire, the CLI
+/// maps `--solver` onto it, and [`PipelineOptions`] carries it into
+/// every solve.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Backend {
+    /// Dense two-phase tableau ([`crate::lp::simplex`]) — the fallback
+    /// / cross-check oracle.
+    DenseTableau,
+    /// Sparse revised simplex with LU basis, warm starts and
+    /// dual-simplex restarts ([`crate::lp::revised`]). The default.
+    #[default]
+    RevisedSimplex,
+    /// First-order primal-dual hybrid gradient iteration
+    /// ([`crate::pdhg`], pure-rust block loop). Runs behind presolve
+    /// like the simplex backends; ignores warm bases (it has none).
+    Pdhg,
+}
+
+impl Backend {
+    /// Stable wire name (`dense_tableau` / `revised_simplex` / `pdhg`).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Backend::DenseTableau => "dense_tableau",
+            Backend::RevisedSimplex => "revised_simplex",
+            Backend::Pdhg => "pdhg",
+        }
+    }
+
+    /// Parse a wire name; `None` for anything unknown.
+    pub fn parse(s: &str) -> Option<Backend> {
+        match s {
+            "dense_tableau" => Some(Backend::DenseTableau),
+            "revised_simplex" => Some(Backend::RevisedSimplex),
+            "pdhg" => Some(Backend::Pdhg),
+            _ => None,
+        }
+    }
+}
+
+/// Pipeline tuning knobs: the single home for backend choice and
+/// solver options (the per-family `simplex` fields this struct
+/// replaced are gone).
 #[derive(Debug, Clone)]
 pub struct PipelineOptions {
     /// Run [`crate::lp::presolve`] in front of the backend (default
     /// true). Disable to measure raw-solve baselines or to debug a
     /// presolve reduction.
     pub presolve: bool,
+    /// Which backend solves the (reduced) LP.
+    pub backend: Backend,
+    /// Simplex tuning for the two simplex backends. Its own `backend`
+    /// field is overridden by [`PipelineOptions::backend`].
+    pub simplex: SimplexOptions,
+    /// PDHG tuning for [`Backend::Pdhg`].
+    pub pdhg: PdhgOptions,
 }
 
 impl Default for PipelineOptions {
     fn default() -> Self {
-        PipelineOptions { presolve: true }
+        PipelineOptions {
+            presolve: true,
+            backend: Backend::default(),
+            simplex: SimplexOptions::default(),
+            pdhg: PdhgOptions::default(),
+        }
     }
+}
+
+/// What the PDHG backend did during one pipeline solve (absent on
+/// simplex solves).
+#[derive(Debug, Clone)]
+pub struct PdhgDiagnostics {
+    /// Fixed-step blocks executed.
+    pub blocks: usize,
+    /// Whether the residual/gap tolerances were met.
+    pub converged: bool,
+    /// Final `(primal, dual, gap)` residuals.
+    pub residuals: (f64, f64, f64),
 }
 
 /// Everything a pipeline solve produced, for callers that need more
 /// than the schedule (sweep engines seed the next shape from
 /// `solution.basis` + `reduced`; tests inspect iteration counts and
-/// restored duals).
+/// restored duals; [`crate::api`] turns this into a `SolveResponse`).
 #[derive(Debug, Clone)]
 pub struct Solved {
     /// The reconstructed schedule.
@@ -94,10 +167,14 @@ pub struct Solved {
     pub stats: PresolveStats,
     /// The LP the backend actually solved (post-presolve).
     pub reduced: LpProblem,
+    /// Which backend produced `solution`.
+    pub backend: Backend,
+    /// PDHG convergence details when `backend == Backend::Pdhg`.
+    pub pdhg: Option<PdhgDiagnostics>,
 }
 
-/// Solve one scenario with default pipeline options (presolve on, no
-/// warm state).
+/// Solve one scenario with default pipeline options (presolve on,
+/// revised simplex, no warm state).
 pub fn solve<S: ScenarioModel + ?Sized>(model: &S, spec: &SystemSpec) -> Result<Schedule> {
     Ok(solve_full(model, spec, &PipelineOptions::default(), None, None)?.schedule)
 }
@@ -106,7 +183,7 @@ pub fn solve<S: ScenarioModel + ?Sized>(model: &S, spec: &SystemSpec) -> Result<
 /// identical instances (job-size sweeps, perturbed specs, advisor
 /// queries) start from the previous optimal basis instead of from
 /// scratch. One cache per solver thread is the intended usage; see
-/// [`crate::experiments::sweep`] for the parallel layer.
+/// [`crate::api::Session`] for the facade that owns one.
 pub fn solve_cached<S: ScenarioModel + ?Sized>(
     model: &S,
     spec: &SystemSpec,
@@ -117,7 +194,9 @@ pub fn solve_cached<S: ScenarioModel + ?Sized>(
 
 /// Full-control pipeline entry: explicit options, optional warm cache,
 /// and an optional cross-shape seed `(reduced LP of the solved
-/// neighbour, its optimal basis)` used when the cache misses.
+/// neighbour, its optimal basis)` used when the cache misses. The
+/// cache and seed apply to the simplex backends; [`Backend::Pdhg`]
+/// solves cold (but still behind presolve).
 pub fn solve_full<S: ScenarioModel + ?Sized>(
     model: &S,
     spec: &SystemSpec,
@@ -127,17 +206,54 @@ pub fn solve_full<S: ScenarioModel + ?Sized>(
 ) -> Result<Solved> {
     spec.validate()?;
     let lp = model.build_lp(spec);
-    let simplex = model.simplex();
 
     let pre = if opts.presolve { Some(presolve(&lp)?) } else { None };
     let target: &LpProblem = pre.as_ref().map(|pr| &pr.problem).unwrap_or(&lp);
 
-    let seed_basis: Option<Basis> =
-        seed.and_then(|(from_lp, basis)| project::project_basis(from_lp, target, basis));
-
-    let sol = match cache {
-        Some(c) => c.solve_seeded(target, &simplex, seed_basis.as_ref())?,
-        None => crate::lp::solve_warm(target, &simplex, seed_basis.as_ref())?,
+    let (sol, pdhg) = match opts.backend {
+        Backend::Pdhg => {
+            let (nv, nc) =
+                crate::pdhg::pad_shape(target.num_vars(), target.num_constraints());
+            let ps = crate::pdhg::solve_rust(target, nv, nc, &opts.pdhg)?;
+            let diag = PdhgDiagnostics {
+                blocks: ps.blocks,
+                converged: ps.converged,
+                residuals: ps.residuals,
+            };
+            let sol = LpSolution {
+                x: ps.x,
+                objective: ps.objective,
+                iterations: ps.blocks,
+                phase1_iterations: 0,
+                dual_iterations: 0,
+                duals: None,
+                basis: None,
+            };
+            (sol, Some(diag))
+        }
+        simplex_backend => {
+            let mut sopts = opts.simplex.clone();
+            sopts.backend = match simplex_backend {
+                Backend::DenseTableau => SolverBackend::DenseTableau,
+                _ => SolverBackend::RevisedSparse,
+            };
+            // The projection seed is only a *fallback* for cache
+            // misses; don't pay for it when the cache will hit anyway.
+            let cache_hits = match &cache {
+                Some(c) => c.has_shape(target.num_vars(), target.num_constraints()),
+                None => false,
+            };
+            let seed_basis: Option<Basis> = if cache_hits {
+                None
+            } else {
+                seed.and_then(|(from_lp, basis)| project::project_basis(from_lp, target, basis))
+            };
+            let sol = match cache {
+                Some(c) => c.solve_seeded(target, &sopts, seed_basis.as_ref())?,
+                None => crate::lp::solve_warm(target, &sopts, seed_basis.as_ref())?,
+            };
+            (sol, None)
+        }
     };
 
     let (solution, stats) = match &pre {
@@ -149,7 +265,7 @@ pub fn solve_full<S: ScenarioModel + ?Sized>(
         Some(pr) => pr.problem,
         None => lp,
     };
-    Ok(Solved { schedule, solution, stats, reduced })
+    Ok(Solved { schedule, solution, stats, reduced, backend: opts.backend, pdhg })
 }
 
 #[cfg(test)]
@@ -177,7 +293,7 @@ mod tests {
         let without = solve_full(
             &FeOptions::default(),
             &spec,
-            &PipelineOptions { presolve: false },
+            &PipelineOptions { presolve: false, ..PipelineOptions::default() },
             None,
             None,
         )
@@ -222,5 +338,46 @@ mod tests {
             );
         }
         assert!(cache.warm_attempts >= 1);
+    }
+
+    #[test]
+    fn pdhg_backend_runs_behind_presolve() {
+        // NFE always has a presolve fix (TS[0][0] = R_1); the PDHG
+        // backend must see the reduced problem and report the stats.
+        let spec = SystemSpec::builder()
+            .source(0.2, 0.0)
+            .source(0.2, 5.0)
+            .processors(&[2.0, 3.0])
+            .job(100.0)
+            .build()
+            .unwrap();
+        let opts = PipelineOptions {
+            backend: Backend::Pdhg,
+            pdhg: PdhgOptions { max_blocks: 20_000, ..PdhgOptions::default() },
+            ..PipelineOptions::default()
+        };
+        let solved =
+            solve_full(&NfeOptions::default(), &spec, &opts, None, None).unwrap();
+        assert!(solved.stats.fixed_vars >= 1, "presolve did not fire: {:?}", solved.stats);
+        let diag = solved.pdhg.as_ref().expect("pdhg diagnostics present");
+        assert!(diag.blocks > 0);
+        let exact = solve(&NfeOptions::default(), &spec).unwrap();
+        let rel = (solved.schedule.makespan - exact.makespan).abs()
+            / exact.makespan.abs().max(1.0);
+        assert!(
+            rel < 1e-3,
+            "pdhg {} vs simplex {} (rel {rel:.2e}, converged={})",
+            solved.schedule.makespan,
+            exact.makespan,
+            diag.converged
+        );
+    }
+
+    #[test]
+    fn backend_wire_names_roundtrip() {
+        for b in [Backend::DenseTableau, Backend::RevisedSimplex, Backend::Pdhg] {
+            assert_eq!(Backend::parse(b.as_str()), Some(b));
+        }
+        assert_eq!(Backend::parse("simplex"), None);
     }
 }

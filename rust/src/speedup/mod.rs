@@ -4,9 +4,8 @@
 //! (paper eq. 16). The paper's Figure 14/15 sweep uses homogeneous
 //! nodes with the no-front-end solver.
 
-use crate::dlt::no_frontend;
+use crate::api::{Family, Solver, SolveRequest};
 use crate::error::Result;
-use crate::lp::WarmCache;
 use crate::model::SystemSpec;
 
 /// Speedup of `p` sources over one source at fixed `n` processors
@@ -35,33 +34,29 @@ pub fn sweep(
     source_counts: &[usize],
     max_processors: usize,
 ) -> Result<Vec<SpeedupPoint>> {
-    // One warm cache across the whole grid: each (n, m) shape keeps
-    // its last optimal basis, so re-sweeps and repeated shapes skip
-    // phase 1. (`solve_cached` routes through `crate::pipeline`:
-    // presolve + dual-simplex warm restarts apply per solve.)
-    let mut cache = WarmCache::new();
-    let opts = no_frontend::NfeOptions::default();
+    // One api session across the whole grid: each (n, m) shape keeps
+    // its last optimal basis in the session's warm cache, so re-sweeps
+    // and repeated shapes skip phase 1, and every solve flows through
+    // the pipeline (presolve + dual-simplex warm restarts).
+    let mut session = Solver::new().build();
+    let mut tf_of = |n: usize, m: usize| -> Result<f64> {
+        let sub = spec.with_n_sources(n).with_m_processors(m);
+        let resp = session
+            .solve(&SolveRequest::new(Family::NoFrontend, sub))
+            .map_err(|e| e.into_error())?;
+        Ok(resp.makespan)
+    };
     let mut out = Vec::new();
-    for &m in &(1..=max_processors).collect::<Vec<_>>() {
+    for m in 1..=max_processors {
         // Single-source baseline for this m.
-        let base =
-            no_frontend::solve_cached(&spec.with_n_sources(1).with_m_processors(m), &opts, &mut cache)?;
+        let base = tf_of(1, m)?;
         for &p in source_counts {
-            let tf = if p == 1 {
-                base.makespan
-            } else {
-                no_frontend::solve_cached(
-                    &spec.with_n_sources(p).with_m_processors(m),
-                    &opts,
-                    &mut cache,
-                )?
-                .makespan
-            };
+            let tf = if p == 1 { base } else { tf_of(p, m)? };
             out.push(SpeedupPoint {
                 sources: p,
                 processors: m,
                 tf,
-                speedup: speedup(base.makespan, tf),
+                speedup: speedup(base, tf),
             });
         }
     }

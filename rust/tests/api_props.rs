@@ -1,0 +1,208 @@
+//! Facade-level acceptance properties:
+//!
+//! - for every scenario family, `Backend::Pdhg` agrees with
+//!   `Backend::RevisedSimplex` on the optimal makespan within `1e-4`
+//!   relative tolerance, with PDHG demonstrably running *behind
+//!   presolve* (presolve stats reported in its `SolveResponse`);
+//! - mixed-family batches round-trip through `Session::solve_batch`
+//!   and agree with sequential session solves;
+//! - sessions keep their backends' results consistent (dense tableau
+//!   vs revised simplex).
+
+use dlt::api::{Backend, Family, RequestOptions, SolveRequest, Solver, FAMILIES};
+use dlt::dlt::concurrent::Mode;
+use dlt::model::SystemSpec;
+use dlt::testkit::props;
+
+/// Small, well-conditioned specs the first-order method converges on
+/// comfortably (paper-shaped data, job 60..140, releases 0..4).
+fn pdhg_spec(seed: usize) -> SystemSpec {
+    let n = 2 + seed % 2; // 2..=3 sources
+    let m = 2 + (seed / 2) % 2; // 2..=3 processors
+    let mut b = SystemSpec::builder();
+    for i in 0..n {
+        let g = 0.2 + 0.1 * i as f64 + 0.01 * seed as f64;
+        let r = (seed % 3) as f64 * (1.0 + i as f64);
+        b = b.source(g, r);
+    }
+    let a: Vec<f64> = (0..m).map(|j| 2.0 + j as f64 + 0.1 * (seed % 5) as f64).collect();
+    b.processors(&a).job(60.0 + 10.0 * (seed % 9) as f64).build().unwrap()
+}
+
+fn pdhg_request(family: Family, spec: SystemSpec) -> SolveRequest {
+    SolveRequest {
+        id: None,
+        family,
+        spec,
+        options: RequestOptions {
+            backend: Some(Backend::Pdhg),
+            // Generous budget: the acceptance bar is agreement, not
+            // speed. (tol is absolute on O(1..1e2) residuals.)
+            pdhg_max_blocks: Some(20_000),
+            ..RequestOptions::default()
+        },
+    }
+}
+
+/// Backend::Pdhg == Backend::RevisedSimplex within 1e-4 relative, for
+/// every family, property-tested over a spread of specs.
+#[test]
+fn prop_pdhg_agrees_with_simplex_per_family() {
+    props("pdhg == revised simplex (api)", 12, |g| {
+        let seed = g.usize_in(0, 1000);
+        let family = FAMILIES[g.usize_in(0, FAMILIES.len())];
+        let spec = pdhg_spec(seed);
+
+        let mut session = Solver::new().build();
+        // A rare seed could make the NFE LP infeasible (eq. 12); that
+        // is a legitimate outcome, not an agreement failure — skip it
+        // (a first-order method cannot certify infeasibility).
+        let exact = match session.solve(&SolveRequest::new(family, spec.clone())) {
+            Ok(r) => r,
+            Err(_) => return Ok(()),
+        };
+        let pdhg = session
+            .solve(&pdhg_request(family, spec))
+            .map_err(|e| format!("pdhg: {e}"))?;
+
+        assert_eq!(pdhg.backend, Backend::Pdhg);
+        let diag = pdhg
+            .diagnostics
+            .pdhg
+            .as_ref()
+            .ok_or("pdhg response lost its convergence diagnostics")?;
+        let rel = (pdhg.makespan - exact.makespan).abs() / exact.makespan.abs().max(1.0);
+        if rel >= 1e-4 {
+            return Err(format!(
+                "{}: pdhg {} vs simplex {} (rel {rel:.2e}, converged={}, blocks={})",
+                family.as_str(),
+                pdhg.makespan,
+                exact.makespan,
+                diag.converged,
+                diag.blocks
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// PDHG runs behind presolve: the NFE family always has a presolve
+/// substitution (`TS[0][0] = R_1`), and the PDHG response must carry
+/// those stats — proof the backend saw the reduced LP.
+#[test]
+fn pdhg_runs_behind_presolve_with_stats_reported() {
+    let spec = SystemSpec::builder()
+        .source(0.2, 0.0)
+        .source(0.2, 5.0)
+        .processors(&[2.0, 3.0])
+        .job(100.0)
+        .build()
+        .unwrap();
+    let mut session = Solver::new().build();
+    let resp = session.solve(&pdhg_request(Family::NoFrontend, spec.clone())).unwrap();
+    assert!(
+        resp.diagnostics.presolve.fixed_vars >= 1,
+        "presolve stats missing from the PDHG response: {:?}",
+        resp.diagnostics.presolve
+    );
+    // With presolve disabled per request the stats are empty — the
+    // report reflects what actually ran.
+    let mut req = pdhg_request(Family::NoFrontend, spec);
+    req.options.presolve = Some(false);
+    let raw = session.solve(&req).unwrap();
+    assert_eq!(raw.diagnostics.presolve.fixed_vars, 0);
+    assert!(
+        (raw.makespan - resp.makespan).abs() < 1e-3 * (1.0 + resp.makespan),
+        "presolve changed the PDHG optimum: {} vs {}",
+        raw.makespan,
+        resp.makespan
+    );
+}
+
+/// A mixed-family batch (the `dlt batch` workload) returns responses
+/// in input order that match sequential session solves.
+#[test]
+fn mixed_family_batch_matches_sequential() {
+    let spec = SystemSpec::builder()
+        .source(0.2, 1.0)
+        .source(0.4, 3.0)
+        .processors(&[2.0, 3.0, 4.0, 5.0])
+        .job(100.0)
+        .build()
+        .unwrap();
+    let mut reqs: Vec<SolveRequest> = Vec::new();
+    for k in 0..3 {
+        let sub = spec.with_job(80.0 + 30.0 * k as f64);
+        reqs.push(SolveRequest::new(Family::Frontend, sub.clone()));
+        reqs.push(SolveRequest::new(Family::NoFrontend, sub.clone()));
+        reqs.push(SolveRequest {
+            id: Some(format!("con-{k}")),
+            family: Family::Concurrent,
+            spec: sub.clone(),
+            options: RequestOptions {
+                mode: Some(if k % 2 == 0 { Mode::Staggered } else { Mode::Proportional }),
+                ..RequestOptions::default()
+            },
+        });
+        reqs.push(SolveRequest {
+            id: Some(format!("mj-{k}")),
+            family: Family::MultiJob,
+            spec: sub,
+            options: RequestOptions {
+                proc_ready: Some(vec![0.5, 1.0, 1.5, 2.0]),
+                ..RequestOptions::default()
+            },
+        });
+    }
+    for threads in [1usize, 2, 4] {
+        let batch = Solver::new().threads(threads).build().solve_batch(&reqs);
+        assert_eq!(batch.len(), reqs.len());
+        let mut sequential = Solver::new().build();
+        for (req, out) in reqs.iter().zip(batch.iter()) {
+            let b = out.as_ref().unwrap_or_else(|e| {
+                panic!("{} failed in batch: {e}", req.family.as_str())
+            });
+            assert_eq!(b.id, req.id, "ids echo in order");
+            let s = sequential.solve(req).unwrap();
+            assert!(
+                (b.makespan - s.makespan).abs() < 1e-7 * (1.0 + s.makespan),
+                "{} (threads={threads}): batch {} vs sequential {}",
+                req.family.as_str(),
+                b.makespan,
+                s.makespan
+            );
+        }
+    }
+}
+
+/// The dense tableau and the revised simplex agree through the facade
+/// (backend selection is per request, warm state is skipped for the
+/// non-default backend only when it cannot use it).
+#[test]
+fn dense_and_revised_backends_agree_via_api() {
+    // Low releases: Table 1's (10, 50) releases make the NFE LP
+    // infeasible at J = 100 (eq. 12 forces beta[0][0] >= 200).
+    let spec = SystemSpec::builder()
+        .source(0.2, 1.0)
+        .source(0.4, 5.0)
+        .processors(&[2.0, 3.0, 4.0, 5.0, 6.0])
+        .job(100.0)
+        .build()
+        .unwrap();
+    let mut session = Solver::new().build();
+    for family in [Family::Frontend, Family::NoFrontend] {
+        let mut dense_req = SolveRequest::new(family, spec.clone());
+        dense_req.options.backend = Some(Backend::DenseTableau);
+        let dense = session.solve(&dense_req).unwrap();
+        let revised = session.solve(&SolveRequest::new(family, spec.clone())).unwrap();
+        assert_eq!(dense.backend, Backend::DenseTableau);
+        assert_eq!(revised.backend, Backend::RevisedSimplex);
+        assert!(
+            (dense.makespan - revised.makespan).abs() < 1e-7 * (1.0 + revised.makespan),
+            "{}: dense {} vs revised {}",
+            family.as_str(),
+            dense.makespan,
+            revised.makespan
+        );
+    }
+}

@@ -1,0 +1,223 @@
+//! Wire-format properties for the `dlt::api` facade: request JSON
+//! round-trips losslessly across all four scenario families, response
+//! JSON round-trips, and malformed input is rejected with
+//! `Error::Config` — never a panic.
+
+use dlt::api::{
+    ApiError, Backend, Family, RequestOptions, SolveRequest, SolveResponse, Solver, FAMILIES,
+};
+use dlt::config::json::Json;
+use dlt::dlt::concurrent::Mode;
+use dlt::error::Error;
+use dlt::testkit::{arb_spec, props, Gen};
+
+fn arb_options(g: &mut Gen, family: Family, m: usize) -> RequestOptions {
+    let mut o = RequestOptions::default();
+    if g.bool() {
+        o.backend = Some(match g.usize_in(0, 3) {
+            0 => Backend::RevisedSimplex,
+            1 => Backend::DenseTableau,
+            _ => Backend::Pdhg,
+        });
+    }
+    if g.bool() {
+        o.presolve = Some(g.bool());
+    }
+    if g.bool() {
+        o.eps = Some(g.f64_in(1e-12, 1e-6));
+    }
+    if g.bool() {
+        o.max_iters = Some(g.usize_in(100, 100_000));
+    }
+    if g.bool() {
+        o.pdhg_tol = Some(g.f64_in(1e-10, 1e-5));
+    }
+    if g.bool() {
+        o.pdhg_max_blocks = Some(g.usize_in(1, 5000));
+    }
+    match family {
+        Family::Concurrent => {
+            if g.bool() {
+                o.mode = Some(if g.bool() { Mode::Staggered } else { Mode::Proportional });
+            }
+        }
+        Family::Frontend => {
+            if g.bool() {
+                o.finish_sum_includes_j = Some(g.bool());
+            }
+        }
+        Family::NoFrontend => {
+            if g.bool() {
+                o.drop_source_busy = Some(g.bool());
+            }
+        }
+        Family::MultiJob => {
+            if g.bool() {
+                o.proc_ready = Some(g.f64_vec(m, 0.0, 10.0));
+            }
+        }
+    }
+    o
+}
+
+/// `request -> encode -> parse -> request` is the identity, for every
+/// family, with and without option overrides, compact and pretty.
+#[test]
+fn prop_request_roundtrip_all_families() {
+    props("request json roundtrip", 80, |g| {
+        let family = FAMILIES[g.usize_in(0, FAMILIES.len())];
+        let spec = arb_spec(g, 4, 6);
+        let m = spec.m();
+        let req = SolveRequest {
+            id: if g.bool() { Some(format!("req-{}", g.usize_in(0, 10_000))) } else { None },
+            family,
+            spec,
+            options: arb_options(g, family, m),
+        };
+        let compact = req.to_json().to_string_compact();
+        let pretty = req.to_json().to_string_pretty();
+        let back1 = SolveRequest::parse(&compact).map_err(|e| format!("compact: {e}"))?;
+        let back2 = SolveRequest::parse(&pretty).map_err(|e| format!("pretty: {e}"))?;
+        if back1 != req {
+            return Err(format!("compact roundtrip drifted:\n{req:?}\nvs\n{back1:?}"));
+        }
+        if back2 != req {
+            return Err(format!("pretty roundtrip drifted:\n{req:?}\nvs\n{back2:?}"));
+        }
+        Ok(())
+    });
+}
+
+/// Responses round-trip too: solve a real request per family, encode,
+/// decode, compare the payload fields.
+#[test]
+fn response_roundtrip_all_families() {
+    let spec = dlt::model::SystemSpec::builder()
+        .source(0.2, 0.0)
+        .source(0.3, 2.0)
+        .processors(&[2.0, 3.0, 4.0])
+        .job(100.0)
+        .build()
+        .unwrap();
+    let mut session = Solver::new().build();
+    for family in FAMILIES {
+        let mut req = SolveRequest::new(family, spec.clone());
+        req.id = Some(format!("rt-{}", family.as_str()));
+        let resp = session.solve(&req).unwrap();
+        let text = resp.to_json().to_string_pretty();
+        let back = SolveResponse::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.id, resp.id);
+        assert_eq!(back.family, resp.family);
+        assert_eq!(back.backend, resp.backend);
+        assert_eq!(back.n, resp.n);
+        assert_eq!(back.m, resp.m);
+        assert_eq!(back.beta, resp.beta);
+        assert_eq!(back.alpha, resp.alpha);
+        assert_eq!(back.comm_start, resp.comm_start);
+        assert_eq!(back.compute_end, resp.compute_end);
+        assert_eq!(back.makespan, resp.makespan);
+        assert_eq!(back.diagnostics.iterations, resp.diagnostics.iterations);
+        assert_eq!(back.diagnostics.presolve, resp.diagnostics.presolve);
+        // And the reconstructed schedule is self-consistent.
+        let sched = back.schedule();
+        assert_eq!(sched.model, family.timing_model());
+        assert!((sched.total_load() - 100.0).abs() < 1e-6);
+    }
+}
+
+/// Malformed JSON documents are `Error::Config`, never a panic:
+/// truncated objects, bad numbers, wrong types, trailing garbage.
+#[test]
+fn malformed_json_is_rejected_not_panicked() {
+    let cases = [
+        "",
+        "{",
+        "}",
+        "[",
+        "[1,",
+        r#"{"a""#,
+        r#"{"a":"#,
+        r#"{"a":1"#,
+        r#"{"a" 1}"#,
+        r#"{"a":1,}"#,
+        "[1,]",
+        "nul",
+        "tru",
+        "falsey",
+        "--1",
+        "1e",
+        "1..2",
+        "0x10",
+        "\"unterminated",
+        "\"bad escape \\q\"",
+        "\"lone surrogate \\ud800\"",
+        "\"truncated \\u12",
+        "1 2",
+        "{} []",
+        "\u{1}",
+    ];
+    for c in cases {
+        match Json::parse(c) {
+            Err(Error::Config(_)) => {}
+            Err(e) => panic!("`{c}`: wrong error kind {e:?}"),
+            Ok(v) => panic!("`{c}`: parsed to {v:?}"),
+        }
+    }
+}
+
+/// Structurally valid JSON that is not a valid request is also a
+/// config error: missing fields, wrong types, out-of-domain values.
+#[test]
+fn invalid_requests_are_config_errors() {
+    let spec_ok = r#"{"sources":[{"g":0.2}],"processors":[{"a":2}],"job":10}"#;
+    let cases = [
+        // Not an object.
+        "[]".to_string(),
+        "42".to_string(),
+        // Missing family / spec.
+        format!(r#"{{"spec": {spec_ok}}}"#),
+        r#"{"family": "frontend"}"#.to_string(),
+        // Wrong types.
+        format!(r#"{{"family": 3, "spec": {spec_ok}}}"#),
+        format!(r#"{{"family": "frontend", "spec": {spec_ok}, "options": {{"presolve": "yes"}}}}"#),
+        format!(r#"{{"family": "frontend", "spec": {spec_ok}, "options": {{"eps": "small"}}}}"#),
+        format!(r#"{{"family": "frontend", "spec": {spec_ok}, "options": {{"max_iters": 1.5}}}}"#),
+        format!(r#"{{"family": "frontend", "spec": {spec_ok}, "options": {{"max_iters": -3}}}}"#),
+        format!(
+            r#"{{"family": "frontend", "spec": {spec_ok}, "options": {{"proc_ready": [1, "x"]}}}}"#
+        ),
+        format!(r#"{{"family": "frontend", "spec": {spec_ok}, "options": {{"mode": "warp"}}}}"#),
+        format!(r#"{{"family": "frontend", "spec": {spec_ok}, "options": {{"backend": "cuda"}}}}"#),
+        // Options must be an object, and misspelled keys must fail
+        // loudly instead of silently solving with the defaults.
+        format!(r#"{{"family": "frontend", "spec": {spec_ok}, "options": "pdhg"}}"#),
+        format!(r#"{{"family": "frontend", "spec": {spec_ok}, "options": {{"backends": "pdhg"}}}}"#),
+        // Bad spec payloads.
+        r#"{"family": "frontend", "spec": {"sources":[],"processors":[{"a":2}],"job":10}}"#
+            .to_string(),
+        r#"{"family": "frontend", "spec": {"sources":[{"g":0.2}],"processors":[{"a":2}]}}"#
+            .to_string(),
+        r#"{"family": "frontend", "spec": {"sources":[{"g":"fast"}],"processors":[{"a":2}],"job":10}}"#
+            .to_string(),
+    ];
+    for c in &cases {
+        match SolveRequest::parse(c) {
+            Err(Error::Config(_)) => {}
+            Err(e) => panic!("`{c}`: wrong error kind {e:?}"),
+            Ok(v) => panic!("`{c}`: parsed to {v:?}"),
+        }
+    }
+}
+
+/// Batch output slots line up with input slots even when some entries
+/// are malformed: the error object carries the config message in-band.
+#[test]
+fn api_error_json_shape() {
+    let err = ApiError::from(Error::Config("missing field `family`".into()));
+    let j = err.to_json();
+    let text = j.to_string_compact();
+    assert!(text.contains("\"error\""), "{text}");
+    assert!(text.contains("\"config\""), "{text}");
+    let back = ApiError::from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(back, err);
+}

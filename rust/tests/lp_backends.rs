@@ -119,9 +119,15 @@ fn paper_anchor_instances_agree() {
 /// in the same order, regardless of thread count.
 #[test]
 fn parallel_sweep_is_deterministic() {
-    let spec = params::table1();
     let jobs: Vec<f64> = (0..24).map(|k| 60.0 + 20.0 * k as f64).collect();
     for model in [TimingModel::FrontEnd, TimingModel::NoFrontEnd] {
+        // Table 2 for the NFE model: Table 1's releases (10, 50) make
+        // the NFE LP infeasible below J = 200 (eq. 12 forces
+        // beta[0][0] >= 200).
+        let spec = match model {
+            TimingModel::FrontEnd => params::table1(),
+            TimingModel::NoFrontEnd => params::table2(),
+        };
         let grid = job_grid(&spec, &jobs, model);
         let serial =
             run_scenarios(&grid, &sweep_opts(1, true)).unwrap();

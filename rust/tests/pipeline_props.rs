@@ -142,7 +142,7 @@ fn all_families_flow_through_pipeline() {
         .build()
         .unwrap();
     let on = PipelineOptions::default();
-    let off = PipelineOptions { presolve: false };
+    let off = PipelineOptions { presolve: false, ..PipelineOptions::default() };
 
     fn check<S: ScenarioModel>(
         model: &S,
