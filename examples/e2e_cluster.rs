@@ -22,7 +22,8 @@
 //! missing. Results recorded in EXPERIMENTS.md §End-to-end.
 
 use dlt::cluster::{run_cluster, ClusterConfig, Compute};
-use dlt::dlt::frontend;
+use dlt::dlt::frontend::FeOptions;
+use dlt::pipeline;
 use dlt::model::SystemSpec;
 use dlt::runtime::{Runtime, WorkloadExecutable};
 use std::sync::Arc;
@@ -99,7 +100,7 @@ fn main() -> anyhow::Result<()> {
     let mut results = Vec::new();
     for n in [1usize, 3] {
         let s = spec(n);
-        let sched = frontend::solve(&s)?;
+        let sched = pipeline::solve(&FeOptions::default(), &s)?;
         let compute = match calibration {
             Some(sec) => real_compute(s.a(), time_scale, sec),
             None => Compute::Modeled,

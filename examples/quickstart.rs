@@ -8,9 +8,11 @@
 //! Table 2 without), validates the schedules, and cross-checks them on
 //! the discrete-event simulator.
 
+use dlt::dlt::frontend::FeOptions;
 use dlt::dlt::no_frontend::NfeOptions;
 use dlt::dlt::schedule::TimingModel;
-use dlt::dlt::{frontend, no_frontend, validate};
+use dlt::dlt::validate;
+use dlt::pipeline;
 use dlt::model::SystemSpec;
 use dlt::sim::{simulate, SimOptions};
 
@@ -26,7 +28,7 @@ fn main() -> anyhow::Result<()> {
         .build()?;
 
     println!("=== Table 1, with front-ends (§3.1) ===");
-    let fe = frontend::solve(&table1)?;
+    let fe = pipeline::solve(&FeOptions::default(), &table1)?;
     println!("T_f = {:.4}  ({} simplex iterations)", fe.makespan, fe.lp_iterations);
     print!("{}", fe.render_beta_table());
     let report = validate(&table1, &fe);
@@ -45,7 +47,7 @@ fn main() -> anyhow::Result<()> {
         .build()?;
 
     println!("=== Table 2, without front-ends (§3.2) ===");
-    let nfe = no_frontend::solve(&table2)?;
+    let nfe = pipeline::solve(&NfeOptions::default(), &table2)?;
     println!("T_f = {:.4}  ({} simplex iterations)", nfe.makespan, nfe.lp_iterations);
     print!("{}", nfe.render_beta_table());
     let report = validate(&table2, &nfe);
@@ -64,7 +66,7 @@ fn main() -> anyhow::Result<()> {
     }
 
     // FE vs NFE on the same system: front-ends can only help.
-    let fe2 = frontend::solve(&table2)?;
+    let fe2 = pipeline::solve(&FeOptions::default(), &table2)?;
     println!(
         "\nTable 2 with front-ends would finish in {:.4} ({:.1}% faster)",
         fe2.makespan,
@@ -74,14 +76,14 @@ fn main() -> anyhow::Result<()> {
     // The infeasibility the paper implicitly sidesteps: Table 1's
     // release times under the §3.2 constraints (keep S1 busy until S2's
     // release — eq. 12) cannot be satisfied with J = 100.
-    match no_frontend::solve(&table1) {
+    match pipeline::solve(&NfeOptions::default(), &table1) {
         Err(e) => println!("\nTable 1 under §3.2 is infeasible as expected: {e}"),
         Ok(s) => println!("\nunexpected: Table 1 NFE solved with T_f {}", s.makespan),
     }
     // Dropping eq. 12 restores feasibility.
-    let relaxed = no_frontend::solve_opts(
-        &table1,
+    let relaxed = pipeline::solve(
         &NfeOptions { drop_source_busy_constraint: true, ..Default::default() },
+        &table1,
     )?;
     println!("...and solvable without eq. 12: T_f = {:.4}", relaxed.makespan);
     Ok(())

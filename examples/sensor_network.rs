@@ -15,7 +15,9 @@
 
 use dlt::cost::{advise, Advice, Budgets, TradeoffTable};
 use dlt::dlt::schedule::TimingModel;
-use dlt::dlt::{frontend, no_frontend};
+use dlt::dlt::frontend::FeOptions;
+use dlt::dlt::no_frontend::NfeOptions;
+use dlt::pipeline;
 use dlt::model::SystemSpec;
 use dlt::sim::{simulate, SimOptions};
 use dlt::util::stats::Summary;
@@ -35,8 +37,8 @@ fn main() -> anyhow::Result<()> {
         .build()?;
 
     println!("== full fleet, both timing models ==");
-    let fe = frontend::solve(&spec)?;
-    let nfe = no_frontend::solve(&spec)?;
+    let fe = pipeline::solve(&FeOptions::default(), &spec)?;
+    let nfe = pipeline::solve(&NfeOptions::default(), &spec)?;
     println!("T_f with front-ends:    {:.3} h", fe.makespan);
     println!("T_f without front-ends: {:.3} h", nfe.makespan);
     println!(

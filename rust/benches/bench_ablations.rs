@@ -10,9 +10,11 @@
 //! 4. §8 multi-job pipelining vs serial job execution.
 
 use dlt::benchkit::{Bencher, Reporter};
-use dlt::dlt::frontend::{self, FeOptions};
-use dlt::dlt::no_frontend::{self, NfeOptions};
-use dlt::dlt::{concurrent, multi_job};
+use dlt::dlt::frontend::FeOptions;
+use dlt::dlt::no_frontend::NfeOptions;
+use dlt::dlt::concurrent::{ConcurrentOptions, Mode};
+use dlt::dlt::multi_job;
+use dlt::pipeline;
 use dlt::experiments::params;
 
 fn main() {
@@ -25,10 +27,10 @@ fn main() {
     println!("{:>4} {:>14} {:>14} {:>8}", "m", "tf (k<=j-1)", "tf (k<=j)", "delta%");
     for m in [1usize, 5, 10, 20] {
         let sub = t5.with_m_processors(m);
-        let a = frontend::solve_opts(&sub, &FeOptions::default()).unwrap().makespan;
-        let c = frontend::solve_opts(
-            &sub,
+        let a = pipeline::solve(&FeOptions::default(), &sub).unwrap().makespan;
+        let c = pipeline::solve(
             &FeOptions { finish_sum_includes_j: true, ..Default::default() },
+            &sub,
         )
         .unwrap()
         .makespan;
@@ -46,12 +48,12 @@ fn main() {
             .job(100.0)
             .build()
             .unwrap();
-        let with = no_frontend::solve_opts(&spec, &NfeOptions::default())
+        let with = pipeline::solve(&NfeOptions::default(), &spec)
             .map(|s| format!("{:.4}", s.makespan))
             .unwrap_or_else(|_| "infeasible".into());
-        let without = no_frontend::solve_opts(
-            &spec,
+        let without = pipeline::solve(
             &NfeOptions { drop_source_busy_constraint: true },
+            &spec,
         )
         .map(|s| format!("{:.4}", s.makespan))
         .unwrap_or_else(|_| "infeasible".into());
@@ -67,18 +69,18 @@ fn main() {
     );
     for m in [2usize, 5, 10, 20] {
         let sub = t3.with_m_processors(m);
-        let seq = no_frontend::solve(&sub).unwrap().makespan;
-        let prop = concurrent::solve_mode(&sub, concurrent::Mode::Proportional)
+        let seq = pipeline::solve(&NfeOptions::default(), &sub).unwrap().makespan;
+        let prop = pipeline::solve(&ConcurrentOptions { mode: Mode::Proportional }, &sub)
             .unwrap()
             .makespan;
-        let stag = concurrent::solve_mode(&sub, concurrent::Mode::Staggered)
+        let stag = pipeline::solve(&ConcurrentOptions { mode: Mode::Staggered }, &sub)
             .unwrap()
             .makespan;
         println!("{m:>4} {seq:>14.4} {prop:>14.4} {stag:>14.4} {:>9.2}x", seq / stag);
     }
     let sub = t3.with_m_processors(10);
-    rep.report("solve_concurrent_n3_m10", b.bench_val(|| concurrent::solve(&sub).unwrap()));
-    rep.report("solve_sequential_n3_m10", b.bench_val(|| no_frontend::solve(&sub).unwrap()));
+    rep.report("solve_concurrent_n3_m10", b.bench_val(|| pipeline::solve(&ConcurrentOptions::default(), &sub).unwrap()));
+    rep.report("solve_sequential_n3_m10", b.bench_val(|| pipeline::solve(&NfeOptions::default(), &sub).unwrap()));
 
     // --- 4. §8 multi-job pipelining ---
     println!("\n-- §8 multi-job FIFO pipeline vs serial (FE) --");

@@ -2,7 +2,8 @@
 //! (no front-ends).
 
 use dlt::benchkit::{Bencher, Reporter};
-use dlt::dlt::no_frontend;
+use dlt::dlt::no_frontend::NfeOptions;
+use dlt::pipeline;
 use dlt::experiments::{params, run};
 
 fn main() {
@@ -14,7 +15,7 @@ fn main() {
         let sub = spec.with_n_sources(n).with_m_processors(m);
         rep.report(
             &format!("solve_nfe_n{n}_m{m}"),
-            b.bench_val(|| no_frontend::solve(&sub).unwrap()),
+            b.bench_val(|| pipeline::solve(&NfeOptions::default(), &sub).unwrap()),
         );
     }
     let full = run("fig12").unwrap();

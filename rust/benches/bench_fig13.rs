@@ -3,7 +3,8 @@
 //! solve cost is flat across J — the bench demonstrates that too.
 
 use dlt::benchkit::{Bencher, Reporter};
-use dlt::dlt::frontend;
+use dlt::dlt::frontend::FeOptions;
+use dlt::pipeline;
 use dlt::experiments::{params, run};
 
 fn main() {
@@ -15,7 +16,7 @@ fn main() {
         let sub = spec.with_job(j).with_m_processors(10);
         rep.report(
             &format!("solve_fe_m10_J{j}"),
-            b.bench_val(|| frontend::solve(&sub).unwrap()),
+            b.bench_val(|| pipeline::solve(&FeOptions::default(), &sub).unwrap()),
         );
     }
     rep.finish();

@@ -3,7 +3,8 @@
 //! paper's evaluation; this bench tracks it explicitly.
 
 use dlt::benchkit::{Bencher, Reporter};
-use dlt::dlt::no_frontend;
+use dlt::dlt::no_frontend::NfeOptions;
+use dlt::pipeline;
 use dlt::experiments::{params, run};
 
 fn main() {
@@ -15,7 +16,7 @@ fn main() {
         let sub = spec.with_n_sources(n).with_m_processors(12);
         rep.report(
             &format!("solve_nfe_n{n}_m12"),
-            b.bench_val(|| no_frontend::solve(&sub).unwrap()),
+            b.bench_val(|| pipeline::solve(&NfeOptions::default(), &sub).unwrap()),
         );
     }
     rep.finish();

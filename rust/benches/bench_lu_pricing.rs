@@ -1,0 +1,174 @@
+//! Bench: the factorization × pricing strategy grid on the largest
+//! N × M instances — the measurement behind the Forrest–Tomlin and
+//! devex/steepest-edge ROADMAP bullets.
+//!
+//! Two workloads per `(factorization, pricing)` cell:
+//!
+//! - **cold long-pivot solve** — one cold NFE solve on the largest
+//!   spec (hundreds of pivots, well past the 48-pivot eta cadence):
+//!   the case LU updating exists for. The JSON records iterations,
+//!   full refactorizations and wall time, so the artifact shows
+//!   Forrest–Tomlin refactorizing less than the product-form eta file
+//!   on exactly this instance.
+//! - **warm job sweep** — a warm-started job-size sweep through one
+//!   `dlt::api` session (the production shape: perturbed re-solves
+//!   with dual-simplex repairs), summed over the grid.
+//!
+//! With `DLT_BENCH_JSON_DIR=dir` the results land in
+//! `dir/BENCH_lu_pricing.json`; `DLT_BENCH_FAST=1` shrinks the
+//! instance for CI smoke runs.
+
+use dlt::api::{Family, SolveRequest, Solver};
+use dlt::config::json::Json;
+use dlt::lp::{Factorization, Pricing, SimplexOptions};
+use dlt::model::SystemSpec;
+use std::time::Instant;
+
+fn spec(n: usize, m: usize) -> SystemSpec {
+    let mut b = SystemSpec::builder();
+    for i in 0..n {
+        b = b.source(0.5 + 0.01 * i as f64, i as f64 * 0.5);
+    }
+    let a: Vec<f64> = (0..m).map(|k| 1.1 + 0.1 * k as f64).collect();
+    b.processors(&a).job(100.0).build().unwrap()
+}
+
+struct Cell {
+    factorization: Factorization,
+    pricing: Pricing,
+    cold_iterations: usize,
+    cold_refactorizations: usize,
+    cold_update_len: usize,
+    cold_wall_ms: f64,
+    sweep_iterations: usize,
+    sweep_refactorizations: usize,
+    sweep_wall_ms: f64,
+}
+
+fn main() {
+    let fast = std::env::var("DLT_BENCH_FAST").is_ok();
+    let (n, m) = if fast { (3usize, 10usize) } else { (3, 24) };
+    let sweep_points = if fast { 8 } else { 24 };
+    let base = spec(n, m);
+
+    println!("== bench group: lu_pricing (factorization x pricing, NFE n={n} m={m}) ==");
+    println!(
+        "{:<18} {:<14} {:>10} {:>8} {:>8} {:>10} {:>10} {:>8} {:>10}",
+        "factorization",
+        "pricing",
+        "cold_iter",
+        "refact",
+        "upd_len",
+        "cold_ms",
+        "sweep_iter",
+        "refact",
+        "sweep_ms"
+    );
+
+    let mut cells: Vec<Cell> = Vec::new();
+    for factorization in [Factorization::ProductFormEta, Factorization::ForrestTomlin] {
+        for pricing in [Pricing::Dantzig, Pricing::Devex, Pricing::SteepestEdge] {
+            let simplex =
+                SimplexOptions { factorization, pricing, ..SimplexOptions::default() };
+
+            // Cold long-pivot instance.
+            let mut cold_session =
+                Solver::new().warm_start(false).simplex(simplex.clone()).build();
+            let t0 = Instant::now();
+            let cold = cold_session
+                .solve(&SolveRequest::new(Family::NoFrontend, base.clone()))
+                .expect("cold long-pivot solve");
+            let cold_wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+            // Warm job sweep through one session.
+            let mut session = Solver::new().simplex(simplex).build();
+            let t0 = Instant::now();
+            let mut sweep_iterations = 0usize;
+            let mut sweep_refactorizations = 0usize;
+            for k in 0..sweep_points {
+                let sub = base.with_job(100.0 + 10.0 * k as f64);
+                let resp = session
+                    .solve(&SolveRequest::new(Family::NoFrontend, sub))
+                    .expect("sweep solve");
+                sweep_iterations += resp.diagnostics.iterations;
+                sweep_refactorizations += resp.diagnostics.refactorizations;
+            }
+            let sweep_wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+            println!(
+                "{:<18} {:<14} {:>10} {:>8} {:>8} {:>10.2} {:>10} {:>8} {:>10.2}",
+                factorization.as_str(),
+                pricing.as_str(),
+                cold.diagnostics.iterations,
+                cold.diagnostics.refactorizations,
+                cold.diagnostics.update_len,
+                cold_wall_ms,
+                sweep_iterations,
+                sweep_refactorizations,
+                sweep_wall_ms
+            );
+            cells.push(Cell {
+                factorization,
+                pricing,
+                cold_iterations: cold.diagnostics.iterations,
+                cold_refactorizations: cold.diagnostics.refactorizations,
+                cold_update_len: cold.diagnostics.update_len,
+                cold_wall_ms,
+                sweep_iterations,
+                sweep_refactorizations,
+                sweep_wall_ms,
+            });
+        }
+    }
+
+    // Headline note: the tentpole's refactorization claim, measured.
+    let cold_refacts = |f: Factorization| -> usize {
+        cells
+            .iter()
+            .filter(|c| c.factorization == f && c.pricing == Pricing::Dantzig)
+            .map(|c| c.cold_refactorizations)
+            .sum()
+    };
+    let pfe = cold_refacts(Factorization::ProductFormEta);
+    let ft = cold_refacts(Factorization::ForrestTomlin);
+    let note = format!(
+        "long-pivot cold solve (dantzig): forrest_tomlin refactorized {ft}x vs \
+         product_form_eta {pfe}x"
+    );
+    println!("   note: {note}");
+
+    let entries: Vec<Json> = cells
+        .iter()
+        .map(|c| {
+            Json::Object(vec![
+                ("factorization".into(), Json::Str(c.factorization.as_str().into())),
+                ("pricing".into(), Json::Str(c.pricing.as_str().into())),
+                ("cold_iterations".into(), Json::Num(c.cold_iterations as f64)),
+                (
+                    "cold_refactorizations".into(),
+                    Json::Num(c.cold_refactorizations as f64),
+                ),
+                ("cold_update_len".into(), Json::Num(c.cold_update_len as f64)),
+                ("cold_wall_ms".into(), Json::Num(c.cold_wall_ms)),
+                ("sweep_iterations".into(), Json::Num(c.sweep_iterations as f64)),
+                (
+                    "sweep_refactorizations".into(),
+                    Json::Num(c.sweep_refactorizations as f64),
+                ),
+                ("sweep_wall_ms".into(), Json::Num(c.sweep_wall_ms)),
+            ])
+        })
+        .collect();
+    let doc = Json::Object(vec![
+        ("group".into(), Json::Str("lu_pricing".into())),
+        ("instance".into(), Json::Str(format!("nfe n={n} m={m}, {sweep_points}-point sweep"))),
+        ("entries".into(), Json::Array(entries)),
+        ("notes".into(), Json::Array(vec![Json::Str(note)])),
+    ]);
+    if let Ok(dir) = std::env::var("DLT_BENCH_JSON_DIR") {
+        std::fs::create_dir_all(&dir).expect("create bench json dir");
+        let path = std::path::Path::new(&dir).join("BENCH_lu_pricing.json");
+        std::fs::write(&path, doc.to_string_pretty()).expect("write BENCH_lu_pricing.json");
+        println!("   wrote {}", path.display());
+    }
+}

@@ -4,7 +4,9 @@
 //! paper plots) and times the solves.
 
 use dlt::benchkit::{Bencher, Reporter};
-use dlt::dlt::{frontend, no_frontend};
+use dlt::dlt::frontend::FeOptions;
+use dlt::dlt::no_frontend::NfeOptions;
+use dlt::pipeline;
 use dlt::experiments::{params, run};
 
 fn main() {
@@ -12,9 +14,9 @@ fn main() {
     let mut rep = Reporter::new("numerical_tests (Tables 1-2, Figs 10-11)");
 
     let t1 = params::table1();
-    rep.report("solve_table1_frontend", b.bench_val(|| frontend::solve(&t1).unwrap()));
+    rep.report("solve_table1_frontend", b.bench_val(|| pipeline::solve(&FeOptions::default(), &t1).unwrap()));
     let t2 = params::table2();
-    rep.report("solve_table2_no_frontend", b.bench_val(|| no_frontend::solve(&t2).unwrap()));
+    rep.report("solve_table2_no_frontend", b.bench_val(|| pipeline::solve(&NfeOptions::default(), &t2).unwrap()));
     rep.finish();
 
     // The paper's data series.

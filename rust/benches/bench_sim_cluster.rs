@@ -6,7 +6,8 @@
 
 use dlt::benchkit::{Bencher, Reporter};
 use dlt::cluster::{run_cluster, ClusterConfig, Compute};
-use dlt::dlt::no_frontend;
+use dlt::dlt::no_frontend::NfeOptions;
+use dlt::pipeline;
 use dlt::model::SystemSpec;
 use dlt::sim::{simulate, SimOptions};
 
@@ -35,7 +36,7 @@ fn main() {
 
     // One real cluster run (wall-clock bound; report, don't loop).
     let s = spec(2, 4);
-    let sched = no_frontend::solve(&s).unwrap();
+    let sched = pipeline::solve(&NfeOptions::default(), &s).unwrap();
     let cfg = ClusterConfig { time_scale: 0.0005, compute: Compute::Modeled, fe_splits: 16 };
     let t0 = std::time::Instant::now();
     let report = run_cluster(&s, &sched, &cfg).unwrap();

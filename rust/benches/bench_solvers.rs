@@ -27,7 +27,7 @@ fn spec(n: usize, m: usize) -> SystemSpec {
 }
 
 fn sweep_opts(threads: usize, warm_start: bool) -> SweepOptions {
-    SweepOptions { threads, warm_start, steal: false }
+    SweepOptions { threads, warm_start, steal: false, ..SweepOptions::default() }
 }
 
 fn main() {
@@ -104,14 +104,14 @@ fn main() {
         rep.report(
             "ragged100_chunked_fe_n3",
             b.bench_val(|| {
-                run_scenarios(&grid, &SweepOptions { threads: 0, warm_start: true, steal: false })
+                run_scenarios(&grid, &SweepOptions { threads: 0, warm_start: true, steal: false, ..SweepOptions::default() })
                     .unwrap()
             }),
         );
         rep.report(
             "ragged100_steal_fe_n3",
             b.bench_val(|| {
-                run_scenarios(&grid, &SweepOptions { threads: 0, warm_start: true, steal: true })
+                run_scenarios(&grid, &SweepOptions { threads: 0, warm_start: true, steal: true, ..SweepOptions::default() })
                     .unwrap()
             }),
         );

@@ -57,6 +57,7 @@
 pub mod session;
 pub mod wire;
 
+pub use crate::lp::{Factorization, Pricing};
 pub use crate::pipeline::Backend;
 pub use session::{solve_one, Session, Solver};
 pub use wire::{

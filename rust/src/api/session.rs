@@ -162,6 +162,12 @@ impl Session {
         if let Some(mi) = o.max_iters {
             simplex.max_iters = mi;
         }
+        if let Some(f) = o.factorization {
+            simplex.factorization = f;
+        }
+        if let Some(p) = o.pricing {
+            simplex.pricing = p;
+        }
         let mut pdhg = cfg.pdhg.clone();
         if let Some(t) = o.pdhg_tol {
             pdhg.tol = t;
@@ -248,6 +254,11 @@ impl Session {
                 phase1_iterations: solved.solution.phase1_iterations,
                 dual_iterations: solved.solution.dual_iterations,
                 warm_start,
+                factorization: solved.solution.factorization,
+                pricing: solved.solution.pricing,
+                refactorizations: solved.solution.refactorizations,
+                update_len: solved.solution.peak_update_len,
+                weight_resets: solved.solution.weight_resets,
                 presolve: solved.stats,
                 pdhg: solved.pdhg,
                 solve_ns,
@@ -301,7 +312,8 @@ mod tests {
     fn session_matches_direct_pipeline_solve() {
         let mut session = Solver::new().build();
         let resp = session.solve(&SolveRequest::new(Family::Frontend, spec())).unwrap();
-        let direct = crate::dlt::frontend::solve(&spec()).unwrap();
+        let direct =
+            pipeline::solve(&FeOptions::default(), &spec()).unwrap();
         assert!((resp.makespan - direct.makespan).abs() < 1e-9 * (1.0 + direct.makespan));
         let total: f64 = resp.beta.iter().sum();
         assert!((total - 100.0).abs() < 1e-6);
@@ -332,7 +344,7 @@ mod tests {
         for m in 1..=base.m() {
             let sub = base.with_m_processors(m);
             let resp = session.solve(&SolveRequest::new(Family::Frontend, sub.clone())).unwrap();
-            let direct = crate::dlt::frontend::solve(&sub).unwrap();
+            let direct = pipeline::solve(&FeOptions::default(), &sub).unwrap();
             assert!(
                 (resp.makespan - direct.makespan).abs() < 1e-7 * (1.0 + direct.makespan),
                 "m={m}: {} vs {}",
@@ -373,6 +385,30 @@ mod tests {
                 s.makespan
             );
         }
+    }
+
+    #[test]
+    fn factorization_and_pricing_overrides_reach_diagnostics() {
+        // Acceptance: ForrestTomlin + Devex selectable per request and
+        // reflected in the response diagnostics, with the same optimum
+        // as the defaults.
+        use crate::lp::{Factorization, Pricing};
+        let mut session = Solver::new().build();
+        let default = session.solve(&SolveRequest::new(Family::Frontend, spec())).unwrap();
+        assert_eq!(default.diagnostics.factorization, Factorization::ProductFormEta);
+        assert_eq!(default.diagnostics.pricing, Pricing::Dantzig);
+        let mut req = SolveRequest::new(Family::Frontend, spec());
+        req.options.factorization = Some(Factorization::ForrestTomlin);
+        req.options.pricing = Some(Pricing::Devex);
+        let resp = Solver::new().build().solve(&req).unwrap();
+        assert_eq!(resp.diagnostics.factorization, Factorization::ForrestTomlin);
+        assert_eq!(resp.diagnostics.pricing, Pricing::Devex);
+        assert!(
+            (resp.makespan - default.makespan).abs() < 1e-7 * (1.0 + default.makespan),
+            "strategies changed the optimum: {} vs {}",
+            resp.makespan,
+            default.makespan
+        );
     }
 
     #[test]

@@ -16,6 +16,7 @@ use crate::dlt::concurrent::Mode;
 use crate::dlt::schedule::{Schedule, TimingModel};
 use crate::error::{Error, Result};
 use crate::lp::presolve::PresolveStats;
+use crate::lp::{Factorization, Pricing};
 use crate::model::SystemSpec;
 use crate::pipeline::{Backend, PdhgDiagnostics};
 
@@ -111,6 +112,12 @@ pub struct RequestOptions {
     pub backend: Option<Backend>,
     /// Presolve override.
     pub presolve: Option<bool>,
+    /// Basis-factorization override for the revised backend
+    /// (`product_form_eta` | `forrest_tomlin`).
+    pub factorization: Option<Factorization>,
+    /// Pricing-rule override for the revised backend
+    /// (`dantzig` | `devex` | `steepest_edge`).
+    pub pricing: Option<Pricing>,
     /// Simplex reduced-cost/pivot tolerance override.
     pub eps: Option<f64>,
     /// Simplex per-phase iteration cap override (`0` = auto).
@@ -138,6 +145,12 @@ impl RequestOptions {
         }
         if let Some(p) = self.presolve {
             kv.push(("presolve".into(), Json::Bool(p)));
+        }
+        if let Some(f) = self.factorization {
+            kv.push(("factorization".into(), Json::Str(f.as_str().into())));
+        }
+        if let Some(p) = self.pricing {
+            kv.push(("pricing".into(), Json::Str(p.as_str().into())));
         }
         if let Some(e) = self.eps {
             kv.push(("eps".into(), Json::Num(e)));
@@ -170,9 +183,11 @@ impl RequestOptions {
     /// unknown key is `Error::Config` — a misspelled override must
     /// fail loudly, not silently solve with the defaults.
     pub fn from_json(v: &Json) -> Result<RequestOptions> {
-        const KNOWN: [&str; 10] = [
+        const KNOWN: [&str; 12] = [
             "backend",
             "presolve",
+            "factorization",
+            "pricing",
             "eps",
             "max_iters",
             "mode",
@@ -199,6 +214,22 @@ impl RequestOptions {
         }
         if let Some(p) = v.get("presolve") {
             o.presolve = Some(p.as_bool()?);
+        }
+        if let Some(f) = v.get("factorization") {
+            let s = f.as_str()?;
+            o.factorization = Some(Factorization::parse(s).ok_or_else(|| {
+                Error::Config(format!(
+                    "unknown factorization `{s}` (expected product_form_eta|forrest_tomlin)"
+                ))
+            })?);
+        }
+        if let Some(p) = v.get("pricing") {
+            let s = p.as_str()?;
+            o.pricing = Some(Pricing::parse(s).ok_or_else(|| {
+                Error::Config(format!(
+                    "unknown pricing `{s}` (expected dantzig|devex|steepest_edge)"
+                ))
+            })?);
         }
         if let Some(e) = v.get("eps") {
             o.eps = Some(e.as_f64()?);
@@ -294,6 +325,19 @@ pub struct Diagnostics {
     pub dual_iterations: usize,
     /// Whether this solve started from a cached/projected warm basis.
     pub warm_start: bool,
+    /// Basis-factorization strategy the solve ran
+    /// (`product_form_eta` | `forrest_tomlin`).
+    pub factorization: Factorization,
+    /// Pricing rule the solve ran (`dantzig` | `devex` |
+    /// `steepest_edge`; the dense tableau always reports `dantzig`).
+    pub pricing: Pricing,
+    /// Full basis refactorizations the revised backend performed.
+    pub refactorizations: usize,
+    /// Peak update-file length (product-form etas / Forrest–Tomlin
+    /// spikes) between refactorizations.
+    pub update_len: usize,
+    /// Devex / steepest-edge reference-framework rebuilds.
+    pub weight_resets: usize,
     /// What presolve removed in front of the backend.
     pub presolve: PresolveStats,
     /// PDHG convergence details (`backend == pdhg` only).
@@ -361,6 +405,11 @@ impl SolveResponse {
             ("phase1_iterations".into(), Json::Num(d.phase1_iterations as f64)),
             ("dual_iterations".into(), Json::Num(d.dual_iterations as f64)),
             ("warm_start".into(), Json::Bool(d.warm_start)),
+            ("factorization".into(), Json::Str(d.factorization.as_str().into())),
+            ("pricing".into(), Json::Str(d.pricing.as_str().into())),
+            ("refactorizations".into(), Json::Num(d.refactorizations as f64)),
+            ("update_len".into(), Json::Num(d.update_len as f64)),
+            ("weight_resets".into(), Json::Num(d.weight_resets as f64)),
             (
                 "presolve".into(),
                 Json::Object(vec![
@@ -376,6 +425,10 @@ impl SolveResponse {
                     (
                         "vacuous_bounds_dropped".into(),
                         Json::Num(d.presolve.vacuous_bounds_dropped as f64),
+                    ),
+                    (
+                        "redundant_rows_dropped".into(),
+                        Json::Num(d.presolve.redundant_rows_dropped as f64),
                     ),
                 ]),
             ),
@@ -433,16 +486,26 @@ impl SolveResponse {
             }),
             None => None,
         };
+        let fact_s = d.req("factorization")?.as_str()?;
+        let pricing_s = d.req("pricing")?.as_str()?;
         let diagnostics = Diagnostics {
             iterations: d.req("iterations")?.as_usize()?,
             phase1_iterations: d.req("phase1_iterations")?.as_usize()?,
             dual_iterations: d.req("dual_iterations")?.as_usize()?,
             warm_start: d.req("warm_start")?.as_bool()?,
+            factorization: Factorization::parse(fact_s)
+                .ok_or_else(|| Error::Config(format!("unknown factorization `{fact_s}`")))?,
+            pricing: Pricing::parse(pricing_s)
+                .ok_or_else(|| Error::Config(format!("unknown pricing `{pricing_s}`")))?,
+            refactorizations: d.req("refactorizations")?.as_usize()?,
+            update_len: d.req("update_len")?.as_usize()?,
+            weight_resets: d.req("weight_resets")?.as_usize()?,
             presolve: PresolveStats {
                 fixed_vars: pres.req("fixed_vars")?.as_usize()?,
                 empty_rows_dropped: pres.req("empty_rows_dropped")?.as_usize()?,
                 duplicate_rows_dropped: pres.req("duplicate_rows_dropped")?.as_usize()?,
                 vacuous_bounds_dropped: pres.req("vacuous_bounds_dropped")?.as_usize()?,
+                redundant_rows_dropped: pres.req("redundant_rows_dropped")?.as_usize()?,
             },
             pdhg,
             solve_ns: d.req("solve_ns")?.as_f64()? as u64,
@@ -568,6 +631,8 @@ mod tests {
             options: RequestOptions {
                 backend: Some(Backend::Pdhg),
                 presolve: Some(false),
+                factorization: Some(Factorization::ForrestTomlin),
+                pricing: Some(Pricing::Devex),
                 eps: Some(1e-8),
                 mode: Some(Mode::Proportional),
                 pdhg_max_blocks: Some(1234),
@@ -598,6 +663,14 @@ mod tests {
             "spec": {"sources":[{"g":0.2}],"processors":[{"a":2}],"job":10},
             "options": {"backend": "gurobi"}}"#;
         assert!(matches!(SolveRequest::parse(bad_backend), Err(Error::Config(_))));
+        let bad_fact = r#"{"family": "frontend",
+            "spec": {"sources":[{"g":0.2}],"processors":[{"a":2}],"job":10},
+            "options": {"factorization": "cholesky"}}"#;
+        assert!(matches!(SolveRequest::parse(bad_fact), Err(Error::Config(_))));
+        let bad_pricing = r#"{"family": "frontend",
+            "spec": {"sources":[{"g":0.2}],"processors":[{"a":2}],"job":10},
+            "options": {"pricing": "random"}}"#;
+        assert!(matches!(SolveRequest::parse(bad_pricing), Err(Error::Config(_))));
     }
 
     #[test]

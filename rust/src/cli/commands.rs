@@ -11,6 +11,7 @@ use crate::cost::{advise, Advice, Budgets, TradeoffTable};
 use crate::dlt::schedule::{Schedule, TimingModel};
 use crate::dlt::{frontend, no_frontend, validate};
 use crate::error::{Error, Result};
+use crate::lp::{Factorization, Pricing, SimplexOptions};
 use crate::model::SystemSpec;
 use crate::sim::{simulate as sim_run, SimOptions};
 
@@ -29,7 +30,34 @@ fn model_of(a: &Args) -> Result<TimingModel> {
     }
 }
 
-fn solve_spec(spec: &SystemSpec, model: TimingModel, solver: &str) -> Result<Schedule> {
+/// Simplex strategy flags shared by `solve`, `sweep` and `batch`:
+/// `--factorization product_form_eta|forrest_tomlin` and
+/// `--pricing dantzig|devex|steepest_edge`.
+fn simplex_of(a: &Args) -> Result<SimplexOptions> {
+    let mut s = SimplexOptions::default();
+    if let Some(f) = a.get("factorization") {
+        s.factorization = Factorization::parse(f).ok_or_else(|| {
+            Error::Usage(format!(
+                "--factorization must be product_form_eta|forrest_tomlin, got `{f}`"
+            ))
+        })?;
+    }
+    if let Some(p) = a.get("pricing") {
+        s.pricing = Pricing::parse(p).ok_or_else(|| {
+            Error::Usage(format!(
+                "--pricing must be dantzig|devex|steepest_edge, got `{p}`"
+            ))
+        })?;
+    }
+    Ok(s)
+}
+
+fn solve_spec(
+    spec: &SystemSpec,
+    model: TimingModel,
+    solver: &str,
+    simplex: SimplexOptions,
+) -> Result<Schedule> {
     let backend = match solver {
         "simplex" => Backend::RevisedSimplex,
         "pdhg" => Backend::Pdhg,
@@ -51,7 +79,7 @@ fn solve_spec(spec: &SystemSpec, model: TimingModel, solver: &str) -> Result<Sch
             )))
         }
     };
-    let mut session = Solver::new().backend(backend).build();
+    let mut session = Solver::new().backend(backend).simplex(simplex).build();
     let resp = session
         .solve(&SolveRequest::new(Family::from(model), spec.clone()))
         .map_err(|e| e.into_error())?;
@@ -137,7 +165,7 @@ pub fn solve(a: &Args) -> Result<()> {
     let spec = load(a)?;
     let model = model_of(a)?;
     let solver = a.get_or("solver", "simplex");
-    let sched = solve_spec(&spec, model, &solver)?;
+    let sched = solve_spec(&spec, model, &solver, simplex_of(a)?)?;
     println!("model: {model:?}   solver: {solver}");
     println!("T_f = {:.6}", sched.makespan);
     print!("{}", sched.render_beta_table());
@@ -160,7 +188,7 @@ pub fn solve(a: &Args) -> Result<()> {
 pub fn simulate(a: &Args) -> Result<()> {
     let spec = load(a)?;
     let model = model_of(a)?;
-    let sched = solve_spec(&spec, model, &a.get_or("solver", "simplex"))?;
+    let sched = solve_spec(&spec, model, &a.get_or("solver", "simplex"), simplex_of(a)?)?;
     let opts = SimOptions {
         model,
         link_jitter: a.get_f64("jitter")?.unwrap_or(0.0),
@@ -182,7 +210,7 @@ pub fn simulate(a: &Args) -> Result<()> {
 pub fn cluster(a: &Args) -> Result<()> {
     let spec = load(a)?;
     let model = model_of(a)?;
-    let sched = solve_spec(&spec, model, "simplex")?;
+    let sched = solve_spec(&spec, model, "simplex", SimplexOptions::default())?;
     let compute = if a.has("real-compute") {
         let dir = a.get_or("artifacts", "artifacts");
         let a_vec = spec.a();
@@ -283,8 +311,12 @@ pub fn sweep_cmd(a: &Args) -> Result<()> {
     let spec = load(a)?;
     let model = model_of(a)?;
     let threads = a.get_usize("threads")?.unwrap_or(0);
-    let opts =
-        SweepOptions { threads, warm_start: !a.has("cold"), steal: a.has("steal") };
+    let opts = SweepOptions {
+        threads,
+        warm_start: !a.has("cold"),
+        steal: a.has("steal"),
+        simplex: simplex_of(a)?,
+    };
 
     let param = a.get_or("param", "job");
     let mut axes: Vec<Axis> = Vec::new();
@@ -427,7 +459,8 @@ pub fn batch(a: &Args) -> Result<()> {
         .collect();
     let good: Vec<SolveRequest> = parsed.iter().filter_map(|r| r.as_ref().ok().cloned()).collect();
 
-    let session = Solver::new().backend(backend).threads(threads).build();
+    let session =
+        Solver::new().backend(backend).threads(threads).simplex(simplex_of(a)?).build();
     let t0 = std::time::Instant::now();
     let results = session.solve_batch(&good);
     let wall = t0.elapsed();

@@ -3,7 +3,10 @@
 //!
 //! ```text
 //! dlt solve     --spec spec.json [--model fe|nfe] [--solver simplex|pdhg|pdhg-artifact]
+//!               [--factorization product_form_eta|forrest_tomlin]
+//!               [--pricing dantzig|devex|steepest_edge]
 //! dlt batch     [--requests FILE|-] [--backend revised_simplex|dense_tableau|pdhg]
+//!               [--factorization NAME] [--pricing NAME]
 //!               [--threads T] [--pretty]
 //! dlt simulate  --spec spec.json [--model fe|nfe] [--jitter 0.1] [--seed 7] [--trace]
 //! dlt cluster   --spec spec.json [--model fe|nfe] [--time-scale 0.002] [--real-compute]
@@ -67,6 +70,10 @@ COMMON FLAGS
   --spec FILE        system spec JSON (see config::spec)
   --model fe|nfe     timing model (default fe)
   --solver NAME      simplex | pdhg | pdhg-artifact (default simplex)
+  --factorization N  simplex basis-factorization strategy:
+                     product_form_eta (default) | forrest_tomlin
+  --pricing NAME     simplex pricing rule:
+                     dantzig (default) | devex | steepest_edge
   --csv-dir DIR      also write CSV output
   --exp NAME         experiment id (fig10..fig20; default: all)
 
@@ -76,6 +83,8 @@ BATCH FLAGS
                      revised_simplex | dense_tableau | pdhg
   --threads T        batch worker threads (default: one per core)
   --pretty           pretty-print the response array
+  (--factorization / --pricing set the session defaults; per-request
+   "options" override them)
 
 SWEEP FLAGS
   --param LIST       comma-separated axes, crossed into one grid:
@@ -127,6 +136,13 @@ mod tests {
         run(&argv(&format!("solve --spec {path}"))).unwrap();
         run(&argv(&format!("solve --spec {path} --model nfe"))).unwrap();
         run(&argv(&format!("solve --spec {path} --solver pdhg"))).unwrap();
+        run(&argv(&format!(
+            "solve --spec {path} --factorization forrest_tomlin --pricing devex"
+        )))
+        .unwrap();
+        run(&argv(&format!("solve --spec {path} --pricing steepest_edge --model nfe"))).unwrap();
+        assert!(run(&argv(&format!("solve --spec {path} --factorization qr"))).is_err());
+        assert!(run(&argv(&format!("solve --spec {path} --pricing greatest"))).is_err());
         run(&argv(&format!("simulate --spec {path} --model nfe --jitter 0.05"))).unwrap();
         run(&argv(&format!("tradeoff --spec {path} --budget-time 100"))).unwrap();
         run(&argv(&format!("speedup --spec {path} --sources 1,2"))).unwrap();
@@ -134,6 +150,10 @@ mod tests {
         run(&argv(&format!("sweep --spec {path} --param procs --cold --model nfe"))).unwrap();
         run(&argv(&format!(
             "sweep --spec {path} --param job,procs --points 3 --steal --threads 2"
+        )))
+        .unwrap();
+        run(&argv(&format!(
+            "sweep --spec {path} --points 4 --factorization forrest_tomlin --pricing devex"
         )))
         .unwrap();
         run(&argv(&format!(
@@ -164,12 +184,18 @@ mod tests {
                 "options": {{"proc_ready": [0.5, 1.0]}}}},
               {{"id": "pdhg-1","family": "frontend",    "spec": {spec},
                 "options": {{"backend": "pdhg"}}}},
+              {{"id": "ft-1",  "family": "frontend",    "spec": {spec},
+                "options": {{"factorization": "forrest_tomlin", "pricing": "devex"}}}},
               {{"family": "not_a_family", "spec": {spec}}}
             ]"#
         );
         std::fs::write(path, body).unwrap();
         run(&argv(&format!("batch --requests {path} --threads 2"))).unwrap();
         run(&argv(&format!("batch --requests {path} --pretty --backend dense_tableau"))).unwrap();
+        run(&argv(&format!(
+            "batch --requests {path} --factorization forrest_tomlin --pricing steepest_edge"
+        )))
+        .unwrap();
         // A missing file is an io error, a bad backend a usage error.
         assert!(run(&argv("batch --requests /tmp/does_not_exist_dlt.json")).is_err());
         assert!(run(&argv(&format!("batch --requests {path} --backend cplex"))).is_err());

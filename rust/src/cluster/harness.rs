@@ -264,8 +264,18 @@ fn precise_sleep(d: Duration) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dlt::{frontend, no_frontend};
+    use crate::dlt::frontend::FeOptions;
+    use crate::dlt::no_frontend::NfeOptions;
+    use crate::dlt::Schedule;
     use crate::model::SystemSpec;
+
+    fn fe_solve(spec: &SystemSpec) -> Schedule {
+        crate::pipeline::solve(&FeOptions::default(), spec).unwrap()
+    }
+
+    fn nfe_solve(spec: &SystemSpec) -> Schedule {
+        crate::pipeline::solve(&NfeOptions::default(), spec).unwrap()
+    }
 
     fn small_spec() -> SystemSpec {
         SystemSpec::builder()
@@ -280,7 +290,7 @@ mod tests {
     #[test]
     fn cluster_matches_nfe_prediction() {
         let spec = small_spec();
-        let sched = no_frontend::solve(&spec).unwrap();
+        let sched = nfe_solve(&spec);
         let cfg = ClusterConfig { time_scale: 0.002, compute: Compute::Modeled, ..Default::default() };
         let rep = run_cluster(&spec, &sched, &cfg).unwrap();
         assert!(
@@ -297,7 +307,7 @@ mod tests {
     #[test]
     fn cluster_matches_fe_prediction() {
         let spec = small_spec();
-        let sched = frontend::solve(&spec).unwrap();
+        let sched = fe_solve(&spec);
         // Front-end streaming sends 16 sub-chunks per fraction; keep
         // each sleep comfortably above scheduler granularity.
         let cfg = ClusterConfig { time_scale: 0.01, compute: Compute::Modeled, ..Default::default() };
@@ -316,7 +326,7 @@ mod tests {
     fn custom_compute_runs_in_processor_thread() {
         use std::sync::atomic::{AtomicUsize, Ordering};
         let spec = small_spec();
-        let sched = no_frontend::solve(&spec).unwrap();
+        let sched = nfe_solve(&spec);
         let calls = Arc::new(AtomicUsize::new(0));
         let calls2 = calls.clone();
         let cfg = ClusterConfig {
@@ -339,7 +349,7 @@ mod tests {
     #[test]
     fn shape_mismatch_rejected() {
         let spec = small_spec();
-        let sched = no_frontend::solve(&spec).unwrap();
+        let sched = nfe_solve(&spec);
         let other = spec.with_m_processors(1);
         assert!(run_cluster(&other, &sched, &ClusterConfig::default()).is_err());
     }

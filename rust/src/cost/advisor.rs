@@ -14,9 +14,7 @@
 
 use crate::api::{Family, Session, Solver, SolveRequest};
 use crate::cost::model::{gradient_series, schedule_cost};
-use crate::dlt::frontend;
 use crate::error::Result;
-use crate::lp::WarmCache;
 use crate::model::SystemSpec;
 
 /// One row of the trade-off sweep.
@@ -63,24 +61,6 @@ impl TradeoffTable {
             points.push(TradeoffPoint {
                 m,
                 tf: resp.makespan,
-                cost: schedule_cost(&sub, &sched),
-            });
-        }
-        let tf: Vec<f64> = points.iter().map(|p| p.tf).collect();
-        Ok(TradeoffTable { points, gradients: gradient_series(&tf) })
-    }
-
-    /// Sweep with an external [`WarmCache`]. Deprecated forward kept
-    /// for embedders that predate the [`crate::api`] facade — prefer
-    /// [`TradeoffTable::sweep_session`].
-    pub fn sweep_cached(spec: &SystemSpec, cache: &mut WarmCache) -> Result<TradeoffTable> {
-        let mut points = Vec::with_capacity(spec.m());
-        for m in 1..=spec.m() {
-            let sub = spec.with_m_processors(m);
-            let sched = frontend::solve_cached(&sub, &Default::default(), cache)?;
-            points.push(TradeoffPoint {
-                m,
-                tf: sched.makespan,
                 cost: schedule_cost(&sub, &sched),
             });
         }

@@ -32,8 +32,13 @@ pub fn gradient_series(tf: &[f64]) -> Vec<f64> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dlt::frontend;
+    use crate::dlt::frontend::FeOptions;
+    use crate::dlt::Schedule;
     use crate::model::SystemSpec;
+
+    fn fe_solve(spec: &SystemSpec) -> Schedule {
+        crate::pipeline::solve(&FeOptions::default(), spec).unwrap()
+    }
 
     fn priced_spec(m: usize) -> SystemSpec {
         let ac: Vec<(f64, f64)> =
@@ -50,7 +55,7 @@ mod tests {
     #[test]
     fn cost_is_positive_and_bounded() {
         let spec = priced_spec(5);
-        let s = frontend::solve(&spec).unwrap();
+        let s = fe_solve(&spec);
         let cost = schedule_cost(&spec, &s);
         assert!(cost > 0.0);
         // Upper bound: all load on the most expensive processor-time.
@@ -70,7 +75,7 @@ mod tests {
             .job(10.0)
             .build()
             .unwrap();
-        let s = frontend::solve(&spec).unwrap();
+        let s = fe_solve(&spec);
         assert_eq!(schedule_cost(&spec, &s), 0.0);
     }
 
@@ -90,7 +95,7 @@ mod tests {
         let mut prev = 0.0;
         for m in 1..=8 {
             let spec = priced_spec(m);
-            let s = frontend::solve(&spec).unwrap();
+            let s = fe_solve(&spec);
             let cost = schedule_cost(&spec, &s);
             assert!(cost >= prev - 1e-6, "m={m}: {cost} < {prev}");
             prev = cost;

@@ -27,9 +27,9 @@
 
 use crate::dlt::schedule::{Schedule, TimingModel};
 use crate::error::Result;
-use crate::lp::{Cmp, LpProblem, LpSolution, WarmCache};
+use crate::lp::{Cmp, LpProblem, LpSolution};
 use crate::model::SystemSpec;
-use crate::pipeline::{self, ScenarioModel};
+use crate::pipeline::ScenarioModel;
 
 /// Which fluid model to use.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -169,27 +169,6 @@ fn normalize(p: &mut LpProblem, spec: &SystemSpec) {
     p.add_labeled(&all, Cmp::Eq, spec.job, "normalize");
 }
 
-/// Solve with the default (staggered) model.
-pub fn solve(spec: &SystemSpec) -> Result<Schedule> {
-    solve_mode(spec, Mode::default())
-}
-
-/// Solve and reconstruct the timed schedule (through the unified
-/// pipeline).
-pub fn solve_mode(spec: &SystemSpec, mode: Mode) -> Result<Schedule> {
-    pipeline::solve(&ConcurrentOptions { mode }, spec)
-}
-
-/// Solve §8 through a [`WarmCache`] (see [`pipeline::solve_cached`]) —
-/// the entry point job-size and bandwidth sweeps warm-start from.
-pub fn solve_cached(
-    spec: &SystemSpec,
-    opts: &ConcurrentOptions,
-    cache: &mut WarmCache,
-) -> Result<Schedule> {
-    pipeline::solve_cached(opts, spec, cache)
-}
-
 /// Reconstruct the timed schedule from an LP solution of the §8 LPs.
 fn schedule_from_solution(spec: &SystemSpec, mode: Mode, sol: &LpSolution) -> Result<Schedule> {
     let n = spec.n();
@@ -253,8 +232,18 @@ fn schedule_from_solution(spec: &SystemSpec, mode: Mode, sol: &LpSolution) -> Re
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dlt::no_frontend;
+    use crate::dlt::no_frontend::NfeOptions;
     use crate::experiments::params;
+
+    // The per-family forwards are gone (PR 4): solve through the
+    // pipeline.
+    fn solve_mode(spec: &SystemSpec, mode: Mode) -> Result<Schedule> {
+        crate::pipeline::solve(&ConcurrentOptions { mode }, spec)
+    }
+
+    fn nfe_solve(spec: &SystemSpec) -> Result<Schedule> {
+        crate::pipeline::solve(&NfeOptions::default(), spec)
+    }
 
     #[test]
     fn staggered_dominates_sequential() {
@@ -263,7 +252,7 @@ mod tests {
         let spec = params::table3();
         for mprocs in [2usize, 5, 10, 20] {
             let sub = spec.with_m_processors(mprocs);
-            let seq = no_frontend::solve(&sub).unwrap();
+            let seq = nfe_solve(&sub).unwrap();
             let con = solve_mode(&sub, Mode::Staggered).unwrap();
             assert!(
                 con.makespan <= seq.makespan + 1e-6,
@@ -296,11 +285,11 @@ mod tests {
         // (everyone waits for the common drain) — the finding recorded
         // in EXPERIMENTS.md.
         let spec = params::table3();
-        let seq_small = no_frontend::solve(&spec.with_m_processors(1)).unwrap().makespan;
+        let seq_small = nfe_solve(&spec.with_m_processors(1)).unwrap().makespan;
         let prop_small =
             solve_mode(&spec.with_m_processors(1), Mode::Proportional).unwrap().makespan;
         assert!(prop_small < seq_small, "{prop_small} !< {seq_small}");
-        let seq_large = no_frontend::solve(&spec.with_m_processors(20)).unwrap().makespan;
+        let seq_large = nfe_solve(&spec.with_m_processors(20)).unwrap().makespan;
         let prop_large =
             solve_mode(&spec.with_m_processors(20), Mode::Proportional).unwrap().makespan;
         assert!(prop_large > seq_large, "{prop_large} !> {seq_large}");
@@ -361,7 +350,7 @@ mod tests {
         let spec = params::table3();
         let ratio = |n: usize| {
             let sub = spec.with_n_sources(n).with_m_processors(12);
-            let seq = no_frontend::solve(&sub).unwrap().makespan;
+            let seq = nfe_solve(&sub).unwrap().makespan;
             let con = solve_mode(&sub, Mode::Staggered).unwrap().makespan;
             seq / con
         };

@@ -18,9 +18,9 @@
 
 use crate::dlt::schedule::{Schedule, TimingModel};
 use crate::error::Result;
-use crate::lp::{Cmp, LpProblem, LpSolution, WarmCache};
+use crate::lp::{Cmp, LpProblem, LpSolution};
 use crate::model::SystemSpec;
-use crate::pipeline::{self, ScenarioModel};
+use crate::pipeline::ScenarioModel;
 
 /// Options for the §3.1 builder. Solver/backend tuning lives in
 /// [`crate::pipeline::PipelineOptions`] (or, one level up, in the
@@ -142,32 +142,6 @@ impl ScenarioModel for FeOptions {
     }
 }
 
-/// Solve §3.1 with default options.
-///
-/// Deprecated-in-spirit: new callers should go through the
-/// [`crate::api`] facade (`Family::Frontend`), which adds sessions,
-/// backend selection and batch solving; this forward is kept for
-/// in-tree tests and existing embedders.
-pub fn solve(spec: &SystemSpec) -> Result<Schedule> {
-    solve_opts(spec, &FeOptions::default())
-}
-
-/// Solve §3.1 with explicit options (through the unified pipeline).
-/// Prefer the [`crate::api`] facade for new code.
-pub fn solve_opts(spec: &SystemSpec, opts: &FeOptions) -> Result<Schedule> {
-    pipeline::solve(opts, spec)
-}
-
-/// Solve §3.1 through a [`WarmCache`] (see [`pipeline::solve_cached`]).
-/// Prefer [`crate::api::Session`] for new code.
-pub fn solve_cached(
-    spec: &SystemSpec,
-    opts: &FeOptions,
-    cache: &mut WarmCache,
-) -> Result<Schedule> {
-    pipeline::solve_cached(opts, spec, cache)
-}
-
 /// Reconstruct the full schedule from an LP solution of the §3.1 LP.
 pub(crate) fn schedule_from_solution(spec: &SystemSpec, sol: &LpSolution) -> Result<Schedule> {
     let n = spec.n();
@@ -257,6 +231,17 @@ pub fn reconstruct_comm_windows(spec: &SystemSpec, beta: &[f64]) -> (Vec<f64>, V
 mod tests {
     use super::*;
     use crate::util::float::approx_eq_eps;
+
+    // The per-family `solve`/`solve_opts` forwards are gone (PR 4):
+    // every solve goes through the pipeline (or, one level up, the
+    // `dlt::api` facade).
+    fn solve(spec: &SystemSpec) -> Result<Schedule> {
+        crate::pipeline::solve(&FeOptions::default(), spec)
+    }
+
+    fn solve_opts(spec: &SystemSpec, opts: &FeOptions) -> Result<Schedule> {
+        crate::pipeline::solve(opts, spec)
+    }
 
     fn table1_spec() -> SystemSpec {
         SystemSpec::builder()

@@ -145,7 +145,7 @@ pub fn schedule_fifo(spec: &SystemSpec, jobs: &[Job]) -> Result<PipelineReport> 
             s.release = serial_start + r;
         }
         serial_spec.job = job.size;
-        let serial = frontend::solve(&serial_spec)?;
+        let serial = pipeline::solve(&FeOptions::default(), &serial_spec)?;
         serial_clock = serial.makespan;
 
         records.push(JobRecord {
@@ -189,6 +189,10 @@ pub fn synth_jobs(count: usize, mean_gap: f64, size: f64, seed: u64) -> Vec<Job>
 mod tests {
     use super::*;
 
+    fn fe_solve(spec: &SystemSpec) -> Result<Schedule> {
+        pipeline::solve(&FeOptions::default(), spec)
+    }
+
     fn spec() -> SystemSpec {
         SystemSpec::builder()
             .source(0.1, 0.0)
@@ -204,7 +208,7 @@ mod tests {
         let s = spec();
         let jobs = [Job { arrival: 0.0, size: 50.0 }];
         let rep = schedule_fifo(&s, &jobs).unwrap();
-        let plain = frontend::solve(&s.with_job(50.0)).unwrap();
+        let plain = fe_solve(&s.with_job(50.0)).unwrap();
         assert!((rep.makespan - plain.makespan).abs() < 1e-6);
         assert_eq!(rep.records.len(), 1);
     }
@@ -242,7 +246,7 @@ mod tests {
     fn sparse_arrivals_do_not_interfere() {
         // Jobs far apart: each should finish like a lone job.
         let s = spec();
-        let lone = frontend::solve(&s.with_job(20.0)).unwrap().makespan;
+        let lone = fe_solve(&s.with_job(20.0)).unwrap().makespan;
         let gap = 10.0 * lone;
         let jobs: Vec<Job> =
             (0..3).map(|k| Job { arrival: gap * k as f64, size: 20.0 }).collect();

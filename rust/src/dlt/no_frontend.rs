@@ -17,9 +17,9 @@
 
 use crate::dlt::schedule::{Schedule, TimingModel};
 use crate::error::Result;
-use crate::lp::{Cmp, LpProblem, LpSolution, WarmCache};
+use crate::lp::{Cmp, LpProblem, LpSolution};
 use crate::model::SystemSpec;
-use crate::pipeline::{self, ScenarioModel};
+use crate::pipeline::ScenarioModel;
 
 /// Options for the §3.2 builder. Solver/backend tuning lives in
 /// [`crate::pipeline::PipelineOptions`] (or the [`crate::api`]
@@ -169,29 +169,6 @@ impl ScenarioModel for NfeOptions {
     }
 }
 
-/// Solve §3.2 with default options. Prefer the [`crate::api`] facade
-/// (`Family::NoFrontend`) for new code; this forward is kept for
-/// in-tree tests and existing embedders.
-pub fn solve(spec: &SystemSpec) -> Result<Schedule> {
-    solve_opts(spec, &NfeOptions::default())
-}
-
-/// Solve §3.2 with explicit options (through the unified pipeline).
-/// Prefer the [`crate::api`] facade for new code.
-pub fn solve_opts(spec: &SystemSpec, opts: &NfeOptions) -> Result<Schedule> {
-    pipeline::solve(opts, spec)
-}
-
-/// Solve §3.2 through a [`WarmCache`] (see [`pipeline::solve_cached`]).
-/// Prefer [`crate::api::Session`] for new code.
-pub fn solve_cached(
-    spec: &SystemSpec,
-    opts: &NfeOptions,
-    cache: &mut WarmCache,
-) -> Result<Schedule> {
-    pipeline::solve_cached(opts, spec, cache)
-}
-
 /// Reconstruct the full schedule from an LP solution of the §3.2 LP.
 fn schedule_from_solution(spec: &SystemSpec, sol: &LpSolution) -> Result<Schedule> {
     let n = spec.n();
@@ -237,6 +214,17 @@ fn schedule_from_solution(spec: &SystemSpec, sol: &LpSolution) -> Result<Schedul
 mod tests {
     use super::*;
     use crate::util::float::approx_eq_eps;
+
+    // The per-family `solve`/`solve_opts` forwards are gone (PR 4):
+    // every solve goes through the pipeline (or the `dlt::api`
+    // facade).
+    fn solve(spec: &SystemSpec) -> Result<Schedule> {
+        crate::pipeline::solve(&NfeOptions::default(), spec)
+    }
+
+    fn solve_opts(spec: &SystemSpec, opts: &NfeOptions) -> Result<Schedule> {
+        crate::pipeline::solve(opts, spec)
+    }
 
     fn table2_spec() -> SystemSpec {
         SystemSpec::builder()
@@ -362,7 +350,8 @@ mod tests {
         // only be <= the NFE optimum on the same spec.
         let spec = table2_spec();
         let nfe = solve(&spec).unwrap();
-        let fe = crate::dlt::frontend::solve(&spec).unwrap();
+        let fe =
+            crate::pipeline::solve(&crate::dlt::frontend::FeOptions::default(), &spec).unwrap();
         assert!(fe.makespan <= nfe.makespan + 1e-6, "fe {} > nfe {}", fe.makespan, nfe.makespan);
     }
 

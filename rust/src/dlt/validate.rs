@@ -196,8 +196,18 @@ pub fn validate(spec: &SystemSpec, sched: &Schedule) -> ValidationReport {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dlt::{frontend, no_frontend, single_source};
+    use crate::dlt::frontend::FeOptions;
+    use crate::dlt::no_frontend::NfeOptions;
+    use crate::dlt::{single_source, Schedule};
     use crate::model::SystemSpec;
+
+    fn fe_solve(spec: &SystemSpec) -> Schedule {
+        crate::pipeline::solve(&FeOptions::default(), spec).unwrap()
+    }
+
+    fn nfe_solve(spec: &SystemSpec) -> Schedule {
+        crate::pipeline::solve(&NfeOptions::default(), spec).unwrap()
+    }
 
     fn table1() -> SystemSpec {
         SystemSpec::builder()
@@ -222,7 +232,7 @@ mod tests {
     #[test]
     fn frontend_schedule_validates() {
         let spec = table1();
-        let s = frontend::solve(&spec).unwrap();
+        let s = fe_solve(&spec);
         let rep = validate(&spec, &s);
         assert!(rep.is_valid(), "violations: {:?}", rep.violations);
     }
@@ -230,7 +240,7 @@ mod tests {
     #[test]
     fn no_frontend_schedule_validates() {
         let spec = table2();
-        let s = no_frontend::solve(&spec).unwrap();
+        let s = nfe_solve(&spec);
         let rep = validate(&spec, &s);
         assert!(rep.is_valid(), "violations: {:?}", rep.violations);
         assert!(rep.makespan_slack.abs() < 1e-5, "slack {}", rep.makespan_slack);
@@ -252,7 +262,7 @@ mod tests {
     #[test]
     fn corrupted_schedule_is_caught() {
         let spec = table2();
-        let mut s = no_frontend::solve(&spec).unwrap();
+        let mut s = nfe_solve(&spec);
         s.beta[0] += 5.0; // break normalization & window length
         let rep = validate(&spec, &s);
         assert!(!rep.is_valid());
@@ -262,7 +272,7 @@ mod tests {
     #[test]
     fn overlapping_windows_are_caught() {
         let spec = table2();
-        let mut s = no_frontend::solve(&spec).unwrap();
+        let mut s = nfe_solve(&spec);
         // Force source 0's second window to start before the first ends.
         s.comm_start[1] = s.comm_start[0];
         s.comm_end[1] = s.comm_start[1] + s.beta[1] * 0.2;

@@ -1,17 +1,19 @@
 //! Generators for every figure in the paper's evaluation.
 
 use crate::cost::{advise, Advice, Budgets, TradeoffTable};
-use crate::dlt::{frontend, no_frontend};
+use crate::dlt::frontend::FeOptions;
+use crate::dlt::no_frontend::NfeOptions;
 use crate::error::Result;
 use crate::experiments::params;
 use crate::experiments::table::ExpTable;
 use crate::lp::WarmCache;
+use crate::pipeline;
 use crate::speedup;
 
 /// Fig. 10 — per-processor load split by source (Table 1, front-ends).
 pub fn fig10() -> Result<ExpTable> {
     let spec = params::table1();
-    let s = frontend::solve(&spec)?;
+    let s = pipeline::solve(&FeOptions::default(), &spec)?;
     let mut t = ExpTable::new(
         "fig10",
         "load per processor from each source (Table 1, with front-ends)",
@@ -28,7 +30,7 @@ pub fn fig10() -> Result<ExpTable> {
 /// Fig. 11 — per-processor load split by source (Table 2, no front-ends).
 pub fn fig11() -> Result<ExpTable> {
     let spec = params::table2();
-    let s = no_frontend::solve(&spec)?;
+    let s = pipeline::solve(&NfeOptions::default(), &spec)?;
     let mut t = ExpTable::new(
         "fig11",
         "load per processor from each source (Table 2, without front-ends)",
@@ -55,7 +57,9 @@ pub fn fig12() -> Result<ExpTable> {
         let mut row = vec![m as f64];
         for n in 1..=3usize {
             let sub = spec.with_n_sources(n).with_m_processors(m);
-            row.push(no_frontend::solve_cached(&sub, &Default::default(), &mut cache)?.makespan);
+            row.push(
+                pipeline::solve_cached(&NfeOptions::default(), &sub, &mut cache)?.makespan,
+            );
         }
         t.push_row(row);
     }
@@ -79,7 +83,7 @@ pub fn fig13() -> Result<ExpTable> {
         let mut row = vec![m as f64];
         for &job in params::FIG13_JOB_SIZES {
             let sub = spec.with_job(job).with_m_processors(m);
-            row.push(frontend::solve_cached(&sub, &Default::default(), &mut cache)?.makespan);
+            row.push(pipeline::solve_cached(&FeOptions::default(), &sub, &mut cache)?.makespan);
         }
         t.push_row(row);
     }

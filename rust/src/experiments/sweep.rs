@@ -36,7 +36,7 @@
 use crate::api::{Family, Session, Solver, SolveRequest};
 use crate::dlt::schedule::TimingModel;
 use crate::error::Result;
-use crate::lp::WarmCache;
+use crate::lp::{SimplexOptions, WarmCache};
 use crate::model::SystemSpec;
 use std::collections::VecDeque;
 use std::sync::Mutex;
@@ -74,11 +74,19 @@ pub struct SweepOptions {
     /// Schedule with work-stealing deques instead of contiguous chunks
     /// (better wall-clock on ragged grids; results are identical).
     pub steal: bool,
+    /// Simplex tuning (factorization / pricing strategies and
+    /// tolerances) for every per-worker session.
+    pub simplex: SimplexOptions,
 }
 
 impl Default for SweepOptions {
     fn default() -> Self {
-        SweepOptions { threads: 0, warm_start: true, steal: false }
+        SweepOptions {
+            threads: 0,
+            warm_start: true,
+            steal: false,
+            simplex: SimplexOptions::default(),
+        }
     }
 }
 
@@ -196,7 +204,8 @@ fn solve_scenario(session: &mut Session, sc: &Scenario) -> Result<SweepPoint> {
 /// with one [`Session`] per worker.
 pub fn run_scenarios(scenarios: &[Scenario], opts: &SweepOptions) -> Result<Vec<SweepPoint>> {
     let warm = opts.warm_start;
-    let init = move || Solver::new().warm_start(warm).build();
+    let simplex = opts.simplex.clone();
+    let init = move || Solver::new().warm_start(warm).simplex(simplex.clone()).build();
     let results = if opts.steal {
         parallel_map_steal(scenarios, opts.threads, init, solve_scenario)
     } else {
@@ -365,12 +374,12 @@ mod tests {
         let grid = job_grid(&spec, &jobs, TimingModel::FrontEnd);
         let serial = run_scenarios(
             &grid,
-            &SweepOptions { threads: 1, warm_start: true, steal: false },
+            &SweepOptions { threads: 1, warm_start: true, steal: false, ..SweepOptions::default() },
         )
         .unwrap();
         let par = run_scenarios(
             &grid,
-            &SweepOptions { threads: 4, warm_start: true, steal: false },
+            &SweepOptions { threads: 4, warm_start: true, steal: false, ..SweepOptions::default() },
         )
         .unwrap();
         assert_eq!(serial.len(), par.len());
@@ -396,12 +405,12 @@ mod tests {
         let grid = job_grid(&spec, &jobs, TimingModel::NoFrontEnd);
         let cold = run_scenarios(
             &grid,
-            &SweepOptions { threads: 1, warm_start: false, steal: false },
+            &SweepOptions { threads: 1, warm_start: false, steal: false, ..SweepOptions::default() },
         )
         .unwrap();
         let warm = run_scenarios(
             &grid,
-            &SweepOptions { threads: 1, warm_start: true, steal: false },
+            &SweepOptions { threads: 1, warm_start: true, steal: false, ..SweepOptions::default() },
         )
         .unwrap();
         let mut warm_total = 0usize;
@@ -449,7 +458,7 @@ mod tests {
             // Later releases can only delay the finish.
             let pts = run_scenarios(
                 &release_grid(&spec, &scales, model),
-                &SweepOptions { threads: 1, warm_start: true, steal: false },
+                &SweepOptions { threads: 1, warm_start: true, steal: false, ..SweepOptions::default() },
             )
             .unwrap();
             assert_eq!(pts.len(), scales.len());
@@ -471,14 +480,22 @@ mod tests {
         for model in [TimingModel::FrontEnd, TimingModel::NoFrontEnd] {
             let pts = run_scenarios(
                 &link_grid(&spec, &scales, model),
-                &SweepOptions { threads: 1, warm_start: true, steal: false },
+                &SweepOptions { threads: 1, warm_start: true, steal: false, ..SweepOptions::default() },
             )
             .unwrap();
             for (pt, &s) in pts.iter().zip(scales.iter()) {
                 let sub = spec.with_scaled_links(s);
                 let direct = match model {
-                    TimingModel::FrontEnd => crate::dlt::frontend::solve(&sub).unwrap(),
-                    TimingModel::NoFrontEnd => crate::dlt::no_frontend::solve(&sub).unwrap(),
+                    TimingModel::FrontEnd => crate::pipeline::solve(
+                        &crate::dlt::frontend::FeOptions::default(),
+                        &sub,
+                    )
+                    .unwrap(),
+                    TimingModel::NoFrontEnd => crate::pipeline::solve(
+                        &crate::dlt::no_frontend::NfeOptions::default(),
+                        &sub,
+                    )
+                    .unwrap(),
                 };
                 assert!(
                     (pt.makespan - direct.makespan).abs()
@@ -522,13 +539,13 @@ mod tests {
         );
         let serial = run_scenarios(
             &grid,
-            &SweepOptions { threads: 1, warm_start: true, steal: false },
+            &SweepOptions { threads: 1, warm_start: true, steal: false, ..SweepOptions::default() },
         )
         .unwrap();
         for threads in [2usize, 3, 8] {
             let stolen = run_scenarios(
                 &grid,
-                &SweepOptions { threads, warm_start: true, steal: true },
+                &SweepOptions { threads, warm_start: true, steal: true, ..SweepOptions::default() },
             )
             .unwrap();
             assert_eq!(serial.len(), stolen.len());

@@ -10,8 +10,11 @@
 //!   sparse-CSC linear algebra, reusable LU factors).
 //! - [`lp`] — a from-scratch simplex solver: sparse revised simplex
 //!   with basis warm starts by default, the dense two-phase tableau as
-//!   fallback; every scheduling problem in the paper is solved
-//!   through it.
+//!   fallback; its basis-factorization ([`lp::Factorization`]:
+//!   product-form eta or Forrest–Tomlin LU updates) and pricing
+//!   ([`lp::Pricing`]: Dantzig, devex, steepest edge) policies are
+//!   pluggable strategy layers selected per solve; every scheduling
+//!   problem in the paper is solved through it.
 //! - [`model`] — the system specification (sources `G_i`/`R_i`,
 //!   processors `A_j`/`C_j`, job `J`).
 //! - [`dlt`] — the paper's scheduling formulations: §2 single-source

@@ -2,12 +2,16 @@
 //!
 //! The paper solves every scheduling instance "by linear programming
 //! techniques"; this module is that solver. The default backend is a
-//! revised simplex over sparse column storage with LU basis
-//! factorization, eta updates and basis warm starts ([`revised`]);
-//! the original dense two-phase tableau remains available as a
-//! fallback/oracle ([`simplex::SolverBackend::DenseTableau`]). Both
-//! use Dantzig pricing with a Bland anti-cycling fallback, and both
-//! extract duals — no external LP dependency. Warm restarts whose
+//! revised simplex over sparse column storage with basis warm starts
+//! ([`revised`]); its two per-pivot policies are strategy layers —
+//! basis factorization ([`factorization`]: product-form eta file or
+//! Forrest–Tomlin LU updates) and pricing ([`pricing`]: Dantzig,
+//! devex, steepest edge) — selected through [`SimplexOptions`] and
+//! threaded end-to-end from the `dlt::api` wire options. The original
+//! dense two-phase tableau remains available as a fallback/oracle
+//! ([`simplex::SolverBackend::DenseTableau`]). Both backends keep a
+//! Bland anti-cycling fallback and extract duals — no external LP
+//! dependency. Warm restarts whose
 //! cached basis went primal-infeasible are repaired by a dual-simplex
 //! pass ([`revised`]), and [`presolve`] reduces problems (fixed
 //! variables, vacuous/duplicate/empty rows) with exact solution and
@@ -29,7 +33,9 @@
 //! assert!((s.objective - (-6.0)).abs() < 1e-9);
 //! ```
 
+pub mod factorization;
 pub mod presolve;
+pub mod pricing;
 pub mod problem;
 pub mod revised;
 pub mod simplex;
@@ -37,7 +43,9 @@ pub mod solution;
 pub mod standard;
 pub mod warm;
 
+pub use factorization::{BasisFactorization, Factorization};
 pub use presolve::{presolve, Presolved, PresolveStats};
+pub use pricing::{Pricing, PricingRule};
 pub use problem::{Cmp, Constraint, LpProblem};
 pub use revised::Basis;
 pub use simplex::{solve, solve_warm, solve_with, SimplexOptions, SolverBackend};

@@ -43,6 +43,9 @@ pub struct PresolveStats {
     pub duplicate_rows_dropped: usize,
     /// Singleton inequality rows implied by `x >= 0`.
     pub vacuous_bounds_dropped: usize,
+    /// Multi-variable rows implied by `x >= 0` plus the upper bounds
+    /// of the surviving singleton rows (bound propagation).
+    pub redundant_rows_dropped: usize,
     /// Variables fixed by singleton rows and substituted out.
     pub fixed_vars: usize,
 }
@@ -53,6 +56,7 @@ impl PresolveStats {
         self.empty_rows_dropped
             + self.duplicate_rows_dropped
             + self.vacuous_bounds_dropped
+            + self.redundant_rows_dropped
             + self.fixed_vars
     }
 }
@@ -245,6 +249,14 @@ pub fn presolve(p: &LpProblem) -> Result<Presolved> {
         stats.fixed_vars += new_fixes.len();
         fixed.extend(new_fixes);
 
+        // Bound propagation (ROADMAP bullet): finite upper bounds from
+        // the surviving singleton `<=` rows, tightened through the
+        // remaining rows, catch infeasibility before phase 1 and let
+        // rows implied by the bounds be dropped. Substitutions above
+        // can create new singleton bounds, so this runs inside the
+        // fixpoint loop.
+        changed |= propagate_bounds(&mut rows, nv, &mut stats, p)?;
+
         if !changed {
             break;
         }
@@ -278,6 +290,169 @@ pub fn presolve(p: &LpProblem) -> Result<Presolved> {
     }
 
     Ok(Presolved { problem: out, stats, row_map, fixed, orig_rows: p.num_constraints() })
+}
+
+/// One bound-propagation pass over the working rows.
+///
+/// Upper bounds come in two tiers:
+///
+/// - **singleton-derived** (`ub_single`): implied by `x ≥ 0` and the
+///   surviving singleton rows alone. Those rows are never dropped
+///   here, so any row redundant with respect to this box stays implied
+///   by the *remaining* problem — dropping it is exact, and its
+///   restored dual is the 0 every slack-capable row gets.
+/// - **propagated** (`ub`): tightened through multi-variable rows
+///   (`a_v x_v + rest ≤ rhs` with `a_v > 0` bounds `x_v` by the least
+///   the rest can contribute). Valid implications of the whole system,
+///   used only for the *infeasibility* checks — declaring the system
+///   infeasible from its own implications is sound regardless of which
+///   row a bound came from, whereas a drop must never be justified by
+///   a bound whose defining row could itself be dropped.
+///
+/// Returns whether any row was dropped; errors with
+/// [`Error::Infeasible`] when the activity range of a row cannot meet
+/// its rhs — the "catch infeasibility before phase 1" half of the
+/// ROADMAP bullet.
+fn propagate_bounds(
+    rows: &mut [WorkRow],
+    nv: usize,
+    stats: &mut PresolveStats,
+    p: &LpProblem,
+) -> Result<bool> {
+    let mut ub_single = vec![f64::INFINITY; nv];
+    for row in rows.iter().filter(|r| r.alive && r.coeffs.len() == 1) {
+        let (v, a) = row.coeffs[0];
+        let bound = match row.cmp {
+            // a x <= rhs with a > 0, and -|a| x >= rhs (both give a
+            // finite cap once combined with x >= 0).
+            Cmp::Le if a > 0.0 => row.rhs / a,
+            Cmp::Ge if a < 0.0 => row.rhs / a,
+            Cmp::Eq if a != 0.0 => row.rhs / a,
+            _ => continue,
+        };
+        if bound < ub_single[v] {
+            ub_single[v] = bound.max(0.0);
+        }
+    }
+
+    // Tighten through multi-variable rows to a (capped) fixpoint.
+    let mut ub = ub_single.clone();
+    for _pass in 0..8 {
+        let mut tightened = false;
+        for row in rows.iter().filter(|r| r.alive && r.coeffs.len() >= 2) {
+            // Normalize to `Σ (sense·a_u) x_u ≤ sense·rhs`.
+            let (sense, rhs) = match row.cmp {
+                Cmp::Le => (1.0, row.rhs),
+                Cmp::Ge => (-1.0, -row.rhs),
+                // Equality singletons fix variables in the main scan;
+                // deriving bounds from wide equalities risks using a
+                // row against itself, so they only get checked below.
+                Cmp::Eq => continue,
+            };
+            // Least the negative-coefficient terms can contribute.
+            let mut min_rest = 0.0;
+            let mut rest_finite = true;
+            for &(u, a0) in &row.coeffs {
+                let a = a0 * sense;
+                if a < 0.0 {
+                    if ub[u].is_finite() {
+                        min_rest += a * ub[u];
+                    } else {
+                        rest_finite = false;
+                    }
+                }
+            }
+            if !rest_finite {
+                continue;
+            }
+            for &(v, a0) in &row.coeffs {
+                let a = a0 * sense;
+                if a <= 0.0 {
+                    continue;
+                }
+                let bound = ((rhs - min_rest) / a).max(0.0);
+                if bound < ub[v] - TOL {
+                    ub[v] = bound;
+                    tightened = true;
+                }
+            }
+        }
+        if !tightened {
+            break;
+        }
+    }
+
+    // Activity-range checks on the multi-variable rows.
+    let mut changed = false;
+    for row in rows.iter_mut().filter(|r| r.alive && r.coeffs.len() >= 2) {
+        let mut min_act = 0.0;
+        let mut min_finite = true;
+        let mut max_act = 0.0;
+        let mut max_finite = true;
+        let mut min_single = 0.0;
+        let mut min_single_finite = true;
+        let mut max_single = 0.0;
+        let mut max_single_finite = true;
+        for &(u, a) in &row.coeffs {
+            if a > 0.0 {
+                if ub[u].is_finite() {
+                    max_act += a * ub[u];
+                } else {
+                    max_finite = false;
+                }
+                if ub_single[u].is_finite() {
+                    max_single += a * ub_single[u];
+                } else {
+                    max_single_finite = false;
+                }
+            } else {
+                if ub[u].is_finite() {
+                    min_act += a * ub[u];
+                } else {
+                    min_finite = false;
+                }
+                if ub_single[u].is_finite() {
+                    min_single += a * ub_single[u];
+                } else {
+                    min_single_finite = false;
+                }
+            }
+        }
+        let scale = 1.0 + row.rhs.abs();
+        let infeasible_reason = match row.cmp {
+            Cmp::Le if min_finite && min_act > row.rhs + TOL * scale => {
+                Some((min_act, ">="))
+            }
+            Cmp::Ge if max_finite && max_act < row.rhs - TOL * scale => {
+                Some((max_act, "<="))
+            }
+            Cmp::Eq if min_finite && min_act > row.rhs + TOL * scale => {
+                Some((min_act, ">="))
+            }
+            Cmp::Eq if max_finite && max_act < row.rhs - TOL * scale => {
+                Some((max_act, "<="))
+            }
+            _ => None,
+        };
+        if let Some((act, dir)) = infeasible_reason {
+            return Err(Error::Infeasible(format!(
+                "presolve: bound propagation proves row `{}` infeasible \
+                 (activity {dir} {act:.6} vs rhs {:.6})",
+                p.constraints()[row.orig].label, row.rhs
+            )));
+        }
+        let redundant = match row.cmp {
+            Cmp::Le => max_single_finite && max_single <= row.rhs + TOL,
+            Cmp::Ge => min_single_finite && min_single >= row.rhs - TOL,
+            Cmp::Eq => false,
+        };
+        if redundant {
+            row.alive = false;
+            stats.redundant_rows_dropped += 1;
+            changed = true;
+        }
+    }
+    Ok(changed)
 }
 
 impl Presolved {
@@ -350,6 +525,11 @@ impl Presolved {
             iterations: sol.iterations,
             phase1_iterations: sol.phase1_iterations,
             dual_iterations: sol.dual_iterations,
+            factorization: sol.factorization,
+            pricing: sol.pricing,
+            refactorizations: sol.refactorizations,
+            peak_update_len: sol.peak_update_len,
+            weight_resets: sol.weight_resets,
             duals,
             basis: sol.basis.clone(),
         }
@@ -500,6 +680,85 @@ mod tests {
         let full = pre.restore(&p, &sol);
         assert_eq!(full.x[0], 0.0);
         assert!((full.x[1] - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bound_propagation_detects_infeasible_cover() {
+        // x <= 2, y <= 3, x + y >= 6: the box caps the activity at 5,
+        // so presolve must prove infeasibility before phase 1 runs.
+        let mut p = LpProblem::new(2);
+        p.set_objective(&[1.0, 1.0]);
+        p.add_labeled(&[(0, 1.0)], Cmp::Le, 2.0, "cap_x");
+        p.add_labeled(&[(1, 1.0)], Cmp::Le, 3.0, "cap_y");
+        p.add_labeled(&[(0, 1.0), (1, 1.0)], Cmp::Ge, 6.0, "cover");
+        match presolve(&p) {
+            Err(crate::error::Error::Infeasible(msg)) => {
+                assert!(msg.contains("cover"), "{msg}");
+            }
+            other => panic!("expected infeasible, got {other:?}"),
+        }
+        // The raw solver agrees (parity of verdicts).
+        assert!(solve(&p).is_err());
+    }
+
+    #[test]
+    fn bound_propagation_drops_redundant_rows() {
+        // x <= 2 and y <= 3 make x + y <= 6 redundant; the defining
+        // singleton rows stay, so the optimum and duals are unchanged.
+        let mut p = LpProblem::new(2);
+        p.set_objective(&[-1.0, -1.0]);
+        p.add_labeled(&[(0, 1.0)], Cmp::Le, 2.0, "cap_x");
+        p.add_labeled(&[(1, 1.0)], Cmp::Le, 3.0, "cap_y");
+        p.add_labeled(&[(0, 1.0), (1, 1.0)], Cmp::Le, 6.0, "loose");
+        p.add_labeled(&[(0, 1.0), (1, 1.0)], Cmp::Ge, -1.0, "vacuous_pair");
+        let pre = presolve(&p).unwrap();
+        assert_eq!(pre.stats.redundant_rows_dropped, 2, "{:?}", pre.stats);
+        assert_eq!(pre.problem.num_constraints(), 2);
+        let sol = solve(&pre.problem).unwrap();
+        let full = pre.restore(&p, &sol);
+        assert!((full.objective - (-5.0)).abs() < 1e-9);
+        // Strong duality on the original rows (dropped rows take 0).
+        let y = full.duals.as_ref().unwrap();
+        let by = 2.0 * y[0] + 3.0 * y[1] + 6.0 * y[2] + (-1.0) * y[3];
+        assert!((by - full.objective).abs() < 1e-7, "b'y {by} vs {}", full.objective);
+        assert_eq!(y[2], 0.0);
+        assert_eq!(y[3], 0.0);
+    }
+
+    #[test]
+    fn propagated_bounds_reach_through_coupling_rows() {
+        // u <= 1 and x - u <= 0 imply x <= 1; with x + y >= 3 and
+        // y <= 1 the system is infeasible, but only *propagation*
+        // (not the singleton seeds alone) can see it.
+        let mut p = LpProblem::new(3); // u, x, y
+        p.set_objective(&[1.0, 1.0, 1.0]);
+        p.add_labeled(&[(0, 1.0)], Cmp::Le, 1.0, "cap_u");
+        p.add_labeled(&[(1, 1.0), (0, -1.0)], Cmp::Le, 0.0, "x_below_u");
+        p.add_labeled(&[(2, 1.0)], Cmp::Le, 1.0, "cap_y");
+        p.add_labeled(&[(1, 1.0), (2, 1.0)], Cmp::Ge, 3.0, "cover");
+        match presolve(&p) {
+            Err(crate::error::Error::Infeasible(msg)) => {
+                assert!(msg.contains("cover"), "{msg}");
+            }
+            other => panic!("expected infeasible, got {other:?}"),
+        }
+        assert!(solve(&p).is_err());
+    }
+
+    #[test]
+    fn bound_propagation_keeps_binding_rows() {
+        // x <= 4, y <= 4, x + y <= 6: the coupling row is NOT implied
+        // by the box (max activity 8 > 6) and must survive.
+        let mut p = LpProblem::new(2);
+        p.set_objective(&[-1.0, -1.0]);
+        p.add_constraint(&[(0, 1.0)], Cmp::Le, 4.0);
+        p.add_constraint(&[(1, 1.0)], Cmp::Le, 4.0);
+        p.add_constraint(&[(0, 1.0), (1, 1.0)], Cmp::Le, 6.0);
+        let pre = presolve(&p).unwrap();
+        assert_eq!(pre.stats.redundant_rows_dropped, 0);
+        assert_eq!(pre.problem.num_constraints(), 3);
+        let sol = solve(&pre.problem).unwrap();
+        assert!((sol.objective - (-6.0)).abs() < 1e-9);
     }
 
     #[test]

@@ -1,26 +1,32 @@
-//! Revised simplex over sparse column storage.
+//! Revised simplex over sparse column storage — the driver.
 //!
 //! Instead of carrying the full dense tableau (O(m·width) per pivot),
-//! the revised method keeps only the basis factorization and derives
+//! the revised method keeps only a basis factorization and derives
 //! everything per iteration from the *original* sparse columns:
 //!
 //! - **BTRAN** `y = B⁻ᵀ c_B`, then pricing as `d_j = c_j − y·A_j` — a
 //!   sparse dot per column, O(nnz(A)) per pass;
 //! - **FTRAN** `w = B⁻¹ A_q` for the ratio test;
-//! - a **product-form eta update** per pivot (one sparse column), with
-//!   a full LU refactorization every [`REFACTOR_EVERY`] pivots to
-//!   bound numerical drift — DLT basis matrices stay sparse under LU
-//!   ([`LuFactors`] stores its factors sparsely), so both triangular
-//!   solves are O(nnz) too.
+//! - one factorization **update** per pivot.
 //!
-//! Pricing is Dantzig with the same permanent Bland fallback and stall
-//! detection as the dense tableau. Phase 1 starts from the
-//! slack/artificial identity basis; [`solve_revised`] can instead
-//! **warm-start** from a previous optimal [`Basis`] of a structurally
-//! identical problem, skipping phase 1 entirely when that basis is
-//! still primal feasible — the common case across the paper's
-//! parameter sweeps, where consecutive scenarios differ only in rhs or
-//! objective data.
+//! The two per-pivot policies are strategy layers, selected through
+//! [`SimplexOptions`]:
+//!
+//! - **how `B⁻¹` is maintained** — [`super::factorization`]: the
+//!   product-form eta file (default, extracted legacy behavior) or
+//!   Forrest–Tomlin LU updating, which refactorizes far less often on
+//!   long pivot sequences;
+//! - **which column enters** — [`super::pricing`]: Dantzig (default),
+//!   devex, or projected steepest edge. The same permanent Bland
+//!   fallback and stall detection as the dense tableau guarantee
+//!   termination regardless of rule.
+//!
+//! Phase 1 starts from the slack/artificial identity basis;
+//! [`solve_revised`] can instead **warm-start** from a previous optimal
+//! [`Basis`] of a structurally identical problem, skipping phase 1
+//! entirely when that basis is still primal feasible — the common case
+//! across the paper's parameter sweeps, where consecutive scenarios
+//! differ only in rhs or objective data.
 //!
 //! When an rhs perturbation leaves the cached basis primal-*infeasible*
 //! but still dual-feasible (reduced costs are rhs-independent, so a
@@ -28,18 +34,20 @@
 //! **dual simplex** pass instead of discarding the basis: pick the most
 //! negative basic value as the leaving row, price the row `B⁻¹A` via a
 //! BTRAN of `e_r`, and enter the column minimizing the dual ratio
-//! `d_j / −α_j`. Primal feasibility is restored in a handful of pivots
-//! and phase 1 never runs — [`LpSolution::phase1_iterations`] stays 0.
+//! `d_j / −α_j` (ties broken toward the larger devex/steepest-edge
+//! weight when a weighted rule is active, so the repair pass shares the
+//! primal loops' pricing state). Primal feasibility is restored in a
+//! handful of pivots and phase 1 never runs —
+//! [`LpSolution::phase1_iterations`] stays 0.
 
+use super::factorization::BasisFactorization;
+use super::pricing::{PivotContext, PricingRule};
 use super::problem::LpProblem;
 use super::simplex::SimplexOptions;
 use super::solution::LpSolution;
 use super::standard::{AuxKind, StandardForm};
 use crate::error::{Error, Result};
-use crate::linalg::{LuFactors, Matrix};
-
-/// Refactorize after this many eta updates.
-const REFACTOR_EVERY: usize = 48;
+use crate::linalg::Matrix;
 
 /// A simplex basis: for each constraint row, the column (structural or
 /// auxiliary, in [`StandardForm`] numbering) basic in that row.
@@ -117,14 +125,6 @@ enum Phase {
     Two,
 }
 
-/// One product-form eta: the pivot column `w = B_prev⁻¹ A_q` recorded
-/// at pivot row `r` (entries exclude row `r`, whose value is `wr`).
-struct Eta {
-    r: usize,
-    wr: f64,
-    entries: Vec<(usize, f64)>,
-}
-
 struct Revised<'a> {
     sf: &'a StandardForm,
     m: usize,
@@ -135,8 +135,10 @@ struct Revised<'a> {
     in_basis: Vec<bool>,
     /// Current basic-variable values `x_B` per row.
     xb: Vec<f64>,
-    lu: LuFactors,
-    etas: Vec<Eta>,
+    /// Basis-factorization strategy (`B⁻¹` maintenance).
+    fact: Box<dyn BasisFactorization>,
+    /// Pricing strategy (entering-column choice + weights).
+    pricing: Box<dyn PricingRule>,
     eps: f64,
     feas_eps: f64,
     max_iters: usize,
@@ -144,16 +146,29 @@ struct Revised<'a> {
     iterations: usize,
     phase1_iters: usize,
     dual_iters: usize,
-    // Scratch buffers (all length m), reused across iterations.
+    /// Full refactorizations performed (periodic cadence, verdict
+    /// re-checks, and numerical-breakdown recoveries; the initial
+    /// factor of a warm basis is not counted).
+    refactorizations: usize,
+    /// Peak update-file length observed (etas / FT spikes).
+    peak_update_len: usize,
+    // Scratch buffers (length m unless noted), reused across
+    // iterations.
     col_buf: Vec<f64>,
     w: Vec<f64>,
     y: Vec<f64>,
-    u: Vec<f64>,
-    t: Vec<f64>,
     cb: Vec<f64>,
     /// Dual-simplex pivot-row vector `B⁻ᵀ e_r` (kept separate from `y`
     /// because one dual iteration needs both the row and the duals).
     rho: Vec<f64>,
+    /// `B⁻ᵀ w` for the steepest-edge reference recurrence.
+    vref: Vec<f64>,
+    /// Reduced costs per column (length ncols).
+    d: Vec<f64>,
+    /// Pivot row `α_r` per column (length ncols; weighted rules only).
+    alpha_r: Vec<f64>,
+    /// `A_j·vref` per column (length ncols; steepest edge only).
+    adv: Vec<f64>,
 }
 
 impl<'a> Revised<'a> {
@@ -162,6 +177,9 @@ impl<'a> Revised<'a> {
         let ncols = sf.a.cols();
         let max_iters =
             if opts.max_iters == 0 { 200 * (m + ncols + 1) } else { opts.max_iters };
+        let fact = opts.factorization.build(m);
+        let mut pricing = opts.pricing.build();
+        pricing.reset(ncols);
         Revised {
             sf,
             m,
@@ -169,8 +187,8 @@ impl<'a> Revised<'a> {
             basis: vec![usize::MAX; m],
             in_basis: vec![false; ncols],
             xb: vec![0.0; m],
-            lu: LuFactors::identity(m),
-            etas: Vec::new(),
+            fact,
+            pricing,
             eps: opts.eps,
             feas_eps: opts.feas_eps,
             max_iters,
@@ -178,13 +196,17 @@ impl<'a> Revised<'a> {
             iterations: 0,
             phase1_iters: 0,
             dual_iters: 0,
+            refactorizations: 0,
+            peak_update_len: 0,
             col_buf: vec![0.0; m],
             w: vec![0.0; m],
             y: vec![0.0; m],
-            u: vec![0.0; m],
-            t: vec![0.0; m],
             cb: vec![0.0; m],
             rho: vec![0.0; m],
+            vref: vec![0.0; m],
+            d: vec![0.0; ncols],
+            alpha_r: vec![0.0; ncols],
+            adv: vec![0.0; ncols],
         }
     }
 
@@ -210,8 +232,7 @@ impl<'a> Revised<'a> {
             }
         }
         self.xb.copy_from_slice(&self.sf.b);
-        self.lu = LuFactors::identity(self.m);
-        self.etas.clear();
+        self.fact.reset_identity();
     }
 
     /// Adopt a previous basis when it factorizes. Primal-infeasible
@@ -228,10 +249,11 @@ impl<'a> Revised<'a> {
             return WarmStart::Unusable;
         }
         let b = self.basis_matrix(&warm.cols);
-        let Ok(lu) = LuFactors::factor(&b) else {
+        if self.fact.refactorize(&b).is_err() {
+            self.fact.reset_identity();
             return WarmStart::Unusable;
-        };
-        lu.solve_into(&self.sf.b, &mut self.xb);
+        }
+        self.fact.ftran(&self.sf.b, &mut self.xb);
         let feasible = self.xb.iter().all(|&v| v >= -self.feas_eps);
         for v in self.xb.iter_mut() {
             if *v < 0.0 && *v > -self.feas_eps {
@@ -243,8 +265,6 @@ impl<'a> Revised<'a> {
         for &c in &warm.cols {
             self.in_basis[c] = true;
         }
-        self.lu = lu;
-        self.etas.clear();
         if feasible {
             WarmStart::Feasible
         } else {
@@ -260,6 +280,7 @@ impl<'a> Revised<'a> {
     /// fallback (dual-infeasible start, stall, or an unrepairable row —
     /// the cold phase 1 then gives the authoritative verdict).
     fn dual_simplex(&mut self) -> Result<bool> {
+        self.pricing.reset(self.ncols);
         // Dual feasibility of the phase-2 costs at the warm basis.
         for r in 0..self.m {
             self.cb[r] = self.cost_basic(Phase::Two, r);
@@ -313,28 +334,42 @@ impl<'a> Revised<'a> {
             self.btran();
 
             // Entering column: among alpha_j = rho·A_j < 0, minimize
-            // d_j / -alpha_j (ties to the lowest index, which keeps the
-            // pass deterministic).
+            // d_j / -alpha_j. Ties go to the lowest index under
+            // Dantzig (deterministic legacy behavior); a weighted rule
+            // instead prefers the candidate with the larger
+            // alpha²/gamma — the dual steepest-edge tie-break, sharing
+            // the primal weights.
+            let uses_weights = self.pricing.uses_weights();
             let mut enter: Option<usize> = None;
             let mut best_ratio = f64::INFINITY;
+            let mut best_score = 0.0;
             for j in 0..self.ncols {
                 if self.in_basis[j] {
                     continue;
                 }
                 let alpha = self.sf.a.col_dot(j, &self.rho);
+                self.alpha_r[j] = alpha;
                 if alpha < -self.eps {
                     let d =
                         (self.cost_col(Phase::Two, j) - self.sf.a.col_dot(j, &self.y)).max(0.0);
                     let ratio = d / -alpha;
-                    if ratio < best_ratio - 1e-12 {
-                        best_ratio = ratio;
+                    let score = alpha * alpha / self.pricing.weight(j);
+                    let better = if ratio < best_ratio - 1e-12 {
+                        true
+                    } else {
+                        uses_weights && ratio < best_ratio + 1e-12 && score > best_score
+                    };
+                    if better {
+                        best_ratio = best_ratio.min(ratio);
+                        best_score = score;
                         enter = Some(j);
                     }
                 }
             }
             let Some(q) = enter else {
-                if !self.etas.is_empty() {
-                    // Rule out eta drift before giving up on the row.
+                if self.fact.update_len() > 0 {
+                    // Rule out update-file drift before giving up on
+                    // the row.
                     self.refactorize()?;
                     continue;
                 }
@@ -347,15 +382,18 @@ impl<'a> Revised<'a> {
             self.ftran();
             if self.w[r] > -self.eps {
                 // FTRAN disagrees with the BTRAN row (numerical drift).
-                if !self.etas.is_empty() {
+                if self.fact.update_len() > 0 {
                     self.refactorize()?;
                     continue;
                 }
                 return Ok(false);
             }
-            self.pivot_dual(q, r);
+            self.prepare_reference_ftran();
+            let leaving = self.basis[r];
+            self.pivot_dual(q, r)?;
+            self.apply_weight_update(q, r, leaving);
 
-            if self.etas.len() >= REFACTOR_EVERY {
+            if self.fact.should_refactorize() {
                 self.refactorize()?;
             }
         }
@@ -377,14 +415,15 @@ impl<'a> Revised<'a> {
         b
     }
 
-    /// Rebuild the LU from the current basis, drop the eta file, and
-    /// recompute `x_B` at full accuracy.
+    /// Rebuild the factorization from the current basis, drop the
+    /// update file, and recompute `x_B` at full accuracy.
     fn refactorize(&mut self) -> Result<()> {
         let b = self.basis_matrix(&self.basis);
-        self.lu = LuFactors::factor(&b)
+        self.fact
+            .refactorize(&b)
             .map_err(|e| Error::Numerical(format!("basis refactorization failed: {e}")))?;
-        self.etas.clear();
-        self.lu.solve_into(&self.sf.b, &mut self.xb);
+        self.refactorizations += 1;
+        self.fact.ftran(&self.sf.b, &mut self.xb);
         for v in self.xb.iter_mut() {
             if *v < 0.0 && *v > -self.feas_eps {
                 *v = 0.0;
@@ -395,31 +434,12 @@ impl<'a> Revised<'a> {
 
     /// FTRAN: `self.w = B⁻¹ v` where `v` is in `self.col_buf`.
     fn ftran(&mut self) {
-        self.lu.solve_into(&self.col_buf, &mut self.w);
-        let w = &mut self.w;
-        for eta in &self.etas {
-            let ur = w[eta.r] / eta.wr;
-            if ur != 0.0 {
-                for &(i, wi) in &eta.entries {
-                    w[i] -= wi * ur;
-                }
-            }
-            w[eta.r] = ur;
-        }
+        self.fact.ftran(&self.col_buf, &mut self.w);
     }
 
     /// BTRAN: `self.y = B⁻ᵀ v` where `v` is in `self.cb`.
     fn btran(&mut self) {
-        self.u.copy_from_slice(&self.cb);
-        let u = &mut self.u;
-        for eta in self.etas.iter().rev() {
-            let mut acc = u[eta.r];
-            for &(i, wi) in &eta.entries {
-                acc -= wi * u[i];
-            }
-            u[eta.r] = acc / eta.wr;
-        }
-        self.lu.solve_transpose_into(&self.u, &mut self.t, &mut self.y);
+        self.fact.btran(&self.cb, &mut self.y);
     }
 
     #[inline]
@@ -455,36 +475,36 @@ impl<'a> Revised<'a> {
     /// Primal pivot: column `q` enters at row `r`, using the FTRAN
     /// result in `self.w`. The step length clamps tiny negative basic
     /// values to zero (ratio-test convention).
-    fn pivot(&mut self, q: usize, r: usize) {
+    fn pivot(&mut self, q: usize, r: usize) -> Result<()> {
         let theta = self.xb[r].max(0.0) / self.w[r];
-        self.pivot_at(q, r, theta);
+        self.pivot_at(q, r, theta)
     }
 
     /// Dual pivot: the leaving row's basic value is *negative* and the
     /// pivot element `w[r]` is negative too, so the unclamped step
     /// `x_B[r] / w[r]` is positive and the entering variable comes in
     /// at a non-negative value.
-    fn pivot_dual(&mut self, q: usize, r: usize) {
+    fn pivot_dual(&mut self, q: usize, r: usize) -> Result<()> {
         let theta = self.xb[r] / self.w[r];
-        self.pivot_at(q, r, theta);
+        self.pivot_at(q, r, theta)
     }
 
     /// Shared pivot body: column `q` enters at row `r` with step
-    /// `theta`, using the FTRAN result in `self.w`. Records the eta and
-    /// updates `x_B` and the basis maps.
-    fn pivot_at(&mut self, q: usize, r: usize, theta: f64) {
-        let wr = self.w[r];
-        debug_assert!(wr.abs() > 1e-14);
-        let mut entries = Vec::new();
-        for i in 0..self.m {
-            let wi = self.w[i];
-            if i == r || wi == 0.0 {
-                continue;
-            }
-            if wi.abs() > 1e-12 {
-                entries.push((i, wi));
-            }
-            if theta != 0.0 {
+    /// `theta`, using the FTRAN result in `self.w`. Updates `x_B` and
+    /// the basis maps, then records the pivot with the factorization
+    /// strategy; an update breakdown triggers an immediate
+    /// refactorization from the (new) basis.
+    fn pivot_at(&mut self, q: usize, r: usize, theta: f64) -> Result<()> {
+        debug_assert!(self.w[r].abs() > 1e-14);
+        if theta != 0.0 {
+            for i in 0..self.m {
+                if i == r {
+                    continue;
+                }
+                let wi = self.w[i];
+                if wi == 0.0 {
+                    continue;
+                }
                 let v = self.xb[i] - theta * wi;
                 self.xb[i] = if v < 0.0 && v > -self.feas_eps { 0.0 } else { v };
             }
@@ -496,17 +516,77 @@ impl<'a> Revised<'a> {
         }
         self.basis[r] = q;
         self.in_basis[q] = true;
-        self.etas.push(Eta { r, wr, entries });
+        if self.fact.update(r, &self.w).is_err() {
+            // Numerical breakdown inside the update: rebuild from the
+            // already-updated basis at full accuracy.
+            self.refactorize()?;
+        }
+        self.peak_update_len = self.peak_update_len.max(self.fact.update_len());
+        Ok(())
+    }
+
+    /// Pre-pivot quantities a weighted pricing rule needs: the pivot
+    /// row `alpha_r = e_rᵀB⁻¹A` (one BTRAN of `e_r` plus a column
+    /// pass) and, for steepest edge, `A_j·v` with `v = B⁻ᵀw`.
+    fn prepare_weight_update(&mut self, r: usize) {
+        if !self.pricing.needs_pivot_row() {
+            return;
+        }
+        self.cb.iter_mut().for_each(|v| *v = 0.0);
+        self.cb[r] = 1.0;
+        self.btran();
+        self.rho.copy_from_slice(&self.y);
+        for j in 0..self.ncols {
+            self.alpha_r[j] =
+                if self.in_basis[j] { 0.0 } else { self.sf.a.col_dot(j, &self.rho) };
+        }
+        self.prepare_reference_ftran();
+    }
+
+    /// The steepest-edge half of [`Revised::prepare_weight_update`]
+    /// (also used by the dual loop, which has `alpha_r` already).
+    fn prepare_reference_ftran(&mut self) {
+        if !self.pricing.needs_reference_ftran() {
+            return;
+        }
+        self.fact.btran(&self.w, &mut self.vref);
+        for j in 0..self.ncols {
+            self.adv[j] = if self.in_basis[j] { 0.0 } else { self.sf.a.col_dot(j, &self.vref) };
+        }
+    }
+
+    /// Hand the pivot to the pricing rule (post-pivot: the basis maps
+    /// already reflect `q` basic / `leaving` nonbasic).
+    fn apply_weight_update(&mut self, q: usize, r: usize, leaving: usize) {
+        if !self.pricing.needs_pivot_row() {
+            return;
+        }
+        let alpha_rq = self.w[r];
+        if alpha_rq.abs() < 1e-12 {
+            return;
+        }
+        let w_norm2: f64 = self.w.iter().map(|v| v * v).sum();
+        self.pricing.update(&PivotContext {
+            q,
+            r,
+            leaving: if leaving < self.ncols { Some(leaving) } else { None },
+            alpha_rq,
+            w_norm2,
+            alpha_r: &self.alpha_r,
+            a_dot_v: &self.adv,
+            in_basis: &self.in_basis,
+        });
     }
 
     /// Simplex iterations for one phase's cost vector. Artificial
     /// columns never (re-)enter; on an optimality or unboundedness
-    /// verdict reached through a non-empty eta file, the basis is
+    /// verdict reached through a non-empty update file, the basis is
     /// refactorized first and the verdict re-checked at full accuracy.
     fn run(&mut self, phase: Phase) -> Result<()> {
         let mut stall = 0usize;
         let mut bland = false;
         let mut last_obj = f64::INFINITY;
+        self.pricing.reset(self.ncols);
 
         loop {
             self.iterations += 1;
@@ -534,21 +614,18 @@ impl<'a> Revised<'a> {
                     }
                 }
             } else {
-                let mut best = -self.eps;
                 for j in 0..self.ncols {
-                    if self.in_basis[j] {
-                        continue;
-                    }
-                    let d = self.cost_col(phase, j) - self.sf.a.col_dot(j, &self.y);
-                    if d < best {
-                        best = d;
-                        enter = Some(j);
-                    }
+                    self.d[j] = if self.in_basis[j] {
+                        0.0
+                    } else {
+                        self.cost_col(phase, j) - self.sf.a.col_dot(j, &self.y)
+                    };
                 }
+                enter = self.pricing.select_entering(&self.d, &self.in_basis, self.eps);
             }
             let Some(q) = enter else {
-                if !self.etas.is_empty() {
-                    // Rule out eta-accumulated drift before declaring
+                if self.fact.update_len() > 0 {
+                    // Rule out update-file drift before declaring
                     // optimality.
                     self.refactorize()?;
                     continue;
@@ -581,14 +658,23 @@ impl<'a> Revised<'a> {
                 }
             }
             let Some(r) = leave else {
-                if !self.etas.is_empty() {
+                if self.fact.update_len() > 0 {
                     self.refactorize()?;
                     continue;
                 }
                 return Err(Error::Unbounded(format!("column {q} has no positive entries")));
             };
 
-            self.pivot(q, r);
+            // Once Bland's rule is permanent the weights are never read
+            // again — skip their (BTRAN + column-pass) maintenance.
+            if !bland {
+                self.prepare_weight_update(r);
+            }
+            let leaving = self.basis[r];
+            self.pivot(q, r)?;
+            if !bland {
+                self.apply_weight_update(q, r, leaving);
+            }
 
             // Degeneracy detection -> switch to Bland permanently.
             let obj = self.objective(phase);
@@ -602,7 +688,7 @@ impl<'a> Revised<'a> {
                 }
             }
 
-            if self.etas.len() >= REFACTOR_EVERY {
+            if self.fact.should_refactorize() {
                 self.refactorize()?;
             }
         }
@@ -632,7 +718,7 @@ impl<'a> Revised<'a> {
         if self.basis.iter().all(|&b| b < self.ncols) {
             return Ok(());
         }
-        // Work at full accuracy: the eta file is about to be probed
+        // Work at full accuracy: the update file is about to be probed
         // row-by-row.
         self.refactorize()?;
         for r in 0..self.m {
@@ -659,8 +745,8 @@ impl<'a> Revised<'a> {
                 if self.w[r].abs() > self.eps {
                     // Degenerate pivot (theta ~ 0): swaps the basis
                     // without moving the point.
-                    self.pivot(q, r);
-                    if self.etas.len() >= REFACTOR_EVERY {
+                    self.pivot(q, r)?;
+                    if self.fact.should_refactorize() {
                         self.refactorize()?;
                     }
                 }
@@ -707,6 +793,11 @@ impl<'a> Revised<'a> {
             iterations: self.iterations,
             phase1_iterations: self.phase1_iters,
             dual_iterations: self.dual_iters,
+            factorization: opts.factorization,
+            pricing: opts.pricing,
+            refactorizations: self.refactorizations,
+            peak_update_len: self.peak_update_len,
+            weight_resets: self.pricing.weight_resets(),
             duals,
             basis: Some(basis),
         })
@@ -730,6 +821,8 @@ impl<'a> Revised<'a> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::lp::factorization::Factorization;
+    use crate::lp::pricing::Pricing;
     use crate::lp::problem::{Cmp, LpProblem};
     use crate::lp::simplex::{solve_warm, SolverBackend};
 
@@ -751,6 +844,18 @@ mod tests {
         p
     }
 
+    /// Every factorization × pricing combination (used by several
+    /// tests below to sweep the strategy grid).
+    fn combos() -> Vec<SimplexOptions> {
+        let mut out = Vec::new();
+        for f in [Factorization::ProductFormEta, Factorization::ForrestTomlin] {
+            for pr in [Pricing::Dantzig, Pricing::Devex, Pricing::SteepestEdge] {
+                out.push(SimplexOptions { factorization: f, pricing: pr, ..opts() });
+            }
+        }
+        out
+    }
+
     #[test]
     fn textbook_optimum_and_basis() {
         let p = textbook();
@@ -761,6 +866,17 @@ mod tests {
         let b = s.basis.as_ref().unwrap();
         assert!(b.is_complete());
         assert_eq!(b.cols.len(), 3);
+    }
+
+    #[test]
+    fn every_strategy_combo_solves_textbook() {
+        let p = textbook();
+        for o in combos() {
+            let s = solve_revised(&p, &o, None).unwrap();
+            assert_close(s.objective, -36.0);
+            assert_eq!(s.factorization, o.factorization);
+            assert_eq!(s.pricing, o.pricing);
+        }
     }
 
     #[test]
@@ -791,20 +907,33 @@ mod tests {
         // 10 makes that basis primal-infeasible (solving B x_B = b
         // forces x < 0) while the reduced costs — which do not depend
         // on b — stay dual feasible, so the warm re-solve must complete
-        // through the dual simplex without a phase-1 restart.
+        // through the dual simplex without a phase-1 restart. Checked
+        // across the full strategy grid: the repair pass shares both
+        // layers.
         let p = textbook();
-        let cold = solve_revised(&p, &opts(), None).unwrap();
         let mut p2 = LpProblem::new(2);
         p2.set_objective(&[-3.0, -5.0]);
         p2.add_constraint(&[(0, 1.0)], Cmp::Le, 4.0);
         p2.add_constraint(&[(1, 2.0)], Cmp::Le, 12.0);
         p2.add_constraint(&[(0, 3.0), (1, 2.0)], Cmp::Le, 10.0);
-        let cold2 = solve_revised(&p2, &opts(), None).unwrap();
-        let warm2 = solve_revised(&p2, &opts(), cold.basis.as_ref()).unwrap();
-        assert_close(warm2.objective, cold2.objective);
-        assert_eq!(warm2.phase1_iterations, 0, "dual repair must not restart phase 1");
-        assert!(warm2.dual_iterations > 0, "expected the dual-simplex path to run");
-        assert!(p2.check_feasible(&warm2.x, 1e-7).is_none());
+        for o in combos() {
+            let cold = solve_revised(&p, &o, None).unwrap();
+            let cold2 = solve_revised(&p2, &o, None).unwrap();
+            let warm2 = solve_revised(&p2, &o, cold.basis.as_ref()).unwrap();
+            assert_close(warm2.objective, cold2.objective);
+            assert_eq!(
+                warm2.phase1_iterations, 0,
+                "{:?}/{:?}: dual repair must not restart phase 1",
+                o.factorization, o.pricing
+            );
+            assert!(
+                warm2.dual_iterations > 0,
+                "{:?}/{:?}: expected the dual-simplex path to run",
+                o.factorization,
+                o.pricing
+            );
+            assert!(p2.check_feasible(&warm2.x, 1e-7).is_none());
+        }
     }
 
     #[test]
@@ -859,9 +988,14 @@ mod tests {
         let mut p = LpProblem::new(1);
         p.add_constraint(&[(0, 1.0)], Cmp::Le, 1.0);
         p.add_constraint(&[(0, 1.0)], Cmp::Ge, 2.0);
-        match solve_revised(&p, &opts(), None) {
-            Err(Error::Infeasible(_)) => {}
-            other => panic!("expected infeasible, got {other:?}"),
+        for o in combos() {
+            match solve_revised(&p, &o, None) {
+                Err(Error::Infeasible(_)) => {}
+                other => panic!(
+                    "{:?}/{:?}: expected infeasible, got {other:?}",
+                    o.factorization, o.pricing
+                ),
+            }
         }
     }
 
@@ -870,9 +1004,14 @@ mod tests {
         let mut p = LpProblem::new(1);
         p.set_objective(&[-1.0]);
         p.add_constraint(&[(0, 1.0)], Cmp::Ge, 0.0);
-        match solve_revised(&p, &opts(), None) {
-            Err(Error::Unbounded(_)) => {}
-            other => panic!("expected unbounded, got {other:?}"),
+        for o in combos() {
+            match solve_revised(&p, &o, None) {
+                Err(Error::Unbounded(_)) => {}
+                other => panic!(
+                    "{:?}/{:?}: expected unbounded, got {other:?}",
+                    o.factorization, o.pricing
+                ),
+            }
         }
     }
 
@@ -885,8 +1024,10 @@ mod tests {
         p.add_constraint(&[(1, 1.0)], Cmp::Le, 1.0);
         p.add_constraint(&[(0, 1.0), (1, -1.0)], Cmp::Le, 0.0);
         p.add_constraint(&[(0, -1.0), (1, 1.0)], Cmp::Le, 0.0);
-        let s = solve_revised(&p, &opts(), None).unwrap();
-        assert_close(s.objective, -1.0);
+        for o in combos() {
+            let s = solve_revised(&p, &o, None).unwrap();
+            assert_close(s.objective, -1.0);
+        }
     }
 
     #[test]

@@ -3,17 +3,23 @@
 //! Two backends sit behind [`solve`]/[`solve_with`]:
 //!
 //! - [`SolverBackend::RevisedSparse`] (default) — revised simplex over
-//!   CSC columns with a reusable LU basis factorization and
-//!   product-form eta updates ([`super::revised`]). Supports basis
-//!   warm starts via [`solve_warm`].
+//!   CSC columns ([`super::revised`]), with pluggable
+//!   basis-factorization ([`super::factorization`]: product-form eta
+//!   or Forrest–Tomlin LU updates) and pricing
+//!   ([`super::pricing`]: Dantzig, devex, steepest edge) strategy
+//!   layers selected through [`SimplexOptions`]. Supports basis warm
+//!   starts via [`solve_warm`].
 //! - [`SolverBackend::DenseTableau`] — the original two-phase dense
 //!   tableau, kept in this module as a fallback and as the oracle the
-//!   revised backend is property-tested against.
+//!   revised backend is property-tested against. It always prices
+//!   Dantzig and ignores the strategy options.
 //!
-//! Both phases use Dantzig pricing (most negative reduced cost) with a
-//! permanent switch to Bland's rule once degeneracy stalls progress,
-//! which guarantees termination.
+//! Both backends keep a permanent switch to Bland's rule once
+//! degeneracy stalls progress, which guarantees termination under any
+//! pricing rule.
 
+use super::factorization::Factorization;
+use super::pricing::Pricing;
 use super::problem::LpProblem;
 use super::revised::{self, Basis};
 use super::solution::LpSolution;
@@ -47,6 +53,14 @@ pub struct SimplexOptions {
     pub compute_duals: bool,
     /// Simplex implementation to run.
     pub backend: SolverBackend,
+    /// Basis-factorization strategy for the revised backend
+    /// ([`Factorization::ProductFormEta`] by default; the dense
+    /// tableau carries no factorization and ignores this).
+    pub factorization: Factorization,
+    /// Pricing rule for the revised backend ([`Pricing::Dantzig`] by
+    /// default; the dense tableau always prices Dantzig and ignores
+    /// this).
+    pub pricing: Pricing,
 }
 
 impl Default for SimplexOptions {
@@ -58,6 +72,8 @@ impl Default for SimplexOptions {
             stall_limit: 64,
             compute_duals: true,
             backend: SolverBackend::default(),
+            factorization: Factorization::default(),
+            pricing: Pricing::default(),
         }
     }
 }
@@ -451,6 +467,14 @@ impl Tableau {
             iterations: self.iterations,
             phase1_iterations: self.phase1_iters,
             dual_iterations: 0,
+            // The dense tableau carries no basis factorization and
+            // always prices Dantzig; the configured strategies are
+            // echoed for a uniform diagnostics surface.
+            factorization: opts.factorization,
+            pricing: Pricing::Dantzig,
+            refactorizations: 0,
+            peak_update_len: 0,
+            weight_resets: 0,
             duals,
             basis: Some(Basis { cols: basis_cols }),
         })

@@ -1,5 +1,7 @@
 //! LP solution container.
 
+use super::factorization::Factorization;
+use super::pricing::Pricing;
 use super::revised::Basis;
 
 /// Result of a successful LP solve.
@@ -18,6 +20,21 @@ pub struct LpSolution {
     /// Dual-simplex pivots spent repairing a primal-infeasible warm
     /// basis (revised backend only; zero on cold or primal-warm solves).
     pub dual_iterations: usize,
+    /// Basis-factorization strategy the solve was configured with.
+    pub factorization: Factorization,
+    /// Pricing rule the solve actually ran (the dense tableau reports
+    /// [`Pricing::Dantzig`] regardless of configuration).
+    pub pricing: Pricing,
+    /// Full basis refactorizations the revised backend performed
+    /// (periodic cadence + verdict re-checks; zero on the dense
+    /// tableau).
+    pub refactorizations: usize,
+    /// Peak update-file length (product-form etas, or Forrest–Tomlin
+    /// spikes) between refactorizations.
+    pub peak_update_len: usize,
+    /// Times a weighted pricing rule rebuilt its reference framework
+    /// after weight overflow (devex / steepest edge only).
+    pub weight_resets: usize,
     /// Dual values per constraint (if requested and extractable).
     pub duals: Option<Vec<f64>>,
     /// Optimal basis, usable to warm-start the next solve of a

@@ -23,7 +23,10 @@
 //!   iteration ([`crate::pdhg`]) — all selectable per solve through
 //!   [`PipelineOptions::backend`], which is the single source of truth
 //!   for backend and solver tuning (scenario families no longer carry
-//!   their own `SimplexOptions` copies);
+//!   their own `SimplexOptions` copies). The revised backend's
+//!   basis-factorization and pricing strategies ride along in
+//!   [`PipelineOptions::simplex`]
+//!   ([`crate::lp::Factorization`] / [`crate::lp::Pricing`]);
 //! - **warm restarts** ([`crate::lp::WarmCache`]): the cache keys the
 //!   last optimal basis by reduced-LP shape; an rhs-perturbed basis
 //!   that went primal-infeasible is repaired by the revised backend's
@@ -226,6 +229,11 @@ pub fn solve_full<S: ScenarioModel + ?Sized>(
                 iterations: ps.blocks,
                 phase1_iterations: 0,
                 dual_iterations: 0,
+                factorization: opts.simplex.factorization,
+                pricing: opts.simplex.pricing,
+                refactorizations: 0,
+                peak_update_len: 0,
+                weight_resets: 0,
                 duals: None,
                 basis: None,
             };

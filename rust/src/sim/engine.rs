@@ -231,9 +231,19 @@ pub fn simulate(spec: &SystemSpec, beta: &[f64], opts: &SimOptions) -> SimResult
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dlt::{frontend, no_frontend, single_source};
+    use crate::dlt::frontend::FeOptions;
+    use crate::dlt::no_frontend::NfeOptions;
+    use crate::dlt::{single_source, Schedule};
     use crate::model::SystemSpec;
     use crate::util::float::approx_eq_eps;
+
+    fn fe_solve(spec: &SystemSpec) -> Schedule {
+        crate::pipeline::solve(&FeOptions::default(), spec).unwrap()
+    }
+
+    fn nfe_solve(spec: &SystemSpec) -> Schedule {
+        crate::pipeline::solve(&NfeOptions::default(), spec).unwrap()
+    }
 
     #[test]
     fn single_source_matches_closed_form() {
@@ -264,7 +274,7 @@ mod tests {
             .job(100.0)
             .build()
             .unwrap();
-        let sched = no_frontend::solve(&spec).unwrap();
+        let sched = nfe_solve(&spec);
         let res = simulate(&spec, &sched.beta, &SimOptions::default());
         // ASAP execution can only match or beat the LP's T_f (the LP may
         // stretch windows; ASAP closes gaps).
@@ -285,7 +295,7 @@ mod tests {
             .job(100.0)
             .build()
             .unwrap();
-        let sched = frontend::solve(&spec).unwrap();
+        let sched = fe_solve(&spec);
         let res = simulate(
             &spec,
             &sched.beta,
@@ -308,7 +318,7 @@ mod tests {
             .job(10.0)
             .build()
             .unwrap();
-        let sched = no_frontend::solve(&spec).unwrap();
+        let sched = nfe_solve(&spec);
         let res = simulate(
             &spec,
             &sched.beta,
@@ -332,7 +342,7 @@ mod tests {
             .job(50.0)
             .build()
             .unwrap();
-        let sched = no_frontend::solve(&spec).unwrap();
+        let sched = nfe_solve(&spec);
         let base = simulate(&spec, &sched.beta, &SimOptions::default());
         let j1 = simulate(
             &spec,
@@ -358,7 +368,7 @@ mod tests {
             .job(60.0)
             .build()
             .unwrap();
-        let sched = no_frontend::solve(&spec).unwrap();
+        let sched = nfe_solve(&spec);
         let res = simulate(&spec, &sched.beta, &SimOptions::default());
         let (n, m) = (3, 4);
         for i in 0..n {
@@ -387,7 +397,7 @@ mod tests {
             .job(10.0)
             .build()
             .unwrap();
-        let sched = no_frontend::solve(&spec).unwrap();
+        let sched = nfe_solve(&spec);
         let res = simulate(&spec, &sched.beta, &SimOptions::default());
         assert_eq!(res.events, 3 + 3); // 3 sends + 3 computes
     }

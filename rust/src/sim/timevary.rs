@@ -165,8 +165,13 @@ pub fn evaluate(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dlt::no_frontend;
+    use crate::dlt::no_frontend::NfeOptions;
+    use crate::dlt::Schedule;
     use crate::model::SystemSpec;
+
+    fn nfe_solve(spec: &SystemSpec) -> Schedule {
+        crate::pipeline::solve(&NfeOptions::default(), spec).unwrap()
+    }
 
     fn spec() -> SystemSpec {
         SystemSpec::builder()
@@ -203,7 +208,7 @@ mod tests {
     #[test]
     fn nominal_profiles_match_des() {
         let s = spec();
-        let sched = no_frontend::solve(&s).unwrap();
+        let sched = nfe_solve(&s);
         let res = evaluate(
             &s,
             &sched.beta,
@@ -223,7 +228,7 @@ mod tests {
     #[test]
     fn interference_only_hurts() {
         let s = spec();
-        let sched = no_frontend::solve(&s).unwrap();
+        let sched = nfe_solve(&s);
         let nominal = evaluate(
             &s,
             &sched.beta,
@@ -249,7 +254,7 @@ mod tests {
     #[test]
     fn link_interference_delays_downstream() {
         let s = spec();
-        let sched = no_frontend::solve(&s).unwrap();
+        let sched = nfe_solve(&s);
         let mut lp = vec![Profile::nominal(); 2];
         lp[0] = Profile::with_interference(0.0, 10.0, 0.5);
         let res = evaluate(

@@ -11,7 +11,7 @@ use dlt::lp::{solve_warm, solve_with, LpProblem, SimplexOptions, SolverBackend};
 use dlt::testkit::{arb_spec, props};
 
 fn sweep_opts(threads: usize, warm_start: bool) -> SweepOptions {
-    SweepOptions { threads, warm_start, steal: false }
+    SweepOptions { threads, warm_start, steal: false, ..SweepOptions::default() }
 }
 
 fn dense() -> SimplexOptions {

@@ -1,0 +1,224 @@
+//! Strategy-grid properties for the pluggable simplex layers: every
+//! `(factorization, pricing)` combination must agree with the dense
+//! tableau oracle on makespan across all four scenario families, and
+//! Forrest–Tomlin must refactorize strictly less often than the
+//! product-form eta file on a long pivot sequence.
+
+use dlt::dlt::concurrent::{ConcurrentOptions, Mode};
+use dlt::dlt::frontend::FeOptions;
+use dlt::dlt::multi_job::MultiJobStepModel;
+use dlt::dlt::no_frontend::{self, NfeOptions};
+use dlt::lp::{solve_with, Factorization, Pricing, SimplexOptions, SolverBackend};
+use dlt::model::SystemSpec;
+use dlt::pipeline::{self, Backend, PipelineOptions, ScenarioModel};
+use dlt::testkit::{arb_spec, props};
+
+fn combos() -> Vec<(Factorization, Pricing)> {
+    let mut out = Vec::new();
+    for f in [Factorization::ProductFormEta, Factorization::ForrestTomlin] {
+        for p in [Pricing::Dantzig, Pricing::Devex, Pricing::SteepestEdge] {
+            out.push((f, p));
+        }
+    }
+    out
+}
+
+fn combo_opts(f: Factorization, p: Pricing) -> PipelineOptions {
+    PipelineOptions {
+        simplex: SimplexOptions { factorization: f, pricing: p, ..SimplexOptions::default() },
+        ..PipelineOptions::default()
+    }
+}
+
+fn dense_opts() -> PipelineOptions {
+    PipelineOptions { backend: Backend::DenseTableau, ..PipelineOptions::default() }
+}
+
+/// Deterministic anchor instances for all four families, solved by
+/// every strategy combination and compared against the dense oracle at
+/// 1e-8 relative — the satellite's makespan-parity bar.
+#[test]
+fn all_combos_match_dense_oracle_on_all_families() {
+    let spec = SystemSpec::builder()
+        .source(0.2, 0.0)
+        .source(0.3, 2.0)
+        .processors(&[2.0, 3.0, 4.0, 5.0])
+        .job(100.0)
+        .build()
+        .unwrap();
+    let models: Vec<(&str, Box<dyn ScenarioModel>)> = vec![
+        ("frontend", Box::new(FeOptions::default())),
+        ("no_frontend", Box::new(NfeOptions::default())),
+        ("concurrent/staggered", Box::new(ConcurrentOptions { mode: Mode::Staggered })),
+        ("concurrent/proportional", Box::new(ConcurrentOptions { mode: Mode::Proportional })),
+        (
+            "multi_job",
+            Box::new(MultiJobStepModel {
+                fe: FeOptions {
+                    proc_ready: Some(vec![1.0, 2.0, 3.0, 4.0]),
+                    ..Default::default()
+                },
+            }),
+        ),
+    ];
+    for (name, model) in &models {
+        let oracle = pipeline::solve_full(model.as_ref(), &spec, &dense_opts(), None, None)
+            .unwrap()
+            .schedule
+            .makespan;
+        for (f, p) in combos() {
+            let got =
+                pipeline::solve_full(model.as_ref(), &spec, &combo_opts(f, p), None, None)
+                    .unwrap()
+                    .schedule
+                    .makespan;
+            assert!(
+                (got - oracle).abs() <= 1e-8 * (1.0 + oracle.abs()),
+                "{name} under {}/{}: {got} vs oracle {oracle}",
+                f.as_str(),
+                p.as_str()
+            );
+        }
+    }
+}
+
+/// Randomized parity per combination (looser tolerance — random
+/// instances can terminate at eps-distinct vertices).
+#[test]
+fn prop_combos_match_dense_oracle_on_random_specs() {
+    let dense = SimplexOptions {
+        backend: SolverBackend::DenseTableau,
+        ..SimplexOptions::default()
+    };
+    props("strategy combos == dense oracle", 30, |g| {
+        let spec = arb_spec(g, 3, 5);
+        let lp = if g.bool() {
+            dlt::dlt::frontend::build_lp(&spec, &FeOptions::default())
+        } else {
+            no_frontend::build_lp(&spec, &NfeOptions::default())
+        };
+        let oracle = solve_with(&lp, &dense);
+        for (f, p) in combos() {
+            let opts = SimplexOptions {
+                factorization: f,
+                pricing: p,
+                ..SimplexOptions::default()
+            };
+            match (&oracle, solve_with(&lp, &opts)) {
+                (Ok(a), Ok(b)) => {
+                    let tol = 1e-6 * (1.0 + a.objective.abs());
+                    if (a.objective - b.objective).abs() > tol {
+                        return Err(format!(
+                            "{}/{}: {} vs oracle {}",
+                            f.as_str(),
+                            p.as_str(),
+                            b.objective,
+                            a.objective
+                        ));
+                    }
+                    if let Some(v) = lp.check_feasible(&b.x, 1e-6) {
+                        return Err(format!("{}/{}: infeasible point: {v}", f.as_str(), p.as_str()));
+                    }
+                }
+                (Err(_), Err(_)) => {}
+                (a, b) => {
+                    return Err(format!(
+                        "{}/{}: solvability disagrees: oracle {a:?} vs {b:?}",
+                        f.as_str(),
+                        p.as_str()
+                    ))
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Regression for the tentpole's perf claim: on a long pivot sequence
+/// (a cold NFE solve with ~165 rows, well past the 48-pivot eta
+/// cadence) Forrest–Tomlin performs strictly fewer full
+/// refactorizations than the product-form eta file, at the same
+/// optimum.
+#[test]
+fn forrest_tomlin_refactorizes_less_on_long_pivot_sequences() {
+    let mut b = SystemSpec::builder();
+    for i in 0..3 {
+        b = b.source(0.5 + 0.01 * i as f64, i as f64 * 0.5);
+    }
+    let a: Vec<f64> = (0..18).map(|k| 1.1 + 0.1 * k as f64).collect();
+    let spec = b.processors(&a).job(100.0).build().unwrap();
+    let lp = no_frontend::build_lp(&spec, &NfeOptions::default());
+
+    let run = |f: Factorization| {
+        let opts = SimplexOptions { factorization: f, ..SimplexOptions::default() };
+        solve_with(&lp, &opts).unwrap()
+    };
+    let pfe = run(Factorization::ProductFormEta);
+    let ft = run(Factorization::ForrestTomlin);
+
+    assert!(
+        (pfe.objective - ft.objective).abs() <= 1e-8 * (1.0 + pfe.objective.abs()),
+        "optima diverged: pfe {} vs ft {}",
+        pfe.objective,
+        ft.objective
+    );
+    assert!(
+        pfe.iterations > 48,
+        "instance too small to exercise the refactorization cadence ({} pivots)",
+        pfe.iterations
+    );
+    assert!(
+        pfe.refactorizations >= 2,
+        "eta file should refactorize repeatedly, saw {}",
+        pfe.refactorizations
+    );
+    assert!(
+        ft.refactorizations < pfe.refactorizations,
+        "forrest-tomlin ({}) should refactorize less than the eta file ({})",
+        ft.refactorizations,
+        pfe.refactorizations
+    );
+    // The update files really were exercised.
+    assert!(pfe.peak_update_len > 0 && ft.peak_update_len > 0);
+    assert!(
+        ft.peak_update_len >= pfe.peak_update_len,
+        "forrest-tomlin should carry update files at least as long as the eta cadence \
+         (ft {} vs pfe {})",
+        ft.peak_update_len,
+        pfe.peak_update_len
+    );
+}
+
+/// Weighted pricing must survive warm restarts and dual repairs inside
+/// a session sweep: the same makespans as Dantzig across a job grid,
+/// with the rule reported in every response.
+#[test]
+fn weighted_pricing_matches_dantzig_across_warm_sweep() {
+    use dlt::api::{Family, SolveRequest, Solver};
+    let spec = SystemSpec::builder()
+        .source(0.2, 0.0)
+        .source(0.4, 2.0)
+        .processors(&[2.0, 3.0, 4.0, 5.0, 6.0])
+        .job(100.0)
+        .build()
+        .unwrap();
+    for pricing in [Pricing::Devex, Pricing::SteepestEdge] {
+        let mut base = Solver::new().build();
+        let mut session = Solver::new()
+            .simplex(SimplexOptions { pricing, ..SimplexOptions::default() })
+            .build();
+        for k in 0..8 {
+            let sub = spec.with_job(100.0 + 15.0 * k as f64);
+            let want = base.solve(&SolveRequest::new(Family::Frontend, sub.clone())).unwrap();
+            let got = session.solve(&SolveRequest::new(Family::Frontend, sub)).unwrap();
+            assert_eq!(got.diagnostics.pricing, pricing);
+            assert!(
+                (got.makespan - want.makespan).abs() < 1e-7 * (1.0 + want.makespan.abs()),
+                "{} J-step {k}: {} vs {}",
+                pricing.as_str(),
+                got.makespan,
+                want.makespan
+            );
+        }
+    }
+}

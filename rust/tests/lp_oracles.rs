@@ -21,7 +21,8 @@ fn closed_form_equals_lp() {
             b = b.processor(ai);
         }
         let spec = b.job(job).build().map_err(|e| format!("{e}"))?;
-        let lp = dlt::dlt::no_frontend::solve(&spec).map_err(|e| format!("{e}"))?;
+        let lp = dlt::pipeline::solve(&dlt::dlt::no_frontend::NfeOptions::default(), &spec)
+            .map_err(|e| format!("{e}"))?;
         let rel = (cf.makespan - lp.makespan).abs() / cf.makespan;
         if rel < 1e-6 {
             Ok(())

@@ -4,8 +4,19 @@
 //! machine-independent LP optima, so most match tightly).
 
 use dlt::cost::TradeoffTable;
-use dlt::dlt::{frontend, no_frontend};
+use dlt::dlt::frontend::FeOptions;
+use dlt::dlt::no_frontend::NfeOptions;
+use dlt::dlt::Schedule;
 use dlt::experiments::{params, run};
+
+// The per-family solve forwards are gone: solve through the pipeline.
+fn fe_solve(spec: &dlt::model::SystemSpec) -> dlt::error::Result<Schedule> {
+    dlt::pipeline::solve(&FeOptions::default(), spec)
+}
+
+fn nfe_solve(spec: &dlt::model::SystemSpec) -> dlt::error::Result<Schedule> {
+    dlt::pipeline::solve(&NfeOptions::default(), spec)
+}
 
 /// §6.2 / Fig. 16: Cost(6) = 3433.77, Cost(7) = 3451.67 dollars.
 #[test]
@@ -108,7 +119,7 @@ fn fig19_20_solution_areas() {
 #[test]
 fn table1_release_binding() {
     let spec = params::table1();
-    let s = frontend::solve(&spec).unwrap();
+    let s = fe_solve(&spec).unwrap();
     assert!(s.beta(0, 0) * 2.0 >= 40.0 - 1e-6);
     // And the schedule validates.
     let rep = dlt::dlt::validate(&spec, &s);
@@ -120,7 +131,7 @@ fn table1_release_binding() {
 #[test]
 fn table2_no_frontend_shape() {
     let spec = params::table2();
-    let s = no_frontend::solve(&spec).unwrap();
+    let s = nfe_solve(&spec).unwrap();
     assert!((s.total_load() - 100.0).abs() < 1e-6);
     assert!(s.load_on_processor(0) > s.load_on_processor(1));
     assert!(s.load_on_processor(1) > s.load_on_processor(2));

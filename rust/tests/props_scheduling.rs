@@ -1,11 +1,23 @@
 //! Property tests over the scheduling core (testkit harness):
 //! solver invariants on randomly generated, valid systems.
 
+use dlt::dlt::frontend::{self, FeOptions};
+use dlt::dlt::no_frontend::NfeOptions;
 use dlt::dlt::schedule::TimingModel;
-use dlt::dlt::{frontend, no_frontend, validate};
+use dlt::dlt::{validate, Schedule};
 use dlt::error::Error;
+use dlt::model::SystemSpec;
 use dlt::sim::{simulate, SimOptions};
 use dlt::testkit::{arb_spec, props};
+
+// The per-family solve forwards are gone: solve through the pipeline.
+fn fe_solve(spec: &SystemSpec) -> dlt::error::Result<Schedule> {
+    dlt::pipeline::solve(&FeOptions::default(), spec)
+}
+
+fn nfe_solve(spec: &SystemSpec) -> dlt::error::Result<Schedule> {
+    dlt::pipeline::solve(&NfeOptions::default(), spec)
+}
 
 /// Some random specs make the §3.2 LP infeasible (eq. 12 can demand
 /// more first-fraction load than J provides) — that is a legitimate
@@ -14,7 +26,7 @@ use dlt::testkit::{arb_spec, props};
 fn prop_nfe_schedules_validate() {
     props("nfe schedules validate", 60, |g| {
         let spec = arb_spec(g, 4, 6);
-        match no_frontend::solve(&spec) {
+        match nfe_solve(&spec) {
             Ok(s) => {
                 let rep = validate(&spec, &s);
                 if !rep.is_valid() {
@@ -35,7 +47,7 @@ fn prop_nfe_schedules_validate() {
 fn prop_fe_schedules_validate() {
     props("fe schedules validate", 60, |g| {
         let spec = arb_spec(g, 4, 6);
-        match frontend::solve(&spec) {
+        match fe_solve(&spec) {
             Ok(s) => {
                 let rep = validate(&spec, &s);
                 if !rep.is_valid() {
@@ -54,7 +66,7 @@ fn prop_fe_schedules_validate() {
 fn prop_fe_never_slower_than_nfe() {
     props("fe <= nfe", 40, |g| {
         let spec = arb_spec(g, 3, 5);
-        let (Ok(fe), Ok(nfe)) = (frontend::solve(&spec), no_frontend::solve(&spec)) else {
+        let (Ok(fe), Ok(nfe)) = (fe_solve(&spec), nfe_solve(&spec)) else {
             return Ok(()); // either model infeasible -> nothing to compare
         };
         if fe.makespan <= nfe.makespan + 1e-6 {
@@ -71,7 +83,7 @@ fn prop_fe_never_slower_than_nfe() {
 fn prop_des_achieves_lp_makespan() {
     props("des <= lp", 50, |g| {
         let spec = arb_spec(g, 3, 5);
-        let Ok(s) = no_frontend::solve(&spec) else { return Ok(()) };
+        let Ok(s) = nfe_solve(&spec) else { return Ok(()) };
         let res = simulate(&spec, &s.beta, &SimOptions::default());
         if res.makespan <= s.makespan + 1e-6 {
             Ok(())
@@ -100,7 +112,7 @@ fn prop_des_achieves_fe_makespan() {
                 s.g *= scale;
             }
         }
-        let Ok(s) = frontend::solve(&spec) else { return Ok(()) };
+        let Ok(s) = fe_solve(&spec) else { return Ok(()) };
         let res = simulate(
             &spec,
             &s.beta,
@@ -123,8 +135,8 @@ fn prop_monotone_in_processors() {
             return Ok(());
         }
         let (Ok(full), Ok(fewer)) = (
-            frontend::solve(&spec),
-            frontend::solve(&spec.with_m_processors(spec.m() - 1)),
+            fe_solve(&spec),
+            fe_solve(&spec.with_m_processors(spec.m() - 1)),
         ) else {
             return Ok(());
         };
@@ -146,7 +158,7 @@ fn prop_job_scaling_linear_when_no_release() {
             s.release = 0.0;
         }
         let k = g.f64_in(1.5, 4.0);
-        let (Ok(s1), Ok(sk)) = (frontend::solve(&spec), frontend::solve(&spec.with_job(spec.job * k)))
+        let (Ok(s1), Ok(sk)) = (fe_solve(&spec), fe_solve(&spec.with_job(spec.job * k)))
         else {
             return Ok(());
         };
@@ -189,7 +201,7 @@ fn prop_pdhg_matches_simplex_on_fe_lps() {
 fn prop_jitter_bounded_degradation() {
     props("jitter bounded", 30, |g| {
         let spec = arb_spec(g, 3, 4);
-        let Ok(s) = no_frontend::solve(&spec) else { return Ok(()) };
+        let Ok(s) = nfe_solve(&spec) else { return Ok(()) };
         let j = g.f64_in(0.01, 0.2);
         let res = simulate(
             &spec,

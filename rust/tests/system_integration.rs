@@ -3,9 +3,22 @@
 
 use dlt::cluster::{run_cluster, ClusterConfig, Compute};
 use dlt::config::spec::{load_spec, save_spec};
-use dlt::dlt::{frontend, no_frontend};
+use dlt::dlt::frontend::FeOptions;
+use dlt::dlt::no_frontend::NfeOptions;
+use dlt::dlt::Schedule;
+use dlt::error::Result;
 use dlt::experiments;
 use dlt::model::SystemSpec;
+
+// The per-family solve forwards are gone: everything goes through the
+// unified pipeline (or the `dlt::api` facade).
+fn fe_solve(spec: &SystemSpec) -> Result<Schedule> {
+    dlt::pipeline::solve(&FeOptions::default(), spec)
+}
+
+fn nfe_solve(spec: &SystemSpec) -> Result<Schedule> {
+    dlt::pipeline::solve(&NfeOptions::default(), spec)
+}
 
 fn tmpdir(name: &str) -> String {
     let d = format!("/tmp/dlt_it_{name}_{}", std::process::id());
@@ -27,8 +40,8 @@ fn spec_file_roundtrip_through_solver() {
     save_spec(&path, &spec).unwrap();
     let loaded = load_spec(&path).unwrap();
     assert_eq!(spec, loaded);
-    let s1 = frontend::solve(&spec).unwrap();
-    let s2 = frontend::solve(&loaded).unwrap();
+    let s1 = fe_solve(&spec).unwrap();
+    let s2 = fe_solve(&loaded).unwrap();
     assert_eq!(s1.makespan, s2.makespan);
     std::fs::remove_dir_all(&dir).ok();
 }
@@ -85,7 +98,7 @@ fn cluster_fidelity_nfe_multi_source() {
         .job(40.0)
         .build()
         .unwrap();
-    let sched = no_frontend::solve(&spec).unwrap();
+    let sched = nfe_solve(&spec).unwrap();
     let cfg = ClusterConfig { time_scale: 0.004, compute: Compute::Modeled, fe_splits: 8 };
     let rep = run_cluster(&spec, &sched, &cfg).unwrap();
     assert!(
@@ -121,8 +134,8 @@ fn fe_and_nfe_agree_on_trivial_system() {
     // T_f = R + J G + J A (receive everything, then compute — FE can
     // stream but the finish-time constraint is identical here).
     let spec = SystemSpec::builder().source(0.5, 2.0).processor(1.5).job(10.0).build().unwrap();
-    let fe = frontend::solve(&spec).unwrap();
-    let nfe = no_frontend::solve(&spec).unwrap();
+    let fe = fe_solve(&spec).unwrap();
+    let nfe = nfe_solve(&spec).unwrap();
     let expect_nfe = 2.0 + 10.0 * 0.5 + 10.0 * 1.5;
     assert!((nfe.makespan - expect_nfe).abs() < 1e-6, "nfe {}", nfe.makespan);
     // FE streams: compute starts at R, bounded by compute time alone.
