@@ -86,5 +86,35 @@ fn main() -> anyhow::Result<()> {
         &table1,
     )?;
     println!("...and solvable without eq. 12: T_f = {:.4}", relaxed.makespan);
+
+    // Hypersparse hot path: re-solve a warm job sweep through the api
+    // facade with candidate-list partial pricing (`--pricing partial`
+    // on the CLI) and read the new diagnostics — window hits vs
+    // full-pass refreshes, and how sparse the per-iteration FTRAN
+    // results actually stayed.
+    use dlt::api::{Family, SolveRequest, Solver};
+    use dlt::lp::{Pricing, SimplexOptions};
+    let mut session = Solver::new()
+        .simplex(SimplexOptions { pricing: Pricing::Partial, ..SimplexOptions::default() })
+        .build();
+    println!("\n=== Warm sweep under partial pricing (hypersparse diagnostics) ===");
+    for k in 0..4 {
+        let sub = table1.with_job(100.0 + 25.0 * k as f64);
+        let resp = session
+            .solve(&SolveRequest::new(Family::Frontend, sub))
+            .map_err(|e| e.into_error())?;
+        let d = &resp.diagnostics;
+        println!(
+            "J={:6.1}: T_f {:.4}  ({} iters, warm={}, candidate hits {}, refreshes {}, \
+             avg ftran nnz {:.1})",
+            100.0 + 25.0 * k as f64,
+            resp.makespan,
+            d.iterations,
+            d.warm_start,
+            d.candidate_hits,
+            d.candidate_refreshes,
+            d.avg_ftran_nnz
+        );
+    }
     Ok(())
 }

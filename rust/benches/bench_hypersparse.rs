@@ -1,0 +1,403 @@
+//! Bench: the hypersparse simplex hot path — sparse FTRAN/BTRAN
+//! kernels, candidate-list partial pricing, and the scratch-pooled
+//! warm sweep — against the dense baselines they replaced.
+//!
+//! Three sections:
+//!
+//! - **micro kernels** — one factorized sparse basis per strategy,
+//!   timing the dense `ftran`/`btran` entry points (for
+//!   `product_form_eta` this is the genuinely dense legacy
+//!   implementation: dense LU solve + full eta passes) against
+//!   `ftran_sparse`/`btran_sparse` on the near-unit right-hand sides
+//!   the revised simplex actually produces. Also records
+//!   `storage_nnz` vs the `2m²` a dense L/U pair would pin — the
+//!   peak-basis-memory story.
+//! - **warm sweep cells** — a job-size sweep through one `dlt::api`
+//!   session (the production shape) per configuration: the dense
+//!   tableau (the pre-PR-1 dense baseline cell), revised + full
+//!   Dantzig pricing (the PR-4 configuration), and revised + partial
+//!   pricing (this PR), on the widest grid instance.
+//! - **cold solves** per cell for the long-pivot story.
+//!
+//! With `DLT_BENCH_JSON_DIR=dir` the results land in
+//! `dir/BENCH_hypersparse.json`; `DLT_BENCH_FAST=1` shrinks the
+//! instance for CI smoke runs; `DLT_BENCH_ASSERT=1` turns the
+//! regression guards on (CI fails if the sparse kernels or the sparse
+//! warm sweep regress behind their dense baseline cells).
+
+use dlt::api::{Family, SolveRequest, Solver};
+use dlt::config::json::Json;
+use dlt::linalg::{SparseMatrix, SparseVector};
+use dlt::lp::factorization::{BasisFactorization, Factorization};
+use dlt::lp::{Pricing, SimplexOptions};
+use dlt::model::SystemSpec;
+use dlt::pipeline::Backend;
+use std::time::Instant;
+
+fn spec(n: usize, m: usize) -> SystemSpec {
+    let mut b = SystemSpec::builder();
+    for i in 0..n {
+        b = b.source(0.5 + 0.01 * i as f64, i as f64 * 0.5);
+    }
+    let a: Vec<f64> = (0..m).map(|k| 1.1 + 0.1 * k as f64).collect();
+    b.processors(&a).job(100.0).build().unwrap()
+}
+
+/// Timing-chain-shaped sparse basis: ~3 entries per column.
+fn chain_basis(m: usize) -> SparseMatrix {
+    let mut trips: Vec<(usize, usize, f64)> = Vec::new();
+    for j in 0..m {
+        trips.push((j, j, 2.0 + 0.01 * (j % 7) as f64));
+        if j + 1 < m {
+            trips.push((j + 1, j, -0.5 - 0.01 * (j % 5) as f64));
+        }
+        if j >= 4 {
+            trips.push((j - 4, j, 0.25));
+        }
+    }
+    SparseMatrix::from_triplets(m, m, &trips)
+}
+
+struct Micro {
+    strategy: Factorization,
+    /// True when the strategy's dense entry points are adapters over
+    /// the sparse kernels (Forrest–Tomlin): the "dense" timing then
+    /// measures adapter overhead, not an independent dense kernel.
+    dense_is_adapter: bool,
+    ftran_dense_ns: f64,
+    ftran_sparse_ns: f64,
+    btran_dense_ns: f64,
+    btran_sparse_ns: f64,
+    storage_nnz: usize,
+    dense_equivalent: usize,
+}
+
+fn micro_kernels(m: usize, reps: usize) -> Vec<Micro> {
+    let basis = chain_basis(m);
+    let mut out = Vec::new();
+    for strategy in [Factorization::ProductFormEta, Factorization::ForrestTomlin] {
+        let mut f: Box<dyn BasisFactorization> = match strategy {
+            Factorization::ProductFormEta => {
+                Box::new(dlt::lp::factorization::ProductFormEta::new(m))
+            }
+            Factorization::ForrestTomlin => {
+                Box::new(dlt::lp::factorization::ForrestTomlin::new(m))
+            }
+        };
+        f.refactorize(&basis).expect("chain basis factorizes");
+        // A few updates so the eta file / spike chain is exercised.
+        let mut w = SparseVector::with_dim(m);
+        for k in 0..24.min(m) {
+            let q = (17 * k + 5) % m;
+            w.clear();
+            w.set(q, 1.25);
+            if q + 2 < m {
+                w.set(q + 2, -0.75);
+            }
+            f.ftran_sparse(&mut w);
+            let r = w
+                .indices()
+                .iter()
+                .copied()
+                .max_by(|&a, &b| w.get(a).abs().partial_cmp(&w.get(b).abs()).unwrap())
+                .unwrap();
+            if w.get(r).abs() < 1e-6 {
+                continue;
+            }
+            f.update(r, &w).expect("bench update");
+        }
+
+        // The near-unit RHS the simplex produces (an entering DLT
+        // column has a handful of nonzeros).
+        let mut rhs = vec![0.0; m];
+        rhs[m / 3] = 1.0;
+        rhs[m / 2] = -0.5;
+        let mut dense_out = vec![0.0; m];
+        let mut sv = SparseVector::with_dim(m);
+
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            f.ftran(&rhs, &mut dense_out);
+        }
+        let ftran_dense_ns = t0.elapsed().as_nanos() as f64 / reps as f64;
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            sv.set_from_dense(&rhs);
+            f.ftran_sparse(&mut sv);
+        }
+        let ftran_sparse_ns = t0.elapsed().as_nanos() as f64 / reps as f64;
+
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            f.btran(&rhs, &mut dense_out);
+        }
+        let btran_dense_ns = t0.elapsed().as_nanos() as f64 / reps as f64;
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            sv.set_from_dense(&rhs);
+            f.btran_sparse(&mut sv);
+        }
+        let btran_sparse_ns = t0.elapsed().as_nanos() as f64 / reps as f64;
+
+        out.push(Micro {
+            strategy,
+            dense_is_adapter: strategy == Factorization::ForrestTomlin,
+            ftran_dense_ns,
+            ftran_sparse_ns,
+            btran_dense_ns,
+            btran_sparse_ns,
+            storage_nnz: f.storage_nnz(),
+            dense_equivalent: 2 * m * m,
+        });
+    }
+    out
+}
+
+struct Cell {
+    label: &'static str,
+    backend: Backend,
+    pricing: Pricing,
+    cold_ms: f64,
+    cold_iterations: usize,
+    sweep_ms: f64,
+    sweep_iterations: usize,
+    candidate_hits: usize,
+    candidate_refreshes: usize,
+    avg_ftran_nnz: f64,
+}
+
+fn sweep_cell(
+    label: &'static str,
+    backend: Backend,
+    pricing: Pricing,
+    base: &SystemSpec,
+    points: usize,
+) -> Cell {
+    let simplex = SimplexOptions { pricing, ..SimplexOptions::default() };
+
+    let mut cold_session =
+        Solver::new().backend(backend).warm_start(false).simplex(simplex.clone()).build();
+    let t0 = Instant::now();
+    let cold = cold_session
+        .solve(&SolveRequest::new(Family::NoFrontend, base.clone()))
+        .expect("cold solve");
+    let cold_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    let mut session = Solver::new().backend(backend).simplex(simplex).build();
+    let mut sweep_iterations = 0usize;
+    let mut candidate_hits = 0usize;
+    let mut candidate_refreshes = 0usize;
+    let mut nnz_acc = 0.0f64;
+    let mut nnz_n = 0usize;
+    let t0 = Instant::now();
+    for k in 0..points {
+        let sub = base.with_job(100.0 + 10.0 * k as f64);
+        let resp = session
+            .solve(&SolveRequest::new(Family::NoFrontend, sub))
+            .expect("sweep solve");
+        sweep_iterations += resp.diagnostics.iterations;
+        candidate_hits += resp.diagnostics.candidate_hits;
+        candidate_refreshes += resp.diagnostics.candidate_refreshes;
+        if resp.diagnostics.avg_ftran_nnz > 0.0 {
+            nnz_acc += resp.diagnostics.avg_ftran_nnz;
+            nnz_n += 1;
+        }
+    }
+    let sweep_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    Cell {
+        label,
+        backend,
+        pricing,
+        cold_ms,
+        cold_iterations: cold.diagnostics.iterations,
+        sweep_ms,
+        sweep_iterations,
+        candidate_hits,
+        candidate_refreshes,
+        avg_ftran_nnz: if nnz_n > 0 { nnz_acc / nnz_n as f64 } else { 0.0 },
+    }
+}
+
+fn main() {
+    let fast = std::env::var("DLT_BENCH_FAST").is_ok();
+    let assert_gates = std::env::var("DLT_BENCH_ASSERT").is_ok();
+    let (n, m) = if fast { (3usize, 10usize) } else { (3, 24) };
+    let sweep_points = if fast { 8 } else { 24 };
+    let micro_m = if fast { 60 } else { 240 };
+    let micro_reps = if fast { 400 } else { 2000 };
+    let base = spec(n, m);
+
+    println!("== bench group: hypersparse (kernels + partial pricing + warm sweeps) ==");
+
+    // --- micro kernels ---
+    let micro = micro_kernels(micro_m, micro_reps);
+    println!(
+        "{:<18} {:>14} {:>14} {:>14} {:>14} {:>12} {:>12}",
+        "kernel (m)",
+        "ftran_dense",
+        "ftran_sparse",
+        "btran_dense",
+        "btran_sparse",
+        "nnz",
+        "dense_2m2"
+    );
+    for mc in &micro {
+        println!(
+            "{:<18} {:>12.0}ns {:>12.0}ns {:>12.0}ns {:>12.0}ns {:>12} {:>12}{}",
+            mc.strategy.as_str(),
+            mc.ftran_dense_ns,
+            mc.ftran_sparse_ns,
+            mc.btran_dense_ns,
+            mc.btran_sparse_ns,
+            mc.storage_nnz,
+            mc.dense_equivalent,
+            if mc.dense_is_adapter { "   (dense = adapter overhead)" } else { "" }
+        );
+    }
+
+    // --- warm sweep cells (widest grid instance) ---
+    let cells = [
+        sweep_cell(
+            "dense_tableau/full",
+            Backend::DenseTableau,
+            Pricing::Dantzig,
+            &base,
+            sweep_points,
+        ),
+        sweep_cell(
+            "revised/full",
+            Backend::RevisedSimplex,
+            Pricing::Dantzig,
+            &base,
+            sweep_points,
+        ),
+        sweep_cell(
+            "revised/partial",
+            Backend::RevisedSimplex,
+            Pricing::Partial,
+            &base,
+            sweep_points,
+        ),
+    ];
+    println!(
+        "\n{:<20} {:>10} {:>10} {:>10} {:>10} {:>8} {:>9} {:>12}",
+        "cell", "cold_ms", "cold_iter", "sweep_ms", "sweep_iter", "hits", "refresh", "avg_ftr_nnz"
+    );
+    for c in &cells {
+        println!(
+            "{:<20} {:>10.2} {:>10} {:>10.2} {:>10} {:>8} {:>9} {:>12.1}",
+            c.label,
+            c.cold_ms,
+            c.cold_iterations,
+            c.sweep_ms,
+            c.sweep_iterations,
+            c.candidate_hits,
+            c.candidate_refreshes,
+            c.avg_ftran_nnz
+        );
+    }
+
+    let dense_cell = &cells[0];
+    let partial_cell = &cells[2];
+    let speedup = dense_cell.sweep_ms / partial_cell.sweep_ms.max(1e-9);
+    let note = format!(
+        "warm sweep (nfe n={n} m={m}, {sweep_points} points): sparse kernels + partial \
+         pricing {:.2}ms vs dense baseline cell {:.2}ms ({speedup:.1}x)",
+        partial_cell.sweep_ms, dense_cell.sweep_ms
+    );
+    println!("   note: {note}");
+
+    // --- JSON artifact ---
+    let micro_json: Vec<Json> = micro
+        .iter()
+        .map(|mc| {
+            Json::Object(vec![
+                ("strategy".into(), Json::Str(mc.strategy.as_str().into())),
+                ("dense_is_adapter".into(), Json::Bool(mc.dense_is_adapter)),
+                ("m".into(), Json::Num(micro_m as f64)),
+                ("ftran_dense_ns".into(), Json::Num(mc.ftran_dense_ns)),
+                ("ftran_sparse_ns".into(), Json::Num(mc.ftran_sparse_ns)),
+                ("btran_dense_ns".into(), Json::Num(mc.btran_dense_ns)),
+                ("btran_sparse_ns".into(), Json::Num(mc.btran_sparse_ns)),
+                ("storage_nnz".into(), Json::Num(mc.storage_nnz as f64)),
+                (
+                    "dense_equivalent_entries".into(),
+                    Json::Num(mc.dense_equivalent as f64),
+                ),
+            ])
+        })
+        .collect();
+    let cell_json: Vec<Json> = cells
+        .iter()
+        .map(|c| {
+            Json::Object(vec![
+                ("cell".into(), Json::Str(c.label.into())),
+                ("backend".into(), Json::Str(c.backend.as_str().into())),
+                ("pricing".into(), Json::Str(c.pricing.as_str().into())),
+                ("cold_ms".into(), Json::Num(c.cold_ms)),
+                ("cold_iterations".into(), Json::Num(c.cold_iterations as f64)),
+                ("sweep_ms".into(), Json::Num(c.sweep_ms)),
+                ("sweep_iterations".into(), Json::Num(c.sweep_iterations as f64)),
+                ("candidate_hits".into(), Json::Num(c.candidate_hits as f64)),
+                (
+                    "candidate_refreshes".into(),
+                    Json::Num(c.candidate_refreshes as f64),
+                ),
+                ("avg_ftran_nnz".into(), Json::Num(c.avg_ftran_nnz)),
+            ])
+        })
+        .collect();
+    let doc = Json::Object(vec![
+        ("group".into(), Json::Str("hypersparse".into())),
+        (
+            "instance".into(),
+            Json::Str(format!(
+                "nfe n={n} m={m}, {sweep_points}-point warm sweep; micro kernels m={micro_m}"
+            )),
+        ),
+        ("micro_kernels".into(), Json::Array(micro_json)),
+        ("sweep_cells".into(), Json::Array(cell_json)),
+        ("notes".into(), Json::Array(vec![Json::Str(note)])),
+    ]);
+    if let Ok(dir) = std::env::var("DLT_BENCH_JSON_DIR") {
+        std::fs::create_dir_all(&dir).expect("create bench json dir");
+        let path = std::path::Path::new(&dir).join("BENCH_hypersparse.json");
+        std::fs::write(&path, doc.to_string_pretty()).expect("write BENCH_hypersparse.json");
+        println!("   wrote {}", path.display());
+    }
+
+    // --- regression gates (CI) ---
+    if assert_gates {
+        for mc in &micro {
+            // Only product_form_eta keeps an independent dense kernel;
+            // Forrest-Tomlin's dense entry points are adapters over the
+            // sparse path, so comparing them would be a tautology.
+            if !mc.dense_is_adapter {
+                assert!(
+                    mc.ftran_sparse_ns <= mc.ftran_dense_ns * 1.10,
+                    "{}: sparse ftran ({:.0}ns) regressed behind the dense kernel ({:.0}ns)",
+                    mc.strategy.as_str(),
+                    mc.ftran_sparse_ns,
+                    mc.ftran_dense_ns
+                );
+            }
+            assert!(
+                mc.storage_nnz * 4 < mc.dense_equivalent,
+                "{}: factor storage {} entries is no longer sparse (dense pair {})",
+                mc.strategy.as_str(),
+                mc.storage_nnz,
+                mc.dense_equivalent
+            );
+        }
+        // 1.5x slack: on DLT_BENCH_FAST instances the totals are
+        // sub-millisecond, where runner jitter is a real fraction.
+        assert!(
+            partial_cell.sweep_ms <= dense_cell.sweep_ms * 1.5,
+            "sparse warm-sweep path ({:.2}ms) slower than the dense baseline cell ({:.2}ms)",
+            partial_cell.sweep_ms,
+            dense_cell.sweep_ms
+        );
+        println!("   regression gates passed");
+    }
+}

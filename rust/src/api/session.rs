@@ -16,7 +16,7 @@ use crate::dlt::multi_job::MultiJobStepModel;
 use crate::dlt::no_frontend::NfeOptions;
 use crate::error::Result;
 use crate::experiments::sweep::parallel_map_steal;
-use crate::lp::{Basis, LpProblem, SimplexOptions, WarmCache};
+use crate::lp::{Basis, LpProblem, SimplexOptions, SolverScratch, WarmCache};
 use crate::pdhg::PdhgOptions;
 use crate::pipeline::{self, Backend, PipelineOptions, ScenarioModel};
 use std::collections::HashMap;
@@ -102,6 +102,7 @@ impl Solver {
             config: self,
             cache: WarmCache::new(),
             seeds: HashMap::new(),
+            scratch: SolverScratch::new(),
             solves: 0,
         }
     }
@@ -117,6 +118,10 @@ pub struct Session {
     /// Last reduced LP + optimal basis per family, for cross-shape
     /// projection when the cache misses a new LP shape.
     seeds: HashMap<&'static str, (LpProblem, Basis)>,
+    /// Per-session solver scratch pool: work buffers, factorization
+    /// and pricing objects reused across solves, so repeated warm
+    /// requests allocate nothing in the simplex core.
+    scratch: SolverScratch,
     /// Requests solved so far (successful or not).
     pub solves: usize,
 }
@@ -213,7 +218,14 @@ impl Session {
                 None
             };
             let cache = if warm { Some(&mut self.cache) } else { None };
-            pipeline::solve_full(model.as_ref(), &req.spec, &popts, cache, seed)?
+            pipeline::solve_full_scratch(
+                model.as_ref(),
+                &req.spec,
+                &popts,
+                cache,
+                seed,
+                &mut self.scratch,
+            )?
         };
         let solve_ns = t0.elapsed().as_nanos() as u64;
         let warm_start = self.cache.warm_attempts > attempts_before;
@@ -259,6 +271,9 @@ impl Session {
                 refactorizations: solved.solution.refactorizations,
                 update_len: solved.solution.peak_update_len,
                 weight_resets: solved.solution.weight_resets,
+                candidate_hits: solved.solution.candidate_hits,
+                candidate_refreshes: solved.solution.candidate_refreshes,
+                avg_ftran_nnz: solved.solution.avg_ftran_nnz,
                 presolve: solved.stats,
                 pdhg: solved.pdhg,
                 solve_ns,

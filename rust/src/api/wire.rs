@@ -116,7 +116,7 @@ pub struct RequestOptions {
     /// (`product_form_eta` | `forrest_tomlin`).
     pub factorization: Option<Factorization>,
     /// Pricing-rule override for the revised backend
-    /// (`dantzig` | `devex` | `steepest_edge`).
+    /// (`dantzig` | `devex` | `steepest_edge` | `partial`).
     pub pricing: Option<Pricing>,
     /// Simplex reduced-cost/pivot tolerance override.
     pub eps: Option<f64>,
@@ -227,7 +227,7 @@ impl RequestOptions {
             let s = p.as_str()?;
             o.pricing = Some(Pricing::parse(s).ok_or_else(|| {
                 Error::Config(format!(
-                    "unknown pricing `{s}` (expected dantzig|devex|steepest_edge)"
+                    "unknown pricing `{s}` (expected dantzig|devex|steepest_edge|partial)"
                 ))
             })?);
         }
@@ -338,6 +338,15 @@ pub struct Diagnostics {
     pub update_len: usize,
     /// Devex / steepest-edge reference-framework rebuilds.
     pub weight_resets: usize,
+    /// Iterations that entered from the partial-pricing candidate
+    /// window without a full pricing pass (`pricing == partial` only).
+    pub candidate_hits: usize,
+    /// Full pricing passes that rebuilt the candidate window
+    /// (`pricing == partial` only).
+    pub candidate_refreshes: usize,
+    /// Mean FTRAN-result nonzeros per pivot — the hypersparsity
+    /// diagnostic (0.0 on the dense tableau and PDHG).
+    pub avg_ftran_nnz: f64,
     /// What presolve removed in front of the backend.
     pub presolve: PresolveStats,
     /// PDHG convergence details (`backend == pdhg` only).
@@ -410,6 +419,12 @@ impl SolveResponse {
             ("refactorizations".into(), Json::Num(d.refactorizations as f64)),
             ("update_len".into(), Json::Num(d.update_len as f64)),
             ("weight_resets".into(), Json::Num(d.weight_resets as f64)),
+            ("candidate_hits".into(), Json::Num(d.candidate_hits as f64)),
+            (
+                "candidate_refreshes".into(),
+                Json::Num(d.candidate_refreshes as f64),
+            ),
+            ("avg_ftran_nnz".into(), Json::Num(d.avg_ftran_nnz)),
             (
                 "presolve".into(),
                 Json::Object(vec![
@@ -500,6 +515,9 @@ impl SolveResponse {
             refactorizations: d.req("refactorizations")?.as_usize()?,
             update_len: d.req("update_len")?.as_usize()?,
             weight_resets: d.req("weight_resets")?.as_usize()?,
+            candidate_hits: d.req("candidate_hits")?.as_usize()?,
+            candidate_refreshes: d.req("candidate_refreshes")?.as_usize()?,
+            avg_ftran_nnz: d.req("avg_ftran_nnz")?.as_f64()?,
             presolve: PresolveStats {
                 fixed_vars: pres.req("fixed_vars")?.as_usize()?,
                 empty_rows_dropped: pres.req("empty_rows_dropped")?.as_usize()?,

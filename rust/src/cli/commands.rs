@@ -32,7 +32,7 @@ fn model_of(a: &Args) -> Result<TimingModel> {
 
 /// Simplex strategy flags shared by `solve`, `sweep` and `batch`:
 /// `--factorization product_form_eta|forrest_tomlin` and
-/// `--pricing dantzig|devex|steepest_edge`.
+/// `--pricing dantzig|devex|steepest_edge|partial`.
 fn simplex_of(a: &Args) -> Result<SimplexOptions> {
     let mut s = SimplexOptions::default();
     if let Some(f) = a.get("factorization") {
@@ -45,7 +45,7 @@ fn simplex_of(a: &Args) -> Result<SimplexOptions> {
     if let Some(p) = a.get("pricing") {
         s.pricing = Pricing::parse(p).ok_or_else(|| {
             Error::Usage(format!(
-                "--pricing must be dantzig|devex|steepest_edge, got `{p}`"
+                "--pricing must be dantzig|devex|steepest_edge|partial, got `{p}`"
             ))
         })?;
     }

@@ -29,7 +29,11 @@
 //! shape by variable name and row label
 //! ([`crate::pipeline::project`]) and used as the seed — a
 //! primal-infeasible seed is repaired by the dual simplex instead of
-//! falling back to a cold phase-1 start.
+//! falling back to a cold phase-1 start. The session also owns a
+//! [`crate::lp::SolverScratch`] pool, so a worker's repeated warm
+//! solves reuse every solver work buffer instead of reallocating per
+//! grid point — steady-state sweep iterations are allocation-free in
+//! the simplex core.
 //!
 //! Used by the `dlt sweep` CLI subcommand and the solver benches.
 

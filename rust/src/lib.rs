@@ -7,14 +7,19 @@
 //! The crate is organized bottom-up:
 //!
 //! - [`util`], [`linalg`] — numeric substrates (PRNG, stats, dense +
-//!   sparse-CSC linear algebra, reusable LU factors).
+//!   sparse-CSC linear algebra, reusable LU factors, and the
+//!   [`linalg::SparseVector`] work arrays behind the hypersparse
+//!   simplex kernels).
 //! - [`lp`] — a from-scratch simplex solver: sparse revised simplex
-//!   with basis warm starts by default, the dense two-phase tableau as
-//!   fallback; its basis-factorization ([`lp::Factorization`]:
-//!   product-form eta or Forrest–Tomlin LU updates) and pricing
-//!   ([`lp::Pricing`]: Dantzig, devex, steepest edge) policies are
-//!   pluggable strategy layers selected per solve; every scheduling
-//!   problem in the paper is solved through it.
+//!   with basis warm starts and hypersparse FTRAN/BTRAN by default,
+//!   the dense two-phase tableau as fallback; its basis-factorization
+//!   ([`lp::Factorization`]: product-form eta or sparse Forrest–Tomlin
+//!   LU updates) and pricing ([`lp::Pricing`]: Dantzig, devex,
+//!   steepest edge, candidate-list partial) policies are pluggable
+//!   strategy layers selected per solve, and per-worker
+//!   [`lp::SolverScratch`] pools make repeated warm solves
+//!   allocation-free; every scheduling problem in the paper is solved
+//!   through it.
 //! - [`model`] — the system specification (sources `G_i`/`R_i`,
 //!   processors `A_j`/`C_j`, job `J`).
 //! - [`dlt`] — the paper's scheduling formulations: §2 single-source

@@ -1,6 +1,7 @@
 //! Row-major dense `f64` matrix with LU factorization.
 
 use crate::error::{Error, Result};
+use crate::linalg::{SparseMatrix, SparseVector};
 
 /// Row-major dense matrix.
 #[derive(Debug, Clone, PartialEq)]
@@ -205,6 +206,8 @@ pub struct LuFactors {
     n: usize,
     /// `perm[i]` = original row that ended up in pivot position `i`.
     perm: Vec<usize>,
+    /// `iperm[orig_row]` = pivot position of that row (inverse perm).
+    iperm: Vec<usize>,
     /// Row `i` of `L` strictly below the diagonal: `(col j < i, l_ij)`.
     l_rows: Vec<Vec<(usize, f64)>>,
     /// Row `i` of `U` strictly above the diagonal: `(col j > i, u_ij)`.
@@ -215,6 +218,22 @@ pub struct LuFactors {
     l_cols: Vec<Vec<(usize, f64)>>,
     /// Column `j` of `U` strictly above the diagonal: `(row i < j, u_ij)`.
     u_cols: Vec<Vec<(usize, f64)>>,
+    /// Column accumulator for [`LuFactors::refactor_csc`] (kept so
+    /// steady-state refactorizations allocate nothing).
+    acc: SparseVector,
+}
+
+/// Clear every inner vector and (re)size the outer one to `n`,
+/// keeping inner capacities — the refactorization storage discipline.
+fn clear_nested(v: &mut Vec<Vec<(usize, f64)>>, n: usize) {
+    for inner in v.iter_mut() {
+        inner.clear();
+    }
+    if v.len() > n {
+        v.truncate(n);
+    } else {
+        v.resize_with(n, Vec::new);
+    }
 }
 
 impl LuFactors {
@@ -224,12 +243,29 @@ impl LuFactors {
         LuFactors {
             n,
             perm: (0..n).collect(),
+            iperm: (0..n).collect(),
             l_rows: vec![Vec::new(); n],
             u_rows: vec![Vec::new(); n],
             u_diag: vec![1.0; n],
             l_cols: vec![Vec::new(); n],
             u_cols: vec![Vec::new(); n],
+            acc: SparseVector::default(),
         }
+    }
+
+    /// Reset to the identity factorization in place, reusing storage.
+    pub fn reset_identity(&mut self, n: usize) {
+        self.n = n;
+        self.perm.clear();
+        self.perm.extend(0..n);
+        self.iperm.clear();
+        self.iperm.extend(0..n);
+        clear_nested(&mut self.l_rows, n);
+        clear_nested(&mut self.u_rows, n);
+        clear_nested(&mut self.l_cols, n);
+        clear_nested(&mut self.u_cols, n);
+        self.u_diag.clear();
+        self.u_diag.resize(n, 1.0);
     }
 
     /// Factor a square matrix. Errors when (numerically) singular.
@@ -302,7 +338,172 @@ impl LuFactors {
                 }
             }
         }
-        Ok(LuFactors { n, perm, l_rows, u_rows, u_diag, l_cols, u_cols })
+        let mut iperm = vec![0usize; n];
+        for (i, &p) in perm.iter().enumerate() {
+            iperm[p] = i;
+        }
+        Ok(LuFactors {
+            n,
+            perm,
+            iperm,
+            l_rows,
+            u_rows,
+            u_diag,
+            l_cols,
+            u_cols,
+            acc: SparseVector::default(),
+        })
+    }
+
+    /// Factor a square CSC matrix without ever densifying it:
+    /// left-looking column LU with partial pivoting. Peak memory is
+    /// O(nnz(L) + nnz(U) + n) — the sparse replacement for
+    /// [`LuFactors::factor`]'s dense O(n²) working copy.
+    pub fn factor_csc(a: &SparseMatrix) -> Result<LuFactors> {
+        let mut f = LuFactors::identity(a.rows());
+        f.refactor_csc(a)?;
+        Ok(f)
+    }
+
+    /// Re-factor a square CSC matrix into this object, reusing all
+    /// existing storage (steady-state refactorizations in a warm sweep
+    /// allocate nothing once the inner vectors have grown).
+    ///
+    /// Left-looking column algorithm: column `j` is scattered into a
+    /// sparse accumulator, the already-computed `L` columns are applied
+    /// in pivot order (skipping those whose pivot entry is zero — the
+    /// hypersparse shortcut), the largest unpivoted entry is chosen as
+    /// the pivot, and the accumulator splits into a `U` column
+    /// (pivoted rows) and a scaled `L` column (unpivoted rows).
+    pub fn refactor_csc(&mut self, a: &SparseMatrix) -> Result<()> {
+        let n = a.rows();
+        if a.cols() != n {
+            return Err(Error::Numerical(format!(
+                "lu factor (csc): non-square {}x{}",
+                a.rows(),
+                a.cols()
+            )));
+        }
+        self.n = n;
+        self.perm.clear();
+        self.perm.resize(n, usize::MAX);
+        // `iperm` doubles as the "pivoted yet?" map during the sweep.
+        self.iperm.clear();
+        self.iperm.resize(n, usize::MAX);
+        clear_nested(&mut self.l_rows, n);
+        clear_nested(&mut self.u_rows, n);
+        clear_nested(&mut self.l_cols, n);
+        clear_nested(&mut self.u_cols, n);
+        self.u_diag.clear();
+        self.u_diag.resize(n, 0.0);
+        self.acc.resize_clear(n);
+
+        for j in 0..n {
+            for (i, v) in a.col(j) {
+                self.acc.set(i, v);
+            }
+            // Left-looking elimination, ascending pivot order.
+            for step in 0..j {
+                let pr = self.perm[step];
+                let xv = self.acc.get(pr);
+                if xv == 0.0 {
+                    continue;
+                }
+                for &(i, l) in &self.l_cols[step] {
+                    self.acc.add(i, -l * xv);
+                }
+            }
+            // Partial pivot among unpivoted rows.
+            let mut p = usize::MAX;
+            let mut pmax = 0.0f64;
+            for &i in self.acc.indices() {
+                if self.iperm[i] != usize::MAX {
+                    continue;
+                }
+                let v = self.acc.get(i).abs();
+                if v > pmax {
+                    pmax = v;
+                    p = i;
+                }
+            }
+            if p == usize::MAX || pmax < 1e-13 {
+                self.acc.clear();
+                return Err(Error::Numerical(format!(
+                    "lu factor (csc): singular at pivot {j}"
+                )));
+            }
+            let pivot = self.acc.get(p);
+            self.perm[j] = p;
+            self.iperm[p] = j;
+            self.u_diag[j] = pivot;
+            // Split the accumulator: pivoted rows -> U column `j`
+            // (indexed by pivot step), unpivoted -> L column `j`
+            // (original-row indices, remapped after the sweep).
+            for k in 0..self.acc.nnz() {
+                let i = self.acc.index_at(k);
+                if i == p {
+                    continue;
+                }
+                let v = self.acc.get(i);
+                if v == 0.0 {
+                    continue;
+                }
+                let step = self.iperm[i];
+                if step != usize::MAX {
+                    self.u_cols[j].push((step, v));
+                } else {
+                    self.l_cols[j].push((i, v / pivot));
+                }
+            }
+            self.acc.clear();
+        }
+
+        // Remap L entries from original-row to pivot-position indices
+        // and build the row views both solves need.
+        for col in self.l_cols.iter_mut() {
+            for e in col.iter_mut() {
+                e.0 = self.iperm[e.0];
+            }
+        }
+        for j in 0..n {
+            for &(i, l) in &self.l_cols[j] {
+                self.l_rows[i].push((j, l));
+            }
+            for &(i, u) in &self.u_cols[j] {
+                self.u_rows[i].push((j, u));
+            }
+        }
+        Ok(())
+    }
+
+    /// Stored factor entries (both triangles plus the diagonal) — the
+    /// sparse-memory diagnostic a dense `n × n` pair would put at
+    /// `2n²`.
+    pub fn nnz(&self) -> usize {
+        let l: usize = self.l_cols.iter().map(|c| c.len()).sum();
+        let u: usize = self.u_cols.iter().map(|c| c.len()).sum();
+        l + u + self.n
+    }
+
+    /// Upper-factor views `(u_rows, u_cols, u_diag)` for consumers
+    /// that maintain their own updated copy of `U` (Forrest–Tomlin).
+    pub(crate) fn upper_parts(&self) -> (&[Vec<(usize, f64)>], &[Vec<(usize, f64)>], &[f64]) {
+        (&self.u_rows, &self.u_cols, &self.u_diag)
+    }
+
+    /// Drop the upper-triangular off-diagonal entries. A consumer that
+    /// maintains its own updated `U` (Forrest–Tomlin) calls this after
+    /// copying them out, so the factor is not stored twice. Only the
+    /// row permutation and the lower factor remain usable — the full
+    /// `solve_*` entry points must not be called again until the next
+    /// refactorization rebuilds `U` in place (capacities are kept).
+    pub(crate) fn clear_upper(&mut self) {
+        for c in self.u_cols.iter_mut() {
+            c.clear();
+        }
+        for r in self.u_rows.iter_mut() {
+            r.clear();
+        }
     }
 
     /// Dimension.
@@ -365,6 +566,140 @@ impl LuFactors {
         for i in 0..n {
             out[self.perm[i]] = scratch[i];
         }
+    }
+
+    /// Hypersparse `A x = b` solve, in place: `v` holds `b` on entry
+    /// and `x` on return. Both substitutions run column-oriented so a
+    /// column whose intermediate value is (exactly) zero is skipped
+    /// outright — on the near-unit right-hand sides the revised
+    /// simplex produces, the work is proportional to the nonzeros
+    /// actually created, not to `n²` or even `nnz(L) + nnz(U)`.
+    pub fn solve_sparse(&self, v: &mut SparseVector, tmp: &mut SparseVector) {
+        let n = self.n;
+        debug_assert_eq!(v.dim(), n);
+        tmp.resize_clear(n);
+        // z = P b.
+        for &j in v.indices() {
+            let val = v.get(j);
+            if val != 0.0 {
+                tmp.set(self.iperm[j], val);
+            }
+        }
+        v.clear();
+        // Forward: L z' = z, column sweep with zero-skip.
+        for j in 0..n {
+            let zj = tmp.get(j);
+            if zj == 0.0 {
+                continue;
+            }
+            for &(i, l) in &self.l_cols[j] {
+                tmp.add(i, -l * zj);
+            }
+        }
+        // Backward: U x = z', column sweep descending.
+        for j in (0..n).rev() {
+            let zj = tmp.get(j);
+            if zj == 0.0 {
+                continue;
+            }
+            let xj = zj / self.u_diag[j];
+            v.set(j, xj);
+            for &(i, u) in &self.u_cols[j] {
+                tmp.add(i, -u * xj);
+            }
+        }
+        tmp.clear();
+    }
+
+    /// Hypersparse `Aᵀ x = b` solve, in place (see
+    /// [`LuFactors::solve_sparse`]): `Uᵀ z = b`, then `Lᵀ w = z`, then
+    /// `x = Pᵀ w`.
+    pub fn solve_transpose_sparse(&self, v: &mut SparseVector, tmp: &mut SparseVector) {
+        let n = self.n;
+        debug_assert_eq!(v.dim(), n);
+        // Forward: Uᵀ z = b (lower triangular), in place ascending.
+        for j in 0..n {
+            let bj = v.get(j);
+            if bj == 0.0 {
+                continue;
+            }
+            let zj = bj / self.u_diag[j];
+            v.set(j, zj);
+            for &(c, u) in &self.u_rows[j] {
+                v.add(c, -u * zj);
+            }
+        }
+        // Backward: Lᵀ w = z (upper triangular, unit diagonal).
+        for j in (0..n).rev() {
+            let wj = v.get(j);
+            if wj == 0.0 {
+                continue;
+            }
+            for &(c, l) in &self.l_rows[j] {
+                v.add(c, -l * wj);
+            }
+        }
+        // x = Pᵀ w.
+        tmp.resize_clear(n);
+        for &i in v.indices() {
+            let val = v.get(i);
+            if val != 0.0 {
+                tmp.set(self.perm[i], val);
+            }
+        }
+        std::mem::swap(v, tmp);
+        tmp.clear();
+    }
+
+    /// Forward half of a hypersparse FTRAN: `v ← L⁻¹ P v`, leaving the
+    /// result in the pivot-row space. Forrest–Tomlin keeps its own
+    /// updated `U` and only needs this half from the factorization.
+    pub fn lower_solve_sparse(&self, v: &mut SparseVector, tmp: &mut SparseVector) {
+        let n = self.n;
+        debug_assert_eq!(v.dim(), n);
+        tmp.resize_clear(n);
+        for &j in v.indices() {
+            let val = v.get(j);
+            if val != 0.0 {
+                tmp.set(self.iperm[j], val);
+            }
+        }
+        for j in 0..n {
+            let zj = tmp.get(j);
+            if zj == 0.0 {
+                continue;
+            }
+            for &(i, l) in &self.l_cols[j] {
+                tmp.add(i, -l * zj);
+            }
+        }
+        std::mem::swap(v, tmp);
+        tmp.clear();
+    }
+
+    /// Closing half of a hypersparse BTRAN: `v ← Pᵀ L⁻ᵀ v` for a
+    /// caller that already did its own upper-transpose solve.
+    pub fn lower_transpose_solve_sparse(&self, v: &mut SparseVector, tmp: &mut SparseVector) {
+        let n = self.n;
+        debug_assert_eq!(v.dim(), n);
+        for j in (0..n).rev() {
+            let wj = v.get(j);
+            if wj == 0.0 {
+                continue;
+            }
+            for &(c, l) in &self.l_rows[j] {
+                v.add(c, -l * wj);
+            }
+        }
+        tmp.resize_clear(n);
+        for &i in v.indices() {
+            let val = v.get(i);
+            if val != 0.0 {
+                tmp.set(self.perm[i], val);
+            }
+        }
+        std::mem::swap(v, tmp);
+        tmp.clear();
     }
 }
 
@@ -490,6 +825,79 @@ mod tests {
         let mut scratch = vec![0.0; 4];
         f.solve_transpose_into(&b, &mut scratch, &mut x);
         assert_eq!(x, b.to_vec());
+    }
+
+    #[test]
+    fn csc_factor_and_sparse_solves_match_dense() {
+        use crate::util::rng::{Pcg32, Rng};
+        let mut rng = Pcg32::new(314);
+        for n in [1usize, 2, 5, 12, 30] {
+            let mut a = Matrix::zeros(n, n);
+            for i in 0..n {
+                for j in 0..n {
+                    if i == j || rng.f64() < 0.25 {
+                        a[(i, j)] = rng.f64() - 0.5;
+                    }
+                }
+                a[(i, i)] += 2.0;
+            }
+            let dense = LuFactors::factor(&a).unwrap();
+            let csc = LuFactors::factor_csc(&SparseMatrix::from_dense(&a, 0.0)).unwrap();
+            assert!(
+                csc.nnz() <= n * n + n,
+                "n={n}: sparse factor stores {} entries",
+                csc.nnz()
+            );
+
+            // A sparse rhs with a couple of entries — the hypersparse case.
+            let mut b = vec![0.0; n];
+            b[0] = 1.0;
+            if n > 2 {
+                b[n / 2] = -2.5;
+            }
+            let mut want = vec![0.0; n];
+            dense.solve_into(&b, &mut want);
+            let mut sv = SparseVector::default();
+            let mut tmp = SparseVector::default();
+            sv.set_from_dense(&b);
+            csc.solve_sparse(&mut sv, &mut tmp);
+            for i in 0..n {
+                assert!(
+                    (sv.get(i) - want[i]).abs() < 1e-8,
+                    "n={n} solve_sparse[{i}]: {} vs {}",
+                    sv.get(i),
+                    want[i]
+                );
+            }
+
+            let mut scratch = vec![0.0; n];
+            dense.solve_transpose_into(&b, &mut scratch, &mut want);
+            sv.set_from_dense(&b);
+            csc.solve_transpose_sparse(&mut sv, &mut tmp);
+            for i in 0..n {
+                assert!(
+                    (sv.get(i) - want[i]).abs() < 1e-8,
+                    "n={n} solve_transpose_sparse[{i}]: {} vs {}",
+                    sv.get(i),
+                    want[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn csc_factor_detects_singular_and_resets() {
+        let a = SparseMatrix::from_triplets(2, 2, &[(0, 0, 1.0), (1, 0, 2.0)]);
+        assert!(LuFactors::factor_csc(&a).is_err());
+        let mut f = LuFactors::identity(3);
+        f.reset_identity(2);
+        assert_eq!(f.n(), 2);
+        let mut sv = SparseVector::with_dim(2);
+        let mut tmp = SparseVector::default();
+        sv.set(1, 4.0);
+        f.solve_sparse(&mut sv, &mut tmp);
+        assert_eq!(sv.get(1), 4.0);
+        assert_eq!(sv.get(0), 0.0);
     }
 
     #[test]

@@ -7,13 +7,16 @@
 //! dense row-major; [`sparse::SparseMatrix`] is CSC and carries the LP
 //! constraint matrices (which are ~95 % zeros for DLT instances);
 //! [`matrix::LuFactors`] is the reusable basis factorization behind
-//! the revised simplex.
+//! the revised simplex, and [`sparse_vec::SparseVector`] is the
+//! hypersparse work vector its FTRAN/BTRAN kernels move around.
 
 pub mod matrix;
 pub mod sparse;
+pub mod sparse_vec;
 
 pub use matrix::{lu_solve, LuFactors, Matrix};
 pub use sparse::SparseMatrix;
+pub use sparse_vec::SparseVector;
 
 /// Dot product of two equal-length slices.
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {

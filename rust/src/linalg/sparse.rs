@@ -40,32 +40,53 @@ impl SparseMatrix {
     /// out-of-range indices.
     pub fn from_triplets(rows: usize, cols: usize, triplets: &[(usize, usize, f64)]) -> SparseMatrix {
         let mut entries: Vec<(usize, usize, f64)> = triplets.to_vec();
-        for &(r, c, _) in &entries {
+        let mut m = SparseMatrix::zeros(rows, cols);
+        m.refill_from_triplets(rows, cols, &mut entries);
+        m
+    }
+
+    /// Rebuild this matrix in place from `(row, col, value)` triplets,
+    /// reusing all storage — the allocation-free variant of
+    /// [`SparseMatrix::from_triplets`] for hot paths (the revised
+    /// simplex reassembles the basis through a pooled matrix on every
+    /// warm solve). The triplet buffer is sorted in place
+    /// (`sort_unstable`, no scratch allocation); duplicates are
+    /// summed, exact-zero sums dropped. Panics on out-of-range
+    /// indices.
+    pub fn refill_from_triplets(
+        &mut self,
+        rows: usize,
+        cols: usize,
+        triplets: &mut [(usize, usize, f64)],
+    ) {
+        for &(r, c, _) in triplets.iter() {
             assert!(r < rows && c < cols, "triplet ({r}, {c}) outside {rows}x{cols}");
         }
-        entries.sort_by(|a, b| (a.1, a.0).cmp(&(b.1, b.0)));
+        triplets.sort_unstable_by(|a, b| (a.1, a.0).cmp(&(b.1, b.0)));
 
-        let mut col_ptr = vec![0usize; cols + 1];
-        let mut row_idx = Vec::with_capacity(entries.len());
-        let mut vals = Vec::with_capacity(entries.len());
+        self.rows = rows;
+        self.cols = cols;
+        self.col_ptr.clear();
+        self.col_ptr.resize(cols + 1, 0);
+        self.row_idx.clear();
+        self.vals.clear();
         let mut k = 0;
         for c in 0..cols {
-            while k < entries.len() && entries[k].1 == c {
-                let r = entries[k].0;
-                let mut v = entries[k].2;
+            while k < triplets.len() && triplets[k].1 == c {
+                let r = triplets[k].0;
+                let mut v = triplets[k].2;
                 k += 1;
-                while k < entries.len() && entries[k].1 == c && entries[k].0 == r {
-                    v += entries[k].2;
+                while k < triplets.len() && triplets[k].1 == c && triplets[k].0 == r {
+                    v += triplets[k].2;
                     k += 1;
                 }
                 if v != 0.0 {
-                    row_idx.push(r);
-                    vals.push(v);
+                    self.row_idx.push(r);
+                    self.vals.push(v);
                 }
             }
-            col_ptr[c + 1] = row_idx.len();
+            self.col_ptr[c + 1] = self.row_idx.len();
         }
-        SparseMatrix { rows, cols, col_ptr, row_idx, vals }
     }
 
     /// Build from a dense matrix, keeping entries with `|v| > drop_tol`.
@@ -171,6 +192,21 @@ impl SparseMatrix {
     }
 }
 
+/// Degenerate 0×0 placeholder (empty `col_ptr`, so it allocates
+/// nothing — the scratch-pool resting state; every method is safe on
+/// it because there is no valid column index).
+impl Default for SparseMatrix {
+    fn default() -> SparseMatrix {
+        SparseMatrix {
+            rows: 0,
+            cols: 0,
+            col_ptr: Vec::new(),
+            row_idx: Vec::new(),
+            vals: Vec::new(),
+        }
+    }
+}
+
 impl std::ops::Index<(usize, usize)> for SparseMatrix {
     type Output = f64;
     fn index(&self, (i, j): (usize, usize)) -> &f64 {
@@ -259,5 +295,21 @@ mod tests {
         let a = SparseMatrix::zeros(0, 0);
         assert_eq!(a.nnz(), 0);
         assert_eq!(a.density(), 0.0);
+        let d = SparseMatrix::default();
+        assert_eq!((d.rows(), d.cols(), d.nnz()), (0, 0, 0));
+    }
+
+    #[test]
+    fn refill_reuses_storage_and_matches_from_triplets() {
+        let mut m = SparseMatrix::default();
+        let mut trips = vec![(0usize, 0usize, 1.0), (1, 1, 3.0), (0, 2, 2.0)];
+        m.refill_from_triplets(2, 3, &mut trips);
+        assert_eq!(m, sample());
+        // Refill with a different shape: storage reused, result exact.
+        let mut trips = vec![(1usize, 0usize, 4.0), (0, 0, 1.0), (0, 0, -1.0)];
+        m.refill_from_triplets(2, 2, &mut trips);
+        let want = SparseMatrix::from_triplets(2, 2, &[(1, 0, 4.0), (0, 0, 1.0), (0, 0, -1.0)]);
+        assert_eq!(m, want);
+        assert_eq!(m.nnz(), 1, "exact cancellation dropped in refill too");
     }
 }

@@ -1,0 +1,232 @@
+//! Sparse work vector for the hypersparse simplex kernels.
+//!
+//! The revised simplex moves *very* sparse vectors through FTRAN and
+//! BTRAN: an entering DLT column has a handful of nonzeros, a dual
+//! pricing row is a single unit vector, and the basis factors mostly
+//! preserve that sparsity. [`SparseVector`] is the classic work-array
+//! representation for exploiting it — a dense scatter buffer (`vals`)
+//! plus an explicit nonzero index list (`idx`) and a membership mark —
+//! so kernels can
+//!
+//! - read any entry in O(1) (the dense buffer),
+//! - iterate only the (potential) nonzeros (the index list),
+//! - and reset in O(nnz) instead of O(n) ([`SparseVector::clear`]).
+//!
+//! Invariants: `vals[i] == 0.0` for every `i` not in `idx`; `idx` holds
+//! no duplicates. The list is a *superset* of the true nonzeros —
+//! exact cancellation leaves a marked zero entry behind, which costs a
+//! slot but never correctness. Index order is unspecified (kernels
+//! that need an order iterate positions, not the list).
+
+/// Dense-buffer + index-list sparse vector (see module docs).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SparseVector {
+    /// Dense scatter buffer, length = dimension.
+    vals: Vec<f64>,
+    /// Positions that may hold a nonzero (superset, duplicate-free).
+    idx: Vec<usize>,
+    /// `mark[i]` ⇔ `idx` contains `i`.
+    mark: Vec<bool>,
+}
+
+impl SparseVector {
+    /// All-zero vector of dimension `n`.
+    pub fn with_dim(n: usize) -> SparseVector {
+        SparseVector { vals: vec![0.0; n], idx: Vec::new(), mark: vec![false; n] }
+    }
+
+    /// Dimension of the dense buffer.
+    pub fn dim(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Number of tracked (potentially nonzero) entries.
+    pub fn nnz(&self) -> usize {
+        self.idx.len()
+    }
+
+    /// Reset to all-zero in O(nnz), keeping all capacity.
+    pub fn clear(&mut self) {
+        for &i in &self.idx {
+            self.vals[i] = 0.0;
+            self.mark[i] = false;
+        }
+        self.idx.clear();
+    }
+
+    /// Clear and (re)size the dense buffer to dimension `n` — the
+    /// scratch-pool entry point: buffers grow on demand and are reused
+    /// allocation-free once warm.
+    pub fn resize_clear(&mut self, n: usize) {
+        self.clear();
+        if self.vals.len() != n {
+            self.vals.resize(n, 0.0);
+            self.mark.resize(n, false);
+        }
+    }
+
+    /// Entry accessor (O(1) via the dense buffer).
+    #[inline]
+    pub fn get(&self, i: usize) -> f64 {
+        self.vals[i]
+    }
+
+    /// Set entry `i`, tracking it in the index list.
+    #[inline]
+    pub fn set(&mut self, i: usize, v: f64) {
+        if !self.mark[i] {
+            self.mark[i] = true;
+            self.idx.push(i);
+        }
+        self.vals[i] = v;
+    }
+
+    /// Accumulate into entry `i`, tracking it in the index list.
+    #[inline]
+    pub fn add(&mut self, i: usize, v: f64) {
+        if !self.mark[i] {
+            self.mark[i] = true;
+            self.idx.push(i);
+        }
+        self.vals[i] += v;
+    }
+
+    /// The tracked index list (unordered superset of the nonzeros).
+    pub fn indices(&self) -> &[usize] {
+        &self.idx
+    }
+
+    /// Tracked index at list position `k` (for loops that must mutate
+    /// other entries while iterating).
+    #[inline]
+    pub fn index_at(&self, k: usize) -> usize {
+        self.idx[k]
+    }
+
+    /// The dense buffer (length [`SparseVector::dim`]).
+    pub fn values(&self) -> &[f64] {
+        &self.vals
+    }
+
+    /// Iterate `(index, value)` over tracked entries, skipping exact
+    /// zeros left behind by cancellation.
+    pub fn iter(&self) -> impl Iterator<Item = (usize, f64)> + '_ {
+        self.idx.iter().map(|&i| (i, self.vals[i])).filter(|&(_, v)| v != 0.0)
+    }
+
+    /// Load from a dense slice (the dense-adapter entry point). The
+    /// vector is cleared and resized to `v.len()` first.
+    pub fn set_from_dense(&mut self, v: &[f64]) {
+        self.resize_clear(v.len());
+        for (i, &x) in v.iter().enumerate() {
+            if x != 0.0 {
+                self.set(i, x);
+            }
+        }
+    }
+
+    /// Become a copy of `other` (same tracked entries), reusing
+    /// capacity.
+    pub fn copy_from(&mut self, other: &SparseVector) {
+        self.resize_clear(other.dim());
+        for &i in &other.idx {
+            let v = other.vals[i];
+            if v != 0.0 {
+                self.set(i, v);
+            }
+        }
+    }
+
+    /// Scatter into a dense output buffer (zeroed first).
+    pub fn copy_into_dense(&self, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), self.dim());
+        out.iter_mut().for_each(|x| *x = 0.0);
+        for &i in &self.idx {
+            out[i] = self.vals[i];
+        }
+    }
+
+    /// Squared Euclidean norm over the tracked entries.
+    pub fn norm2_sq(&self) -> f64 {
+        let mut acc = 0.0;
+        for &i in &self.idx {
+            let v = self.vals[i];
+            acc += v * v;
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_add_get_roundtrip() {
+        let mut v = SparseVector::with_dim(6);
+        assert_eq!((v.dim(), v.nnz()), (6, 0));
+        v.set(2, 3.0);
+        v.add(2, -1.0);
+        v.add(5, 4.0);
+        assert_eq!(v.get(2), 2.0);
+        assert_eq!(v.get(5), 4.0);
+        assert_eq!(v.get(0), 0.0);
+        assert_eq!(v.nnz(), 2, "duplicate touches must not duplicate indices");
+    }
+
+    #[test]
+    fn clear_is_complete() {
+        let mut v = SparseVector::with_dim(4);
+        v.set(1, 7.0);
+        v.set(3, -2.0);
+        v.clear();
+        assert_eq!(v.nnz(), 0);
+        assert_eq!(v.values(), &[0.0; 4]);
+        // Reusable after clear.
+        v.set(1, 1.0);
+        assert_eq!(v.get(1), 1.0);
+        assert_eq!(v.nnz(), 1);
+    }
+
+    #[test]
+    fn cancellation_keeps_invariant() {
+        let mut v = SparseVector::with_dim(3);
+        v.add(0, 2.0);
+        v.add(0, -2.0);
+        // Exact cancellation: still tracked (superset semantics)...
+        assert_eq!(v.nnz(), 1);
+        assert_eq!(v.get(0), 0.0);
+        // ...but iter() skips it.
+        assert_eq!(v.iter().count(), 0);
+        v.clear();
+        assert_eq!(v.values(), &[0.0; 3]);
+    }
+
+    #[test]
+    fn dense_roundtrip_and_copy() {
+        let d = [0.0, 1.5, 0.0, -2.0];
+        let mut v = SparseVector::default();
+        v.set_from_dense(&d);
+        assert_eq!(v.dim(), 4);
+        assert_eq!(v.nnz(), 2);
+        let mut out = [9.0; 4];
+        v.copy_into_dense(&mut out);
+        assert_eq!(out, d);
+        let mut w = SparseVector::with_dim(1);
+        w.copy_from(&v);
+        assert_eq!(w.values(), &d);
+        assert!((v.norm2_sq() - (1.5 * 1.5 + 4.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn resize_clear_grows_and_shrinks() {
+        let mut v = SparseVector::with_dim(2);
+        v.set(1, 5.0);
+        v.resize_clear(8);
+        assert_eq!((v.dim(), v.nnz()), (8, 0));
+        v.set(7, 1.0);
+        v.resize_clear(3);
+        assert_eq!((v.dim(), v.nnz()), (3, 0));
+        assert_eq!(v.values(), &[0.0; 3]);
+    }
+}

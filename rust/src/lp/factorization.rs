@@ -7,25 +7,37 @@
 //! is represented is a classic engineering trade-off, so it is a
 //! strategy layer ([`BasisFactorization`]) with two implementations:
 //!
-//! - [`ProductFormEta`] — the original behavior, extracted from
-//!   `lp/revised.rs`: a sparse LU of the last refactorization plus a
-//!   *product-form eta file* (one sparse column per pivot), with a full
+//! - [`ProductFormEta`] — a sparse LU of the last refactorization plus
+//!   a *product-form eta file* (one sparse column per pivot, stored in
+//!   a shared arena so warm re-solves allocate nothing), with a full
 //!   refactorization every 48 pivots to bound drift. Cheap per update
 //!   (O(nnz(w))), but the eta file both grows and loses accuracy
 //!   quickly, forcing the short refactorization cadence.
 //! - [`ForrestTomlin`] — Forrest–Tomlin LU updating: the
-//!   upper-triangular factor `U` is maintained *explicitly*. A pivot
-//!   replaces one column of `U` with the spike `L⁻¹A_q`, cyclically
-//!   permutes the spiked index to the border, and eliminates the lone
-//!   off-triangular row with multipliers that are absorbed into the
-//!   `L⁻¹` operator chain. `U` is stored *densely*, so an update costs
-//!   O(m²) worst case (spike product + bordering rotation) against the
-//!   eta file's O(nnz(w)) — the trade is that `U` stays genuinely
-//!   triangular and accurate for hundreds of pivots, making full
-//!   O(m³) refactorizations rare: the win the ROADMAP's
-//!   long-pivot-sequence bullet asks for. (A sparse-row `U` is the
-//!   natural next impl behind the same trait if basis sizes outgrow
-//!   the dense representation.)
+//!   upper-triangular factor `U` is maintained *explicitly* in sparse
+//!   row + column form. A pivot replaces one column of `U` with the
+//!   spike `L⁻¹A_q`, cyclically permutes the spiked index to the
+//!   border, and eliminates the lone off-triangular row with
+//!   multipliers absorbed into the `L⁻¹` operator chain. The cyclic
+//!   permutation is *never materialized*: entries stay in their
+//!   physical slots and a logical↔physical position map drives the
+//!   triangular sweeps, so an update costs O(nnz) bookkeeping instead
+//!   of the old dense implementation's O(m²) row/column rotation, and
+//!   the factor memory drops from two dense `m × m` buffers to
+//!   O(nnz(L) + nnz(U)). `U` stays genuinely triangular and accurate
+//!   for hundreds of pivots, making full refactorizations rare.
+//!
+//! Both strategies expose **hypersparse** kernels
+//! ([`BasisFactorization::ftran_sparse`] /
+//! [`BasisFactorization::btran_sparse`]) operating on
+//! [`SparseVector`] work arrays: the triangular sweeps are
+//! column-oriented and skip every column whose intermediate value is
+//! zero, so an FTRAN of a 3-nonzero DLT column touches a handful of
+//! entries instead of O(m²) — the standard revised-simplex speedup for
+//! the paper's timing-chain LPs. The dense `ftran`/`btran` entry
+//! points remain as adapters (and, for [`ProductFormEta`], as an
+//! independent dense implementation the sparse kernels are
+//! property-tested against).
 //!
 //! Both implementations are driven identically by the primal
 //! phase-1/phase-2 loops, the dual-simplex repair pass and the
@@ -37,7 +49,7 @@
 //! [`should_refactorize`]: BasisFactorization::should_refactorize
 
 use crate::error::{Error, Result};
-use crate::linalg::{LuFactors, Matrix};
+use crate::linalg::{LuFactors, SparseMatrix, SparseVector};
 
 /// Refactorize the product-form eta file after this many updates.
 const PFE_REFACTOR_EVERY: usize = 48;
@@ -56,7 +68,7 @@ pub enum Factorization {
     /// Sparse LU + product-form eta file (extracted legacy behavior).
     #[default]
     ProductFormEta,
-    /// Forrest–Tomlin LU updating (explicit `U`, rare refactorization).
+    /// Forrest–Tomlin LU updating (sparse `U`, rare refactorization).
     ForrestTomlin,
 }
 
@@ -97,23 +109,32 @@ pub trait BasisFactorization {
     /// start).
     fn reset_identity(&mut self);
 
-    /// Replace the factorization with a fresh one of `b`. Errors when
-    /// `b` is (numerically) singular; the strategy is left ready for
+    /// Replace the factorization with a fresh one of `b` (CSC — the
+    /// basis columns are scattered straight from the constraint
+    /// matrix, never densified). Errors when `b` is (numerically)
+    /// singular; the strategy is left ready for
     /// [`BasisFactorization::reset_identity`].
-    fn refactorize(&mut self, b: &Matrix) -> Result<()>;
+    fn refactorize(&mut self, b: &SparseMatrix) -> Result<()>;
 
-    /// FTRAN: `out = B⁻¹ v`.
+    /// FTRAN: `out = B⁻¹ v` (dense adapter over the sparse kernel).
     fn ftran(&mut self, v: &[f64], out: &mut [f64]);
 
-    /// BTRAN: `out = B⁻ᵀ v`.
+    /// BTRAN: `out = B⁻ᵀ v` (dense adapter over the sparse kernel).
     fn btran(&mut self, v: &[f64], out: &mut [f64]);
 
+    /// Hypersparse FTRAN, in place: `v ← B⁻¹ v`. Work is proportional
+    /// to the nonzeros actually created, not the basis dimension.
+    fn ftran_sparse(&mut self, v: &mut SparseVector);
+
+    /// Hypersparse BTRAN, in place: `v ← B⁻ᵀ v`.
+    fn btran_sparse(&mut self, v: &mut SparseVector);
+
     /// Record a pivot: the entering column replaces the column basic in
-    /// row `r`, where `w = B⁻¹ A_q` is the result of the FTRAN the
-    /// driver just performed for that column. An error signals
+    /// row `r`, where `w = B⁻¹ A_q` is the (sparse) result of the FTRAN
+    /// the driver just performed for that column. An error signals
     /// numerical breakdown — the caller must refactorize from the (new)
     /// basis before the factorization is used again.
-    fn update(&mut self, r: usize, w: &[f64]) -> Result<()>;
+    fn update(&mut self, r: usize, w: &SparseVector) -> Result<()>;
 
     /// Updates recorded since the last (re)factorization (eta count,
     /// or Forrest–Tomlin spike count).
@@ -122,14 +143,22 @@ pub trait BasisFactorization {
     /// True when the update file is long enough that the driver should
     /// refactorize before the next pivot.
     fn should_refactorize(&self) -> bool;
+
+    /// Entries currently stored across the factors and the update file
+    /// — the sparse-memory diagnostic (a dense `L`/`U` pair would put
+    /// this at `2m²` regardless of basis sparsity).
+    fn storage_nnz(&self) -> usize;
 }
 
-/// One product-form eta: the pivot column `w = B_prev⁻¹ A_q` recorded
-/// at pivot row `r` (entries exclude row `r`, whose value is `wr`).
-struct Eta {
+/// One product-form eta head: the pivot column `w = B_prev⁻¹ A_q`
+/// recorded at pivot row `r`; its off-`r` entries live in the shared
+/// arena at `pool[start..end]` (no per-pivot allocation).
+#[derive(Debug, Clone, Copy)]
+struct EtaHead {
     r: usize,
     wr: f64,
-    entries: Vec<(usize, f64)>,
+    start: usize,
+    end: usize,
 }
 
 /// Sparse LU of the last refactorization plus a product-form eta file —
@@ -137,11 +166,16 @@ struct Eta {
 pub struct ProductFormEta {
     m: usize,
     lu: LuFactors,
-    etas: Vec<Eta>,
-    // BTRAN scratch (eta application happens before the LU transpose
-    // solve, which itself needs a scratch vector).
+    etas: Vec<EtaHead>,
+    /// Shared entry arena for all etas (reset with the file, so warm
+    /// re-solves reuse its capacity).
+    pool: Vec<(usize, f64)>,
+    // Dense BTRAN scratch (eta application happens before the LU
+    // transpose solve, which itself needs a scratch vector).
     u: Vec<f64>,
     t: Vec<f64>,
+    /// Sparse-kernel scratch.
+    sv: SparseVector,
 }
 
 impl ProductFormEta {
@@ -151,8 +185,10 @@ impl ProductFormEta {
             m,
             lu: LuFactors::identity(m),
             etas: Vec::new(),
+            pool: Vec::new(),
             u: vec![0.0; m],
             t: vec![0.0; m],
+            sv: SparseVector::with_dim(m),
         }
     }
 }
@@ -163,55 +199,92 @@ impl BasisFactorization for ProductFormEta {
     }
 
     fn reset_identity(&mut self) {
-        self.lu = LuFactors::identity(self.m);
+        self.lu.reset_identity(self.m);
         self.etas.clear();
+        self.pool.clear();
     }
 
-    fn refactorize(&mut self, b: &Matrix) -> Result<()> {
-        self.lu = LuFactors::factor(b)?;
+    fn refactorize(&mut self, b: &SparseMatrix) -> Result<()> {
+        self.lu.refactor_csc(b)?;
         self.etas.clear();
+        self.pool.clear();
         Ok(())
     }
 
+    // The dense entry points keep the original dense implementation —
+    // an independent oracle the sparse kernels are tested against.
     fn ftran(&mut self, v: &[f64], out: &mut [f64]) {
         self.lu.solve_into(v, out);
-        for eta in &self.etas {
-            let ur = out[eta.r] / eta.wr;
+        for &EtaHead { r, wr, start, end } in &self.etas {
+            let ur = out[r] / wr;
             if ur != 0.0 {
-                for &(i, wi) in &eta.entries {
+                for &(i, wi) in &self.pool[start..end] {
                     out[i] -= wi * ur;
                 }
             }
-            out[eta.r] = ur;
+            out[r] = ur;
         }
     }
 
     fn btran(&mut self, v: &[f64], out: &mut [f64]) {
         self.u.copy_from_slice(v);
-        for eta in self.etas.iter().rev() {
-            let mut acc = self.u[eta.r];
-            for &(i, wi) in &eta.entries {
+        for &EtaHead { r, wr, start, end } in self.etas.iter().rev() {
+            let mut acc = self.u[r];
+            for &(i, wi) in &self.pool[start..end] {
                 acc -= wi * self.u[i];
             }
-            self.u[eta.r] = acc / eta.wr;
+            self.u[r] = acc / wr;
         }
         self.lu.solve_transpose_into(&self.u, &mut self.t, out);
     }
 
-    fn update(&mut self, r: usize, w: &[f64]) -> Result<()> {
-        let wr = w[r];
+    fn ftran_sparse(&mut self, v: &mut SparseVector) {
+        self.lu.solve_sparse(v, &mut self.sv);
+        // Eta passes exploit RHS sparsity: a pivot row the vector never
+        // touches is skipped without reading its entries.
+        for &EtaHead { r, wr, start, end } in &self.etas {
+            let ur = v.get(r) / wr;
+            if ur != 0.0 {
+                for &(i, wi) in &self.pool[start..end] {
+                    v.add(i, -wi * ur);
+                }
+                v.set(r, ur);
+            }
+        }
+    }
+
+    fn btran_sparse(&mut self, v: &mut SparseVector) {
+        for &EtaHead { r, wr, start, end } in self.etas.iter().rev() {
+            let mut acc = v.get(r);
+            for &(i, wi) in &self.pool[start..end] {
+                acc -= wi * v.get(i);
+            }
+            if acc != 0.0 || v.get(r) != 0.0 {
+                v.set(r, acc / wr);
+            }
+        }
+        self.lu.solve_transpose_sparse(v, &mut self.sv);
+    }
+
+    fn update(&mut self, r: usize, w: &SparseVector) -> Result<()> {
+        let wr = w.get(r);
         if wr.abs() < 1e-13 {
             return Err(Error::Numerical(format!(
                 "product-form eta: pivot element {wr:.3e} too small in row {r}"
             )));
         }
-        let mut entries = Vec::new();
-        for (i, &wi) in w.iter().enumerate() {
-            if i != r && wi.abs() > 1e-12 {
-                entries.push((i, wi));
+        let start = self.pool.len();
+        for k in 0..w.nnz() {
+            let i = w.index_at(k);
+            if i == r {
+                continue;
+            }
+            let wi = w.get(i);
+            if wi.abs() > 1e-12 {
+                self.pool.push((i, wi));
             }
         }
-        self.etas.push(Eta { r, wr, entries });
+        self.etas.push(EtaHead { r, wr, start, end: self.pool.len() });
         Ok(())
     }
 
@@ -222,95 +295,104 @@ impl BasisFactorization for ProductFormEta {
     fn should_refactorize(&self) -> bool {
         self.etas.len() >= PFE_REFACTOR_EVERY
     }
+
+    fn storage_nnz(&self) -> usize {
+        self.lu.nnz() + self.pool.len() + self.etas.len()
+    }
 }
 
-/// One operation absorbed into the `L⁻¹` chain by a Forrest–Tomlin
-/// update, recorded in application order.
-enum LOp {
-    /// Left-rotate `z[from..m]` by one (row `from` moves to the end) —
-    /// the symmetric cyclic permutation that borders the spiked index.
-    Cycle { from: usize },
-    /// `z[row] -= mult * z[col]` — elimination of one entry of the
-    /// relocated row.
-    Elim { row: usize, col: usize, mult: f64 },
+/// One row elimination absorbed into the `L⁻¹` chain by a
+/// Forrest–Tomlin update (physical slot indices):
+/// `z[row] -= mult * z[col]`.
+#[derive(Debug, Clone, Copy)]
+struct Elim {
+    row: usize,
+    col: usize,
+    mult: f64,
 }
 
-/// Forrest–Tomlin LU updating over an explicitly maintained `U`.
+/// Forrest–Tomlin LU updating over a sparse, explicitly maintained
+/// `U`.
 ///
-/// Invariant: `B = L' · U_π` where `L'⁻¹` is the composition `ops ∘
-/// L₀⁻¹ ∘ P` (initial PLU row permutation and lower factor, then the
-/// recorded [`LOp`]s in order), `U` is upper triangular in its own
-/// index space, and `pos_to_u` maps basis positions to `U` columns.
+/// Invariant: `B = L' · U` where `L'⁻¹` is the composition
+/// `ops ∘ L₀⁻¹ ∘ P` (initial PLU row permutation and lower factor,
+/// then the recorded eliminations in order, all in *physical slot*
+/// space), and `U` is upper triangular in *logical* index space. The
+/// bordered cyclic permutation of the textbook algorithm is carried by
+/// the `pos`/`lpos` maps instead of moving data: physical slot `r`
+/// (row *and* column of the replaced basis position) simply becomes
+/// logical position `m−1`, which is what keeps updates O(nnz).
 pub struct ForrestTomlin {
     m: usize,
-    /// `perm[i]` = original row in pivot position `i` of the last PLU.
-    perm: Vec<usize>,
-    /// Strictly-lower unit-triangular multipliers of the last PLU
-    /// (row-major `m × m`; the upper part stays zero).
-    l: Vec<f64>,
-    /// The maintained upper-triangular factor (row-major `m × m`).
-    u: Vec<f64>,
-    /// Basis position → `U` index.
-    pos_to_u: Vec<usize>,
-    /// Row transformations absorbed into `L'⁻¹` since the last
+    /// PLU of the last refactorization. Only the permutation and the
+    /// lower factor are consulted after [`ForrestTomlin::refactorize`]
+    /// copies `U` out into the updatable sparse form below.
+    lu: LuFactors,
+    /// Off-diagonal entries of the maintained `U` by physical row:
+    /// `(physical col, value)`.
+    u_rows: Vec<Vec<(usize, f64)>>,
+    /// Off-diagonal entries by physical column: `(physical row, value)`.
+    u_cols: Vec<Vec<(usize, f64)>>,
+    /// Diagonal by physical slot.
+    u_diag: Vec<f64>,
+    /// Logical position → physical slot.
+    pos: Vec<usize>,
+    /// Physical slot → logical position.
+    lpos: Vec<usize>,
+    /// Row eliminations absorbed into `L'⁻¹` since the last
     /// refactorization, in application order.
-    ops: Vec<LOp>,
+    ops: Vec<Elim>,
     /// Updates recorded since the last refactorization.
     updates: usize,
-    scratch: Vec<f64>,
-    scratch2: Vec<f64>,
+    /// Scratch for the lower-factor halves of the sparse kernels.
+    sv: SparseVector,
+    /// Carrier for the dense adapter entry points.
+    dsv: SparseVector,
+    /// Spike workspace (`U · w`).
+    spike: SparseVector,
+    /// Relocated-row workspace during an update.
+    rowbuf: SparseVector,
 }
 
 impl ForrestTomlin {
     /// Identity-basis start.
     pub fn new(m: usize) -> ForrestTomlin {
-        let mut ft = ForrestTomlin {
+        ForrestTomlin {
             m,
-            perm: (0..m).collect(),
-            l: vec![0.0; m * m],
-            u: vec![0.0; m * m],
-            pos_to_u: (0..m).collect(),
+            lu: LuFactors::identity(m),
+            u_rows: vec![Vec::new(); m],
+            u_cols: vec![Vec::new(); m],
+            u_diag: vec![1.0; m],
+            pos: (0..m).collect(),
+            lpos: (0..m).collect(),
             ops: Vec::new(),
             updates: 0,
-            scratch: vec![0.0; m],
-            scratch2: vec![0.0; m],
-        };
-        ft.reset_identity();
-        ft
+            sv: SparseVector::with_dim(m),
+            dsv: SparseVector::with_dim(m),
+            spike: SparseVector::with_dim(m),
+            rowbuf: SparseVector::with_dim(m),
+        }
     }
 
-    /// `scratch = L'⁻¹ v` (the partial transform that lands in `U`-row
-    /// space).
-    fn apply_linv(&mut self, v: &[f64]) {
+    /// Reset the position maps, update state, and move `U` out of the
+    /// freshly computed PLU into the updatable sparse form (the PLU's
+    /// own copy is dropped afterwards so the upper factor is never
+    /// stored twice — only the permutation and `L₀` stay live).
+    fn adopt_factor(&mut self) {
         let m = self.m;
+        let (ur, uc, ud) = self.lu.upper_parts();
         for i in 0..m {
-            self.scratch[i] = v[self.perm[i]];
+            self.u_rows[i].clear();
+            self.u_rows[i].extend_from_slice(&ur[i]);
+            self.u_cols[i].clear();
+            self.u_cols[i].extend_from_slice(&uc[i]);
+            self.u_diag[i] = ud[i];
+            self.pos[i] = i;
+            self.lpos[i] = i;
         }
-        for i in 0..m {
-            let mut acc = self.scratch[i];
-            let row = &self.l[i * m..i * m + i];
-            for (j, &lv) in row.iter().enumerate() {
-                if lv != 0.0 {
-                    acc -= lv * self.scratch[j];
-                }
-            }
-            self.scratch[i] = acc;
-        }
-        for op in &self.ops {
-            match *op {
-                LOp::Cycle { from } => {
-                    let first = self.scratch[from];
-                    for k in from..m - 1 {
-                        self.scratch[k] = self.scratch[k + 1];
-                    }
-                    self.scratch[m - 1] = first;
-                }
-                LOp::Elim { row, col, mult } => {
-                    let zc = self.scratch[col];
-                    self.scratch[row] -= mult * zc;
-                }
-            }
-        }
+        self.lu.clear_upper();
+        self.ops.clear();
+        self.updates = 0;
     }
 }
 
@@ -321,210 +403,173 @@ impl BasisFactorization for ForrestTomlin {
 
     fn reset_identity(&mut self) {
         let m = self.m;
-        self.perm.clear();
-        self.perm.extend(0..m);
-        self.l.iter_mut().for_each(|v| *v = 0.0);
-        self.u.iter_mut().for_each(|v| *v = 0.0);
+        self.lu.reset_identity(m);
         for i in 0..m {
-            self.u[i * m + i] = 1.0;
-            self.pos_to_u[i] = i;
+            self.u_rows[i].clear();
+            self.u_cols[i].clear();
+            self.u_diag[i] = 1.0;
+            self.pos[i] = i;
+            self.lpos[i] = i;
         }
         self.ops.clear();
         self.updates = 0;
     }
 
-    fn refactorize(&mut self, b: &Matrix) -> Result<()> {
-        let m = self.m;
-        debug_assert_eq!(b.rows(), m);
-        debug_assert_eq!(b.cols(), m);
-        let mut lu = b.data().to_vec();
-        let mut perm: Vec<usize> = (0..m).collect();
-        for k in 0..m {
-            let mut p = k;
-            let mut max = lu[k * m + k].abs();
-            for i in (k + 1)..m {
-                let v = lu[i * m + k].abs();
-                if v > max {
-                    max = v;
-                    p = i;
-                }
-            }
-            if max < 1e-13 {
-                return Err(Error::Numerical(format!(
-                    "forrest-tomlin: singular basis at pivot {k}"
-                )));
-            }
-            if p != k {
-                perm.swap(p, k);
-                for j in 0..m {
-                    lu.swap(k * m + j, p * m + j);
-                }
-            }
-            let pivot = lu[k * m + k];
-            for i in (k + 1)..m {
-                let factor = lu[i * m + k] / pivot;
-                lu[i * m + k] = factor;
-                if factor != 0.0 {
-                    for j in (k + 1)..m {
-                        let v = lu[k * m + j];
-                        if v != 0.0 {
-                            lu[i * m + j] -= factor * v;
-                        }
-                    }
-                }
-            }
-        }
-        self.l.iter_mut().for_each(|v| *v = 0.0);
-        self.u.iter_mut().for_each(|v| *v = 0.0);
-        for i in 0..m {
-            for j in 0..m {
-                let v = lu[i * m + j];
-                if j < i {
-                    self.l[i * m + j] = v;
-                } else {
-                    self.u[i * m + j] = v;
-                }
-            }
-        }
-        self.perm = perm;
-        for p in 0..m {
-            self.pos_to_u[p] = p;
-        }
-        self.ops.clear();
-        self.updates = 0;
+    fn refactorize(&mut self, b: &SparseMatrix) -> Result<()> {
+        debug_assert_eq!(b.rows(), self.m);
+        debug_assert_eq!(b.cols(), self.m);
+        self.lu.refactor_csc(b).map_err(|e| {
+            Error::Numerical(format!("forrest-tomlin: {e}"))
+        })?;
+        self.adopt_factor();
         Ok(())
     }
 
     fn ftran(&mut self, v: &[f64], out: &mut [f64]) {
-        let m = self.m;
-        self.apply_linv(v);
-        // Back-substitute U y = scratch (U-column space).
-        for i in (0..m).rev() {
-            let mut acc = self.scratch[i];
-            let row = &self.u[i * m..(i + 1) * m];
-            for (j, s2) in self.scratch2.iter().enumerate().take(m).skip(i + 1) {
-                let uv = row[j];
-                if uv != 0.0 {
-                    acc -= uv * s2;
-                }
-            }
-            self.scratch2[i] = acc / row[i];
-        }
-        for p in 0..m {
-            out[p] = self.scratch2[self.pos_to_u[p]];
-        }
+        let mut carrier = std::mem::take(&mut self.dsv);
+        carrier.set_from_dense(v);
+        self.ftran_sparse(&mut carrier);
+        carrier.copy_into_dense(out);
+        carrier.clear();
+        self.dsv = carrier;
     }
 
     fn btran(&mut self, v: &[f64], out: &mut [f64]) {
-        let m = self.m;
-        // Permute the input (basis-position space) into U-column space.
-        for p in 0..m {
-            self.scratch2[self.pos_to_u[p]] = v[p];
-        }
-        // Forward-substitute Uᵀ s = c (Uᵀ is lower triangular).
-        for j in 0..m {
-            let mut acc = self.scratch2[j];
-            for i in 0..j {
-                let uv = self.u[i * m + j];
-                if uv != 0.0 {
-                    acc -= uv * self.scratch[i];
-                }
-            }
-            self.scratch[j] = acc / self.u[j * m + j];
-        }
-        // y = L'⁻ᵀ s: transposed ops in reverse order, then L₀⁻ᵀ and Pᵀ.
-        for op in self.ops.iter().rev() {
-            match *op {
-                LOp::Cycle { from } => {
-                    // Transpose of a left-rotation is the right-rotation.
-                    let last = self.scratch[m - 1];
-                    for k in (from..m - 1).rev() {
-                        self.scratch[k + 1] = self.scratch[k];
-                    }
-                    self.scratch[from] = last;
-                }
-                LOp::Elim { row, col, mult } => {
-                    let zr = self.scratch[row];
-                    self.scratch[col] -= mult * zr;
-                }
+        let mut carrier = std::mem::take(&mut self.dsv);
+        carrier.set_from_dense(v);
+        self.btran_sparse(&mut carrier);
+        carrier.copy_into_dense(out);
+        carrier.clear();
+        self.dsv = carrier;
+    }
+
+    fn ftran_sparse(&mut self, v: &mut SparseVector) {
+        // z = L₀⁻¹ P v …
+        self.lu.lower_solve_sparse(v, &mut self.sv);
+        // … then the absorbed eliminations, in order.
+        for &Elim { row, col, mult } in &self.ops {
+            let zc = v.get(col);
+            if zc != 0.0 {
+                v.add(row, -mult * zc);
             }
         }
-        for i in (0..m).rev() {
-            let mut acc = self.scratch[i];
-            for j in i + 1..m {
-                let lv = self.l[j * m + i];
-                if lv != 0.0 {
-                    acc -= lv * self.scratch[j];
-                }
+        // Back-substitute U x = z in logical order, column-oriented
+        // with zero-skip (hypersparse).
+        for &p in self.pos.iter().rev() {
+            let zp = v.get(p);
+            if zp == 0.0 {
+                continue;
             }
-            self.scratch[i] = acc;
-        }
-        for i in 0..m {
-            out[self.perm[i]] = self.scratch[i];
+            let xp = zp / self.u_diag[p];
+            v.set(p, xp);
+            for &(r, uv) in &self.u_cols[p] {
+                v.add(r, -uv * xp);
+            }
         }
     }
 
-    fn update(&mut self, r: usize, w: &[f64]) -> Result<()> {
+    fn btran_sparse(&mut self, v: &mut SparseVector) {
+        // Forward-substitute Uᵀ s = v in logical order (Uᵀ is lower
+        // triangular), column-oriented with zero-skip.
+        for &p in &self.pos {
+            let bp = v.get(p);
+            if bp == 0.0 {
+                continue;
+            }
+            let sp = bp / self.u_diag[p];
+            v.set(p, sp);
+            for &(c, uv) in &self.u_rows[p] {
+                v.add(c, -uv * sp);
+            }
+        }
+        // Transposed eliminations in reverse order …
+        for &Elim { row, col, mult } in self.ops.iter().rev() {
+            let zr = v.get(row);
+            if zr != 0.0 {
+                v.add(col, -mult * zr);
+            }
+        }
+        // … then L₀⁻ᵀ and Pᵀ.
+        self.lu.lower_transpose_solve_sparse(v, &mut self.sv);
+    }
+
+    fn update(&mut self, r: usize, w: &SparseVector) -> Result<()> {
         let m = self.m;
-        // w (basis-position space) → U-column space.
-        for p in 0..m {
-            self.scratch2[self.pos_to_u[p]] = w[p];
-        }
-        // Spike v = U · w (U-row space): the partial FTRAN L'⁻¹A_q
-        // recovered without re-touching the constraint matrix.
-        for i in 0..m {
-            let row = &self.u[i * m..(i + 1) * m];
-            let mut acc = 0.0;
-            for (j, s2) in self.scratch2.iter().enumerate().take(m).skip(i) {
-                let uv = row[j];
-                if uv != 0.0 {
-                    acc += uv * s2;
-                }
+        // Spike s = U·w (physical row space): the partial FTRAN
+        // L'⁻¹A_q recovered without re-touching the constraint matrix,
+        // accumulated column-wise over w's nonzeros only.
+        self.spike.resize_clear(m);
+        for k in 0..w.nnz() {
+            let j = w.index_at(k);
+            let wj = w.get(j);
+            if wj == 0.0 {
+                continue;
             }
-            self.scratch[i] = acc;
-        }
-        let t = self.pos_to_u[r];
-        // Replace column t of U with the spike.
-        for i in 0..m {
-            self.u[i * m + t] = self.scratch[i];
-        }
-        // Border the spiked index: symmetric cyclic rotation t..m-1.
-        if t + 1 < m {
-            self.scratch.copy_from_slice(&self.u[t * m..(t + 1) * m]);
-            for i in t..m - 1 {
-                self.u.copy_within((i + 1) * m..(i + 2) * m, i * m);
-            }
-            self.u[(m - 1) * m..m * m].copy_from_slice(&self.scratch);
-            for i in 0..m {
-                let row = &mut self.u[i * m..(i + 1) * m];
-                let save = row[t];
-                for j in t..m - 1 {
-                    row[j] = row[j + 1];
-                }
-                row[m - 1] = save;
-            }
-            self.ops.push(LOp::Cycle { from: t });
-            for p in 0..m {
-                let u = self.pos_to_u[p];
-                if u == t {
-                    self.pos_to_u[p] = m - 1;
-                } else if u > t {
-                    self.pos_to_u[p] = u - 1;
-                }
+            self.spike.add(j, self.u_diag[j] * wj);
+            for &(i, uv) in &self.u_cols[j] {
+                self.spike.add(i, uv * wj);
             }
         }
-        // The relocated row (old row t, now row m-1) is the only
-        // off-triangular part: eliminate its entries in columns
-        // t..m-2, absorbing the multipliers into the L'⁻¹ chain.
-        for j in t..m.saturating_sub(1) {
-            let e = self.u[(m - 1) * m + j];
+
+        let t = self.lpos[r];
+        // Drop the replaced column (physical slot r) from the row lists.
+        for &(i, _) in &self.u_cols[r] {
+            if let Some(ix) = self.u_rows[i].iter().position(|&(c, _)| c == r) {
+                self.u_rows[i].swap_remove(ix);
+            }
+        }
+        self.u_cols[r].clear();
+        // Insert the spike as the new column at slot r (it becomes
+        // logical column m−1, so every entry is legally upper
+        // triangular). Its entry in row r is the new diagonal seed.
+        for k in 0..self.spike.nnz() {
+            let i = self.spike.index_at(k);
+            if i == r {
+                continue;
+            }
+            let v = self.spike.get(i);
+            if v == 0.0 {
+                continue;
+            }
+            self.u_rows[i].push((r, v));
+            self.u_cols[r].push((i, v));
+        }
+        let diag_seed = self.spike.get(r);
+        self.spike.clear();
+
+        // Border the spiked index: rotate logical positions t..m-1
+        // (maps only; no data moves).
+        for k in t..m - 1 {
+            let p = self.pos[k + 1];
+            self.pos[k] = p;
+            self.lpos[p] = k;
+        }
+        self.pos[m - 1] = r;
+        self.lpos[r] = m - 1;
+
+        // The relocated row (physical r, now logical m−1) is the only
+        // off-triangular part: eliminate its entries at logical columns
+        // t..m−2, absorbing the multipliers into the L'⁻¹ chain.
+        self.rowbuf.resize_clear(m);
+        for &(c, v) in &self.u_rows[r] {
+            self.rowbuf.set(c, v);
+            if let Some(ix) = self.u_cols[c].iter().position(|&(rr, _)| rr == r) {
+                self.u_cols[c].swap_remove(ix);
+            }
+        }
+        self.u_rows[r].clear();
+        self.rowbuf.set(r, diag_seed);
+
+        let last = m.saturating_sub(1);
+        for &pj in &self.pos[t..last] {
+            let e = self.rowbuf.get(pj);
             if e == 0.0 {
                 continue;
             }
-            let d = self.u[j * m + j];
+            let d = self.u_diag[pj];
             if d.abs() < 1e-12 {
                 return Err(Error::Numerical(format!(
-                    "forrest-tomlin: zero diagonal {d:.3e} during update at column {j}"
+                    "forrest-tomlin: zero diagonal {d:.3e} during update at column {pj}"
                 )));
             }
             let mult = e / d;
@@ -533,20 +578,34 @@ impl BasisFactorization for ForrestTomlin {
                     "forrest-tomlin: unstable multiplier {mult:.3e} during update"
                 )));
             }
-            for k in j..m {
-                let v = self.u[j * m + k];
-                if v != 0.0 {
-                    self.u[(m - 1) * m + k] -= mult * v;
-                }
+            for &(c, v) in &self.u_rows[pj] {
+                self.rowbuf.add(c, -mult * v);
             }
-            self.u[(m - 1) * m + j] = 0.0;
-            self.ops.push(LOp::Elim { row: m - 1, col: j, mult });
+            self.rowbuf.set(pj, 0.0);
+            self.ops.push(Elim { row: r, col: pj, mult });
         }
-        if self.u[(m - 1) * m + (m - 1)].abs() < 1e-12 {
+        let new_diag = self.rowbuf.get(r);
+        if new_diag.abs() < 1e-12 {
             return Err(Error::Numerical(
                 "forrest-tomlin: singular updated factor".into(),
             ));
         }
+        self.u_diag[r] = new_diag;
+        // Rebuild the (now triangular) relocated row from the
+        // workspace.
+        for k in 0..self.rowbuf.nnz() {
+            let c = self.rowbuf.index_at(k);
+            if c == r {
+                continue;
+            }
+            let v = self.rowbuf.get(c);
+            if v == 0.0 {
+                continue;
+            }
+            self.u_rows[r].push((c, v));
+            self.u_cols[c].push((r, v));
+        }
+        self.rowbuf.clear();
         self.updates += 1;
         Ok(())
     }
@@ -558,22 +617,39 @@ impl BasisFactorization for ForrestTomlin {
     fn should_refactorize(&self) -> bool {
         self.updates >= FT_REFACTOR_EVERY || self.ops.len() >= FT_OPS_PER_ROW * self.m + 512
     }
+
+    fn storage_nnz(&self) -> usize {
+        let u: usize = self.u_cols.iter().map(|c| c.len()).sum();
+        self.lu.nnz() + u + self.m + self.ops.len()
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::Matrix;
     use crate::util::rng::{Pcg32, Rng};
 
     fn random_nonsingular(rng: &mut Pcg32, m: usize) -> Matrix {
         let mut b = Matrix::zeros(m, m);
         for i in 0..m {
             for j in 0..m {
-                // Diagonally dominant → safely nonsingular.
-                b[(i, j)] = if i == j { 4.0 + rng.range_f64(0.0, 2.0) } else { rng.range_f64(-1.0, 1.0) };
+                // Sparse-ish, diagonally dominant → safely nonsingular
+                // with the structure LP bases actually have.
+                if i == j {
+                    b[(i, j)] = 4.0 + rng.range_f64(0.0, 2.0);
+                } else if rng.f64() < 0.4 {
+                    b[(i, j)] = rng.range_f64(-1.0, 1.0);
+                }
             }
         }
         b
+    }
+
+    fn sv(v: &[f64]) -> SparseVector {
+        let mut s = SparseVector::default();
+        s.set_from_dense(v);
+        s
     }
 
     fn assert_vec_close(a: &[f64], b: &[f64], tol: f64, ctx: &str) {
@@ -584,7 +660,7 @@ mod tests {
 
     /// Both strategies, driven through a random pivot sequence, must
     /// agree with a from-scratch LU of the current basis on FTRAN and
-    /// BTRAN.
+    /// BTRAN — through the dense adapters *and* the sparse kernels.
     #[test]
     fn strategies_agree_with_fresh_lu_under_updates() {
         let mut rng = Pcg32::new(99);
@@ -599,12 +675,14 @@ mod tests {
 
             let mut pfe = ProductFormEta::new(m);
             let mut ft = ForrestTomlin::new(m);
-            pfe.refactorize(&b0).unwrap();
-            ft.refactorize(&b0).unwrap();
+            let b0s = SparseMatrix::from_dense(&b0, 0.0);
+            pfe.refactorize(&b0s).unwrap();
+            ft.refactorize(&b0s).unwrap();
 
             let mut w_pfe = vec![0.0; m];
             let mut w_ft = vec![0.0; m];
             let mut w_ref = vec![0.0; m];
+            let mut w_sp = vec![0.0; m];
             for step in 0..20 {
                 // Current-basis oracle.
                 let mut bmat = Matrix::zeros(m, m);
@@ -621,6 +699,17 @@ mod tests {
                 ft.ftran(&v, &mut w_ft);
                 assert_vec_close(&w_pfe, &w_ref, 1e-7, &format!("m={m} step={step} pfe ftran"));
                 assert_vec_close(&w_ft, &w_ref, 1e-7, &format!("m={m} step={step} ft ftran"));
+                // Sparse kernels agree with the dense adapters.
+                let mut vs = sv(&v);
+                pfe.ftran_sparse(&mut vs);
+                vs.copy_into_dense(&mut w_sp);
+                let ctx = format!("m={m} step={step} pfe ftran_sparse");
+                assert_vec_close(&w_sp, &w_pfe, 1e-10, &ctx);
+                let mut vs = sv(&v);
+                ft.ftran_sparse(&mut vs);
+                vs.copy_into_dense(&mut w_sp);
+                let ctx = format!("m={m} step={step} ft ftran_sparse");
+                assert_vec_close(&w_sp, &w_ft, 1e-10, &ctx);
 
                 let mut s = vec![0.0; m];
                 fresh.solve_transpose_into(&v, &mut s, &mut w_ref);
@@ -628,6 +717,16 @@ mod tests {
                 ft.btran(&v, &mut w_ft);
                 assert_vec_close(&w_pfe, &w_ref, 1e-7, &format!("m={m} step={step} pfe btran"));
                 assert_vec_close(&w_ft, &w_ref, 1e-7, &format!("m={m} step={step} ft btran"));
+                let mut vs = sv(&v);
+                pfe.btran_sparse(&mut vs);
+                vs.copy_into_dense(&mut w_sp);
+                let ctx = format!("m={m} step={step} pfe btran_sparse");
+                assert_vec_close(&w_sp, &w_pfe, 1e-10, &ctx);
+                let mut vs = sv(&v);
+                ft.btran_sparse(&mut vs);
+                vs.copy_into_dense(&mut w_sp);
+                let ctx = format!("m={m} step={step} ft btran_sparse");
+                assert_vec_close(&w_sp, &w_ft, 1e-10, &ctx);
 
                 // Pivot: a random pool column enters at a row where the
                 // FTRAN result is comfortably nonzero.
@@ -642,8 +741,8 @@ mod tests {
                     continue;
                 }
                 ft.ftran(aq, &mut w_ft);
-                pfe.update(r, &w_pfe).unwrap();
-                ft.update(r, &w_ft).unwrap();
+                pfe.update(r, &sv(&w_pfe)).unwrap();
+                ft.update(r, &sv(&w_ft)).unwrap();
                 cols[r] = aq.clone();
             }
             assert_eq!(pfe.update_len(), ft.update_len());
@@ -660,6 +759,10 @@ mod tests {
             assert_vec_close(&out, &v, 1e-12, strategy.as_str());
             f.btran(&v, &mut out);
             assert_vec_close(&out, &v, 1e-12, strategy.as_str());
+            let mut s = sv(&v);
+            f.ftran_sparse(&mut s);
+            s.copy_into_dense(&mut out);
+            assert_vec_close(&out, &v, 1e-12, strategy.as_str());
             assert_eq!(f.update_len(), 0);
             assert!(!f.should_refactorize());
         }
@@ -667,10 +770,64 @@ mod tests {
 
     #[test]
     fn singular_refactorization_rejected() {
-        let b = Matrix::zeros(3, 3);
+        let b = SparseMatrix::zeros(3, 3);
         for strategy in [Factorization::ProductFormEta, Factorization::ForrestTomlin] {
             let mut f = strategy.build(3);
             assert!(f.refactorize(&b).is_err(), "{}", strategy.as_str());
+        }
+    }
+
+    /// The O(m²)-memory regression guard: on a sparse basis, both
+    /// strategies must store O(nnz) — far below the two dense `m × m`
+    /// buffers the old Forrest–Tomlin carried — even after a long
+    /// update sequence.
+    #[test]
+    fn factor_storage_stays_sparse() {
+        let m = 120;
+        let mut rng = Pcg32::new(7);
+        // Bidiagonal-ish basis: ~2 entries per column, like the DLT
+        // timing chains.
+        let mut trips: Vec<(usize, usize, f64)> = Vec::new();
+        for j in 0..m {
+            trips.push((j, j, 2.0 + rng.f64()));
+            if j + 1 < m {
+                trips.push((j + 1, j, rng.range_f64(-1.0, 1.0)));
+            }
+        }
+        let b = SparseMatrix::from_triplets(m, m, &trips);
+        for strategy in [Factorization::ProductFormEta, Factorization::ForrestTomlin] {
+            let mut f = strategy.build(m);
+            f.refactorize(&b).unwrap();
+            // A few sparse updates so the update file is exercised too.
+            let mut w = SparseVector::with_dim(m);
+            for k in 0..10 {
+                let q = (11 * k + 3) % m;
+                w.clear();
+                w.set(q, 1.5);
+                if q + 1 < m {
+                    w.set(q + 1, -0.5);
+                }
+                f.ftran_sparse(&mut w);
+                let r = w
+                    .indices()
+                    .iter()
+                    .copied()
+                    .max_by(|&a, &b| w.get(a).abs().partial_cmp(&w.get(b).abs()).unwrap())
+                    .unwrap();
+                if w.get(r).abs() < 1e-6 {
+                    continue;
+                }
+                f.update(r, &w).unwrap();
+            }
+            let nnz = f.storage_nnz();
+            assert!(
+                nnz < m * m / 8,
+                "{}: {} stored entries on a {}-row basis (dense pair would be {})",
+                f.name(),
+                nnz,
+                m,
+                2 * m * m
+            );
         }
     }
 

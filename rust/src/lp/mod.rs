@@ -5,9 +5,12 @@
 //! revised simplex over sparse column storage with basis warm starts
 //! ([`revised`]); its two per-pivot policies are strategy layers —
 //! basis factorization ([`factorization`]: product-form eta file or
-//! Forrest–Tomlin LU updates) and pricing ([`pricing`]: Dantzig,
-//! devex, steepest edge) — selected through [`SimplexOptions`] and
-//! threaded end-to-end from the `dlt::api` wire options. The original
+//! Forrest–Tomlin LU updates, both with hypersparse FTRAN/BTRAN
+//! kernels) and pricing ([`pricing`]: Dantzig, devex, steepest edge,
+//! candidate-list partial) — selected through [`SimplexOptions`] and
+//! threaded end-to-end from the `dlt::api` wire options. Work buffers
+//! live in a per-worker [`scratch::SolverScratch`] pool so warm
+//! re-solves allocate nothing in steady state. The original
 //! dense two-phase tableau remains available as a fallback/oracle
 //! ([`simplex::SolverBackend::DenseTableau`]). Both backends keep a
 //! Bland anti-cycling fallback and extract duals — no external LP
@@ -38,6 +41,7 @@ pub mod presolve;
 pub mod pricing;
 pub mod problem;
 pub mod revised;
+pub mod scratch;
 pub mod simplex;
 pub mod solution;
 pub mod standard;
@@ -48,7 +52,8 @@ pub use presolve::{presolve, Presolved, PresolveStats};
 pub use pricing::{Pricing, PricingRule};
 pub use problem::{Cmp, Constraint, LpProblem};
 pub use revised::Basis;
-pub use simplex::{solve, solve_warm, solve_with, SimplexOptions, SolverBackend};
+pub use scratch::SolverScratch;
+pub use simplex::{solve, solve_warm, solve_warm_scratch, solve_with, SimplexOptions, SolverBackend};
 pub use solution::LpSolution;
 pub use standard::StandardForm;
 pub use warm::WarmCache;

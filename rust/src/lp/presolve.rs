@@ -530,6 +530,9 @@ impl Presolved {
             refactorizations: sol.refactorizations,
             peak_update_len: sol.peak_update_len,
             weight_resets: sol.weight_resets,
+            candidate_hits: sol.candidate_hits,
+            candidate_refreshes: sol.candidate_refreshes,
+            avg_ftran_nnz: sol.avg_ftran_nnz,
             duals,
             basis: sol.basis.clone(),
         }

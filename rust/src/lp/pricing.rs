@@ -17,6 +17,14 @@
 //!   style recurrence: weights track `‖B⁻¹A_j‖²` using both the pivot
 //!   row and a reference FTRAN/BTRAN pair per pivot (costlier per
 //!   iteration, fewest iterations on long thin problems).
+//! - [`PartialDantzig`] — candidate-list partial pricing (the ROADMAP
+//!   bullet): price a small rotating window of columns per iteration
+//!   instead of the whole reduced-cost vector, refreshing the window
+//!   with a rotating full scan whenever it yields no candidate. The
+//!   driver computes reduced costs *only* for the window on a hit, so
+//!   the per-iteration pricing pass drops from O(nnz(A)) to
+//!   O(nnz(A_window)) on the widest sweep grids. Optimality is only
+//!   ever declared from a full pass, so the rule stays exact.
 //!
 //! Weights are a *pivot-choice heuristic*, never a correctness
 //! concern: every rule only selects among columns with `d_j < −eps`,
@@ -38,15 +46,20 @@ pub enum Pricing {
     Devex,
     /// Projected steepest edge (exact-style recurrence).
     SteepestEdge,
+    /// Candidate-list partial pricing (rotating window, Dantzig
+    /// within the window, full-scan refresh on miss).
+    Partial,
 }
 
 impl Pricing {
-    /// Stable wire name (`dantzig` / `devex` / `steepest_edge`).
+    /// Stable wire name (`dantzig` / `devex` / `steepest_edge` /
+    /// `partial`).
     pub fn as_str(self) -> &'static str {
         match self {
             Pricing::Dantzig => "dantzig",
             Pricing::Devex => "devex",
             Pricing::SteepestEdge => "steepest_edge",
+            Pricing::Partial => "partial",
         }
     }
 
@@ -56,6 +69,7 @@ impl Pricing {
             "dantzig" => Some(Pricing::Dantzig),
             "devex" => Some(Pricing::Devex),
             "steepest_edge" => Some(Pricing::SteepestEdge),
+            "partial" => Some(Pricing::Partial),
             _ => None,
         }
     }
@@ -66,6 +80,7 @@ impl Pricing {
             Pricing::Dantzig => Box::new(Dantzig),
             Pricing::Devex => Box::new(Devex::default()),
             Pricing::SteepestEdge => Box::new(SteepestEdge::default()),
+            Pricing::Partial => Box::new(PartialDantzig::default()),
         }
     }
 }
@@ -131,6 +146,40 @@ pub trait PricingRule {
     /// Times the reference framework was rebuilt after weight
     /// overflow.
     fn weight_resets(&self) -> usize;
+
+    /// Fill `out` with the candidate window this rule wants priced
+    /// *before* the full pass. Returning `false` (the default) means
+    /// the rule prices every column and the driver skips the partial
+    /// step entirely.
+    fn gather_candidates(&self, _out: &mut Vec<usize>) -> bool {
+        false
+    }
+
+    /// Select among the candidate window only, given reduced costs
+    /// that are fresh *for the window columns* (others are stale).
+    /// `None` is a miss: the driver then runs the full pricing pass
+    /// and calls [`PricingRule::select_entering`], which doubles as
+    /// the window refresh.
+    fn select_from_candidates(
+        &mut self,
+        _d: &[f64],
+        _in_basis: &[bool],
+        _eps: f64,
+    ) -> Option<usize> {
+        None
+    }
+
+    /// Iterations that entered from the candidate window without a
+    /// full pricing pass (partial rules only).
+    fn candidate_hits(&self) -> usize {
+        0
+    }
+
+    /// Full pricing passes that rebuilt the candidate window (partial
+    /// rules only).
+    fn candidate_refreshes(&self) -> usize {
+        0
+    }
 }
 
 /// Most negative reduced cost — the rule the driver hardwired before
@@ -338,6 +387,142 @@ impl PricingRule for SteepestEdge {
     }
 }
 
+/// Window capacity for [`PartialDantzig`]: ≈ √ncols, clamped to a
+/// useful range.
+fn partial_window_cap(ncols: usize) -> usize {
+    ((ncols as f64).sqrt().ceil() as usize).clamp(8, 128)
+}
+
+/// Candidate-list partial pricing: Dantzig within a small rotating
+/// window of columns. On a *hit* the driver priced only the window —
+/// the per-iteration win. On a *miss* (window empty or no violating
+/// reduced cost in it) the driver runs the full pass and
+/// [`PricingRule::select_entering`] rebuilds the window with a
+/// rotating scan, so consecutive refreshes walk different parts of
+/// the column range and no column is starved. Optimality is only ever
+/// declared from a full pass, so the rule is exact; the driver's
+/// Bland fallback still guarantees termination under degeneracy.
+#[derive(Default)]
+pub struct PartialDantzig {
+    /// Current candidate window (column indices).
+    window: Vec<usize>,
+    /// Rotating scan start for the next refresh.
+    cursor: usize,
+    /// Window capacity (set at [`PricingRule::reset`]).
+    cap: usize,
+    hits: usize,
+    refreshes: usize,
+}
+
+impl PricingRule for PartialDantzig {
+    fn name(&self) -> &'static str {
+        "partial"
+    }
+
+    fn reset(&mut self, ncols: usize) {
+        self.window.clear();
+        self.cursor = 0;
+        self.cap = partial_window_cap(ncols);
+    }
+
+    /// Full pass — doubles as the window refresh. Scans the columns in
+    /// rotating order from the cursor, collecting violating columns
+    /// into the window; stops early once the window is full (progress
+    /// is then guaranteed, so optimality need not be proven). `None`
+    /// only after a complete scan found nothing, which is exact.
+    fn select_entering(&mut self, d: &[f64], in_basis: &[bool], eps: f64) -> Option<usize> {
+        self.refreshes += 1;
+        self.window.clear();
+        let n = d.len();
+        if n == 0 {
+            return None;
+        }
+        let start = self.cursor % n;
+        let mut best: Option<usize> = None;
+        let mut best_d = -eps;
+        for step in 0..n {
+            let j = (start + step) % n;
+            if in_basis[j] {
+                continue;
+            }
+            let dj = d[j];
+            if dj < -eps {
+                self.window.push(j);
+                if dj < best_d {
+                    best_d = dj;
+                    best = Some(j);
+                }
+                if self.window.len() >= self.cap {
+                    self.cursor = (j + 1) % n;
+                    return best;
+                }
+            }
+        }
+        self.cursor = start;
+        best
+    }
+
+    fn gather_candidates(&self, out: &mut Vec<usize>) -> bool {
+        out.clear();
+        out.extend_from_slice(&self.window);
+        true
+    }
+
+    fn select_from_candidates(
+        &mut self,
+        d: &[f64],
+        in_basis: &[bool],
+        eps: f64,
+    ) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        let mut best_d = -eps;
+        for &j in &self.window {
+            if in_basis[j] {
+                continue;
+            }
+            let dj = d[j];
+            if dj < best_d {
+                best_d = dj;
+                best = Some(j);
+            }
+        }
+        if best.is_some() {
+            self.hits += 1;
+        }
+        best
+    }
+
+    fn needs_pivot_row(&self) -> bool {
+        false
+    }
+
+    fn needs_reference_ftran(&self) -> bool {
+        false
+    }
+
+    fn update(&mut self, _ctx: &PivotContext<'_>) {}
+
+    fn weight(&self, _j: usize) -> f64 {
+        1.0
+    }
+
+    fn uses_weights(&self) -> bool {
+        false
+    }
+
+    fn weight_resets(&self) -> usize {
+        0
+    }
+
+    fn candidate_hits(&self) -> usize {
+        self.hits
+    }
+
+    fn candidate_refreshes(&self) -> usize {
+        self.refreshes
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -407,9 +592,62 @@ mod tests {
 
     #[test]
     fn wire_names_roundtrip() {
-        for p in [Pricing::Dantzig, Pricing::Devex, Pricing::SteepestEdge] {
+        for p in
+            [Pricing::Dantzig, Pricing::Devex, Pricing::SteepestEdge, Pricing::Partial]
+        {
             assert_eq!(Pricing::parse(p.as_str()), Some(p));
         }
         assert_eq!(Pricing::parse("bland"), None);
+    }
+
+    #[test]
+    fn partial_window_hit_miss_refresh() {
+        let mut p = PartialDantzig::default();
+        p.reset(6);
+        // No window yet: the candidate step misses, the full pass
+        // refreshes and returns the most negative column.
+        let free = [false; 6];
+        let mut buf = Vec::new();
+        assert!(p.gather_candidates(&mut buf));
+        assert!(buf.is_empty());
+        let d = [0.0, -1.0, -3.0, 0.0, -2.0, 0.0];
+        assert_eq!(p.select_from_candidates(&d, &free, 1e-9), None);
+        assert_eq!(p.select_entering(&d, &free, 1e-9), Some(2));
+        assert_eq!(p.candidate_refreshes(), 1);
+        // The window now holds the violating columns: a hit prices
+        // only those.
+        assert!(p.gather_candidates(&mut buf));
+        assert!(buf.contains(&1) && buf.contains(&2) && buf.contains(&4));
+        assert_eq!(p.select_from_candidates(&d, &free, 1e-9), Some(2));
+        assert_eq!(p.candidate_hits(), 1);
+        // Columns that went basic are skipped inside the window.
+        let basic2 = [false, false, true, false, false, false];
+        assert_eq!(p.select_from_candidates(&d, &basic2, 1e-9), Some(4));
+        // Optimality is only declared from a full scan.
+        let opt = [0.0; 6];
+        assert_eq!(p.select_from_candidates(&opt, &free, 1e-9), None);
+        assert_eq!(p.select_entering(&opt, &free, 1e-9), None);
+    }
+
+    #[test]
+    fn partial_refresh_rotates_and_caps() {
+        let mut p = PartialDantzig::default();
+        let n = 2000;
+        p.reset(n);
+        let d = vec![-1.0; n];
+        let in_basis = vec![false; n];
+        let first = p.select_entering(&d, &in_basis, 1e-9).unwrap();
+        let mut w1 = Vec::new();
+        p.gather_candidates(&mut w1);
+        assert!(w1.len() <= 128, "window capped, got {}", w1.len());
+        // A second refresh starts where the first stopped: disjoint
+        // windows over a uniformly-violating vector.
+        let second = p.select_entering(&d, &in_basis, 1e-9).unwrap();
+        let mut w2 = Vec::new();
+        p.gather_candidates(&mut w2);
+        assert!(w2.iter().all(|j| !w1.contains(j)), "rotation must advance");
+        assert_ne!(first, second);
+        assert!(!p.uses_weights());
+        assert_eq!(p.weight(0), 1.0);
     }
 }

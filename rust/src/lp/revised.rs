@@ -5,9 +5,18 @@
 //! everything per iteration from the *original* sparse columns:
 //!
 //! - **BTRAN** `y = B⁻ᵀ c_B`, then pricing as `d_j = c_j − y·A_j` — a
-//!   sparse dot per column, O(nnz(A)) per pass;
+//!   sparse dot per column, O(nnz(A)) per pass (or O(nnz) of a small
+//!   candidate window under partial pricing);
 //! - **FTRAN** `w = B⁻¹ A_q` for the ratio test;
 //! - one factorization **update** per pivot.
+//!
+//! The whole per-iteration path is **hypersparse**: FTRAN/BTRAN
+//! right-hand sides travel as [`SparseVector`] work arrays through the
+//! factorization's sparse kernels, the ratio test and the basic-value
+//! update iterate only the FTRAN result's nonzeros, and the
+//! factorization update consumes the sparse vector directly. On the
+//! paper's timing-chain LPs an iteration touches tens of entries where
+//! the dense path touched O(m²).
 //!
 //! The two per-pivot policies are strategy layers, selected through
 //! [`SimplexOptions`]:
@@ -17,9 +26,16 @@
 //!   Forrest–Tomlin LU updating, which refactorizes far less often on
 //!   long pivot sequences;
 //! - **which column enters** — [`super::pricing`]: Dantzig (default),
-//!   devex, or projected steepest edge. The same permanent Bland
+//!   devex, projected steepest edge, or candidate-list partial
+//!   pricing (`partial`), whose window hits let the driver skip the
+//!   full reduced-cost pass entirely. The same permanent Bland
 //!   fallback and stall detection as the dense tableau guarantee
 //!   termination regardless of rule.
+//!
+//! All work buffers live in a per-worker [`SolverScratch`] pool
+//! ([`solve_revised_scratch`]): repeated warm solves through one
+//! scratch — the `solve_batch` / sweep steady state — allocate
+//! nothing in this module.
 //!
 //! Phase 1 starts from the slack/artificial identity basis;
 //! [`solve_revised`] can instead **warm-start** from a previous optimal
@@ -40,14 +56,15 @@
 //! handful of pivots and phase 1 never runs —
 //! [`LpSolution::phase1_iterations`] stays 0.
 
-use super::factorization::BasisFactorization;
-use super::pricing::{PivotContext, PricingRule};
+use super::factorization::{BasisFactorization, Factorization};
+use super::pricing::{PivotContext, Pricing, PricingRule};
 use super::problem::LpProblem;
+use super::scratch::SolverScratch;
 use super::simplex::SimplexOptions;
 use super::solution::LpSolution;
 use super::standard::{AuxKind, StandardForm};
 use crate::error::{Error, Result};
-use crate::linalg::Matrix;
+use crate::linalg::{SparseMatrix, SparseVector};
 
 /// A simplex basis: for each constraint row, the column (structural or
 /// auxiliary, in [`StandardForm`] numbering) basic in that row.
@@ -67,44 +84,61 @@ impl Basis {
     }
 }
 
-/// Solve `p`, optionally warm-starting from `warm`. A warm basis that
-/// factorizes but is primal-infeasible for the new rhs is repaired by
-/// the dual simplex when it is still dual-feasible; only unusable
-/// bases (wrong shape, singular, dual-infeasible, or a stalled dual
-/// repair) fall back to a cold two-phase start.
+/// Solve `p`, optionally warm-starting from `warm` (throwaway scratch
+/// — see [`solve_revised_scratch`] for the pooled entry point).
 pub fn solve_revised(
     p: &LpProblem,
     opts: &SimplexOptions,
     warm: Option<&Basis>,
 ) -> Result<LpSolution> {
+    let mut scratch = SolverScratch::new();
+    solve_revised_scratch(p, opts, warm, &mut scratch)
+}
+
+/// Solve `p` through a per-worker [`SolverScratch`] pool, optionally
+/// warm-starting from `warm`. A warm basis that factorizes but is
+/// primal-infeasible for the new rhs is repaired by the dual simplex
+/// when it is still dual-feasible; only unusable bases (wrong shape,
+/// singular, dual-infeasible, or a stalled dual repair) fall back to a
+/// cold two-phase start. The scratch's buffers are borrowed for the
+/// duration of the solve and returned afterwards — steady-state warm
+/// re-solves allocate nothing here.
+pub fn solve_revised_scratch(
+    p: &LpProblem,
+    opts: &SimplexOptions,
+    warm: Option<&Basis>,
+    scratch: &mut SolverScratch,
+) -> Result<LpSolution> {
     let sf = StandardForm::equality(p);
-    let mut s = Revised::new(&sf, opts);
-    let mut warmed = false;
-    if let Some(w) = warm {
-        match s.try_warm_start(w) {
-            WarmStart::Feasible => warmed = true,
-            WarmStart::PrimalInfeasible => {
-                let before = s.iterations;
-                match s.dual_simplex() {
-                    Ok(true) => warmed = true,
-                    // Gave up (dual-infeasible basis, stall, or a
-                    // numerical wobble): pretend the warm attempt never
-                    // happened and fall back to a cold start.
-                    Ok(false) | Err(_) => {
-                        s.iterations = before;
-                        s.dual_iters = 0;
-                    }
-                }
+    let mut s = Revised::new(&sf, opts, scratch);
+    let result = s.drive(p, opts, warm);
+    s.stash(scratch);
+    result
+}
+
+/// Rebuild the pooled sparse basis matrix for a candidate set of
+/// basic columns (artificial ids become unit columns) through the
+/// reusable triplet buffer — the basis is never densified and the
+/// warm-path assembly allocates nothing once the buffers are warm.
+fn fill_basis_sparse(
+    sf: &StandardForm,
+    ncols: usize,
+    m: usize,
+    cols: &[usize],
+    trips: &mut Vec<(usize, usize, f64)>,
+    mat: &mut SparseMatrix,
+) {
+    trips.clear();
+    for (k, &bv) in cols.iter().enumerate() {
+        if bv < ncols {
+            for (i, v) in sf.a.col(bv) {
+                trips.push((i, k, v));
             }
-            WarmStart::Unusable => {}
+        } else {
+            trips.push((bv - ncols, k, 1.0));
         }
     }
-    if !warmed {
-        s.cold_start();
-        s.phase1()?;
-    }
-    s.run(Phase::Two)?;
-    s.extract(p, opts)
+    mat.refill_from_triplets(m, m, trips);
 }
 
 /// Outcome of adopting a warm basis.
@@ -139,6 +173,9 @@ struct Revised<'a> {
     fact: Box<dyn BasisFactorization>,
     /// Pricing strategy (entering-column choice + weights).
     pricing: Box<dyn PricingRule>,
+    /// Strategy tags, for returning the objects to the scratch pool.
+    fact_kind: Factorization,
+    pricing_kind: Pricing,
     eps: f64,
     feas_eps: f64,
     max_iters: usize,
@@ -152,43 +189,101 @@ struct Revised<'a> {
     refactorizations: usize,
     /// Peak update-file length observed (etas / FT spikes).
     peak_update_len: usize,
-    // Scratch buffers (length m unless noted), reused across
-    // iterations.
-    col_buf: Vec<f64>,
-    w: Vec<f64>,
-    y: Vec<f64>,
-    cb: Vec<f64>,
+    /// FTRAN nonzero tally (hypersparsity diagnostic).
+    ftran_nnz_sum: usize,
+    ftran_count: usize,
+    /// Pricing-rule counter baselines at solve start: pooled rule
+    /// objects persist across solves, so the solution must report
+    /// per-solve deltas, not lifetime totals.
+    weight_resets0: usize,
+    candidate_hits0: usize,
+    candidate_refreshes0: usize,
+    // Work vectors (sparse kernels), reused across iterations and —
+    // via the scratch pool — across solves.
+    /// FTRAN result `B⁻¹ A_q`.
+    w: SparseVector,
+    /// BTRAN result (pricing duals, or the dual loop's row vector).
+    y: SparseVector,
+    /// `B⁻ᵀ w` for the steepest-edge reference recurrence.
+    vref: SparseVector,
     /// Dual-simplex pivot-row vector `B⁻ᵀ e_r` (kept separate from `y`
     /// because one dual iteration needs both the row and the duals).
     rho: Vec<f64>,
-    /// `B⁻ᵀ w` for the steepest-edge reference recurrence.
-    vref: Vec<f64>,
     /// Reduced costs per column (length ncols).
     d: Vec<f64>,
     /// Pivot row `α_r` per column (length ncols; weighted rules only).
     alpha_r: Vec<f64>,
     /// `A_j·vref` per column (length ncols; steepest edge only).
     adv: Vec<f64>,
+    /// Candidate window borrowed from the pricing rule each iteration.
+    cand_buf: Vec<usize>,
+    /// Triplet buffer for sparse basis assembly.
+    trip_buf: Vec<(usize, usize, f64)>,
+    /// Pooled CSC basis view (rebuilt in place per refactorization).
+    basis_mat: SparseMatrix,
 }
 
 impl<'a> Revised<'a> {
-    fn new(sf: &'a StandardForm, opts: &SimplexOptions) -> Revised<'a> {
+    fn new(
+        sf: &'a StandardForm,
+        opts: &SimplexOptions,
+        scratch: &mut SolverScratch,
+    ) -> Revised<'a> {
         let m = sf.b.len();
         let ncols = sf.a.cols();
         let max_iters =
             if opts.max_iters == 0 { 200 * (m + ncols + 1) } else { opts.max_iters };
-        let fact = opts.factorization.build(m);
-        let mut pricing = opts.pricing.build();
+        let fact = scratch.take_fact(opts.factorization, m);
+        let mut pricing = scratch.take_pricing(opts.pricing);
         pricing.reset(ncols);
+        let weight_resets0 = pricing.weight_resets();
+        let candidate_hits0 = pricing.candidate_hits();
+        let candidate_refreshes0 = pricing.candidate_refreshes();
+
+        let mut basis = std::mem::take(&mut scratch.basis);
+        basis.clear();
+        basis.resize(m, usize::MAX);
+        let mut in_basis = std::mem::take(&mut scratch.in_basis);
+        in_basis.clear();
+        in_basis.resize(ncols, false);
+        let mut xb = std::mem::take(&mut scratch.xb);
+        xb.clear();
+        xb.resize(m, 0.0);
+        let mut rho = std::mem::take(&mut scratch.rho);
+        rho.clear();
+        rho.resize(m, 0.0);
+        let mut d = std::mem::take(&mut scratch.d);
+        d.clear();
+        d.resize(ncols, 0.0);
+        let mut alpha_r = std::mem::take(&mut scratch.alpha_r);
+        alpha_r.clear();
+        alpha_r.resize(ncols, 0.0);
+        let mut adv = std::mem::take(&mut scratch.adv);
+        adv.clear();
+        adv.resize(ncols, 0.0);
+        let mut w = std::mem::take(&mut scratch.w);
+        w.resize_clear(m);
+        let mut y = std::mem::take(&mut scratch.y);
+        y.resize_clear(m);
+        let mut vref = std::mem::take(&mut scratch.vref);
+        vref.resize_clear(m);
+        let mut cand_buf = std::mem::take(&mut scratch.cand_buf);
+        cand_buf.clear();
+        let mut trip_buf = std::mem::take(&mut scratch.trip_buf);
+        trip_buf.clear();
+        let basis_mat = std::mem::take(&mut scratch.basis_mat);
+
         Revised {
             sf,
             m,
             ncols,
-            basis: vec![usize::MAX; m],
-            in_basis: vec![false; ncols],
-            xb: vec![0.0; m],
+            basis,
+            in_basis,
+            xb,
             fact,
             pricing,
+            fact_kind: opts.factorization,
+            pricing_kind: opts.pricing,
             eps: opts.eps,
             feas_eps: opts.feas_eps,
             max_iters,
@@ -198,16 +293,78 @@ impl<'a> Revised<'a> {
             dual_iters: 0,
             refactorizations: 0,
             peak_update_len: 0,
-            col_buf: vec![0.0; m],
-            w: vec![0.0; m],
-            y: vec![0.0; m],
-            cb: vec![0.0; m],
-            rho: vec![0.0; m],
-            vref: vec![0.0; m],
-            d: vec![0.0; ncols],
-            alpha_r: vec![0.0; ncols],
-            adv: vec![0.0; ncols],
+            ftran_nnz_sum: 0,
+            ftran_count: 0,
+            weight_resets0,
+            candidate_hits0,
+            candidate_refreshes0,
+            w,
+            y,
+            vref,
+            rho,
+            d,
+            alpha_r,
+            adv,
+            cand_buf,
+            trip_buf,
+            basis_mat,
         }
+    }
+
+    /// Return every pooled buffer (and the strategy objects) to the
+    /// scratch, success or error.
+    fn stash(self, scratch: &mut SolverScratch) {
+        scratch.put_fact(self.fact_kind, self.m, self.fact);
+        scratch.put_pricing(self.pricing_kind, self.pricing);
+        scratch.basis = self.basis;
+        scratch.in_basis = self.in_basis;
+        scratch.xb = self.xb;
+        scratch.rho = self.rho;
+        scratch.d = self.d;
+        scratch.alpha_r = self.alpha_r;
+        scratch.adv = self.adv;
+        scratch.w = self.w;
+        scratch.y = self.y;
+        scratch.vref = self.vref;
+        scratch.cand_buf = self.cand_buf;
+        scratch.trip_buf = self.trip_buf;
+        scratch.basis_mat = self.basis_mat;
+    }
+
+    /// The full solve: warm adoption (with dual repair), cold phase 1
+    /// fallback, phase 2, extraction.
+    fn drive(
+        &mut self,
+        p: &LpProblem,
+        opts: &SimplexOptions,
+        warm: Option<&Basis>,
+    ) -> Result<LpSolution> {
+        let mut warmed = false;
+        if let Some(w) = warm {
+            match self.try_warm_start(w) {
+                WarmStart::Feasible => warmed = true,
+                WarmStart::PrimalInfeasible => {
+                    let before = self.iterations;
+                    match self.dual_simplex() {
+                        Ok(true) => warmed = true,
+                        // Gave up (dual-infeasible basis, stall, or a
+                        // numerical wobble): pretend the warm attempt
+                        // never happened and fall back to a cold start.
+                        Ok(false) | Err(_) => {
+                            self.iterations = before;
+                            self.dual_iters = 0;
+                        }
+                    }
+                }
+                WarmStart::Unusable => {}
+            }
+        }
+        if !warmed {
+            self.cold_start();
+            self.phase1()?;
+        }
+        self.run(Phase::Two)?;
+        self.extract(p, opts)
     }
 
     /// Identity start basis: slack where a row has one, artificial
@@ -248,8 +405,15 @@ impl<'a> Revised<'a> {
         if warm.cols.iter().any(|&c| c >= self.ncols) {
             return WarmStart::Unusable;
         }
-        let b = self.basis_matrix(&warm.cols);
-        if self.fact.refactorize(&b).is_err() {
+        fill_basis_sparse(
+            self.sf,
+            self.ncols,
+            self.m,
+            &warm.cols,
+            &mut self.trip_buf,
+            &mut self.basis_mat,
+        );
+        if self.fact.refactorize(&self.basis_mat).is_err() {
             self.fact.reset_identity();
             return WarmStart::Unusable;
         }
@@ -282,15 +446,12 @@ impl<'a> Revised<'a> {
     fn dual_simplex(&mut self) -> Result<bool> {
         self.pricing.reset(self.ncols);
         // Dual feasibility of the phase-2 costs at the warm basis.
-        for r in 0..self.m {
-            self.cb[r] = self.cost_basic(Phase::Two, r);
-        }
-        self.btran();
+        self.btran_costs(Phase::Two);
         for j in 0..self.ncols {
             if self.in_basis[j] {
                 continue;
             }
-            let d = self.cost_col(Phase::Two, j) - self.sf.a.col_dot(j, &self.y);
+            let d = self.cost_col(Phase::Two, j) - self.sf.a.col_dot(j, self.y.values());
             if d < -self.eps * 10.0 {
                 return Ok(false);
             }
@@ -322,16 +483,11 @@ impl<'a> Revised<'a> {
             self.iterations += 1;
             self.dual_iters += 1;
 
-            // Pivot row rho = B^{-T} e_r ...
-            self.cb.iter_mut().for_each(|v| *v = 0.0);
-            self.cb[r] = 1.0;
-            self.btran();
-            self.rho.copy_from_slice(&self.y);
+            // Pivot row rho = B^{-T} e_r (a hypersparse BTRAN) ...
+            self.btran_unit(r);
+            self.rho.copy_from_slice(self.y.values());
             // ... and current duals y = B^{-T} c_B for the ratio test.
-            for i in 0..self.m {
-                self.cb[i] = self.cost_basic(Phase::Two, i);
-            }
-            self.btran();
+            self.btran_costs(Phase::Two);
 
             // Entering column: among alpha_j = rho·A_j < 0, minimize
             // d_j / -alpha_j. Ties go to the lowest index under
@@ -350,8 +506,9 @@ impl<'a> Revised<'a> {
                 let alpha = self.sf.a.col_dot(j, &self.rho);
                 self.alpha_r[j] = alpha;
                 if alpha < -self.eps {
-                    let d =
-                        (self.cost_col(Phase::Two, j) - self.sf.a.col_dot(j, &self.y)).max(0.0);
+                    let d = (self.cost_col(Phase::Two, j)
+                        - self.sf.a.col_dot(j, self.y.values()))
+                    .max(0.0);
                     let ratio = d / -alpha;
                     let score = alpha * alpha / self.pricing.weight(j);
                     let better = if ratio < best_ratio - 1e-12 {
@@ -378,9 +535,8 @@ impl<'a> Revised<'a> {
                 return Ok(false);
             };
 
-            self.load_column(q);
-            self.ftran();
-            if self.w[r] > -self.eps {
+            self.ftran_col(q);
+            if self.w.get(r) > -self.eps {
                 // FTRAN disagrees with the BTRAN row (numerical drift).
                 if self.fact.update_len() > 0 {
                     self.refactorize()?;
@@ -399,28 +555,19 @@ impl<'a> Revised<'a> {
         }
     }
 
-    /// Dense basis matrix for a candidate set of basic columns
-    /// (artificial ids become unit columns).
-    fn basis_matrix(&self, cols: &[usize]) -> Matrix {
-        let mut b = Matrix::zeros(self.m, self.m);
-        for (k, &bv) in cols.iter().enumerate() {
-            if bv < self.ncols {
-                for (i, v) in self.sf.a.col(bv) {
-                    b[(i, k)] = v;
-                }
-            } else {
-                b[(bv - self.ncols, k)] = 1.0;
-            }
-        }
-        b
-    }
-
     /// Rebuild the factorization from the current basis, drop the
     /// update file, and recompute `x_B` at full accuracy.
     fn refactorize(&mut self) -> Result<()> {
-        let b = self.basis_matrix(&self.basis);
+        fill_basis_sparse(
+            self.sf,
+            self.ncols,
+            self.m,
+            &self.basis,
+            &mut self.trip_buf,
+            &mut self.basis_mat,
+        );
         self.fact
-            .refactorize(&b)
+            .refactorize(&self.basis_mat)
             .map_err(|e| Error::Numerical(format!("basis refactorization failed: {e}")))?;
         self.refactorizations += 1;
         self.fact.ftran(&self.sf.b, &mut self.xb);
@@ -432,14 +579,39 @@ impl<'a> Revised<'a> {
         Ok(())
     }
 
-    /// FTRAN: `self.w = B⁻¹ v` where `v` is in `self.col_buf`.
-    fn ftran(&mut self) {
-        self.fact.ftran(&self.col_buf, &mut self.w);
+    /// Hypersparse FTRAN of column `q`: scatter the CSC column into
+    /// the work vector and solve in place — `self.w = B⁻¹ A_q`.
+    fn ftran_col(&mut self, q: usize) {
+        debug_assert!(q < self.ncols);
+        self.w.clear();
+        for (i, v) in self.sf.a.col(q) {
+            self.w.set(i, v);
+        }
+        self.fact.ftran_sparse(&mut self.w);
+        self.ftran_nnz_sum += self.w.nnz();
+        self.ftran_count += 1;
     }
 
-    /// BTRAN: `self.y = B⁻ᵀ v` where `v` is in `self.cb`.
-    fn btran(&mut self) {
-        self.fact.btran(&self.cb, &mut self.y);
+    /// Hypersparse BTRAN of the phase cost vector:
+    /// `self.y = B⁻ᵀ c_B`. The basic cost vector is mostly zeros (only
+    /// the makespan column and the phase-1 artificials carry cost), so
+    /// the right-hand side is genuinely sparse.
+    fn btran_costs(&mut self, phase: Phase) {
+        self.y.clear();
+        for r in 0..self.m {
+            let c = self.cost_basic(phase, r);
+            if c != 0.0 {
+                self.y.set(r, c);
+            }
+        }
+        self.fact.btran_sparse(&mut self.y);
+    }
+
+    /// Hypersparse BTRAN of a unit vector: `self.y = B⁻ᵀ e_r`.
+    fn btran_unit(&mut self, r: usize) {
+        self.y.clear();
+        self.y.set(r, 1.0);
+        self.fact.btran_sparse(&mut self.y);
     }
 
     #[inline]
@@ -467,16 +639,11 @@ impl<'a> Revised<'a> {
         (0..self.m).map(|r| self.cost_basic(phase, r) * self.xb[r]).sum()
     }
 
-    /// Scatter column `q` (structural/aux only) into `self.col_buf`.
-    fn load_column(&mut self, q: usize) {
-        self.sf.a.col_into(q, &mut self.col_buf);
-    }
-
     /// Primal pivot: column `q` enters at row `r`, using the FTRAN
     /// result in `self.w`. The step length clamps tiny negative basic
     /// values to zero (ratio-test convention).
     fn pivot(&mut self, q: usize, r: usize) -> Result<()> {
-        let theta = self.xb[r].max(0.0) / self.w[r];
+        let theta = self.xb[r].max(0.0) / self.w.get(r);
         self.pivot_at(q, r, theta)
     }
 
@@ -485,23 +652,24 @@ impl<'a> Revised<'a> {
     /// `x_B[r] / w[r]` is positive and the entering variable comes in
     /// at a non-negative value.
     fn pivot_dual(&mut self, q: usize, r: usize) -> Result<()> {
-        let theta = self.xb[r] / self.w[r];
+        let theta = self.xb[r] / self.w.get(r);
         self.pivot_at(q, r, theta)
     }
 
     /// Shared pivot body: column `q` enters at row `r` with step
-    /// `theta`, using the FTRAN result in `self.w`. Updates `x_B` and
-    /// the basis maps, then records the pivot with the factorization
-    /// strategy; an update breakdown triggers an immediate
-    /// refactorization from the (new) basis.
+    /// `theta`, using the FTRAN result in `self.w`. Updates `x_B` only
+    /// at `w`'s nonzeros and the basis maps, then records the pivot
+    /// with the factorization strategy; an update breakdown triggers
+    /// an immediate refactorization from the (new) basis.
     fn pivot_at(&mut self, q: usize, r: usize, theta: f64) -> Result<()> {
-        debug_assert!(self.w[r].abs() > 1e-14);
+        debug_assert!(self.w.get(r).abs() > 1e-14);
         if theta != 0.0 {
-            for i in 0..self.m {
+            for k in 0..self.w.nnz() {
+                let i = self.w.index_at(k);
                 if i == r {
                     continue;
                 }
-                let wi = self.w[i];
+                let wi = self.w.get(i);
                 if wi == 0.0 {
                     continue;
                 }
@@ -532,10 +700,8 @@ impl<'a> Revised<'a> {
         if !self.pricing.needs_pivot_row() {
             return;
         }
-        self.cb.iter_mut().for_each(|v| *v = 0.0);
-        self.cb[r] = 1.0;
-        self.btran();
-        self.rho.copy_from_slice(&self.y);
+        self.btran_unit(r);
+        self.rho.copy_from_slice(self.y.values());
         for j in 0..self.ncols {
             self.alpha_r[j] =
                 if self.in_basis[j] { 0.0 } else { self.sf.a.col_dot(j, &self.rho) };
@@ -549,9 +715,11 @@ impl<'a> Revised<'a> {
         if !self.pricing.needs_reference_ftran() {
             return;
         }
-        self.fact.btran(&self.w, &mut self.vref);
+        self.vref.copy_from(&self.w);
+        self.fact.btran_sparse(&mut self.vref);
         for j in 0..self.ncols {
-            self.adv[j] = if self.in_basis[j] { 0.0 } else { self.sf.a.col_dot(j, &self.vref) };
+            self.adv[j] =
+                if self.in_basis[j] { 0.0 } else { self.sf.a.col_dot(j, self.vref.values()) };
         }
     }
 
@@ -561,11 +729,11 @@ impl<'a> Revised<'a> {
         if !self.pricing.needs_pivot_row() {
             return;
         }
-        let alpha_rq = self.w[r];
+        let alpha_rq = self.w.get(r);
         if alpha_rq.abs() < 1e-12 {
             return;
         }
-        let w_norm2: f64 = self.w.iter().map(|v| v * v).sum();
+        let w_norm2 = self.w.norm2_sq();
         self.pricing.update(&PivotContext {
             q,
             r,
@@ -595,33 +763,51 @@ impl<'a> Revised<'a> {
             }
 
             // BTRAN for the pricing vector y = B^{-T} c_B.
-            for r in 0..self.m {
-                self.cb[r] = self.cost_basic(phase, r);
-            }
-            self.btran();
+            self.btran_costs(phase);
 
-            // Pricing: d_j = c_j - y·A_j over nonbasic columns.
+            // Pricing: d_j = c_j - y·A_j over nonbasic columns. A
+            // partial rule prices its candidate window first; a miss
+            // falls through to the full pass, which doubles as the
+            // window refresh — optimality is only declared from a
+            // full pass.
             let mut enter: Option<usize> = None;
             if bland {
                 for j in 0..self.ncols {
                     if self.in_basis[j] {
                         continue;
                     }
-                    let d = self.cost_col(phase, j) - self.sf.a.col_dot(j, &self.y);
+                    let d = self.cost_col(phase, j) - self.sf.a.col_dot(j, self.y.values());
                     if d < -self.eps {
                         enter = Some(j);
                         break;
                     }
                 }
             } else {
-                for j in 0..self.ncols {
-                    self.d[j] = if self.in_basis[j] {
-                        0.0
-                    } else {
-                        self.cost_col(phase, j) - self.sf.a.col_dot(j, &self.y)
-                    };
+                if self.pricing.gather_candidates(&mut self.cand_buf)
+                    && !self.cand_buf.is_empty()
+                {
+                    for &j in &self.cand_buf {
+                        self.d[j] = if self.in_basis[j] {
+                            0.0
+                        } else {
+                            self.cost_col(phase, j)
+                                - self.sf.a.col_dot(j, self.y.values())
+                        };
+                    }
+                    enter =
+                        self.pricing.select_from_candidates(&self.d, &self.in_basis, self.eps);
                 }
-                enter = self.pricing.select_entering(&self.d, &self.in_basis, self.eps);
+                if enter.is_none() {
+                    for j in 0..self.ncols {
+                        self.d[j] = if self.in_basis[j] {
+                            0.0
+                        } else {
+                            self.cost_col(phase, j)
+                                - self.sf.a.col_dot(j, self.y.values())
+                        };
+                    }
+                    enter = self.pricing.select_entering(&self.d, &self.in_basis, self.eps);
+                }
             }
             let Some(q) = enter else {
                 if self.fact.update_len() > 0 {
@@ -633,15 +819,15 @@ impl<'a> Revised<'a> {
                 return Ok(());
             };
 
-            // FTRAN: w = B^{-1} A_q.
-            self.load_column(q);
-            self.ftran();
+            // FTRAN: w = B^{-1} A_q (hypersparse).
+            self.ftran_col(q);
 
-            // Ratio test.
+            // Ratio test over w's nonzeros only.
             let mut leave: Option<usize> = None;
             let mut best_ratio = f64::INFINITY;
-            for i in 0..self.m {
-                let wi = self.w[i];
+            for k in 0..self.w.nnz() {
+                let i = self.w.index_at(k);
+                let wi = self.w.get(i);
                 if wi > self.eps {
                     let ratio = self.xb[i].max(0.0) / wi;
                     let better = if bland {
@@ -726,23 +912,20 @@ impl<'a> Revised<'a> {
                 continue;
             }
             // rho = B^{-T} e_r, then alpha_j = rho·A_j per column.
-            self.cb.iter_mut().for_each(|v| *v = 0.0);
-            self.cb[r] = 1.0;
-            self.btran();
+            self.btran_unit(r);
             let mut found = None;
             for j in 0..self.ncols {
                 if self.in_basis[j] {
                     continue;
                 }
-                if self.sf.a.col_dot(j, &self.y).abs() > self.eps {
+                if self.sf.a.col_dot(j, self.y.values()).abs() > self.eps {
                     found = Some(j);
                     break;
                 }
             }
             if let Some(q) = found {
-                self.load_column(q);
-                self.ftran();
-                if self.w[r].abs() > self.eps {
+                self.ftran_col(q);
+                if self.w.get(r).abs() > self.eps {
                     // Degenerate pivot (theta ~ 0): swaps the basis
                     // without moving the point.
                     self.pivot(q, r)?;
@@ -797,7 +980,15 @@ impl<'a> Revised<'a> {
             pricing: opts.pricing,
             refactorizations: self.refactorizations,
             peak_update_len: self.peak_update_len,
-            weight_resets: self.pricing.weight_resets(),
+            weight_resets: self.pricing.weight_resets() - self.weight_resets0,
+            candidate_hits: self.pricing.candidate_hits() - self.candidate_hits0,
+            candidate_refreshes: self.pricing.candidate_refreshes()
+                - self.candidate_refreshes0,
+            avg_ftran_nnz: if self.ftran_count > 0 {
+                self.ftran_nnz_sum as f64 / self.ftran_count as f64
+            } else {
+                0.0
+            },
             duals,
             basis: Some(basis),
         })
@@ -806,11 +997,9 @@ impl<'a> Revised<'a> {
     /// Duals `y = B⁻ᵀ c_B` (phase-2 costs), with standardization row
     /// flips undone.
     fn compute_duals(&mut self) -> Vec<f64> {
-        for r in 0..self.m {
-            self.cb[r] = self.cost_basic(Phase::Two, r);
-        }
-        self.btran();
+        self.btran_costs(Phase::Two);
         self.y
+            .values()
             .iter()
             .zip(self.sf.flipped.iter())
             .map(|(&yi, &f)| if f { -yi } else { yi })
@@ -844,12 +1033,15 @@ mod tests {
         p
     }
 
-    /// Every factorization × pricing combination (used by several
-    /// tests below to sweep the strategy grid).
+    /// Every factorization × pricing combination — including partial
+    /// pricing — (used by several tests below to sweep the strategy
+    /// grid).
     fn combos() -> Vec<SimplexOptions> {
         let mut out = Vec::new();
         for f in [Factorization::ProductFormEta, Factorization::ForrestTomlin] {
-            for pr in [Pricing::Dantzig, Pricing::Devex, Pricing::SteepestEdge] {
+            for pr in
+                [Pricing::Dantzig, Pricing::Devex, Pricing::SteepestEdge, Pricing::Partial]
+            {
                 out.push(SimplexOptions { factorization: f, pricing: pr, ..opts() });
             }
         }
@@ -866,6 +1058,7 @@ mod tests {
         let b = s.basis.as_ref().unwrap();
         assert!(b.is_complete());
         assert_eq!(b.cols.len(), 3);
+        assert!(s.avg_ftran_nnz > 0.0, "ftran nnz diagnostic should be populated");
     }
 
     #[test]
@@ -898,6 +1091,33 @@ mod tests {
             warm2.iterations,
             cold2.iterations
         );
+    }
+
+    #[test]
+    fn scratch_reuse_is_bit_identical() {
+        // The scratch pool must be invisible to results: repeated
+        // solves through one scratch reproduce the fresh-scratch
+        // solution bit for bit.
+        let p = textbook();
+        let mut shared = SolverScratch::new();
+        for o in combos() {
+            let fresh = solve_revised(&p, &o, None).unwrap();
+            for trial in 0..3 {
+                let pooled = solve_revised_scratch(&p, &o, None, &mut shared).unwrap();
+                assert_eq!(
+                    pooled.x, fresh.x,
+                    "{:?}/{:?} trial {trial}: pooled x diverged",
+                    o.factorization, o.pricing
+                );
+                assert!(
+                    pooled.objective == fresh.objective,
+                    "{:?}/{:?} trial {trial}: pooled objective diverged",
+                    o.factorization,
+                    o.pricing
+                );
+                assert_eq!(pooled.iterations, fresh.iterations);
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,142 @@
+//! Per-worker solver scratch pool: allocation-free warm re-solves.
+//!
+//! A revised-simplex solve needs a dozen work buffers (basic values,
+//! reduced costs, FTRAN/BTRAN work vectors, the basis-factorization
+//! and pricing objects themselves). Allocating them per solve is
+//! invisible on one LP and dominant on the paper's sweeps, where
+//! [`crate::api::Session::solve_batch`] and
+//! `experiments::sweep::parallel_map_steal` workers re-solve thousands
+//! of structurally identical instances.
+//!
+//! [`SolverScratch`] owns those buffers *between* solves. The driver
+//! takes them at the start of a solve (`std::mem::take` — no copies),
+//! resizes in place (a no-op once warm), and stashes them back at the
+//! end, success or error. The factorization and pricing objects are
+//! reused when the strategy and basis dimension match the previous
+//! solve — the steady-state case in every sweep — so repeated warm
+//! solves through one scratch perform no per-solve heap allocation in
+//! the simplex core (asserted by the counting-allocator test in
+//! `tests/lp_scratch_alloc.rs`). One scratch per solver thread, like
+//! [`crate::lp::WarmCache`]; [`crate::api::Session`] owns exactly one
+//! of each.
+
+use super::factorization::{BasisFactorization, Factorization};
+use super::pricing::{Pricing, PricingRule};
+use crate::linalg::{SparseMatrix, SparseVector};
+
+/// Reusable solver state (see module docs). All fields are
+/// `pub(crate)`: the revised-simplex driver moves them in and out
+/// wholesale.
+#[derive(Default)]
+pub struct SolverScratch {
+    /// Last factorization object, keyed by strategy and basis rows.
+    pub(crate) fact: Option<(Factorization, usize, Box<dyn BasisFactorization>)>,
+    /// Last pricing object, keyed by rule.
+    pub(crate) pricing: Option<(Pricing, Box<dyn PricingRule>)>,
+    pub(crate) basis: Vec<usize>,
+    pub(crate) in_basis: Vec<bool>,
+    pub(crate) xb: Vec<f64>,
+    pub(crate) rho: Vec<f64>,
+    pub(crate) d: Vec<f64>,
+    pub(crate) alpha_r: Vec<f64>,
+    pub(crate) adv: Vec<f64>,
+    pub(crate) w: SparseVector,
+    pub(crate) y: SparseVector,
+    pub(crate) vref: SparseVector,
+    pub(crate) cand_buf: Vec<usize>,
+    pub(crate) trip_buf: Vec<(usize, usize, f64)>,
+    /// Pooled CSC basis view, rebuilt in place per (re)factorization.
+    pub(crate) basis_mat: SparseMatrix,
+}
+
+impl SolverScratch {
+    /// Empty pool; buffers grow on first use and are reused after.
+    pub fn new() -> SolverScratch {
+        SolverScratch::default()
+    }
+
+    /// Hand out a factorization object for `(kind, m)`, reusing the
+    /// pooled one when it matches.
+    pub(crate) fn take_fact(
+        &mut self,
+        kind: Factorization,
+        m: usize,
+    ) -> Box<dyn BasisFactorization> {
+        match self.fact.take() {
+            Some((k, km, f)) if k == kind && km == m => f,
+            _ => kind.build(m),
+        }
+    }
+
+    /// Return a factorization object to the pool.
+    pub(crate) fn put_fact(
+        &mut self,
+        kind: Factorization,
+        m: usize,
+        f: Box<dyn BasisFactorization>,
+    ) {
+        self.fact = Some((kind, m, f));
+    }
+
+    /// Hand out a pricing object for `kind`, reusing the pooled one
+    /// when it matches.
+    pub(crate) fn take_pricing(&mut self, kind: Pricing) -> Box<dyn PricingRule> {
+        match self.pricing.take() {
+            Some((k, p)) if k == kind => p,
+            _ => kind.build(),
+        }
+    }
+
+    /// Return a pricing object to the pool.
+    pub(crate) fn put_pricing(&mut self, kind: Pricing, p: Box<dyn PricingRule>) {
+        self.pricing = Some((kind, p));
+    }
+}
+
+impl std::fmt::Debug for SolverScratch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SolverScratch")
+            .field("fact", &self.fact.as_ref().map(|(k, m, _)| (*k, *m)))
+            .field("pricing", &self.pricing.as_ref().map(|(k, _)| *k))
+            .field("xb_capacity", &self.xb.capacity())
+            .field("d_capacity", &self.d.capacity())
+            .finish_non_exhaustive()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pooled_objects_reused_on_match_only() {
+        let mut s = SolverScratch::new();
+        let f = s.take_fact(Factorization::ForrestTomlin, 5);
+        assert_eq!(f.name(), "forrest_tomlin");
+        s.put_fact(Factorization::ForrestTomlin, 5, f);
+        // Matching strategy and size: the same object comes back.
+        let f = s.take_fact(Factorization::ForrestTomlin, 5);
+        assert_eq!(f.name(), "forrest_tomlin");
+        s.put_fact(Factorization::ForrestTomlin, 5, f);
+        // Size mismatch: a fresh object is built.
+        let f = s.take_fact(Factorization::ForrestTomlin, 7);
+        assert_eq!(f.name(), "forrest_tomlin");
+        s.put_fact(Factorization::ForrestTomlin, 7, f);
+        // Strategy mismatch likewise.
+        let f = s.take_fact(Factorization::ProductFormEta, 7);
+        assert_eq!(f.name(), "product_form_eta");
+
+        let p = s.take_pricing(Pricing::Partial);
+        assert_eq!(p.name(), "partial");
+        s.put_pricing(Pricing::Partial, p);
+        let p = s.take_pricing(Pricing::Dantzig);
+        assert_eq!(p.name(), "dantzig");
+    }
+
+    #[test]
+    fn debug_format_is_stable() {
+        let s = SolverScratch::new();
+        let text = format!("{s:?}");
+        assert!(text.contains("SolverScratch"));
+    }
+}

@@ -22,6 +22,7 @@ use super::factorization::Factorization;
 use super::pricing::Pricing;
 use super::problem::LpProblem;
 use super::revised::{self, Basis};
+use super::scratch::SolverScratch;
 use super::solution::LpSolution;
 use super::standard::{AuxKind, StandardForm};
 use crate::error::{Error, Result};
@@ -58,8 +59,9 @@ pub struct SimplexOptions {
     /// tableau carries no factorization and ignores this).
     pub factorization: Factorization,
     /// Pricing rule for the revised backend ([`Pricing::Dantzig`] by
-    /// default; the dense tableau always prices Dantzig and ignores
-    /// this).
+    /// default; `Pricing::Partial` prices a rotating candidate window
+    /// per iteration; the dense tableau always prices Dantzig and
+    /// ignores this).
     pub pricing: Pricing,
 }
 
@@ -102,14 +104,33 @@ pub fn solve_with(p: &LpProblem, opts: &SimplexOptions) -> Result<LpSolution> {
 pub fn solve_warm(p: &LpProblem, opts: &SimplexOptions, warm: Option<&Basis>) -> Result<LpSolution> {
     match opts.backend {
         SolverBackend::RevisedSparse => revised::solve_revised(p, opts, warm),
-        SolverBackend::DenseTableau => {
-            let sf = StandardForm::equality(p);
-            let mut t = Tableau::new(&sf, opts);
-            t.phase1()?;
-            t.phase2()?;
-            t.extract(p, &sf, opts)
-        }
+        SolverBackend::DenseTableau => solve_dense(p, opts),
     }
+}
+
+/// Like [`solve_warm`], but routing the revised backend's work
+/// buffers through a per-worker [`SolverScratch`] pool so repeated
+/// warm solves allocate nothing in steady state. The dense tableau
+/// has no reusable state and ignores the pool.
+pub fn solve_warm_scratch(
+    p: &LpProblem,
+    opts: &SimplexOptions,
+    warm: Option<&Basis>,
+    scratch: &mut SolverScratch,
+) -> Result<LpSolution> {
+    match opts.backend {
+        SolverBackend::RevisedSparse => revised::solve_revised_scratch(p, opts, warm, scratch),
+        SolverBackend::DenseTableau => solve_dense(p, opts),
+    }
+}
+
+/// The dense-tableau path shared by both front doors.
+fn solve_dense(p: &LpProblem, opts: &SimplexOptions) -> Result<LpSolution> {
+    let sf = StandardForm::equality(p);
+    let mut t = Tableau::new(&sf, opts);
+    t.phase1()?;
+    t.phase2()?;
+    t.extract(p, &sf, opts)
 }
 
 /// Dense simplex tableau: `m` constraint rows over `width` columns
@@ -475,6 +496,9 @@ impl Tableau {
             refactorizations: 0,
             peak_update_len: 0,
             weight_resets: 0,
+            candidate_hits: 0,
+            candidate_refreshes: 0,
+            avg_ftran_nnz: 0.0,
             duals,
             basis: Some(Basis { cols: basis_cols }),
         })

@@ -35,6 +35,16 @@ pub struct LpSolution {
     /// Times a weighted pricing rule rebuilt its reference framework
     /// after weight overflow (devex / steepest edge only).
     pub weight_resets: usize,
+    /// Iterations that entered from the partial-pricing candidate
+    /// window without a full pricing pass (`partial` pricing only).
+    pub candidate_hits: usize,
+    /// Full pricing passes that rebuilt the candidate window
+    /// (`partial` pricing only).
+    pub candidate_refreshes: usize,
+    /// Mean nonzeros in the FTRAN results of this solve — the
+    /// hypersparsity diagnostic (0.0 on the dense tableau and PDHG,
+    /// which have no FTRAN).
+    pub avg_ftran_nnz: f64,
     /// Dual values per constraint (if requested and extractable).
     pub duals: Option<Vec<f64>>,
     /// Optimal basis, usable to warm-start the next solve of a

@@ -16,7 +16,8 @@
 
 use super::problem::LpProblem;
 use super::revised::Basis;
-use super::simplex::{solve_warm, SimplexOptions};
+use super::scratch::SolverScratch;
+use super::simplex::{solve_warm_scratch, SimplexOptions};
 use super::solution::LpSolution;
 use crate::error::Result;
 use std::collections::HashMap;
@@ -54,6 +55,21 @@ impl WarmCache {
         opts: &SimplexOptions,
         seed: Option<&Basis>,
     ) -> Result<LpSolution> {
+        let mut scratch = SolverScratch::new();
+        self.solve_seeded_scratch(p, opts, seed, &mut scratch)
+    }
+
+    /// Like [`WarmCache::solve_seeded`], routing the solver's work
+    /// buffers through a per-worker [`SolverScratch`] pool (the
+    /// allocation-free steady state for batch/sweep workers, which own
+    /// one cache and one scratch each).
+    pub fn solve_seeded_scratch(
+        &mut self,
+        p: &LpProblem,
+        opts: &SimplexOptions,
+        seed: Option<&Basis>,
+        scratch: &mut SolverScratch,
+    ) -> Result<LpSolution> {
         let key = (p.num_vars(), p.num_constraints());
         let warm = self.bases.get(&key).or(seed);
         if warm.is_some() {
@@ -61,7 +77,7 @@ impl WarmCache {
         } else {
             self.cold_solves += 1;
         }
-        let sol = solve_warm(p, opts, warm)?;
+        let sol = solve_warm_scratch(p, opts, warm, scratch)?;
         if let Some(b) = &sol.basis {
             if b.is_complete() {
                 self.bases.insert(key, b.clone());

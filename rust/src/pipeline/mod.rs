@@ -45,7 +45,9 @@ pub mod project;
 use crate::dlt::Schedule;
 use crate::error::Result;
 use crate::lp::presolve::{presolve, PresolveStats};
-use crate::lp::{Basis, LpProblem, LpSolution, SimplexOptions, SolverBackend, WarmCache};
+use crate::lp::{
+    Basis, LpProblem, LpSolution, SimplexOptions, SolverBackend, SolverScratch, WarmCache,
+};
 use crate::model::SystemSpec;
 use crate::pdhg::PdhgOptions;
 
@@ -207,6 +209,24 @@ pub fn solve_full<S: ScenarioModel + ?Sized>(
     cache: Option<&mut WarmCache>,
     seed: Option<(&LpProblem, &Basis)>,
 ) -> Result<Solved> {
+    let mut scratch = SolverScratch::new();
+    solve_full_scratch(model, spec, opts, cache, seed, &mut scratch)
+}
+
+/// [`solve_full`] with an explicit per-worker [`SolverScratch`] pool:
+/// the simplex backends' work buffers, factorization and pricing
+/// objects are borrowed from (and returned to) `scratch`, so repeated
+/// warm solves — the batch/sweep steady state — perform no solver-core
+/// heap allocation. [`crate::api::Session`] owns one scratch next to
+/// its [`WarmCache`] and routes every request through here.
+pub fn solve_full_scratch<S: ScenarioModel + ?Sized>(
+    model: &S,
+    spec: &SystemSpec,
+    opts: &PipelineOptions,
+    cache: Option<&mut WarmCache>,
+    seed: Option<(&LpProblem, &Basis)>,
+    scratch: &mut SolverScratch,
+) -> Result<Solved> {
     spec.validate()?;
     let lp = model.build_lp(spec);
 
@@ -234,6 +254,9 @@ pub fn solve_full<S: ScenarioModel + ?Sized>(
                 refactorizations: 0,
                 peak_update_len: 0,
                 weight_resets: 0,
+                candidate_hits: 0,
+                candidate_refreshes: 0,
+                avg_ftran_nnz: 0.0,
                 duals: None,
                 basis: None,
             };
@@ -257,8 +280,12 @@ pub fn solve_full<S: ScenarioModel + ?Sized>(
                 seed.and_then(|(from_lp, basis)| project::project_basis(from_lp, target, basis))
             };
             let sol = match cache {
-                Some(c) => c.solve_seeded(target, &sopts, seed_basis.as_ref())?,
-                None => crate::lp::solve_warm(target, &sopts, seed_basis.as_ref())?,
+                Some(c) => {
+                    c.solve_seeded_scratch(target, &sopts, seed_basis.as_ref(), scratch)?
+                }
+                None => {
+                    crate::lp::solve_warm_scratch(target, &sopts, seed_basis.as_ref(), scratch)?
+                }
             };
             (sol, None)
         }
