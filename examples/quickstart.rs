@@ -88,16 +88,22 @@ fn main() -> anyhow::Result<()> {
     println!("...and solvable without eq. 12: T_f = {:.4}", relaxed.makespan);
 
     // Hypersparse hot path: re-solve a warm job sweep through the api
-    // facade with candidate-list partial pricing (`--pricing partial`
-    // on the CLI) and read the new diagnostics — window hits vs
-    // full-pass refreshes, and how sparse the per-iteration FTRAN
-    // results actually stayed.
+    // facade with Bartels-Golub basis updates and candidate-list
+    // partial pricing (`--factorization bartels_golub --pricing
+    // partial` on the CLI) and read the new diagnostics — window hits
+    // vs full-pass refreshes, how sparse the per-iteration FTRAN/BTRAN
+    // results actually stayed, and how many sparse solves took the
+    // Gilbert-Peierls symbolic DFS path vs the full column sweep.
     use dlt::api::{Family, SolveRequest, Solver};
-    use dlt::lp::{Pricing, SimplexOptions};
+    use dlt::lp::{Factorization, Pricing, SimplexOptions};
     let mut session = Solver::new()
-        .simplex(SimplexOptions { pricing: Pricing::Partial, ..SimplexOptions::default() })
+        .simplex(SimplexOptions {
+            factorization: Factorization::BartelsGolub,
+            pricing: Pricing::Partial,
+            ..SimplexOptions::default()
+        })
         .build();
-    println!("\n=== Warm sweep under partial pricing (hypersparse diagnostics) ===");
+    println!("\n=== Warm sweep, Bartels-Golub + partial pricing (hypersparse diagnostics) ===");
     for k in 0..4 {
         let sub = table1.with_job(100.0 + 25.0 * k as f64);
         let resp = session
@@ -106,14 +112,17 @@ fn main() -> anyhow::Result<()> {
         let d = &resp.diagnostics;
         println!(
             "J={:6.1}: T_f {:.4}  ({} iters, warm={}, candidate hits {}, refreshes {}, \
-             avg ftran nnz {:.1})",
+             avg ftran/btran nnz {:.1}/{:.1}, dfs/scan solves {}/{})",
             100.0 + 25.0 * k as f64,
             resp.makespan,
             d.iterations,
             d.warm_start,
             d.candidate_hits,
             d.candidate_refreshes,
-            d.avg_ftran_nnz
+            d.avg_ftran_nnz,
+            d.avg_btran_nnz,
+            d.dfs_solves,
+            d.scan_solves
         );
     }
     Ok(())

@@ -2,21 +2,27 @@
 //! kernels, candidate-list partial pricing, and the scratch-pooled
 //! warm sweep — against the dense baselines they replaced.
 //!
-//! Three sections:
+//! Four sections:
 //!
-//! - **micro kernels** — one factorized sparse basis per strategy,
-//!   timing the dense `ftran`/`btran` entry points (for
-//!   `product_form_eta` this is the genuinely dense legacy
-//!   implementation: dense LU solve + full eta passes) against
+//! - **micro kernels** — one factorized sparse basis per strategy
+//!   (eta file, Forrest–Tomlin, Markowitz, Bartels–Golub), timing the
+//!   dense `ftran`/`btran` entry points (for `product_form_eta` /
+//!   `markowitz` this is the genuinely dense legacy implementation:
+//!   dense LU solve + full eta passes) against
 //!   `ftran_sparse`/`btran_sparse` on the near-unit right-hand sides
 //!   the revised simplex actually produces. Also records
 //!   `storage_nnz` vs the `2m²` a dense L/U pair would pin — the
 //!   peak-basis-memory story.
+//! - **gp kernels** — the Gilbert–Peierls symbolic DFS against the
+//!   full column-sweep scan on the *same* LU factor and right-hand
+//!   side, with the deterministic `last_solve_work` node counter
+//!   alongside wall time.
 //! - **warm sweep cells** — a job-size sweep through one `dlt::api`
 //!   session (the production shape) per configuration: the dense
 //!   tableau (the pre-PR-1 dense baseline cell), revised + full
-//!   Dantzig pricing (the PR-4 configuration), and revised + partial
-//!   pricing (this PR), on the widest grid instance.
+//!   Dantzig pricing (the PR-4 configuration), revised + partial
+//!   pricing, and the Forrest–Tomlin vs Bartels–Golub update-file
+//!   race, on the widest grid instance.
 //! - **cold solves** per cell for the long-pivot story.
 //!
 //! With `DLT_BENCH_JSON_DIR=dir` the results land in
@@ -27,7 +33,7 @@
 
 use dlt::api::{Family, SolveRequest, Solver};
 use dlt::config::json::Json;
-use dlt::linalg::{SparseMatrix, SparseVector};
+use dlt::linalg::{LuFactors, SolveMode, SparseMatrix, SparseVector};
 use dlt::lp::factorization::{BasisFactorization, Factorization};
 use dlt::lp::{Pricing, SimplexOptions};
 use dlt::model::SystemSpec;
@@ -75,15 +81,13 @@ struct Micro {
 fn micro_kernels(m: usize, reps: usize) -> Vec<Micro> {
     let basis = chain_basis(m);
     let mut out = Vec::new();
-    for strategy in [Factorization::ProductFormEta, Factorization::ForrestTomlin] {
-        let mut f: Box<dyn BasisFactorization> = match strategy {
-            Factorization::ProductFormEta => {
-                Box::new(dlt::lp::factorization::ProductFormEta::new(m))
-            }
-            Factorization::ForrestTomlin => {
-                Box::new(dlt::lp::factorization::ForrestTomlin::new(m))
-            }
-        };
+    for strategy in [
+        Factorization::ProductFormEta,
+        Factorization::ForrestTomlin,
+        Factorization::Markowitz,
+        Factorization::BartelsGolub,
+    ] {
+        let mut f: Box<dyn BasisFactorization> = strategy.build(m);
         f.refactorize(&basis).expect("chain basis factorizes");
         // A few updates so the eta file / spike chain is exercised.
         let mut w = SparseVector::with_dim(m);
@@ -141,7 +145,10 @@ fn micro_kernels(m: usize, reps: usize) -> Vec<Micro> {
 
         out.push(Micro {
             strategy,
-            dense_is_adapter: strategy == Factorization::ForrestTomlin,
+            dense_is_adapter: matches!(
+                strategy,
+                Factorization::ForrestTomlin | Factorization::BartelsGolub
+            ),
             ftran_dense_ns,
             ftran_sparse_ns,
             btran_dense_ns,
@@ -153,9 +160,68 @@ fn micro_kernels(m: usize, reps: usize) -> Vec<Micro> {
     out
 }
 
+/// Gilbert–Peierls symbolic DFS vs the full column-sweep scan on the
+/// same LU factor and right-hand side: per-solve wall time plus the
+/// exact `last_solve_work` counter (DFS: reach sizes; scan: `2n`).
+struct GpCell {
+    kernel: &'static str,
+    dfs_ns: f64,
+    scan_ns: f64,
+    dfs_work: usize,
+    scan_work: usize,
+    result_nnz: usize,
+}
+
+fn gp_kernels(m: usize, reps: usize) -> Vec<GpCell> {
+    let basis = chain_basis(m);
+    let mut lu = LuFactors::factor_csc(&basis).expect("chain basis factorizes");
+    let mut v = SparseVector::with_dim(m);
+    let mut tmp = SparseVector::with_dim(m);
+    let mut out = Vec::new();
+    for kernel in ["ftran", "btran"] {
+        let mut cell = GpCell {
+            kernel,
+            dfs_ns: 0.0,
+            scan_ns: 0.0,
+            dfs_work: 0,
+            scan_work: 0,
+            result_nnz: 0,
+        };
+        for mode in [SolveMode::Dfs, SolveMode::Scan] {
+            lu.set_solve_mode(mode);
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                // A tail-heavy 2-nonzero RHS (the shape a late entering
+                // DLT column produces): its topological closure is a
+                // small fraction of the factor.
+                v.clear();
+                v.set(m - 2, 1.0);
+                v.set(m - 1, -0.5);
+                if kernel == "ftran" {
+                    lu.solve_sparse(&mut v, &mut tmp);
+                } else {
+                    lu.solve_transpose_sparse(&mut v, &mut tmp);
+                }
+            }
+            let ns = t0.elapsed().as_nanos() as f64 / reps as f64;
+            if mode == SolveMode::Dfs {
+                cell.dfs_ns = ns;
+                cell.dfs_work = lu.last_solve_work();
+                cell.result_nnz = v.nnz();
+            } else {
+                cell.scan_ns = ns;
+                cell.scan_work = lu.last_solve_work();
+            }
+        }
+        out.push(cell);
+    }
+    out
+}
+
 struct Cell {
     label: &'static str,
     backend: Backend,
+    factorization: Factorization,
     pricing: Pricing,
     cold_ms: f64,
     cold_iterations: usize,
@@ -169,11 +235,12 @@ struct Cell {
 fn sweep_cell(
     label: &'static str,
     backend: Backend,
+    factorization: Factorization,
     pricing: Pricing,
     base: &SystemSpec,
     points: usize,
 ) -> Cell {
-    let simplex = SimplexOptions { pricing, ..SimplexOptions::default() };
+    let simplex = SimplexOptions { factorization, pricing, ..SimplexOptions::default() };
 
     let mut cold_session =
         Solver::new().backend(backend).warm_start(false).simplex(simplex.clone()).build();
@@ -208,6 +275,7 @@ fn sweep_cell(
     Cell {
         label,
         backend,
+        factorization,
         pricing,
         cold_ms,
         cold_iterations: cold.diagnostics.iterations,
@@ -256,11 +324,25 @@ fn main() {
         );
     }
 
+    // --- Gilbert-Peierls DFS vs column-sweep scan ---
+    let gp = gp_kernels(micro_m, micro_reps);
+    println!(
+        "\n{:<10} {:>12} {:>12} {:>10} {:>10} {:>10}",
+        "gp kernel", "dfs", "scan", "dfs_work", "scan_work", "out_nnz"
+    );
+    for g in &gp {
+        println!(
+            "{:<10} {:>10.0}ns {:>10.0}ns {:>10} {:>10} {:>10}",
+            g.kernel, g.dfs_ns, g.scan_ns, g.dfs_work, g.scan_work, g.result_nnz
+        );
+    }
+
     // --- warm sweep cells (widest grid instance) ---
     let cells = [
         sweep_cell(
             "dense_tableau/full",
             Backend::DenseTableau,
+            Factorization::ProductFormEta,
             Pricing::Dantzig,
             &base,
             sweep_points,
@@ -268,6 +350,7 @@ fn main() {
         sweep_cell(
             "revised/full",
             Backend::RevisedSimplex,
+            Factorization::ProductFormEta,
             Pricing::Dantzig,
             &base,
             sweep_points,
@@ -275,6 +358,23 @@ fn main() {
         sweep_cell(
             "revised/partial",
             Backend::RevisedSimplex,
+            Factorization::ProductFormEta,
+            Pricing::Partial,
+            &base,
+            sweep_points,
+        ),
+        sweep_cell(
+            "revised/ft/partial",
+            Backend::RevisedSimplex,
+            Factorization::ForrestTomlin,
+            Pricing::Partial,
+            &base,
+            sweep_points,
+        ),
+        sweep_cell(
+            "revised/bg/partial",
+            Backend::RevisedSimplex,
+            Factorization::BartelsGolub,
             Pricing::Partial,
             &base,
             sweep_points,
@@ -300,6 +400,8 @@ fn main() {
 
     let dense_cell = &cells[0];
     let partial_cell = &cells[2];
+    let ft_cell = &cells[3];
+    let bg_cell = &cells[4];
     let speedup = dense_cell.sweep_ms / partial_cell.sweep_ms.max(1e-9);
     let note = format!(
         "warm sweep (nfe n={n} m={m}, {sweep_points} points): sparse kernels + partial \
@@ -307,6 +409,11 @@ fn main() {
         partial_cell.sweep_ms, dense_cell.sweep_ms
     );
     println!("   note: {note}");
+    let bg_note = format!(
+        "update-file race (same sweep): forrest_tomlin {:.2}ms vs bartels_golub {:.2}ms",
+        ft_cell.sweep_ms, bg_cell.sweep_ms
+    );
+    println!("   note: {bg_note}");
 
     // --- JSON artifact ---
     let micro_json: Vec<Json> = micro
@@ -328,12 +435,27 @@ fn main() {
             ])
         })
         .collect();
+    let gp_json: Vec<Json> = gp
+        .iter()
+        .map(|g| {
+            Json::Object(vec![
+                ("kernel".into(), Json::Str(g.kernel.into())),
+                ("m".into(), Json::Num(micro_m as f64)),
+                ("dfs_ns".into(), Json::Num(g.dfs_ns)),
+                ("scan_ns".into(), Json::Num(g.scan_ns)),
+                ("dfs_work".into(), Json::Num(g.dfs_work as f64)),
+                ("scan_work".into(), Json::Num(g.scan_work as f64)),
+                ("result_nnz".into(), Json::Num(g.result_nnz as f64)),
+            ])
+        })
+        .collect();
     let cell_json: Vec<Json> = cells
         .iter()
         .map(|c| {
             Json::Object(vec![
                 ("cell".into(), Json::Str(c.label.into())),
                 ("backend".into(), Json::Str(c.backend.as_str().into())),
+                ("factorization".into(), Json::Str(c.factorization.as_str().into())),
                 ("pricing".into(), Json::Str(c.pricing.as_str().into())),
                 ("cold_ms".into(), Json::Num(c.cold_ms)),
                 ("cold_iterations".into(), Json::Num(c.cold_iterations as f64)),
@@ -357,8 +479,9 @@ fn main() {
             )),
         ),
         ("micro_kernels".into(), Json::Array(micro_json)),
+        ("gp_kernels".into(), Json::Array(gp_json)),
         ("sweep_cells".into(), Json::Array(cell_json)),
-        ("notes".into(), Json::Array(vec![Json::Str(note)])),
+        ("notes".into(), Json::Array(vec![Json::Str(note), Json::Str(bg_note)])),
     ]);
     if let Ok(dir) = std::env::var("DLT_BENCH_JSON_DIR") {
         std::fs::create_dir_all(&dir).expect("create bench json dir");
@@ -390,6 +513,19 @@ fn main() {
                 mc.dense_equivalent
             );
         }
+        // The Gilbert-Peierls gate is on the deterministic work
+        // counter, not wall time: the symbolic DFS must visit strictly
+        // fewer nodes than the full column sweep on the same solve.
+        for g in &gp {
+            assert!(
+                g.dfs_work < g.scan_work,
+                "gp {}: DFS visited {} nodes, no better than the {}-node column sweep",
+                g.kernel,
+                g.dfs_work,
+                g.scan_work
+            );
+            assert!(g.result_nnz > 0, "gp {}: solve produced an empty result", g.kernel);
+        }
         // 1.5x slack: on DLT_BENCH_FAST instances the totals are
         // sub-millisecond, where runner jitter is a real fraction.
         assert!(
@@ -397,6 +533,14 @@ fn main() {
             "sparse warm-sweep path ({:.2}ms) slower than the dense baseline cell ({:.2}ms)",
             partial_cell.sweep_ms,
             dense_cell.sweep_ms
+        );
+        // The update-file race is informational, but both contenders
+        // must have actually solved the sweep to the same iteration
+        // count ballpark (a wildly divergent count means a broken
+        // update chain, not a slow one).
+        assert!(
+            ft_cell.sweep_iterations > 0 && bg_cell.sweep_iterations > 0,
+            "update-file race cells did not pivot"
         );
         println!("   regression gates passed");
     }

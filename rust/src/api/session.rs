@@ -274,6 +274,9 @@ impl Session {
                 candidate_hits: solved.solution.candidate_hits,
                 candidate_refreshes: solved.solution.candidate_refreshes,
                 avg_ftran_nnz: solved.solution.avg_ftran_nnz,
+                avg_btran_nnz: solved.solution.avg_btran_nnz,
+                dfs_solves: solved.solution.dfs_solves,
+                scan_solves: solved.solution.scan_solves,
                 presolve: solved.stats,
                 pdhg: solved.pdhg,
                 solve_ns,
@@ -424,6 +427,20 @@ mod tests {
             resp.makespan,
             default.makespan
         );
+        // The hypersparse arms (Markowitz refactorization, Bartels-Golub
+        // updates) are selectable through the same path.
+        for f in [Factorization::Markowitz, Factorization::BartelsGolub] {
+            let mut req = SolveRequest::new(Family::Frontend, spec());
+            req.options.factorization = Some(f);
+            let resp = Solver::new().build().solve(&req).unwrap();
+            assert_eq!(resp.diagnostics.factorization, f);
+            assert!(
+                (resp.makespan - default.makespan).abs() < 1e-7 * (1.0 + default.makespan),
+                "{f:?} changed the optimum: {} vs {}",
+                resp.makespan,
+                default.makespan
+            );
+        }
     }
 
     #[test]

@@ -113,7 +113,8 @@ pub struct RequestOptions {
     /// Presolve override.
     pub presolve: Option<bool>,
     /// Basis-factorization override for the revised backend
-    /// (`product_form_eta` | `forrest_tomlin`).
+    /// (`product_form_eta` | `forrest_tomlin` | `markowitz` |
+    /// `bartels_golub`).
     pub factorization: Option<Factorization>,
     /// Pricing-rule override for the revised backend
     /// (`dantzig` | `devex` | `steepest_edge` | `partial`).
@@ -219,7 +220,8 @@ impl RequestOptions {
             let s = f.as_str()?;
             o.factorization = Some(Factorization::parse(s).ok_or_else(|| {
                 Error::Config(format!(
-                    "unknown factorization `{s}` (expected product_form_eta|forrest_tomlin)"
+                    "unknown factorization `{s}` (expected \
+                     product_form_eta|forrest_tomlin|markowitz|bartels_golub)"
                 ))
             })?);
         }
@@ -326,7 +328,8 @@ pub struct Diagnostics {
     /// Whether this solve started from a cached/projected warm basis.
     pub warm_start: bool,
     /// Basis-factorization strategy the solve ran
-    /// (`product_form_eta` | `forrest_tomlin`).
+    /// (`product_form_eta` | `forrest_tomlin` | `markowitz` |
+    /// `bartels_golub`).
     pub factorization: Factorization,
     /// Pricing rule the solve ran (`dantzig` | `devex` |
     /// `steepest_edge`; the dense tableau always reports `dantzig`).
@@ -347,6 +350,15 @@ pub struct Diagnostics {
     /// Mean FTRAN-result nonzeros per pivot — the hypersparsity
     /// diagnostic (0.0 on the dense tableau and PDHG).
     pub avg_ftran_nnz: f64,
+    /// Mean BTRAN-result nonzeros per solve (pricing rows and dual
+    /// updates; 0.0 where there is no BTRAN).
+    pub avg_btran_nnz: f64,
+    /// Triangular solves answered through the Gilbert–Peierls symbolic
+    /// DFS path (0 on the dense tableau and PDHG).
+    pub dfs_solves: usize,
+    /// Triangular solves answered through the full column scan (the
+    /// dense-RHS side of the DFS/scan crossover).
+    pub scan_solves: usize,
     /// What presolve removed in front of the backend.
     pub presolve: PresolveStats,
     /// PDHG convergence details (`backend == pdhg` only).
@@ -425,6 +437,9 @@ impl SolveResponse {
                 Json::Num(d.candidate_refreshes as f64),
             ),
             ("avg_ftran_nnz".into(), Json::Num(d.avg_ftran_nnz)),
+            ("avg_btran_nnz".into(), Json::Num(d.avg_btran_nnz)),
+            ("dfs_solves".into(), Json::Num(d.dfs_solves as f64)),
+            ("scan_solves".into(), Json::Num(d.scan_solves as f64)),
             (
                 "presolve".into(),
                 Json::Object(vec![
@@ -518,6 +533,9 @@ impl SolveResponse {
             candidate_hits: d.req("candidate_hits")?.as_usize()?,
             candidate_refreshes: d.req("candidate_refreshes")?.as_usize()?,
             avg_ftran_nnz: d.req("avg_ftran_nnz")?.as_f64()?,
+            avg_btran_nnz: d.req("avg_btran_nnz")?.as_f64()?,
+            dfs_solves: d.req("dfs_solves")?.as_usize()?,
+            scan_solves: d.req("scan_solves")?.as_usize()?,
             presolve: PresolveStats {
                 fixed_vars: pres.req("fixed_vars")?.as_usize()?,
                 empty_rows_dropped: pres.req("empty_rows_dropped")?.as_usize()?,
@@ -649,7 +667,7 @@ mod tests {
             options: RequestOptions {
                 backend: Some(Backend::Pdhg),
                 presolve: Some(false),
-                factorization: Some(Factorization::ForrestTomlin),
+                factorization: Some(Factorization::BartelsGolub),
                 pricing: Some(Pricing::Devex),
                 eps: Some(1e-8),
                 mode: Some(Mode::Proportional),

@@ -31,14 +31,15 @@ fn model_of(a: &Args) -> Result<TimingModel> {
 }
 
 /// Simplex strategy flags shared by `solve`, `sweep` and `batch`:
-/// `--factorization product_form_eta|forrest_tomlin` and
-/// `--pricing dantzig|devex|steepest_edge|partial`.
+/// `--factorization product_form_eta|forrest_tomlin|markowitz|bartels_golub`
+/// and `--pricing dantzig|devex|steepest_edge|partial`.
 fn simplex_of(a: &Args) -> Result<SimplexOptions> {
     let mut s = SimplexOptions::default();
     if let Some(f) = a.get("factorization") {
         s.factorization = Factorization::parse(f).ok_or_else(|| {
             Error::Usage(format!(
-                "--factorization must be product_form_eta|forrest_tomlin, got `{f}`"
+                "--factorization must be \
+                 product_form_eta|forrest_tomlin|markowitz|bartels_golub, got `{f}`"
             ))
         })?;
     }

@@ -3,7 +3,7 @@
 //!
 //! ```text
 //! dlt solve     --spec spec.json [--model fe|nfe] [--solver simplex|pdhg|pdhg-artifact]
-//!               [--factorization product_form_eta|forrest_tomlin]
+//!               [--factorization product_form_eta|forrest_tomlin|markowitz|bartels_golub]
 //!               [--pricing dantzig|devex|steepest_edge]
 //! dlt batch     [--requests FILE|-] [--backend revised_simplex|dense_tableau|pdhg]
 //!               [--factorization NAME] [--pricing NAME]
@@ -71,7 +71,8 @@ COMMON FLAGS
   --model fe|nfe     timing model (default fe)
   --solver NAME      simplex | pdhg | pdhg-artifact (default simplex)
   --factorization N  simplex basis-factorization strategy:
-                     product_form_eta (default) | forrest_tomlin
+                     product_form_eta (default) | forrest_tomlin |
+                     markowitz | bartels_golub
   --pricing NAME     simplex pricing rule:
                      dantzig (default) | devex | steepest_edge
   --csv-dir DIR      also write CSV output
@@ -140,6 +141,9 @@ mod tests {
             "solve --spec {path} --factorization forrest_tomlin --pricing devex"
         )))
         .unwrap();
+        run(&argv(&format!("solve --spec {path} --factorization markowitz"))).unwrap();
+        run(&argv(&format!("solve --spec {path} --factorization bartels_golub --model nfe")))
+            .unwrap();
         run(&argv(&format!("solve --spec {path} --pricing steepest_edge --model nfe"))).unwrap();
         assert!(run(&argv(&format!("solve --spec {path} --factorization qr"))).is_err());
         assert!(run(&argv(&format!("solve --spec {path} --pricing greatest"))).is_err());
@@ -186,6 +190,10 @@ mod tests {
                 "options": {{"backend": "pdhg"}}}},
               {{"id": "ft-1",  "family": "frontend",    "spec": {spec},
                 "options": {{"factorization": "forrest_tomlin", "pricing": "devex"}}}},
+              {{"id": "bg-1",  "family": "frontend",    "spec": {spec},
+                "options": {{"factorization": "bartels_golub"}}}},
+              {{"id": "mk-1",  "family": "frontend",    "spec": {spec},
+                "options": {{"factorization": "markowitz"}}}},
               {{"family": "not_a_family", "spec": {spec}}}
             ]"#
         );

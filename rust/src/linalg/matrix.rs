@@ -194,6 +194,37 @@ pub fn lu_solve(a: &Matrix, b: &[f64]) -> Result<Vec<f64>> {
     Ok(x)
 }
 
+/// How the hypersparse triangular solves pick their processing order.
+///
+/// `Auto` is the production setting: a per-solve crossover on the
+/// right-hand-side density chooses between the Gilbert–Peierls
+/// symbolic DFS (work proportional to the *result* nonzeros) and the
+/// plain column sweep (work proportional to `n`). The forced modes
+/// exist for benches and tests that need to compare both kernels on
+/// identical inputs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SolveMode {
+    /// RHS-density crossover heuristic (the default).
+    #[default]
+    Auto,
+    /// Always the Gilbert–Peierls symbolic DFS reach.
+    Dfs,
+    /// Always the full column sweep.
+    Scan,
+}
+
+/// In `Auto` mode a solve takes the DFS path when
+/// `rhs_nnz * DFS_CROSSOVER < n`: the symbolic reach only pays for
+/// itself when the right-hand side (and hence, typically, the result)
+/// is much sparser than the dimension.
+const DFS_CROSSOVER: usize = 8;
+
+/// Markowitz threshold-pivot tolerance: a pivot candidate qualifies
+/// when its magnitude is at least `MARKOWITZ_TAU` times the column
+/// maximum. 0.1 is the textbook sparse-LU compromise between numerical
+/// safety (1.0 = plain partial pivoting) and fill-in freedom.
+pub const MARKOWITZ_TAU: f64 = 0.1;
+
 /// Reusable LU factorization with partial pivoting (`P A = L U`).
 ///
 /// The factors are stored *row/column sparse*: basis matrices of DLT
@@ -201,6 +232,11 @@ pub fn lu_solve(a: &Matrix, b: &[f64]) -> Result<Vec<f64>> {
 /// triangular solve costs O(nnz(L) + nnz(U)) instead of O(n²). Both
 /// `A x = b` and `Aᵀ x = b` solves are supported (the revised simplex
 /// needs FTRAN and BTRAN against the same basis factorization).
+///
+/// The sparse solves are *hypersparse*: for a sufficiently sparse
+/// right-hand side they run a Gilbert–Peierls symbolic DFS over the
+/// factor graph first, so only the topological closure of the RHS
+/// nonzeros is ever visited — no O(n) column scan (see [`SolveMode`]).
 #[derive(Debug, Clone)]
 pub struct LuFactors {
     n: usize,
@@ -221,6 +257,63 @@ pub struct LuFactors {
     /// Column accumulator for [`LuFactors::refactor_csc`] (kept so
     /// steady-state refactorizations allocate nothing).
     acc: SparseVector,
+    /// Solve-order policy for the sparse kernels.
+    mode: SolveMode,
+    /// Visited marks for the symbolic DFS, generation-stamped so a new
+    /// reach is a counter bump, not an O(n) reset.
+    stamp: Vec<u32>,
+    /// Current stamp generation (0 = everything unvisited).
+    stamp_gen: u32,
+    /// Explicit DFS stack of `(node, next adjacency position)`.
+    dfs_stack: Vec<(usize, usize)>,
+    /// Postorder of the last reach; solves process it in reverse
+    /// (reverse postorder = topological order of the column DAG).
+    dfs_order: Vec<usize>,
+    /// Sparse solves answered by the symbolic DFS since construction.
+    dfs_solves: usize,
+    /// Sparse solves answered by the full column sweep.
+    scan_solves: usize,
+    /// Nodes visited by the most recent sparse solve (DFS: reach sizes;
+    /// scan: `n` per sweep) — the work-∝-result-nnz diagnostic.
+    last_work: usize,
+    /// Static per-row nonzero counts of the input, used by the
+    /// Markowitz pivot rule (reused across refactorizations).
+    row_counts: Vec<usize>,
+}
+
+/// Iterative DFS over the column adjacency `adj` from `seeds`,
+/// appending the postorder of every newly reached node to `order`.
+/// Nodes whose stamp equals `gen` are treated as already visited, so
+/// callers mark-and-reuse across passes by bumping `gen`.
+fn reach(
+    adj: &[Vec<(usize, f64)>],
+    seeds: &[usize],
+    stamp: &mut [u32],
+    gen: u32,
+    stack: &mut Vec<(usize, usize)>,
+    order: &mut Vec<usize>,
+) {
+    order.clear();
+    for &s in seeds {
+        if stamp[s] == gen {
+            continue;
+        }
+        stamp[s] = gen;
+        stack.push((s, 0));
+        while let Some(top) = stack.last_mut() {
+            let (node, pos) = *top;
+            if let Some(&(child, _)) = adj[node].get(pos) {
+                top.1 = pos + 1;
+                if stamp[child] != gen {
+                    stamp[child] = gen;
+                    stack.push((child, 0));
+                }
+            } else {
+                order.push(node);
+                stack.pop();
+            }
+        }
+    }
 }
 
 /// Clear every inner vector and (re)size the outer one to `n`,
@@ -250,6 +343,15 @@ impl LuFactors {
             l_cols: vec![Vec::new(); n],
             u_cols: vec![Vec::new(); n],
             acc: SparseVector::default(),
+            mode: SolveMode::Auto,
+            stamp: Vec::new(),
+            stamp_gen: 0,
+            dfs_stack: Vec::new(),
+            dfs_order: Vec::new(),
+            dfs_solves: 0,
+            scan_solves: 0,
+            last_work: 0,
+            row_counts: Vec::new(),
         }
     }
 
@@ -352,6 +454,15 @@ impl LuFactors {
             l_cols,
             u_cols,
             acc: SparseVector::default(),
+            mode: SolveMode::Auto,
+            stamp: Vec::new(),
+            stamp_gen: 0,
+            dfs_stack: Vec::new(),
+            dfs_order: Vec::new(),
+            dfs_solves: 0,
+            scan_solves: 0,
+            last_work: 0,
+            row_counts: Vec::new(),
         })
     }
 
@@ -362,6 +473,14 @@ impl LuFactors {
     pub fn factor_csc(a: &SparseMatrix) -> Result<LuFactors> {
         let mut f = LuFactors::identity(a.rows());
         f.refactor_csc(a)?;
+        Ok(f)
+    }
+
+    /// [`LuFactors::factor_csc`] with the Markowitz threshold pivot
+    /// rule (see [`LuFactors::refactor_csc_markowitz`]).
+    pub fn factor_csc_markowitz(a: &SparseMatrix) -> Result<LuFactors> {
+        let mut f = LuFactors::identity(a.rows());
+        f.refactor_csc_markowitz(a)?;
         Ok(f)
     }
 
@@ -376,6 +495,24 @@ impl LuFactors {
     /// the pivot, and the accumulator splits into a `U` column
     /// (pivoted rows) and a scaled `L` column (unpivoted rows).
     pub fn refactor_csc(&mut self, a: &SparseMatrix) -> Result<()> {
+        self.refactor_impl(a, false)
+    }
+
+    /// [`LuFactors::refactor_csc`] with a fill-in-aware pivot choice:
+    /// among the threshold-eligible candidates of each column (entries
+    /// within [`MARKOWITZ_TAU`] of the column maximum), pick the one in
+    /// the *sparsest row* of the input. With the column order fixed by
+    /// the left-looking sweep, the Markowitz cost `(r_i − 1)(c_j − 1)`
+    /// of a candidate varies only through its row count `r_i`, so
+    /// minimizing `r_i` among eligible entries *is* the column-wise
+    /// Markowitz-minimal choice; static row counts of `A` are the
+    /// standard approximation to the exact (dynamically updated)
+    /// counts.
+    pub fn refactor_csc_markowitz(&mut self, a: &SparseMatrix) -> Result<()> {
+        self.refactor_impl(a, true)
+    }
+
+    fn refactor_impl(&mut self, a: &SparseMatrix, markowitz: bool) -> Result<()> {
         let n = a.rows();
         if a.cols() != n {
             return Err(Error::Numerical(format!(
@@ -397,6 +534,15 @@ impl LuFactors {
         self.u_diag.clear();
         self.u_diag.resize(n, 0.0);
         self.acc.resize_clear(n);
+        if markowitz {
+            self.row_counts.clear();
+            self.row_counts.resize(n, 0);
+            for j in 0..n {
+                for (i, _) in a.col(j) {
+                    self.row_counts[i] += 1;
+                }
+            }
+        }
 
         for j in 0..n {
             for (i, v) in a.col(j) {
@@ -431,6 +577,31 @@ impl LuFactors {
                 return Err(Error::Numerical(format!(
                     "lu factor (csc): singular at pivot {j}"
                 )));
+            }
+            if markowitz {
+                // Threshold pivoting: any candidate within MARKOWITZ_TAU
+                // of the column max is numerically acceptable; among
+                // those, prefer the sparsest input row (least expected
+                // fill-in), breaking ties toward the larger magnitude.
+                let mut best = p;
+                let mut best_count = self.row_counts[p];
+                let mut best_mag = pmax;
+                for &i in self.acc.indices() {
+                    if self.iperm[i] != usize::MAX {
+                        continue;
+                    }
+                    let mag = self.acc.get(i).abs();
+                    if mag < MARKOWITZ_TAU * pmax {
+                        continue;
+                    }
+                    let count = self.row_counts[i];
+                    if count < best_count || (count == best_count && mag > best_mag) {
+                        best = i;
+                        best_count = count;
+                        best_mag = mag;
+                    }
+                }
+                p = best;
             }
             let pivot = self.acc.get(p);
             self.perm[j] = p;
@@ -511,6 +682,55 @@ impl LuFactors {
         self.n
     }
 
+    /// Force or un-force the sparse-solve processing order (benches and
+    /// tests that compare the DFS and scan kernels on identical
+    /// inputs; production code leaves this at [`SolveMode::Auto`]).
+    pub fn set_solve_mode(&mut self, mode: SolveMode) {
+        self.mode = mode;
+    }
+
+    /// `(dfs_solves, scan_solves)`: how many sparse triangular solves
+    /// took each path since construction (diagnostics; never reset).
+    pub fn solve_mode_counts(&self) -> (usize, usize) {
+        (self.dfs_solves, self.scan_solves)
+    }
+
+    /// Nodes visited by the most recent sparse solve: the sum of the
+    /// symbolic reach sizes on the DFS path, or `n` per substitution
+    /// sweep on the scan path. The regression tests and
+    /// `DLT_BENCH_ASSERT` gates use this to check that DFS work scales
+    /// with the result nonzeros, not the dimension.
+    pub fn last_solve_work(&self) -> usize {
+        self.last_work
+    }
+
+    /// Whether a solve with `rhs_nnz` right-hand-side nonzeros takes
+    /// the symbolic DFS path under the current [`SolveMode`].
+    fn dfs_wanted(&self, rhs_nnz: usize) -> bool {
+        match self.mode {
+            SolveMode::Auto => rhs_nnz * DFS_CROSSOVER < self.n,
+            SolveMode::Dfs => true,
+            SolveMode::Scan => false,
+        }
+    }
+
+    /// Bump the stamp generation (O(1) un-visit of every node),
+    /// resizing / rewinding the stamp array on dimension change and
+    /// counter wrap-around.
+    fn next_stamp(&mut self) -> u32 {
+        if self.stamp.len() != self.n {
+            self.stamp.clear();
+            self.stamp.resize(self.n, 0);
+            self.stamp_gen = 0;
+        }
+        self.stamp_gen = self.stamp_gen.wrapping_add(1);
+        if self.stamp_gen == 0 {
+            self.stamp.fill(0);
+            self.stamp_gen = 1;
+        }
+        self.stamp_gen
+    }
+
     /// Solve `A x = b` into `out` (allocation-free).
     pub fn solve_into(&self, b: &[f64], out: &mut [f64]) {
         let n = self.n;
@@ -569,14 +789,19 @@ impl LuFactors {
     }
 
     /// Hypersparse `A x = b` solve, in place: `v` holds `b` on entry
-    /// and `x` on return. Both substitutions run column-oriented so a
-    /// column whose intermediate value is (exactly) zero is skipped
-    /// outright — on the near-unit right-hand sides the revised
-    /// simplex produces, the work is proportional to the nonzeros
-    /// actually created, not to `n²` or even `nnz(L) + nnz(U)`.
-    pub fn solve_sparse(&self, v: &mut SparseVector, tmp: &mut SparseVector) {
+    /// and `x` on return.
+    ///
+    /// Sparse right-hand sides (see [`SolveMode`]) take the
+    /// Gilbert–Peierls path: a symbolic DFS over each factor's column
+    /// graph computes the topological closure of the RHS nonzeros, and
+    /// the numeric substitution processes exactly that set in reverse
+    /// postorder — the work is proportional to the nonzeros actually
+    /// created, independent of `n`. Denser inputs keep the column sweep
+    /// with zero-skip, whose work is O(n + nnz touched).
+    pub fn solve_sparse(&mut self, v: &mut SparseVector, tmp: &mut SparseVector) {
         let n = self.n;
         debug_assert_eq!(v.dim(), n);
+        let dfs = self.dfs_wanted(v.nnz());
         tmp.resize_clear(n);
         // z = P b.
         for &j in v.indices() {
@@ -586,57 +811,155 @@ impl LuFactors {
             }
         }
         v.clear();
-        // Forward: L z' = z, column sweep with zero-skip.
-        for j in 0..n {
-            let zj = tmp.get(j);
-            if zj == 0.0 {
-                continue;
+        if dfs {
+            self.dfs_solves += 1;
+            self.last_work = 0;
+            // Forward: L z' = z over the reach of z in the L column DAG.
+            let gen = self.next_stamp();
+            reach(
+                &self.l_cols,
+                tmp.indices(),
+                &mut self.stamp,
+                gen,
+                &mut self.dfs_stack,
+                &mut self.dfs_order,
+            );
+            self.last_work += self.dfs_order.len();
+            for &j in self.dfs_order.iter().rev() {
+                let zj = tmp.get(j);
+                if zj == 0.0 {
+                    continue;
+                }
+                for &(i, l) in &self.l_cols[j] {
+                    tmp.add(i, -l * zj);
+                }
             }
-            for &(i, l) in &self.l_cols[j] {
-                tmp.add(i, -l * zj);
+            // Backward: U x = z' over the reach of z' in the U column DAG.
+            let gen = self.next_stamp();
+            reach(
+                &self.u_cols,
+                tmp.indices(),
+                &mut self.stamp,
+                gen,
+                &mut self.dfs_stack,
+                &mut self.dfs_order,
+            );
+            self.last_work += self.dfs_order.len();
+            for &j in self.dfs_order.iter().rev() {
+                let zj = tmp.get(j);
+                if zj == 0.0 {
+                    continue;
+                }
+                let xj = zj / self.u_diag[j];
+                v.set(j, xj);
+                for &(i, u) in &self.u_cols[j] {
+                    tmp.add(i, -u * xj);
+                }
             }
-        }
-        // Backward: U x = z', column sweep descending.
-        for j in (0..n).rev() {
-            let zj = tmp.get(j);
-            if zj == 0.0 {
-                continue;
+        } else {
+            self.scan_solves += 1;
+            self.last_work = 2 * n;
+            // Forward: L z' = z, column sweep with zero-skip.
+            for j in 0..n {
+                let zj = tmp.get(j);
+                if zj == 0.0 {
+                    continue;
+                }
+                for &(i, l) in &self.l_cols[j] {
+                    tmp.add(i, -l * zj);
+                }
             }
-            let xj = zj / self.u_diag[j];
-            v.set(j, xj);
-            for &(i, u) in &self.u_cols[j] {
-                tmp.add(i, -u * xj);
+            // Backward: U x = z', column sweep descending.
+            for j in (0..n).rev() {
+                let zj = tmp.get(j);
+                if zj == 0.0 {
+                    continue;
+                }
+                let xj = zj / self.u_diag[j];
+                v.set(j, xj);
+                for &(i, u) in &self.u_cols[j] {
+                    tmp.add(i, -u * xj);
+                }
             }
         }
         tmp.clear();
     }
 
     /// Hypersparse `Aᵀ x = b` solve, in place (see
-    /// [`LuFactors::solve_sparse`]): `Uᵀ z = b`, then `Lᵀ w = z`, then
-    /// `x = Pᵀ w`.
-    pub fn solve_transpose_sparse(&self, v: &mut SparseVector, tmp: &mut SparseVector) {
+    /// [`LuFactors::solve_sparse`] for the DFS/scan crossover):
+    /// `Uᵀ z = b`, then `Lᵀ w = z`, then `x = Pᵀ w`.
+    pub fn solve_transpose_sparse(&mut self, v: &mut SparseVector, tmp: &mut SparseVector) {
         let n = self.n;
         debug_assert_eq!(v.dim(), n);
-        // Forward: Uᵀ z = b (lower triangular), in place ascending.
-        for j in 0..n {
-            let bj = v.get(j);
-            if bj == 0.0 {
-                continue;
+        if self.dfs_wanted(v.nnz()) {
+            self.dfs_solves += 1;
+            self.last_work = 0;
+            // Forward: Uᵀ z = b over the reach of b in the Uᵀ row DAG.
+            let gen = self.next_stamp();
+            reach(
+                &self.u_rows,
+                v.indices(),
+                &mut self.stamp,
+                gen,
+                &mut self.dfs_stack,
+                &mut self.dfs_order,
+            );
+            self.last_work += self.dfs_order.len();
+            for &j in self.dfs_order.iter().rev() {
+                let bj = v.get(j);
+                if bj == 0.0 {
+                    continue;
+                }
+                let zj = bj / self.u_diag[j];
+                v.set(j, zj);
+                for &(c, u) in &self.u_rows[j] {
+                    v.add(c, -u * zj);
+                }
             }
-            let zj = bj / self.u_diag[j];
-            v.set(j, zj);
-            for &(c, u) in &self.u_rows[j] {
-                v.add(c, -u * zj);
+            // Backward: Lᵀ w = z over the reach of z in the Lᵀ row DAG.
+            let gen = self.next_stamp();
+            reach(
+                &self.l_rows,
+                v.indices(),
+                &mut self.stamp,
+                gen,
+                &mut self.dfs_stack,
+                &mut self.dfs_order,
+            );
+            self.last_work += self.dfs_order.len();
+            for &j in self.dfs_order.iter().rev() {
+                let wj = v.get(j);
+                if wj == 0.0 {
+                    continue;
+                }
+                for &(c, l) in &self.l_rows[j] {
+                    v.add(c, -l * wj);
+                }
             }
-        }
-        // Backward: Lᵀ w = z (upper triangular, unit diagonal).
-        for j in (0..n).rev() {
-            let wj = v.get(j);
-            if wj == 0.0 {
-                continue;
+        } else {
+            self.scan_solves += 1;
+            self.last_work = 2 * n;
+            // Forward: Uᵀ z = b (lower triangular), in place ascending.
+            for j in 0..n {
+                let bj = v.get(j);
+                if bj == 0.0 {
+                    continue;
+                }
+                let zj = bj / self.u_diag[j];
+                v.set(j, zj);
+                for &(c, u) in &self.u_rows[j] {
+                    v.add(c, -u * zj);
+                }
             }
-            for &(c, l) in &self.l_rows[j] {
-                v.add(c, -l * wj);
+            // Backward: Lᵀ w = z (upper triangular, unit diagonal).
+            for j in (0..n).rev() {
+                let wj = v.get(j);
+                if wj == 0.0 {
+                    continue;
+                }
+                for &(c, l) in &self.l_rows[j] {
+                    v.add(c, -l * wj);
+                }
             }
         }
         // x = Pᵀ w.
@@ -652,11 +975,14 @@ impl LuFactors {
     }
 
     /// Forward half of a hypersparse FTRAN: `v ← L⁻¹ P v`, leaving the
-    /// result in the pivot-row space. Forrest–Tomlin keeps its own
-    /// updated `U` and only needs this half from the factorization.
-    pub fn lower_solve_sparse(&self, v: &mut SparseVector, tmp: &mut SparseVector) {
+    /// result in the pivot-row space. Forrest–Tomlin and Bartels–Golub
+    /// keep their own updated `U` and only need this half from the
+    /// factorization. Takes the same Gilbert–Peierls DFS path as
+    /// [`LuFactors::solve_sparse`] on sparse inputs.
+    pub fn lower_solve_sparse(&mut self, v: &mut SparseVector, tmp: &mut SparseVector) {
         let n = self.n;
         debug_assert_eq!(v.dim(), n);
+        let dfs = self.dfs_wanted(v.nnz());
         tmp.resize_clear(n);
         for &j in v.indices() {
             let val = v.get(j);
@@ -664,13 +990,38 @@ impl LuFactors {
                 tmp.set(self.iperm[j], val);
             }
         }
-        for j in 0..n {
-            let zj = tmp.get(j);
-            if zj == 0.0 {
-                continue;
+        if dfs {
+            self.dfs_solves += 1;
+            let gen = self.next_stamp();
+            reach(
+                &self.l_cols,
+                tmp.indices(),
+                &mut self.stamp,
+                gen,
+                &mut self.dfs_stack,
+                &mut self.dfs_order,
+            );
+            self.last_work = self.dfs_order.len();
+            for &j in self.dfs_order.iter().rev() {
+                let zj = tmp.get(j);
+                if zj == 0.0 {
+                    continue;
+                }
+                for &(i, l) in &self.l_cols[j] {
+                    tmp.add(i, -l * zj);
+                }
             }
-            for &(i, l) in &self.l_cols[j] {
-                tmp.add(i, -l * zj);
+        } else {
+            self.scan_solves += 1;
+            self.last_work = n;
+            for j in 0..n {
+                let zj = tmp.get(j);
+                if zj == 0.0 {
+                    continue;
+                }
+                for &(i, l) in &self.l_cols[j] {
+                    tmp.add(i, -l * zj);
+                }
             }
         }
         std::mem::swap(v, tmp);
@@ -678,17 +1029,43 @@ impl LuFactors {
     }
 
     /// Closing half of a hypersparse BTRAN: `v ← Pᵀ L⁻ᵀ v` for a
-    /// caller that already did its own upper-transpose solve.
-    pub fn lower_transpose_solve_sparse(&self, v: &mut SparseVector, tmp: &mut SparseVector) {
+    /// caller that already did its own upper-transpose solve. DFS/scan
+    /// crossover as in [`LuFactors::solve_sparse`].
+    pub fn lower_transpose_solve_sparse(&mut self, v: &mut SparseVector, tmp: &mut SparseVector) {
         let n = self.n;
         debug_assert_eq!(v.dim(), n);
-        for j in (0..n).rev() {
-            let wj = v.get(j);
-            if wj == 0.0 {
-                continue;
+        if self.dfs_wanted(v.nnz()) {
+            self.dfs_solves += 1;
+            let gen = self.next_stamp();
+            reach(
+                &self.l_rows,
+                v.indices(),
+                &mut self.stamp,
+                gen,
+                &mut self.dfs_stack,
+                &mut self.dfs_order,
+            );
+            self.last_work = self.dfs_order.len();
+            for &j in self.dfs_order.iter().rev() {
+                let wj = v.get(j);
+                if wj == 0.0 {
+                    continue;
+                }
+                for &(c, l) in &self.l_rows[j] {
+                    v.add(c, -l * wj);
+                }
             }
-            for &(c, l) in &self.l_rows[j] {
-                v.add(c, -l * wj);
+        } else {
+            self.scan_solves += 1;
+            self.last_work = n;
+            for j in (0..n).rev() {
+                let wj = v.get(j);
+                if wj == 0.0 {
+                    continue;
+                }
+                for &(c, l) in &self.l_rows[j] {
+                    v.add(c, -l * wj);
+                }
             }
         }
         tmp.resize_clear(n);
@@ -842,7 +1219,7 @@ mod tests {
                 a[(i, i)] += 2.0;
             }
             let dense = LuFactors::factor(&a).unwrap();
-            let csc = LuFactors::factor_csc(&SparseMatrix::from_dense(&a, 0.0)).unwrap();
+            let mut csc = LuFactors::factor_csc(&SparseMatrix::from_dense(&a, 0.0)).unwrap();
             assert!(
                 csc.nnz() <= n * n + n,
                 "n={n}: sparse factor stores {} entries",
@@ -898,6 +1275,164 @@ mod tests {
         f.solve_sparse(&mut sv, &mut tmp);
         assert_eq!(sv.get(1), 4.0);
         assert_eq!(sv.get(0), 0.0);
+    }
+
+    /// Random sparse nonsingular matrix for the Gilbert–Peierls tests
+    /// (diagonally dominant, ~15 % off-diagonal fill).
+    fn random_sparse(n: usize, seed: u64) -> Matrix {
+        use crate::util::rng::{Pcg32, Rng};
+        let mut rng = Pcg32::new(seed);
+        let mut a = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                if i == j || rng.f64() < 0.15 {
+                    a[(i, j)] = rng.f64() - 0.5;
+                }
+            }
+            a[(i, i)] += 3.0;
+        }
+        a
+    }
+
+    #[test]
+    fn dfs_and_scan_solves_agree_to_1e12() {
+        // Forced-DFS vs forced-scan on identical hypersparse RHS: the
+        // two kernels must produce the same result to 1e-12, for both
+        // FTRAN- and BTRAN-shaped solves, over randomized instances.
+        use crate::util::rng::{Pcg32, Rng};
+        let mut rng = Pcg32::new(2024);
+        for rep in 0..40 {
+            let n = 8 + (rep % 7) * 13;
+            let a = random_sparse(n, 1000 + rep as u64);
+            let mut lu = LuFactors::factor_csc(&SparseMatrix::from_dense(&a, 0.0)).unwrap();
+            let mut v = SparseVector::with_dim(n);
+            let mut tmp = SparseVector::default();
+            // 1–3 random nonzeros: the hypersparse regime.
+            for _ in 0..(1 + rep % 3) {
+                v.set(rng.below(n), rng.f64() * 4.0 - 2.0);
+            }
+            let mut w = SparseVector::default();
+            w.copy_from(&v);
+
+            lu.set_solve_mode(SolveMode::Dfs);
+            lu.solve_sparse(&mut v, &mut tmp);
+            lu.set_solve_mode(SolveMode::Scan);
+            lu.solve_sparse(&mut w, &mut tmp);
+            for i in 0..n {
+                assert!(
+                    (v.get(i) - w.get(i)).abs() < 1e-12,
+                    "rep={rep} ftran[{i}]: dfs {} vs scan {}",
+                    v.get(i),
+                    w.get(i)
+                );
+            }
+
+            v.clear();
+            v.set(rng.below(n), 1.0);
+            w.copy_from(&v);
+            lu.set_solve_mode(SolveMode::Dfs);
+            lu.solve_transpose_sparse(&mut v, &mut tmp);
+            lu.set_solve_mode(SolveMode::Scan);
+            lu.solve_transpose_sparse(&mut w, &mut tmp);
+            for i in 0..n {
+                assert!(
+                    (v.get(i) - w.get(i)).abs() < 1e-12,
+                    "rep={rep} btran[{i}]: dfs {} vs scan {}",
+                    v.get(i),
+                    w.get(i)
+                );
+            }
+            let (dfs, scan) = lu.solve_mode_counts();
+            assert_eq!((dfs, scan), (2, 2), "each mode ran once per solve shape");
+        }
+    }
+
+    #[test]
+    fn auto_mode_picks_dfs_for_sparse_rhs_only() {
+        let n = 40;
+        let a = random_sparse(n, 7);
+        let mut lu = LuFactors::factor_csc(&SparseMatrix::from_dense(&a, 0.0)).unwrap();
+        let mut v = SparseVector::with_dim(n);
+        let mut tmp = SparseVector::default();
+        // 1 nonzero in 40: well under the crossover -> DFS.
+        v.set(3, 1.0);
+        lu.solve_sparse(&mut v, &mut tmp);
+        assert_eq!(lu.solve_mode_counts(), (1, 0));
+        // Dense RHS: scan.
+        let ones = vec![1.0; n];
+        v.set_from_dense(&ones);
+        lu.solve_sparse(&mut v, &mut tmp);
+        assert_eq!(lu.solve_mode_counts(), (1, 1));
+    }
+
+    #[test]
+    fn dfs_work_scales_with_result_nnz_not_n() {
+        // A lower-bidiagonal chain: the reach of e_{n-1} is {n-1} no
+        // matter how long the chain, while e_0 reaches everything.
+        // DFS work must stay O(1) in the first case as n grows; the
+        // scan always pays 2n.
+        for n in [64usize, 256, 1024] {
+            let mut trips = Vec::new();
+            for i in 0..n {
+                trips.push((i, i, 2.0));
+                if i + 1 < n {
+                    trips.push((i + 1, i, -1.0));
+                }
+            }
+            let a = SparseMatrix::from_triplets(n, n, &trips);
+            let mut lu = LuFactors::factor_csc(&a).unwrap();
+            let mut v = SparseVector::with_dim(n);
+            let mut tmp = SparseVector::default();
+            v.set(n - 1, 1.0);
+            lu.solve_sparse(&mut v, &mut tmp);
+            let (dfs, _) = lu.solve_mode_counts();
+            assert_eq!(dfs, 1, "n={n}: sparse unit RHS must take the DFS path");
+            assert!(
+                lu.last_solve_work() <= 4,
+                "n={n}: visited {} nodes for a 1-nnz result",
+                lu.last_solve_work()
+            );
+            // Same factor, scan mode: work is proportional to n.
+            v.clear();
+            v.set(n - 1, 1.0);
+            lu.set_solve_mode(SolveMode::Scan);
+            lu.solve_sparse(&mut v, &mut tmp);
+            assert_eq!(lu.last_solve_work(), 2 * n);
+        }
+    }
+
+    #[test]
+    fn markowitz_factor_matches_dense_solves() {
+        use crate::util::rng::{Pcg32, Rng};
+        let mut rng = Pcg32::new(55);
+        for n in [1usize, 2, 5, 12, 30] {
+            let a = random_sparse(n, 900 + n as u64);
+            let dense = LuFactors::factor(&a).unwrap();
+            let mut mk = LuFactors::factor_csc_markowitz(&SparseMatrix::from_dense(&a, 0.0))
+                .expect("markowitz factor");
+            let b: Vec<f64> =
+                (0..n).map(|_| if rng.f64() < 0.3 { rng.f64() } else { 0.0 }).collect();
+            let mut want = vec![0.0; n];
+            dense.solve_into(&b, &mut want);
+            let mut sv = SparseVector::default();
+            let mut tmp = SparseVector::default();
+            sv.set_from_dense(&b);
+            mk.solve_sparse(&mut sv, &mut tmp);
+            for i in 0..n {
+                assert!(
+                    (sv.get(i) - want[i]).abs() < 1e-8,
+                    "n={n} markowitz[{i}]: {} vs {}",
+                    sv.get(i),
+                    want[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn markowitz_detects_singular() {
+        let a = SparseMatrix::from_triplets(2, 2, &[(0, 0, 1.0), (1, 0, 2.0)]);
+        assert!(LuFactors::factor_csc_markowitz(&a).is_err());
     }
 
     #[test]

@@ -14,7 +14,7 @@ pub mod matrix;
 pub mod sparse;
 pub mod sparse_vec;
 
-pub use matrix::{lu_solve, LuFactors, Matrix};
+pub use matrix::{lu_solve, LuFactors, Matrix, SolveMode};
 pub use sparse::SparseMatrix;
 pub use sparse_vec::SparseVector;
 

@@ -17,6 +17,20 @@
 //! exact cancellation leaves a marked zero entry behind, which costs a
 //! slot but never correctness. Index order is unspecified (kernels
 //! that need an order iterate positions, not the list).
+//!
+//! The bulk operations (clear, dense scatter/gather,
+//! [`SparseVector::gather_into`]) are written as single-array,
+//! branch-free passes — one loop touches one buffer — so the
+//! autovectorizer can lift them to SIMD without unsafe code. Hot
+//! consumers (the revised-simplex ratio test and x_B update) gather the
+//! tracked entries into parallel `(index, value)` arrays once and then
+//! stream those contiguously instead of chasing `idx -> vals` twice per
+//! iteration.
+
+/// Above `1/DENSE_CLEAR_DIV` occupancy a clear resets the whole dense
+/// buffer with `fill` (two memsets) instead of per-index stores: the
+/// sparse path wins only when the tracked set is genuinely sparse.
+const DENSE_CLEAR_DIV: usize = 4;
 
 /// Dense-buffer + index-list sparse vector (see module docs).
 #[derive(Debug, Clone, Default, PartialEq)]
@@ -45,11 +59,23 @@ impl SparseVector {
         self.idx.len()
     }
 
-    /// Reset to all-zero in O(nnz), keeping all capacity.
+    /// Reset to all-zero in O(min(nnz, n)), keeping all capacity.
+    ///
+    /// Dense-ish vectors (occupancy above `1/4`) are reset with two
+    /// contiguous `fill`s — straight memsets — instead of scattered
+    /// per-index stores; truly sparse ones keep the O(nnz) path, split
+    /// into two single-array loops so each vectorizes independently.
     pub fn clear(&mut self) {
-        for &i in &self.idx {
-            self.vals[i] = 0.0;
-            self.mark[i] = false;
+        if self.idx.len() * DENSE_CLEAR_DIV >= self.vals.len() {
+            self.vals.fill(0.0);
+            self.mark.fill(false);
+        } else {
+            for &i in &self.idx {
+                self.vals[i] = 0.0;
+            }
+            for &i in &self.idx {
+                self.mark[i] = false;
+            }
         }
         self.idx.clear();
     }
@@ -115,34 +141,57 @@ impl SparseVector {
     }
 
     /// Load from a dense slice (the dense-adapter entry point). The
-    /// vector is cleared and resized to `v.len()` first.
+    /// vector is cleared and resized to `v.len()` first. Writes go
+    /// straight to the buffers — the vector is known clear, so the
+    /// per-entry membership test in [`SparseVector::set`] is skipped.
     pub fn set_from_dense(&mut self, v: &[f64]) {
         self.resize_clear(v.len());
         for (i, &x) in v.iter().enumerate() {
             if x != 0.0 {
-                self.set(i, x);
+                self.vals[i] = x;
+                self.mark[i] = true;
+                self.idx.push(i);
             }
         }
     }
 
     /// Become a copy of `other` (same tracked entries), reusing
-    /// capacity.
+    /// capacity. The index list is copied wholesale and the values
+    /// gathered in a separate branch-free pass.
     pub fn copy_from(&mut self, other: &SparseVector) {
         self.resize_clear(other.dim());
-        for &i in &other.idx {
-            let v = other.vals[i];
-            if v != 0.0 {
-                self.set(i, v);
-            }
+        self.idx.extend_from_slice(&other.idx);
+        for &i in &self.idx {
+            self.vals[i] = other.vals[i];
+        }
+        for &i in &self.idx {
+            self.mark[i] = true;
         }
     }
 
-    /// Scatter into a dense output buffer (zeroed first).
+    /// Scatter into a dense output buffer (zeroed first). The zeroing
+    /// is a single `fill` and the scatter a single indexed-store loop.
     pub fn copy_into_dense(&self, out: &mut [f64]) {
         debug_assert_eq!(out.len(), self.dim());
-        out.iter_mut().for_each(|x| *x = 0.0);
+        out.fill(0.0);
         for &i in &self.idx {
             out[i] = self.vals[i];
+        }
+    }
+
+    /// Compact the tracked entries into parallel `(index, value)`
+    /// arrays, reusing the callers' buffers. Tracked zeros are kept
+    /// (superset semantics, like [`SparseVector::indices`]); the value
+    /// gather is one indexed load + contiguous store per entry, so hot
+    /// loops downstream stream two flat arrays instead of dereferencing
+    /// `idx -> vals` per element.
+    pub fn gather_into(&self, out_idx: &mut Vec<usize>, out_vals: &mut Vec<f64>) {
+        out_idx.clear();
+        out_idx.extend_from_slice(&self.idx);
+        out_vals.clear();
+        out_vals.resize(self.idx.len(), 0.0);
+        for (o, &i) in out_vals.iter_mut().zip(self.idx.iter()) {
+            *o = self.vals[i];
         }
     }
 
@@ -216,6 +265,42 @@ mod tests {
         w.copy_from(&v);
         assert_eq!(w.values(), &d);
         assert!((v.norm2_sq() - (1.5 * 1.5 + 4.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dense_clear_crossover_resets_everything() {
+        // Occupancy 100%: the fill path must leave the same state as
+        // the sparse path.
+        let mut v = SparseVector::with_dim(5);
+        for i in 0..5 {
+            v.set(i, (i + 1) as f64);
+        }
+        v.clear();
+        assert_eq!(v.nnz(), 0);
+        assert_eq!(v.values(), &[0.0; 5]);
+        // And the vector is fully reusable afterwards.
+        v.set(3, 2.0);
+        assert_eq!((v.nnz(), v.get(3)), (1, 2.0));
+    }
+
+    #[test]
+    fn gather_into_compacts_tracked_entries() {
+        let mut v = SparseVector::with_dim(6);
+        v.set(4, 2.0);
+        v.set(1, -3.0);
+        v.add(5, 1.0);
+        v.add(5, -1.0); // cancelled: stays tracked
+        let mut idx = vec![99; 1];
+        let mut vals = vec![7.0; 9];
+        v.gather_into(&mut idx, &mut vals);
+        assert_eq!(idx.len(), v.nnz());
+        assert_eq!(vals.len(), v.nnz());
+        for (&i, &x) in idx.iter().zip(vals.iter()) {
+            assert_eq!(v.get(i), x);
+        }
+        // The cancelled slot is present with value zero.
+        let k = idx.iter().position(|&i| i == 5).unwrap();
+        assert_eq!(vals[k], 0.0);
     }
 
     #[test]

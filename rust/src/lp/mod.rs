@@ -4,8 +4,9 @@
 //! techniques"; this module is that solver. The default backend is a
 //! revised simplex over sparse column storage with basis warm starts
 //! ([`revised`]); its two per-pivot policies are strategy layers —
-//! basis factorization ([`factorization`]: product-form eta file or
-//! Forrest–Tomlin LU updates, both with hypersparse FTRAN/BTRAN
+//! basis factorization ([`factorization`]: product-form eta file,
+//! Markowitz-ordered refactorization, Forrest–Tomlin or Bartels–Golub
+//! LU updates, all with hypersparse FTRAN/BTRAN
 //! kernels) and pricing ([`pricing`]: Dantzig, devex, steepest edge,
 //! candidate-list partial) — selected through [`SimplexOptions`] and
 //! threaded end-to-end from the `dlt::api` wire options. Work buffers

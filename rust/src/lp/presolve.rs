@@ -533,6 +533,9 @@ impl Presolved {
             candidate_hits: sol.candidate_hits,
             candidate_refreshes: sol.candidate_refreshes,
             avg_ftran_nnz: sol.avg_ftran_nnz,
+            avg_btran_nnz: sol.avg_btran_nnz,
+            dfs_solves: sol.dfs_solves,
+            scan_solves: sol.scan_solves,
             duals,
             basis: sol.basis.clone(),
         }

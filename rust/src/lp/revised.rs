@@ -22,9 +22,10 @@
 //! [`SimplexOptions`]:
 //!
 //! - **how `B⁻¹` is maintained** — [`super::factorization`]: the
-//!   product-form eta file (default, extracted legacy behavior) or
-//!   Forrest–Tomlin LU updating, which refactorizes far less often on
-//!   long pivot sequences;
+//!   product-form eta file (default, extracted legacy behavior), the
+//!   same eta updating over a Markowitz/threshold refactorization, or
+//!   Forrest–Tomlin / Bartels–Golub LU updating, which refactorize far
+//!   less often on long pivot sequences;
 //! - **which column enters** — [`super::pricing`]: Dantzig (default),
 //!   devex, projected steepest edge, or candidate-list partial
 //!   pricing (`partial`), whose window hits let the driver skip the
@@ -192,6 +193,14 @@ struct Revised<'a> {
     /// FTRAN nonzero tally (hypersparsity diagnostic).
     ftran_nnz_sum: usize,
     ftran_count: usize,
+    /// BTRAN nonzero tally (hypersparsity diagnostic).
+    btran_nnz_sum: usize,
+    btran_count: usize,
+    /// Factorization solve-mode counter baselines at solve start:
+    /// pooled factorization objects persist across solves, so the
+    /// solution must report per-solve deltas, not lifetime totals.
+    dfs0: usize,
+    scan0: usize,
     /// Pricing-rule counter baselines at solve start: pooled rule
     /// objects persist across solves, so the solution must report
     /// per-solve deltas, not lifetime totals.
@@ -217,6 +226,11 @@ struct Revised<'a> {
     adv: Vec<f64>,
     /// Candidate window borrowed from the pricing rule each iteration.
     cand_buf: Vec<usize>,
+    /// Gathered FTRAN-column `(index, value)` pairs: the ratio test
+    /// and the x_B update stream these two flat arrays instead of
+    /// chasing `idx -> vals` per element.
+    gidx: Vec<usize>,
+    gval: Vec<f64>,
     /// Triplet buffer for sparse basis assembly.
     trip_buf: Vec<(usize, usize, f64)>,
     /// Pooled CSC basis view (rebuilt in place per refactorization).
@@ -234,6 +248,8 @@ impl<'a> Revised<'a> {
         let max_iters =
             if opts.max_iters == 0 { 200 * (m + ncols + 1) } else { opts.max_iters };
         let fact = scratch.take_fact(opts.factorization, m);
+        let dfs0 = fact.dfs_solves();
+        let scan0 = fact.scan_solves();
         let mut pricing = scratch.take_pricing(opts.pricing);
         pricing.reset(ncols);
         let weight_resets0 = pricing.weight_resets();
@@ -271,6 +287,10 @@ impl<'a> Revised<'a> {
         cand_buf.clear();
         let mut trip_buf = std::mem::take(&mut scratch.trip_buf);
         trip_buf.clear();
+        let mut gidx = std::mem::take(&mut scratch.gidx);
+        gidx.clear();
+        let mut gval = std::mem::take(&mut scratch.gval);
+        gval.clear();
         let basis_mat = std::mem::take(&mut scratch.basis_mat);
 
         Revised {
@@ -295,6 +315,10 @@ impl<'a> Revised<'a> {
             peak_update_len: 0,
             ftran_nnz_sum: 0,
             ftran_count: 0,
+            btran_nnz_sum: 0,
+            btran_count: 0,
+            dfs0,
+            scan0,
             weight_resets0,
             candidate_hits0,
             candidate_refreshes0,
@@ -306,6 +330,8 @@ impl<'a> Revised<'a> {
             alpha_r,
             adv,
             cand_buf,
+            gidx,
+            gval,
             trip_buf,
             basis_mat,
         }
@@ -328,6 +354,8 @@ impl<'a> Revised<'a> {
         scratch.vref = self.vref;
         scratch.cand_buf = self.cand_buf;
         scratch.trip_buf = self.trip_buf;
+        scratch.gidx = self.gidx;
+        scratch.gval = self.gval;
         scratch.basis_mat = self.basis_mat;
     }
 
@@ -605,6 +633,8 @@ impl<'a> Revised<'a> {
             }
         }
         self.fact.btran_sparse(&mut self.y);
+        self.btran_nnz_sum += self.y.nnz();
+        self.btran_count += 1;
     }
 
     /// Hypersparse BTRAN of a unit vector: `self.y = B⁻ᵀ e_r`.
@@ -612,6 +642,8 @@ impl<'a> Revised<'a> {
         self.y.clear();
         self.y.set(r, 1.0);
         self.fact.btran_sparse(&mut self.y);
+        self.btran_nnz_sum += self.y.nnz();
+        self.btran_count += 1;
     }
 
     #[inline]
@@ -664,13 +696,11 @@ impl<'a> Revised<'a> {
     fn pivot_at(&mut self, q: usize, r: usize, theta: f64) -> Result<()> {
         debug_assert!(self.w.get(r).abs() > 1e-14);
         if theta != 0.0 {
-            for k in 0..self.w.nnz() {
-                let i = self.w.index_at(k);
-                if i == r {
-                    continue;
-                }
-                let wi = self.w.get(i);
-                if wi == 0.0 {
+            // Stream the gathered (index, value) pairs contiguously
+            // instead of chasing idx -> vals per entry.
+            self.w.gather_into(&mut self.gidx, &mut self.gval);
+            for (&i, &wi) in self.gidx.iter().zip(self.gval.iter()) {
+                if i == r || wi == 0.0 {
                     continue;
                 }
                 let v = self.xb[i] - theta * wi;
@@ -717,6 +747,8 @@ impl<'a> Revised<'a> {
         }
         self.vref.copy_from(&self.w);
         self.fact.btran_sparse(&mut self.vref);
+        self.btran_nnz_sum += self.vref.nnz();
+        self.btran_count += 1;
         for j in 0..self.ncols {
             self.adv[j] =
                 if self.in_basis[j] { 0.0 } else { self.sf.a.col_dot(j, self.vref.values()) };
@@ -822,12 +854,12 @@ impl<'a> Revised<'a> {
             // FTRAN: w = B^{-1} A_q (hypersparse).
             self.ftran_col(q);
 
-            // Ratio test over w's nonzeros only.
+            // Ratio test over w's nonzeros only, streamed through the
+            // gathered flat arrays.
+            self.w.gather_into(&mut self.gidx, &mut self.gval);
             let mut leave: Option<usize> = None;
             let mut best_ratio = f64::INFINITY;
-            for k in 0..self.w.nnz() {
-                let i = self.w.index_at(k);
-                let wi = self.w.get(i);
+            for (&i, &wi) in self.gidx.iter().zip(self.gval.iter()) {
                 if wi > self.eps {
                     let ratio = self.xb[i].max(0.0) / wi;
                     let better = if bland {
@@ -989,6 +1021,13 @@ impl<'a> Revised<'a> {
             } else {
                 0.0
             },
+            avg_btran_nnz: if self.btran_count > 0 {
+                self.btran_nnz_sum as f64 / self.btran_count as f64
+            } else {
+                0.0
+            },
+            dfs_solves: self.fact.dfs_solves() - self.dfs0,
+            scan_solves: self.fact.scan_solves() - self.scan0,
             duals,
             basis: Some(basis),
         })
@@ -1038,7 +1077,12 @@ mod tests {
     /// grid).
     fn combos() -> Vec<SimplexOptions> {
         let mut out = Vec::new();
-        for f in [Factorization::ProductFormEta, Factorization::ForrestTomlin] {
+        for f in [
+            Factorization::ProductFormEta,
+            Factorization::ForrestTomlin,
+            Factorization::Markowitz,
+            Factorization::BartelsGolub,
+        ] {
             for pr in
                 [Pricing::Dantzig, Pricing::Devex, Pricing::SteepestEdge, Pricing::Partial]
             {
@@ -1059,6 +1103,8 @@ mod tests {
         assert!(b.is_complete());
         assert_eq!(b.cols.len(), 3);
         assert!(s.avg_ftran_nnz > 0.0, "ftran nnz diagnostic should be populated");
+        assert!(s.avg_btran_nnz > 0.0, "btran nnz diagnostic should be populated");
+        assert!(s.dfs_solves + s.scan_solves > 0, "solve-mode counters should tick");
     }
 
     #[test]

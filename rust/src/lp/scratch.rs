@@ -45,6 +45,12 @@ pub struct SolverScratch {
     pub(crate) vref: SparseVector,
     pub(crate) cand_buf: Vec<usize>,
     pub(crate) trip_buf: Vec<(usize, usize, f64)>,
+    /// Gathered FTRAN-column indices for the ratio test / x_B update
+    /// (parallel to `gval`; see [`SparseVector::gather_into`]).
+    pub(crate) gidx: Vec<usize>,
+    /// Gathered FTRAN-column values, streamed contiguously by the hot
+    /// loops instead of chasing `idx -> vals` per element.
+    pub(crate) gval: Vec<f64>,
     /// Pooled CSC basis view, rebuilt in place per (re)factorization.
     pub(crate) basis_mat: SparseMatrix,
 }
@@ -125,6 +131,12 @@ mod tests {
         // Strategy mismatch likewise.
         let f = s.take_fact(Factorization::ProductFormEta, 7);
         assert_eq!(f.name(), "product_form_eta");
+        s.put_fact(Factorization::ProductFormEta, 7, f);
+        let f = s.take_fact(Factorization::Markowitz, 7);
+        assert_eq!(f.name(), "markowitz");
+        s.put_fact(Factorization::Markowitz, 7, f);
+        let f = s.take_fact(Factorization::BartelsGolub, 7);
+        assert_eq!(f.name(), "bartels_golub");
 
         let p = s.take_pricing(Pricing::Partial);
         assert_eq!(p.name(), "partial");

@@ -499,6 +499,9 @@ impl Tableau {
             candidate_hits: 0,
             candidate_refreshes: 0,
             avg_ftran_nnz: 0.0,
+            avg_btran_nnz: 0.0,
+            dfs_solves: 0,
+            scan_solves: 0,
             duals,
             basis: Some(Basis { cols: basis_cols }),
         })

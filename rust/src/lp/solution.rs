@@ -45,6 +45,16 @@ pub struct LpSolution {
     /// hypersparsity diagnostic (0.0 on the dense tableau and PDHG,
     /// which have no FTRAN).
     pub avg_ftran_nnz: f64,
+    /// Mean nonzeros in the BTRAN results of this solve (pricing rows
+    /// and dual updates; 0.0 where there is no BTRAN).
+    pub avg_btran_nnz: f64,
+    /// Triangular solves answered through the Gilbert–Peierls symbolic
+    /// DFS path during this solve (see [`crate::linalg::SolveMode`];
+    /// zero on backends that never route through `LuFactors`).
+    pub dfs_solves: usize,
+    /// Triangular solves answered through the full column scan during
+    /// this solve (the dense-RHS side of the DFS/scan crossover).
+    pub scan_solves: usize,
     /// Dual values per constraint (if requested and extractable).
     pub duals: Option<Vec<f64>>,
     /// Optimal basis, usable to warm-start the next solve of a

@@ -257,6 +257,9 @@ pub fn solve_full_scratch<S: ScenarioModel + ?Sized>(
                 candidate_hits: 0,
                 candidate_refreshes: 0,
                 avg_ftran_nnz: 0.0,
+                avg_btran_nnz: 0.0,
+                dfs_solves: 0,
+                scan_solves: 0,
                 duals: None,
                 basis: None,
             };

@@ -87,19 +87,22 @@ pub struct Summary {
 }
 
 impl Summary {
-    /// Summarize a sample. Returns a zeroed summary for an empty slice.
+    /// Summarize a sample. NaN observations (e.g. a failed timing read)
+    /// are dropped rather than poisoning the sort; `n` counts only the
+    /// finite-ordered samples kept. Returns a zeroed summary when no
+    /// samples survive.
     pub fn of(samples: &[f64]) -> Summary {
-        if samples.is_empty() {
+        let mut sorted: Vec<f64> = samples.iter().copied().filter(|x| !x.is_nan()).collect();
+        if sorted.is_empty() {
             return Summary { n: 0, mean: 0.0, stddev: 0.0, min: 0.0, median: 0.0, p95: 0.0, p99: 0.0, max: 0.0 };
         }
-        let mut sorted = samples.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaN in samples"));
+        sorted.sort_by(|a, b| a.total_cmp(b));
         let mut acc = OnlineStats::new();
-        for &x in samples {
+        for &x in &sorted {
             acc.push(x);
         }
         Summary {
-            n: samples.len(),
+            n: sorted.len(),
             mean: acc.mean(),
             stddev: acc.stddev(),
             min: sorted[0],
@@ -164,6 +167,19 @@ mod tests {
         assert_eq!(s.median, 2.0);
         let s = Summary::of(&[1.0, 2.0, 3.0, 4.0]);
         assert!((s.median - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_drops_nan_instead_of_panicking() {
+        let s = Summary::of(&[1.0, f64::NAN, 3.0]);
+        assert_eq!(s.n, 2);
+        assert!((s.median - 2.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        let s = Summary::of(&[f64::NAN, f64::NAN]);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.mean, 0.0);
+        assert_eq!(s.max, 0.0);
     }
 
     #[test]

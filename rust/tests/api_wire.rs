@@ -9,6 +9,7 @@ use dlt::api::{
 use dlt::config::json::Json;
 use dlt::dlt::concurrent::Mode;
 use dlt::error::Error;
+use dlt::lp::{Factorization, Pricing};
 use dlt::testkit::{arb_spec, props, Gen};
 
 fn arb_options(g: &mut Gen, family: Family, m: usize) -> RequestOptions {
@@ -34,6 +35,22 @@ fn arb_options(g: &mut Gen, family: Family, m: usize) -> RequestOptions {
     }
     if g.bool() {
         o.pdhg_max_blocks = Some(g.usize_in(1, 5000));
+    }
+    if g.bool() {
+        o.factorization = Some(match g.usize_in(0, 4) {
+            0 => Factorization::ProductFormEta,
+            1 => Factorization::ForrestTomlin,
+            2 => Factorization::Markowitz,
+            _ => Factorization::BartelsGolub,
+        });
+    }
+    if g.bool() {
+        o.pricing = Some(match g.usize_in(0, 4) {
+            0 => Pricing::Dantzig,
+            1 => Pricing::Devex,
+            2 => Pricing::SteepestEdge,
+            _ => Pricing::Partial,
+        });
     }
     match family {
         Family::Concurrent => {

@@ -1,11 +1,13 @@
 //! Strategy-grid properties for the pluggable simplex layers: every
-//! `(factorization, pricing)` combination — including candidate-list
-//! partial pricing — must agree with the dense tableau oracle on
-//! makespan across all four scenario families, Forrest–Tomlin must
-//! refactorize strictly less often than the product-form eta file on a
-//! long pivot sequence, the hypersparse FTRAN/BTRAN kernels must agree
-//! with the dense adapters to 1e-10 on randomized bases, and the
-//! scratch-pooled batch path must return bit-identical solutions.
+//! `(factorization, pricing)` combination — all four factorizations
+//! (eta file, Forrest–Tomlin, Markowitz, Bartels–Golub) crossed with
+//! all four pricing rules, including candidate-list partial pricing —
+//! must agree with the dense tableau oracle on makespan across all
+//! scenario families, Forrest–Tomlin must refactorize strictly less
+//! often than the product-form eta file on a long pivot sequence, the
+//! hypersparse FTRAN/BTRAN kernels must agree with the dense adapters
+//! to 1e-10 on randomized bases, and the scratch-pooled batch path
+//! must return bit-identical solutions.
 
 use dlt::dlt::concurrent::{ConcurrentOptions, Mode};
 use dlt::dlt::frontend::FeOptions;
@@ -16,9 +18,16 @@ use dlt::model::SystemSpec;
 use dlt::pipeline::{self, Backend, PipelineOptions, ScenarioModel};
 use dlt::testkit::{arb_spec, props};
 
+const ALL_FACTS: [Factorization; 4] = [
+    Factorization::ProductFormEta,
+    Factorization::ForrestTomlin,
+    Factorization::Markowitz,
+    Factorization::BartelsGolub,
+];
+
 fn combos() -> Vec<(Factorization, Pricing)> {
     let mut out = Vec::new();
-    for f in [Factorization::ProductFormEta, Factorization::ForrestTomlin] {
+    for f in ALL_FACTS {
         for p in [Pricing::Dantzig, Pricing::Devex, Pricing::SteepestEdge, Pricing::Partial] {
             out.push((f, p));
         }
@@ -192,9 +201,10 @@ fn forrest_tomlin_refactorizes_less_on_long_pivot_sequences() {
     );
 }
 
-/// Weighted and partial pricing must survive warm restarts and dual
-/// repairs inside a session sweep: the same makespans as Dantzig
-/// across a job grid, with the rule reported in every response.
+/// Weighted and partial pricing, under every factorization strategy,
+/// must survive warm restarts and dual repairs inside a session sweep:
+/// the same makespans as the defaults across a job grid, with both
+/// strategies reported in every response.
 #[test]
 fn weighted_pricing_matches_dantzig_across_warm_sweep() {
     use dlt::api::{Family, SolveRequest, Solver};
@@ -205,38 +215,53 @@ fn weighted_pricing_matches_dantzig_across_warm_sweep() {
         .job(100.0)
         .build()
         .unwrap();
-    for pricing in [Pricing::Devex, Pricing::SteepestEdge, Pricing::Partial] {
-        let mut base = Solver::new().build();
-        let mut session = Solver::new()
-            .simplex(SimplexOptions { pricing, ..SimplexOptions::default() })
-            .build();
-        let mut refreshes = 0usize;
-        let mut ftran_nnz = 0.0f64;
-        for k in 0..8 {
-            let sub = spec.with_job(100.0 + 15.0 * k as f64);
-            let want = base.solve(&SolveRequest::new(Family::Frontend, sub.clone())).unwrap();
-            let got = session.solve(&SolveRequest::new(Family::Frontend, sub)).unwrap();
-            assert_eq!(got.diagnostics.pricing, pricing);
-            assert!(
-                (got.makespan - want.makespan).abs() < 1e-7 * (1.0 + want.makespan.abs()),
-                "{} J-step {k}: {} vs {}",
-                pricing.as_str(),
-                got.makespan,
-                want.makespan
-            );
-            refreshes += got.diagnostics.candidate_refreshes;
-            ftran_nnz += got.diagnostics.avg_ftran_nnz;
-        }
-        // A zero-pivot warm hit legitimately reports 0.0, but the cold
-        // first solve pivots, so the sweep total must be positive.
-        assert!(ftran_nnz > 0.0, "hypersparsity diagnostic missing across the sweep");
-        if pricing == Pricing::Partial {
-            assert!(
-                refreshes > 0,
-                "partial pricing must report its full-pass refreshes on the wire"
-            );
-        } else {
-            assert_eq!(refreshes, 0, "{}: refresh counter is partial-only", pricing.as_str());
+    for factorization in ALL_FACTS {
+        for pricing in [Pricing::Devex, Pricing::SteepestEdge, Pricing::Partial] {
+            let mut base = Solver::new().build();
+            let mut session = Solver::new()
+                .simplex(SimplexOptions {
+                    factorization,
+                    pricing,
+                    ..SimplexOptions::default()
+                })
+                .build();
+            let mut refreshes = 0usize;
+            let mut ftran_nnz = 0.0f64;
+            for k in 0..8 {
+                let sub = spec.with_job(100.0 + 15.0 * k as f64);
+                let want =
+                    base.solve(&SolveRequest::new(Family::Frontend, sub.clone())).unwrap();
+                let got = session.solve(&SolveRequest::new(Family::Frontend, sub)).unwrap();
+                assert_eq!(got.diagnostics.pricing, pricing);
+                assert_eq!(got.diagnostics.factorization, factorization);
+                assert!(
+                    (got.makespan - want.makespan).abs() < 1e-7 * (1.0 + want.makespan.abs()),
+                    "{}/{} J-step {k}: {} vs {}",
+                    factorization.as_str(),
+                    pricing.as_str(),
+                    got.makespan,
+                    want.makespan
+                );
+                refreshes += got.diagnostics.candidate_refreshes;
+                ftran_nnz += got.diagnostics.avg_ftran_nnz;
+            }
+            // A zero-pivot warm hit legitimately reports 0.0, but the
+            // cold first solve pivots, so the sweep total must be
+            // positive.
+            assert!(ftran_nnz > 0.0, "hypersparsity diagnostic missing across the sweep");
+            if pricing == Pricing::Partial {
+                assert!(
+                    refreshes > 0,
+                    "partial pricing must report its full-pass refreshes on the wire"
+                );
+            } else {
+                assert_eq!(
+                    refreshes,
+                    0,
+                    "{}: refresh counter is partial-only",
+                    pricing.as_str()
+                );
+            }
         }
     }
 }
@@ -262,9 +287,7 @@ fn scratch_pooled_batches_are_deterministic() {
                 spec.with_job(100.0 + 12.0 * k as f64),
             );
             r.options.pricing = Some(Pricing::Partial);
-            if k % 3 == 0 {
-                r.options.factorization = Some(Factorization::ForrestTomlin);
-            }
+            r.options.factorization = Some(ALL_FACTS[k % ALL_FACTS.len()]);
             r
         })
         .collect();
@@ -293,7 +316,7 @@ fn scratch_pooled_batches_are_deterministic() {
 /// `lp/factorization.rs` cover the same against a fresh-LU oracle).
 #[test]
 fn prop_sparse_kernels_match_dense_adapters() {
-    use dlt::lp::factorization::{BasisFactorization, ForrestTomlin, ProductFormEta};
+    use dlt::lp::factorization::BasisFactorization;
     use dlt::linalg::{SparseMatrix, SparseVector};
     props("sparse ftran/btran == dense adapters", 25, |g| {
         let m = g.usize_in(2, 13);
@@ -308,12 +331,12 @@ fn prop_sparse_kernels_match_dense_adapters() {
             }
         }
         let b = SparseMatrix::from_triplets(m, m, &trips);
-        let mut pfe = ProductFormEta::new(m);
-        let mut ft = ForrestTomlin::new(m);
-        if pfe.refactorize(&b).is_err() || ft.refactorize(&b).is_err() {
+        let mut strategies: Vec<Box<dyn BasisFactorization>> =
+            ALL_FACTS.iter().map(|f| f.build(m)).collect();
+        if strategies.iter_mut().any(|s| s.refactorize(&b).is_err()) {
             return Ok(()); // numerically singular draw: skip
         }
-        for strat in [&mut pfe as &mut dyn BasisFactorization, &mut ft] {
+        for strat in strategies.iter_mut() {
             for _ in 0..4 {
                 let mut v = vec![0.0; m];
                 v[g.usize_in(0, m)] = g.f64_in(-1.0, 1.0);

@@ -1,0 +1,150 @@
+#!/usr/bin/env python3
+"""Validate bench JSON artifacts and apply the regression gates.
+
+Usage: check_bench_schema.py FILE.json [FILE.json ...]
+
+Two layers, both fatal on failure:
+
+1. Schema: every value in every document must be present and non-null
+   (a bench that emits a missing or null cell fails loudly here
+   instead of silently passing a gate that never reads the cell).
+   NaN/Infinity — which Python's json module would happily accept —
+   are rejected too.
+
+2. Gates (BENCH_hypersparse.json only): the deterministic regression
+   guards over the measured cells — the sparse warm sweep against the
+   dense baseline cell, factor storage against the dense 2m^2
+   equivalent, and the Gilbert-Peierls DFS work counter against the
+   column-sweep scan on the same solve.
+
+Exit status is non-zero on the first violation.
+"""
+
+import json
+import math
+import sys
+
+# Cells/sections a BENCH_hypersparse.json must carry, per entry.
+HYPERSPARSE_MICRO_KEYS = {
+    "strategy", "dense_is_adapter", "m",
+    "ftran_dense_ns", "ftran_sparse_ns", "btran_dense_ns", "btran_sparse_ns",
+    "storage_nnz", "dense_equivalent_entries",
+}
+HYPERSPARSE_GP_KEYS = {
+    "kernel", "m", "dfs_ns", "scan_ns", "dfs_work", "scan_work", "result_nnz",
+}
+HYPERSPARSE_CELL_KEYS = {
+    "cell", "backend", "factorization", "pricing",
+    "cold_ms", "cold_iterations", "sweep_ms", "sweep_iterations",
+    "candidate_hits", "candidate_refreshes", "avg_ftran_nnz",
+}
+HYPERSPARSE_STRATEGIES = {
+    "product_form_eta", "forrest_tomlin", "markowitz", "bartels_golub",
+}
+HYPERSPARSE_SWEEP_CELLS = {
+    "dense_tableau/full", "revised/full", "revised/partial",
+    "revised/ft/partial", "revised/bg/partial",
+}
+
+
+def fail(msg):
+    print(f"check_bench_schema: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def check_no_null(node, path):
+    """Reject None and non-finite numbers anywhere in the document."""
+    if node is None:
+        fail(f"null value at {path}")
+    if isinstance(node, float) and not math.isfinite(node):
+        fail(f"non-finite value at {path}")
+    if isinstance(node, dict):
+        for k, v in node.items():
+            check_no_null(v, f"{path}.{k}")
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            check_no_null(v, f"{path}[{i}]")
+
+
+def require_keys(entry, keys, where):
+    missing = keys - set(entry)
+    if missing:
+        fail(f"{where}: missing keys {sorted(missing)}")
+
+
+def gate_hypersparse(doc, name):
+    micro = doc.get("micro_kernels")
+    if not micro:
+        fail(f"{name}: empty micro_kernels")
+    seen = set()
+    for k in micro:
+        require_keys(k, HYPERSPARSE_MICRO_KEYS, f"{name}: micro_kernels[{k.get('strategy')}]")
+        seen.add(k["strategy"])
+        if k["storage_nnz"] * 4 >= k["dense_equivalent_entries"]:
+            fail(f"{name}: {k['strategy']}: factor storage {k['storage_nnz']} entries "
+                 f"is no longer sparse (dense pair {k['dense_equivalent_entries']})")
+    if seen != HYPERSPARSE_STRATEGIES:
+        fail(f"{name}: micro_kernels strategies {sorted(seen)} != "
+             f"{sorted(HYPERSPARSE_STRATEGIES)}")
+
+    gp = doc.get("gp_kernels")
+    if not gp:
+        fail(f"{name}: empty gp_kernels")
+    kernels = set()
+    for g in gp:
+        require_keys(g, HYPERSPARSE_GP_KEYS, f"{name}: gp_kernels[{g.get('kernel')}]")
+        kernels.add(g["kernel"])
+        # Deterministic work gate: the symbolic DFS must visit strictly
+        # fewer nodes than the full column sweep on the same solve.
+        if g["dfs_work"] >= g["scan_work"]:
+            fail(f"{name}: gp {g['kernel']}: DFS visited {g['dfs_work']} nodes, "
+                 f"no better than the {g['scan_work']}-node column sweep")
+        if g["result_nnz"] <= 0:
+            fail(f"{name}: gp {g['kernel']}: solve produced an empty result")
+    if kernels != {"ftran", "btran"}:
+        fail(f"{name}: gp_kernels covers {sorted(kernels)}, want ftran+btran")
+
+    cells = {}
+    for c in doc.get("sweep_cells", []):
+        require_keys(c, HYPERSPARSE_CELL_KEYS, f"{name}: sweep_cells[{c.get('cell')}]")
+        cells[c["cell"]] = c
+    missing = HYPERSPARSE_SWEEP_CELLS - set(cells)
+    if missing:
+        fail(f"{name}: missing sweep cells {sorted(missing)}")
+    for c in cells.values():
+        if c["sweep_iterations"] <= 0:
+            fail(f"{name}: {c['cell']}: sweep did not pivot")
+
+    dense, sparse = cells["dense_tableau/full"], cells["revised/partial"]
+    # 1.5x slack: fast-mode totals are sub-millisecond, where
+    # shared-runner jitter is a real fraction of the measurement.
+    if sparse["sweep_ms"] > dense["sweep_ms"] * 1.5:
+        fail(f"{name}: sparse warm sweep {sparse['sweep_ms']:.2f}ms slower than "
+             f"dense baseline cell {dense['sweep_ms']:.2f}ms")
+    ft, bg = cells["revised/ft/partial"], cells["revised/bg/partial"]
+    print(f"  gate ok: dense {dense['sweep_ms']:.2f}ms vs sparse+partial "
+          f"{sparse['sweep_ms']:.2f}ms; update-file race ft {ft['sweep_ms']:.2f}ms "
+          f"vs bg {bg['sweep_ms']:.2f}ms")
+
+
+def reject_nonfinite(token):
+    fail(f"non-finite literal `{token}` in document")
+
+
+def main(paths):
+    if not paths:
+        fail("no bench JSON files given")
+    for path in paths:
+        try:
+            with open(path) as fh:
+                doc = json.load(fh, parse_constant=reject_nonfinite)
+        except (OSError, ValueError) as e:
+            fail(f"{path}: {e}")
+        check_no_null(doc, path)
+        if doc.get("group") == "hypersparse":
+            gate_hypersparse(doc, path)
+        print(f"check_bench_schema: {path}: ok")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])
