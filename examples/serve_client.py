@@ -1,0 +1,90 @@
+#!/usr/bin/env python3
+"""Minimal `dlt serve` wire client — stdlib only.
+
+Boot a server:
+
+    dlt serve --port 4517
+
+then run:
+
+    python3 examples/serve_client.py --port 4517 --count 5
+
+The wire is one JSON document per line over a persistent TCP
+connection. Each request may carry a top-level "client" key: all of a
+client's requests hash to the same session shard, so its warm-start
+caches stay hot across requests (watch `diagnostics.serve.shard_hit`
+flip to true from the second request on). Responses stream back in
+completion order, each stamped with a per-connection "seq"; an
+overloaded server answers instantly with
+`{"error": {"kind": "overloaded", ...}, "retry_after_ms": ...}`.
+"""
+
+import argparse
+import json
+import socket
+import sys
+
+SPEC = {
+    "sources": [{"g": 0.2, "release": 10.0}, {"g": 0.4, "release": 50.0}],
+    "processors": [{"a": 2.0}, {"a": 3.0}, {"a": 4.0}],
+    "job": 100.0,
+}
+
+FAMILIES = ["frontend", "no_frontend", "concurrent", "multi_job"]
+
+
+def build_request(client, k):
+    req = {
+        "client": client,
+        "id": f"{client}-{k}",
+        "family": FAMILIES[k % len(FAMILIES)],
+        "spec": dict(SPEC, job=100.0 + 25.0 * k),
+        "options": {},
+    }
+    if req["family"] == "multi_job":
+        req["options"]["proc_ready"] = [0.25] * len(SPEC["processors"])
+    return req
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=4517)
+    ap.add_argument("--count", type=int, default=5, help="requests to send")
+    ap.add_argument("--client", default="example-client", help="tenant key")
+    args = ap.parse_args()
+
+    with socket.create_connection((args.host, args.port), timeout=30) as sock:
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        wire = sock.makefile("rw", encoding="utf-8", newline="\n")
+
+        # Pipeline every request, then read the streamed responses.
+        for k in range(args.count):
+            wire.write(json.dumps(build_request(args.client, k)) + "\n")
+        wire.flush()
+
+        failures = 0
+        for _ in range(args.count):
+            line = wire.readline()
+            if not line:
+                print("server closed the connection early", file=sys.stderr)
+                return 1
+            resp = json.loads(line)
+            seq = resp.get("seq")
+            if "error" in resp:
+                failures += 1
+                retry = resp.get("retry_after_ms")
+                hint = f" (retry after {retry}ms)" if retry is not None else ""
+                print(f"seq {seq}: {resp['error']['kind']}: "
+                      f"{resp['error']['message']}{hint}")
+                continue
+            serve = resp.get("diagnostics", {}).get("serve", {})
+            print(f"seq {seq}: {resp['family']:<12} makespan {resp['makespan']:.4f}  "
+                  f"shard {serve.get('shard')} "
+                  f"{'hit' if serve.get('shard_hit') else 'miss'}  "
+                  f"resident {serve.get('resident')}")
+        return 1 if failures == args.count else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

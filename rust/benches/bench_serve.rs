@@ -1,0 +1,478 @@
+//! Bench: open-loop load harness for the `dlt serve` TCP tier.
+//!
+//! Drives a live server — in-process by default, or an external one
+//! via `DLT_SERVE_ADDR=host:port` (the CI smoke job boots
+//! `dlt serve` on loopback and points this harness at it) — with a
+//! fixed-seed mixed-family workload over persistent connections:
+//!
+//! - **calibrate** — every connection blasts requests as fast as it
+//!   can; accepted throughput estimates server capacity;
+//! - **sustained** — open-loop Poisson arrivals at ~0.6x capacity,
+//!   reporting sustained req/s, p50/p99/p999 latency and the
+//!   warm-shard hit rate under client-keyed load;
+//! - **overload** — arrivals at 2x capacity; the bounded admission
+//!   queues must shed (fast-reject with `retry_after_ms`) while the
+//!   accepted requests keep a bounded p99;
+//! - **eviction probe** — 64 distinct clients against a small warm
+//!   budget, forcing LRU session evictions visible in the per-response
+//!   `diagnostics.serve` block.
+//!
+//! Open loop means senders never wait for responses: arrival times
+//! are drawn up front from a seeded PCG stream, so offered load is
+//! independent of server behavior (the difference between measuring
+//! latency and measuring the client's politeness). With
+//! `DLT_BENCH_JSON_DIR=dir` the results land in `dir/BENCH_serve.json`
+//! (gated by `scripts/check_bench_schema.py`); `DLT_BENCH_FAST=1`
+//! shrinks the request counts for CI; `DLT_BENCH_ASSERT=1` turns the
+//! in-harness regression gates on.
+
+use dlt::api::{Family, SolveRequest};
+use dlt::config::json::Json;
+use dlt::dlt::concurrent::Mode;
+use dlt::lp::{Factorization, Pricing};
+use dlt::model::SystemSpec;
+use dlt::serve::{ServeOptions, Server};
+use dlt::util::{Pcg32, Rng};
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::thread;
+use std::time::{Duration, Instant};
+
+const PROCS: usize = 4;
+
+fn spec(job: f64) -> SystemSpec {
+    SystemSpec::builder()
+        .source(0.2, 10.0)
+        .source(0.4, 50.0)
+        .processors(&[2.0, 2.5, 3.0, 3.5])
+        .job(job)
+        .build()
+        .expect("bench spec")
+}
+
+/// One wire line: a client-keyed request cycling through all four
+/// families with factorization/pricing overrides on a rotating subset.
+fn request_line(client: &str, k: usize) -> String {
+    let family = match k % 4 {
+        0 => Family::Frontend,
+        1 => Family::NoFrontend,
+        2 => Family::Concurrent,
+        _ => Family::MultiJob,
+    };
+    let mut req = SolveRequest::new(family, spec(80.0 + 20.0 * (k % 5) as f64));
+    req.id = Some(format!("{client}-{k}"));
+    match k % 5 {
+        1 => req.options.factorization = Some(Factorization::ForrestTomlin),
+        2 => req.options.pricing = Some(Pricing::Partial),
+        3 => {
+            req.options.factorization = Some(Factorization::BartelsGolub);
+            req.options.pricing = Some(Pricing::Devex);
+        }
+        _ => {}
+    }
+    if family == Family::Concurrent {
+        req.options.mode = Some(if k % 8 < 4 { Mode::Proportional } else { Mode::Staggered });
+    }
+    if family == Family::MultiJob {
+        req.options.proc_ready = Some(vec![0.25; PROCS]);
+    }
+    let mut doc = req.to_json();
+    if let Json::Object(kv) = &mut doc {
+        kv.insert(0, ("client".to_string(), Json::Str(client.to_string())));
+    }
+    doc.to_string_compact()
+}
+
+/// Per-response `diagnostics.serve` block, when present.
+struct ServeDiag {
+    shard: usize,
+    shard_hit: bool,
+    evictions: u64,
+    resident: usize,
+}
+
+enum Kind {
+    Ok,
+    Shed,
+    Error,
+}
+
+struct Event {
+    seq: usize,
+    t: Instant,
+    kind: Kind,
+    serve: Option<ServeDiag>,
+}
+
+fn parse_event(line: &str, t: Instant) -> Option<Event> {
+    let doc = Json::parse(line).ok()?;
+    let seq = doc.get("seq")?.as_usize().ok()?;
+    if let Some(err) = doc.get("error") {
+        let overloaded = err.get("kind").and_then(|k| k.as_str().ok()) == Some("overloaded");
+        let kind = if overloaded { Kind::Shed } else { Kind::Error };
+        return Some(Event { seq, t, kind, serve: None });
+    }
+    let serve = doc.get("diagnostics").and_then(|d| d.get("serve")).map(|s| ServeDiag {
+        shard: s.get("shard").and_then(|x| x.as_usize().ok()).unwrap_or(0),
+        shard_hit: s.get("shard_hit").and_then(|x| x.as_bool().ok()).unwrap_or(false),
+        evictions: s.get("evictions").and_then(|x| x.as_f64().ok()).unwrap_or(0.0) as u64,
+        resident: s.get("resident").and_then(|x| x.as_usize().ok()).unwrap_or(0),
+    });
+    Some(Event { seq, t, kind: Kind::Ok, serve })
+}
+
+/// Aggregated outcome of one load phase.
+struct PhaseOut {
+    offered: usize,
+    accepted: usize,
+    shed: usize,
+    errors: usize,
+    /// Responses never received before the read timeout (should be 0:
+    /// every admitted *or shed* request gets exactly one line back).
+    lost: usize,
+    wall_s: f64,
+    /// Sorted solve latencies (accepted requests only), milliseconds.
+    lat_ms: Vec<f64>,
+    shard_hits: usize,
+    shard_total: usize,
+    /// Per-shard (min, max) cumulative eviction counters observed.
+    evictions: HashMap<usize, (u64, u64)>,
+    max_resident: usize,
+}
+
+impl PhaseOut {
+    fn shed_rate(&self) -> f64 {
+        self.shed as f64 / (self.offered.max(1)) as f64
+    }
+
+    fn hit_rate(&self) -> f64 {
+        self.shard_hits as f64 / (self.shard_total.max(1)) as f64
+    }
+
+    fn req_s(&self) -> f64 {
+        self.accepted as f64 / self.wall_s.max(1e-9)
+    }
+
+    fn pctl(&self, q: f64) -> f64 {
+        if self.lat_ms.is_empty() {
+            return 0.0;
+        }
+        dlt::util::stats::percentile_sorted(&self.lat_ms, q)
+    }
+
+    /// Evictions that happened *during* this phase: per-shard growth
+    /// of the cumulative counter between the first and last response
+    /// observed from that shard.
+    fn evictions_seen(&self) -> u64 {
+        self.evictions.values().map(|&(lo, hi)| hi - lo).sum()
+    }
+}
+
+/// Run one open-loop phase: `conns` persistent connections, each
+/// sending `per_conn` requests with exponential inter-arrivals at
+/// `rate_per_conn` req/s (`f64::INFINITY` = blast). Client ids cycle
+/// through `clients`, offset per connection.
+fn run_phase(
+    addr: &str,
+    conns: usize,
+    per_conn: usize,
+    rate_per_conn: f64,
+    clients: &[String],
+    seed: u64,
+    read_timeout: Duration,
+) -> PhaseOut {
+    let t0 = Instant::now();
+    let mut pairs = Vec::new();
+    for c in 0..conns {
+        let stream = TcpStream::connect(addr).expect("connect to serve tier");
+        stream.set_nodelay(true).expect("nodelay");
+        let reader_stream = stream.try_clone().expect("clone stream");
+        reader_stream.set_read_timeout(Some(read_timeout)).expect("read timeout");
+
+        // Pre-draw arrival offsets and pre-serialize lines so neither
+        // costs anything inside the send loop.
+        let mut rng = Pcg32::with_stream(seed, c as u64);
+        let mut lines = Vec::with_capacity(per_conn);
+        let mut arrivals = Vec::with_capacity(per_conn);
+        let mut at = 0.0f64;
+        for i in 0..per_conn {
+            let client = &clients[(i + c) % clients.len()];
+            lines.push(request_line(client, i + c));
+            if rate_per_conn.is_finite() {
+                at += -(1.0 - rng.f64()).ln() / rate_per_conn;
+            }
+            arrivals.push(at);
+        }
+
+        let sender = thread::spawn(move || {
+            let mut stream = stream;
+            let start = Instant::now();
+            let mut sent = Vec::with_capacity(lines.len());
+            for (line, &at) in lines.iter().zip(&arrivals) {
+                let target = start + Duration::from_secs_f64(at);
+                let now = Instant::now();
+                if target > now {
+                    thread::sleep(target - now);
+                }
+                sent.push(Instant::now());
+                stream.write_all(line.as_bytes()).expect("send request");
+                stream.write_all(b"\n").expect("send newline");
+            }
+            sent
+        });
+        let reader = thread::spawn(move || {
+            let mut r = BufReader::new(reader_stream);
+            let mut events = Vec::with_capacity(per_conn);
+            let mut line = String::new();
+            while events.len() < per_conn {
+                line.clear();
+                match r.read_line(&mut line) {
+                    Ok(0) | Err(_) => break, // EOF or timed out
+                    Ok(_) => {
+                        if let Some(ev) = parse_event(line.trim_end(), Instant::now()) {
+                            events.push(ev);
+                        }
+                    }
+                }
+            }
+            events
+        });
+        pairs.push((sender, reader));
+    }
+
+    let mut out = PhaseOut {
+        offered: conns * per_conn,
+        accepted: 0,
+        shed: 0,
+        errors: 0,
+        lost: 0,
+        wall_s: 0.0,
+        lat_ms: Vec::new(),
+        shard_hits: 0,
+        shard_total: 0,
+        evictions: HashMap::new(),
+        max_resident: 0,
+    };
+    for (sender, reader) in pairs {
+        let sent = sender.join().expect("sender thread");
+        let events = reader.join().expect("reader thread");
+        out.lost += per_conn - events.len();
+        for ev in events {
+            match ev.kind {
+                Kind::Shed => out.shed += 1,
+                Kind::Error => out.errors += 1,
+                Kind::Ok => {
+                    out.accepted += 1;
+                    if ev.seq < sent.len() {
+                        let dt = ev.t.duration_since(sent[ev.seq]);
+                        out.lat_ms.push(dt.as_secs_f64() * 1e3);
+                    }
+                    if let Some(s) = ev.serve {
+                        out.shard_total += 1;
+                        if s.shard_hit {
+                            out.shard_hits += 1;
+                        }
+                        let span = out.evictions.entry(s.shard).or_insert((s.evictions, 0));
+                        span.0 = span.0.min(s.evictions);
+                        span.1 = span.1.max(s.evictions);
+                        out.max_resident = out.max_resident.max(s.resident);
+                    }
+                }
+            }
+        }
+    }
+    out.wall_s = t0.elapsed().as_secs_f64();
+    out.lat_ms.sort_by(|a, b| a.partial_cmp(b).expect("finite latency"));
+    out
+}
+
+fn phase_json(name: &str, p: &PhaseOut, extra: Vec<(String, Json)>) -> (String, Json) {
+    let mut kv = vec![
+        ("offered".to_string(), Json::Num(p.offered as f64)),
+        ("accepted".to_string(), Json::Num(p.accepted as f64)),
+        ("shed".to_string(), Json::Num(p.shed as f64)),
+        ("errors".to_string(), Json::Num(p.errors as f64)),
+        ("lost".to_string(), Json::Num(p.lost as f64)),
+        ("wall_s".to_string(), Json::Num(p.wall_s)),
+        ("req_s".to_string(), Json::Num(p.req_s())),
+        ("shed_rate".to_string(), Json::Num(p.shed_rate())),
+        ("p50_ms".to_string(), Json::Num(p.pctl(0.50))),
+        ("p99_ms".to_string(), Json::Num(p.pctl(0.99))),
+        ("p999_ms".to_string(), Json::Num(p.pctl(0.999))),
+        ("warm_shard_hit_rate".to_string(), Json::Num(p.hit_rate())),
+        ("evictions_seen".to_string(), Json::Num(p.evictions_seen() as f64)),
+        ("max_resident".to_string(), Json::Num(p.max_resident as f64)),
+    ];
+    kv.extend(extra);
+    (name.to_string(), Json::Object(kv))
+}
+
+fn print_phase(name: &str, p: &PhaseOut) {
+    println!(
+        "{name:<12} offered {:>5}  accepted {:>5}  shed {:>4} ({:>5.1}%)  \
+         {:>8.0} req/s  p50 {:>7.2}ms  p99 {:>7.2}ms  p999 {:>7.2}ms  \
+         hit {:>5.1}%  evicted {:>3}  lost {}",
+        p.offered,
+        p.accepted,
+        p.shed,
+        p.shed_rate() * 100.0,
+        p.req_s(),
+        p.pctl(0.50),
+        p.pctl(0.99),
+        p.pctl(0.999),
+        p.hit_rate() * 100.0,
+        p.evictions_seen(),
+        p.lost
+    );
+}
+
+fn main() {
+    let fast = std::env::var("DLT_BENCH_FAST").is_ok();
+    let assert_gates = std::env::var("DLT_BENCH_ASSERT").is_ok();
+    let (conns, cal_n, sus_n, over_n) = if fast { (2, 40, 120, 400) } else { (4, 100, 400, 600) };
+    let read_timeout = Duration::from_secs(if fast { 20 } else { 60 });
+    let seed = 0x5EEDu64;
+
+    // External server via DLT_SERVE_ADDR (the CI smoke job), or an
+    // in-process one with the same small warm budget the CI job uses
+    // (48 KiB over 8 shards) so the eviction probe bites either way.
+    let external = std::env::var("DLT_SERVE_ADDR").ok();
+    let (addr, server) = match &external {
+        Some(a) => (a.clone(), None),
+        None => {
+            let opts = ServeOptions {
+                addr: "127.0.0.1:0".to_string(),
+                workers: 2,
+                shards: 8,
+                queue_depth: 32,
+                warm_budget_bytes: 48 * 1024,
+                ..ServeOptions::default()
+            };
+            let srv = Server::start(opts).expect("start in-process server");
+            (srv.local_addr().to_string(), Some(srv))
+        }
+    };
+    println!(
+        "== bench group: serve (open-loop load vs {} at {addr}) ==",
+        if external.is_some() { "external server" } else { "in-process server" }
+    );
+
+    // Small keyed tenant set: spreads over the shards but stays well
+    // inside the warm budget, so sustained load measures *hits*.
+    let tenants: Vec<String> = (0..8).map(|i| format!("tenant-{i}")).collect();
+    // One probe client per eviction slot: 64 sessions cannot all fit.
+    let probes: Vec<String> = (0..64).map(|i| format!("probe-{i}")).collect();
+
+    let calibrate = run_phase(&addr, conns, cal_n, f64::INFINITY, &tenants, seed, read_timeout);
+    print_phase("calibrate", &calibrate);
+    let capacity = calibrate.req_s().max(1.0);
+
+    let sus_rate = 0.6 * capacity / conns as f64;
+    let sustained = run_phase(&addr, conns, sus_n, sus_rate, &tenants, seed + 1, read_timeout);
+    print_phase("sustained", &sustained);
+
+    let over_rate = 2.0 * capacity / conns as f64;
+    let overload = run_phase(&addr, conns, over_n, over_rate, &tenants, seed + 2, read_timeout);
+    print_phase("overload", &overload);
+
+    // Two passes over the probe clients: the first pass floods the
+    // budget, the second demonstrates that evicted clients come back
+    // cold while the hottest survivors stay warm.
+    let probe_n = 2 * probes.len();
+    let probe = run_phase(&addr, 1, probe_n, f64::INFINITY, &probes, seed + 3, read_timeout);
+    print_phase("eviction", &probe);
+
+    let note = format!(
+        "capacity ~{capacity:.0} req/s; sustained at 0.6x: {:.0} req/s, p99 {:.2}ms, \
+         warm-shard hit rate {:.0}%; at 2.0x: shed {:.0}% with accepted p99 {:.2}ms; \
+         64-client probe evicted {} warm sessions",
+        sustained.req_s(),
+        sustained.pctl(0.99),
+        sustained.hit_rate() * 100.0,
+        overload.shed_rate() * 100.0,
+        overload.pctl(0.99),
+        probe.evictions_seen()
+    );
+    println!("   note: {note}");
+
+    if let Some(srv) = server {
+        let stats = srv.shutdown();
+        println!(
+            "   server counters: {} conns, {} requests, {} responses, {} shed, \
+             {} malformed, {} evictions, {}/{} shard hits/misses",
+            stats.connections,
+            stats.requests,
+            stats.responses,
+            stats.shed,
+            stats.malformed,
+            stats.evictions,
+            stats.shard_hits,
+            stats.shard_misses
+        );
+    }
+
+    // --- JSON artifact ---
+    let mode = if external.is_some() { "external" } else { "in_process" };
+    let config = Json::Object(vec![
+        ("mode".to_string(), Json::Str(mode.to_string())),
+        ("addr".to_string(), Json::Str(addr.clone())),
+        ("conns".to_string(), Json::Num(conns as f64)),
+        ("tenants".to_string(), Json::Num(tenants.len() as f64)),
+        ("probe_clients".to_string(), Json::Num(probes.len() as f64)),
+        ("seed".to_string(), Json::Num(seed as f64)),
+        ("capacity_rps".to_string(), Json::Num(capacity)),
+    ]);
+    let doc = Json::Object(vec![
+        ("group".to_string(), Json::Str("serve".to_string())),
+        ("config".to_string(), config),
+        phase_json("calibrate", &calibrate, vec![]),
+        phase_json(
+            "sustained",
+            &sustained,
+            vec![("target_rps".to_string(), Json::Num(sus_rate * conns as f64))],
+        ),
+        phase_json(
+            "overload",
+            &overload,
+            vec![
+                ("target_rps".to_string(), Json::Num(over_rate * conns as f64)),
+                ("accepted_p99_ms".to_string(), Json::Num(overload.pctl(0.99))),
+            ],
+        ),
+        phase_json("eviction_probe", &probe, vec![]),
+        ("notes".to_string(), Json::Array(vec![Json::Str(note)])),
+    ]);
+    if let Ok(dir) = std::env::var("DLT_BENCH_JSON_DIR") {
+        std::fs::create_dir_all(&dir).expect("create bench json dir");
+        let path = std::path::Path::new(&dir).join("BENCH_serve.json");
+        std::fs::write(&path, doc.to_string_pretty()).expect("write BENCH_serve.json");
+        println!("   wrote {}", path.display());
+    }
+
+    // --- regression gates (CI) ---
+    if assert_gates {
+        assert!(sustained.accepted > 0, "sustained phase solved nothing");
+        assert!(
+            sustained.pctl(0.50) > 0.0 && sustained.pctl(0.50) <= sustained.pctl(0.99),
+            "latency percentiles are not ordered"
+        );
+        assert!(
+            sustained.hit_rate() > 0.0,
+            "client-keyed load never hit a warm shard (hit rate 0)"
+        );
+        assert!(sustained.shed_rate() < 1.0, "sustained load was entirely shed");
+        assert!(
+            overload.shed > 0,
+            "2x overload produced no shed responses — admission control is not bounding queues"
+        );
+        assert!(overload.accepted > 0, "2x overload starved every request");
+        assert!(probe.evictions_seen() > 0, "64-client probe forced no LRU evictions");
+        assert_eq!(
+            sustained.lost + overload.lost + probe.lost,
+            0,
+            "some requests never received a response line"
+        );
+        println!("   regression gates passed");
+    }
+}

@@ -61,5 +61,6 @@ pub use crate::lp::{Factorization, Pricing};
 pub use crate::pipeline::Backend;
 pub use session::{solve_one, Session, Solver};
 pub use wire::{
-    ApiError, Diagnostics, Family, RequestOptions, SolveRequest, SolveResponse, FAMILIES,
+    ApiError, Diagnostics, Family, RequestOptions, ServeDiagnostics, SolveRequest, SolveResponse,
+    FAMILIES,
 };

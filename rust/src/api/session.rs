@@ -72,7 +72,12 @@ impl Solver {
         self
     }
 
-    /// Set batch worker threads (`0` = one per core).
+    /// Set batch worker threads.
+    ///
+    /// `0` means "one per core": [`Solver::build`] resolves it to
+    /// [`std::thread::available_parallelism`] **once**, and the built
+    /// [`Session`] keeps that count for every
+    /// [`Session::solve_batch`] call (it is not re-read per batch).
     pub fn threads(mut self, t: usize) -> Solver {
         self.threads = t;
         self
@@ -96,10 +101,18 @@ impl Solver {
         self
     }
 
-    /// Build a session owning fresh warm state.
+    /// Build a session owning fresh warm state. The `threads == 0`
+    /// ("one per core") default is resolved here, once, instead of on
+    /// every `solve_batch` call.
     pub fn build(self) -> Session {
+        let batch_threads = if self.threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            self.threads
+        };
         Session {
             config: self,
+            batch_threads,
             cache: WarmCache::new(),
             seeds: HashMap::new(),
             scratch: SolverScratch::new(),
@@ -114,6 +127,9 @@ impl Solver {
 #[derive(Debug)]
 pub struct Session {
     config: Solver,
+    /// Worker count for `solve_batch`, resolved from
+    /// `Solver::threads` at build time (`0` → core count, read once).
+    batch_threads: usize,
     cache: WarmCache,
     /// Last reduced LP + optimal basis per family, for cross-shape
     /// projection when the cache misses a new LP shape.
@@ -135,6 +151,25 @@ impl Session {
     /// `(warm_attempts, cold_solves)` from the underlying cache.
     pub fn cache_stats(&self) -> (usize, usize) {
         (self.cache.warm_attempts, self.cache.cold_solves)
+    }
+
+    /// Worker threads [`Session::solve_batch`] will use — the
+    /// build-time resolution of [`Solver::threads`].
+    pub fn batch_threads(&self) -> usize {
+        self.batch_threads
+    }
+
+    /// Approximate resident bytes of this session's warm state (cached
+    /// bases plus cross-shape projection seeds). This is the currency
+    /// the serving tier's LRU eviction budgets against; absolute
+    /// accuracy matters less than monotonicity in cache growth.
+    pub fn warm_bytes(&self) -> usize {
+        let seed_bytes: usize = self
+            .seeds
+            .values()
+            .map(|(lp, b)| (lp.num_vars() + lp.num_constraints() + b.cols.len()) * 16 + 128)
+            .sum();
+        self.cache.approx_bytes() + seed_bytes
     }
 
     /// Solve one request. Warm state is consulted and updated for the
@@ -279,6 +314,7 @@ impl Session {
                 scan_solves: solved.solution.scan_solves,
                 presolve: solved.stats,
                 pdhg: solved.pdhg,
+                serve: None,
                 solve_ns,
             },
         })
@@ -289,19 +325,30 @@ impl Session {
     /// ([`parallel_map_steal`]), each worker owning a fresh `Session`
     /// built from this session's configuration, so neighbouring
     /// requests warm-start from each other. Responses (or per-request
-    /// errors) come back in input order.
+    /// errors) come back in input order; a panicking worker costs only
+    /// its current item (`worker_panicked`), never the whole batch.
     pub fn solve_batch(
         &self,
         reqs: &[SolveRequest],
     ) -> Vec<std::result::Result<SolveResponse, ApiError>> {
-        let cfg = self.config.clone();
-        let threads = cfg.threads;
+        let mut cfg = self.config.clone();
+        // Workers never re-batch, so pin them to one thread instead of
+        // letting each rebuilt worker session re-resolve the core
+        // count.
+        cfg.threads = 1;
         parallel_map_steal(
             reqs,
-            threads,
+            self.batch_threads,
             || cfg.clone().build(),
             |session: &mut Session, req: &SolveRequest| session.solve(req),
         )
+        .into_iter()
+        .map(|slot| {
+            slot.unwrap_or_else(|panic| {
+                Err(ApiError::from(crate::error::Error::WorkerPanicked(panic.message)))
+            })
+        })
+        .collect()
     }
 }
 
@@ -441,6 +488,25 @@ mod tests {
                 default.makespan
             );
         }
+    }
+
+    #[test]
+    fn threads_zero_resolves_once_at_build() {
+        let auto = Solver::new().threads(0).build();
+        assert!(auto.batch_threads() >= 1, "0 must resolve to a real core count");
+        let fixed = Solver::new().threads(3).build();
+        assert_eq!(fixed.batch_threads(), 3);
+    }
+
+    #[test]
+    fn warm_bytes_grows_with_cache() {
+        let mut session = Solver::new().build();
+        let before = session.warm_bytes();
+        session.solve(&SolveRequest::new(Family::Frontend, spec())).unwrap();
+        assert!(
+            session.warm_bytes() > before,
+            "a warm-cached solve must be visible to the eviction accounting"
+        );
     }
 
     #[test]

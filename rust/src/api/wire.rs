@@ -363,8 +363,26 @@ pub struct Diagnostics {
     pub presolve: PresolveStats,
     /// PDHG convergence details (`backend == pdhg` only).
     pub pdhg: Option<PdhgDiagnostics>,
+    /// Serving-tier routing details (`dlt serve` responses only).
+    pub serve: Option<ServeDiagnostics>,
     /// Wall-clock nanoseconds the solve took inside the session.
     pub solve_ns: u64,
+}
+
+/// Shard-router diagnostics the serving tier attaches to responses it
+/// produced (absent on direct `Session` solves).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ServeDiagnostics {
+    /// Session shard the client id hashed to.
+    pub shard: usize,
+    /// Whether the client's warm session was already resident on the
+    /// shard (false on first contact and after an LRU eviction).
+    pub shard_hit: bool,
+    /// Warm sessions this shard has LRU-evicted so far to stay under
+    /// its byte budget (monotone per-shard counter).
+    pub evictions: u64,
+    /// Warm sessions resident on the shard after this solve.
+    pub resident: usize,
 }
 
 /// One solve response: the optimum, the full timed schedule, and
@@ -475,6 +493,17 @@ impl SolveResponse {
                 ]),
             ));
         }
+        if let Some(s) = &d.serve {
+            diag.push((
+                "serve".into(),
+                Json::Object(vec![
+                    ("shard".into(), Json::Num(s.shard as f64)),
+                    ("shard_hit".into(), Json::Bool(s.shard_hit)),
+                    ("evictions".into(), Json::Num(s.evictions as f64)),
+                    ("resident".into(), Json::Num(s.resident as f64)),
+                ]),
+            ));
+        }
         diag.push(("solve_ns".into(), Json::Num(d.solve_ns as f64)));
 
         let mut kv: Vec<(String, Json)> = Vec::new();
@@ -516,6 +545,15 @@ impl SolveResponse {
             }),
             None => None,
         };
+        let serve = match d.get("serve") {
+            Some(s) => Some(ServeDiagnostics {
+                shard: s.req("shard")?.as_usize()?,
+                shard_hit: s.req("shard_hit")?.as_bool()?,
+                evictions: s.req("evictions")?.as_f64()? as u64,
+                resident: s.req("resident")?.as_usize()?,
+            }),
+            None => None,
+        };
         let fact_s = d.req("factorization")?.as_str()?;
         let pricing_s = d.req("pricing")?.as_str()?;
         let diagnostics = Diagnostics {
@@ -544,6 +582,7 @@ impl SolveResponse {
                 redundant_rows_dropped: pres.req("redundant_rows_dropped")?.as_usize()?,
             },
             pdhg,
+            serve,
             solve_ns: d.req("solve_ns")?.as_f64()? as u64,
         };
         let backend_s = v.req("backend")?.as_str()?;
@@ -599,6 +638,8 @@ impl From<Error> for ApiError {
             Error::Artifact(_) => "artifact",
             Error::Runtime(_) => "runtime",
             Error::Cluster(_) => "cluster",
+            Error::Overloaded { .. } => "overloaded",
+            Error::WorkerPanicked(_) => "worker_panicked",
             Error::Io { .. } => "io",
         };
         ApiError { kind: kind.to_string(), message: e.to_string() }
@@ -619,6 +660,14 @@ impl ApiError {
             "artifact" => Error::Artifact(self.message),
             "runtime" => Error::Runtime(self.message),
             "cluster" => Error::Cluster(self.message),
+            "worker_panicked" => Error::WorkerPanicked(self.message),
+            "overloaded" => {
+                // Recover the retry hint from the canonical Display
+                // text ("server overloaded: retry after {ms}ms").
+                let digits: String =
+                    self.message.chars().filter(|c| c.is_ascii_digit()).collect();
+                Error::Overloaded { retry_after_ms: digits.parse().unwrap_or(0) }
+            }
             _ => Error::Numerical(self.message),
         }
     }

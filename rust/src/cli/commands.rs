@@ -537,3 +537,74 @@ pub fn artifacts(a: &Args) -> Result<()> {
     }
     Ok(())
 }
+
+/// `dlt serve`: boot the zero-dependency TCP serving tier and block
+/// until shutdown. `--max-seconds N` runs for a bounded window (used
+/// by CI smoke tests), drains gracefully and prints final counters;
+/// without it the server runs until the process is killed.
+pub fn serve(a: &Args) -> Result<()> {
+    use crate::serve::{ServeOptions, Server};
+
+    let backend = match a.get("backend") {
+        None => Backend::default(),
+        Some(s) => Backend::parse(s).ok_or_else(|| {
+            Error::Usage(format!(
+                "--backend must be revised_simplex|dense_tableau|pdhg, got `{s}`"
+            ))
+        })?,
+    };
+
+    let mut opts = ServeOptions::default();
+    let host = a.get_or("host", "127.0.0.1");
+    let port = a.get_usize("port")?.unwrap_or(4517);
+    opts.addr = format!("{host}:{port}");
+    if let Some(w) = a.get_usize("workers")? {
+        opts.workers = w;
+    }
+    if let Some(s) = a.get_usize("shards")? {
+        opts.shards = s;
+    }
+    if let Some(q) = a.get_usize("queue-depth")? {
+        opts.queue_depth = q;
+    }
+    if let Some(kb) = a.get_usize("warm-budget-kb")? {
+        opts.warm_budget_bytes = kb.saturating_mul(1024);
+    }
+    if let Some(ms) = a.get_usize("retry-after-ms")? {
+        opts.retry_after_ms = ms as u64;
+    }
+    opts.solver = Solver::new().backend(backend).simplex(simplex_of(a)?);
+
+    let server = Server::start(opts)?;
+    eprintln!(
+        "dlt serve listening on {} ({} workers, {} shards)",
+        server.local_addr(),
+        server.workers(),
+        server.shards(),
+    );
+
+    match a.get_usize("max-seconds")? {
+        Some(secs) if secs > 0 => {
+            std::thread::sleep(std::time::Duration::from_secs(secs as u64));
+            let stats = server.shutdown();
+            eprintln!(
+                "drained: {} conns, {} requests, {} responses, {} shed, {} malformed, \
+                 {} evictions, {}/{} shard hits/misses, {} resident",
+                stats.connections,
+                stats.requests,
+                stats.responses,
+                stats.shed,
+                stats.malformed,
+                stats.evictions,
+                stats.shard_hits,
+                stats.shard_misses,
+                stats.resident_sessions,
+            );
+            Ok(())
+        }
+        _ => {
+            server.join();
+            Ok(())
+        }
+    }
+}

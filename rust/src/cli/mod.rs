@@ -18,6 +18,10 @@
 //! dlt speedup   --spec spec.json --sources 1,2,3
 //! dlt experiments [--exp fig12] [--csv-dir out/]
 //! dlt artifacts
+//! dlt serve     [--host 127.0.0.1] [--port 4517] [--workers W] [--shards S]
+//!               [--queue-depth Q] [--warm-budget-kb KB] [--retry-after-ms MS]
+//!               [--backend NAME] [--factorization NAME] [--pricing NAME]
+//!               [--max-seconds N]
 //! ```
 
 pub mod args;
@@ -38,6 +42,7 @@ pub fn run(argv: &[String]) -> Result<()> {
         "speedup" => commands::speedup_cmd(&parsed),
         "experiments" => commands::experiments(&parsed),
         "artifacts" => commands::artifacts(&parsed),
+        "serve" => commands::serve(&parsed),
         "help" | "" => {
             print!("{}", HELP);
             Ok(())
@@ -64,6 +69,8 @@ SUBCOMMANDS
   speedup      §5 speedup analysis
   experiments  regenerate the paper's figures (tables / CSV)
   artifacts    inspect the AOT artifact manifest
+  serve        TCP serving tier: newline-delimited request/response
+               JSON over persistent connections, warm per-client shards
   help         this text
 
 COMMON FLAGS
@@ -100,6 +107,21 @@ SWEEP FLAGS
   --cold             disable basis warm starts (baseline measurement)
   --steal            work-stealing scheduler (best for ragged grids,
                      e.g. any grid with a procs axis)
+
+SERVE FLAGS
+  --host H           bind address (default 127.0.0.1)
+  --port P           bind port (default 4517)
+  --workers W        accept/solve threads (default: one per core)
+  --shards S         session shards (default: 2 per worker)
+  --queue-depth Q    per-shard admission queue depth before requests
+                     are shed with an `overloaded` error (default 64)
+  --warm-budget-kb K total warm-session byte budget, split across
+                     shards, LRU-evicted when exceeded (default 65536)
+  --retry-after-ms M retry hint attached to shed responses (default 50)
+  --max-seconds N    serve for N seconds, drain gracefully, print
+                     counters and exit (0 / absent: run forever)
+  (--backend / --factorization / --pricing set the session defaults;
+   per-request \"options\" override them)
 ";
 
 #[cfg(test)]
@@ -208,5 +230,12 @@ mod tests {
         assert!(run(&argv("batch --requests /tmp/does_not_exist_dlt.json")).is_err());
         assert!(run(&argv(&format!("batch --requests {path} --backend cplex"))).is_err());
         std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn serve_boots_and_drains_on_max_seconds() {
+        // Port 0 binds an ephemeral port, so the test never collides.
+        run(&argv("serve --port 0 --workers 1 --shards 2 --max-seconds 1")).unwrap();
+        assert!(run(&argv("serve --port 0 --backend cplex")).is_err());
     }
 }

@@ -45,6 +45,16 @@ pub enum Error {
     /// Cluster runtime failure (actor panicked, channel closed, ...).
     Cluster(String),
 
+    /// The serving tier shed the request at admission (queue full).
+    Overloaded {
+        /// Suggested client back-off before retrying, in milliseconds.
+        retry_after_ms: u64,
+    },
+
+    /// A batch/sweep worker panicked while solving this item; the
+    /// other items in the batch are unaffected.
+    WorkerPanicked(String),
+
     /// I/O errors with path context.
     Io {
         /// Path the operation failed on.
@@ -70,6 +80,10 @@ impl fmt::Display for Error {
             Error::Artifact(s) => write!(f, "artifact error: {s}"),
             Error::Runtime(s) => write!(f, "runtime error: {s}"),
             Error::Cluster(s) => write!(f, "cluster error: {s}"),
+            Error::Overloaded { retry_after_ms } => {
+                write!(f, "server overloaded: retry after {retry_after_ms}ms")
+            }
+            Error::WorkerPanicked(s) => write!(f, "worker panicked: {s}"),
             Error::Io { path, source } => write!(f, "io error on {path}: {source}"),
         }
     }
@@ -110,6 +124,14 @@ mod tests {
         );
         let io = Error::io("f.json", std::io::Error::new(std::io::ErrorKind::NotFound, "gone"));
         assert!(io.to_string().starts_with("io error on f.json:"));
+        assert_eq!(
+            Error::Overloaded { retry_after_ms: 50 }.to_string(),
+            "server overloaded: retry after 50ms"
+        );
+        assert_eq!(
+            Error::WorkerPanicked("boom".into()).to_string(),
+            "worker panicked: boom"
+        );
     }
 
     #[test]

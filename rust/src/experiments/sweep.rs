@@ -35,11 +35,17 @@
 //! grid point — steady-state sweep iterations are allocation-free in
 //! the simplex core.
 //!
-//! Used by the `dlt sweep` CLI subcommand and the solver benches.
+//! Panics are contained per item: a worker that panics on one
+//! scenario surfaces [`WorkerPanic`] in that item's slot (rebuilding
+//! its warm state so later items don't inherit the damage) instead of
+//! poisoning the whole sweep.
+//!
+//! Used by the `dlt sweep` CLI subcommand, [`crate::api::Session::solve_batch`],
+//! and the solver benches.
 
 use crate::api::{Family, Session, Solver, SolveRequest};
 use crate::dlt::schedule::TimingModel;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::lp::{SimplexOptions, WarmCache};
 use crate::model::SystemSpec;
 use std::collections::VecDeque;
@@ -65,6 +71,48 @@ pub struct SweepPoint {
     pub makespan: f64,
     /// Simplex iterations the solve took (lower on warm starts).
     pub lp_iterations: usize,
+}
+
+/// Marker for an item whose worker panicked mid-solve. The parallel
+/// maps return it in the item's slot so one poisoned scenario never
+/// takes down the other results.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WorkerPanic {
+    /// Panic payload rendered to text (`&str`/`String` payloads pass
+    /// through verbatim).
+    pub message: String,
+}
+
+/// Per-item result of the parallel maps: the computed value, or the
+/// panic that consumed this item.
+pub type MapResult<R> = std::result::Result<R, WorkerPanic>;
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "sweep worker panicked".to_string()
+    }
+}
+
+/// Run one item under `catch_unwind`; on a panic the worker state is
+/// rebuilt via `init` so the remaining items of this worker don't
+/// inherit a half-updated cache or scratch pool.
+fn run_caught<T, R, S>(
+    state: &mut S,
+    init: &(impl Fn() -> S + Sync),
+    f: &(impl Fn(&mut S, &T) -> R + Sync),
+    item: &T,
+) -> MapResult<R> {
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(state, item))) {
+        Ok(r) => Ok(r),
+        Err(payload) => {
+            *state = init();
+            Err(WorkerPanic { message: panic_message(payload.as_ref()) })
+        }
+    }
 }
 
 /// Sweep execution options.
@@ -215,14 +263,17 @@ pub fn run_scenarios(scenarios: &[Scenario], opts: &SweepOptions) -> Result<Vec<
     } else {
         parallel_map_with(scenarios, opts.threads, init, solve_scenario)
     };
-    results.into_iter().collect()
+    results
+        .into_iter()
+        .map(|slot| slot.unwrap_or_else(|p| Err(Error::WorkerPanicked(p.message))))
+        .collect()
 }
 
 /// Run `f` over `items` on scoped worker threads, each worker owning a
 /// private [`WarmCache`]. See [`parallel_map_with`] for the
 /// generic-state version and [`parallel_map_steal`] for the
 /// work-stealing scheduler.
-pub fn parallel_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+pub fn parallel_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<MapResult<R>>
 where
     T: Sync,
     R: Send,
@@ -235,8 +286,15 @@ where
 /// private state built by `init`. Items are split into contiguous
 /// chunks (one per worker) and results come back in input order.
 /// `threads == 0` uses one worker per available core; the count is
-/// always capped by the item count.
-pub fn parallel_map_with<T, R, S, F, I>(items: &[T], threads: usize, init: I, f: F) -> Vec<R>
+/// always capped by the item count. A panic inside `f` lands in that
+/// item's slot as [`WorkerPanic`]; the worker rebuilds its state and
+/// finishes its chunk.
+pub fn parallel_map_with<T, R, S, F, I>(
+    items: &[T],
+    threads: usize,
+    init: I,
+    f: F,
+) -> Vec<MapResult<R>>
 where
     T: Sync,
     R: Send,
@@ -250,23 +308,36 @@ where
     let threads = effective_threads(threads, n);
     if threads <= 1 {
         let mut state = init();
-        return items.iter().map(|it| f(&mut state, it)).collect();
+        return items.iter().map(|it| run_caught(&mut state, &init, &f, it)).collect();
     }
 
     let chunk = n.div_ceil(threads);
-    let mut out: Vec<R> = Vec::with_capacity(n);
+    let mut out: Vec<MapResult<R>> = Vec::with_capacity(n);
     std::thread::scope(|s| {
         let mut handles = Vec::with_capacity(threads);
         for part in items.chunks(chunk) {
             let fref = &f;
             let iref = &init;
-            handles.push(s.spawn(move || {
-                let mut state = iref();
-                part.iter().map(|it| fref(&mut state, it)).collect::<Vec<R>>()
-            }));
+            handles.push((
+                part.len(),
+                s.spawn(move || {
+                    let mut state = iref();
+                    part.iter()
+                        .map(|it| run_caught(&mut state, iref, fref, it))
+                        .collect::<Vec<MapResult<R>>>()
+                }),
+            ));
         }
-        for h in handles {
-            out.extend(h.join().expect("sweep worker panicked"));
+        for (len, h) in handles {
+            match h.join() {
+                Ok(part_out) => out.extend(part_out),
+                // `init` itself panicked (per-item panics are caught
+                // above): this chunk is lost, the others survive.
+                Err(payload) => {
+                    let message = panic_message(payload.as_ref());
+                    out.extend((0..len).map(|_| Err(WorkerPanic { message: message.clone() })));
+                }
+            }
         }
     });
     out
@@ -279,7 +350,15 @@ where
 /// next non-empty neighbour — the classic deque discipline, so a thief
 /// takes the work farthest from where the owner is currently warm.
 /// Results come back in input order regardless of who solved what.
-pub fn parallel_map_steal<T, R, S, F, I>(items: &[T], threads: usize, init: I, f: F) -> Vec<R>
+/// Panics are contained per item (see [`parallel_map_with`]); a worker
+/// lost to an `init` panic leaves its deque behind, and the surviving
+/// workers drain it.
+pub fn parallel_map_steal<T, R, S, F, I>(
+    items: &[T],
+    threads: usize,
+    init: I,
+    f: F,
+) -> Vec<MapResult<R>>
 where
     T: Sync,
     R: Send,
@@ -293,7 +372,7 @@ where
     let threads = effective_threads(threads, n);
     if threads <= 1 {
         let mut state = init();
-        return items.iter().map(|it| f(&mut state, it)).collect();
+        return items.iter().map(|it| run_caught(&mut state, &init, &f, it)).collect();
     }
 
     // Contiguous blocks, one deque per worker.
@@ -306,7 +385,8 @@ where
         })
         .collect();
 
-    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let mut slots: Vec<Option<MapResult<R>>> = (0..n).map(|_| None).collect();
+    let mut lost_worker: Option<String> = None;
     std::thread::scope(|s| {
         let mut handles = Vec::with_capacity(threads);
         for w in 0..threads {
@@ -315,7 +395,7 @@ where
             let dref = &deques;
             handles.push(s.spawn(move || {
                 let mut state = iref();
-                let mut done: Vec<(usize, R)> = Vec::new();
+                let mut done: Vec<(usize, MapResult<R>)> = Vec::new();
                 loop {
                     // Own work first (front: preserves warm locality).
                     let mut idx = dref[w].lock().expect("deque lock").pop_front();
@@ -331,20 +411,37 @@ where
                         }
                     }
                     let Some(i) = idx else { break };
-                    done.push((i, fref(&mut state, &items[i])));
+                    done.push((i, run_caught(&mut state, iref, fref, &items[i])));
                 }
                 done
             }));
         }
         for h in handles {
-            for (i, r) in h.join().expect("sweep worker panicked") {
-                slots[i] = Some(r);
+            match h.join() {
+                Ok(done) => {
+                    for (i, r) in done {
+                        slots[i] = Some(r);
+                    }
+                }
+                // `init` panicked before the worker touched any item;
+                // its seeded deque was (or will be) drained by the
+                // surviving workers, so only record the message for
+                // the all-workers-dead fallback below.
+                Err(payload) => lost_worker = Some(panic_message(payload.as_ref())),
             }
         }
     });
     slots
         .into_iter()
-        .map(|r| r.expect("every item solved exactly once"))
+        .map(|slot| {
+            slot.unwrap_or_else(|| {
+                Err(WorkerPanic {
+                    message: lost_worker
+                        .clone()
+                        .unwrap_or_else(|| "sweep worker panicked".to_string()),
+                })
+            })
+        })
         .collect()
 }
 
@@ -573,8 +670,56 @@ mod tests {
         assert!(out.is_empty());
         let items = [1u32, 2, 3];
         let out = parallel_map(&items, 64, |_, x| x * 2);
-        assert_eq!(out, vec![2, 4, 6]);
+        assert_eq!(out, vec![Ok(2), Ok(4), Ok(6)]);
         let out = parallel_map_steal(&items, 64, || (), |_, x| x * 3);
-        assert_eq!(out, vec![3, 6, 9]);
+        assert_eq!(out, vec![Ok(3), Ok(6), Ok(9)]);
+    }
+
+    #[test]
+    fn item_panic_costs_only_its_slot() {
+        let items: Vec<u32> = (0..20).collect();
+        let work = |calls: &mut u32, &x: &u32| {
+            *calls += 1;
+            assert!(x != 7, "boom on 7");
+            x * 2
+        };
+        for threads in [1usize, 3] {
+            let chunked = parallel_map_with(&items, threads, || 0u32, work);
+            let stolen = parallel_map_steal(&items, threads, || 0u32, work);
+            for out in [chunked, stolen] {
+                assert_eq!(out.len(), items.len());
+                for (i, slot) in out.iter().enumerate() {
+                    if i == 7 {
+                        let p = slot.as_ref().expect_err("item 7 must surface its panic");
+                        assert!(p.message.contains("boom on 7"), "{}", p.message);
+                    } else {
+                        assert_eq!(slot.as_ref().unwrap(), &(i as u32 * 2), "slot {i}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn run_scenarios_survives_a_poisoned_point() {
+        // A panic inside one scenario's solve must not abort the sweep
+        // machinery; exercised through the generic map the sweeps use.
+        let items = [1u32, 2, 3];
+        let out = parallel_map_with(
+            &items,
+            2,
+            || (),
+            |_, &x| {
+                assert!(x != 2, "poisoned point");
+                x
+            },
+        );
+        assert!(out[0].is_ok() && out[2].is_ok());
+        assert!(out[1].is_err());
+        // And the error surfaces as Error::WorkerPanicked through the
+        // ApiError kind mapping the batch path uses.
+        let err = crate::api::ApiError::from(Error::WorkerPanicked("poisoned point".into()));
+        assert_eq!(err.kind, "worker_panicked");
+        assert!(matches!(err.into_error(), Error::WorkerPanicked(_)));
     }
 }

@@ -38,6 +38,10 @@
 //!   all call.
 //! - [`cost`], [`speedup`] — §6 monetary-cost/trade-off analysis and
 //!   §5 Amdahl-style speedup analysis (both routed through [`api`]).
+//! - [`serve`] — the zero-dependency TCP serving tier over [`api`]:
+//!   thread-per-core workers, client-keyed session shards with LRU
+//!   warm-cache eviction, bounded admission queues with overload
+//!   fast-reject, and streamed per-item responses (`dlt serve`).
 //! - [`sim`] — a deterministic discrete-event simulator that *executes*
 //!   schedules and independently measures the realized makespan.
 //! - [`cluster`] — a threaded in-process cluster runtime whose
@@ -96,6 +100,7 @@ pub mod model;
 pub mod pdhg;
 pub mod pipeline;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod speedup;
 pub mod testkit;

@@ -137,7 +137,11 @@ impl Factorization {
 
 /// One basis-factorization strategy. All vectors are length `m` (the
 /// basis dimension) and indexed by constraint row / basis position.
-pub trait BasisFactorization {
+///
+/// `Send` so boxed strategies (inside [`crate::lp::SolverScratch`],
+/// and hence whole [`crate::api::Session`]s) can migrate across the
+/// serving tier's worker threads.
+pub trait BasisFactorization: Send {
     /// Strategy name (diagnostics).
     fn name(&self) -> &'static str;
 

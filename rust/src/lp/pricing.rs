@@ -113,7 +113,11 @@ pub struct PivotContext<'a> {
 }
 
 /// One pricing strategy.
-pub trait PricingRule {
+///
+/// `Send` for the same reason as [`crate::lp::BasisFactorization`]:
+/// boxed rules live inside session scratch state that the serving
+/// tier moves between worker threads.
+pub trait PricingRule: Send {
     /// Rule name (diagnostics).
     fn name(&self) -> &'static str;
 

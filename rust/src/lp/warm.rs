@@ -107,6 +107,19 @@ impl WarmCache {
     pub fn clear(&mut self) {
         self.bases.clear();
     }
+
+    /// Approximate resident bytes of the cached bases: the basis
+    /// column indices plus a flat per-entry estimate for the key and
+    /// hash-map slot. The serving tier's LRU eviction budgets warm
+    /// sessions against this number, so it only needs to grow
+    /// monotonically with cache content, not match the allocator.
+    pub fn approx_bytes(&self) -> usize {
+        const ENTRY_OVERHEAD: usize = 64;
+        self.bases
+            .values()
+            .map(|b| b.cols.len() * std::mem::size_of::<usize>() + ENTRY_OVERHEAD)
+            .sum()
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,159 @@
+//! Incremental newline-delimited framing over arbitrary byte chunks.
+//!
+//! The serving tier's wire is one JSON document per line — the same
+//! format `dlt batch` reads from files — but a TCP read can deliver
+//! half a frame, three frames, or a frame boundary split anywhere.
+//! [`FrameReader`] absorbs raw chunks and yields complete frames,
+//! with two guarantees the fuzz tests pin down:
+//!
+//! - **bounded memory**: a line longer than the configured cap is
+//!   dropped as it streams in (the reader never buffers it), and the
+//!   connection recovers at the next newline;
+//! - **no panics**: any byte sequence — truncated, concatenated,
+//!   interleaved, non-UTF-8 — produces a well-defined event stream.
+//!
+//! Blank lines (including `\r\n` keep-alives) are skipped silently so
+//! interactive `nc` sessions behave.
+
+/// One event recovered from the byte stream.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Frame {
+    /// A complete line, trailing `\n` (and optional `\r`) stripped.
+    Line(String),
+    /// A line that exceeded the frame cap; its bytes were discarded as
+    /// they arrived and the stream resynchronized at the newline.
+    Oversize {
+        /// Approximate number of bytes the abandoned line carried.
+        dropped: usize,
+    },
+    /// A complete line that was not valid UTF-8.
+    NotUtf8,
+}
+
+/// Streaming newline-delimited framer with a hard per-frame byte cap.
+#[derive(Debug)]
+pub struct FrameReader {
+    buf: Vec<u8>,
+    max_frame: usize,
+    discarding: bool,
+    dropped: usize,
+}
+
+impl FrameReader {
+    /// New reader; `max_frame` is the largest line (exclusive of the
+    /// newline) that will be buffered rather than discarded.
+    pub fn new(max_frame: usize) -> FrameReader {
+        FrameReader { buf: Vec::new(), max_frame, discarding: false, dropped: 0 }
+    }
+
+    /// Absorb one chunk of bytes from the socket.
+    pub fn push(&mut self, chunk: &[u8]) {
+        self.buf.extend_from_slice(chunk);
+    }
+
+    /// Bytes currently buffered (diagnostics / backpressure probes).
+    pub fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Pull the next complete frame, if one is available. Returns
+    /// `None` when more bytes are needed.
+    pub fn next_frame(&mut self) -> Option<Frame> {
+        loop {
+            if let Some(pos) = self.buf.iter().position(|&b| b == b'\n') {
+                let mut line: Vec<u8> = self.buf.drain(..=pos).collect();
+                line.pop(); // the newline itself
+                if line.last() == Some(&b'\r') {
+                    line.pop();
+                }
+                if self.discarding {
+                    self.discarding = false;
+                    let dropped = self.dropped + line.len();
+                    self.dropped = 0;
+                    return Some(Frame::Oversize { dropped });
+                }
+                if line.is_empty() {
+                    continue; // blank keep-alive
+                }
+                return match String::from_utf8(line) {
+                    Ok(s) => Some(Frame::Line(s)),
+                    Err(_) => Some(Frame::NotUtf8),
+                };
+            }
+            // No newline buffered. Enforce the cap so a frame that
+            // never terminates cannot grow the buffer without bound.
+            if self.buf.len() > self.max_frame {
+                self.dropped += self.buf.len();
+                self.buf.clear();
+                self.discarding = true;
+            }
+            return None;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Feed `bytes` in chunks of `step` and collect every frame.
+    fn frames_chunked(bytes: &[u8], step: usize, cap: usize) -> Vec<Frame> {
+        let mut r = FrameReader::new(cap);
+        let mut out = Vec::new();
+        for chunk in bytes.chunks(step.max(1)) {
+            r.push(chunk);
+            while let Some(f) = r.next_frame() {
+                out.push(f);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn chunking_never_changes_the_frame_stream() {
+        let bytes = b"{\"a\":1}\n\r\n{\"b\":2}\nplain text\n";
+        let want = vec![
+            Frame::Line("{\"a\":1}".into()),
+            Frame::Line("{\"b\":2}".into()),
+            Frame::Line("plain text".into()),
+        ];
+        for step in 1..=bytes.len() {
+            assert_eq!(frames_chunked(bytes, step, 1024), want, "step {step}");
+        }
+    }
+
+    #[test]
+    fn truncated_frame_stays_pending() {
+        let mut r = FrameReader::new(1024);
+        r.push(b"{\"a\":");
+        assert_eq!(r.next_frame(), None);
+        r.push(b"1}\n");
+        assert_eq!(r.next_frame(), Some(Frame::Line("{\"a\":1}".into())));
+        assert_eq!(r.next_frame(), None);
+    }
+
+    #[test]
+    fn oversize_line_is_dropped_and_stream_recovers() {
+        let cap = 16;
+        let long = vec![b'x'; 100];
+        let mut bytes = long.clone();
+        bytes.push(b'\n');
+        bytes.extend_from_slice(b"{\"ok\":true}\n");
+        for step in [1usize, 3, 7, 200] {
+            let out = frames_chunked(&bytes, step, cap);
+            assert_eq!(out.len(), 2, "step {step}: {out:?}");
+            match &out[0] {
+                Frame::Oversize { dropped } => assert!(*dropped >= cap, "dropped {dropped}"),
+                other => panic!("step {step}: expected oversize, got {other:?}"),
+            }
+            assert_eq!(out[1], Frame::Line("{\"ok\":true}".into()));
+        }
+    }
+
+    #[test]
+    fn invalid_utf8_line_is_one_event() {
+        let bytes = [0xffu8, 0xfe, 0x01, b'\n', b'o', b'k', b'\n'];
+        let out = frames_chunked(&bytes, 2, 64);
+        assert_eq!(out, vec![Frame::NotUtf8, Frame::Line("ok".into())]);
+    }
+}

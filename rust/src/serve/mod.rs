@@ -1,0 +1,34 @@
+//! Zero-dependency TCP serving tier over [`crate::api`].
+//!
+//! `dlt serve` turns the request/response facade into a long-running
+//! multi-tenant service speaking the existing newline-delimited JSON
+//! wire over persistent connections:
+//!
+//! - **Thread-per-core workers** ([`server`]): every worker accepts
+//!   from a shared nonblocking listener, frames and parses its own
+//!   connections, and solves from per-shard admission queues — its own
+//!   shards from the front, everyone else's from the back (work
+//!   stealing), so ragged tenants cannot idle a core.
+//! - **Client-keyed warm shards** ([`shard`]): requests carry an
+//!   optional top-level `"client"` id; all of a tenant's requests hash
+//!   to one shard whose [`crate::api::Session`] keeps their warm-start
+//!   caches hot, with LRU whole-session eviction under a byte budget.
+//! - **Admission control**: bounded per-shard queues shed excess load
+//!   instantly with an `overloaded` error and `retry_after_ms` hint;
+//!   graceful drain on shutdown finishes every admitted job.
+//! - **Streaming**: responses are flushed per item in completion
+//!   order, each stamped with its per-connection `seq`, so pipelined
+//!   batches stream back as they finish.
+//!
+//! The framing layer ([`frame`]) is fuzzed against truncated,
+//! concatenated, interleaved, oversize, and non-UTF-8 input in
+//! `tests/serve_framing.rs`; `benches/bench_serve.rs` closes the loop
+//! with an open-loop load harness emitting `BENCH_serve.json`.
+
+pub mod frame;
+pub mod server;
+pub mod shard;
+
+pub use frame::{Frame, FrameReader};
+pub use server::{ServeOptions, Server, StatsSnapshot};
+pub use shard::SessionShard;

@@ -1,0 +1,669 @@
+//! The `dlt serve` TCP server: thread-per-core accept loops, a
+//! client-keyed shard router, bounded admission queues, and streamed
+//! per-item responses.
+//!
+//! ## Architecture
+//!
+//! Every worker thread runs the same loop over a nonblocking clone of
+//! the listener: accept new connections, read and frame bytes from
+//! the connections it owns, parse frames into [`SolveRequest`]s, and
+//! route each request to the session shard its client id hashes to.
+//! Shards are striped across workers (`shard % workers`); a worker
+//! solves from its own shards first (warm locality) and steals from
+//! the *back* of other shards' queues when idle — the same deque
+//! discipline as [`crate::experiments::sweep::parallel_map_steal`].
+//! Warm state lives in the shard, not the worker, so a stolen solve
+//! still hits the tenant's warm cache.
+//!
+//! Responses stream back in completion order, each line stamped with
+//! the per-connection `seq` assigned at parse time, so a client can
+//! pipeline a large batch and match responses without waiting for the
+//! batch to finish.
+//!
+//! ## Admission control
+//!
+//! Each shard's queue is bounded ([`ServeOptions::queue_depth`]); a
+//! request arriving at a full queue is rejected immediately with an
+//! `overloaded` error carrying `retry_after_ms` — clients shed in
+//! microseconds instead of queueing without bound. On shutdown the
+//! workers stop accepting and parsing, finish every admitted job,
+//! flush every outbuf, and exit (graceful drain).
+
+use crate::api::wire::ServeDiagnostics;
+use crate::api::{ApiError, SolveRequest, Solver};
+use crate::config::json::Json;
+use crate::error::{Error, Result};
+use crate::serve::frame::{Frame, FrameReader};
+use crate::serve::shard::SessionShard;
+use std::collections::{HashMap, VecDeque};
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+/// Serving-tier configuration.
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Bind address, e.g. `127.0.0.1:4517` (port `0` picks a free
+    /// port; read it back from [`Server::local_addr`]).
+    pub addr: String,
+    /// Worker threads (`0` = one per core).
+    pub workers: usize,
+    /// Session shards (`0` = two per worker). More shards than
+    /// workers keeps steal granularity fine and hash collisions rare.
+    pub shards: usize,
+    /// Bound on each shard's admission queue; a request arriving at a
+    /// full queue is shed with `overloaded`. `0` sheds everything
+    /// (useful to exercise the reject path).
+    pub queue_depth: usize,
+    /// Warm-state byte budget across all shards; each shard LRU-evicts
+    /// whole client sessions beyond its `budget / shards` slice.
+    pub warm_budget_bytes: usize,
+    /// Back-off hint attached to shed responses.
+    pub retry_after_ms: u64,
+    /// Largest request line buffered per connection; longer lines are
+    /// discarded and answered with a `config` error.
+    pub max_frame_bytes: usize,
+    /// Solver configuration stamped onto every per-client session.
+    pub solver: Solver,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            addr: "127.0.0.1:4517".to_string(),
+            workers: 0,
+            shards: 0,
+            queue_depth: 64,
+            warm_budget_bytes: 64 * 1024 * 1024,
+            retry_after_ms: 50,
+            max_frame_bytes: 1024 * 1024,
+            solver: Solver::new(),
+        }
+    }
+}
+
+/// Monotone server counters, snapshotted via [`Server::stats`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StatsSnapshot {
+    /// Connections accepted.
+    pub connections: u64,
+    /// Requests parsed off the wire (admitted or shed).
+    pub requests: u64,
+    /// Solve responses streamed back (success or solver error).
+    pub responses: u64,
+    /// Requests shed at admission (`overloaded`).
+    pub shed: u64,
+    /// Frames rejected before solving (bad JSON, oversize, non-UTF-8,
+    /// malformed request).
+    pub malformed: u64,
+    /// Warm sessions LRU-evicted across all shards.
+    pub evictions: u64,
+    /// Requests that found their client session resident.
+    pub shard_hits: u64,
+    /// Requests that built a fresh client session.
+    pub shard_misses: u64,
+    /// Client sessions currently resident across all shards.
+    pub resident_sessions: u64,
+}
+
+struct Job {
+    /// Worker that owns the originating connection.
+    worker: usize,
+    conn: u64,
+    seq: u64,
+    client: String,
+    req: SolveRequest,
+}
+
+struct Completion {
+    conn: u64,
+    line: String,
+}
+
+struct Shard {
+    queue: Mutex<VecDeque<Job>>,
+    sessions: Mutex<SessionShard>,
+}
+
+struct Shared {
+    opts: ServeOptions,
+    nworkers: usize,
+    shutdown: AtomicBool,
+    /// Jobs admitted but not yet delivered to an outbuf (or dropped
+    /// with their connection) — the graceful-drain barrier.
+    pending: AtomicUsize,
+    shards: Vec<Shard>,
+    /// Per-worker inboxes for responses whose connection lives on
+    /// another worker.
+    completions: Vec<Mutex<VecDeque<Completion>>>,
+    conn_ids: AtomicU64,
+    connections: AtomicU64,
+    requests: AtomicU64,
+    responses: AtomicU64,
+    shed: AtomicU64,
+    malformed: AtomicU64,
+}
+
+/// A running server. Dropping the handle does **not** stop the worker
+/// threads; call [`Server::shutdown`] (drain and join) or
+/// [`Server::join`] (serve until the process dies).
+pub struct Server {
+    shared: Arc<Shared>,
+    addr: SocketAddr,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `opts.addr` and start the worker threads.
+    pub fn start(opts: ServeOptions) -> Result<Server> {
+        let listener =
+            TcpListener::bind(&opts.addr).map_err(|e| Error::io(opts.addr.clone(), e))?;
+        listener.set_nonblocking(true).map_err(|e| Error::io(opts.addr.clone(), e))?;
+        let addr = listener.local_addr().map_err(|e| Error::io(opts.addr.clone(), e))?;
+
+        let nworkers = if opts.workers == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            opts.workers
+        };
+        let nshards = if opts.shards == 0 { nworkers * 2 } else { opts.shards };
+        let per_shard_budget = (opts.warm_budget_bytes / nshards).max(1);
+        let shards = (0..nshards)
+            .map(|_| Shard {
+                queue: Mutex::new(VecDeque::new()),
+                sessions: Mutex::new(SessionShard::new(opts.solver.clone(), per_shard_budget)),
+            })
+            .collect();
+        let completions = (0..nworkers).map(|_| Mutex::new(VecDeque::new())).collect();
+
+        let shared = Arc::new(Shared {
+            opts,
+            nworkers,
+            shutdown: AtomicBool::new(false),
+            pending: AtomicUsize::new(0),
+            shards,
+            completions,
+            conn_ids: AtomicU64::new(0),
+            connections: AtomicU64::new(0),
+            requests: AtomicU64::new(0),
+            responses: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            malformed: AtomicU64::new(0),
+        });
+
+        let mut handles = Vec::with_capacity(nworkers);
+        for w in 0..nworkers {
+            let sh = Arc::clone(&shared);
+            let lst = listener.try_clone().map_err(|e| Error::io("listener", e))?;
+            let h = std::thread::Builder::new()
+                .name(format!("dlt-serve-{w}"))
+                .spawn(move || worker_loop(w, lst, sh))
+                .map_err(|e| Error::io("spawn worker", e))?;
+            handles.push(h);
+        }
+        Ok(Server { shared, addr, handles })
+    }
+
+    /// The bound address (resolves port `0`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Worker threads running.
+    pub fn workers(&self) -> usize {
+        self.shared.nworkers
+    }
+
+    /// Session shards configured.
+    pub fn shards(&self) -> usize {
+        self.shared.shards.len()
+    }
+
+    /// Snapshot the monotone counters (cheap; takes each shard's
+    /// session lock briefly).
+    pub fn stats(&self) -> StatsSnapshot {
+        snapshot(&self.shared)
+    }
+
+    /// Graceful drain: stop accepting and parsing, finish every
+    /// admitted job, flush, join the workers.
+    pub fn shutdown(self) -> StatsSnapshot {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        for h in self.handles {
+            h.join().ok();
+        }
+        snapshot(&self.shared)
+    }
+
+    /// Serve until the process exits (the workers never return without
+    /// a shutdown signal).
+    pub fn join(self) {
+        for h in self.handles {
+            h.join().ok();
+        }
+    }
+}
+
+fn snapshot(shared: &Shared) -> StatsSnapshot {
+    let mut snap = StatsSnapshot {
+        connections: shared.connections.load(Ordering::Relaxed),
+        requests: shared.requests.load(Ordering::Relaxed),
+        responses: shared.responses.load(Ordering::Relaxed),
+        shed: shared.shed.load(Ordering::Relaxed),
+        malformed: shared.malformed.load(Ordering::Relaxed),
+        ..StatsSnapshot::default()
+    };
+    for shard in &shared.shards {
+        let sessions = lock_unpoisoned(&shard.sessions);
+        snap.evictions += sessions.evictions;
+        snap.shard_hits += sessions.hits;
+        snap.shard_misses += sessions.misses;
+        snap.resident_sessions += sessions.resident() as u64;
+    }
+    snap
+}
+
+/// Locks, ignoring poisoning: a worker that panicked mid-solve must
+/// not wedge every other worker that shares the shard.
+fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// FNV-1a client hash → shard index. Stable across runs so a tenant
+/// re-lands on its warm shard after reconnecting.
+fn shard_of(client: &str, nshards: usize) -> usize {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in client.as_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    (h % nshards as u64) as usize
+}
+
+/// One live connection owned by a worker.
+struct Conn {
+    stream: TcpStream,
+    reader: FrameReader,
+    out: VecDeque<u8>,
+    next_seq: u64,
+    /// Read side open (false after EOF or a read/write error).
+    open: bool,
+    /// Admitted jobs whose response has not reached `out` yet; keeps
+    /// a half-closed connection alive until its answers are flushed.
+    inflight: usize,
+}
+
+impl Conn {
+    fn take_seq(&mut self) -> u64 {
+        let s = self.next_seq;
+        self.next_seq += 1;
+        s
+    }
+
+    fn queue_line(&mut self, line: &str) {
+        self.out.extend(line.as_bytes());
+        self.out.push_back(b'\n');
+    }
+
+    /// Write as much of the outbuf as the socket accepts right now.
+    fn try_flush(&mut self) -> std::io::Result<()> {
+        while !self.out.is_empty() {
+            let (head, _) = self.out.as_slices();
+            match self.stream.write(head) {
+                Ok(0) => return Err(ErrorKind::WriteZero.into()),
+                Ok(n) => {
+                    self.out.drain(..n);
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Insert `"seq": k` at the front of a response object.
+fn with_seq(doc: &mut Json, seq: u64) {
+    if let Json::Object(kv) = doc {
+        kv.insert(0, ("seq".to_string(), Json::Num(seq as f64)));
+    }
+}
+
+/// One error response line; `retry_after_ms` rides top-level so shed
+/// clients can back off without parsing the message.
+fn error_line(seq: u64, err: &ApiError, retry_after_ms: Option<u64>) -> String {
+    let mut doc = err.to_json();
+    if let Json::Object(kv) = &mut doc {
+        if let Some(ms) = retry_after_ms {
+            kv.insert(0, ("retry_after_ms".to_string(), Json::Num(ms as f64)));
+        }
+    }
+    with_seq(&mut doc, seq);
+    doc.to_string_compact()
+}
+
+const MAX_SOLVES_PER_PASS: usize = 4;
+const READ_CHUNK: usize = 16 * 1024;
+const IDLE_SLEEP: Duration = Duration::from_micros(200);
+
+fn worker_loop(w: usize, listener: TcpListener, sh: Arc<Shared>) {
+    let mut conns: HashMap<u64, Conn> = HashMap::new();
+    let mut read_buf = vec![0u8; READ_CHUNK];
+    loop {
+        let draining = sh.shutdown.load(Ordering::SeqCst);
+        let mut progressed = false;
+
+        if !draining {
+            progressed |= accept_new(&listener, &mut conns, &sh);
+        }
+        progressed |= pump_reads(w, &mut conns, &mut read_buf, draining, &sh);
+        progressed |= drain_completions(w, &mut conns, &sh);
+        progressed |= solve_some(w, &mut conns, &sh);
+
+        for conn in conns.values_mut() {
+            if conn.try_flush().is_err() {
+                conn.open = false;
+                conn.out.clear();
+                conn.inflight = 0;
+            }
+        }
+        conns.retain(|_, c| c.open || !c.out.is_empty() || c.inflight > 0);
+
+        if draining {
+            let idle = sh.pending.load(Ordering::SeqCst) == 0
+                && lock_unpoisoned(&sh.completions[w]).is_empty()
+                && conns.values().all(|c| c.out.is_empty());
+            if idle {
+                break;
+            }
+        }
+        if !progressed {
+            std::thread::sleep(IDLE_SLEEP);
+        }
+    }
+}
+
+fn accept_new(listener: &TcpListener, conns: &mut HashMap<u64, Conn>, sh: &Shared) -> bool {
+    let mut any = false;
+    loop {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                stream.set_nodelay(true).ok();
+                if stream.set_nonblocking(true).is_err() {
+                    continue;
+                }
+                let id = sh.conn_ids.fetch_add(1, Ordering::Relaxed);
+                sh.connections.fetch_add(1, Ordering::Relaxed);
+                conns.insert(
+                    id,
+                    Conn {
+                        stream,
+                        reader: FrameReader::new(sh.opts.max_frame_bytes),
+                        out: VecDeque::new(),
+                        next_seq: 0,
+                        open: true,
+                        inflight: 0,
+                    },
+                );
+                any = true;
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(_) => break,
+        }
+    }
+    any
+}
+
+fn pump_reads(
+    w: usize,
+    conns: &mut HashMap<u64, Conn>,
+    read_buf: &mut [u8],
+    draining: bool,
+    sh: &Shared,
+) -> bool {
+    let mut any = false;
+    for (&id, conn) in conns.iter_mut() {
+        if conn.open {
+            loop {
+                match conn.stream.read(read_buf) {
+                    Ok(0) => {
+                        conn.open = false;
+                        break;
+                    }
+                    Ok(n) => {
+                        any = true;
+                        conn.reader.push(&read_buf[..n]);
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        conn.open = false;
+                        break;
+                    }
+                }
+            }
+        }
+        // During drain the sockets still drain (so close is seen) but
+        // buffered frames are not admitted.
+        if draining {
+            continue;
+        }
+        while let Some(frame) = conn.reader.next_frame() {
+            any = true;
+            handle_frame(w, id, conn, frame, sh);
+        }
+    }
+    any
+}
+
+fn handle_frame(w: usize, conn_id: u64, conn: &mut Conn, frame: Frame, sh: &Shared) {
+    match frame {
+        Frame::Line(text) => match Json::parse(&text) {
+            // An array frame is a batch: every element gets its own
+            // seq and its own streamed response line.
+            Ok(Json::Array(items)) => {
+                for item in &items {
+                    admit_request(w, conn_id, conn, item, sh);
+                }
+            }
+            Ok(doc) => admit_request(w, conn_id, conn, &doc, sh),
+            Err(e) => {
+                let seq = conn.take_seq();
+                sh.malformed.fetch_add(1, Ordering::Relaxed);
+                conn.queue_line(&error_line(seq, &ApiError::from(e), None));
+            }
+        },
+        Frame::Oversize { dropped } => {
+            let seq = conn.take_seq();
+            sh.malformed.fetch_add(1, Ordering::Relaxed);
+            let err = ApiError::from(Error::Config(format!(
+                "frame exceeded {} bytes ({dropped} dropped)",
+                sh.opts.max_frame_bytes
+            )));
+            conn.queue_line(&error_line(seq, &err, None));
+        }
+        Frame::NotUtf8 => {
+            let seq = conn.take_seq();
+            sh.malformed.fetch_add(1, Ordering::Relaxed);
+            let err = ApiError::from(Error::Config("frame is not valid UTF-8".to_string()));
+            conn.queue_line(&error_line(seq, &err, None));
+        }
+    }
+}
+
+/// Parse one request document, route it to its shard, and admit or
+/// shed it. Every outcome produces exactly one response line carrying
+/// this request's seq.
+fn admit_request(w: usize, conn_id: u64, conn: &mut Conn, doc: &Json, sh: &Shared) {
+    let seq = conn.take_seq();
+    sh.requests.fetch_add(1, Ordering::Relaxed);
+    let req = match SolveRequest::from_json(doc) {
+        Ok(r) => r,
+        Err(e) => {
+            sh.malformed.fetch_add(1, Ordering::Relaxed);
+            conn.queue_line(&error_line(seq, &ApiError::from(e), None));
+            return;
+        }
+    };
+    // Tenant key: the optional top-level `client` field; anonymous
+    // connections fall back to a per-connection key so they still
+    // warm-start against themselves.
+    let client = match doc.get("client") {
+        Some(c) => match c.as_str() {
+            Ok(s) => s.to_string(),
+            Err(e) => {
+                sh.malformed.fetch_add(1, Ordering::Relaxed);
+                conn.queue_line(&error_line(seq, &ApiError::from(e), None));
+                return;
+            }
+        },
+        None => format!("conn-{conn_id}"),
+    };
+    let shard = shard_of(&client, sh.shards.len());
+    let mut queue = lock_unpoisoned(&sh.shards[shard].queue);
+    if queue.len() >= sh.opts.queue_depth {
+        drop(queue);
+        sh.shed.fetch_add(1, Ordering::Relaxed);
+        let ms = sh.opts.retry_after_ms;
+        let err = ApiError::from(Error::Overloaded { retry_after_ms: ms });
+        conn.queue_line(&error_line(seq, &err, Some(ms)));
+        return;
+    }
+    queue.push_back(Job { worker: w, conn: conn_id, seq, client, req });
+    drop(queue);
+    sh.pending.fetch_add(1, Ordering::SeqCst);
+    conn.inflight += 1;
+}
+
+fn drain_completions(w: usize, conns: &mut HashMap<u64, Conn>, sh: &Shared) -> bool {
+    let mut any = false;
+    loop {
+        let completion = lock_unpoisoned(&sh.completions[w]).pop_front();
+        let Some(c) = completion else { break };
+        any = true;
+        if let Some(conn) = conns.get_mut(&c.conn) {
+            conn.queue_line(&c.line);
+            conn.inflight = conn.inflight.saturating_sub(1);
+        }
+        sh.pending.fetch_sub(1, Ordering::SeqCst);
+    }
+    any
+}
+
+/// Solve up to [`MAX_SOLVES_PER_PASS`] queued jobs: own shards from
+/// the queue front, then other workers' shards from the back (steal).
+/// The cap keeps the loop returning to reads and flushes, so under
+/// overload the bounded queues — not the kernel socket buffers — are
+/// what fills, and admission control actually triggers.
+fn solve_some(w: usize, conns: &mut HashMap<u64, Conn>, sh: &Shared) -> bool {
+    let mut solved = 0usize;
+    for pass in 0..2usize {
+        for (s, shard) in sh.shards.iter().enumerate() {
+            let own = s % sh.nworkers == w;
+            if (pass == 0) != own {
+                continue;
+            }
+            while solved < MAX_SOLVES_PER_PASS {
+                let job = {
+                    let mut queue = lock_unpoisoned(&shard.queue);
+                    if own {
+                        queue.pop_front()
+                    } else {
+                        queue.pop_back()
+                    }
+                };
+                let Some(job) = job else { break };
+                solved += 1;
+                let line = solve_job(s, &job, sh);
+                if job.worker == w {
+                    if let Some(conn) = conns.get_mut(&job.conn) {
+                        conn.queue_line(&line);
+                        conn.inflight = conn.inflight.saturating_sub(1);
+                    }
+                    sh.pending.fetch_sub(1, Ordering::SeqCst);
+                } else {
+                    lock_unpoisoned(&sh.completions[job.worker])
+                        .push_back(Completion { conn: job.conn, line });
+                }
+            }
+            if solved >= MAX_SOLVES_PER_PASS {
+                break;
+            }
+        }
+        if solved >= MAX_SOLVES_PER_PASS {
+            break;
+        }
+    }
+    solved > 0
+}
+
+/// Solve one admitted job on its shard's warm session and render the
+/// response line. A panicking solve costs the client its warm session
+/// and yields a `worker_panicked` error — never a dead worker.
+fn solve_job(shard_idx: usize, job: &Job, sh: &Shared) -> String {
+    let shard = &sh.shards[shard_idx];
+    let (outcome, shard_hit, evictions, resident) = {
+        let mut sessions = lock_unpoisoned(&shard.sessions);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let (session, hit) = sessions.session_for(&job.client);
+            (session.solve(&job.req), hit)
+        }));
+        match caught {
+            Ok((result, hit)) => {
+                sessions.evict_to_budget(&job.client);
+                (result, hit, sessions.evictions, sessions.resident())
+            }
+            Err(_) => {
+                sessions.discard(&job.client);
+                let err = ApiError::from(Error::WorkerPanicked(format!(
+                    "solve panicked for client `{}`",
+                    job.client
+                )));
+                (Err(err), false, sessions.evictions, sessions.resident())
+            }
+        }
+    };
+    sh.responses.fetch_add(1, Ordering::Relaxed);
+    match outcome {
+        Ok(mut resp) => {
+            resp.diagnostics.serve =
+                Some(ServeDiagnostics { shard: shard_idx, shard_hit, evictions, resident });
+            let mut doc = resp.to_json();
+            with_seq(&mut doc, job.seq);
+            doc.to_string_compact()
+        }
+        Err(e) => error_line(job.seq, &e, None),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_router_is_stable_and_in_range() {
+        for nshards in [1usize, 2, 7, 16] {
+            for client in ["a", "tenant-42", "", "conn-123456"] {
+                let s = shard_of(client, nshards);
+                assert!(s < nshards);
+                assert_eq!(s, shard_of(client, nshards), "stable");
+            }
+        }
+    }
+
+    #[test]
+    fn error_line_carries_seq_and_retry_hint() {
+        let err = ApiError::from(Error::Overloaded { retry_after_ms: 25 });
+        let line = error_line(7, &err, Some(25));
+        let doc = Json::parse(&line).unwrap();
+        assert_eq!(doc.req("seq").unwrap().as_usize().unwrap(), 7);
+        assert_eq!(doc.req("retry_after_ms").unwrap().as_usize().unwrap(), 25);
+        assert_eq!(
+            doc.req("error").unwrap().req("kind").unwrap().as_str().unwrap(),
+            "overloaded"
+        );
+    }
+}

@@ -1,0 +1,172 @@
+//! Session shards: per-tenant warm solver state with LRU eviction.
+//!
+//! Each shard owns a map from client id to a warm
+//! [`Session`](crate::api::Session). Requests for the same client
+//! always hash to the same shard (see the router in
+//! [`server`](crate::serve::server)), so a tenant's warm-start caches
+//! and projection seeds stay hot across its whole connection — and
+//! across *reconnections* — without any cross-thread cache sharing.
+//! Whenever the shard's approximate resident bytes
+//! ([`Session::warm_bytes`](crate::api::Session::warm_bytes)) exceed
+//! its budget, the least-recently-used sessions are evicted whole (a
+//! cold client re-pays one phase-1 solve, nothing else).
+
+use crate::api::{Session, Solver};
+use std::collections::HashMap;
+
+/// One shard's client sessions plus its LRU/eviction accounting.
+#[derive(Debug)]
+pub struct SessionShard {
+    solver: Solver,
+    budget_bytes: usize,
+    tick: u64,
+    sessions: HashMap<String, Entry>,
+    /// Warm sessions evicted so far to stay under the byte budget.
+    pub evictions: u64,
+    /// Requests that found their client's session resident.
+    pub hits: u64,
+    /// Requests that had to build a fresh session.
+    pub misses: u64,
+}
+
+#[derive(Debug)]
+struct Entry {
+    session: Session,
+    last_used: u64,
+}
+
+impl SessionShard {
+    /// New shard stamping sessions from `solver`, evicting when the
+    /// summed [`Session::warm_bytes`] exceed `budget_bytes`.
+    pub fn new(solver: Solver, budget_bytes: usize) -> SessionShard {
+        SessionShard {
+            solver,
+            budget_bytes,
+            tick: 0,
+            sessions: HashMap::new(),
+            evictions: 0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Borrow the client's warm session, building one on first
+    /// contact (or after an eviction). The bool is the shard-hit flag
+    /// reported on the wire: whether the session was already resident.
+    pub fn session_for(&mut self, client: &str) -> (&mut Session, bool) {
+        self.tick += 1;
+        let hit = self.sessions.contains_key(client);
+        if hit {
+            self.hits += 1;
+        } else {
+            self.misses += 1;
+            // Serve workers solve one request at a time; a nested
+            // batch fan-out inside the shard would oversubscribe the
+            // core the worker is pinned to.
+            let solver = self.solver.clone().threads(1);
+            self.sessions.insert(
+                client.to_string(),
+                Entry { session: solver.build(), last_used: 0 },
+            );
+        }
+        let entry = self.sessions.get_mut(client).expect("session just ensured");
+        entry.last_used = self.tick;
+        (&mut entry.session, hit)
+    }
+
+    /// Evict least-recently-used sessions until the shard fits its
+    /// byte budget again, never evicting `keep` (the client that just
+    /// solved — evicting it would thrash on every request once over
+    /// budget). Returns how many sessions were evicted.
+    pub fn evict_to_budget(&mut self, keep: &str) -> usize {
+        let mut evicted = 0;
+        while self.warm_bytes() > self.budget_bytes && self.sessions.len() > 1 {
+            let victim = self
+                .sessions
+                .iter()
+                .filter(|(client, _)| client.as_str() != keep)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(client, _)| client.clone());
+            match victim {
+                Some(client) => {
+                    self.sessions.remove(&client);
+                    self.evictions += 1;
+                    evicted += 1;
+                }
+                None => break,
+            }
+        }
+        evicted
+    }
+
+    /// Drop a client's session outright (used after a panicked solve
+    /// left its warm state suspect). Not counted as an eviction.
+    pub fn discard(&mut self, client: &str) -> bool {
+        self.sessions.remove(client).is_some()
+    }
+
+    /// Approximate resident bytes across every session on the shard.
+    pub fn warm_bytes(&self) -> usize {
+        self.sessions.values().map(|e| e.session.warm_bytes()).sum()
+    }
+
+    /// Sessions currently resident.
+    pub fn resident(&self) -> usize {
+        self.sessions.len()
+    }
+
+    /// Configured byte budget.
+    pub fn budget_bytes(&self) -> usize {
+        self.budget_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{Family, SolveRequest};
+    use crate::model::SystemSpec;
+
+    fn spec() -> SystemSpec {
+        SystemSpec::builder()
+            .source(0.2, 10.0)
+            .source(0.4, 50.0)
+            .processors(&[2.0, 3.0, 4.0])
+            .job(100.0)
+            .build()
+            .unwrap()
+    }
+
+    fn solve_as(shard: &mut SessionShard, client: &str) -> bool {
+        let req = SolveRequest::new(Family::Frontend, spec());
+        let (session, hit) = shard.session_for(client);
+        session.solve(&req).unwrap();
+        shard.evict_to_budget(client);
+        hit
+    }
+
+    #[test]
+    fn generous_budget_keeps_every_tenant_warm() {
+        let mut shard = SessionShard::new(Solver::new(), 64 * 1024 * 1024);
+        assert!(!solve_as(&mut shard, "a"), "first contact is a miss");
+        assert!(!solve_as(&mut shard, "b"));
+        assert!(solve_as(&mut shard, "a"), "return visit must hit");
+        assert!(solve_as(&mut shard, "b"));
+        assert_eq!(shard.evictions, 0);
+        assert_eq!(shard.resident(), 2);
+        assert_eq!((shard.hits, shard.misses), (2, 2));
+    }
+
+    #[test]
+    fn tiny_budget_evicts_lru_but_never_the_active_client() {
+        let mut shard = SessionShard::new(Solver::new(), 1);
+        solve_as(&mut shard, "a");
+        assert_eq!(shard.resident(), 1, "active client survives even over budget");
+        solve_as(&mut shard, "b");
+        // b just solved, so a (the LRU entry) was evicted.
+        assert_eq!(shard.resident(), 1);
+        assert_eq!(shard.evictions, 1);
+        assert!(!solve_as(&mut shard, "a"), "evicted client is cold again");
+        assert!(shard.evictions >= 2);
+    }
+}

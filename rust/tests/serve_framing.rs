@@ -1,0 +1,327 @@
+//! Wire-framing fuzz tests and live loopback-server tests for the
+//! serving tier.
+//!
+//! The framing contract under fire here: arbitrary byte streams —
+//! truncated, concatenated, interleaved with garbage, oversize,
+//! non-UTF-8 — never panic the reader, a malformed frame yields
+//! exactly one error response, and the connection stays usable
+//! afterwards.
+
+use dlt::api::{Family, SolveRequest};
+use dlt::config::json::Json;
+use dlt::model::SystemSpec;
+use dlt::serve::{Frame, FrameReader, ServeOptions, Server};
+use dlt::util::{Pcg32, Rng};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+fn spec() -> SystemSpec {
+    SystemSpec::builder()
+        .source(0.2, 10.0)
+        .source(0.4, 50.0)
+        .processors(&[2.0, 3.0, 4.0])
+        .job(100.0)
+        .build()
+        .unwrap()
+}
+
+fn request_text(client: &str, id: &str) -> String {
+    let mut req = SolveRequest::new(Family::Frontend, spec());
+    req.id = Some(id.to_string());
+    let mut doc = req.to_json();
+    if let Json::Object(kv) = &mut doc {
+        kv.insert(0, ("client".to_string(), Json::Str(client.to_string())));
+    }
+    doc.to_string_compact()
+}
+
+// ---------------------------------------------------------------------------
+// FrameReader fuzz: random corpora through random chunkings.
+// ---------------------------------------------------------------------------
+
+/// Build a corpus of lines of every flavor the wire can carry, return
+/// (bytes, expected frame events).
+fn build_corpus(rng: &mut Pcg32, cap: usize) -> (Vec<u8>, Vec<Frame>) {
+    let mut bytes = Vec::new();
+    let mut want = Vec::new();
+    for k in 0..40 {
+        match rng.below(6) {
+            // Valid request document.
+            0 => {
+                let line = request_text("fuzz", &format!("r{k}"));
+                want.push(Frame::Line(line.clone()));
+                bytes.extend_from_slice(line.as_bytes());
+                bytes.push(b'\n');
+            }
+            // Malformed JSON (still a complete, valid UTF-8 line).
+            1 => {
+                let line = format!("{{\"family\": \"frontend\", {k}");
+                want.push(Frame::Line(line.clone()));
+                bytes.extend_from_slice(line.as_bytes());
+                bytes.push(b'\n');
+            }
+            // Blank keep-alives, bare and CRLF — skipped silently.
+            2 => {
+                bytes.push(b'\n');
+                bytes.extend_from_slice(b"\r\n");
+            }
+            // Oversize line: dropped, one Oversize event.
+            3 => {
+                let n = cap + 1 + rng.below(2 * cap);
+                bytes.extend_from_slice(&vec![b'x'; n]);
+                bytes.push(b'\n');
+                want.push(Frame::Oversize { dropped: 0 });
+            }
+            // Non-UTF-8 line.
+            4 => {
+                bytes.extend_from_slice(&[0xff, 0xfe, 0x80, b'!']);
+                bytes.push(b'\n');
+                want.push(Frame::NotUtf8);
+            }
+            // CRLF-terminated valid line.
+            _ => {
+                let line = format!("{{\"k\": {k}}}");
+                want.push(Frame::Line(line.clone()));
+                bytes.extend_from_slice(line.as_bytes());
+                bytes.extend_from_slice(b"\r\n");
+            }
+        }
+    }
+    (bytes, want)
+}
+
+/// Events must match regardless of how the bytes were chunked; the
+/// `dropped` count of Oversize events is chunking-dependent (it counts
+/// flushes of the discard buffer), so compare everything else exactly
+/// and Oversize by kind.
+fn assert_same_events(got: &[Frame], want: &[Frame], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: event count");
+    for (g, w) in got.iter().zip(want) {
+        match (g, w) {
+            (Frame::Oversize { dropped }, Frame::Oversize { .. }) => {
+                assert!(*dropped > 0, "{what}: oversize dropped nothing");
+            }
+            _ => assert_eq!(g, w, "{what}"),
+        }
+    }
+}
+
+#[test]
+fn fuzz_random_chunkings_yield_identical_frames() {
+    let cap = 256;
+    for round in 0..20 {
+        let mut rng = Pcg32::new(0xF0A3 + round);
+        let (bytes, want) = build_corpus(&mut rng, cap);
+        for trial in 0..10 {
+            let mut r = FrameReader::new(cap);
+            let mut got = Vec::new();
+            let mut pos = 0;
+            while pos < bytes.len() {
+                let step = 1 + rng.below(97);
+                let end = (pos + step).min(bytes.len());
+                r.push(&bytes[pos..end]);
+                pos = end;
+                while let Some(f) = r.next_frame() {
+                    got.push(f);
+                }
+            }
+            assert_same_events(&got, &want, &format!("round {round} trial {trial}"));
+        }
+    }
+}
+
+#[test]
+fn fuzz_pure_garbage_never_panics() {
+    let mut rng = Pcg32::new(0xBAD5EED);
+    for _ in 0..50 {
+        let n = rng.below(4096);
+        let bytes: Vec<u8> = (0..n).map(|_| rng.next_u32() as u8).collect();
+        let mut r = FrameReader::new(128);
+        for chunk in bytes.chunks(1 + rng.below(64)) {
+            r.push(chunk);
+            while r.next_frame().is_some() {}
+        }
+        // Bounded memory even if no newline ever arrived.
+        assert!(r.buffered() <= 128 + 64, "buffer grew past the cap + one chunk");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Live loopback server.
+// ---------------------------------------------------------------------------
+
+fn boot(configure: impl FnOnce(&mut ServeOptions)) -> (Server, TcpStream, BufReader<TcpStream>) {
+    let mut opts = ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 2,
+        shards: 4,
+        ..ServeOptions::default()
+    };
+    configure(&mut opts);
+    let server = Server::start(opts).expect("start server");
+    let stream = TcpStream::connect(server.local_addr()).expect("connect");
+    stream.set_nodelay(true).unwrap();
+    let reader = stream.try_clone().unwrap();
+    reader.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    (server, stream, BufReader::new(reader))
+}
+
+fn read_docs(reader: &mut BufReader<TcpStream>, n: usize) -> Vec<Json> {
+    let mut docs = Vec::with_capacity(n);
+    let mut line = String::new();
+    while docs.len() < n {
+        line.clear();
+        let read = reader.read_line(&mut line).expect("response before timeout");
+        assert!(read > 0, "server closed the connection early");
+        docs.push(Json::parse(line.trim_end()).expect("response line parses"));
+    }
+    docs
+}
+
+fn seq_of(doc: &Json) -> usize {
+    doc.req("seq").unwrap().as_usize().unwrap()
+}
+
+fn error_kind(doc: &Json) -> Option<&str> {
+    doc.get("error").map(|e| e.req("kind").unwrap().as_str().unwrap())
+}
+
+#[test]
+fn mixed_malformed_split_and_batched_frames_all_get_answers() {
+    let (server, mut stream, mut reader) = boot(|_| {});
+
+    let good = request_text("alice", "good-1");
+    // seq 0: valid single request.
+    stream.write_all(format!("{good}\n").as_bytes()).unwrap();
+    // seq 1: malformed JSON -> exactly one config error.
+    stream.write_all(b"{\"family\": \"frontend\",\n").unwrap();
+    // seq 2-3: a two-element batch array frame.
+    let batch = format!("[{}, {}]\n", request_text("alice", "b-0"), request_text("bob", "b-1"));
+    stream.write_all(batch.as_bytes()).unwrap();
+    // Blank keep-alives: no seq, no response.
+    stream.write_all(b"\r\n\n").unwrap();
+    // seq 4: non-UTF-8 line -> one config error.
+    stream.write_all(&[0xff, 0xfe, 0x01, b'\n']).unwrap();
+    // seq 5: valid request split across two writes (torn frame).
+    let torn = request_text("carol", "torn-1");
+    let (head, tail) = torn.split_at(torn.len() / 2);
+    stream.write_all(head.as_bytes()).unwrap();
+    stream.flush().unwrap();
+    std::thread::sleep(Duration::from_millis(20));
+    stream.write_all(format!("{tail}\n").as_bytes()).unwrap();
+    // seq 6-7: two frames concatenated into one write.
+    let two = format!(
+        "{}\n{}\n",
+        request_text("alice", "cat-1"),
+        request_text("dave", "cat-2")
+    );
+    stream.write_all(two.as_bytes()).unwrap();
+
+    let docs = read_docs(&mut reader, 8);
+    let mut seqs: Vec<usize> = docs.iter().map(seq_of).collect();
+    seqs.sort_unstable();
+    assert_eq!(seqs, (0..8).collect::<Vec<_>>(), "every frame got exactly one response");
+
+    for doc in &docs {
+        match seq_of(doc) {
+            1 | 4 => {
+                assert_eq!(error_kind(doc), Some("config"), "malformed frame -> config error");
+            }
+            _ => {
+                assert!(error_kind(doc).is_none(), "valid request solved: {doc:?}");
+                assert!(doc.req("makespan").unwrap().as_f64().unwrap() > 0.0);
+            }
+        }
+    }
+
+    // The connection survived all of it: one more request still works.
+    stream.write_all(format!("{}\n", request_text("alice", "after")).as_bytes()).unwrap();
+    let after = read_docs(&mut reader, 1);
+    assert_eq!(seq_of(&after[0]), 8);
+    assert!(error_kind(&after[0]).is_none());
+    // alice solved earlier on this shard, so her session is warm.
+    let serve = after[0].req("diagnostics").unwrap().req("serve").unwrap();
+    assert!(serve.req("shard_hit").unwrap().as_bool().unwrap(), "alice should be warm");
+
+    let stats = server.shutdown();
+    assert_eq!(stats.malformed, 2);
+    assert_eq!(stats.responses, 7, "seven solves; the two malformed frames never reach a shard");
+}
+
+#[test]
+fn zero_queue_depth_sheds_with_retry_hint() {
+    let (server, mut stream, mut reader) = boot(|o| {
+        o.queue_depth = 0;
+        o.retry_after_ms = 17;
+    });
+    for k in 0..5 {
+        let line = request_text("shed-client", &format!("s{k}"));
+        stream.write_all(format!("{line}\n").as_bytes()).unwrap();
+    }
+    let docs = read_docs(&mut reader, 5);
+    for doc in &docs {
+        assert_eq!(error_kind(doc), Some("overloaded"));
+        assert_eq!(doc.req("retry_after_ms").unwrap().as_usize().unwrap(), 17);
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.shed, 5);
+    assert_eq!(stats.responses, 0);
+}
+
+#[test]
+fn tiny_budget_evicts_and_revisits_come_back_cold() {
+    // One worker, one shard: every client lands on the same shard and
+    // the eviction order is deterministic LRU.
+    let (server, mut stream, mut reader) = boot(|o| {
+        o.workers = 1;
+        o.shards = 1;
+        o.warm_budget_bytes = 1; // evict down to a single session
+    });
+
+    // Eight distinct clients in a row: each new session pushes the
+    // previous one over the budget.
+    for k in 0..8 {
+        let line = request_text(&format!("tenant-{k}"), &format!("t{k}"));
+        stream.write_all(format!("{line}\n").as_bytes()).unwrap();
+    }
+    let docs = read_docs(&mut reader, 8);
+    let last = &docs[7];
+    let serve = last.req("diagnostics").unwrap().req("serve").unwrap();
+    assert!(serve.req("evictions").unwrap().as_f64().unwrap() >= 6.0, "LRU evictions happened");
+    assert!(serve.req("resident").unwrap().as_usize().unwrap() <= 2, "budget holds");
+
+    // tenant-0 was evicted long ago: revisiting it is a shard miss.
+    let line = request_text("tenant-0", "revisit");
+    stream.write_all(format!("{line}\n").as_bytes()).unwrap();
+    let doc = &read_docs(&mut reader, 1)[0];
+    let serve = doc.req("diagnostics").unwrap().req("serve").unwrap();
+    assert!(!serve.req("shard_hit").unwrap().as_bool().unwrap(), "evicted client is cold");
+
+    let stats = server.shutdown();
+    assert!(stats.evictions >= 6);
+    assert_eq!(stats.shard_hits, 0);
+    assert_eq!(stats.shard_misses, 9);
+}
+
+#[test]
+fn graceful_shutdown_answers_every_admitted_request() {
+    let (server, mut stream, mut reader) = boot(|_| {});
+    for k in 0..6 {
+        let line = request_text("drain-client", &format!("d{k}"));
+        stream.write_all(format!("{line}\n").as_bytes()).unwrap();
+    }
+    // Read every response *before* shutdown so all six were admitted.
+    let docs = read_docs(&mut reader, 6);
+    assert!(docs.iter().all(|d| error_kind(d).is_none()));
+
+    let stats = server.shutdown();
+    assert_eq!(stats.requests, 6);
+    assert_eq!(stats.responses, 6);
+    assert_eq!(stats.shed, 0);
+
+    // The drained server's socket is gone: the read side sees EOF.
+    let mut line = String::new();
+    let eof = reader.read_line(&mut line);
+    assert!(matches!(eof, Ok(0)), "connection closed after drain, got {eof:?} {line:?}");
+}

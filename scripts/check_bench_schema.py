@@ -11,11 +11,18 @@ Two layers, both fatal on failure:
    NaN/Infinity — which Python's json module would happily accept —
    are rejected too.
 
-2. Gates (BENCH_hypersparse.json only): the deterministic regression
-   guards over the measured cells — the sparse warm sweep against the
-   dense baseline cell, factor storage against the dense 2m^2
-   equivalent, and the Gilbert-Peierls DFS work counter against the
-   column-sweep scan on the same solve.
+2. Gates, dispatched on the document's "group":
+   - hypersparse: the deterministic regression guards over the
+     measured cells — the sparse warm sweep against the dense baseline
+     cell, factor storage against the dense 2m^2 equivalent, and the
+     Gilbert-Peierls DFS work counter against the column-sweep scan on
+     the same solve.
+   - serve: the serving-tier load-harness guards — sustained
+     throughput positive with ordered finite latency percentiles, a
+     warm-shard hit rate above zero under client-keyed load, shed rate
+     below 100%; 2x overload must fast-reject (shed rate > 0) while
+     the accepted requests keep a finite p99; the 64-client probe must
+     force LRU evictions.
 
 Exit status is non-zero on the first violation.
 """
@@ -127,6 +134,51 @@ def gate_hypersparse(doc, name):
           f"vs bg {bg['sweep_ms']:.2f}ms")
 
 
+# Cells every phase object in a BENCH_serve.json must carry.
+SERVE_PHASE_KEYS = {
+    "offered", "accepted", "shed", "errors", "lost", "wall_s", "req_s",
+    "shed_rate", "p50_ms", "p99_ms", "p999_ms", "warm_shard_hit_rate",
+    "evictions_seen", "max_resident",
+}
+SERVE_PHASES = {"calibrate", "sustained", "overload", "eviction_probe"}
+
+
+def gate_serve(doc, name):
+    for phase in SERVE_PHASES:
+        entry = doc.get(phase)
+        if not entry:
+            fail(f"{name}: missing phase `{phase}`")
+        require_keys(entry, SERVE_PHASE_KEYS, f"{name}: {phase}")
+        if entry["lost"] != 0:
+            fail(f"{name}: {phase}: {entry['lost']} requests never got a response line")
+
+    sus = doc["sustained"]
+    if sus["req_s"] <= 0:
+        fail(f"{name}: sustained throughput is {sus['req_s']} req/s")
+    if not (0 < sus["p50_ms"] <= sus["p99_ms"] <= sus["p999_ms"]):
+        fail(f"{name}: sustained latency percentiles not ordered/positive: "
+             f"p50 {sus['p50_ms']}, p99 {sus['p99_ms']}, p999 {sus['p999_ms']}")
+    if sus["warm_shard_hit_rate"] <= 0:
+        fail(f"{name}: client-keyed sustained load never hit a warm shard")
+    if sus["shed_rate"] >= 1.0:
+        fail(f"{name}: sustained load was entirely shed")
+
+    over = doc["overload"]
+    if over["shed"] <= 0:
+        fail(f"{name}: 2x overload shed nothing — admission control inert")
+    if over["accepted"] <= 0 or over.get("accepted_p99_ms", 0) <= 0:
+        fail(f"{name}: 2x overload starved every accepted request")
+
+    probe = doc["eviction_probe"]
+    if probe["evictions_seen"] <= 0:
+        fail(f"{name}: eviction probe forced no LRU evictions")
+
+    print(f"  gate ok: sustained {sus['req_s']:.0f} req/s "
+          f"(p99 {sus['p99_ms']:.2f}ms, warm hits {sus['warm_shard_hit_rate']:.0%}); "
+          f"overload shed {over['shed_rate']:.0%} with accepted p99 "
+          f"{over['accepted_p99_ms']:.2f}ms; probe evicted {probe['evictions_seen']}")
+
+
 def reject_nonfinite(token):
     fail(f"non-finite literal `{token}` in document")
 
@@ -143,6 +195,8 @@ def main(paths):
         check_no_null(doc, path)
         if doc.get("group") == "hypersparse":
             gate_hypersparse(doc, path)
+        if doc.get("group") == "serve":
+            gate_serve(doc, path)
         print(f"check_bench_schema: {path}: ok")
 
 
