@@ -1,0 +1,224 @@
+//! Bench: the component-based cluster replay engine.
+//!
+//! Three sections:
+//!
+//! - **engine cells** — synthetic topologies at m = 100 / 1 000 /
+//!   10 000 processors ([`dlt::sim::replay::synthetic_scale`]),
+//!   jitter-free Schedule-gated replay. The stamped makespan must be
+//!   reproduced *bit-for-bit* (`rel_gap == 0.0` exactly — the
+//!   determinism contract, not a tolerance), and events/s is the
+//!   throughput story for the 10k-scale acceptance bar.
+//! - **replay overhead** — the legacy fixed-function replayer vs the
+//!   component engine in greedy (`Gate::Asap`) mode on the same
+//!   solved anchor: what the component indirection costs.
+//! - **fault sweep** — one growing processor outage injected into a
+//!   gated replay; the simulated makespan must be non-decreasing in
+//!   the outage duration (injection monotonicity gate).
+//!
+//! With `DLT_BENCH_JSON_DIR=dir` the results land in
+//! `dir/BENCH_sim.json`; `DLT_BENCH_FAST=1` trims repetitions only —
+//! the m grid stays, the schema gate needs all three scales.
+
+use dlt::config::json::Json;
+use dlt::dlt::no_frontend::NfeOptions;
+use dlt::dlt::schedule::TimingModel;
+use dlt::model::SystemSpec;
+use dlt::pipeline;
+use dlt::sim::cluster::FaultSpec;
+use dlt::sim::replay::{replay, synthetic_scale, Gate, ReplayOptions};
+use dlt::sim::{simulate, SimOptions};
+use std::time::Instant;
+
+fn base_spec() -> SystemSpec {
+    SystemSpec::builder()
+        .source(0.2, 0.0)
+        .source(0.3, 2.0)
+        .processors(&[2.0, 3.0, 4.0])
+        .job(100.0)
+        .build()
+        .unwrap()
+}
+
+struct EngineCell {
+    m: usize,
+    n: usize,
+    events: u64,
+    max_queue_depth: usize,
+    wall_ns: f64,
+    events_per_sec: f64,
+    makespan: f64,
+    rel_gap: f64,
+}
+
+fn engine_cell(base: &SystemSpec, m: usize, reps: usize) -> EngineCell {
+    let (spec, sched) =
+        synthetic_scale(base, m, TimingModel::NoFrontEnd).expect("synthetic topology");
+    let opts = ReplayOptions::default();
+    let mut best_ns = f64::INFINITY;
+    let mut last = None;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let rep = replay(&spec, &sched, &opts).expect("gated replay");
+        best_ns = best_ns.min(t0.elapsed().as_nanos() as f64);
+        last = Some(rep);
+    }
+    let rep = last.expect("at least one rep");
+    // Determinism contract, not a tolerance: the stamped makespan is
+    // reproduced bit-for-bit by a jitter-free fault-free replay.
+    assert!(
+        rep.rel_gap == 0.0 && rep.violated_constraints.is_empty(),
+        "m={m}: jitter-free replay drifted (gap {:+.3e}, {} violations)",
+        rep.rel_gap,
+        rep.violated_constraints.len()
+    );
+    EngineCell {
+        m,
+        n: spec.n(),
+        events: rep.events,
+        max_queue_depth: rep.max_queue_depth,
+        wall_ns: best_ns,
+        events_per_sec: rep.events as f64 / (best_ns * 1e-9),
+        makespan: rep.simulated_makespan,
+        rel_gap: rep.rel_gap,
+    }
+}
+
+fn main() {
+    let fast = std::env::var("DLT_BENCH_FAST").is_ok();
+    let cell_reps = if fast { 1 } else { 3 };
+    let overhead_reps = if fast { 5 } else { 50 };
+    let base = base_spec();
+
+    println!("== bench group: sim (cluster replay engine) ==");
+
+    // --- engine cells ---
+    let cells: Vec<EngineCell> =
+        [100usize, 1000, 10_000].iter().map(|&m| engine_cell(&base, m, cell_reps)).collect();
+    println!(
+        "{:<10} {:>8} {:>10} {:>8} {:>12} {:>14} {:>12}",
+        "cell", "events", "wall", "queue", "events/s", "makespan", "rel_gap"
+    );
+    for c in &cells {
+        println!(
+            "m={:<8} {:>8} {:>8.2}ms {:>8} {:>10.2}M/s {:>14.6} {:>12.1e}",
+            c.m,
+            c.events,
+            c.wall_ns * 1e-6,
+            c.max_queue_depth,
+            c.events_per_sec / 1e6,
+            c.makespan,
+            c.rel_gap
+        );
+    }
+
+    // --- replay overhead: legacy engine vs component engine ---
+    let spec = base_spec();
+    let sched = pipeline::solve(&NfeOptions::default(), &spec).expect("anchor solve");
+    let legacy_opts = SimOptions { model: TimingModel::NoFrontEnd, ..SimOptions::default() };
+    let t0 = Instant::now();
+    for _ in 0..overhead_reps {
+        simulate(&spec, &sched.beta, &legacy_opts);
+    }
+    let legacy_ns = t0.elapsed().as_nanos() as f64 / overhead_reps as f64;
+    let asap_opts = ReplayOptions { gate: Gate::Asap, ..ReplayOptions::default() };
+    let t0 = Instant::now();
+    for _ in 0..overhead_reps {
+        replay(&spec, &sched, &asap_opts).expect("asap replay");
+    }
+    let cluster_ns = t0.elapsed().as_nanos() as f64 / overhead_reps as f64;
+    let ratio = cluster_ns / legacy_ns.max(1.0);
+    let overhead_note = format!(
+        "replay overhead (nfe 2x3 anchor): legacy {legacy_ns:.0}ns vs cluster \
+         {cluster_ns:.0}ns ({ratio:.2}x)"
+    );
+    println!("   note: {overhead_note}");
+
+    // --- fault sweep: outage duration vs simulated makespan ---
+    let durations = [0.0f64, 0.25, 0.5, 1.0, 2.0];
+    let fault_at = sched.makespan * 0.25;
+    let mut makespans = Vec::new();
+    for &d in &durations {
+        let mut opts = ReplayOptions::default();
+        if d > 0.0 {
+            opts.plan.faults.push(FaultSpec {
+                processor: 0,
+                at: fault_at,
+                duration: Some(d),
+                redo: true,
+                blocks_recv: true,
+            });
+        }
+        let rep = replay(&spec, &sched, &opts).expect("fault replay");
+        makespans.push(rep.simulated_makespan);
+    }
+    for w in makespans.windows(2) {
+        assert!(
+            w[1] >= w[0],
+            "fault sweep regressed: longer outage finished earlier ({} < {})",
+            w[1],
+            w[0]
+        );
+    }
+    let sweep_note = format!(
+        "fault sweep (outage at t={fault_at:.3}): makespans {:?} non-decreasing",
+        makespans.iter().map(|x| (x * 1e3).round() / 1e3).collect::<Vec<f64>>()
+    );
+    println!("   note: {sweep_note}");
+
+    // --- JSON artifact ---
+    let cell_json: Vec<Json> = cells
+        .iter()
+        .map(|c| {
+            Json::Object(vec![
+                ("m".into(), Json::Num(c.m as f64)),
+                ("n".into(), Json::Num(c.n as f64)),
+                ("events".into(), Json::Num(c.events as f64)),
+                ("max_queue_depth".into(), Json::Num(c.max_queue_depth as f64)),
+                ("wall_ns".into(), Json::Num(c.wall_ns)),
+                ("events_per_sec".into(), Json::Num(c.events_per_sec)),
+                ("makespan".into(), Json::Num(c.makespan)),
+                ("rel_gap".into(), Json::Num(c.rel_gap)),
+            ])
+        })
+        .collect();
+    let notes = Json::Array(vec![Json::Str(overhead_note), Json::Str(sweep_note)]);
+    let doc = Json::Object(vec![
+        ("group".into(), Json::Str("sim".into())),
+        (
+            "instance".into(),
+            Json::Str(format!(
+                "synthetic nfe topologies from a 2-source anchor, {cell_reps} rep(s) per cell"
+            )),
+        ),
+        ("engine_cells".into(), Json::Array(cell_json)),
+        (
+            "replay_overhead".into(),
+            Json::Object(vec![
+                ("legacy_ns".into(), Json::Num(legacy_ns)),
+                ("cluster_ns".into(), Json::Num(cluster_ns)),
+                ("ratio".into(), Json::Num(ratio)),
+            ]),
+        ),
+        (
+            "fault_sweep".into(),
+            Json::Object(vec![
+                ("fault_at".into(), Json::Num(fault_at)),
+                (
+                    "durations".into(),
+                    Json::Array(durations.iter().map(|&d| Json::Num(d)).collect()),
+                ),
+                (
+                    "makespans".into(),
+                    Json::Array(makespans.iter().map(|&t| Json::Num(t)).collect()),
+                ),
+            ]),
+        ),
+        ("notes".into(), notes),
+    ]);
+    if let Ok(dir) = std::env::var("DLT_BENCH_JSON_DIR") {
+        std::fs::create_dir_all(&dir).expect("create bench json dir");
+        let path = std::path::Path::new(&dir).join("BENCH_sim.json");
+        std::fs::write(&path, doc.to_string_pretty()).expect("write BENCH_sim.json");
+        println!("   wrote {}", path.display());
+    }
+}

@@ -61,6 +61,6 @@ pub use crate::lp::{Factorization, Pricing};
 pub use crate::pipeline::Backend;
 pub use session::{solve_one, Session, Solver};
 pub use wire::{
-    ApiError, Diagnostics, Family, RequestOptions, ServeDiagnostics, SolveRequest, SolveResponse,
-    FAMILIES,
+    sim_to_json, ApiError, Diagnostics, Family, RequestOptions, ServeDiagnostics, SolveRequest,
+    SolveResponse, FAMILIES,
 };

@@ -315,9 +315,34 @@ impl Session {
                 presolve: solved.stats,
                 pdhg: solved.pdhg,
                 serve: None,
+                sim: None,
                 solve_ns,
             },
         })
+    }
+
+    /// Solve one request, then replay the resulting schedule through
+    /// the cluster engine ([`crate::sim::replay`]) and attach the
+    /// divergence report as `diagnostics.sim`. Frontend and
+    /// no-frontend families only — the concurrent and multi-job
+    /// extensions have no sequential replay semantics.
+    pub fn solve_simulated(
+        &mut self,
+        req: &SolveRequest,
+        ropts: &crate::sim::replay::ReplayOptions,
+    ) -> std::result::Result<SolveResponse, ApiError> {
+        if !matches!(req.family, Family::Frontend | Family::NoFrontend) {
+            self.solves += 1;
+            return Err(ApiError::from(crate::error::Error::Usage(format!(
+                "simulate supports frontend|no_frontend, not {}",
+                req.family.as_str()
+            ))));
+        }
+        let mut resp = self.solve(req)?;
+        let report = crate::sim::replay::replay(&req.spec, &resp.schedule(), ropts)
+            .map_err(ApiError::from)?;
+        resp.diagnostics.sim = Some(report);
+        Ok(resp)
     }
 
     /// Solve a heterogeneous request vector in parallel: the requests
@@ -515,6 +540,35 @@ mod tests {
         req.options.proc_ready = Some(vec![1.0, 2.0]); // spec has 5 processors
         let err = Solver::new().build().solve(&req).unwrap_err();
         assert_eq!(err.kind, "config", "{err}");
+    }
+
+    #[test]
+    fn solve_simulated_attaches_divergence() {
+        let mut session = Solver::new().build();
+        let nfe_spec = SystemSpec::builder()
+            .source(0.2, 0.0)
+            .source(0.4, 2.0)
+            .processors(&[2.0, 3.0, 4.0])
+            .job(100.0)
+            .build()
+            .unwrap();
+        let resp = session
+            .solve_simulated(
+                &SolveRequest::new(Family::NoFrontend, nfe_spec),
+                &crate::sim::replay::ReplayOptions::default(),
+            )
+            .unwrap();
+        let sim = resp.diagnostics.sim.expect("divergence report attached");
+        assert!(sim.rel_gap.abs() <= 1e-9, "gap {}", sim.rel_gap);
+        assert!(sim.violated_constraints.is_empty(), "{:?}", sim.violated_constraints);
+        // Families without sequential replay semantics error cleanly.
+        let err = session
+            .solve_simulated(
+                &SolveRequest::new(Family::Concurrent, spec()),
+                &crate::sim::replay::ReplayOptions::default(),
+            )
+            .unwrap_err();
+        assert_eq!(err.kind, "usage", "{err}");
     }
 
     #[test]

@@ -19,6 +19,7 @@ use crate::lp::presolve::PresolveStats;
 use crate::lp::{Factorization, Pricing};
 use crate::model::SystemSpec;
 use crate::pipeline::{Backend, PdhgDiagnostics};
+use crate::sim::replay::DivergenceReport;
 
 /// Which scheduling formulation a request asks for.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -365,6 +366,10 @@ pub struct Diagnostics {
     pub pdhg: Option<PdhgDiagnostics>,
     /// Serving-tier routing details (`dlt serve` responses only).
     pub serve: Option<ServeDiagnostics>,
+    /// Predicted-vs-simulated divergence from a cluster-engine replay
+    /// of this schedule (`dlt simulate` / `Session::solve_simulated`
+    /// only; the replay's trace is not serialized).
+    pub sim: Option<DivergenceReport>,
     /// Wall-clock nanoseconds the solve took inside the session.
     pub solve_ns: u64,
 }
@@ -383,6 +388,27 @@ pub struct ServeDiagnostics {
     pub evictions: u64,
     /// Warm sessions resident on the shard after this solve.
     pub resident: usize,
+}
+
+/// Encode a [`DivergenceReport`] as the `diagnostics.sim` wire object
+/// (also used standalone by `dlt simulate --json`; the replay's trace
+/// is deliberately not serialized).
+pub fn sim_to_json(s: &DivergenceReport) -> Json {
+    let nums = |xs: &[f64]| Json::Array(xs.iter().map(|&x| Json::Num(x)).collect());
+    Json::Object(vec![
+        ("predicted_makespan".into(), Json::Num(s.predicted_makespan)),
+        ("simulated_makespan".into(), Json::Num(s.simulated_makespan)),
+        ("rel_gap".into(), Json::Num(s.rel_gap)),
+        ("per_processor_slack".into(), nums(&s.per_processor_slack)),
+        (
+            "violated_constraints".into(),
+            Json::Array(s.violated_constraints.iter().map(|c| Json::Str(c.clone())).collect()),
+        ),
+        ("events".into(), Json::Num(s.events as f64)),
+        ("max_queue_depth".into(), Json::Num(s.max_queue_depth as f64)),
+        ("faults_injected".into(), Json::Num(s.faults_injected as f64)),
+        ("preemptions".into(), Json::Num(s.preemptions as f64)),
+    ])
 }
 
 /// One solve response: the optimum, the full timed schedule, and
@@ -504,6 +530,9 @@ impl SolveResponse {
                 ]),
             ));
         }
+        if let Some(s) = &d.sim {
+            diag.push(("sim".into(), sim_to_json(s)));
+        }
         diag.push(("solve_ns".into(), Json::Num(d.solve_ns as f64)));
 
         let mut kv: Vec<(String, Json)> = Vec::new();
@@ -554,6 +583,26 @@ impl SolveResponse {
             }),
             None => None,
         };
+        let sim = match d.get("sim") {
+            Some(s) => Some(DivergenceReport {
+                predicted_makespan: s.req("predicted_makespan")?.as_f64()?,
+                simulated_makespan: s.req("simulated_makespan")?.as_f64()?,
+                rel_gap: s.req("rel_gap")?.as_f64()?,
+                per_processor_slack: s.req("per_processor_slack")?.as_f64_vec()?,
+                violated_constraints: s
+                    .req("violated_constraints")?
+                    .as_array()?
+                    .iter()
+                    .map(|c| Ok(c.as_str()?.to_string()))
+                    .collect::<Result<Vec<String>>>()?,
+                events: s.req("events")?.as_f64()? as u64,
+                max_queue_depth: s.req("max_queue_depth")?.as_usize()?,
+                faults_injected: s.req("faults_injected")?.as_usize()?,
+                preemptions: s.req("preemptions")?.as_usize()?,
+                trace: None,
+            }),
+            None => None,
+        };
         let fact_s = d.req("factorization")?.as_str()?;
         let pricing_s = d.req("pricing")?.as_str()?;
         let diagnostics = Diagnostics {
@@ -583,6 +632,7 @@ impl SolveResponse {
             },
             pdhg,
             serve,
+            sim,
             solve_ns: d.req("solve_ns")?.as_f64()? as u64,
         };
         let backend_s = v.req("backend")?.as_str()?;

@@ -13,7 +13,8 @@ pub struct Args {
 }
 
 /// Flags that take no value.
-const BOOL_FLAGS: &[&str] = &["trace", "real-compute", "csv", "quiet", "cold", "steal", "pretty"];
+const BOOL_FLAGS: &[&str] =
+    &["trace", "real-compute", "csv", "quiet", "cold", "steal", "pretty", "json", "asap"];
 
 impl Args {
     /// Parse argv (without the binary name).

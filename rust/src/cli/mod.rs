@@ -8,7 +8,10 @@
 //! dlt batch     [--requests FILE|-] [--backend revised_simplex|dense_tableau|pdhg]
 //!               [--factorization NAME] [--pricing NAME]
 //!               [--threads T] [--pretty]
-//! dlt simulate  --spec spec.json [--model fe|nfe] [--jitter 0.1] [--seed 7] [--trace]
+//! dlt simulate  --spec spec.json [--model fe|nfe] [--engine cluster|legacy]
+//!               [--jitter 0.1] [--seed 7] [--trace] [--asap] [--json]
+//!               [--fail p3@t=1.5+2] [--preempt p2@4+1.5!redo]
+//!               [--link-profile s1@10+5*0.25] [--rand-faults K] [--scale M]
 //! dlt cluster   --spec spec.json [--model fe|nfe] [--time-scale 0.002] [--real-compute]
 //! dlt tradeoff  --spec spec.json [--budget-cost X] [--budget-time Y] [--gradient 0.06]
 //! dlt sweep     --spec spec.json [--param job,procs,release,links] [--from A --to B --points N]
@@ -62,7 +65,9 @@ SUBCOMMANDS
   solve        solve one scheduling instance, print the beta table
   batch        solve a JSON array of api requests (file or stdin),
                emit a JSON array of responses — the serving front door
-  simulate     run the discrete-event simulator on the solved schedule
+  simulate     replay the solved schedule on a simulator engine
+               (component cluster engine with fault injection, or the
+               legacy fixed-function replayer)
   cluster      execute the schedule on the threaded cluster runtime
   tradeoff     §6 trade-off advisor (cost/time budgets)
   sweep        solve a scenario grid in parallel with warm-started LPs
@@ -93,6 +98,24 @@ BATCH FLAGS
   --pretty           pretty-print the response array
   (--factorization / --pricing set the session defaults; per-request
    "options" override them)
+
+SIMULATE FLAGS
+  --engine E         cluster (component engine, default) | legacy
+  --fail LIST        processor outages, comma-separated: p3@t=1.5[+DUR]
+                     — in-flight work is lost and redone after restart
+  --preempt LIST     compute preemptions: p2@4+1.5[!redo] — compute
+                     pauses and resumes (redoes with !redo); receives
+                     keep flowing during the window
+  --link-profile L   time-varying links: s1@10+5*0.25 scales source 1's
+                     outgoing capacity by 0.25 for 5 time units
+  --rand-faults K    additionally inject K seeded-random outages
+  --scale M          synthetic M-processor topology stamped from the
+                     spec's sources (skips the LP solve)
+  --asap             greedy replay: ignore the LP send timeline
+  --jitter X         multiplicative link + compute noise amplitude
+  --json             print the divergence report as JSON
+  --trace            print the event trace (cluster: with fault and
+                     preemption markers)
 
 SWEEP FLAGS
   --param LIST       comma-separated axes, crossed into one grid:
@@ -192,6 +215,38 @@ mod tests {
             "sweep --spec {path} --param release --release-from -1"
         )))
         .is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn simulate_cluster_engine_flags() {
+        let path = "/tmp/dlt_cli_sim_spec.json";
+        std::fs::write(
+            path,
+            r#"{"sources":[{"g":0.2},{"g":0.4,"release":1}],
+                "processors":[{"a":2},{"a":3}],"job":10}"#,
+        )
+        .unwrap();
+        // Gated replay of the solved LP, both models, plain and JSON.
+        run(&argv(&format!("simulate --spec {path}"))).unwrap();
+        run(&argv(&format!("simulate --spec {path} --model nfe --json"))).unwrap();
+        // Injection grammar: outage, preemption, link window, random.
+        run(&argv(&format!("simulate --spec {path} --fail p1@0.5+1.0 --trace"))).unwrap();
+        run(&argv(&format!("simulate --spec {path} --preempt p2@t=1+0.5!redo --json"))).unwrap();
+        run(&argv(&format!(
+            "simulate --spec {path} --model nfe --link-profile s1@0+1*0.5 --rand-faults 1 --seed 3"
+        )))
+        .unwrap();
+        // Greedy (ASAP) replay with jitter, and the legacy engine.
+        run(&argv(&format!("simulate --spec {path} --asap --jitter 0.05 --seed 7"))).unwrap();
+        run(&argv(&format!("simulate --spec {path} --engine legacy --jitter 0.05"))).unwrap();
+        // Synthetic scale topology skips the solve entirely.
+        run(&argv(&format!("simulate --spec {path} --scale 50 --json"))).unwrap();
+        // Bad grammar is a usage error, never a panic.
+        assert!(run(&argv(&format!("simulate --spec {path} --engine quantum"))).is_err());
+        assert!(run(&argv(&format!("simulate --spec {path} --fail junk"))).is_err());
+        assert!(run(&argv(&format!("simulate --spec {path} --preempt p1@1.0"))).is_err());
+        assert!(run(&argv(&format!("simulate --spec {path} --link-profile s1@0+1"))).is_err());
         std::fs::remove_file(path).ok();
     }
 

@@ -42,8 +42,11 @@
 //!   thread-per-core workers, client-keyed session shards with LRU
 //!   warm-cache eviction, bounded admission queues with overload
 //!   fast-reject, and streamed per-item responses (`dlt serve`).
-//! - [`sim`] — a deterministic discrete-event simulator that *executes*
-//!   schedules and independently measures the realized makespan.
+//! - [`sim`] — deterministic discrete-event simulation: the
+//!   component-based cluster engine (faults, preemption, time-varying
+//!   links, zero-alloc at 10k-processor scale) plus the
+//!   predicted-vs-simulated divergence oracle ([`sim::replay`]), with
+//!   the legacy engine kept as a parity oracle.
 //! - [`cluster`] — a threaded in-process cluster runtime whose
 //!   processors perform real compute via AOT-compiled XLA artifacts.
 //! - [`runtime`], [`pdhg`] — the PJRT artifact runtime and the

@@ -1,0 +1,408 @@
+//! The shared [`World`] and the three component kinds.
+//!
+//! All coordination state lives in the `World` (flat, pre-sized
+//! arrays); the components themselves carry only their tiny private
+//! state machines. A component's `tick` is an idempotent re-evaluation
+//! of "what can I do now?" — duplicate or same-time ticks are harmless
+//! no-ops — which is what makes the engine's stale-entry scheduling
+//! protocol safe.
+//!
+//! Timing semantics are the paper's sequential-distribution rules,
+//! kept operation-for-operation identical to the legacy
+//! [`crate::sim::engine`] so that a jitter-free, fault-free run in
+//! [`super::super::replay::Gate::Asap`] mode is bit-compatible with
+//! the legacy simulator:
+//!
+//! - [`Source`] `i` sends to `P_1..P_M` in order; a send starts at
+//!   `max(source free, processor receive-free)` — lower-bounded by the
+//!   LP's `TS_{i,j}` when send gates are installed.
+//! - [`Link`] `i` carries one transfer at a time; its duration is
+//!   `β G_i · jitter` integrated through the link's capacity
+//!   [`Profile`] and paused across the destination's receive-blocking
+//!   windows.
+//! - [`Processor`] `j` consumes arrivals in source order straight from
+//!   the world arrays (no per-arrival queue): with front-ends it
+//!   streams fractions through a compute pipeline; without, it starts
+//!   after the last byte arrives. Compute chunks are evaluated through
+//!   the processor's outage windows (`redo` windows discard the
+//!   in-flight chunk).
+
+use crate::dlt::schedule::TimingModel;
+use crate::model::SystemSpec;
+use crate::sim::trace::{Trace, TraceKind};
+
+use super::profile::{finish_with_windows, BlockWindow, Profile};
+use super::queue::Time;
+use super::{Component, Ctx};
+
+/// Shared simulation state: static parameters, injection policies and
+/// the flat dynamic arrays every component reads and writes.
+#[derive(Debug)]
+pub struct World {
+    /// Number of sources `N`.
+    pub n: usize,
+    /// Number of processors `M`.
+    pub m: usize,
+    /// Inverse link speeds `G_i`.
+    pub g: Vec<f64>,
+    /// Inverse compute speeds `A_j`.
+    pub a: Vec<f64>,
+    /// Source release times `R_i`.
+    pub release: Vec<f64>,
+    /// Load fractions `β` (row-major `N × M`).
+    pub beta: Vec<f64>,
+    /// Timing model to execute under.
+    pub model: TimingModel,
+    /// Per-cell multiplicative link jitter factors (`N × M`).
+    pub link_factor: Vec<f64>,
+    /// Per-processor multiplicative compute jitter factors.
+    pub comp_factor: Vec<f64>,
+    /// Per-source link capacity profile (time-varying link speed).
+    pub link_profile: Vec<Profile>,
+    /// Per-processor compute-blocking outage windows (sorted, merged).
+    pub compute_windows: Vec<Vec<BlockWindow>>,
+    /// Per-processor receive-blocking outage windows (fail/restart).
+    pub recv_windows: Vec<Vec<BlockWindow>>,
+    /// Optional per-cell lower bounds on send start times (the LP's
+    /// `TS_{i,j}`); `None` runs pure ASAP.
+    pub gate_send: Option<Vec<f64>>,
+    /// Earliest time each source may start its next send.
+    pub src_free_at: Vec<Time>,
+    /// Next processor index each source sends to.
+    pub next_j: Vec<usize>,
+    /// Next source index each processor expects to receive from.
+    pub proc_expect: Vec<usize>,
+    /// Earliest time each processor may start its next receive.
+    pub proc_recv_free_at: Vec<Time>,
+    /// In-flight transfer destination per source link (`None` = idle).
+    pub link_dest: Vec<Option<usize>>,
+    /// Completion time of the in-flight transfer per source link.
+    pub link_done_at: Vec<Time>,
+    /// Realized send start times (`N × M`).
+    pub send_start: Vec<Time>,
+    /// Realized send completion times (`N × M`).
+    pub send_done: Vec<Time>,
+    /// Realized per-processor compute completion times.
+    pub compute_done: Vec<Time>,
+    /// Optional trace tap ([`crate::sim::trace`]); tracing allocates,
+    /// leave `None` for allocation-audited runs.
+    pub trace: Option<Trace>,
+    /// Shared constant-capacity profile for compute evaluation.
+    nominal: Profile,
+}
+
+impl World {
+    /// Fresh world for `spec` executing `beta` under `model`, with
+    /// nominal factors and no injections; mutate the policy fields
+    /// before building the engine.
+    pub fn new(spec: &SystemSpec, beta: &[f64], model: TimingModel) -> World {
+        let n = spec.n();
+        let m = spec.m();
+        assert_eq!(beta.len(), n * m, "beta shape mismatch");
+        World {
+            n,
+            m,
+            g: spec.g(),
+            a: spec.a(),
+            release: spec.releases(),
+            beta: beta.to_vec(),
+            model,
+            link_factor: vec![1.0; n * m],
+            comp_factor: vec![1.0; m],
+            link_profile: vec![Profile::nominal(); n],
+            compute_windows: vec![Vec::new(); m],
+            recv_windows: vec![Vec::new(); m],
+            gate_send: None,
+            src_free_at: spec.releases(),
+            next_j: vec![0; n],
+            proc_expect: vec![0; m],
+            proc_recv_free_at: vec![0.0; m],
+            link_dest: vec![None; n],
+            link_done_at: vec![0.0; n],
+            send_start: vec![0.0; n * m],
+            send_done: vec![0.0; n * m],
+            compute_done: vec![0.0; m],
+            trace: None,
+            nominal: Profile::nominal(),
+        }
+    }
+
+    /// Total component count (`N` sources + `N` links + `M`
+    /// processors).
+    pub fn component_count(&self) -> usize {
+        2 * self.n + self.m
+    }
+
+    /// Logical id of source `i`.
+    pub fn source_lid(&self, i: usize) -> u32 {
+        i as u32
+    }
+
+    /// Logical id of source `i`'s outgoing link.
+    pub fn link_lid(&self, i: usize) -> u32 {
+        (self.n + i) as u32
+    }
+
+    /// Logical id of processor `j`.
+    pub fn processor_lid(&self, j: usize) -> u32 {
+        (2 * self.n + j) as u32
+    }
+
+    /// Realized makespan: the latest compute completion.
+    pub fn makespan(&self) -> f64 {
+        self.compute_done.iter().fold(0.0f64, |acc, &x| acc.max(x))
+    }
+}
+
+/// Source component: issues this source's sends in processor order.
+#[derive(Debug)]
+pub struct Source {
+    lid: u32,
+    i: usize,
+    want: Option<Time>,
+}
+
+impl Source {
+    /// Source `i` of `world`; first wants to tick at its release time.
+    pub fn new(world: &World, i: usize) -> Source {
+        Source { lid: world.source_lid(i), i, want: Some(world.release[i]) }
+    }
+}
+
+impl Component for Source {
+    fn next_tick(&self) -> Option<Time> {
+        self.want
+    }
+
+    fn tick(&mut self, now: Time, ctx: &mut Ctx) {
+        self.want = None;
+        let i = self.i;
+        let m = ctx.world.m;
+        if ctx.world.link_dest[i].is_some() {
+            return; // mid-send; the link wakes us on completion
+        }
+        let j = ctx.world.next_j[i];
+        if j >= m {
+            return; // all fractions delivered
+        }
+        if ctx.world.proc_expect[j] != i {
+            return; // P_j still receiving an earlier source
+        }
+        let k = i * m + j;
+        let mut start = ctx.world.src_free_at[i].max(ctx.world.proc_recv_free_at[j]);
+        if let Some(gates) = &ctx.world.gate_send {
+            start = start.max(gates[k]);
+        }
+        if start > now {
+            ctx.wake(self.lid, start); // gated into the future
+            return;
+        }
+        let dur = ctx.world.beta[k] * ctx.world.g[i] * ctx.world.link_factor[k];
+        let done = finish_with_windows(
+            &ctx.world.link_profile[i],
+            &ctx.world.recv_windows[j],
+            start,
+            dur,
+        );
+        assert!(done.is_finite(), "transfer (S{}, P{}) never completes", i + 1, j + 1);
+        ctx.world.send_start[k] = start;
+        if let Some(tr) = ctx.world.trace.as_mut() {
+            tr.push(start, TraceKind::SendStart, i, j);
+        }
+        ctx.world.link_dest[i] = Some(j);
+        ctx.world.link_done_at[i] = done;
+        let link = ctx.world.link_lid(i);
+        ctx.wake(link, done);
+    }
+}
+
+/// Link component: completes this source's in-flight transfer and
+/// unblocks whoever was waiting on it.
+#[derive(Debug)]
+pub struct Link {
+    i: usize,
+}
+
+impl Link {
+    /// Source `i`'s outgoing link.
+    pub fn new(i: usize) -> Link {
+        Link { i }
+    }
+}
+
+impl Component for Link {
+    fn next_tick(&self) -> Option<Time> {
+        None // purely wake-driven
+    }
+
+    fn tick(&mut self, now: Time, ctx: &mut Ctx) {
+        let i = self.i;
+        let j = match ctx.world.link_dest[i] {
+            Some(j) => j,
+            None => return,
+        };
+        if ctx.world.link_done_at[i] > now {
+            return; // spurious early tick
+        }
+        let k = i * ctx.world.m + j;
+        ctx.world.send_done[k] = now;
+        if let Some(tr) = ctx.world.trace.as_mut() {
+            tr.push(now, TraceKind::SendComplete, i, j);
+        }
+        ctx.world.src_free_at[i] = now;
+        ctx.world.proc_recv_free_at[j] = now;
+        ctx.world.next_j[i] += 1;
+        ctx.world.proc_expect[j] += 1;
+        ctx.world.link_dest[i] = None;
+        // Unblock: the sender (next fraction), the source now expected
+        // at P_j (it may have been waiting its turn), and P_j itself
+        // (new data to ingest).
+        let src = ctx.world.source_lid(i);
+        ctx.wake(src, now);
+        let expect = ctx.world.proc_expect[j];
+        if expect < ctx.world.n {
+            let waiting = ctx.world.source_lid(expect);
+            ctx.wake(waiting, now);
+        }
+        let proc = ctx.world.processor_lid(j);
+        ctx.wake(proc, now);
+    }
+}
+
+/// Processor component: ingests arrivals in source order and evaluates
+/// its compute timeline through the injected outage windows.
+#[derive(Debug)]
+pub struct Processor {
+    lid: u32,
+    j: usize,
+    started: bool,
+    pipe_end: Time,
+    arrivals_seen: usize,
+    done_at: Option<Time>,
+    finished: bool,
+}
+
+impl Processor {
+    /// Processor `j` of `world`.
+    pub fn new(world: &World, j: usize) -> Processor {
+        Processor {
+            lid: world.processor_lid(j),
+            j,
+            started: false,
+            pipe_end: 0.0,
+            arrivals_seen: 0,
+            done_at: None,
+            finished: false,
+        }
+    }
+}
+
+impl Component for Processor {
+    fn next_tick(&self) -> Option<Time> {
+        None // purely wake-driven
+    }
+
+    fn tick(&mut self, now: Time, ctx: &mut Ctx) {
+        let j = self.j;
+        let n = ctx.world.n;
+        let m = ctx.world.m;
+        // Ingest fractions delivered since the last tick, straight from
+        // the world arrays (no arrival queue to allocate).
+        while self.arrivals_seen < ctx.world.proc_expect[j] {
+            let i = self.arrivals_seen;
+            self.arrivals_seen += 1;
+            let k = i * m + j;
+            if ctx.world.model == TimingModel::FrontEnd {
+                let load = ctx.world.beta[k];
+                if load > 0.0 {
+                    let arrival_began = ctx.world.send_start[k];
+                    if !self.started {
+                        self.started = true;
+                        self.pipe_end = arrival_began;
+                        if let Some(tr) = ctx.world.trace.as_mut() {
+                            tr.push(arrival_began, TraceKind::ComputeStart, usize::MAX, j);
+                        }
+                    }
+                    // Streaming rule: the pipeline resumes at
+                    // max(pipe end, arrival start), burns the chunk
+                    // (suspended across outages), and cannot finish
+                    // before the data finished arriving.
+                    let resume = self.pipe_end.max(arrival_began);
+                    let burn = load * ctx.world.a[j] * ctx.world.comp_factor[j];
+                    let fin = finish_with_windows(
+                        &ctx.world.nominal,
+                        &ctx.world.compute_windows[j],
+                        resume,
+                        burn,
+                    );
+                    self.pipe_end = fin.max(ctx.world.send_done[k]);
+                }
+            }
+            if self.arrivals_seen == n {
+                let done = if ctx.world.model == TimingModel::FrontEnd {
+                    self.pipe_end
+                } else {
+                    // No front-end: all data is here; compute starts now.
+                    let total: f64 = (0..n).map(|s| ctx.world.beta[s * m + j]).sum();
+                    if let Some(tr) = ctx.world.trace.as_mut() {
+                        tr.push(now, TraceKind::ComputeStart, usize::MAX, j);
+                    }
+                    let burn = total * ctx.world.a[j] * ctx.world.comp_factor[j];
+                    finish_with_windows(
+                        &ctx.world.nominal,
+                        &ctx.world.compute_windows[j],
+                        now,
+                        burn,
+                    )
+                };
+                assert!(done.is_finite(), "P{} compute never completes", j + 1);
+                self.done_at = Some(done);
+                ctx.world.compute_done[j] = done;
+                ctx.wake(self.lid, done);
+            }
+        }
+        if let Some(done) = self.done_at {
+            if !self.finished && done <= now {
+                self.finished = true;
+                if let Some(tr) = ctx.world.trace.as_mut() {
+                    tr.push(done, TraceKind::ComputeComplete, usize::MAX, j);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec2x3() -> SystemSpec {
+        SystemSpec::builder()
+            .source(0.2, 0.0)
+            .source(0.2, 5.0)
+            .processors(&[2.0, 3.0, 4.0])
+            .job(100.0)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn world_layout_and_lids() {
+        let spec = spec2x3();
+        let beta = vec![10.0; 6];
+        let w = World::new(&spec, &beta, TimingModel::NoFrontEnd);
+        assert_eq!(w.component_count(), 7);
+        assert_eq!(w.source_lid(1), 1);
+        assert_eq!(w.link_lid(0), 2);
+        assert_eq!(w.processor_lid(2), 6);
+        assert_eq!(w.src_free_at, vec![0.0, 5.0]);
+        assert_eq!(w.makespan(), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "beta shape mismatch")]
+    fn world_rejects_bad_beta_shape() {
+        let spec = spec2x3();
+        World::new(&spec, &[1.0; 5], TimingModel::NoFrontEnd);
+    }
+}

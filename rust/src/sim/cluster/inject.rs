@@ -1,0 +1,412 @@
+//! Injection layer: faults, preemption, time-varying link speed.
+//!
+//! An [`InjectionPlan`] is the declarative description of everything
+//! adverse that happens during a replay. It is built either from CLI
+//! grammar strings (`dlt simulate --fail p3@t=1.5 --preempt
+//! "p2@4+1.5!redo" --link-profile s1@10+5*0.25`) or programmatically,
+//! and is *resolved* against a concrete system just before the run:
+//! random faults are materialized from the seed, default durations are
+//! filled in from the predicted makespan, and overlapping windows are
+//! merged into the sorted per-processor [`BlockWindow`] lists the
+//! components consume.
+//!
+//! Semantics:
+//!
+//! - **Fail/restart** (`--fail`): the processor is down for the window
+//!   — it neither receives nor computes — and the in-flight compute
+//!   chunk is lost and redone from scratch after restart.
+//! - **Preemption** (`--preempt`): the processor loses its CPU but
+//!   keeps its front-end — transfers continue, compute pauses. With
+//!   the `!redo` suffix the preempted chunk is re-requested instead of
+//!   resumed.
+//! - **Link window** (`--link-profile`): a source's outgoing link runs
+//!   at a capacity multiple for a span (`s1@10+5*0.25` = source 1,
+//!   quarter speed for 5 time units starting at t = 10).
+
+use crate::error::{Error, Result};
+use crate::util::rng::{Pcg32, Rng};
+
+use super::profile::{BlockWindow, Profile};
+use super::queue::Time;
+
+/// One injected outage on a processor.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultSpec {
+    /// Target processor (0-based).
+    pub processor: usize,
+    /// Outage start time.
+    pub at: Time,
+    /// Outage length; `None` defaults to ¼ of the predicted makespan
+    /// at resolution time.
+    pub duration: Option<f64>,
+    /// Lose and redo the in-flight compute chunk (fail/restart, or
+    /// preemption with `!redo`).
+    pub redo: bool,
+    /// The outage also blocks data reception (fail/restart; preemption
+    /// leaves the front-end running).
+    pub blocks_recv: bool,
+}
+
+/// A capacity window on one source's outgoing link.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkWindow {
+    /// Source whose link is affected (0-based).
+    pub source: usize,
+    /// Window start time.
+    pub from: Time,
+    /// Window length.
+    pub duration: f64,
+    /// Capacity multiplier inside the window (`0 < factor`).
+    pub factor: f64,
+}
+
+/// Everything adverse injected into one replay.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct InjectionPlan {
+    /// Scheduled outages (fail/restart and preemption).
+    pub faults: Vec<FaultSpec>,
+    /// Link capacity windows.
+    pub link_windows: Vec<LinkWindow>,
+    /// Number of additional seeded-random fail/restart outages to draw
+    /// at resolution time.
+    pub random_faults: usize,
+}
+
+/// An [`InjectionPlan`] resolved against a concrete system: sorted,
+/// merged, per-component window lists ready for the engine.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Resolved {
+    /// Per-processor compute-blocking windows (all outages), sorted
+    /// and non-overlapping.
+    pub compute_windows: Vec<Vec<BlockWindow>>,
+    /// Per-processor receive-blocking windows (fail/restart only).
+    pub recv_windows: Vec<Vec<BlockWindow>>,
+    /// Per-source link capacity profile.
+    pub link_profiles: Vec<Profile>,
+    /// Fail/restart outages materialized (scheduled + random).
+    pub faults_injected: usize,
+    /// Preemption windows materialized.
+    pub preemptions: usize,
+}
+
+fn bad(what: &str, s: &str, want: &str) -> Error {
+    Error::Usage(format!("bad {what} spec '{s}': expected {want}"))
+}
+
+fn parse_f64(tok: &str, what: &str, s: &str, want: &str) -> Result<f64> {
+    let v: f64 = tok.trim().parse().map_err(|_| bad(what, s, want))?;
+    if !v.is_finite() || v < 0.0 {
+        return Err(bad(what, s, want));
+    }
+    Ok(v)
+}
+
+/// Parse a 1-based component index like `p3` / `s1` into 0-based.
+fn parse_index(tok: &str, prefix: char, what: &str, s: &str, want: &str) -> Result<usize> {
+    let rest = tok
+        .trim()
+        .strip_prefix(prefix)
+        .ok_or_else(|| bad(what, s, want))?;
+    let idx: usize = rest.parse().map_err(|_| bad(what, s, want))?;
+    if idx == 0 {
+        return Err(bad(what, s, want));
+    }
+    Ok(idx - 1)
+}
+
+/// Parse the shared `p<J>@[t=]<AT>[+<DUR>]` core of a fault/preempt
+/// spec; returns `(processor, at, duration, rest)` where `rest` is any
+/// trailing text after the duration (e.g. `!redo`).
+fn parse_outage_core<'s>(
+    s: &'s str,
+    what: &str,
+    want: &str,
+) -> Result<(usize, Time, Option<f64>, &'s str)> {
+    let (proc_tok, when) = s.split_once('@').ok_or_else(|| bad(what, s, want))?;
+    let processor = parse_index(proc_tok, 'p', what, s, want)?;
+    let when = when.trim().strip_prefix("t=").unwrap_or(when.trim());
+    let (at_tok, dur_rest) = match when.split_once('+') {
+        Some((a, d)) => (a, Some(d)),
+        None => (when, None),
+    };
+    let at = parse_f64(at_tok, what, s, want)?;
+    let (duration, rest) = match dur_rest {
+        None => (None, ""),
+        Some(d) => {
+            let (dur_tok, rest) = match d.find('!') {
+                Some(k) => (&d[..k], &d[k..]),
+                None => (d, ""),
+            };
+            let dur = parse_f64(dur_tok, what, s, want)?;
+            if dur <= 0.0 {
+                return Err(bad(what, s, want));
+            }
+            (Some(dur), rest)
+        }
+    };
+    Ok((processor, at, duration, rest))
+}
+
+impl FaultSpec {
+    /// Parse a fail/restart spec: `p3@1.5`, `p3@t=1.5`, `p3@t=1.5+2.0`.
+    /// A missing duration defaults to ¼ of the predicted makespan when
+    /// the plan is resolved.
+    pub fn parse_fail(s: &str) -> Result<FaultSpec> {
+        const WANT: &str = "p<J>@[t=]<AT>[+<DURATION>]";
+        let (processor, at, duration, rest) = parse_outage_core(s, "--fail", WANT)?;
+        if !rest.is_empty() {
+            return Err(bad("--fail", s, WANT));
+        }
+        Ok(FaultSpec { processor, at, duration, redo: true, blocks_recv: true })
+    }
+
+    /// Parse a preemption spec: `p2@4+1.5` (resume) or `p2@4+1.5!redo`
+    /// (the chunk is re-requested). The duration is mandatory.
+    pub fn parse_preempt(s: &str) -> Result<FaultSpec> {
+        const WANT: &str = "p<J>@[t=]<AT>+<DURATION>[!redo]";
+        let (processor, at, duration, rest) = parse_outage_core(s, "--preempt", WANT)?;
+        let duration = match duration {
+            Some(d) => Some(d),
+            None => return Err(bad("--preempt", s, WANT)),
+        };
+        let redo = match rest {
+            "" => false,
+            "!redo" => true,
+            _ => return Err(bad("--preempt", s, WANT)),
+        };
+        Ok(FaultSpec { processor, at, duration, redo, blocks_recv: false })
+    }
+}
+
+impl LinkWindow {
+    /// Parse a link capacity window: `s1@10+5*0.25` (source 1 runs at
+    /// ×0.25 capacity for 5 time units starting at t = 10).
+    pub fn parse(s: &str) -> Result<LinkWindow> {
+        const WANT: &str = "s<I>@<FROM>+<DURATION>*<FACTOR>";
+        let what = "--link-profile";
+        let (src_tok, rest) = s.split_once('@').ok_or_else(|| bad(what, s, WANT))?;
+        let source = parse_index(src_tok, 's', what, s, WANT)?;
+        let (from_tok, rest) = rest.split_once('+').ok_or_else(|| bad(what, s, WANT))?;
+        let (dur_tok, factor_tok) = rest.split_once('*').ok_or_else(|| bad(what, s, WANT))?;
+        let from = parse_f64(from_tok, what, s, WANT)?;
+        let duration = parse_f64(dur_tok, what, s, WANT)?;
+        let factor = parse_f64(factor_tok, what, s, WANT)?;
+        if duration <= 0.0 || factor <= 0.0 {
+            return Err(bad(what, s, WANT));
+        }
+        Ok(LinkWindow { source, from, duration, factor })
+    }
+}
+
+/// Parse a comma-separated list with one of the element parsers above.
+pub fn parse_list<T>(s: &str, parse_one: impl Fn(&str) -> Result<T>) -> Result<Vec<T>> {
+    s.split(',')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(parse_one)
+        .collect()
+}
+
+/// Merge possibly-overlapping `(from, to, redo)` windows into a
+/// sorted, non-overlapping list; overlapping windows OR their redo
+/// flags.
+fn merge_windows(mut ws: Vec<BlockWindow>) -> Vec<BlockWindow> {
+    ws.sort_by(|x, y| x.0.partial_cmp(&y.0).unwrap());
+    let mut out: Vec<BlockWindow> = Vec::with_capacity(ws.len());
+    for w in ws {
+        match out.last_mut() {
+            Some(last) if w.0 <= last.1 => {
+                last.1 = last.1.max(w.1);
+                last.2 |= w.2;
+            }
+            _ => out.push(w),
+        }
+    }
+    out
+}
+
+impl InjectionPlan {
+    /// True when the plan injects nothing at all.
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty() && self.link_windows.is_empty() && self.random_faults == 0
+    }
+
+    /// Resolve against a concrete system: materialize `random_faults`
+    /// fail/restart outages from `seed` over `[0, horizon)`, default
+    /// missing fail durations to `horizon / 4`, validate indices, and
+    /// merge everything into per-component window lists.
+    pub fn resolve(&self, n: usize, m: usize, horizon: f64, seed: u64) -> Result<Resolved> {
+        let horizon = if horizon.is_finite() && horizon > 0.0 { horizon } else { 1.0 };
+        let mut faults: Vec<FaultSpec> = self.faults.clone();
+        if self.random_faults > 0 {
+            // Domain-separate the fault stream from everything else
+            // keyed on the same seed.
+            let mut rng = Pcg32::new(seed ^ 0x6661_756C_7472_6E64); // "faulrnd"
+            for _ in 0..self.random_faults {
+                let processor = rng.below(m);
+                let at = rng.f64() * horizon;
+                let duration = (0.05 + 0.20 * rng.f64()) * horizon;
+                faults.push(FaultSpec {
+                    processor,
+                    at,
+                    duration: Some(duration),
+                    redo: true,
+                    blocks_recv: true,
+                });
+            }
+        }
+
+        let mut compute: Vec<Vec<BlockWindow>> = vec![Vec::new(); m];
+        let mut recv: Vec<Vec<BlockWindow>> = vec![Vec::new(); m];
+        let mut faults_injected = 0usize;
+        let mut preemptions = 0usize;
+        for f in &faults {
+            if f.processor >= m {
+                return Err(Error::Usage(format!(
+                    "outage targets p{} but the system has {m} processors",
+                    f.processor + 1
+                )));
+            }
+            let dur = f.duration.unwrap_or(horizon / 4.0);
+            let (from, to) = (f.at, f.at + dur);
+            compute[f.processor].push((from, to, f.redo));
+            if f.blocks_recv {
+                recv[f.processor].push((from, to, false));
+                faults_injected += 1;
+            } else {
+                preemptions += 1;
+            }
+        }
+        let compute_windows: Vec<_> = compute.into_iter().map(merge_windows).collect();
+        let recv_windows: Vec<_> = recv.into_iter().map(merge_windows).collect();
+
+        let mut per_source: Vec<Vec<(f64, f64, f64)>> = vec![Vec::new(); n];
+        for w in &self.link_windows {
+            if w.source >= n {
+                return Err(Error::Usage(format!(
+                    "link window targets s{} but the system has {n} sources",
+                    w.source + 1
+                )));
+            }
+            per_source[w.source].push((w.from, w.from + w.duration, w.factor));
+        }
+        let link_profiles: Vec<Profile> =
+            per_source.iter().map(|ws| Profile::from_windows(ws)).collect();
+
+        Ok(Resolved { compute_windows, recv_windows, link_profiles, faults_injected, preemptions })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fail_grammar() {
+        let f = FaultSpec::parse_fail("p3@1.5").unwrap();
+        assert_eq!(f.processor, 2);
+        assert_eq!(f.at, 1.5);
+        assert_eq!(f.duration, None);
+        assert!(f.redo && f.blocks_recv);
+        let f = FaultSpec::parse_fail("p3@t=1.5+2.0").unwrap();
+        assert_eq!(f.duration, Some(2.0));
+        assert!(FaultSpec::parse_fail("p0@1.0").is_err());
+        assert!(FaultSpec::parse_fail("q3@1.0").is_err());
+        assert!(FaultSpec::parse_fail("p3@").is_err());
+        assert!(FaultSpec::parse_fail("p3@1.0+0.0").is_err());
+        assert!(FaultSpec::parse_fail("p3@1.0+2.0!redo").is_err());
+        assert!(FaultSpec::parse_fail("p3@-1.0").is_err());
+    }
+
+    #[test]
+    fn preempt_grammar() {
+        let f = FaultSpec::parse_preempt("p2@4+1.5").unwrap();
+        assert_eq!((f.processor, f.at, f.duration), (1, 4.0, Some(1.5)));
+        assert!(!f.redo && !f.blocks_recv);
+        let f = FaultSpec::parse_preempt("p2@t=4+1.5!redo").unwrap();
+        assert!(f.redo && !f.blocks_recv);
+        assert!(FaultSpec::parse_preempt("p2@4").is_err(), "duration is mandatory");
+        assert!(FaultSpec::parse_preempt("p2@4+1.5!later").is_err());
+    }
+
+    #[test]
+    fn link_grammar() {
+        let w = LinkWindow::parse("s1@10+5*0.25").unwrap();
+        assert_eq!(w, LinkWindow { source: 0, from: 10.0, duration: 5.0, factor: 0.25 });
+        assert!(LinkWindow::parse("s1@10+5").is_err());
+        assert!(LinkWindow::parse("s1@10+0*0.5").is_err());
+        assert!(LinkWindow::parse("s1@10+5*0").is_err());
+        assert!(LinkWindow::parse("p1@10+5*0.5").is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let fs = parse_list("p1@1+1, p2@2+2", FaultSpec::parse_fail).unwrap();
+        assert_eq!(fs.len(), 2);
+        assert!(parse_list("p1@1+1,junk", FaultSpec::parse_fail).is_err());
+        assert!(parse_list("", FaultSpec::parse_fail).unwrap().is_empty());
+    }
+
+    #[test]
+    fn resolve_merges_and_counts() {
+        let plan = InjectionPlan {
+            faults: vec![
+                FaultSpec::parse_fail("p1@1+2").unwrap(),
+                FaultSpec::parse_preempt("p1@2+3").unwrap(), // overlaps the fail
+                FaultSpec::parse_preempt("p2@1+1").unwrap(),
+            ],
+            link_windows: vec![LinkWindow::parse("s1@0+2*0.5").unwrap()],
+            random_faults: 0,
+        };
+        let r = plan.resolve(2, 3, 10.0, 0).unwrap();
+        assert_eq!(r.faults_injected, 1);
+        assert_eq!(r.preemptions, 2);
+        // p1's fail [1,3) and preempt [2,5) merge to one redo window.
+        assert_eq!(r.compute_windows[0], vec![(1.0, 5.0, true)]);
+        // Only the fail blocks reception.
+        assert_eq!(r.recv_windows[0], vec![(1.0, 3.0, false)]);
+        assert_eq!(r.compute_windows[1], vec![(1.0, 2.0, false)]);
+        assert!(r.recv_windows[1].is_empty());
+        assert_eq!(r.compute_windows[2], vec![]);
+        assert!((r.link_profiles[0].work_between(0.0, 2.0) - 1.0).abs() < 1e-12);
+        assert_eq!(r.link_profiles[1], Profile::nominal());
+    }
+
+    #[test]
+    fn resolve_fills_default_duration_and_randoms() {
+        let plan = InjectionPlan {
+            faults: vec![FaultSpec::parse_fail("p1@2").unwrap()],
+            link_windows: vec![],
+            random_faults: 3,
+        };
+        let r1 = plan.resolve(1, 4, 8.0, 42).unwrap();
+        assert_eq!(r1.faults_injected, 4);
+        // Scheduled fault got the default horizon/4 duration.
+        assert!(r1.compute_windows.iter().flatten().any(|w| *w == (2.0, 4.0, true)));
+        // Same seed, same draw.
+        let r2 = plan.resolve(1, 4, 8.0, 42).unwrap();
+        assert_eq!(r1, r2);
+        let r3 = plan.resolve(1, 4, 8.0, 43).unwrap();
+        assert_ne!(r1, r3);
+        // Randoms land inside the horizon with positive finite length.
+        for ws in &r3.compute_windows {
+            for &(from, to, _) in ws {
+                assert!(from >= 0.0 && to > from && to.is_finite());
+            }
+        }
+    }
+
+    #[test]
+    fn resolve_rejects_out_of_range_targets() {
+        let plan = InjectionPlan {
+            faults: vec![FaultSpec::parse_fail("p5@1+1").unwrap()],
+            ..Default::default()
+        };
+        assert!(plan.resolve(1, 3, 10.0, 0).is_err());
+        let plan = InjectionPlan {
+            link_windows: vec![LinkWindow::parse("s3@0+1*0.5").unwrap()],
+            ..Default::default()
+        };
+        assert!(plan.resolve(2, 3, 10.0, 0).is_err());
+    }
+}

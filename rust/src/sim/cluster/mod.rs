@@ -1,0 +1,334 @@
+//! Component-based discrete-event cluster engine.
+//!
+//! The ROADMAP's simulator rewrite: instead of the legacy
+//! fixed-function replayer ([`crate::sim::engine`], kept as a parity
+//! oracle), the system is modeled as components — [`Source`], [`Link`]
+//! and [`Processor`] — implementing the [`Component`] trait over a
+//! binary min-heap tick queue:
+//!
+//! ```text
+//!            ┌────────────────────────────────────────────┐
+//!            │ ClusterSim                                 │
+//!            │  TickQueue (time, lid, seq)  ── pops ──┐   │
+//!            │  pending[lid] / wake_at[lid]           ▼   │
+//!            │ ┌────────┐   ┌────────┐   ┌───────────────┐│
+//!            │ │Source i│──▶│ Link i │──▶│ Processor j   ││
+//!            │ │ sends  │   │transfer│   │ ingest+compute││
+//!            │ └────────┘   └────────┘   └───────────────┘│
+//!            │       ▲  Ctx::wake(lid, t)  │              │
+//!            │       └─────────────────────┘              │
+//!            │              World (flat shared arrays)    │
+//!            └────────────────────────────────────────────┘
+//! ```
+//!
+//! Determinism contract: ticks are ordered by `(time, logical id,
+//! seq)`, and logical ids are assigned by role (`sources 0..N`, `links
+//! N..2N`, `processors 2N..2N+M`) — never by arena position — so the
+//! run is bit-deterministic under a fixed seed and invariant to the
+//! order components were inserted into the arena (audited by
+//! [`ClusterSim::new_with_arena_order`] in the fuzz tests).
+//!
+//! Scale discipline (the 10k-processor story): components live in a
+//! flat arena, the heap is reserved up front, processors read arrivals
+//! straight from the [`World`] arrays, and a steady-state `run()`
+//! performs **zero** allocations (asserted by a counting-allocator
+//! test) — the same discipline as [`crate::lp::SolverScratch`].
+//!
+//! The scheduling protocol keeps at most one *live* queue entry per
+//! component: `pending[lid]` is the component's currently scheduled
+//! tick (superseded entries are skipped as stale on pop), and
+//! `wake_at[lid]` persists future wake requests so an earlier tick can
+//! never drop them. Component `tick`s are idempotent re-evaluations,
+//! which makes duplicate same-time ticks harmless.
+
+pub mod components;
+pub mod inject;
+pub mod profile;
+pub mod queue;
+
+pub use components::{Link, Processor, Source, World};
+pub use inject::{FaultSpec, InjectionPlan, LinkWindow};
+pub use profile::{finish_with_windows, BlockWindow, Profile};
+pub use queue::{TickQueue, Time};
+
+/// One simulated entity scheduled by the engine.
+pub trait Component {
+    /// The next time this component wants to tick on its own
+    /// initiative (used to seed the queue and to re-arm after each
+    /// tick); `None` for purely wake-driven components.
+    fn next_tick(&self) -> Option<Time>;
+
+    /// React to the clock reaching `now`: inspect and update the
+    /// shared [`World`] through `ctx`, and request future ticks with
+    /// [`Ctx::wake`]. Must be idempotent — the engine may deliver
+    /// duplicate or spurious ticks.
+    fn tick(&mut self, now: Time, ctx: &mut Ctx);
+}
+
+/// What a component sees while ticking: the shared world plus a wake
+/// request buffer the engine drains after the tick.
+#[derive(Debug)]
+pub struct Ctx {
+    /// The shared simulation state.
+    pub world: World,
+    wakes: Vec<(u32, Time)>,
+}
+
+impl Ctx {
+    /// Request that component `lid` ticks (again) at time `t`; times
+    /// in the past are clamped to the current tick time.
+    pub fn wake(&mut self, lid: u32, t: Time) {
+        self.wakes.push((lid, t));
+    }
+}
+
+/// Engine instrumentation counters.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EngineStats {
+    /// Ticks delivered to components.
+    pub events: u64,
+    /// Superseded queue entries skipped on pop.
+    pub stale: u64,
+    /// Ticks delivered per component, indexed by logical id.
+    pub per_component: Vec<u64>,
+    /// Queue-depth high-water mark.
+    pub queue_high_water: usize,
+    /// Total queue pushes.
+    pub pushes: u64,
+}
+
+/// The discrete-event engine: a component arena driven by a
+/// [`TickQueue`].
+pub struct ClusterSim {
+    components: Vec<Box<dyn Component>>,
+    /// Logical id → arena index.
+    arena_of: Vec<usize>,
+    /// Currently scheduled tick per component (`INFINITY` = none).
+    pending: Vec<Time>,
+    /// Earliest outstanding wake request per component.
+    wake_at: Vec<Time>,
+    queue: TickQueue,
+    ctx: Ctx,
+    events: u64,
+    stale: u64,
+    per_component: Vec<u64>,
+    now: Time,
+}
+
+impl std::fmt::Debug for ClusterSim {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ClusterSim")
+            .field("components", &self.components.len())
+            .field("events", &self.events)
+            .field("now", &self.now)
+            .finish_non_exhaustive()
+    }
+}
+
+impl ClusterSim {
+    /// Build the standard arena for `world`: sources, links and
+    /// processors stored in logical-id order.
+    pub fn new(world: World) -> ClusterSim {
+        let order: Vec<usize> = (0..world.component_count()).collect();
+        ClusterSim::new_with_arena_order(world, &order)
+    }
+
+    /// Build the arena in an arbitrary insertion order (`order[p]` is
+    /// the logical id stored at arena position `p`). Results must be
+    /// identical for every permutation — this constructor exists so
+    /// tests can prove it.
+    pub fn new_with_arena_order(world: World, order: &[usize]) -> ClusterSim {
+        let ncomp = world.component_count();
+        assert_eq!(order.len(), ncomp, "arena order must cover every component");
+        let mut arena_of = vec![usize::MAX; ncomp];
+        let mut components: Vec<Box<dyn Component>> = Vec::with_capacity(ncomp);
+        for (pos, &lid) in order.iter().enumerate() {
+            assert!(
+                lid < ncomp && arena_of[lid] == usize::MAX,
+                "arena order must be a permutation of 0..{ncomp}"
+            );
+            arena_of[lid] = pos;
+            let c: Box<dyn Component> = if lid < world.n {
+                Box::new(Source::new(&world, lid))
+            } else if lid < 2 * world.n {
+                Box::new(Link::new(lid - world.n))
+            } else {
+                Box::new(Processor::new(&world, lid - 2 * world.n))
+            };
+            components.push(c);
+        }
+        let mut queue = TickQueue::new();
+        // Liberal bound on total pushes (≤ ~5 per transfer + wakes), so
+        // steady-state runs never grow the heap.
+        queue.reserve(10 * world.n * world.m + 4 * (world.n + world.m) + 64);
+        let wakes = Vec::with_capacity(16);
+        ClusterSim {
+            components,
+            arena_of,
+            pending: vec![Time::INFINITY; ncomp],
+            wake_at: vec![Time::INFINITY; ncomp],
+            queue,
+            ctx: Ctx { world, wakes },
+            events: 0,
+            stale: 0,
+            per_component: vec![0; ncomp],
+            now: 0.0,
+        }
+    }
+
+    /// The shared world (read results here after [`ClusterSim::run`]).
+    pub fn world(&self) -> &World {
+        &self.ctx.world
+    }
+
+    /// Consume the engine, returning the world.
+    pub fn into_world(self) -> World {
+        self.ctx.world
+    }
+
+    /// Instrumentation snapshot.
+    pub fn stats(&self) -> EngineStats {
+        EngineStats {
+            events: self.events,
+            stale: self.stale,
+            per_component: self.per_component.clone(),
+            queue_high_water: self.queue.high_water,
+            pushes: self.queue.pushed,
+        }
+    }
+
+    fn schedule(&mut self, lid: u32, t: Time) {
+        let l = lid as usize;
+        if t < self.pending[l] {
+            self.queue.push(t, lid);
+            self.pending[l] = t;
+        }
+    }
+
+    fn drain_wakes(&mut self) {
+        while let Some((lid, t)) = self.ctx.wakes.pop() {
+            let l = lid as usize;
+            // Never schedule into the past (a processor can "complete"
+            // work whose analytic finish predates the final arrival).
+            let t = t.max(self.now);
+            if t < self.wake_at[l] {
+                self.wake_at[l] = t;
+            }
+            let at = self.wake_at[l];
+            self.schedule(lid, at);
+        }
+    }
+
+    /// Run to quiescence: pop ticks in `(time, lid, seq)` order until
+    /// the queue drains.
+    pub fn run(&mut self) {
+        for lid in 0..self.arena_of.len() {
+            let a = self.arena_of[lid];
+            if let Some(t) = self.components[a].next_tick() {
+                self.schedule(lid as u32, t);
+            }
+        }
+        while let Some((t, lid)) = self.queue.pop() {
+            let l = lid as usize;
+            if self.pending[l] != t {
+                self.stale += 1;
+                continue;
+            }
+            self.pending[l] = Time::INFINITY;
+            self.now = t;
+            // Consume the wake that fired; future wakes stay armed.
+            if self.wake_at[l] <= t {
+                self.wake_at[l] = Time::INFINITY;
+            }
+            let a = self.arena_of[l];
+            self.components[a].tick(t, &mut self.ctx);
+            self.events += 1;
+            self.per_component[l] += 1;
+            self.drain_wakes();
+            let desired = match self.components[a].next_tick() {
+                Some(w) => w.min(self.wake_at[l]),
+                None => self.wake_at[l],
+            };
+            if desired.is_finite() {
+                self.schedule(lid, desired.max(t));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dlt::schedule::TimingModel;
+    use crate::model::SystemSpec;
+
+    fn tiny_world(model: TimingModel) -> World {
+        let spec = SystemSpec::builder()
+            .source(0.2, 0.0)
+            .source(0.2, 5.0)
+            .processors(&[2.0, 3.0, 4.0])
+            .job(100.0)
+            .build()
+            .unwrap();
+        let beta = vec![20.0, 15.0, 10.0, 25.0, 18.0, 12.0];
+        World::new(&spec, &beta, model)
+    }
+
+    #[test]
+    fn run_respects_sequential_rules() {
+        let mut sim = ClusterSim::new(tiny_world(TimingModel::NoFrontEnd));
+        sim.run();
+        let w = sim.world();
+        let (n, m) = (w.n, w.m);
+        assert!(w.makespan() > 0.0);
+        for i in 0..n {
+            for j in 0..m - 1 {
+                assert!(w.send_done[i * m + j] <= w.send_start[i * m + j + 1] + 1e-12);
+            }
+        }
+        for j in 0..m {
+            for i in 0..n - 1 {
+                assert!(w.send_done[i * m + j] <= w.send_start[(i + 1) * m + j] + 1e-12);
+            }
+        }
+        let stats = sim.stats();
+        assert!(stats.events > 0);
+        assert_eq!(stats.per_component.iter().sum::<u64>(), stats.events);
+        assert!(stats.queue_high_water >= 1);
+    }
+
+    #[test]
+    fn arena_order_does_not_change_results() {
+        let mut a = ClusterSim::new(tiny_world(TimingModel::FrontEnd));
+        a.run();
+        let order: Vec<usize> = (0..7).rev().collect();
+        let mut b = ClusterSim::new_with_arena_order(tiny_world(TimingModel::FrontEnd), &order);
+        b.run();
+        assert_eq!(a.world().send_start, b.world().send_start);
+        assert_eq!(a.world().send_done, b.world().send_done);
+        assert_eq!(a.world().compute_done, b.world().compute_done);
+        assert_eq!(a.stats(), b.stats());
+    }
+
+    #[test]
+    #[should_panic(expected = "permutation")]
+    fn arena_order_must_be_a_permutation() {
+        ClusterSim::new_with_arena_order(tiny_world(TimingModel::NoFrontEnd), &[0; 7]);
+    }
+
+    #[test]
+    fn send_gates_delay_sends() {
+        let mut w = tiny_world(TimingModel::NoFrontEnd);
+        let mut gates = vec![0.0; 6];
+        gates[0] = 2.5; // hold S1 -> P1 until t = 2.5
+        w.gate_send = Some(gates);
+        let mut sim = ClusterSim::new(w);
+        sim.run();
+        assert_eq!(sim.world().send_start[0], 2.5);
+        // Ungated baseline starts at the release time.
+        let mut base = ClusterSim::new(tiny_world(TimingModel::NoFrontEnd));
+        base.run();
+        assert_eq!(base.world().send_start[0], 0.0);
+        assert!(sim.world().makespan() >= base.world().makespan());
+    }
+}

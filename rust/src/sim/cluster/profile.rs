@@ -1,0 +1,280 @@
+//! Time-varying rate policy for cluster components.
+//!
+//! [`Profile`] is the piecewise-constant *capacity multiplier* `c(t) >
+//! 0` (1.0 = nominal) that used to live in the standalone
+//! `sim::timevary` module (paper §8, "processing speed become
+//! time-varying"): work that nominally takes `w` time units completes
+//! when the integral of `c` reaches `w`. Here it is a component
+//! policy — every [`super::components::Link`] owns one, and processors
+//! evaluate their compute chunks through one — instead of a separate
+//! fixed-function replayer.
+//!
+//! [`finish_with_windows`] layers the injection windows on top: spans
+//! where the component is *blocked outright* (a failed processor, a
+//! preempted CPU). Progress pauses across a window; a `redo` window
+//! additionally discards all progress on the in-flight chunk (the
+//! fail/restart semantics — the processor re-requests the work).
+
+use super::queue::Time;
+
+/// Piecewise-constant capacity multiplier.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Profile {
+    /// Breakpoints: `(start_time, multiplier)`; first entry must start
+    /// at 0. Multipliers must be > 0.
+    pub pieces: Vec<(f64, f64)>,
+}
+
+impl Profile {
+    /// Constant nominal capacity.
+    pub fn nominal() -> Profile {
+        Profile { pieces: vec![(0.0, 1.0)] }
+    }
+
+    /// A background job occupies `share` of the node during
+    /// `[from, to)` (capacity drops to `1 − share`).
+    pub fn with_interference(from: f64, to: f64, share: f64) -> Profile {
+        assert!((0.0..1.0).contains(&share), "share in [0,1)");
+        assert!(from >= 0.0 && to > from);
+        let mut pieces = vec![(0.0, 1.0)];
+        if from > 0.0 {
+            pieces.push((from, 1.0 - share));
+        } else {
+            pieces[0].1 = 1.0 - share;
+        }
+        pieces.push((to, 1.0));
+        Profile { pieces }
+    }
+
+    /// Build from multiplicative slowdown windows `(from, to, factor)`.
+    /// Overlapping windows compound (factors multiply); outside every
+    /// window the capacity is nominal. Factors must be in `(0, ∞)`.
+    pub fn from_windows(windows: &[(f64, f64, f64)]) -> Profile {
+        if windows.is_empty() {
+            return Profile::nominal();
+        }
+        let mut cuts: Vec<f64> = vec![0.0];
+        for &(from, to, _) in windows {
+            assert!(from >= 0.0 && to > from, "window must satisfy 0 <= from < to");
+            cuts.push(from);
+            cuts.push(to);
+        }
+        cuts.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        cuts.dedup();
+        let mut pieces: Vec<(f64, f64)> = Vec::with_capacity(cuts.len());
+        for &t in &cuts {
+            let cap: f64 = windows
+                .iter()
+                .filter(|&&(from, to, _)| from <= t && t < to)
+                .map(|&(_, _, f)| f)
+                .product();
+            match pieces.last() {
+                Some(&(_, last_cap)) if last_cap == cap => {}
+                _ => pieces.push((t, cap)),
+            }
+        }
+        Profile { pieces }
+    }
+
+    /// Validate invariants.
+    pub fn check(&self) -> Result<(), String> {
+        if self.pieces.is_empty() || self.pieces[0].0 != 0.0 {
+            return Err("profile must start at t = 0".into());
+        }
+        for w in self.pieces.windows(2) {
+            if w[1].0 <= w[0].0 {
+                return Err("breakpoints must increase".into());
+            }
+        }
+        if self.pieces.iter().any(|&(_, c)| c <= 0.0) {
+            return Err("multipliers must be > 0".into());
+        }
+        Ok(())
+    }
+
+    /// Time at which `work` nominal units complete when started at
+    /// `start` under this profile.
+    pub fn finish_time(&self, start: Time, work: f64) -> Time {
+        debug_assert!(self.check().is_ok());
+        if work <= 0.0 {
+            return start;
+        }
+        if start.is_infinite() {
+            return Time::INFINITY;
+        }
+        let mut remaining = work;
+        let mut t = start;
+        let mut idx = self.pieces.iter().rposition(|&(s, _)| s <= t).unwrap_or(0);
+        loop {
+            let (_, cap) = self.pieces[idx];
+            let piece_end = self.pieces.get(idx + 1).map(|&(s, _)| s).unwrap_or(f64::INFINITY);
+            let span = piece_end - t;
+            let doable = span * cap;
+            if doable >= remaining {
+                return t + remaining / cap;
+            }
+            remaining -= doable;
+            t = piece_end;
+            idx += 1;
+        }
+    }
+
+    /// Nominal work units completed between `t0` and `t1` (the
+    /// integral of the capacity multiplier over `[t0, t1)`).
+    pub fn work_between(&self, t0: Time, t1: Time) -> f64 {
+        debug_assert!(self.check().is_ok());
+        if t1 <= t0 {
+            return 0.0;
+        }
+        let mut total = 0.0;
+        let mut t = t0;
+        let mut idx = self.pieces.iter().rposition(|&(s, _)| s <= t).unwrap_or(0);
+        while t < t1 {
+            let (_, cap) = self.pieces[idx];
+            let piece_end = self.pieces.get(idx + 1).map(|&(s, _)| s).unwrap_or(f64::INFINITY);
+            let upto = piece_end.min(t1);
+            total += (upto - t) * cap;
+            t = upto;
+            idx += 1;
+        }
+        total
+    }
+}
+
+/// A blocking window `(from, to, redo)`: no progress inside
+/// `[from, to)`; when `redo` is set, crossing the window also resets
+/// the in-flight chunk to its full size (fail/restart: partial work is
+/// lost and redone).
+pub type BlockWindow = (Time, Time, bool);
+
+/// Completion time of `work` nominal units started at `start` under
+/// `profile`, with progress suspended across each of the sorted,
+/// non-overlapping `windows`.
+///
+/// Returns `Time::INFINITY` if a window never closes (`to` = ∞) and
+/// the work cannot complete before it opens.
+pub fn finish_with_windows(
+    profile: &Profile,
+    windows: &[BlockWindow],
+    start: Time,
+    work: f64,
+) -> Time {
+    if work <= 0.0 {
+        return start;
+    }
+    let mut t = start;
+    let mut remaining = work;
+    let mut idx = 0;
+    loop {
+        if t.is_infinite() {
+            return Time::INFINITY;
+        }
+        // Skip windows that ended before the cursor.
+        while idx < windows.len() && windows[idx].1 <= t {
+            idx += 1;
+        }
+        // Inside a window: jump to its end; a redo window discards the
+        // chunk's progress.
+        if idx < windows.len() && windows[idx].0 <= t {
+            let (_, to, redo) = windows[idx];
+            if redo {
+                remaining = work;
+            }
+            t = to;
+            idx += 1;
+            continue;
+        }
+        let open_until = if idx < windows.len() { windows[idx].0 } else { f64::INFINITY };
+        let fin = profile.finish_time(t, remaining);
+        if fin <= open_until {
+            return fin;
+        }
+        remaining -= profile.work_between(t, open_until);
+        t = open_until;
+        // Cursor now sits exactly on windows[idx].from; next iteration
+        // takes the inside-a-window branch and consumes it.
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Migrated from the deleted `sim::timevary` module.
+    #[test]
+    fn profile_finish_time_math() {
+        let p = Profile::nominal();
+        assert_eq!(p.finish_time(3.0, 4.0), 7.0);
+        // Half capacity from t=2 to t=6: work 4 starting at 0 ->
+        // 2 units done by t=2, remaining 2 at half speed -> 4 more.
+        let p = Profile::with_interference(2.0, 6.0, 0.5);
+        assert!((p.finish_time(0.0, 4.0) - 6.0).abs() < 1e-12);
+        // Work entirely inside the slow window.
+        assert!((p.finish_time(2.0, 1.0) - 4.0).abs() < 1e-12);
+        // Zero work is free.
+        assert_eq!(p.finish_time(1.5, 0.0), 1.5);
+    }
+
+    // Migrated from the deleted `sim::timevary` module.
+    #[test]
+    fn profile_validation() {
+        assert!(Profile::nominal().check().is_ok());
+        assert!(Profile { pieces: vec![(1.0, 1.0)] }.check().is_err());
+        assert!(Profile { pieces: vec![(0.0, 1.0), (0.0, 0.5)] }.check().is_err());
+        assert!(Profile { pieces: vec![(0.0, 0.0)] }.check().is_err());
+    }
+
+    #[test]
+    fn work_between_integrates_capacity() {
+        let p = Profile::with_interference(2.0, 6.0, 0.5);
+        assert!((p.work_between(0.0, 2.0) - 2.0).abs() < 1e-12);
+        assert!((p.work_between(0.0, 6.0) - 4.0).abs() < 1e-12);
+        assert!((p.work_between(3.0, 5.0) - 1.0).abs() < 1e-12);
+        assert_eq!(p.work_between(5.0, 5.0), 0.0);
+    }
+
+    #[test]
+    fn from_windows_compounds_overlaps() {
+        let p = Profile::from_windows(&[(1.0, 3.0, 0.5), (2.0, 4.0, 0.5)]);
+        assert!(p.check().is_ok());
+        assert!((p.work_between(0.0, 1.0) - 1.0).abs() < 1e-12);
+        assert!((p.work_between(1.0, 2.0) - 0.5).abs() < 1e-12);
+        // Both windows active in [2, 3): capacity 0.25.
+        assert!((p.work_between(2.0, 3.0) - 0.25).abs() < 1e-12);
+        assert!((p.work_between(3.0, 4.0) - 0.5).abs() < 1e-12);
+        assert!((p.work_between(4.0, 5.0) - 1.0).abs() < 1e-12);
+        assert_eq!(Profile::from_windows(&[]), Profile::nominal());
+    }
+
+    #[test]
+    fn windows_pause_and_redo() {
+        let nominal = Profile::nominal();
+        // Pause: 3 units of work starting at 0, blocked during [1, 5):
+        // 1 unit done, 4 idle, 2 more -> finishes at 7.
+        let t = finish_with_windows(&nominal, &[(1.0, 5.0, false)], 0.0, 3.0);
+        assert!((t - 7.0).abs() < 1e-12);
+        // Redo: same shape but progress is lost -> full 3 units after
+        // the window -> finishes at 8.
+        let t = finish_with_windows(&nominal, &[(1.0, 5.0, true)], 0.0, 3.0);
+        assert!((t - 8.0).abs() < 1e-12);
+        // Work that fits before the window is unaffected.
+        let t = finish_with_windows(&nominal, &[(4.0, 5.0, true)], 0.0, 3.0);
+        assert!((t - 3.0).abs() < 1e-12);
+        // Starting inside a window waits it out first.
+        let t = finish_with_windows(&nominal, &[(1.0, 5.0, false)], 2.0, 1.0);
+        assert!((t - 6.0).abs() < 1e-12);
+        // A window that never closes pins completion at infinity.
+        let t = finish_with_windows(&nominal, &[(1.0, f64::INFINITY, false)], 0.0, 3.0);
+        assert!(t.is_infinite());
+    }
+
+    #[test]
+    fn windows_compose_with_profiles() {
+        // Half speed from t=0 to t=10, blocked during [2, 4): work 3
+        // does 1 unit by t=2, waits to 4, needs 4 more half-speed time
+        // units for the remaining 2 -> finishes at 8.
+        let p = Profile::with_interference(0.0, 10.0, 0.5);
+        let t = finish_with_windows(&p, &[(2.0, 4.0, false)], 0.0, 3.0);
+        assert!((t - 8.0).abs() < 1e-12, "got {t}");
+    }
+}

@@ -1,0 +1,179 @@
+//! Tick queue: a binary min-heap of `(time, component-id, seq)` keys.
+//!
+//! Ordering is the engine's determinism contract: earlier time first,
+//! then lower *logical* component id, then push sequence. Because the
+//! tie-break is the logical id (assigned by role, not by arena
+//! position), the pop order — and therefore every simulation result —
+//! is invariant to the order components were inserted into the arena.
+//!
+//! The heap is a hand-rolled sift-up/sift-down over a flat `Vec` so
+//! capacity can be reserved up front: once [`TickQueue::reserve`] has
+//! sized the buffer, pushes and pops never touch the allocator (the
+//! `lp::SolverScratch` discipline, enforced by the 10k-processor
+//! allocation test).
+
+/// Simulation clock type.
+pub type Time = f64;
+
+/// One heap entry: `(time, logical component id, push sequence)`.
+#[derive(Debug, Clone, Copy)]
+struct Entry {
+    time: Time,
+    lid: u32,
+    seq: u64,
+}
+
+impl Entry {
+    /// Strict weak order: time, then logical id, then sequence.
+    fn before(&self, other: &Entry) -> bool {
+        if self.time != other.time {
+            return self.time < other.time;
+        }
+        if self.lid != other.lid {
+            return self.lid < other.lid;
+        }
+        self.seq < other.seq
+    }
+}
+
+/// Binary min-heap keyed by `(time, component-id, seq)`.
+#[derive(Debug, Default)]
+pub struct TickQueue {
+    heap: Vec<Entry>,
+    next_seq: u64,
+    /// Total entries ever pushed (engine metric).
+    pub pushed: u64,
+    /// Largest heap length observed (queue-depth high-water mark).
+    pub high_water: usize,
+}
+
+impl TickQueue {
+    /// Empty queue.
+    pub fn new() -> TickQueue {
+        TickQueue::default()
+    }
+
+    /// Pre-size the backing buffer so steady-state pushes are
+    /// allocation-free.
+    pub fn reserve(&mut self, capacity: usize) {
+        self.heap.reserve(capacity);
+    }
+
+    /// Current backing-buffer capacity (for allocation audits).
+    pub fn capacity(&self) -> usize {
+        self.heap.capacity()
+    }
+
+    /// Schedule component `lid` to tick at `time`.
+    pub fn push(&mut self, time: Time, lid: u32) {
+        debug_assert!(time.is_finite(), "non-finite tick time");
+        let e = Entry { time, lid, seq: self.next_seq };
+        self.next_seq += 1;
+        self.pushed += 1;
+        self.heap.push(e);
+        // Sift up.
+        let mut i = self.heap.len() - 1;
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if self.heap[i].before(&self.heap[parent]) {
+                self.heap.swap(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+        if self.heap.len() > self.high_water {
+            self.high_water = self.heap.len();
+        }
+    }
+
+    /// Pop the earliest `(time, lid)` entry.
+    pub fn pop(&mut self) -> Option<(Time, u32)> {
+        if self.heap.is_empty() {
+            return None;
+        }
+        let last = self.heap.len() - 1;
+        self.heap.swap(0, last);
+        let out = self.heap.pop().unwrap();
+        // Sift down.
+        let len = self.heap.len();
+        let mut i = 0;
+        loop {
+            let l = 2 * i + 1;
+            let r = 2 * i + 2;
+            let mut best = i;
+            if l < len && self.heap[l].before(&self.heap[best]) {
+                best = l;
+            }
+            if r < len && self.heap[r].before(&self.heap[best]) {
+                best = r;
+            }
+            if best == i {
+                break;
+            }
+            self.heap.swap(i, best);
+            i = best;
+        }
+        Some((out.time, out.lid))
+    }
+
+    /// Number of pending entries.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// True when no entries remain.
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn orders_by_time_then_lid_then_seq() {
+        let mut q = TickQueue::new();
+        q.push(2.0, 9);
+        q.push(1.0, 5);
+        q.push(1.0, 3); // same time, lower lid: wins despite later push
+        q.push(1.0, 5); // duplicate (time, lid): earlier seq first
+        assert_eq!(q.pop(), Some((1.0, 3)));
+        assert_eq!(q.pop(), Some((1.0, 5)));
+        assert_eq!(q.pop(), Some((1.0, 5)));
+        assert_eq!(q.pop(), Some((2.0, 9)));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn heap_property_under_random_load() {
+        use crate::util::rng::{Pcg32, Rng};
+        let mut rng = Pcg32::new(11);
+        let mut q = TickQueue::new();
+        for _ in 0..500 {
+            q.push((rng.f64() * 100.0).floor(), rng.below(10) as u32);
+        }
+        let mut prev = (f64::NEG_INFINITY, 0u32);
+        let mut n = 0;
+        while let Some((t, lid)) = q.pop() {
+            assert!(t > prev.0 || (t == prev.0 && lid >= prev.1), "order broke at {t}/{lid}");
+            prev = (t, lid);
+            n += 1;
+        }
+        assert_eq!(n, 500);
+        assert_eq!(q.pushed, 500);
+        assert!(q.high_water <= 500);
+    }
+
+    #[test]
+    fn reserve_prevents_growth() {
+        let mut q = TickQueue::new();
+        q.reserve(64);
+        let cap = q.capacity();
+        for k in 0..64 {
+            q.push(k as f64, 0);
+        }
+        assert_eq!(q.capacity(), cap);
+    }
+}

@@ -8,8 +8,8 @@
 use crate::dlt::schedule::TimingModel;
 use crate::model::SystemSpec;
 use crate::sim::event::{EventKind, EventQueue};
+use crate::sim::jitter;
 use crate::sim::trace::{Trace, TraceKind};
-use crate::util::rng::{Pcg32, Rng};
 
 /// Simulation options.
 #[derive(Debug, Clone)]
@@ -65,26 +65,13 @@ pub fn simulate(spec: &SystemSpec, beta: &[f64], opts: &SimOptions) -> SimResult
     let r = spec.releases();
     let a = spec.a();
 
-    let mut rng = Pcg32::new(opts.seed);
-    // Pre-draw jitter factors deterministically (order-independent).
+    // Shape-stable jitter: each cell hashes `(seed, i, j)`, so growing
+    // the system never reshuffles the factors of existing cells.
     let link_factor: Vec<f64> = (0..n * m)
-        .map(|_| {
-            if opts.link_jitter > 0.0 {
-                1.0 + opts.link_jitter * (2.0 * rng.f64() - 1.0)
-            } else {
-                1.0
-            }
-        })
+        .map(|k| jitter::link_factor(opts.seed, opts.link_jitter, k / m, k % m))
         .collect();
-    let compute_factor: Vec<f64> = (0..m)
-        .map(|_| {
-            if opts.compute_jitter > 0.0 {
-                1.0 + opts.compute_jitter * (2.0 * rng.f64() - 1.0)
-            } else {
-                1.0
-            }
-        })
-        .collect();
+    let compute_factor: Vec<f64> =
+        (0..m).map(|j| jitter::compute_factor(opts.seed, opts.compute_jitter, j)).collect();
 
     let mut q = EventQueue::new();
     let mut trace = if opts.trace { Some(Trace::default()) } else { None };
@@ -356,6 +343,47 @@ mod tests {
         );
         assert_eq!(j1.makespan, j2.makespan, "same seed, same result");
         assert!((j1.makespan - base.makespan).abs() > 1e-9, "jitter had no effect");
+    }
+
+    #[test]
+    fn jitter_is_shape_stable() {
+        // Growing the system must not reshuffle the jitter on existing
+        // cells: factors hash (seed, i, j), not a sequential stream.
+        let opts = SimOptions {
+            link_jitter: 0.3,
+            compute_jitter: 0.3,
+            seed: 7,
+            ..Default::default()
+        };
+        let spec2 = SystemSpec::builder()
+            .source(0.2, 0.0)
+            .source(0.3, 0.0)
+            .processors(&[2.0, 3.0])
+            .job(10.0)
+            .build()
+            .unwrap();
+        let beta2 = vec![3.0, 3.0, 4.0, 0.0];
+        let res2 = simulate(&spec2, &beta2, &opts);
+        let spec3 = SystemSpec::builder()
+            .source(0.2, 0.0)
+            .source(0.3, 0.0)
+            .processors(&[2.0, 3.0, 4.0])
+            .job(10.0)
+            .build()
+            .unwrap();
+        let beta3 = vec![3.0, 2.0, 1.0, 4.0, 0.0, 0.0];
+        let res3 = simulate(&spec3, &beta3, &opts);
+        // Same cell (S2 -> P1), same load: identical jittered duration
+        // even though the flat draw position changed (2 vs 3).
+        assert_eq!(
+            res2.send_done[2] - res2.send_start[2],
+            res3.send_done[3] - res3.send_start[3]
+        );
+        // Same column total on P1: identical jittered compute burn.
+        assert_eq!(
+            res2.compute_done[0] - res2.send_done[2],
+            res3.compute_done[0] - res3.send_done[3]
+        );
     }
 
     #[test]

@@ -1,0 +1,92 @@
+//! Shape-stable multiplicative jitter factors.
+//!
+//! Both simulator engines perturb link and compute times with
+//! multiplicative factors drawn uniformly from `[1 − a, 1 + a]`. The
+//! draw for a cell must depend only on `(seed, i, j)` — never on the
+//! system shape — so that the same `(source, processor)` pair sees the
+//! same perturbation whether it lives in a 2×3 or a 2×10 000 system.
+//! (The original engine drew factors sequentially from one stream and
+//! indexed them by flat position, so adding a processor silently
+//! reassigned every later cell's jitter.)
+//!
+//! Each factor is derived by hashing the indices into an independent
+//! [`SplitMix64`] stream: one `next_u64` through the full mix gives a
+//! well-distributed 53-bit uniform regardless of how structured the
+//! `(seed, i, j)` input is.
+
+use crate::util::rng::{Rng, SplitMix64};
+
+/// Domain-separation tags so link and compute draws never collide even
+/// for identical `(seed, index)` inputs.
+const TAG_LINK: u64 = 0x6C69_6E6B_6A69_7474; // "linkjitt"
+const TAG_COMPUTE: u64 = 0x636F_6D70_6A69_7474; // "compjitt"
+
+/// One uniform draw in `[0, 1)` keyed by `(seed, tag, x, y)`.
+fn unit(seed: u64, tag: u64, x: u64, y: u64) -> f64 {
+    let key = seed
+        ^ tag.rotate_left(17)
+        ^ x.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ y.wrapping_mul(0xC2B2_AE3D_27D4_EB4F);
+    SplitMix64::new(key).f64()
+}
+
+/// Multiplicative factor in `[1 − a, 1 + a]` for a draw in `[0, 1)`.
+fn factor(amplitude: f64, u: f64) -> f64 {
+    1.0 + amplitude * (2.0 * u - 1.0)
+}
+
+/// Link-time factor for fraction `(source i, processor j)`.
+/// `amplitude <= 0` disables jitter (returns exactly 1.0).
+pub fn link_factor(seed: u64, amplitude: f64, i: usize, j: usize) -> f64 {
+    if amplitude <= 0.0 {
+        return 1.0;
+    }
+    factor(amplitude, unit(seed, TAG_LINK, i as u64, j as u64))
+}
+
+/// Compute-time factor for processor `j`.
+/// `amplitude <= 0` disables jitter (returns exactly 1.0).
+pub fn compute_factor(seed: u64, amplitude: f64, j: usize) -> f64 {
+    if amplitude <= 0.0 {
+        return 1.0;
+    }
+    factor(amplitude, unit(seed, TAG_COMPUTE, j as u64, 0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factors_are_deterministic_and_in_range() {
+        for i in 0..8 {
+            for j in 0..8 {
+                let f1 = link_factor(42, 0.3, i, j);
+                let f2 = link_factor(42, 0.3, i, j);
+                assert_eq!(f1, f2);
+                assert!((0.7..=1.3).contains(&f1), "factor {f1} out of range");
+            }
+        }
+        let c = compute_factor(42, 0.2, 3);
+        assert!((0.8..=1.2).contains(&c));
+    }
+
+    #[test]
+    fn zero_amplitude_is_exactly_nominal() {
+        assert_eq!(link_factor(7, 0.0, 1, 2), 1.0);
+        assert_eq!(compute_factor(7, 0.0, 1), 1.0);
+    }
+
+    #[test]
+    fn cells_and_tags_are_independent() {
+        // Different cells draw different factors...
+        let a = link_factor(1, 0.3, 0, 0);
+        let b = link_factor(1, 0.3, 0, 1);
+        let c = link_factor(1, 0.3, 1, 0);
+        assert!(a != b && a != c && b != c);
+        // ...and link vs compute draws never alias on equal indices.
+        assert_ne!(link_factor(1, 0.3, 2, 0), compute_factor(1, 0.3, 2));
+        // Seeds matter.
+        assert_ne!(link_factor(1, 0.3, 0, 0), link_factor(2, 0.3, 0, 0));
+    }
+}

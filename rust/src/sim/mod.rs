@@ -1,20 +1,30 @@
-//! Deterministic discrete-event simulator.
+//! Deterministic discrete-event simulation.
 //!
-//! Executes a [`crate::dlt::Schedule`]'s *decisions* (the β matrix and
-//! the paper's fixed communication orders) under the operational timing
-//! semantics, independently of the LP's own timing variables. The
-//! realized makespan from the simulator is the ground truth the LP
-//! solutions are checked against.
+//! Two engines execute a [`crate::dlt::Schedule`]'s *decisions* (the β
+//! matrix and the paper's fixed communication orders) under the
+//! operational timing semantics, independently of the LP's own timing
+//! variables:
 //!
-//! The engine supports multiplicative jitter on link and compute speeds
-//! (seeded, deterministic) for robustness experiments: how much does
-//! the realized makespan degrade when the real system deviates from
-//! the parameters the schedule was optimized for?
+//! - [`engine`] — the original fixed-function ASAP replayer, kept as a
+//!   compact parity oracle;
+//! - [`cluster`] — the component-based engine ([`cluster::Source`] /
+//!   [`cluster::Link`] / [`cluster::Processor`] over a tick queue)
+//!   that adds fault/preemption injection, time-varying link capacity,
+//!   LP-timeline gating and 10k-processor scale.
+//!
+//! [`replay`] ties the cluster engine back to the solver pipeline:
+//! replay a solved schedule and report predicted-vs-simulated
+//! divergence ([`replay::DivergenceReport`], `diagnostics.sim` on the
+//! wire). Both engines share [`jitter`] — shape-stable seeded speed
+//! perturbations — and the [`trace`] timeline format.
 
+pub mod cluster;
 pub mod engine;
-pub mod timevary;
 pub mod event;
+pub mod jitter;
+pub mod replay;
 pub mod trace;
 
 pub use engine::{simulate, SimOptions, SimResult};
+pub use replay::{replay, replay_solved, synthetic_scale, DivergenceReport, Gate, ReplayOptions};
 pub use trace::{Trace, TraceEvent, TraceKind};

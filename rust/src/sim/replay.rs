@@ -1,0 +1,400 @@
+//! Replay LP schedules through the cluster engine and report
+//! predicted-vs-simulated divergence.
+//!
+//! This is the end-to-end correctness oracle the paper never had: take
+//! a solved schedule (β matrix + the LP's promised `T_f`), execute it
+//! operationally in [`crate::sim::cluster`] — optionally under faults,
+//! preemption, link slowdowns and jitter — and compare what actually
+//! happened against what the LP predicted. The resulting
+//! [`DivergenceReport`] travels on the wire as `diagnostics.sim` and
+//! is reachable via `dlt simulate`.
+//!
+//! Two gating modes control how literally the LP's timeline is
+//! followed:
+//!
+//! - [`Gate::Schedule`] (default): sends may not start before the LP's
+//!   `TS_{i,j}`. Because the LP's windows are feasible (≥ ASAP), this
+//!   reproduces the LP's own timeline — a jitter-free, fault-free
+//!   replay must match `T_f` to fp accuracy, which is exactly the
+//!   divergence-oracle claim worth testing.
+//! - [`Gate::Asap`]: ignore the LP's timing and close every gap
+//!   greedily — bit-compatible with the legacy [`crate::sim::engine`]
+//!   and never slower than the gated replay.
+
+use crate::dlt::schedule::{Schedule, TimingModel};
+use crate::error::{Error, Result};
+use crate::model::SystemSpec;
+use crate::pipeline::Solved;
+use crate::sim::cluster::{ClusterSim, InjectionPlan, World};
+use crate::sim::jitter;
+use crate::sim::trace::{Trace, TraceKind};
+
+/// How send start times are bounded during replay.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Gate {
+    /// Lower-bound each send at the LP's `TS_{i,j}` (follow the LP's
+    /// timeline).
+    #[default]
+    Schedule,
+    /// Ignore the LP's timing; start every send as soon as possible
+    /// (legacy-engine semantics).
+    Asap,
+}
+
+/// Replay configuration.
+#[derive(Debug, Clone, Default)]
+pub struct ReplayOptions {
+    /// Send-gating mode.
+    pub gate: Gate,
+    /// Multiplicative jitter amplitude on per-fraction link times
+    /// (uniform in `[1−j, 1+j]`, shape-stable per cell). 0 disables.
+    pub link_jitter: f64,
+    /// Multiplicative jitter amplitude on per-processor compute times.
+    pub compute_jitter: f64,
+    /// Seed for jitter and seeded-random faults.
+    pub seed: u64,
+    /// Faults, preemptions and link windows to inject.
+    pub plan: InjectionPlan,
+    /// Record a trace (allocates; leave off for allocation-audited
+    /// runs).
+    pub trace: bool,
+}
+
+/// Predicted-vs-simulated comparison for one replay.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct DivergenceReport {
+    /// The LP's promised makespan `T_f`.
+    pub predicted_makespan: f64,
+    /// Makespan realized by the cluster engine.
+    pub simulated_makespan: f64,
+    /// `(simulated − predicted) / predicted` (positive = the system
+    /// ran late).
+    pub rel_gap: f64,
+    /// `predicted − compute_done[j]` per processor (negative = that
+    /// processor finished after the predicted makespan).
+    pub per_processor_slack: Vec<f64>,
+    /// LP promises the simulated execution broke (empty when the
+    /// schedule replayed cleanly).
+    pub violated_constraints: Vec<String>,
+    /// Engine ticks processed.
+    pub events: u64,
+    /// Tick-queue high-water mark.
+    pub max_queue_depth: usize,
+    /// Fail/restart outages injected (scheduled + seeded-random).
+    pub faults_injected: usize,
+    /// Preemption windows injected.
+    pub preemptions: usize,
+    /// Execution trace with injection markers, when requested (not
+    /// serialized on the wire).
+    pub trace: Option<Trace>,
+}
+
+/// Replay `sched` for `spec` through the cluster engine.
+pub fn replay(
+    spec: &SystemSpec,
+    sched: &Schedule,
+    opts: &ReplayOptions,
+) -> Result<DivergenceReport> {
+    let n = spec.n();
+    let m = spec.m();
+    if sched.n != n || sched.m != m || sched.beta.len() != n * m {
+        return Err(Error::InvalidSchedule(format!(
+            "schedule shape {}x{} does not match spec {n}x{m}",
+            sched.n,
+            sched.m
+        )));
+    }
+    let predicted = sched.makespan;
+    let horizon = predicted.max(sched.realized_makespan());
+    let resolved = opts.plan.resolve(n, m, horizon, opts.seed)?;
+
+    let mut world = World::new(spec, &sched.beta, sched.model);
+    for i in 0..n {
+        for j in 0..m {
+            world.link_factor[i * m + j] = jitter::link_factor(opts.seed, opts.link_jitter, i, j);
+        }
+    }
+    for j in 0..m {
+        world.comp_factor[j] = jitter::compute_factor(opts.seed, opts.compute_jitter, j);
+    }
+    world.link_profile = resolved.link_profiles.clone();
+    world.compute_windows = resolved.compute_windows.clone();
+    world.recv_windows = resolved.recv_windows.clone();
+    if opts.gate == Gate::Schedule {
+        world.gate_send = Some(sched.comm_start.clone());
+    }
+    if opts.trace {
+        world.trace = Some(Trace::default());
+    }
+
+    let mut sim = ClusterSim::new(world);
+    sim.run();
+    let stats = sim.stats();
+    let world = sim.into_world();
+
+    let simulated = world.makespan();
+    let rel_gap = (simulated - predicted) / predicted.abs().max(1e-12);
+    let per_processor_slack: Vec<f64> = world.compute_done.iter().map(|&d| predicted - d).collect();
+
+    let mut violated = Vec::new();
+    let r = spec.releases();
+    for j in 0..m {
+        let d = world.compute_done[j];
+        if !d.is_finite() {
+            violated.push(format!("P{} never finished computing", j + 1));
+        } else if d > predicted * (1.0 + 1e-9) + 1e-9 {
+            violated.push(format!(
+                "P{} finished at {:.6}, after the predicted T_f {:.6}",
+                j + 1,
+                d,
+                predicted
+            ));
+        }
+    }
+    for i in 0..n {
+        if world.send_start[i * m] < r[i] - 1e-9 {
+            violated.push(format!("S{} started sending before its release time", i + 1));
+        }
+        for j in 0..m.saturating_sub(1) {
+            if world.send_done[i * m + j] > world.send_start[i * m + j + 1] + 1e-9 {
+                violated.push(format!("S{} overlapped sends to P{} and P{}", i + 1, j + 1, j + 2));
+            }
+        }
+    }
+    for j in 0..m {
+        for i in 0..n.saturating_sub(1) {
+            if world.send_done[i * m + j] > world.send_start[(i + 1) * m + j] + 1e-9 {
+                violated.push(format!(
+                    "P{} received from S{} and S{} concurrently",
+                    j + 1,
+                    i + 1,
+                    i + 2
+                ));
+            }
+        }
+    }
+
+    let trace = world.trace.map(|mut tr| {
+        // Injection markers: a compute window that exactly matches a
+        // receive-blocking window is a fail/restart; anything else is
+        // preemption (possibly merged with one).
+        for j in 0..m {
+            for &(from, to, _) in &world.recv_windows[j] {
+                tr.push(from, TraceKind::Fail, usize::MAX, j);
+                tr.push(to, TraceKind::Restart, usize::MAX, j);
+            }
+            for &(from, to, _) in &world.compute_windows[j] {
+                if !world.recv_windows[j].contains(&(from, to, false)) {
+                    tr.push(from, TraceKind::PreemptStart, usize::MAX, j);
+                    tr.push(to, TraceKind::PreemptEnd, usize::MAX, j);
+                }
+            }
+        }
+        tr.events.sort_by(|x, y| x.time.partial_cmp(&y.time).unwrap());
+        tr
+    });
+
+    Ok(DivergenceReport {
+        predicted_makespan: predicted,
+        simulated_makespan: simulated,
+        rel_gap,
+        per_processor_slack,
+        violated_constraints: violated,
+        events: stats.events,
+        max_queue_depth: stats.queue_high_water,
+        faults_injected: resolved.faults_injected,
+        preemptions: resolved.preemptions,
+        trace,
+    })
+}
+
+/// Replay a [`crate::pipeline::Solved`] (the β matrix + `T_f` the
+/// pipeline produced) through the cluster engine.
+pub fn replay_solved(
+    spec: &SystemSpec,
+    solved: &Solved,
+    opts: &ReplayOptions,
+) -> Result<DivergenceReport> {
+    replay(spec, &solved.schedule, opts)
+}
+
+/// Build a synthetic `m`-processor topology (plus a consistent
+/// schedule) for scale experiments, without solving an LP of that
+/// size: sources are copied from `base`, processors get ascending
+/// inverse speeds `A_k = 1 + 10⁻³·k`, load shares are proportional to
+/// `1/G_i × 1/A_j`, and the schedule's timing — including its
+/// `makespan` — is stamped from one nominal ASAP replay, so a
+/// jitter-free fault-free replay reproduces it *exactly* (rel gap
+/// `0.0`).
+pub fn synthetic_scale(
+    base: &SystemSpec,
+    m: usize,
+    model: TimingModel,
+) -> Result<(SystemSpec, Schedule)> {
+    if m == 0 {
+        return Err(Error::Usage("synthetic scale needs at least 1 processor".into()));
+    }
+    let mut b = SystemSpec::builder();
+    for s in &base.sources {
+        b = b.source(s.g, s.release);
+    }
+    let a: Vec<f64> = (0..m).map(|k| 1.0 + 1e-3 * k as f64).collect();
+    let spec = b.processors(&a).job(base.job).build()?;
+
+    let n = spec.n();
+    let g = spec.g();
+    let src_w: Vec<f64> = g.iter().map(|&gi| 1.0 / gi).collect();
+    let src_total: f64 = src_w.iter().sum();
+    let proc_w: Vec<f64> = a.iter().map(|&aj| 1.0 / aj).collect();
+    let proc_total: f64 = proc_w.iter().sum();
+    let mut beta = vec![0.0; n * m];
+    for i in 0..n {
+        for j in 0..m {
+            beta[i * m + j] = spec.job * (src_w[i] / src_total) * (proc_w[j] / proc_total);
+        }
+    }
+
+    let (comm_start, comm_end) = crate::dlt::frontend::reconstruct_comm_windows(&spec, &beta);
+
+    // Ground-truth timing from one nominal ASAP execution.
+    let mut sim = ClusterSim::new(World::new(&spec, &beta, model));
+    sim.run();
+    let world = sim.into_world();
+
+    let mut compute_start = vec![0.0; m];
+    for j in 0..m {
+        compute_start[j] = match model {
+            TimingModel::NoFrontEnd => comm_end[(n - 1) * m + j],
+            TimingModel::FrontEnd => (0..n)
+                .find(|&i| beta[i * m + j] > 0.0)
+                .map(|i| comm_start[i * m + j])
+                .unwrap_or(0.0),
+        };
+    }
+    let makespan = world.makespan();
+    let sched = Schedule {
+        n,
+        m,
+        model,
+        beta,
+        comm_start,
+        comm_end,
+        compute_start,
+        compute_end: world.compute_done,
+        makespan,
+        lp_iterations: 0,
+    };
+    Ok((spec, sched))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dlt::frontend::FeOptions;
+    use crate::dlt::no_frontend::NfeOptions;
+    use crate::sim::cluster::FaultSpec;
+
+    fn table2_spec() -> SystemSpec {
+        SystemSpec::builder()
+            .source(0.2, 0.0)
+            .source(0.2, 5.0)
+            .processors(&[2.0, 3.0, 4.0])
+            .job(100.0)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn gated_replay_reproduces_lp_makespan() {
+        let spec = table2_spec();
+        let sched = crate::pipeline::solve(&NfeOptions::default(), &spec).unwrap();
+        let rep = replay(&spec, &sched, &ReplayOptions::default()).unwrap();
+        assert!(
+            rep.rel_gap.abs() <= 1e-9,
+            "rel gap {} (sim {} vs LP {})",
+            rep.rel_gap,
+            rep.simulated_makespan,
+            rep.predicted_makespan
+        );
+        assert!(rep.violated_constraints.is_empty(), "{:?}", rep.violated_constraints);
+        assert!(rep.events > 0);
+        assert_eq!(rep.per_processor_slack.len(), 3);
+    }
+
+    #[test]
+    fn asap_replay_only_matches_or_beats() {
+        let spec = table2_spec();
+        let sched = crate::pipeline::solve(&FeOptions::default(), &spec).unwrap();
+        let opts = ReplayOptions { gate: Gate::Asap, ..Default::default() };
+        let rep = replay(&spec, &sched, &opts).unwrap();
+        assert!(rep.simulated_makespan <= rep.predicted_makespan + 1e-6);
+    }
+
+    #[test]
+    fn fault_delays_and_is_reported() {
+        let spec = table2_spec();
+        let sched = crate::pipeline::solve(&NfeOptions::default(), &spec).unwrap();
+        let clean = replay(&spec, &sched, &ReplayOptions::default()).unwrap();
+        let opts = ReplayOptions {
+            plan: InjectionPlan {
+                faults: vec![FaultSpec::parse_fail("p1@1.0+5.0").unwrap()],
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let rep = replay(&spec, &sched, &opts).unwrap();
+        assert_eq!(rep.faults_injected, 1);
+        assert!(rep.simulated_makespan > clean.simulated_makespan);
+        assert!(rep.rel_gap > 0.0);
+        assert!(
+            rep.violated_constraints.iter().any(|v| v.contains("after the predicted")),
+            "{:?}",
+            rep.violated_constraints
+        );
+        // Slack for the failed processor went negative.
+        assert!(rep.per_processor_slack[0] < 0.0);
+    }
+
+    #[test]
+    fn trace_carries_injection_markers() {
+        let spec = table2_spec();
+        let sched = crate::pipeline::solve(&NfeOptions::default(), &spec).unwrap();
+        let opts = ReplayOptions {
+            trace: true,
+            plan: InjectionPlan {
+                faults: vec![
+                    FaultSpec::parse_fail("p1@1.0+2.0").unwrap(),
+                    FaultSpec::parse_preempt("p2@1.0+0.5").unwrap(),
+                ],
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let rep = replay(&spec, &sched, &opts).unwrap();
+        let tr = rep.trace.unwrap();
+        assert!(tr.events.iter().any(|e| e.kind == TraceKind::Fail));
+        assert!(tr.events.iter().any(|e| e.kind == TraceKind::Restart));
+        assert!(tr.events.iter().any(|e| e.kind == TraceKind::PreemptStart));
+        assert!(tr.events.windows(2).all(|w| w[0].time <= w[1].time), "trace sorted");
+    }
+
+    #[test]
+    fn synthetic_scale_is_exactly_reproducible() {
+        let base = table2_spec();
+        for model in [TimingModel::NoFrontEnd, TimingModel::FrontEnd] {
+            let (spec, sched) = synthetic_scale(&base, 64, model).unwrap();
+            assert_eq!(spec.m(), 64);
+            let rep = replay(&spec, &sched, &ReplayOptions::default()).unwrap();
+            assert_eq!(rep.rel_gap, 0.0, "model {model:?}: gap {}", rep.rel_gap);
+            assert!(rep.violated_constraints.is_empty(), "{:?}", rep.violated_constraints);
+        }
+    }
+
+    #[test]
+    fn shape_mismatch_is_rejected() {
+        let spec = table2_spec();
+        let mut sched = crate::pipeline::solve(&NfeOptions::default(), &spec).unwrap();
+        sched.m = 2;
+        assert!(replay(&spec, &sched, &ReplayOptions::default()).is_err());
+    }
+}

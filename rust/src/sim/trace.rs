@@ -11,10 +11,19 @@ pub enum TraceKind {
     ComputeStart,
     /// Processor finished all its compute.
     ComputeComplete,
+    /// Injected fail/restart outage began (processor down, reception
+    /// blocked, in-flight compute lost).
+    Fail,
+    /// Injected fail/restart outage ended (processor back up).
+    Restart,
+    /// Injected preemption began (compute paused, front-end running).
+    PreemptStart,
+    /// Injected preemption ended.
+    PreemptEnd,
 }
 
 /// One trace record.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TraceEvent {
     /// Simulation time.
     pub time: f64,
@@ -27,7 +36,7 @@ pub struct TraceEvent {
 }
 
 /// Ordered list of trace records.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct Trace {
     /// Records in emission order.
     pub events: Vec<TraceEvent>,

@@ -142,6 +142,29 @@ fn response_roundtrip_all_families() {
     }
 }
 
+/// A divergence report attached by `Session::solve_simulated` survives
+/// the wire (the replay trace is deliberately not serialized).
+#[test]
+fn response_roundtrip_with_sim_diagnostics() {
+    let spec = dlt::model::SystemSpec::builder()
+        .source(0.2, 0.0)
+        .source(0.3, 2.0)
+        .processors(&[2.0, 3.0, 4.0])
+        .job(100.0)
+        .build()
+        .unwrap();
+    let mut session = Solver::new().build();
+    let req = SolveRequest::new(Family::NoFrontend, spec);
+    let resp =
+        session.solve_simulated(&req, &dlt::sim::replay::ReplayOptions::default()).unwrap();
+    let sim = resp.diagnostics.sim.clone().expect("sim diagnostics attached");
+    assert!(sim.rel_gap.abs() <= 1e-9, "gap {}", sim.rel_gap);
+    let text = resp.to_json().to_string_pretty();
+    let back = SolveResponse::from_json(&Json::parse(&text).unwrap()).unwrap();
+    let back_sim = back.diagnostics.sim.expect("sim diagnostics decoded");
+    assert_eq!(back_sim, sim);
+}
+
 /// Malformed JSON documents are `Error::Config`, never a panic:
 /// truncated objects, bad numbers, wrong types, trailing garbage.
 #[test]

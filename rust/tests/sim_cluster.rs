@@ -1,0 +1,281 @@
+//! Integration tests for the component-based cluster engine and its
+//! divergence oracle ([`dlt::sim::replay`]):
+//!
+//! - **arena-order fuzz** — results are bit-identical under every
+//!   component insertion order (the `(time, logical id, seq)`
+//!   determinism contract), including with jitter and send gates;
+//! - **legacy parity** — a greedy jitter-free (and jittered: the two
+//!   engines share the shape-stable jitter hash) cluster run matches
+//!   the legacy [`dlt::sim::engine`] to 1e-12 on the paper anchors;
+//! - **LP reproduction** — the Schedule-gated replay reproduces the
+//!   LP's promised `T_f` to 1e-9 on every paper table, both models;
+//! - **injection monotonicity** — longer outages, more outages,
+//!   redo-preemption vs resume-preemption, and link slowdowns can only
+//!   delay the simulated makespan; and
+//! - **seeded-random faults** — the same seed yields the identical
+//!   `DivergenceReport`.
+
+use dlt::dlt::frontend::FeOptions;
+use dlt::dlt::no_frontend::NfeOptions;
+use dlt::dlt::schedule::{Schedule, TimingModel};
+use dlt::experiments::params;
+use dlt::model::SystemSpec;
+use dlt::sim::cluster::{ClusterSim, FaultSpec, InjectionPlan, LinkWindow, World};
+use dlt::sim::replay::{replay, ReplayOptions};
+use dlt::sim::{jitter, simulate, SimOptions};
+use dlt::testkit::{arb_spec, props, Gen};
+
+fn solve_for(spec: &SystemSpec, model: TimingModel) -> Schedule {
+    match model {
+        TimingModel::FrontEnd => dlt::pipeline::solve(&FeOptions::default(), spec).unwrap(),
+        TimingModel::NoFrontEnd => dlt::pipeline::solve(&NfeOptions::default(), spec).unwrap(),
+    }
+}
+
+fn assert_close(a: f64, b: f64, what: &str) {
+    assert!((a - b).abs() <= 1e-12 * b.abs().max(1.0), "{what}: {a} vs {b}");
+}
+
+/// Build a world with randomized jitter factors and (sometimes) send
+/// gates, deterministically from `g`'s draws.
+fn fuzzed_world(
+    spec: &SystemSpec,
+    beta: &[f64],
+    model: TimingModel,
+    seed: u64,
+    amp: f64,
+    gates: &Option<Vec<f64>>,
+) -> World {
+    let (n, m) = (spec.n(), spec.m());
+    let mut w = World::new(spec, beta, model);
+    for i in 0..n {
+        for j in 0..m {
+            w.link_factor[i * m + j] = jitter::link_factor(seed, amp, i, j);
+        }
+    }
+    for j in 0..m {
+        w.comp_factor[j] = jitter::compute_factor(seed, amp, j);
+    }
+    w.gate_send = gates.clone();
+    w
+}
+
+/// The determinism contract: every permutation of the component arena
+/// produces bit-identical timing arrays and engine statistics.
+#[test]
+fn fuzz_arena_order_is_bit_identical() {
+    props("arena order invariance", 60, |g: &mut Gen| {
+        let spec = arb_spec(g, 4, 6);
+        let (n, m) = (spec.n(), spec.m());
+        let model = if g.bool() { TimingModel::FrontEnd } else { TimingModel::NoFrontEnd };
+        let beta = g.f64_vec(n * m, 0.0, 40.0);
+        let seed = g.usize_in(0, 1 << 20) as u64;
+        let amp = if g.bool() { g.f64_in(0.0, 0.3) } else { 0.0 };
+        let gates = if g.bool() { Some(g.f64_vec(n * m, 0.0, 5.0)) } else { None };
+
+        let mut base = ClusterSim::new(fuzzed_world(&spec, &beta, model, seed, amp, &gates));
+        base.run();
+
+        // Fisher-Yates permutation of the arena insertion order.
+        let mut order: Vec<usize> = (0..2 * n + m).collect();
+        for k in (1..order.len()).rev() {
+            order.swap(k, g.usize_in(0, k + 1));
+        }
+        let world = fuzzed_world(&spec, &beta, model, seed, amp, &gates);
+        let mut other = ClusterSim::new_with_arena_order(world, &order);
+        other.run();
+
+        let (a, b) = (base.world(), other.world());
+        if a.send_start != b.send_start || a.send_done != b.send_done {
+            return Err(format!("send timing drifted under order {order:?}"));
+        }
+        if a.compute_done != b.compute_done {
+            return Err(format!("compute timing drifted under order {order:?}"));
+        }
+        if base.stats() != other.stats() {
+            return Err(format!("engine stats drifted under order {order:?}"));
+        }
+        Ok(())
+    });
+}
+
+/// Greedy cluster runs match the legacy engine to 1e-12 on the paper
+/// anchors — jitter-free and jittered (the engines share one
+/// shape-stable jitter hash, so the factors are identical by
+/// construction).
+#[test]
+fn asap_cluster_matches_legacy_engine_on_anchors() {
+    let anchors = [
+        ("table1/fe", params::table1(), TimingModel::FrontEnd),
+        ("table2/nfe", params::table2(), TimingModel::NoFrontEnd),
+        ("table3/nfe", params::table3(), TimingModel::NoFrontEnd),
+        ("table5/fe", params::table5(), TimingModel::FrontEnd),
+    ];
+    for (name, spec, model) in anchors {
+        let sched = solve_for(&spec, model);
+        for (amp, seed) in [(0.0, 0u64), (0.1, 9)] {
+            let legacy_opts = SimOptions {
+                model,
+                link_jitter: amp,
+                compute_jitter: amp,
+                seed,
+                trace: false,
+            };
+            let legacy = simulate(&spec, &sched.beta, &legacy_opts);
+            let world = fuzzed_world(&spec, &sched.beta, model, seed, amp, &None);
+            let mut sim = ClusterSim::new(world);
+            sim.run();
+            let w = sim.world();
+            let what = format!("{name} amp={amp}");
+            assert_close(w.makespan(), legacy.makespan, &format!("{what}: makespan"));
+            for k in 0..spec.n() * spec.m() {
+                assert_close(w.send_start[k], legacy.send_start[k], &format!("{what}: ss[{k}]"));
+                assert_close(w.send_done[k], legacy.send_done[k], &format!("{what}: sd[{k}]"));
+            }
+            for j in 0..spec.m() {
+                let cd = format!("{what}: cd[{j}]");
+                assert_close(w.compute_done[j], legacy.compute_done[j], &cd);
+            }
+        }
+    }
+}
+
+/// The divergence-oracle acceptance bar: a jitter-free fault-free
+/// Schedule-gated replay reproduces the LP's promised makespan to
+/// 1e-9 relative gap, with no violated promises, on every paper
+/// parameter table under both timing models.
+#[test]
+fn gated_replay_reproduces_lp_on_every_anchor() {
+    let tables = [
+        ("table1", params::table1()),
+        ("table2", params::table2()),
+        ("table3", params::table3()),
+        ("table4", params::table4()),
+        ("table5", params::table5()),
+    ];
+    for (name, spec) in tables {
+        for model in [TimingModel::FrontEnd, TimingModel::NoFrontEnd] {
+            let sched = solve_for(&spec, model);
+            let rep = replay(&spec, &sched, &ReplayOptions::default()).unwrap();
+            assert!(
+                rep.rel_gap.abs() <= 1e-9,
+                "{name}/{model:?}: rel gap {:+.3e} (sim {} vs LP {})",
+                rep.rel_gap,
+                rep.simulated_makespan,
+                rep.predicted_makespan
+            );
+            assert!(
+                rep.violated_constraints.is_empty(),
+                "{name}/{model:?}: {:?}",
+                rep.violated_constraints
+            );
+            assert!(rep.events > 0);
+        }
+    }
+}
+
+fn outage(processor: usize, at: f64, duration: f64) -> FaultSpec {
+    FaultSpec { processor, at, duration: Some(duration), redo: true, blocks_recv: true }
+}
+
+fn makespan_under(spec: &SystemSpec, sched: &Schedule, plan: InjectionPlan) -> f64 {
+    let opts = ReplayOptions { plan, ..ReplayOptions::default() };
+    replay(spec, sched, &opts).unwrap().simulated_makespan
+}
+
+/// Injected adversity is monotone: a longer outage, or one more
+/// outage, never finishes the job earlier.
+#[test]
+fn fault_injection_is_monotone() {
+    let spec = params::table2();
+    let sched = solve_for(&spec, TimingModel::NoFrontEnd);
+
+    // Growing one outage's duration.
+    let mut prev = makespan_under(&spec, &sched, InjectionPlan::default());
+    for d in [0.5, 1.0, 2.0, 4.0] {
+        let plan = InjectionPlan { faults: vec![outage(0, 1.0, d)], ..Default::default() };
+        let cur = makespan_under(&spec, &sched, plan);
+        assert!(cur >= prev, "duration {d}: {cur} < {prev}");
+        prev = cur;
+    }
+
+    // Adding outages on more processors.
+    let mut faults = Vec::new();
+    let mut prev = makespan_under(&spec, &sched, InjectionPlan::default());
+    for (p, at) in [(0usize, 1.0), (1, 2.0), (2, 3.0)] {
+        faults.push(outage(p, at, 1.5));
+        let plan = InjectionPlan { faults: faults.clone(), ..Default::default() };
+        let cur = makespan_under(&spec, &sched, plan);
+        assert!(cur >= prev, "{} outages: {cur} < {prev}", faults.len());
+        prev = cur;
+    }
+}
+
+/// Preemption ordering: clean ≤ pause-and-resume ≤ lose-and-redo for
+/// the same window.
+#[test]
+fn preemption_resume_never_beats_clean_and_redo_never_beats_resume() {
+    let spec = params::table2();
+    let sched = solve_for(&spec, TimingModel::NoFrontEnd);
+    let clean = makespan_under(&spec, &sched, InjectionPlan::default());
+    let mid = sched.makespan * 0.6;
+    let window = |redo: bool| InjectionPlan {
+        faults: vec![FaultSpec {
+            processor: 0,
+            at: mid,
+            duration: Some(2.0),
+            redo,
+            blocks_recv: false,
+        }],
+        ..Default::default()
+    };
+    let resume = makespan_under(&spec, &sched, window(false));
+    let redo = makespan_under(&spec, &sched, window(true));
+    assert!(resume >= clean, "resume {resume} < clean {clean}");
+    assert!(redo >= resume, "redo {redo} < resume {resume}");
+    assert!(redo > clean, "a mid-compute redo window must cost something");
+}
+
+/// Link capacity windows (the absorbed `sim::timevary` behavior): a
+/// slowdown window only delays, and a factor-1.0 window is a bitwise
+/// no-op.
+#[test]
+fn link_windows_slow_down_but_unit_factor_is_a_noop() {
+    let spec = params::table2();
+    let sched = solve_for(&spec, TimingModel::NoFrontEnd);
+    let clean = makespan_under(&spec, &sched, InjectionPlan::default());
+
+    let slow = InjectionPlan {
+        link_windows: vec![LinkWindow { source: 0, from: 0.0, duration: 3.0, factor: 0.25 }],
+        ..Default::default()
+    };
+    let slowed = makespan_under(&spec, &sched, slow);
+    assert!(slowed > clean, "a 4x slowdown across the first sends must delay: {slowed}");
+
+    let unit = InjectionPlan {
+        link_windows: vec![LinkWindow { source: 0, from: 0.0, duration: 3.0, factor: 1.0 }],
+        ..Default::default()
+    };
+    let same = makespan_under(&spec, &sched, unit);
+    assert_eq!(same, clean, "factor-1.0 window changed the timeline");
+}
+
+/// Seeded-random faults are deterministic: the same seed produces the
+/// identical report, a different seed is allowed to differ, and the
+/// injected count is reported.
+#[test]
+fn random_faults_are_seed_deterministic() {
+    let spec = params::table2();
+    let sched = solve_for(&spec, TimingModel::NoFrontEnd);
+    let opts = ReplayOptions {
+        seed: 11,
+        plan: InjectionPlan { random_faults: 2, ..Default::default() },
+        ..Default::default()
+    };
+    let a = replay(&spec, &sched, &opts).unwrap();
+    let b = replay(&spec, &sched, &opts).unwrap();
+    assert_eq!(a, b, "same seed must reproduce the identical report");
+    assert_eq!(a.faults_injected, 2);
+    let clean = replay(&spec, &sched, &ReplayOptions::default()).unwrap();
+    assert!(a.simulated_makespan >= clean.simulated_makespan);
+}

@@ -17,6 +17,13 @@ Two layers, both fatal on failure:
      cell, factor storage against the dense 2m^2 equivalent, and the
      Gilbert-Peierls DFS work counter against the column-sweep scan on
      the same solve.
+   - sim: the cluster replay-engine guards — engine cells must cover
+     the 100 / 1k / 10k processor scales with positive event counts
+     and throughput, a jitter-free gated replay must reproduce the
+     stamped makespan exactly (rel_gap == 0.0, bit-for-bit), the
+     cluster-vs-legacy overhead ratio must be positive, and the
+     fault-duration sweep must be monotone (longer outages never
+     finish earlier).
    - serve: the serving-tier load-harness guards — sustained
      throughput positive with ordered finite latency percentiles, a
      warm-shard hit rate above zero under client-keyed load, shed rate
@@ -134,6 +141,61 @@ def gate_hypersparse(doc, name):
           f"vs bg {bg['sweep_ms']:.2f}ms")
 
 
+# Cells/sections a BENCH_sim.json must carry.
+SIM_CELL_KEYS = {
+    "m", "n", "events", "max_queue_depth", "wall_ns", "events_per_sec",
+    "makespan", "rel_gap",
+}
+SIM_SCALES = {100, 1000, 10000}
+SIM_OVERHEAD_KEYS = {"legacy_ns", "cluster_ns", "ratio"}
+
+
+def gate_sim(doc, name):
+    cells = {}
+    for c in doc.get("engine_cells", []):
+        require_keys(c, SIM_CELL_KEYS, f"{name}: engine_cells[m={c.get('m')}]")
+        cells[c["m"]] = c
+    missing = SIM_SCALES - set(cells)
+    if missing:
+        fail(f"{name}: engine cells missing scales {sorted(missing)}")
+    for c in cells.values():
+        if c["events"] <= 0:
+            fail(f"{name}: m={c['m']}: replay processed no events")
+        if c["events_per_sec"] <= 0:
+            fail(f"{name}: m={c['m']}: non-positive throughput")
+        if c["makespan"] <= 0:
+            fail(f"{name}: m={c['m']}: non-positive makespan")
+        # Determinism contract: a jitter-free fault-free gated replay
+        # reproduces the stamped makespan bit-for-bit, so the gate is
+        # exact zero, not a tolerance.
+        if c["rel_gap"] != 0.0:
+            fail(f"{name}: m={c['m']}: jitter-free replay drifted "
+                 f"(rel_gap {c['rel_gap']:+.3e})")
+
+    over = doc.get("replay_overhead")
+    if not over:
+        fail(f"{name}: missing replay_overhead")
+    require_keys(over, SIM_OVERHEAD_KEYS, f"{name}: replay_overhead")
+    if over["ratio"] <= 0:
+        fail(f"{name}: replay_overhead ratio {over['ratio']} not positive")
+
+    sweep = doc.get("fault_sweep")
+    if not sweep:
+        fail(f"{name}: missing fault_sweep")
+    spans = sweep.get("makespans")
+    if not spans or len(spans) < 2:
+        fail(f"{name}: fault_sweep needs at least two makespans")
+    for a, b in zip(spans, spans[1:]):
+        if b < a:
+            fail(f"{name}: fault sweep not monotone: a longer outage "
+                 f"finished earlier ({b} < {a})")
+
+    big = cells[10000]
+    print(f"  gate ok: 10k-processor replay {big['events']:.0f} events at "
+          f"{big['events_per_sec'] / 1e6:.2f}M events/s, rel_gap exactly 0; "
+          f"cluster/legacy overhead {over['ratio']:.2f}x; fault sweep monotone")
+
+
 # Cells every phase object in a BENCH_serve.json must carry.
 SERVE_PHASE_KEYS = {
     "offered", "accepted", "shed", "errors", "lost", "wall_s", "req_s",
@@ -197,6 +259,8 @@ def main(paths):
             gate_hypersparse(doc, path)
         if doc.get("group") == "serve":
             gate_serve(doc, path)
+        if doc.get("group") == "sim":
+            gate_sim(doc, path)
         print(f"check_bench_schema: {path}: ok")
 
 
