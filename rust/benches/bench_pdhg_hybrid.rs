@@ -1,0 +1,365 @@
+//! Bench: the sparse / batched / hybrid first-order solving tier.
+//!
+//! Four sections:
+//!
+//! - **matvec cells** — the CSC O(nnz) PDHG matvec against a dense
+//!   row-major matvec over the *same* standardized constraint matrix,
+//!   on growing FE instances. The scheduling matrices are ~95 % zeros,
+//!   so the sparse kernel must win by a wide margin on the largest
+//!   cell (the gate in `scripts/check_bench_schema.py` demands >= 4x).
+//! - **block cells** — [`dlt::pdhg::solve_block`] panels of width
+//!   1 / 4 / 16 job-scaled scenarios against the same scenarios solved
+//!   one by one with [`dlt::pdhg::solve_rust`]: one shared matrix pass
+//!   and one `||A||` power iteration per panel, per-column early
+//!   retirement. The width-16 throughput gate is >= 2x sequential.
+//! - **hybrid** — a warm-session job sweep through `Backend::Hybrid`
+//!   (loosened PDHG stage, crossover basis guess, warm simplex
+//!   cleanup) vs the same sweep on cold revised simplex; the cleanup
+//!   pivot total must not exceed the cold pivot total.
+//! - **refine** — [`dlt::experiments::sweep::refine`] knee bisection
+//!   on a link-scale axis vs the uniform fine grid that would reach
+//!   the same bracket resolution.
+//!
+//! With `DLT_BENCH_JSON_DIR=dir` the results land in
+//! `dir/BENCH_pdhg_hybrid.json`; `DLT_BENCH_FAST=1` trims repetitions
+//! and block budgets; `DLT_BENCH_ASSERT=1` turns the gates into
+//! in-process panics (CI leaves it unset so the JSON artifact survives
+//! a regression and the python step stays the single gate).
+
+use dlt::api::{Backend, Family, SolveRequest, Solver};
+use dlt::config::json::Json;
+use dlt::dlt::frontend;
+use dlt::dlt::schedule::TimingModel;
+use dlt::experiments::sweep::{refine, ContinuousAxis};
+use dlt::model::SystemSpec;
+use dlt::pdhg::{solve_block, solve_rust, PdhgOptions, SparseLp};
+use std::time::Instant;
+
+fn spec(n: usize, m: usize) -> SystemSpec {
+    let mut b = SystemSpec::builder();
+    for i in 0..n {
+        b = b.source(0.2 + 0.1 * i as f64, i as f64);
+    }
+    let a: Vec<f64> = (0..m).map(|k| 2.0 + 0.5 * k as f64).collect();
+    b.processors(&a).job(100.0).build().unwrap()
+}
+
+/// Average nanoseconds per call of `f` over `reps` calls.
+fn time_ns<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        f();
+    }
+    t0.elapsed().as_nanos() as f64 / reps.max(1) as f64
+}
+
+struct MatvecCell {
+    cell: String,
+    rows: usize,
+    vars: usize,
+    nnz: usize,
+    dense_ns: f64,
+    sparse_ns: f64,
+    speedup: f64,
+}
+
+/// Sparse CSC matvec vs a dense row-major matvec over the identical
+/// standardized FE constraint matrix.
+fn matvec_cell(n: usize, m: usize, reps: usize) -> MatvecCell {
+    let lp = frontend::build_lp(&spec(n, m), &Default::default());
+    let slp = SparseLp::build(&lp);
+    let (rows, vars) = (slp.num_rows(), slp.num_vars());
+
+    let mut dense = vec![0.0; rows * vars];
+    for j in 0..vars {
+        for (i, v) in slp.a.col(j) {
+            dense[i * vars + j] = v;
+        }
+    }
+    let x: Vec<f64> = (0..vars).map(|j| 1.0 + (j % 7) as f64).collect();
+    let mut out = vec![0.0; rows];
+
+    let dense_ns = time_ns(reps, || {
+        for (i, o) in out.iter_mut().enumerate() {
+            let row = &dense[i * vars..(i + 1) * vars];
+            *o = row.iter().zip(&x).map(|(a, b)| a * b).sum();
+        }
+        std::hint::black_box(&out);
+    });
+    let sparse_ns = time_ns(reps, || {
+        slp.a.matvec_into(&x, &mut out);
+        std::hint::black_box(&out);
+    });
+
+    MatvecCell {
+        cell: format!("fe_n{n}_m{m}"),
+        rows,
+        vars,
+        nnz: slp.a.nnz(),
+        dense_ns,
+        sparse_ns,
+        speedup: dense_ns / sparse_ns.max(1e-9),
+    }
+}
+
+struct BlockCell {
+    width: usize,
+    sequential_ms: f64,
+    block_ms: f64,
+    throughput_ratio: f64,
+    columns_retired: usize,
+}
+
+/// One panel of `width` job-scaled FE scenarios vs the same scenarios
+/// solved sequentially, best-of-`reps` wall clock on both sides.
+fn block_cell(base: &SystemSpec, width: usize, opts: &PdhgOptions, reps: usize) -> BlockCell {
+    let mut lps = Vec::new();
+    for k in 0..width {
+        let s = base.with_job(100.0 + 25.0 * k as f64);
+        lps.push(frontend::build_lp(&s, &Default::default()));
+    }
+
+    let mut seq_ns = f64::INFINITY;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        for lp in &lps {
+            std::hint::black_box(solve_rust(lp, opts).expect("sequential pdhg"));
+        }
+        seq_ns = seq_ns.min(t0.elapsed().as_nanos() as f64);
+    }
+
+    let mut blk_ns = f64::INFINITY;
+    let mut retired = 0usize;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let blk = solve_block(&lps, opts).expect("block pdhg");
+        blk_ns = blk_ns.min(t0.elapsed().as_nanos() as f64);
+        retired = blk.columns_retired;
+        if std::env::var("DLT_BENCH_ASSERT").is_ok() {
+            for (lp, col) in lps.iter().zip(&blk.columns) {
+                let seq = solve_rust(lp, opts).expect("parity solve");
+                assert!(
+                    (col.objective - seq.objective).abs() < 1e-6 * seq.objective.abs().max(1.0),
+                    "width {width}: block column drifted from the sequential driver"
+                );
+            }
+        }
+        std::hint::black_box(&blk);
+    }
+
+    BlockCell {
+        width,
+        sequential_ms: seq_ns * 1e-6,
+        block_ms: blk_ns * 1e-6,
+        throughput_ratio: seq_ns / blk_ns.max(1.0),
+        columns_retired: retired,
+    }
+}
+
+fn main() {
+    let fast = std::env::var("DLT_BENCH_FAST").is_ok();
+    let assert_gates = std::env::var("DLT_BENCH_ASSERT").is_ok();
+    let matvec_reps = if fast { 2_000 } else { 20_000 };
+    let block_reps = if fast { 2 } else { 4 };
+    let sweep_points = if fast { 12 } else { 24 };
+
+    println!("== bench group: pdhg (sparse kernels, block batching, hybrid crossover) ==");
+
+    // --- sparse vs dense matvec on growing FE instances ---
+    let matvec_cells: Vec<MatvecCell> = [(2usize, 5usize), (3, 10), (3, 40)]
+        .iter()
+        .map(|&(n, m)| matvec_cell(n, m, matvec_reps))
+        .collect();
+    println!(
+        "{:<14} {:>6} {:>6} {:>7} {:>12} {:>12} {:>9}",
+        "matvec cell", "rows", "vars", "nnz", "dense", "sparse", "speedup"
+    );
+    for c in &matvec_cells {
+        println!(
+            "{:<14} {:>6} {:>6} {:>7} {:>10.0}ns {:>10.0}ns {:>8.1}x",
+            c.cell, c.rows, c.vars, c.nnz, c.dense_ns, c.sparse_ns, c.speedup
+        );
+    }
+    if assert_gates {
+        let largest = matvec_cells.last().expect("at least one matvec cell");
+        assert!(
+            largest.speedup >= 4.0,
+            "sparse matvec only {:.1}x faster than dense on {}",
+            largest.speedup,
+            largest.cell
+        );
+    }
+
+    // --- block panels vs sequential PDHG ---
+    // Loosened tolerances keep the per-column block counts moderate
+    // (and spread, so early retirement engages); the ratio compares
+    // identical trajectories on both sides either way.
+    let popts = PdhgOptions {
+        tol: 1e-5,
+        gap_tol: 1e-4,
+        max_blocks: if fast { 150 } else { 400 },
+        ..Default::default()
+    };
+    let block_base = spec(2, 8);
+    let block_cells: Vec<BlockCell> = [1usize, 4, 16]
+        .iter()
+        .map(|&w| block_cell(&block_base, w, &popts, block_reps))
+        .collect();
+    println!(
+        "\n{:<12} {:>14} {:>14} {:>12} {:>9}",
+        "block width", "sequential", "block", "throughput", "retired"
+    );
+    for c in &block_cells {
+        println!(
+            "{:<12} {:>12.2}ms {:>12.2}ms {:>11.2}x {:>9}",
+            c.width, c.sequential_ms, c.block_ms, c.throughput_ratio, c.columns_retired
+        );
+    }
+    if assert_gates {
+        let wide = block_cells.last().expect("width-16 cell");
+        assert!(
+            wide.throughput_ratio >= 2.0,
+            "block-of-16 only {:.2}x sequential throughput",
+            wide.throughput_ratio
+        );
+    }
+
+    // --- hybrid crossover sweep vs cold simplex sweep ---
+    let s = spec(2, 5);
+    let jobs: Vec<f64> = (0..sweep_points).map(|k| 100.0 + 10.0 * k as f64).collect();
+
+    let mut hybrid_session = Solver::new().backend(Backend::Hybrid).build();
+    let mut cleanup_pivots = 0usize;
+    let mut stage_blocks = 0usize;
+    let t0 = Instant::now();
+    for &j in &jobs {
+        let resp = hybrid_session
+            .solve(&SolveRequest::new(Family::Frontend, s.with_job(j)))
+            .expect("hybrid solve");
+        let d = resp.diagnostics.pdhg.as_ref().expect("hybrid first-order diagnostics");
+        cleanup_pivots += d.crossover_pivots;
+        stage_blocks += d.blocks;
+    }
+    let hybrid_ms = t0.elapsed().as_nanos() as f64 * 1e-6;
+
+    let mut cold_session = Solver::new().warm_start(false).build();
+    let mut cold_pivots = 0usize;
+    let t0 = Instant::now();
+    for &j in &jobs {
+        let resp = cold_session
+            .solve(&SolveRequest::new(Family::Frontend, s.with_job(j)))
+            .expect("cold simplex solve");
+        let d = &resp.diagnostics;
+        cold_pivots += d.iterations + d.phase1_iterations + d.dual_iterations;
+    }
+    let cold_ms = t0.elapsed().as_nanos() as f64 * 1e-6;
+
+    let hybrid_note = format!(
+        "hybrid sweep ({sweep_points} jobs): {cleanup_pivots} cleanup pivots \
+         ({stage_blocks} pdhg blocks, {hybrid_ms:.2}ms) vs cold simplex \
+         {cold_pivots} pivots ({cold_ms:.2}ms)"
+    );
+    println!("\n   note: {hybrid_note}");
+    if assert_gates {
+        assert!(
+            cleanup_pivots <= cold_pivots,
+            "hybrid cleanup spent {cleanup_pivots} pivots, cold simplex {cold_pivots}"
+        );
+    }
+
+    // --- adaptive refinement vs a uniform fine grid ---
+    let coarse: Vec<f64> = (1..=6).map(|k| k as f64).collect();
+    let (threshold, tol) = (0.05, 0.05);
+    let axis = ContinuousAxis::LinkScale;
+    let r = refine(&s, TimingModel::FrontEnd, axis, &coarse, threshold, tol).expect("refine");
+    let span = coarse.last().unwrap() - coarse.first().unwrap();
+    // A uniform grid resolving the knee to the same bracket width
+    // (`tol` x one coarse window, the windows here being unit-width).
+    let fine_grid_equivalent = (span / tol).ceil() as usize + 1;
+    let (knee_lo, knee_hi) = r.knee.expect("knee exists on this axis");
+    let refine_note = format!(
+        "refine (links 1..6): knee [{knee_lo:.4}, {knee_hi:.4}] in {} solves vs \
+         {fine_grid_equivalent}-point uniform grid",
+        r.solves
+    );
+    println!("   note: {refine_note}");
+    if assert_gates {
+        assert!(
+            r.solves < fine_grid_equivalent,
+            "refinement spent {} solves, no better than the {fine_grid_equivalent}-point grid",
+            r.solves
+        );
+    }
+
+    // --- JSON artifact ---
+    let matvec_json: Vec<Json> = matvec_cells
+        .iter()
+        .map(|c| {
+            Json::Object(vec![
+                ("cell".into(), Json::Str(c.cell.clone())),
+                ("rows".into(), Json::Num(c.rows as f64)),
+                ("vars".into(), Json::Num(c.vars as f64)),
+                ("nnz".into(), Json::Num(c.nnz as f64)),
+                ("dense_ns".into(), Json::Num(c.dense_ns)),
+                ("sparse_ns".into(), Json::Num(c.sparse_ns)),
+                ("speedup".into(), Json::Num(c.speedup)),
+            ])
+        })
+        .collect();
+    let block_json: Vec<Json> = block_cells
+        .iter()
+        .map(|c| {
+            Json::Object(vec![
+                ("width".into(), Json::Num(c.width as f64)),
+                ("sequential_ms".into(), Json::Num(c.sequential_ms)),
+                ("block_ms".into(), Json::Num(c.block_ms)),
+                ("throughput_ratio".into(), Json::Num(c.throughput_ratio)),
+                ("columns_retired".into(), Json::Num(c.columns_retired as f64)),
+            ])
+        })
+        .collect();
+    let notes = Json::Array(vec![Json::Str(hybrid_note), Json::Str(refine_note)]);
+    let doc = Json::Object(vec![
+        ("group".into(), Json::Str("pdhg".into())),
+        (
+            "instance".into(),
+            Json::Str(format!(
+                "fe scheduling LPs, {sweep_points}-point hybrid sweep, \
+                 block budget {} blocks",
+                popts.max_blocks
+            )),
+        ),
+        ("matvec_cells".into(), Json::Array(matvec_json)),
+        ("block_cells".into(), Json::Array(block_json)),
+        (
+            "hybrid".into(),
+            Json::Object(vec![
+                ("sweep_points".into(), Json::Num(sweep_points as f64)),
+                ("hybrid_cleanup_pivots".into(), Json::Num(cleanup_pivots as f64)),
+                ("hybrid_stage_blocks".into(), Json::Num(stage_blocks as f64)),
+                ("cold_simplex_pivots".into(), Json::Num(cold_pivots as f64)),
+                ("hybrid_ms".into(), Json::Num(hybrid_ms)),
+                ("cold_ms".into(), Json::Num(cold_ms)),
+            ]),
+        ),
+        (
+            "refine".into(),
+            Json::Object(vec![
+                ("coarse_points".into(), Json::Num(coarse.len() as f64)),
+                ("threshold".into(), Json::Num(threshold)),
+                ("tol".into(), Json::Num(tol)),
+                ("refine_solves".into(), Json::Num(r.solves as f64)),
+                ("fine_grid_equivalent".into(), Json::Num(fine_grid_equivalent as f64)),
+                ("knee_lo".into(), Json::Num(knee_lo)),
+                ("knee_hi".into(), Json::Num(knee_hi)),
+            ]),
+        ),
+        ("notes".into(), notes),
+    ]);
+    if let Ok(dir) = std::env::var("DLT_BENCH_JSON_DIR") {
+        std::fs::create_dir_all(&dir).expect("create bench json dir");
+        let path = std::path::Path::new(&dir).join("BENCH_pdhg_hybrid.json");
+        std::fs::write(&path, doc.to_string_pretty()).expect("write BENCH_pdhg_hybrid.json");
+        println!("   wrote {}", path.display());
+    }
+}

@@ -123,7 +123,7 @@ fn main() {
     let opts = PdhgOptions::default();
     rep.report(
         "pdhg_rust_fe_n2_m5",
-        b.bench_val(|| solve_rust(&lp, 64, 64, &opts).unwrap()),
+        b.bench_val(|| solve_rust(&lp, &opts).unwrap()),
     );
 
     if Runtime::artifacts_available() {

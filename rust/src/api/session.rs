@@ -172,9 +172,10 @@ impl Session {
         self.cache.approx_bytes() + seed_bytes
     }
 
-    /// Solve one request. Warm state is consulted and updated for the
-    /// simplex backends; PDHG requests solve cold (but behind presolve
-    /// unless disabled).
+    /// Solve one request. Warm state is consulted and updated for
+    /// every backend that can use it: cached bases for the revised
+    /// simplex and the hybrid's finish, cached primal points for the
+    /// first-order backends. Only the dense tableau always runs cold.
     pub fn solve(&mut self, req: &SolveRequest) -> std::result::Result<SolveResponse, ApiError> {
         self.solves += 1;
         self.solve_inner(req).map_err(ApiError::from)
@@ -239,10 +240,12 @@ impl Session {
             }),
         };
 
-        // Only the revised backend consumes warm bases: PDHG has no
-        // basis at all and the dense tableau always runs cold, so for
-        // both the cache is skipped and `warm_start` stays honest.
-        let warm = self.config.warm_start && popts.backend == Backend::RevisedSimplex;
+        // Warm state flows to the backends that can consume it: the
+        // revised simplex (cached bases), the first-order backends
+        // (cached primal points), and the hybrid (both). The dense
+        // tableau always runs cold, so for it the cache is skipped and
+        // `warm_start` stays honest.
+        let warm = self.config.warm_start && popts.backend != Backend::DenseTableau;
         let key = req.family.as_str();
         let attempts_before = self.cache.warm_attempts;
         let t0 = std::time::Instant::now();

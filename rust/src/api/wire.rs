@@ -109,7 +109,8 @@ fn mode_from_str(s: &str) -> Result<Mode> {
 /// [`crate::api::Solver`]'s builder methods).
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct RequestOptions {
-    /// Backend override (`revised_simplex` | `dense_tableau` | `pdhg`).
+    /// Backend override (`revised_simplex` | `dense_tableau` | `pdhg`
+    /// | `pdhg_block` | `hybrid`).
     pub backend: Option<Backend>,
     /// Presolve override.
     pub presolve: Option<bool>,
@@ -210,7 +211,8 @@ impl RequestOptions {
             let s = b.as_str()?;
             o.backend = Some(Backend::parse(s).ok_or_else(|| {
                 Error::Config(format!(
-                    "unknown backend `{s}` (expected revised_simplex|dense_tableau|pdhg)"
+                    "unknown backend `{s}` (expected \
+                     revised_simplex|dense_tableau|pdhg|pdhg_block|hybrid)"
                 ))
             })?);
         }
@@ -320,7 +322,10 @@ impl SolveRequest {
 /// Solver diagnostics attached to every response.
 #[derive(Debug, Clone, Default)]
 pub struct Diagnostics {
-    /// Total backend iterations (simplex pivots, or PDHG blocks).
+    /// Total backend iterations: simplex pivots, or — for every
+    /// first-order backend — PDHG iterations counted as
+    /// `blocks × BLOCK_STEPS` (the hybrid reports its simplex finish
+    /// here and the first-order stage under `pdhg`).
     pub iterations: usize,
     /// Simplex phase-1 iterations (0 on warm or PDHG solves).
     pub phase1_iterations: usize,
@@ -362,7 +367,8 @@ pub struct Diagnostics {
     pub scan_solves: usize,
     /// What presolve removed in front of the backend.
     pub presolve: PresolveStats,
-    /// PDHG convergence details (`backend == pdhg` only).
+    /// First-order convergence details (`pdhg` / `pdhg_block` /
+    /// `hybrid` backends only).
     pub pdhg: Option<PdhgDiagnostics>,
     /// Serving-tier routing details (`dlt serve` responses only).
     pub serve: Option<ServeDiagnostics>,
@@ -516,6 +522,9 @@ impl SolveResponse {
                     ("primal_residual".into(), Json::Num(p.residuals.0)),
                     ("dual_residual".into(), Json::Num(p.residuals.1)),
                     ("gap".into(), Json::Num(p.residuals.2)),
+                    ("crossover_pivots".into(), Json::Num(p.crossover_pivots as f64)),
+                    ("columns_retired".into(), Json::Num(p.columns_retired as f64)),
+                    ("block_width".into(), Json::Num(p.block_width as f64)),
                 ]),
             ));
         }
@@ -571,6 +580,9 @@ impl SolveResponse {
                     p.req("dual_residual")?.as_f64()?,
                     p.req("gap")?.as_f64()?,
                 ),
+                crossover_pivots: p.req("crossover_pivots")?.as_usize()?,
+                columns_retired: p.req("columns_retired")?.as_usize()?,
+                block_width: p.req("block_width")?.as_usize()?,
             }),
             None => None,
         };

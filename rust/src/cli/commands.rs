@@ -53,6 +53,22 @@ fn simplex_of(a: &Args) -> Result<SimplexOptions> {
     Ok(s)
 }
 
+/// Session backend flag shared by `sweep`, `batch` and `serve`:
+/// `--backend revised_simplex|dense_tableau|pdhg|pdhg_block|hybrid`
+/// (the kebab-case spelling `pdhg-block` is accepted as an alias).
+fn backend_of(a: &Args) -> Result<Backend> {
+    match a.get("backend") {
+        None => Ok(Backend::default()),
+        Some("pdhg-block") => Ok(Backend::PdhgBlock),
+        Some(s) => Backend::parse(s).ok_or_else(|| {
+            Error::Usage(format!(
+                "--backend must be \
+                 revised_simplex|dense_tableau|pdhg|pdhg_block|hybrid, got `{s}`"
+            ))
+        }),
+    }
+}
+
 fn solve_spec(
     spec: &SystemSpec,
     model: TimingModel,
@@ -385,9 +401,15 @@ fn linspace(from: f64, to: f64, points: usize) -> Vec<f64> {
 /// `release`, `links`) crossed left-to-right into one grid; `--steal`
 /// switches the scheduler from contiguous chunks to work-stealing
 /// deques, which is the right choice for ragged grids (any grid with a
-/// `procs` axis).
+/// `procs` axis). `--backend pdhg-block` batches the grid into
+/// first-order panels instead of per-scenario simplex solves, and
+/// `--refine TOL` bisects a single continuous axis around the
+/// diminishing-returns knee (see
+/// [`crate::experiments::sweep::refine`]).
 pub fn sweep_cmd(a: &Args) -> Result<()> {
-    use crate::experiments::sweep::{cross_grid, run_scenarios, Axis, SweepOptions};
+    use crate::experiments::sweep::{
+        cross_grid, refine, run_scenarios, Axis, ContinuousAxis, SweepOptions,
+    };
 
     let spec = load(a)?;
     let model = model_of(a)?;
@@ -397,6 +419,7 @@ pub fn sweep_cmd(a: &Args) -> Result<()> {
         warm_start: !a.has("cold"),
         steal: a.has("steal"),
         simplex: simplex_of(a)?,
+        backend: backend_of(a)?,
     };
 
     let param = a.get_or("param", "job");
@@ -439,6 +462,49 @@ pub fn sweep_cmd(a: &Args) -> Result<()> {
             }
         }
     }
+    if let Some(tol) = a.get_f64("refine")? {
+        let threshold = a.get_f64("knee-threshold")?.unwrap_or(0.06);
+        let [axis] = axes.as_slice() else {
+            return Err(Error::Usage(format!(
+                "--refine needs exactly one sweep axis, got {}",
+                axes.len()
+            )));
+        };
+        let (caxis, values) = match axis {
+            Axis::Jobs(v) => (ContinuousAxis::Jobs, v.as_slice()),
+            Axis::ReleaseScale(v) => (ContinuousAxis::ReleaseScale, v.as_slice()),
+            Axis::LinkScale(v) => (ContinuousAxis::LinkScale, v.as_slice()),
+            Axis::Procs(_) => {
+                return Err(Error::Usage(
+                    "--refine needs a continuous axis (job|release|links); \
+                     the procs axis is discrete — use `dlt advise`"
+                        .into(),
+                ))
+            }
+        };
+        let t0 = std::time::Instant::now();
+        let r = refine(&spec, model, caxis, values, threshold, tol)?;
+        let wall = t0.elapsed();
+        println!("{:>24} {:>14} {:>10}", "scenario", "T_f", "lp_iters");
+        for p in &r.points {
+            println!("{:>24} {:>14.6} {:>10}", p.label, p.makespan, p.lp_iterations);
+        }
+        match r.knee {
+            Some((lo, hi)) => println!(
+                "knee bracket [{lo:.6}, {hi:.6}] (width {:.6}) after {} solves in {wall:?}",
+                hi - lo,
+                r.solves,
+            ),
+            None => println!(
+                "no knee: every coarse step still improves >= {:.1}% per axis unit \
+                 ({} solves in {wall:?})",
+                threshold * 100.0,
+                r.solves,
+            ),
+        }
+        return Ok(());
+    }
+
     let scenarios = cross_grid(&spec, model, &axes);
 
     let t0 = std::time::Instant::now();
@@ -524,14 +590,7 @@ pub fn batch(a: &Args) -> Result<()> {
     let doc = Json::parse(&text)?;
     let items = doc.as_array()?;
 
-    let backend = match a.get("backend") {
-        None => Backend::default(),
-        Some(s) => Backend::parse(s).ok_or_else(|| {
-            Error::Usage(format!(
-                "--backend must be revised_simplex|dense_tableau|pdhg, got `{s}`"
-            ))
-        })?,
-    };
+    let backend = backend_of(a)?;
     let threads = a.get_usize("threads")?.unwrap_or(0);
 
     let parsed: Vec<std::result::Result<SolveRequest, ApiError>> = items
@@ -625,14 +684,7 @@ pub fn artifacts(a: &Args) -> Result<()> {
 pub fn serve(a: &Args) -> Result<()> {
     use crate::serve::{ServeOptions, Server};
 
-    let backend = match a.get("backend") {
-        None => Backend::default(),
-        Some(s) => Backend::parse(s).ok_or_else(|| {
-            Error::Usage(format!(
-                "--backend must be revised_simplex|dense_tableau|pdhg, got `{s}`"
-            ))
-        })?,
-    };
+    let backend = backend_of(a)?;
 
     let mut opts = ServeOptions::default();
     let host = a.get_or("host", "127.0.0.1");

@@ -5,7 +5,7 @@
 //! dlt solve     --spec spec.json [--model fe|nfe] [--solver simplex|pdhg|pdhg-artifact]
 //!               [--factorization product_form_eta|forrest_tomlin|markowitz|bartels_golub]
 //!               [--pricing dantzig|devex|steepest_edge]
-//! dlt batch     [--requests FILE|-] [--backend revised_simplex|dense_tableau|pdhg]
+//! dlt batch     [--requests FILE|-] [--backend NAME]
 //!               [--factorization NAME] [--pricing NAME]
 //!               [--threads T] [--pretty]
 //! dlt simulate  --spec spec.json [--model fe|nfe] [--engine cluster|legacy]
@@ -18,6 +18,7 @@
 //!               [--release-from A --release-to B --release-points N]
 //!               [--link-from A --link-to B --link-points N]
 //!               [--threads T] [--cold] [--steal] [--model fe|nfe]
+//!               [--backend NAME] [--refine TOL] [--knee-threshold G]
 //! dlt speedup   --spec spec.json --sources 1,2,3
 //! dlt experiments [--exp fig12] [--csv-dir out/]
 //! dlt artifacts
@@ -93,7 +94,8 @@ COMMON FLAGS
 BATCH FLAGS
   --requests FILE    JSON array of api::SolveRequest (default/-: stdin)
   --backend NAME     default backend for requests that do not override:
-                     revised_simplex | dense_tableau | pdhg
+                     revised_simplex | dense_tableau | pdhg |
+                     pdhg_block (alias pdhg-block) | hybrid
   --threads T        batch worker threads (default: one per core)
   --pretty           pretty-print the response array
   (--factorization / --pricing set the session defaults; per-request
@@ -130,6 +132,13 @@ SWEEP FLAGS
   --cold             disable basis warm starts (baseline measurement)
   --steal            work-stealing scheduler (best for ragged grids,
                      e.g. any grid with a procs axis)
+  --backend NAME     sweep solver backend (see BATCH FLAGS); pdhg_block
+                     batches the grid into first-order panels
+  --refine TOL       bisect a single continuous axis around the
+                     diminishing-returns knee until the bracket width
+                     drops below TOL x the coarse interval
+  --knee-threshold G relative-improvement-per-unit knee threshold for
+                     --refine (default 0.06)
 
 SERVE FLAGS
   --host H           bind address (default 127.0.0.1)
@@ -209,6 +218,22 @@ mod tests {
             "sweep --spec {path} --param release,links --release-points 3 --link-points 3"
         )))
         .unwrap();
+        // First-order sweep backends, both spellings of the block one.
+        run(&argv(&format!("sweep --spec {path} --points 4 --backend pdhg-block"))).unwrap();
+        run(&argv(&format!("sweep --spec {path} --points 4 --backend pdhg_block"))).unwrap();
+        run(&argv(&format!("sweep --spec {path} --points 4 --backend hybrid"))).unwrap();
+        assert!(run(&argv(&format!("sweep --spec {path} --points 4 --backend cplex"))).is_err());
+        // Knee refinement bisects one continuous axis.
+        run(&argv(&format!(
+            "sweep --spec {path} --param links --link-points 4 --refine 0.25"
+        )))
+        .unwrap();
+        assert!(run(&argv(&format!("sweep --spec {path} --param procs --refine 0.25"))).is_err());
+        assert!(run(&argv(&format!(
+            "sweep --spec {path} --param job,links --points 3 --link-points 3 --refine 0.25"
+        )))
+        .is_err());
+        assert!(run(&argv(&format!("sweep --spec {path} --points 4 --refine 0"))).is_err());
         // Bad axis ranges are usage errors, not panics.
         assert!(run(&argv(&format!("sweep --spec {path} --param links --link-from 0"))).is_err());
         assert!(run(&argv(&format!(
@@ -277,6 +302,8 @@ mod tests {
         std::fs::write(path, body).unwrap();
         run(&argv(&format!("batch --requests {path} --threads 2"))).unwrap();
         run(&argv(&format!("batch --requests {path} --pretty --backend dense_tableau"))).unwrap();
+        run(&argv(&format!("batch --requests {path} --backend hybrid"))).unwrap();
+        run(&argv(&format!("batch --requests {path} --backend pdhg-block --threads 2"))).unwrap();
         run(&argv(&format!(
             "batch --requests {path} --factorization forrest_tomlin --pricing steepest_edge"
         )))

@@ -106,6 +106,16 @@ pub enum Advice {
     },
 }
 
+/// First index `k` such that the improvement `-gradients[k]` falls
+/// below `threshold` — the §6.2 "knee": the step from point `k` to
+/// point `k+1` is the first not worth taking, so the knee of the
+/// trade-off curve lies inside that interval. `None` when every step
+/// still clears the threshold. [`crate::experiments::sweep::refine`]
+/// uses this to pick the bracket it subdivides.
+pub fn knee_interval(gradients: &[f64], threshold: f64) -> Option<usize> {
+    gradients.iter().position(|&g| -g < threshold)
+}
+
 /// Run the advisor against a sweep.
 pub fn advise(table: &TradeoffTable, budgets: &Budgets) -> Advice {
     let pts = &table.points;
@@ -283,6 +293,24 @@ mod tests {
             Advice::Use { m, .. } => assert_eq!(m, 20),
             other => panic!("unexpected advice {other:?}"),
         }
+    }
+
+    #[test]
+    fn knee_interval_finds_first_below_threshold_step() {
+        // Improvements of 10%, 8%, 3%, 1%: with a 6% threshold the
+        // knee is inside the third interval (index 2).
+        let grads = [-0.10, -0.08, -0.03, -0.01];
+        assert_eq!(knee_interval(&grads, 0.06), Some(2));
+        assert_eq!(knee_interval(&grads, 0.005), None);
+        assert_eq!(knee_interval(&grads, 0.5), Some(0));
+        assert_eq!(knee_interval(&[], 0.06), None);
+        // Consistency with the advisor's §6.2 walk-back on Table 5: the
+        // paper's m=5→6 step is below 6% (that is why advise() stops at
+        // m=5), so the first below-threshold interval is no later.
+        let t = TradeoffTable::sweep(&table5_spec()).unwrap();
+        let k = knee_interval(&t.gradients, 0.06).expect("Table 5 has a 6% knee");
+        assert!(k <= 4, "knee interval {k} must not be after the m=5->6 step");
+        assert!(-t.gradients[k] < 0.06);
     }
 
     #[test]

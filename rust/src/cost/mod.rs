@@ -3,5 +3,5 @@
 pub mod advisor;
 pub mod model;
 
-pub use advisor::{advise, Advice, Budgets, TradeoffPoint, TradeoffTable};
+pub use advisor::{advise, knee_interval, Advice, Budgets, TradeoffPoint, TradeoffTable};
 pub use model::{gradient_series, schedule_cost, tf_gradient};

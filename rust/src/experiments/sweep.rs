@@ -44,10 +44,15 @@
 //! and the solver benches.
 
 use crate::api::{Family, Session, Solver, SolveRequest};
+use crate::cost::advisor::knee_interval;
+use crate::dlt::frontend::FeOptions;
+use crate::dlt::no_frontend::NfeOptions;
 use crate::dlt::schedule::TimingModel;
 use crate::error::{Error, Result};
 use crate::lp::{SimplexOptions, WarmCache};
 use crate::model::SystemSpec;
+use crate::pdhg::{solve_block, PdhgOptions, BLOCK_STEPS, DEFAULT_BLOCK_WIDTH};
+use crate::pipeline::{Backend, ScenarioModel};
 use std::collections::VecDeque;
 use std::sync::Mutex;
 
@@ -126,6 +131,11 @@ pub struct SweepOptions {
     /// Schedule with work-stealing deques instead of contiguous chunks
     /// (better wall-clock on ragged grids; results are identical).
     pub steal: bool,
+    /// Backend every per-worker session solves with.
+    /// [`Backend::PdhgBlock`] short-circuits [`run_scenarios`] into
+    /// [`run_block_grid`]: the whole grid batches into shared
+    /// iteration streams instead of fanning across sessions.
+    pub backend: Backend,
     /// Simplex tuning (factorization / pricing strategies and
     /// tolerances) for every per-worker session.
     pub simplex: SimplexOptions,
@@ -137,6 +147,7 @@ impl Default for SweepOptions {
             threads: 0,
             warm_start: true,
             steal: false,
+            backend: Backend::default(),
             simplex: SimplexOptions::default(),
         }
     }
@@ -253,11 +264,19 @@ fn solve_scenario(session: &mut Session, sc: &Scenario) -> Result<SweepPoint> {
 }
 
 /// Solve every scenario, in input order, fanning across worker threads
-/// with one [`Session`] per worker.
+/// with one [`Session`] per worker. [`Backend::PdhgBlock`] grids
+/// instead batch through [`run_block_grid`] (one shared iteration
+/// stream per chunk of [`DEFAULT_BLOCK_WIDTH`] columns).
 pub fn run_scenarios(scenarios: &[Scenario], opts: &SweepOptions) -> Result<Vec<SweepPoint>> {
+    if opts.backend == Backend::PdhgBlock {
+        return run_block_grid(scenarios, &PdhgOptions::default());
+    }
     let warm = opts.warm_start;
     let simplex = opts.simplex.clone();
-    let init = move || Solver::new().warm_start(warm).simplex(simplex.clone()).build();
+    let backend = opts.backend;
+    let init = move || {
+        Solver::new().backend(backend).warm_start(warm).simplex(simplex.clone()).build()
+    };
     let results = if opts.steal {
         parallel_map_steal(scenarios, opts.threads, init, solve_scenario)
     } else {
@@ -267,6 +286,181 @@ pub fn run_scenarios(scenarios: &[Scenario], opts: &SweepOptions) -> Result<Vec<
         .into_iter()
         .map(|slot| slot.unwrap_or_else(|p| Err(Error::WorkerPanicked(p.message))))
         .collect()
+}
+
+/// Solve a scenario grid through the batched block-PDHG backend
+/// ([`solve_block`]): the grid is chunked into
+/// [`DEFAULT_BLOCK_WIDTH`]-column panels, each chunk sharing one
+/// matrix pass and one `‖A‖` power iteration per PDHG step, with
+/// per-column early retirement. The LPs are solved raw (no presolve);
+/// `makespan` is the LP objective (the families minimize `T_f`) and
+/// `lp_iterations` counts first-order iterations
+/// (`blocks × BLOCK_STEPS`). A grid whose points share constraint
+/// structure — a job-size or release axis — batches fully; mixed
+/// shapes fall back per column inside [`solve_block`].
+pub fn run_block_grid(scenarios: &[Scenario], opts: &PdhgOptions) -> Result<Vec<SweepPoint>> {
+    let mut out = Vec::with_capacity(scenarios.len());
+    for chunk in scenarios.chunks(DEFAULT_BLOCK_WIDTH.max(1)) {
+        let mut lps = Vec::with_capacity(chunk.len());
+        for sc in chunk {
+            sc.spec.validate()?;
+            let lp = match sc.model {
+                TimingModel::FrontEnd => FeOptions::default().build_lp(&sc.spec),
+                TimingModel::NoFrontEnd => NfeOptions::default().build_lp(&sc.spec),
+            };
+            lps.push(lp);
+        }
+        let blk = solve_block(&lps, opts)?;
+        for (sc, col) in chunk.iter().zip(blk.columns) {
+            out.push(SweepPoint {
+                label: sc.label.clone(),
+                makespan: col.objective,
+                lp_iterations: col.blocks * BLOCK_STEPS,
+            });
+        }
+    }
+    Ok(out)
+}
+
+/// A continuous sweep axis for [`refine`]. The processor axis is
+/// discrete and needs no refinement — the advisor walks it directly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ContinuousAxis {
+    /// Job size `J` ([`SystemSpec::with_job`]).
+    Jobs,
+    /// Release-time scale ([`SystemSpec::with_scaled_releases`]).
+    ReleaseScale,
+    /// Link-speed scale ([`SystemSpec::with_scaled_links`]).
+    LinkScale,
+}
+
+impl ContinuousAxis {
+    /// Spec at axis value `v`.
+    fn apply(self, spec: &SystemSpec, v: f64) -> SystemSpec {
+        match self {
+            ContinuousAxis::Jobs => spec.with_job(v),
+            ContinuousAxis::ReleaseScale => spec.with_scaled_releases(v),
+            ContinuousAxis::LinkScale => spec.with_scaled_links(v),
+        }
+    }
+
+    /// Point label in the same style as [`cross_grid`].
+    fn label(self, v: f64) -> String {
+        match self {
+            ContinuousAxis::Jobs => format!("J={v:.4}"),
+            ContinuousAxis::ReleaseScale => format!("R\u{d7}{v:.4}"),
+            ContinuousAxis::LinkScale => format!("G\u{d7}{v:.4}"),
+        }
+    }
+}
+
+/// Outcome of [`refine`]: the evaluated points plus the located knee
+/// bracket.
+#[derive(Debug, Clone)]
+pub struct Refinement {
+    /// Every evaluated point in ascending axis order — the coarse grid
+    /// plus the bisection midpoints.
+    pub points: Vec<SweepPoint>,
+    /// Axis interval bracketing the knee. `None` when no coarse-grid
+    /// step's improvement dropped below the threshold (no knee on the
+    /// grid).
+    pub knee: Option<(f64, f64)>,
+    /// LP solves spent (coarse grid + refinement midpoints).
+    pub solves: usize,
+}
+
+/// §6.2-style knee localization on a continuous axis.
+///
+/// Solves the coarse `values` grid, walks it in the improvement
+/// direction (descending values), finds the first interval whose
+/// relative improvement *rate* (relative `T_f` change per axis unit)
+/// drops below `threshold` ([`knee_interval`]), then bisects that
+/// interval — evaluating only midpoints, all through one warm
+/// [`Session`] — until its width shrinks below `tol` × the initial
+/// bracket width. The refined bracket always stays inside the coarse
+/// interval, so the coarse-grid knee is never missed; a uniform coarse
+/// grid makes the per-unit rates proportional to the advisor's
+/// per-step gradients.
+pub fn refine(
+    spec: &SystemSpec,
+    model: TimingModel,
+    axis: ContinuousAxis,
+    values: &[f64],
+    threshold: f64,
+    tol: f64,
+) -> Result<Refinement> {
+    if values.len() < 2 {
+        return Err(Error::Usage("refine needs at least two axis values".into()));
+    }
+    if !tol.is_finite() || tol <= 0.0 {
+        return Err(Error::Usage(format!("refine tolerance must be positive, got {tol}")));
+    }
+    let mut vals = values.to_vec();
+    vals.sort_by(|a, b| a.partial_cmp(b).expect("finite axis values"));
+
+    let mut session = Solver::new().build();
+    let mut solves = 0usize;
+    let mut eval = |v: f64, session: &mut Session| -> Result<(f64, SweepPoint)> {
+        let sc = Scenario { label: axis.label(v), spec: axis.apply(spec, v), model };
+        solves += 1;
+        Ok((v, solve_scenario(session, &sc)?))
+    };
+
+    let mut pts: Vec<(f64, SweepPoint)> = Vec::with_capacity(vals.len());
+    for &v in &vals {
+        pts.push(eval(v, &mut session)?);
+    }
+    // The improvement direction is *descending* axis values — a
+    // smaller job, release scale, or link scale can only shrink the
+    // makespan — so the walk mirrors the advisor's m = 1..M series,
+    // where every step adds resources and improvements taper off.
+    // `rate(a -> b)` is the relative T_f improvement per axis unit,
+    // based at the walk's current point `a` (negative when improving,
+    // like the advisor's gradients).
+    let rate = |va: f64, ta: f64, vb: f64, tb: f64| {
+        (tb - ta) / (ta.abs().max(1e-12) * (va - vb).max(f64::MIN_POSITIVE))
+    };
+    let n = pts.len();
+    let rates: Vec<f64> = (0..n - 1)
+        .map(|i| {
+            let a = &pts[n - 1 - i];
+            let b = &pts[n - 2 - i];
+            rate(a.0, a.1.makespan, b.0, b.1.makespan)
+        })
+        .collect();
+    let Some(k) = knee_interval(&rates, threshold) else {
+        return Ok(Refinement {
+            points: pts.into_iter().map(|(_, p)| p).collect(),
+            knee: None,
+            solves,
+        });
+    };
+
+    let (mut lo, mut hi) = (pts[n - 2 - k].0, pts[n - 1 - k].0);
+    let mut thi = pts[n - 1 - k].1.makespan;
+    let span = hi - lo;
+    // 64 midpoints would shrink the bracket by 2^64 — a backstop, not
+    // a budget anyone reaches with a sane tolerance.
+    while hi - lo > tol * span && solves < vals.len() + 64 {
+        let mid = 0.5 * (lo + hi);
+        let (_, p) = eval(mid, &mut session)?;
+        let tmid = p.makespan;
+        pts.push((mid, p));
+        if -rate(hi, thi, mid, tmid) < threshold {
+            // The improvement from `hi` down to `mid` is already below
+            // the threshold, so the crossing happened above `mid`.
+            lo = mid;
+        } else {
+            hi = mid;
+            thi = tmid;
+        }
+    }
+    pts.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("finite axis values"));
+    Ok(Refinement {
+        points: pts.into_iter().map(|(_, p)| p).collect(),
+        knee: Some((lo, hi)),
+        solves,
+    })
 }
 
 /// Run `f` over `items` on scoped worker threads, each worker owning a
@@ -661,6 +855,77 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn block_grid_matches_simplex_sweep() {
+        let spec = mild_spec();
+        let jobs: Vec<f64> = (0..20).map(|k| 80.0 + 15.0 * k as f64).collect();
+        let grid = job_grid(&spec, &jobs, TimingModel::NoFrontEnd);
+        let exact = run_scenarios(&grid, &SweepOptions::default()).unwrap();
+        // Through the SweepOptions routing (not a direct call), so the
+        // CLI's `--backend pdhg-block` path is what's exercised.
+        let block = run_scenarios(
+            &grid,
+            &SweepOptions { backend: Backend::PdhgBlock, ..SweepOptions::default() },
+        )
+        .unwrap();
+        assert_eq!(exact.len(), block.len());
+        for (a, b) in exact.iter().zip(block.iter()) {
+            assert_eq!(a.label, b.label, "order preserved");
+            assert!(
+                (a.makespan - b.makespan).abs() < 1e-3 * (1.0 + a.makespan.abs()),
+                "{}: simplex {} vs block {}",
+                a.label,
+                a.makespan,
+                b.makespan
+            );
+        }
+    }
+
+    #[test]
+    fn refine_tightens_the_knee_bracket() {
+        // Faster links shrink the makespan with diminishing returns —
+        // the continuous analogue of the §6.2 processor knee.
+        let spec = mild_spec();
+        let coarse: Vec<f64> = (1..=6).map(|k| k as f64).collect();
+        let threshold = 0.05;
+        let r = refine(
+            &spec,
+            TimingModel::FrontEnd,
+            ContinuousAxis::LinkScale,
+            &coarse,
+            threshold,
+            0.05,
+        )
+        .unwrap();
+        let (lo, hi) = r.knee.expect("diminishing returns must produce a knee");
+        // The refined bracket lies inside one coarse interval ...
+        let k = coarse.windows(2).position(|w| w[0] <= lo && hi <= w[1]);
+        assert!(k.is_some(), "refined bracket [{lo}, {hi}] escaped the coarse grid");
+        // ... and is tightened to the requested fraction of it.
+        assert!(hi - lo <= 0.05 * 1.0 + 1e-12, "bracket [{lo}, {hi}] not tightened");
+        assert!(r.solves > coarse.len(), "refinement must add midpoint solves");
+        assert_eq!(r.points.len(), r.solves, "every solve is reported as a point");
+        for w in r.points.windows(2) {
+            assert!(w[0].label != w[1].label, "labels distinct after sorting");
+        }
+        // Degenerate inputs error cleanly.
+        assert!(matches!(
+            refine(&spec, TimingModel::FrontEnd, ContinuousAxis::Jobs, &[1.0], 0.05, 0.1),
+            Err(Error::Usage(_))
+        ));
+        assert!(matches!(
+            refine(
+                &spec,
+                TimingModel::FrontEnd,
+                ContinuousAxis::Jobs,
+                &[1.0, 2.0],
+                0.05,
+                0.0
+            ),
+            Err(Error::Usage(_))
+        ));
     }
 
     #[test]

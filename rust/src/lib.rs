@@ -29,15 +29,19 @@
 //!   family implements [`pipeline::ScenarioModel`] and flows through
 //!   `build LP → presolve → backend → warm cache → schedule`, with
 //!   the backend ([`pipeline::Backend`]) selectable per solve:
-//!   revised simplex, dense tableau, or PDHG.
+//!   revised simplex, dense tableau, sparse PDHG, batched block PDHG,
+//!   or the hybrid PDHG-then-crossover-then-simplex path that is
+//!   exact at vertex precision.
 //! - [`api`] — **the public facade**: typed JSON-serializable
 //!   [`api::SolveRequest`]/[`api::SolveResponse`] wire structs, a
 //!   [`api::Solver`] builder producing warm [`api::Session`]s, and
 //!   work-stealing [`api::Session::solve_batch`] — what the CLI,
 //!   sweeps, advisor, speedup analysis and any future network server
 //!   all call.
-//! - [`cost`], [`speedup`] — §6 monetary-cost/trade-off analysis and
-//!   §5 Amdahl-style speedup analysis (both routed through [`api`]).
+//! - [`cost`], [`speedup`] — §6 monetary-cost/trade-off analysis
+//!   (including the [`cost::knee_interval`] diminishing-returns rule
+//!   shared with the sweep refiner) and §5 Amdahl-style speedup
+//!   analysis (both routed through [`api`]).
 //! - [`serve`] — the zero-dependency TCP serving tier over [`api`]:
 //!   thread-per-core workers, client-keyed session shards with LRU
 //!   warm-cache eviction, bounded admission queues with overload
@@ -50,7 +54,11 @@
 //! - [`cluster`] — a threaded in-process cluster runtime whose
 //!   processors perform real compute via AOT-compiled XLA artifacts.
 //! - [`runtime`], [`pdhg`] — the PJRT artifact runtime and the
-//!   first-order (PDHG) LP solving path compiled from JAX + Pallas.
+//!   first-order (PDHG) LP solving path: sparse-CSC O(nnz)/iteration
+//!   in-process kernels, column-major block panels that solve many
+//!   same-shaped scenarios per matrix pass ([`pdhg::solve_block`]),
+//!   and the fixed-shape AOT artifact variant compiled from JAX +
+//!   Pallas.
 //! - [`config`], [`cli`], [`benchkit`], [`testkit`], [`experiments`] —
 //!   framework glue: JSON config, CLI, bench harness, property-test
 //!   harness, and the paper's experiment registry.

@@ -166,8 +166,18 @@ impl SparseMatrix {
 
     /// Dense `A x` (column-major accumulation).
     pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
-        assert_eq!(x.len(), self.cols);
         let mut y = vec![0.0; self.rows];
+        self.matvec_into(x, &mut y);
+        y
+    }
+
+    /// In-place `y = A x` (column-major scatter, O(nnz)). This is the
+    /// PDHG forward kernel: `y` is zeroed first, so it can be a pooled
+    /// buffer reused across iterations.
+    pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        y.iter_mut().for_each(|v| *v = 0.0);
         for j in 0..self.cols {
             let xj = x[j];
             if xj == 0.0 {
@@ -177,7 +187,19 @@ impl SparseMatrix {
                 y[i] += v * xj;
             }
         }
-        y
+    }
+
+    /// In-place `out = Aᵀ y` (per-column gather, O(nnz)). This is the
+    /// PDHG adjoint kernel: each output entry is one [`col_dot`], so
+    /// the transpose never has to be materialized.
+    ///
+    /// [`col_dot`]: SparseMatrix::col_dot
+    pub fn matvec_t_into(&self, y: &[f64], out: &mut [f64]) {
+        assert_eq!(y.len(), self.rows);
+        assert_eq!(out.len(), self.cols);
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = self.col_dot(j, y);
+        }
     }
 
     /// Materialize as a dense [`Matrix`].
@@ -281,6 +303,23 @@ mod tests {
         let d = a.to_dense();
         let x = [1.0, 2.0, 3.0];
         assert_eq!(a.matvec(&x), d.matvec(&x));
+    }
+
+    #[test]
+    fn matvec_into_zeroes_stale_output() {
+        let a = sample();
+        let mut y = [7.0, 7.0];
+        a.matvec_into(&[1.0, 2.0, 3.0], &mut y);
+        assert_eq!(y.to_vec(), a.matvec(&[1.0, 2.0, 3.0]));
+    }
+
+    #[test]
+    fn matvec_t_into_matches_col_dot() {
+        let a = sample();
+        let y = [2.0, 5.0];
+        let mut out = [9.0; 3];
+        a.matvec_t_into(&y, &mut out);
+        assert_eq!(out, [a.col_dot(0, &y), a.col_dot(1, &y), a.col_dot(2, &y)]);
     }
 
     #[test]

@@ -53,6 +53,11 @@ pub struct SolverScratch {
     pub(crate) gval: Vec<f64>,
     /// Pooled CSC basis view, rebuilt in place per (re)factorization.
     pub(crate) basis_mat: SparseMatrix,
+    /// Pooled PDHG state (standardized problem, iterates, kernel
+    /// buffers) for [`crate::pdhg::solve_rust_scratch`]: the
+    /// first-order backend shares the same per-worker pool as the
+    /// simplex side.
+    pub(crate) pdhg: crate::pdhg::PdhgPool,
 }
 
 impl SolverScratch {

@@ -22,10 +22,14 @@ use super::solution::LpSolution;
 use crate::error::Result;
 use std::collections::HashMap;
 
-/// Per-thread warm-start state: last optimal basis per LP shape.
+/// Per-thread warm-start state: last optimal basis per LP shape, plus
+/// the last optimal primal point per shape (the first-order analogue —
+/// PDHG iterates seed from a nearby primal point the way the simplex
+/// seeds from a basis).
 #[derive(Debug, Default)]
 pub struct WarmCache {
     bases: HashMap<(usize, usize), Basis>,
+    points: HashMap<(usize, usize), (LpProblem, Vec<f64>)>,
     /// Solves that found a cached basis for their shape (the solver
     /// may still have fallen back if the basis was unusable).
     pub warm_attempts: usize,
@@ -93,6 +97,28 @@ impl WarmCache {
         self.bases.contains_key(&(num_vars, num_constraints))
     }
 
+    /// Cache an optimal primal point for `p`'s shape (first-order warm
+    /// start). The problem is stored alongside the point so callers
+    /// can project it onto *other* shapes by variable name (see
+    /// `pipeline::project::project_point`). `x.len()` must be
+    /// `p.num_vars()`.
+    pub fn store_point(&mut self, p: &LpProblem, x: &[f64]) {
+        debug_assert_eq!(x.len(), p.num_vars());
+        self.points.insert((p.num_vars(), p.num_constraints()), (p.clone(), x.to_vec()));
+    }
+
+    /// Cached primal point for a shape, if any, with the problem it
+    /// was optimal for.
+    pub fn point(&self, num_vars: usize, num_constraints: usize) -> Option<(&LpProblem, &[f64])> {
+        self.points.get(&(num_vars, num_constraints)).map(|(p, v)| (p, v.as_slice()))
+    }
+
+    /// Iterate all cached `(problem, point)` pairs — the cross-shape
+    /// fallback source for projected first-order warm starts.
+    pub fn points(&self) -> impl Iterator<Item = (&LpProblem, &[f64])> {
+        self.points.values().map(|(p, v)| (p, v.as_slice()))
+    }
+
     /// Number of cached bases.
     pub fn len(&self) -> usize {
         self.bases.len()
@@ -103,22 +129,32 @@ impl WarmCache {
         self.bases.is_empty()
     }
 
-    /// Drop all cached bases (counters are kept).
+    /// Drop all cached bases and points (counters are kept).
     pub fn clear(&mut self) {
         self.bases.clear();
+        self.points.clear();
     }
 
-    /// Approximate resident bytes of the cached bases: the basis
-    /// column indices plus a flat per-entry estimate for the key and
-    /// hash-map slot. The serving tier's LRU eviction budgets warm
-    /// sessions against this number, so it only needs to grow
-    /// monotonically with cache content, not match the allocator.
+    /// Approximate resident bytes of the cached bases and warm points:
+    /// per-entry payload plus a flat estimate for the key and hash-map
+    /// slot. The serving tier's LRU eviction budgets warm sessions
+    /// against this number, so it only needs to grow monotonically
+    /// with cache content, not match the allocator.
     pub fn approx_bytes(&self) -> usize {
         const ENTRY_OVERHEAD: usize = 64;
         self.bases
             .values()
             .map(|b| b.cols.len() * std::mem::size_of::<usize>() + ENTRY_OVERHEAD)
-            .sum()
+            .sum::<usize>()
+            + self
+                .points
+                .values()
+                .map(|(p, x)| {
+                    std::mem::size_of_val(x.as_slice())
+                        + p.num_vars() * std::mem::size_of::<f64>()
+                        + ENTRY_OVERHEAD
+                })
+                .sum::<usize>()
     }
 }
 
@@ -148,6 +184,21 @@ mod tests {
         assert!((s1.objective - 3.0).abs() < 1e-7);
         assert!((s2.objective - 4.5).abs() < 1e-7);
         assert!(s2.iterations <= s1.iterations);
+    }
+
+    #[test]
+    fn warm_points_roundtrip_and_count_bytes() {
+        let mut cache = WarmCache::new();
+        let p = lp(3.0);
+        assert!(cache.point(2, 2).is_none());
+        cache.store_point(&p, &[1.0, 2.0]);
+        let (stored, x) = cache.point(2, 2).unwrap();
+        assert_eq!(x, &[1.0, 2.0]);
+        assert_eq!(stored.num_vars(), 2);
+        assert_eq!(cache.points().count(), 1);
+        assert!(cache.approx_bytes() >= 2 * std::mem::size_of::<f64>());
+        cache.clear();
+        assert!(cache.point(2, 2).is_none());
     }
 
     #[test]

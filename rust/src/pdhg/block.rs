@@ -1,0 +1,364 @@
+//! Batched multi-RHS block PDHG.
+//!
+//! A sweep axis (jobs, release scale, budget grid, …) produces K
+//! near-identical LPs that differ only in rhs and/or cost: the
+//! constraint matrix `A` is shared. Solving them one by one repeats
+//! the matrix pass — and the `||A||` power iteration — K times.
+//! This module stacks the K scenarios into column-major `x`/`y`
+//! panels (`panel[j * K + k]` is column `k` of unknown `j`, so one
+//! CSC entry updates K contiguous lanes) and runs **one** shared
+//! matrix pass per PDHG step for the whole block, with per-column
+//! residual tracking on block boundaries and early retirement of
+//! converged columns.
+//!
+//! Columns whose constraint structure does not match the first
+//! problem's fall out of the batch and are solved individually — the
+//! result is always correct, batching is purely a fast path.
+
+use crate::error::Result;
+use crate::lp::{Cmp, LpProblem};
+use crate::pdhg::driver::{solve_rust, PdhgOptions, PdhgSolution, BLOCK_STEPS};
+use crate::pdhg::standardize::SparseLp;
+
+/// Default number of scenario columns stacked per block: wide enough
+/// to amortize the matrix pass, narrow enough that a panel row
+/// (`K` lanes) stays within a couple of cache lines.
+pub const DEFAULT_BLOCK_WIDTH: usize = 16;
+
+/// Outcome of a batched block solve.
+#[derive(Debug, Clone)]
+pub struct BlockSolution {
+    /// Per-input-problem solutions, in input order.
+    pub columns: Vec<PdhgSolution>,
+    /// Number of columns stacked (the input width).
+    pub block_width: usize,
+    /// Columns that converged and retired from the iteration while
+    /// other columns were still running.
+    pub columns_retired: usize,
+}
+
+/// Do two problems share a constraint matrix (same variables, same
+/// rows, same coefficients and senses)? rhs and objective may differ —
+/// that is exactly what the block batches over.
+fn shares_structure(a: &LpProblem, b: &LpProblem) -> bool {
+    a.num_vars() == b.num_vars()
+        && a.num_constraints() == b.num_constraints()
+        && a.constraints()
+            .iter()
+            .zip(b.constraints())
+            .all(|(ca, cb)| ca.coeffs == cb.coeffs && ca.cmp == cb.cmp)
+}
+
+/// One shared pass of `out = Aᵀ · y` over the active panel lanes.
+fn panel_matvec_t(
+    lp: &SparseLp,
+    y: &[f64],
+    out: &mut [f64],
+    kk: usize,
+    active: &[usize],
+) {
+    for j in 0..lp.num_vars() {
+        let base = j * kk;
+        for &k in active {
+            out[base + k] = 0.0;
+        }
+        for (i, v) in lp.a.col(j) {
+            let yrow = i * kk;
+            for &k in active {
+                out[base + k] += v * y[yrow + k];
+            }
+        }
+    }
+}
+
+/// One shared pass of `out = A · x` over the active panel lanes.
+fn panel_matvec(lp: &SparseLp, x: &[f64], out: &mut [f64], kk: usize, active: &[usize]) {
+    for i in 0..lp.num_rows() {
+        let base = i * kk;
+        for &k in active {
+            out[base + k] = 0.0;
+        }
+    }
+    for j in 0..lp.num_vars() {
+        let base = j * kk;
+        for (i, v) in lp.a.col(j) {
+            let orow = i * kk;
+            for &k in active {
+                out[orow + k] += v * x[base + k];
+            }
+        }
+    }
+}
+
+/// Per-column KKT residuals at the current panel iterate.
+#[derive(Debug, Clone, Copy, Default)]
+struct ColRes {
+    primal: f64,
+    dual: f64,
+    gap: f64,
+    objective: f64,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn panel_residuals(
+    lp: &SparseLp,
+    b: &[f64],
+    c: &[f64],
+    x: &[f64],
+    y: &[f64],
+    ax: &mut [f64],
+    aty: &mut [f64],
+    kk: usize,
+    active: &[usize],
+    out: &mut [ColRes],
+) {
+    panel_matvec(lp, x, ax, kk, active);
+    panel_matvec_t(lp, y, aty, kk, active);
+    for &k in active {
+        out[k] = ColRes::default();
+    }
+    for (i, &is_eq) in lp.eq.iter().enumerate() {
+        let base = i * kk;
+        for &k in active {
+            let v = ax[base + k] - b[base + k];
+            let viol = if is_eq { v.abs() } else { v.max(0.0) };
+            out[k].primal = out[k].primal.max(viol);
+        }
+    }
+    for j in 0..lp.num_vars() {
+        let base = j * kk;
+        for &k in active {
+            let d = (-(c[base + k] + aty[base + k])).max(0.0);
+            out[k].dual = out[k].dual.max(d);
+            out[k].objective += c[base + k] * x[base + k];
+        }
+    }
+    for &k in active {
+        let mut by = 0.0;
+        for i in 0..lp.num_rows() {
+            by += b[i * kk + k] * y[i * kk + k];
+        }
+        out[k].gap = (out[k].objective + by).abs();
+    }
+}
+
+/// Solve the columns in `idx` (all sharing `problems[idx[0]]`'s
+/// constraint structure) as one panel. Returns the per-column
+/// solutions in `idx` order plus the early-retirement count.
+fn solve_shared(
+    problems: &[LpProblem],
+    idx: &[usize],
+    opts: &PdhgOptions,
+) -> (Vec<PdhgSolution>, usize) {
+    let kk = idx.len();
+    let lp = SparseLp::build(&problems[idx[0]]);
+    let (nv, nc) = (lp.num_vars(), lp.num_rows());
+    // One power iteration for the whole block — the scalar path pays
+    // this per problem.
+    let tau = opts.step_factor / lp.a_norm.max(1e-12);
+
+    // rhs/cost panels, one lane per column.
+    let mut b = vec![0.0; nc * kk];
+    let mut c = vec![0.0; nv * kk];
+    for (lane, &k) in idx.iter().enumerate() {
+        let p = &problems[k];
+        for (i, con) in p.constraints().iter().enumerate() {
+            let sign = if con.cmp == Cmp::Ge { -1.0 } else { 1.0 };
+            b[i * kk + lane] = sign * con.rhs;
+        }
+        for (j, &cj) in p.objective().iter().enumerate() {
+            c[j * kk + lane] = cj;
+        }
+    }
+
+    let mut x = vec![0.0; nv * kk];
+    let mut y = vec![0.0; nc * kk];
+    let mut z = vec![0.0; nv * kk];
+    let mut aty = vec![0.0; nv * kk];
+    let mut az = vec![0.0; nc * kk];
+    let mut res = vec![ColRes::default(); kk];
+    let mut state: Vec<Option<(usize, ColRes, bool)>> = vec![None; kk];
+    let mut active: Vec<usize> = (0..kk).collect();
+    let mut retired = 0usize;
+
+    let converged_at = |r: &ColRes| {
+        r.primal < opts.tol
+            && r.dual < opts.tol
+            && r.gap < opts.gap_tol * (r.objective.abs() + 1.0)
+    };
+
+    let mut blocks = 0usize;
+    panel_residuals(&lp, &b, &c, &x, &y, &mut az, &mut aty, kk, &active, &mut res);
+    loop {
+        let before = active.len();
+        active.retain(|&k| {
+            if converged_at(&res[k]) {
+                state[k] = Some((blocks, res[k], true));
+                false
+            } else {
+                true
+            }
+        });
+        let removed = before - active.len();
+        if !active.is_empty() {
+            retired += removed;
+        }
+        if active.is_empty() || blocks >= opts.max_blocks {
+            break;
+        }
+
+        for _ in 0..BLOCK_STEPS {
+            panel_matvec_t(&lp, &y, &mut aty, kk, &active);
+            for j in 0..nv {
+                let base = j * kk;
+                for &k in &active {
+                    let xo = x[base + k];
+                    let xn = (xo - tau * (c[base + k] + aty[base + k])).max(0.0);
+                    z[base + k] = 2.0 * xn - xo;
+                    x[base + k] = xn;
+                }
+            }
+            panel_matvec(&lp, &z, &mut az, kk, &active);
+            for (i, &is_eq) in lp.eq.iter().enumerate() {
+                let base = i * kk;
+                for &k in &active {
+                    let yn = y[base + k] + tau * (az[base + k] - b[base + k]);
+                    y[base + k] = if is_eq { yn } else { yn.max(0.0) };
+                }
+            }
+        }
+        blocks += 1;
+        panel_residuals(&lp, &b, &c, &x, &y, &mut az, &mut aty, kk, &active, &mut res);
+    }
+    // Columns still active hit the block budget without converging.
+    for &k in &active {
+        state[k] = Some((blocks, res[k], false));
+    }
+
+    let columns = (0..kk)
+        .map(|k| {
+            let (blk, r, converged) = state[k].expect("every column recorded");
+            let xk: Vec<f64> = (0..nv).map(|j| x[j * kk + k]).collect();
+            PdhgSolution {
+                x: xk,
+                objective: r.objective,
+                blocks: blk,
+                residuals: (r.primal, r.dual, r.gap),
+                converged,
+            }
+        })
+        .collect();
+    (columns, retired)
+}
+
+/// Solve a batch of LPs as one block iteration stream.
+///
+/// Columns sharing the first problem's constraint structure are
+/// stacked into one panel (one matrix pass and one `||A||` estimate
+/// per block, early retirement per column); the rest fall back to
+/// individual [`solve_rust`] calls. Results come back in input order
+/// and match the sequential path column for column.
+pub fn solve_block(problems: &[LpProblem], opts: &PdhgOptions) -> Result<BlockSolution> {
+    let width = problems.len();
+    if width == 0 {
+        return Ok(BlockSolution { columns: Vec::new(), block_width: 0, columns_retired: 0 });
+    }
+    let shared: Vec<usize> =
+        (0..width).filter(|&k| shares_structure(&problems[0], &problems[k])).collect();
+    let mut columns: Vec<Option<PdhgSolution>> = (0..width).map(|_| None).collect();
+    let (batched, retired) = solve_shared(problems, &shared, opts);
+    for (&slot, sol) in shared.iter().zip(batched) {
+        columns[slot] = Some(sol);
+    }
+    for (k, col) in columns.iter_mut().enumerate() {
+        if col.is_none() {
+            *col = Some(solve_rust(&problems[k], opts)?);
+        }
+    }
+    Ok(BlockSolution {
+        columns: columns.into_iter().map(|c| c.expect("all columns solved")).collect(),
+        block_width: width,
+        columns_retired: retired,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lp::{solve, Cmp, LpProblem};
+    use crate::pdhg::driver::solve_rust;
+
+    fn family(rhs: f64, c1: f64) -> LpProblem {
+        // min x + c1·y  st  x + y = rhs, x <= 2
+        let mut p = LpProblem::new(2);
+        p.set_objective(&[1.0, c1]);
+        p.add_constraint(&[(0, 1.0), (1, 1.0)], Cmp::Eq, rhs);
+        p.add_constraint(&[(0, 1.0)], Cmp::Le, 2.0);
+        p
+    }
+
+    #[test]
+    fn block_matches_sequential_per_column() {
+        let probs: Vec<LpProblem> =
+            [(3.0, 2.0), (4.0, 2.0), (3.5, 3.0), (5.0, 1.5)].map(|(r, c)| family(r, c)).into();
+        let opts = PdhgOptions::default();
+        let blk = solve_block(&probs, &opts).unwrap();
+        assert_eq!(blk.block_width, 4);
+        for (p, col) in probs.iter().zip(&blk.columns) {
+            let seq = solve_rust(p, &opts).unwrap();
+            assert_eq!(col.converged, seq.converged);
+            assert_eq!(col.blocks, seq.blocks, "same per-column block count");
+            assert!(
+                (col.objective - seq.objective).abs() < 1e-8,
+                "block {} vs sequential {}",
+                col.objective,
+                seq.objective
+            );
+            for (a, b) in col.x.iter().zip(&seq.x) {
+                assert!((a - b).abs() < 1e-8);
+            }
+        }
+    }
+
+    #[test]
+    fn block_reaches_the_simplex_optimum() {
+        let probs: Vec<LpProblem> = [(3.0, 2.0), (6.0, 2.0)].map(|(r, c)| family(r, c)).into();
+        let blk = solve_block(&probs, &PdhgOptions::default()).unwrap();
+        for (p, col) in probs.iter().zip(&blk.columns) {
+            let exact = solve(p).unwrap();
+            assert!(col.converged, "{:?}", col.residuals);
+            assert!((col.objective - exact.objective).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn mismatched_structure_falls_back_per_column() {
+        let mut odd = LpProblem::new(2);
+        odd.set_objective(&[1.0, 1.0]);
+        odd.add_constraint(&[(0, 2.0), (1, 1.0)], Cmp::Eq, 3.0); // different coeffs
+        let probs = vec![family(3.0, 2.0), odd.clone(), family(4.0, 2.0)];
+        let blk = solve_block(&probs, &PdhgOptions::default()).unwrap();
+        let seq = solve_rust(&odd, &PdhgOptions::default()).unwrap();
+        assert!((blk.columns[1].objective - seq.objective).abs() < 1e-10);
+        assert_eq!(blk.block_width, 3);
+    }
+
+    #[test]
+    fn empty_block_is_fine() {
+        let blk = solve_block(&[], &PdhgOptions::default()).unwrap();
+        assert!(blk.columns.is_empty());
+        assert_eq!(blk.block_width, 0);
+    }
+
+    #[test]
+    fn early_retirement_is_counted() {
+        // One easy column (tiny rhs) and one that needs more blocks.
+        let probs = vec![family(0.0, 2.0), family(50.0, 2.0)];
+        let blk = solve_block(&probs, &PdhgOptions::default()).unwrap();
+        let b0 = blk.columns[0].blocks;
+        let b1 = blk.columns[1].blocks;
+        if b0 != b1 {
+            assert!(blk.columns_retired >= 1, "unequal block counts must retire a column");
+        }
+    }
+}

@@ -1,10 +1,15 @@
 //! The PDHG convergence loop, over either backend.
 
 use crate::error::{Error, Result};
-use crate::lp::LpProblem;
+use crate::lp::{LpProblem, SolverScratch};
 use crate::pdhg::rust_impl;
-use crate::pdhg::standardize::PaddedLp;
+use crate::pdhg::standardize::{PaddedLp, SparseLp};
 use crate::runtime::{PdhgExecutable, Runtime};
+
+/// Iterations per fixed-step block: residuals are checked (and columns
+/// can retire) only on block boundaries. Matches the AOT artifact's
+/// compiled block length.
+pub const BLOCK_STEPS: usize = 200;
 
 /// Driver options.
 #[derive(Debug, Clone)]
@@ -25,11 +30,11 @@ impl Default for PdhgOptions {
     }
 }
 
-/// Padded `(nv, nc)` shape for the pure-rust PDHG backend: the next
-/// powers of two (min 64) with row headroom for the slacks the
-/// standardization keeps implicit. The same rounding the AOT artifact
-/// variants are built around, so a problem solved in-process today can
-/// move to an artifact of the same shape unchanged.
+/// Padded `(nv, nc)` shape for the AOT artifact path: the next powers
+/// of two (min 64) with row headroom for the slacks the
+/// standardization keeps implicit. The in-process backend runs at the
+/// problem's natural shape; this rounding exists so a problem can move
+/// to a fixed-shape artifact unchanged.
 pub fn pad_shape(nv: usize, nc: usize) -> (usize, usize) {
     let round = |x: usize| x.next_power_of_two().max(64);
     (round(nv), round(nc + nc / 2))
@@ -38,11 +43,11 @@ pub fn pad_shape(nv: usize, nc: usize) -> (usize, usize) {
 /// PDHG solve outcome.
 #[derive(Debug, Clone)]
 pub struct PdhgSolution {
-    /// Primal solution (unpadded).
+    /// Primal solution (natural shape).
     pub x: Vec<f64>,
     /// Objective value `c'x`.
     pub objective: f64,
-    /// Blocks executed.
+    /// Blocks executed (each [`BLOCK_STEPS`] iterations).
     pub blocks: usize,
     /// Final residuals (primal, dual, gap).
     pub residuals: (f64, f64, f64),
@@ -50,34 +55,82 @@ pub struct PdhgSolution {
     pub converged: bool,
 }
 
-fn finish(p: &LpProblem, pad: &PaddedLp, x: Vec<f64>, blocks: usize, res: (f64, f64, f64), opts: &PdhgOptions) -> PdhgSolution {
-    let x = pad.unpad_x(&x);
-    let objective = p.objective_at(&x);
-    let converged = res.0 < opts.tol
-        && res.1 < opts.tol
-        && res.2 < opts.gap_tol * (objective.abs() + 1.0);
-    PdhgSolution { x, objective, blocks, residuals: res, converged }
+/// Pooled state for repeated in-process PDHG solves: the standardized
+/// problem, its triplet buffer, the iterate vectors, and the kernel
+/// scratch. Lives inside [`crate::lp::SolverScratch`] so batch and
+/// session loops re-solve without touching the heap.
+#[derive(Debug, Default)]
+pub struct PdhgPool {
+    lp: SparseLp,
+    trips: Vec<(usize, usize, f64)>,
+    scratch: rust_impl::PdhgScratch,
+    x: Vec<f64>,
+    y: Vec<f64>,
 }
 
-/// Solve with the pure-rust backend (no artifacts needed).
-pub fn solve_rust(p: &LpProblem, nv: usize, nc: usize, opts: &PdhgOptions) -> Result<PdhgSolution> {
-    let pad = PaddedLp::build(p, nv, nc);
-    let tau = opts.step_factor / pad.a_norm.max(1e-12);
-    let mut x = vec![0.0; pad.nv];
-    let mut y = vec![0.0; pad.nc];
-    // One scratch allocation for the whole solve; every block reuses it.
-    let mut scratch = rust_impl::PdhgScratch::for_shape(pad.nv, pad.nc);
-    let mut blocks = 0;
-    let mut res = rust_impl::residuals_with(&pad, &x, &y, &mut scratch);
-    while blocks < opts.max_blocks {
-        res = rust_impl::run_block_with(&pad, &mut x, &mut y, tau, tau, 200, &mut scratch);
-        blocks += 1;
-        let scale = crate::linalg::dot(&pad.c, &x).abs() + 1.0;
-        if res.primal < opts.tol && res.dual < opts.tol && res.gap < opts.gap_tol * scale {
-            break;
-        }
+/// Core sparse solve loop over a pooled [`SparseLp`].
+fn solve_sparse(
+    p: &LpProblem,
+    opts: &PdhgOptions,
+    warm_x: Option<&[f64]>,
+    pool: &mut PdhgPool,
+) -> PdhgSolution {
+    pool.lp.rebuild(p, &mut pool.trips);
+    let (nv, nc) = (pool.lp.num_vars(), pool.lp.num_rows());
+    let tau = opts.step_factor / pool.lp.a_norm.max(1e-12);
+    pool.x.clear();
+    match warm_x {
+        Some(w) if w.len() == nv => pool.x.extend_from_slice(w),
+        _ => pool.x.resize(nv, 0.0),
     }
-    Ok(finish(p, &pad, x, blocks, (res.primal, res.dual, res.gap), opts))
+    pool.y.clear();
+    pool.y.resize(nc, 0.0);
+
+    let mut blocks = 0;
+    let mut res = rust_impl::residuals_with(&pool.lp, &pool.x, &pool.y, &mut pool.scratch);
+    let converged_at = |r: &rust_impl::Residuals| {
+        r.primal < opts.tol
+            && r.dual < opts.tol
+            && r.gap < opts.gap_tol * (r.objective.abs() + 1.0)
+    };
+    while blocks < opts.max_blocks && !converged_at(&res) {
+        res = rust_impl::run_block_with(
+            &pool.lp,
+            &mut pool.x,
+            &mut pool.y,
+            tau,
+            tau,
+            BLOCK_STEPS,
+            &mut pool.scratch,
+        );
+        blocks += 1;
+    }
+    PdhgSolution {
+        x: pool.x.clone(),
+        objective: res.objective,
+        blocks,
+        residuals: (res.primal, res.dual, res.gap),
+        converged: converged_at(&res),
+    }
+}
+
+/// Solve with the pure-rust sparse backend (no artifacts needed).
+pub fn solve_rust(p: &LpProblem, opts: &PdhgOptions) -> Result<PdhgSolution> {
+    let mut pool = PdhgPool::default();
+    Ok(solve_sparse(p, opts, None, &mut pool))
+}
+
+/// Pooled variant of [`solve_rust`]: buffers live in the caller's
+/// [`SolverScratch`], and `warm_x` (a primal point at the problem's
+/// natural shape, e.g. from a warm cache or a projected basis) seeds
+/// the iterates instead of the cold zero start.
+pub fn solve_rust_scratch(
+    p: &LpProblem,
+    opts: &PdhgOptions,
+    warm_x: Option<&[f64]>,
+    scratch: &mut SolverScratch,
+) -> Result<PdhgSolution> {
+    Ok(solve_sparse(p, opts, warm_x, &mut scratch.pdhg))
 }
 
 /// Solve through the AOT artifact (PJRT execution).
@@ -113,7 +166,12 @@ pub fn solve_artifact(rt: &mut Runtime, p: &LpProblem, opts: &PdhgOptions) -> Re
             break;
         }
     }
-    Ok(finish(p, &pad, x, blocks, res, opts))
+    let x = pad.unpad_x(&x);
+    let objective = p.objective_at(&x);
+    let converged = res.0 < opts.tol
+        && res.1 < opts.tol
+        && res.2 < opts.gap_tol * (objective.abs() + 1.0);
+    Ok(PdhgSolution { x, objective, blocks, residuals: res, converged })
 }
 
 #[cfg(test)]
@@ -129,7 +187,7 @@ mod tests {
         p.add_constraint(&[(0, 1.0)], Cmp::Le, 4.0);
         p.add_constraint(&[(2, 1.0)], Cmp::Ge, 1.0);
         let exact = solve(&p).unwrap();
-        let sol = solve_rust(&p, 8, 8, &PdhgOptions::default()).unwrap();
+        let sol = solve_rust(&p, &PdhgOptions::default()).unwrap();
         assert!(sol.converged, "residuals {:?}", sol.residuals);
         assert!(
             (sol.objective - exact.objective).abs() < 1e-3 * exact.objective.max(1.0),
@@ -141,17 +199,35 @@ mod tests {
     }
 
     #[test]
+    fn warm_start_matches_cold_and_does_not_slow_down() {
+        let mut p = LpProblem::new(2);
+        p.set_objective(&[1.0, 2.0]);
+        p.add_constraint(&[(0, 1.0), (1, 1.0)], Cmp::Eq, 3.0);
+        p.add_constraint(&[(0, 1.0)], Cmp::Le, 2.0);
+        let cold = solve_rust(&p, &PdhgOptions::default()).unwrap();
+        assert!(cold.converged);
+        let mut scratch = SolverScratch::default();
+        let warm =
+            solve_rust_scratch(&p, &PdhgOptions::default(), Some(&cold.x), &mut scratch).unwrap();
+        assert!(warm.converged);
+        assert!((warm.objective - cold.objective).abs() < 1e-6, "objectives agree");
+        // Seeding x at the optimum cannot make the saddle-point
+        // distance larger than the cold zero start.
+        assert!(
+            warm.blocks <= cold.blocks,
+            "warm {} blocks vs cold {}",
+            warm.blocks,
+            cold.blocks
+        );
+    }
+
+    #[test]
     fn unconverged_is_reported() {
         let mut p = LpProblem::new(2);
         p.set_objective(&[1.0, 1.0]);
         p.add_constraint(&[(0, 1.0), (1, 1.0)], Cmp::Eq, 5.0);
-        let sol = solve_rust(
-            &p,
-            4,
-            4,
-            &PdhgOptions { max_blocks: 0, ..Default::default() },
-        )
-        .unwrap();
+        let sol =
+            solve_rust(&p, &PdhgOptions { max_blocks: 0, ..Default::default() }).unwrap();
         // No blocks run: the zero start is infeasible (x+y=5 violated).
         assert!(!sol.converged);
         assert_eq!(sol.blocks, 0);

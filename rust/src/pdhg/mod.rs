@@ -1,22 +1,30 @@
 //! First-order LP solving path (PDHG / Chambolle–Pock).
 //!
 //! The simplex ([`crate::lp`]) is the exact reference solver; PDHG is
-//! the accelerator for large `N × M` sweeps, compiled AOT from
-//! JAX + Pallas and executed through PJRT ([`crate::runtime`]).
+//! the accelerator for large `N × M` sweeps. The in-process backend
+//! ([`rust_impl`], [`block`]) runs **sparse**: the row-wise form is
+//! kept in CSC at the problem's natural shape ([`SparseLp`]) and both
+//! matvecs cost O(nnz) per iteration. Whole sweep axes batch into one
+//! block iteration stream ([`block::solve_block`]) with per-column
+//! early retirement. The AOT artifact path (compiled from
+//! JAX + Pallas, executed through PJRT via [`crate::runtime`]) still
+//! consumes dense row-major literals padded to a fixed power-of-two
+//! shape ([`PaddedLp`], [`pad_shape`]) — that padding is *inert*:
+//! zero rows with `b = 1`, unit-cost columns.
 //!
-//! This module owns everything around the compiled block:
-//! standardization of an [`crate::lp::LpProblem`] to the row-wise
-//! `Ax ≤ b / Ax = b, x ≥ 0` form, padding to the artifact's fixed
-//! shape (with *inert* padding: zero rows with `b = 1`, unit-cost
-//! columns), step-size selection via power iteration, and the
-//! convergence loop. A pure-rust implementation of the identical
-//! iteration ([`rust_impl`]) serves as a baseline and as the fallback
-//! when artifacts have not been built.
+//! Step sizes come from a sparse power-iteration `||A||` estimate
+//! ([`standardize::spectral_norm`]); the convergence loop checks KKT
+//! residuals every [`BLOCK_STEPS`] iterations.
 
+pub mod block;
 pub mod driver;
 pub mod rust_impl;
 pub mod standardize;
 
-pub use driver::{pad_shape, solve_artifact, solve_rust, PdhgOptions, PdhgSolution};
+pub use block::{solve_block, BlockSolution, DEFAULT_BLOCK_WIDTH};
+pub use driver::{
+    pad_shape, solve_artifact, solve_rust, solve_rust_scratch, PdhgOptions, PdhgPool,
+    PdhgSolution, BLOCK_STEPS,
+};
 pub use rust_impl::PdhgScratch;
-pub use standardize::PaddedLp;
+pub use standardize::{PaddedLp, SparseLp};

@@ -1,12 +1,17 @@
-//! Pure-rust PDHG block — bit-for-bit the same iteration as the JAX
-//! artifact (see `python/compile/model.py::pdhg_run`).
+//! Pure-rust sparse PDHG iteration (Chambolle–Pock on the row-wise
+//! form) — the same math as the JAX artifact
+//! (`python/compile/model.py::pdhg_run`), executed over CSC at the
+//! problem's natural shape instead of the artifact's dense padded one,
+//! so each step costs O(nnz) rather than O(nv·nc). Summation order
+//! therefore differs from the artifact in the last bits; the
+//! integration suite compares the two converged solutions, not raw
+//! trajectories.
 //!
 //! Exists for three reasons: (1) baseline for the artifact benches,
 //! (2) fallback when `make artifacts` has not run, (3) an oracle that
-//! the artifact executes the intended math (integration test compares
-//! the two trajectories).
+//! the artifact executes the intended math.
 
-use crate::pdhg::standardize::PaddedLp;
+use crate::pdhg::standardize::SparseLp;
 
 /// Residuals after a block.
 #[derive(Debug, Clone, Copy)]
@@ -17,6 +22,10 @@ pub struct Residuals {
     pub dual: f64,
     /// |c'x + b'y|.
     pub gap: f64,
+    /// Objective `c'x` at the iterate — computed inside the residual
+    /// pass (the gap needs `c'x` anyway) so drivers never re-walk the
+    /// problem with `objective_at` after a block.
+    pub objective: f64,
 }
 
 /// Reusable buffers for [`run_block_with`] / [`residuals_with`]: one
@@ -29,7 +38,7 @@ pub struct PdhgScratch {
 }
 
 impl PdhgScratch {
-    /// Buffers sized for a padded `(nv, nc)` problem.
+    /// Buffers sized for an `(nv, nc)` problem.
     pub fn for_shape(nv: usize, nc: usize) -> PdhgScratch {
         PdhgScratch { aty: vec![0.0; nv], az: vec![0.0; nc], z: vec![0.0; nv] }
     }
@@ -48,21 +57,21 @@ impl PdhgScratch {
 /// Run `steps` PDHG iterations in place on `(x, y)` (allocating
 /// convenience wrapper over [`run_block_with`]).
 pub fn run_block(
-    lp: &PaddedLp,
+    lp: &SparseLp,
     x: &mut [f64],
     y: &mut [f64],
     tau: f64,
     sigma: f64,
     steps: usize,
 ) -> Residuals {
-    let mut scratch = PdhgScratch::for_shape(lp.nv, lp.nc);
+    let mut scratch = PdhgScratch::for_shape(lp.num_vars(), lp.num_rows());
     run_block_with(lp, x, y, tau, sigma, steps, &mut scratch)
 }
 
 /// Run `steps` PDHG iterations in place on `(x, y)`, reusing
 /// caller-owned scratch buffers across blocks.
 pub fn run_block_with(
-    lp: &PaddedLp,
+    lp: &SparseLp,
     x: &mut [f64],
     y: &mut [f64],
     tau: f64,
@@ -70,7 +79,7 @@ pub fn run_block_with(
     steps: usize,
     scratch: &mut PdhgScratch,
 ) -> Residuals {
-    let (nv, nc) = (lp.nv, lp.nc);
+    let (nv, nc) = (lp.num_vars(), lp.num_rows());
     debug_assert_eq!(x.len(), nv);
     debug_assert_eq!(y.len(), nc);
     scratch.ensure(nv, nc);
@@ -80,7 +89,7 @@ pub fn run_block_with(
 
     for _ in 0..steps {
         // aty = A' y
-        matvec_t(&lp.a, nc, nv, y, aty);
+        lp.a.matvec_t_into(y, aty);
         // x' = max(0, x - tau (c + A'y));  z = 2x' - x
         for j in 0..nv {
             let xn = (x[j] - tau * (lp.c[j] + aty[j])).max(0.0);
@@ -88,80 +97,59 @@ pub fn run_block_with(
             x[j] = xn;
         }
         // y' = proj(y + sigma (A z - b))
-        matvec(&lp.a, nc, nv, z, az);
+        lp.a.matvec_into(z, az);
         for i in 0..nc {
             let yn = y[i] + sigma * (az[i] - lp.b[i]);
-            y[i] = if lp.eq_mask[i] > 0.5 { yn } else { yn.max(0.0) };
+            y[i] = if lp.eq[i] { yn } else { yn.max(0.0) };
         }
     }
     residuals_with(lp, x, y, scratch)
 }
 
 /// KKT residuals at `(x, y)` (allocating convenience wrapper).
-pub fn residuals(lp: &PaddedLp, x: &[f64], y: &[f64]) -> Residuals {
-    let mut scratch = PdhgScratch::for_shape(lp.nv, lp.nc);
+pub fn residuals(lp: &SparseLp, x: &[f64], y: &[f64]) -> Residuals {
+    let mut scratch = PdhgScratch::for_shape(lp.num_vars(), lp.num_rows());
     residuals_with(lp, x, y, &mut scratch)
 }
 
 /// KKT residuals at `(x, y)`, reusing caller-owned scratch buffers.
 pub fn residuals_with(
-    lp: &PaddedLp,
+    lp: &SparseLp,
     x: &[f64],
     y: &[f64],
     scratch: &mut PdhgScratch,
 ) -> Residuals {
-    let (nv, nc) = (lp.nv, lp.nc);
+    let (nv, nc) = (lp.num_vars(), lp.num_rows());
     scratch.ensure(nv, nc);
     let ax = &mut scratch.az;
-    matvec(&lp.a, nc, nv, x, ax);
+    lp.a.matvec_into(x, ax);
     let mut primal = 0.0f64;
     for i in 0..nc {
         let v = ax[i] - lp.b[i];
-        let viol = if lp.eq_mask[i] > 0.5 { v.abs() } else { v.max(0.0) };
+        let viol = if lp.eq[i] { v.abs() } else { v.max(0.0) };
         primal = primal.max(viol);
     }
     let aty = &mut scratch.aty;
-    matvec_t(&lp.a, nc, nv, y, aty);
+    lp.a.matvec_t_into(y, aty);
     let mut dual = 0.0f64;
     for j in 0..nv {
         dual = dual.max((-(lp.c[j] + aty[j])).max(0.0));
     }
-    let gap = (crate::linalg::dot(&lp.c, x) + crate::linalg::dot(&lp.b, y)).abs();
-    Residuals { primal, dual, gap }
-}
-
-#[inline]
-fn matvec(a: &[f64], nc: usize, nv: usize, x: &[f64], out: &mut [f64]) {
-    for i in 0..nc {
-        out[i] = crate::linalg::dot(&a[i * nv..(i + 1) * nv], x);
-    }
-}
-
-#[inline]
-fn matvec_t(a: &[f64], nc: usize, nv: usize, y: &[f64], out: &mut [f64]) {
-    out.iter_mut().for_each(|v| *v = 0.0);
-    for i in 0..nc {
-        let yi = y[i];
-        if yi == 0.0 {
-            continue;
-        }
-        let row = &a[i * nv..(i + 1) * nv];
-        for j in 0..nv {
-            out[j] += row[j] * yi;
-        }
-    }
+    let objective = crate::linalg::dot(&lp.c, x);
+    let gap = (objective + crate::linalg::dot(&lp.b, y)).abs();
+    Residuals { primal, dual, gap, objective }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::lp::{solve, Cmp, LpProblem};
-    use crate::pdhg::standardize::PaddedLp;
+    use crate::pdhg::standardize::SparseLp;
 
-    fn run_to_convergence(lp: &PaddedLp, max_blocks: usize) -> (Vec<f64>, Residuals) {
+    fn run_to_convergence(lp: &SparseLp, max_blocks: usize) -> (Vec<f64>, Residuals) {
         let tau = 0.9 / lp.a_norm.max(1e-12);
-        let mut x = vec![0.0; lp.nv];
-        let mut y = vec![0.0; lp.nc];
+        let mut x = vec![0.0; lp.num_vars()];
+        let mut y = vec![0.0; lp.num_rows()];
         let mut res = residuals(lp, &x, &y);
         for _ in 0..max_blocks {
             res = run_block(lp, &mut x, &mut y, tau, tau, 200);
@@ -181,23 +169,12 @@ mod tests {
         p.add_constraint(&[(0, 1.0)], Cmp::Le, 2.0);
         let exact = solve(&p).unwrap();
 
-        let pad = PaddedLp::build(&p, 8, 6);
-        let (x, res) = run_to_convergence(&pad, 50);
-        let obj = crate::linalg::dot(&pad.c[..2], &x[..2]);
+        let lp = SparseLp::build(&p);
+        let (x, res) = run_to_convergence(&lp, 50);
+        let obj = crate::linalg::dot(&lp.c, &x);
         assert!(res.primal < 1e-6, "primal {res:?}");
         assert!((obj - exact.objective).abs() < 1e-4, "{obj} vs {}", exact.objective);
-    }
-
-    #[test]
-    fn padding_stays_at_zero() {
-        let mut p = LpProblem::new(2);
-        p.set_objective(&[1.0, 1.0]);
-        p.add_constraint(&[(0, 1.0), (1, 1.0)], Cmp::Eq, 1.0);
-        let pad = PaddedLp::build(&p, 16, 8);
-        let (x, _) = run_to_convergence(&pad, 30);
-        for &xi in &x[2..] {
-            assert!(xi.abs() < 1e-9, "padding leaked: {xi}");
-        }
+        assert!((res.objective - obj).abs() < 1e-12, "residual pass reports c'x");
     }
 
     #[test]
@@ -212,8 +189,8 @@ mod tests {
             .unwrap();
         let lp = crate::dlt::frontend::build_lp(&spec, &Default::default());
         let exact = solve(&lp).unwrap();
-        let pad = PaddedLp::build(&lp, 16, 16);
-        let (x, res) = run_to_convergence(&pad, 400);
+        let slp = SparseLp::build(&lp);
+        let (x, res) = run_to_convergence(&slp, 400);
         assert!(res.primal < 1e-6, "{res:?}");
         let tf_idx = lp.num_vars() - 1;
         assert!(

@@ -1,9 +1,94 @@
-//! LP standardization + inert padding for the fixed-shape artifact.
+//! LP standardization for the PDHG kernels.
+//!
+//! Two materializations of the same row-wise form
+//! (`min c'x  s.t.  Ax <= b / Ax == b, x >= 0`, `>=` rows negated):
+//!
+//! - [`SparseLp`] — the in-process backend: CSC constraint matrix at
+//!   the problem's natural shape, matvecs O(nnz). No padding: the
+//!   scheduling matrices are ~95 % zeros and padding to powers of two
+//!   squared the wasted work.
+//! - [`PaddedLp`] — the AOT artifact path only: dense row-major
+//!   `a`/`at` padded to the artifact's fixed shape, because the XLA
+//!   executable consumes dense literals of exactly that layout.
 
+use crate::linalg::SparseMatrix;
 use crate::lp::standard::StandardForm;
-use crate::lp::LpProblem;
+use crate::lp::{Cmp, LpProblem};
 
-/// A padded row-wise LP ready for the PDHG block.
+/// Row-wise sparse LP for the in-process PDHG backend.
+///
+/// Built at the problem's natural `(rows, vars)` shape — no padding —
+/// with the constraint matrix in CSC so both PDHG matvecs are O(nnz).
+/// [`SparseLp::rebuild`] reuses all storage for pooled warm re-solves.
+#[derive(Debug, Clone, Default)]
+pub struct SparseLp {
+    /// Constraint matrix, `rows × vars`, CSC.
+    pub a: SparseMatrix,
+    /// RHS, length `rows` (negated on `>=` rows).
+    pub b: Vec<f64>,
+    /// Objective, length `vars`.
+    pub c: Vec<f64>,
+    /// `true` where the row is an equality.
+    pub eq: Vec<bool>,
+    /// Power-iteration estimate of `||A||_2` (step-size scale).
+    pub a_norm: f64,
+}
+
+impl SparseLp {
+    /// Standardize `p` into the row-wise sparse form.
+    pub fn build(p: &LpProblem) -> SparseLp {
+        let mut lp = SparseLp::default();
+        let mut trips = Vec::new();
+        lp.rebuild(p, &mut trips);
+        lp
+    }
+
+    /// Rebuild in place from `p`, reusing all storage (the triplet
+    /// buffer is caller-owned so batch loops can pool it too). This is
+    /// the allocation-free steady state of repeated PDHG solves.
+    pub fn rebuild(&mut self, p: &LpProblem, trips: &mut Vec<(usize, usize, f64)>) {
+        let nv = p.num_vars();
+        let nc = p.num_constraints();
+        trips.clear();
+        self.b.clear();
+        self.eq.clear();
+        for (i, con) in p.constraints().iter().enumerate() {
+            let sign = match con.cmp {
+                Cmp::Ge => -1.0,
+                _ => 1.0,
+            };
+            for &(v, coef) in &con.coeffs {
+                trips.push((i, v, sign * coef));
+            }
+            self.b.push(sign * con.rhs);
+            self.eq.push(con.cmp == Cmp::Eq);
+        }
+        // `refill_from_triplets` sums duplicate (row, var) pairs,
+        // matching the dense `a[(i, v)] += ...` accumulation the
+        // row-wise form is defined by.
+        self.a.refill_from_triplets(nc, nv, trips);
+        self.c.clear();
+        self.c.extend_from_slice(p.objective());
+        self.a_norm = spectral_norm(&self.a);
+    }
+
+    /// Number of structural variables.
+    pub fn num_vars(&self) -> usize {
+        self.a.cols()
+    }
+
+    /// Number of constraint rows.
+    pub fn num_rows(&self) -> usize {
+        self.a.rows()
+    }
+}
+
+/// A padded row-wise LP ready for the AOT PDHG artifact.
+///
+/// Only the [`crate::runtime::PdhgExecutable`] path uses this: the XLA
+/// executable consumes dense row-major literals of a fixed
+/// power-of-two shape, so the dense `a`/`at` buffers are the artifact
+/// ABI, not a kernel choice. The in-process backend uses [`SparseLp`].
 ///
 /// Padding contract (validated by `python/tests/test_pdhg.py::
 /// test_pdhg_padding_is_inert`): padded rows are all-zero with
@@ -63,7 +148,10 @@ impl PaddedLp {
             eq_mask[i] = if is_eq { 1.0 } else { 0.0 };
         }
 
-        let a_norm = spectral_norm(&a, nc, nv);
+        // The padding is inert (zero rows/columns), so the spectral
+        // norm of the padded matrix equals that of the core block —
+        // estimate it sparsely instead of walking nc × nv zeros.
+        let a_norm = spectral_norm(&SparseMatrix::from_dense(&rw.a, 0.0));
         PaddedLp { a, at, b, c, eq_mask, nv, nc, nv0, nc0, a_norm }
     }
 
@@ -73,30 +161,24 @@ impl PaddedLp {
     }
 }
 
-/// Power-iteration estimate of the largest singular value of the
-/// row-major `nc × nv` matrix `a`.
-pub fn spectral_norm(a: &[f64], nc: usize, nv: usize) -> f64 {
+/// Power-iteration estimate of the largest singular value of a CSC
+/// matrix: 60 rounds of `v ← AᵀAv` from a seeded random start, O(nnz)
+/// per round. Returns 0.0 for empty or all-zero matrices.
+pub fn spectral_norm(a: &SparseMatrix) -> f64 {
     use crate::util::rng::{Pcg32, Rng};
+    if a.rows() == 0 || a.cols() == 0 || a.nnz() == 0 {
+        return 0.0;
+    }
     let mut rng = Pcg32::new(0x5eed);
-    let mut v: Vec<f64> = (0..nv).map(|_| rng.f64() - 0.5).collect();
+    let mut v: Vec<f64> = (0..a.cols()).map(|_| rng.f64() - 0.5).collect();
     let norm = crate::linalg::norm2(&v).max(1e-30);
     v.iter_mut().for_each(|x| *x /= norm);
     let mut sigma = 0.0;
-    let mut av = vec![0.0; nc];
-    let mut atav = vec![0.0; nv];
+    let mut av = vec![0.0; a.rows()];
+    let mut atav = vec![0.0; a.cols()];
     for _ in 0..60 {
-        for i in 0..nc {
-            av[i] = crate::linalg::dot(&a[i * nv..(i + 1) * nv], &v);
-        }
-        atav.iter_mut().for_each(|x| *x = 0.0);
-        for i in 0..nc {
-            let yi = av[i];
-            if yi != 0.0 {
-                for j in 0..nv {
-                    atav[j] += a[i * nv + j] * yi;
-                }
-            }
-        }
+        a.matvec_into(&v, &mut av);
+        a.matvec_t_into(&av, &mut atav);
         let n = crate::linalg::norm2(&atav);
         if n == 0.0 {
             return 0.0;
@@ -124,6 +206,42 @@ mod tests {
     }
 
     #[test]
+    fn sparse_lp_layout() {
+        let p = tiny_lp();
+        let lp = SparseLp::build(&p);
+        assert_eq!((lp.num_rows(), lp.num_vars()), (3, 2));
+        assert_eq!(lp.a.nnz(), 4);
+        // Ge row negated.
+        assert_eq!(lp.a[(2, 1)], -1.0);
+        assert_eq!(lp.b, vec![3.0, 2.0, -0.5]);
+        assert_eq!(lp.eq, vec![true, false, false]);
+        assert_eq!(lp.c, vec![1.0, 2.0]);
+        assert!(lp.a_norm > 0.0);
+    }
+
+    #[test]
+    fn sparse_lp_rebuild_matches_build() {
+        let p = tiny_lp();
+        let fresh = SparseLp::build(&p);
+        let mut pooled = SparseLp::build(&LpProblem::new(1));
+        let mut trips = Vec::new();
+        pooled.rebuild(&p, &mut trips);
+        assert_eq!(pooled.a, fresh.a);
+        assert_eq!(pooled.b, fresh.b);
+        assert_eq!(pooled.c, fresh.c);
+        assert_eq!(pooled.eq, fresh.eq);
+        assert_eq!(pooled.a_norm, fresh.a_norm);
+    }
+
+    #[test]
+    fn sparse_lp_sums_duplicate_coefficients() {
+        let mut p = LpProblem::new(1);
+        p.add_constraint(&[(0, 1.0), (0, 2.0)], Cmp::Le, 4.0);
+        let lp = SparseLp::build(&p);
+        assert_eq!(lp.a[(0, 0)], 3.0);
+    }
+
+    #[test]
     fn padding_layout() {
         let p = tiny_lp();
         let pad = PaddedLp::build(&p, 8, 6);
@@ -146,16 +264,18 @@ mod tests {
                 assert_eq!(pad.a[i * pad.nv + j], pad.at[j * pad.nc + i]);
             }
         }
+        // Padded and natural-shape norms agree: padding is inert.
+        let lp = SparseLp::build(&p);
+        assert!((pad.a_norm - lp.a_norm).abs() < 1e-9);
     }
 
     #[test]
     fn spectral_norm_identityish() {
-        // 2x2 diag(3, 1) embedded in 4x4 padding.
-        let mut a = vec![0.0; 16];
-        a[0] = 3.0;
-        a[5] = 1.0;
-        let s = spectral_norm(&a, 4, 4);
+        // diag(3, 1): largest singular value is 3.
+        let a = SparseMatrix::from_triplets(4, 4, &[(0, 0, 3.0), (1, 1, 1.0)]);
+        let s = spectral_norm(&a);
         assert!((s - 3.0).abs() < 1e-6, "{s}");
+        assert_eq!(spectral_norm(&SparseMatrix::zeros(4, 4)), 0.0);
     }
 
     #[test]

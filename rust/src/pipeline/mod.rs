@@ -19,8 +19,9 @@
 //!   including PDHG — with `x`, objective and duals mapped back
 //!   through the eliminations before schedule reconstruction;
 //! - **backend selection** ([`Backend`]): the sparse revised simplex
-//!   (default), the dense tableau oracle, or the first-order PDHG
-//!   iteration ([`crate::pdhg`]) — all selectable per solve through
+//!   (default), the dense tableau oracle, the first-order PDHG
+//!   iteration ([`crate::pdhg`]), its batched block variant, or the
+//!   PDHG→simplex hybrid — all selectable per solve through
 //!   [`PipelineOptions::backend`], which is the single source of truth
 //!   for backend and solver tuning (scenario families no longer carry
 //!   their own `SimplexOptions` copies). The revised backend's
@@ -35,7 +36,12 @@
 //!   cache has nothing for a shape, a basis from a *neighbouring* shape
 //!   (e.g. the `m`-processor instance of a processor-count sweep) is
 //!   projected onto the new LP by variable name and row label and used
-//!   as the fallback seed.
+//!   as the fallback seed. First-order backends have the primal
+//!   analogue: cached optimal points seed the PDHG iterates, projected
+//!   across shapes by variable name ([`project::project_point`]), and
+//!   [`Backend::Hybrid`] crosses a converged-enough PDHG point over to
+//!   a basis guess ([`project::crossover_basis`]) for an exact warm
+//!   simplex finish.
 //!
 //! The service facade over this pipeline — typed requests/responses,
 //! sessions, batch solving — is [`crate::api`].
@@ -89,18 +95,33 @@ pub enum Backend {
     #[default]
     RevisedSimplex,
     /// First-order primal-dual hybrid gradient iteration
-    /// ([`crate::pdhg`], pure-rust block loop). Runs behind presolve
-    /// like the simplex backends; ignores warm bases (it has none).
+    /// ([`crate::pdhg`], sparse in-process kernels). Runs behind
+    /// presolve like the simplex backends; warm-starts from a cached
+    /// (or cross-shape projected) primal point when a
+    /// [`WarmCache`] is supplied.
     Pdhg,
+    /// Batched block PDHG ([`crate::pdhg::block`]): a single request
+    /// runs as a width-1 block; sweep engines stack whole axes into
+    /// one shared iteration stream with per-column early retirement.
+    PdhgBlock,
+    /// PDHG → simplex hybrid: a loose, capped first-order stage
+    /// localizes the active set, [`project::crossover_basis`] turns it
+    /// into a basis guess, and a short warm revised-simplex cleanup
+    /// certifies the exact optimum. Exact like [`Backend::RevisedSimplex`],
+    /// with first-order warm paths on sweeps.
+    Hybrid,
 }
 
 impl Backend {
-    /// Stable wire name (`dense_tableau` / `revised_simplex` / `pdhg`).
+    /// Stable wire name (`dense_tableau` / `revised_simplex` / `pdhg`
+    /// / `pdhg_block` / `hybrid`).
     pub fn as_str(self) -> &'static str {
         match self {
             Backend::DenseTableau => "dense_tableau",
             Backend::RevisedSimplex => "revised_simplex",
             Backend::Pdhg => "pdhg",
+            Backend::PdhgBlock => "pdhg_block",
+            Backend::Hybrid => "hybrid",
         }
     }
 
@@ -110,8 +131,16 @@ impl Backend {
             "dense_tableau" => Some(Backend::DenseTableau),
             "revised_simplex" => Some(Backend::RevisedSimplex),
             "pdhg" => Some(Backend::Pdhg),
+            "pdhg_block" => Some(Backend::PdhgBlock),
+            "hybrid" => Some(Backend::Hybrid),
             _ => None,
         }
+    }
+
+    /// True for the backends that run the first-order PDHG iteration
+    /// (alone, batched, or as the hybrid's first stage).
+    pub fn is_first_order(self) -> bool {
+        matches!(self, Backend::Pdhg | Backend::PdhgBlock | Backend::Hybrid)
     }
 }
 
@@ -144,16 +173,28 @@ impl Default for PipelineOptions {
     }
 }
 
-/// What the PDHG backend did during one pipeline solve (absent on
-/// simplex solves).
+/// What a first-order backend did during one pipeline solve (absent
+/// on pure simplex solves).
 #[derive(Debug, Clone)]
 pub struct PdhgDiagnostics {
-    /// Fixed-step blocks executed.
+    /// Fixed-step blocks executed (each [`crate::pdhg::BLOCK_STEPS`]
+    /// iterations).
     pub blocks: usize,
-    /// Whether the residual/gap tolerances were met.
+    /// Whether the residual/gap tolerances were met — always true for
+    /// [`Backend::Hybrid`], whose simplex finish certifies optimality
+    /// regardless of how far the first-order stage got.
     pub converged: bool,
-    /// Final `(primal, dual, gap)` residuals.
+    /// Final `(primal, dual, gap)` residuals of the first-order stage.
     pub residuals: (f64, f64, f64),
+    /// Simplex pivots spent finishing the solve after crossover
+    /// (phase 1 + primal + dual); 0 outside [`Backend::Hybrid`].
+    pub crossover_pivots: usize,
+    /// Columns that converged and retired early from a block solve;
+    /// 0 outside [`Backend::PdhgBlock`].
+    pub columns_retired: usize,
+    /// Number of scenario columns stacked in the block (1 for the
+    /// unbatched backends).
+    pub block_width: usize,
 }
 
 /// Everything a pipeline solve produced, for callers that need more
@@ -174,7 +215,8 @@ pub struct Solved {
     pub reduced: LpProblem,
     /// Which backend produced `solution`.
     pub backend: Backend,
-    /// PDHG convergence details when `backend == Backend::Pdhg`.
+    /// First-order convergence details when
+    /// [`Backend::is_first_order`] holds for `backend`.
     pub pdhg: Option<PdhgDiagnostics>,
 }
 
@@ -200,8 +242,10 @@ pub fn solve_cached<S: ScenarioModel + ?Sized>(
 /// Full-control pipeline entry: explicit options, optional warm cache,
 /// and an optional cross-shape seed `(reduced LP of the solved
 /// neighbour, its optimal basis)` used when the cache misses. The
-/// cache and seed apply to the simplex backends; [`Backend::Pdhg`]
-/// solves cold (but still behind presolve).
+/// simplex backends warm-start from cached bases (and the projected
+/// seed); the first-order backends warm-start from cached primal
+/// points — same or projected shape — and store their solution point
+/// back. All backends run behind presolve.
 pub fn solve_full<S: ScenarioModel + ?Sized>(
     model: &S,
     spec: &SystemSpec,
@@ -234,36 +278,8 @@ pub fn solve_full_scratch<S: ScenarioModel + ?Sized>(
     let target: &LpProblem = pre.as_ref().map(|pr| &pr.problem).unwrap_or(&lp);
 
     let (sol, pdhg) = match opts.backend {
-        Backend::Pdhg => {
-            let (nv, nc) =
-                crate::pdhg::pad_shape(target.num_vars(), target.num_constraints());
-            let ps = crate::pdhg::solve_rust(target, nv, nc, &opts.pdhg)?;
-            let diag = PdhgDiagnostics {
-                blocks: ps.blocks,
-                converged: ps.converged,
-                residuals: ps.residuals,
-            };
-            let sol = LpSolution {
-                x: ps.x,
-                objective: ps.objective,
-                iterations: ps.blocks,
-                phase1_iterations: 0,
-                dual_iterations: 0,
-                factorization: opts.simplex.factorization,
-                pricing: opts.simplex.pricing,
-                refactorizations: 0,
-                peak_update_len: 0,
-                weight_resets: 0,
-                candidate_hits: 0,
-                candidate_refreshes: 0,
-                avg_ftran_nnz: 0.0,
-                avg_btran_nnz: 0.0,
-                dfs_solves: 0,
-                scan_solves: 0,
-                duals: None,
-                basis: None,
-            };
-            (sol, Some(diag))
+        Backend::Pdhg | Backend::PdhgBlock | Backend::Hybrid => {
+            solve_first_order(target, opts, cache, seed, scratch)?
         }
         simplex_backend => {
             let mut sopts = opts.simplex.clone();
@@ -304,6 +320,123 @@ pub fn solve_full_scratch<S: ScenarioModel + ?Sized>(
         None => lp,
     };
     Ok(Solved { schedule, solution, stats, reduced, backend: opts.backend, pdhg })
+}
+
+/// Wrap a PDHG solution in the common [`LpSolution`] shape. Simplex
+/// counters are zero by construction; `iterations` reports the total
+/// first-order iteration count (`blocks × BLOCK_STEPS`), the unit the
+/// wire diagnostics use consistently for PDHG cells.
+fn pdhg_lp_solution(ps: crate::pdhg::PdhgSolution, opts: &PipelineOptions) -> LpSolution {
+    LpSolution {
+        x: ps.x,
+        objective: ps.objective,
+        iterations: ps.blocks * crate::pdhg::BLOCK_STEPS,
+        phase1_iterations: 0,
+        dual_iterations: 0,
+        factorization: opts.simplex.factorization,
+        pricing: opts.simplex.pricing,
+        refactorizations: 0,
+        peak_update_len: 0,
+        weight_resets: 0,
+        candidate_hits: 0,
+        candidate_refreshes: 0,
+        avg_ftran_nnz: 0.0,
+        avg_btran_nnz: 0.0,
+        dfs_solves: 0,
+        scan_solves: 0,
+        duals: None,
+        basis: None,
+    }
+}
+
+/// Dispatch for the three first-order backends: warm-point lookup
+/// (same shape, else any cached point projected by variable name),
+/// the solve itself, point write-back, and diagnostics.
+fn solve_first_order(
+    target: &LpProblem,
+    opts: &PipelineOptions,
+    cache: Option<&mut WarmCache>,
+    seed: Option<(&LpProblem, &Basis)>,
+    scratch: &mut SolverScratch,
+) -> Result<(LpSolution, Option<PdhgDiagnostics>)> {
+    let key = (target.num_vars(), target.num_constraints());
+    let warm_x: Option<Vec<f64>> = cache.as_ref().and_then(|c| match c.point(key.0, key.1) {
+        Some((_, x)) => Some(x.to_vec()),
+        None => c.points().find_map(|(p, x)| project::project_point(p, target, x)),
+    });
+
+    match opts.backend {
+        Backend::PdhgBlock => {
+            let blk = crate::pdhg::solve_block(std::slice::from_ref(target), &opts.pdhg)?;
+            let ps = blk.columns.into_iter().next().expect("width-1 block has one column");
+            if let Some(c) = cache {
+                c.store_point(target, &ps.x);
+            }
+            let diag = PdhgDiagnostics {
+                blocks: ps.blocks,
+                converged: ps.converged,
+                residuals: ps.residuals,
+                crossover_pivots: 0,
+                columns_retired: blk.columns_retired,
+                block_width: blk.block_width,
+            };
+            Ok((pdhg_lp_solution(ps, opts), Some(diag)))
+        }
+        Backend::Hybrid => {
+            // Stage 1: loose, capped PDHG to localize the active set.
+            // Accuracy is the simplex finish's job.
+            let stage = crate::pdhg::PdhgOptions {
+                tol: opts.pdhg.tol.max(1e-4),
+                gap_tol: opts.pdhg.gap_tol.max(1e-5),
+                max_blocks: opts.pdhg.max_blocks.min(100),
+                ..opts.pdhg.clone()
+            };
+            let ps = crate::pdhg::solve_rust_scratch(target, &stage, warm_x.as_deref(), scratch)?;
+            // Stage 2: crossover to a basis guess, exact warm-simplex
+            // finish (an unusable guess falls back inside solve_warm).
+            let guess = project::crossover_basis(target, &ps.x, 1e-6);
+            let mut sopts = opts.simplex.clone();
+            sopts.backend = SolverBackend::RevisedSparse;
+            let sol = match cache {
+                Some(c) => {
+                    let seed_basis: Option<Basis> = guess.or_else(|| {
+                        seed.and_then(|(f, b)| project::project_basis(f, target, b))
+                    });
+                    let out =
+                        c.solve_seeded_scratch(target, &sopts, seed_basis.as_ref(), scratch)?;
+                    c.store_point(target, &out.x);
+                    out
+                }
+                None => crate::lp::solve_warm_scratch(target, &sopts, guess.as_ref(), scratch)?,
+            };
+            let crossover_pivots = sol.iterations + sol.phase1_iterations + sol.dual_iterations;
+            let diag = PdhgDiagnostics {
+                blocks: ps.blocks,
+                converged: true,
+                residuals: ps.residuals,
+                crossover_pivots,
+                columns_retired: 0,
+                block_width: 1,
+            };
+            Ok((sol, Some(diag)))
+        }
+        _ => {
+            let ps =
+                crate::pdhg::solve_rust_scratch(target, &opts.pdhg, warm_x.as_deref(), scratch)?;
+            if let Some(c) = cache {
+                c.store_point(target, &ps.x);
+            }
+            let diag = PdhgDiagnostics {
+                blocks: ps.blocks,
+                converged: ps.converged,
+                residuals: ps.residuals,
+                crossover_pivots: 0,
+                columns_retired: 0,
+                block_width: 1,
+            };
+            Ok((pdhg_lp_solution(ps, opts), Some(diag)))
+        }
+    }
 }
 
 #[cfg(test)]
@@ -413,9 +546,68 @@ mod tests {
 
     #[test]
     fn backend_wire_names_roundtrip() {
-        for b in [Backend::DenseTableau, Backend::RevisedSimplex, Backend::Pdhg] {
+        for b in [
+            Backend::DenseTableau,
+            Backend::RevisedSimplex,
+            Backend::Pdhg,
+            Backend::PdhgBlock,
+            Backend::Hybrid,
+        ] {
             assert_eq!(Backend::parse(b.as_str()), Some(b));
         }
         assert_eq!(Backend::parse("simplex"), None);
+        assert!(Backend::Hybrid.is_first_order());
+        assert!(!Backend::RevisedSimplex.is_first_order());
+    }
+
+    #[test]
+    fn hybrid_backend_is_exact_and_caches_points() {
+        let spec = table1();
+        let exact = solve(&FeOptions::default(), &spec).unwrap();
+        let opts = PipelineOptions { backend: Backend::Hybrid, ..PipelineOptions::default() };
+        let mut cache = WarmCache::new();
+        let solved =
+            solve_full(&FeOptions::default(), &spec, &opts, Some(&mut cache), None).unwrap();
+        // The simplex finish certifies the exact optimum — not just a
+        // first-order tolerance.
+        let rel = (solved.schedule.makespan - exact.makespan).abs() / exact.makespan.abs();
+        assert!(rel < 1e-9, "hybrid {} vs exact {}", solved.schedule.makespan, exact.makespan);
+        let diag = solved.pdhg.as_ref().expect("hybrid reports first-order diagnostics");
+        assert!(diag.converged, "hybrid diagnostics always converge");
+        assert_eq!(diag.block_width, 1);
+        assert!(cache.points().count() >= 1, "hybrid stores its warm point");
+        // A second solve through the same cache warm-starts from the
+        // stored point and basis and stays exact.
+        let again =
+            solve_full(&FeOptions::default(), &spec, &opts, Some(&mut cache), None).unwrap();
+        let rel = (again.schedule.makespan - exact.makespan).abs() / exact.makespan.abs();
+        assert!(rel < 1e-9, "warm hybrid {} vs exact {}", again.schedule.makespan, exact.makespan);
+    }
+
+    #[test]
+    fn pdhg_block_backend_matches_pdhg() {
+        let spec = SystemSpec::builder()
+            .source(0.2, 0.0)
+            .source(0.2, 5.0)
+            .processors(&[2.0, 3.0])
+            .job(100.0)
+            .build()
+            .unwrap();
+        let popts = PdhgOptions { max_blocks: 20_000, ..PdhgOptions::default() };
+        let plain = PipelineOptions {
+            backend: Backend::Pdhg,
+            pdhg: popts.clone(),
+            ..PipelineOptions::default()
+        };
+        let block = PipelineOptions {
+            backend: Backend::PdhgBlock,
+            pdhg: popts,
+            ..PipelineOptions::default()
+        };
+        let a = solve_full(&NfeOptions::default(), &spec, &plain, None, None).unwrap();
+        let b = solve_full(&NfeOptions::default(), &spec, &block, None, None).unwrap();
+        assert!((a.schedule.makespan - b.schedule.makespan).abs() < 1e-8);
+        let diag = b.pdhg.as_ref().expect("block diagnostics present");
+        assert_eq!(diag.block_width, 1, "a single request runs as a width-1 block");
     }
 }

@@ -143,6 +143,92 @@ pub fn project_basis(from: &LpProblem, to: &LpProblem, basis: &Basis) -> Option<
     Some(Basis { cols })
 }
 
+/// Project an optimal primal point from `from` onto `to`'s variables
+/// by **variable name**; variables that exist only in `to` start at
+/// zero. This is the first-order analogue of [`project_basis`]: a PDHG
+/// solve of the `m+1`-processor instance can start from the
+/// `m`-processor optimum instead of the origin. Returns `None` when
+/// names are empty or duplicated on either side (ambiguous match) or
+/// when `x` does not match `from`'s shape.
+pub fn project_point(from: &LpProblem, to: &LpProblem, x: &[f64]) -> Option<Vec<f64>> {
+    if x.len() != from.num_vars() {
+        return None;
+    }
+    let mut val: HashMap<&str, f64> = HashMap::with_capacity(from.num_vars());
+    for (v, &xv) in x.iter().enumerate() {
+        let name = from.var_name(v);
+        if name.is_empty() || val.insert(name, xv).is_some() {
+            return None;
+        }
+    }
+    let mut out = vec![0.0; to.num_vars()];
+    let mut seen: HashMap<&str, ()> = HashMap::with_capacity(to.num_vars());
+    for (v, slot) in out.iter_mut().enumerate() {
+        let name = to.var_name(v);
+        if name.is_empty() || seen.insert(name, ()).is_some() {
+            return None;
+        }
+        if let Some(&xv) = val.get(name) {
+            *slot = xv;
+        }
+    }
+    Some(out)
+}
+
+/// Build a simplex basis guess from an approximate primal point (the
+/// PDHG → simplex **crossover**): rows with visible slack at `x` take
+/// their own slack/surplus column; tight and equality rows greedily
+/// pick the strongest unused structural column from their support
+/// (largest `|a_rj · x_j|` with `x_j` clearly positive), falling back
+/// to the row's aux column. Returns `None` only when an equality row
+/// cannot be covered — the guess never needs to be feasible, because
+/// the warm simplex repairs or cold-restarts it, but a good guess
+/// turns the cleanup into a handful of pivots.
+pub fn crossover_basis(p: &LpProblem, x: &[f64], eps: f64) -> Option<Basis> {
+    if x.len() != p.num_vars() {
+        return None;
+    }
+    let n = p.num_vars();
+    let aux = aux_ranks(p);
+    let mut cols = vec![usize::MAX; p.num_constraints()];
+    let mut used = vec![false; n];
+    // Pass 1: rows with slack keep their aux column basic.
+    let mut tight: Vec<usize> = Vec::new();
+    for (k, con) in p.constraints().iter().enumerate() {
+        let act: f64 = con.coeffs.iter().map(|&(v, c)| c * x[v]).sum();
+        let loose = (con.rhs - act).abs() > eps * (1.0 + con.rhs.abs());
+        match aux[k] {
+            Some(rk) if loose => cols[k] = n + rk,
+            _ => tight.push(k),
+        }
+    }
+    // Pass 2: tight/equality rows pick a structural column from their
+    // support. Aux columns are per-row, so only structural picks can
+    // collide; `used` keeps the basis a permutation.
+    for &k in &tight {
+        let con = &p.constraints()[k];
+        let mut best: Option<(f64, usize)> = None;
+        for &(v, c) in &con.coeffs {
+            if used[v] || x[v] <= eps {
+                continue;
+            }
+            let w = (c * x[v]).abs();
+            if best.is_none_or(|(bw, _)| w > bw) {
+                best = Some((w, v));
+            }
+        }
+        match (best, aux[k]) {
+            (Some((_, v)), _) => {
+                used[v] = true;
+                cols[k] = v;
+            }
+            (None, Some(rk)) => cols[k] = n + rk,
+            (None, None) => return None,
+        }
+    }
+    Some(Basis { cols })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -192,6 +278,43 @@ mod tests {
         assert!(
             (warm.objective - cold.objective).abs() < 1e-7 * (1.0 + cold.objective.abs()),
             "warm {} vs cold {}",
+            warm.objective,
+            cold.objective
+        );
+    }
+
+    #[test]
+    fn project_point_maps_by_name_and_zeroes_new_vars() {
+        let lp_m = frontend::build_lp(&spec(4), &FeOptions::default());
+        let lp_m1 = frontend::build_lp(&spec(5), &FeOptions::default());
+        let x: Vec<f64> = (0..lp_m.num_vars()).map(|v| 1.0 + v as f64).collect();
+        // Identity projection is exact.
+        assert_eq!(project_point(&lp_m, &lp_m, &x).unwrap(), x);
+        // m -> m+1: shared names carry their value, new vars start at 0.
+        let px = project_point(&lp_m, &lp_m1, &x).unwrap();
+        assert_eq!(px.len(), lp_m1.num_vars());
+        for v in 0..lp_m.num_vars() {
+            let name = lp_m.var_name(v);
+            let v1 = (0..lp_m1.num_vars()).find(|&w| lp_m1.var_name(w) == name).unwrap();
+            assert_eq!(px[v1], x[v]);
+        }
+        // Shape mismatch refuses.
+        assert!(project_point(&lp_m, &lp_m1, &x[1..]).is_none());
+    }
+
+    #[test]
+    fn crossover_from_converged_pdhg_point_solves_exactly() {
+        let lp = frontend::build_lp(&spec(4), &FeOptions::default());
+        let opts = SimplexOptions::default();
+        let cold = solve_with(&lp, &opts).unwrap();
+        let pdhg = crate::pdhg::solve_rust(&lp, &Default::default()).unwrap();
+        let basis = crossover_basis(&lp, &pdhg.x, 1e-6).expect("crossover basis");
+        assert!(basis.is_complete());
+        assert_eq!(basis.cols.len(), lp.num_constraints());
+        let warm = solve_warm(&lp, &opts, Some(&basis)).unwrap();
+        assert!(
+            (warm.objective - cold.objective).abs() < 1e-7 * (1.0 + cold.objective.abs()),
+            "crossover warm {} vs cold {}",
             warm.objective,
             cold.objective
         );

@@ -175,6 +175,145 @@ fn mixed_family_batch_matches_sequential() {
     }
 }
 
+/// `Backend::PdhgBlock` on a single request runs the panel kernels at
+/// block width 1 and must agree with the sequential `Backend::Pdhg`
+/// driver to fp noise: both start cold from zero, share the step
+/// sizes, and check residuals on the same block boundaries.
+#[test]
+fn prop_pdhg_block_matches_sequential_pdhg() {
+    props("pdhg_block == pdhg (api)", 8, |g| {
+        let seed = g.usize_in(0, 1000);
+        let family = [Family::Frontend, Family::NoFrontend][g.usize_in(0, 2)];
+        let spec = pdhg_spec(seed);
+
+        // Cold sessions on both sides: with no warm points to seed
+        // from, the two drivers run the same trajectory.
+        let mut req = pdhg_request(family, spec);
+        let seq = match Solver::new().warm_start(false).build().solve(&req) {
+            Ok(r) => r,
+            Err(_) => return Ok(()),
+        };
+        req.options.backend = Some(Backend::PdhgBlock);
+        let blk = Solver::new()
+            .warm_start(false)
+            .build()
+            .solve(&req)
+            .map_err(|e| format!("pdhg_block: {e}"))?;
+
+        assert_eq!(blk.backend, Backend::PdhgBlock);
+        let diag = blk
+            .diagnostics
+            .pdhg
+            .as_ref()
+            .ok_or("pdhg_block response lost its convergence diagnostics")?;
+        if diag.block_width != 1 {
+            return Err(format!("single request must run at width 1, got {}", diag.block_width));
+        }
+        let rel = (blk.makespan - seq.makespan).abs() / seq.makespan.abs().max(1.0);
+        if rel >= 1e-8 {
+            return Err(format!(
+                "{}: pdhg_block {} vs pdhg {} (rel {rel:.2e})",
+                family.as_str(),
+                blk.makespan,
+                seq.makespan
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// `Backend::Hybrid` is *exact* on every family: whatever point the
+/// loosened PDHG stage reaches, the crossover basis only seeds the
+/// revised-simplex cleanup, which finishes at the true optimum.
+#[test]
+fn hybrid_crossover_reaches_the_simplex_optimum_on_every_family() {
+    let spec = SystemSpec::builder()
+        .source(0.2, 1.0)
+        .source(0.4, 5.0)
+        .processors(&[2.0, 3.0, 4.0, 5.0, 6.0])
+        .job(100.0)
+        .build()
+        .unwrap();
+    let mut session = Solver::new().build();
+    for &family in FAMILIES.iter() {
+        let exact = session.solve(&SolveRequest::new(family, spec.clone())).unwrap();
+        let mut req = SolveRequest::new(family, spec.clone());
+        req.options.backend = Some(Backend::Hybrid);
+        let hy = session.solve(&req).unwrap();
+        assert_eq!(hy.backend, Backend::Hybrid);
+        let diag = hy
+            .diagnostics
+            .pdhg
+            .as_ref()
+            .expect("hybrid response carries first-order diagnostics");
+        assert!(diag.converged, "{}: simplex cleanup makes hybrid exact", family.as_str());
+        assert_eq!(diag.block_width, 1);
+        assert!(
+            (hy.makespan - exact.makespan).abs() <= 1e-9 * (1.0 + exact.makespan.abs()),
+            "{}: hybrid {} vs revised simplex {}",
+            family.as_str(),
+            hy.makespan,
+            exact.makespan
+        );
+    }
+}
+
+/// `sweep::refine` never misses the coarse-grid knee: an independent
+/// facade-level evaluation of the same coarse grid locates the knee
+/// interval, and the refined bracket must land inside it (and be
+/// tighter than `tol` x its width).
+#[test]
+fn refinement_never_misses_the_coarse_grid_knee() {
+    use dlt::cost::advisor::knee_interval;
+    use dlt::dlt::schedule::TimingModel;
+    use dlt::experiments::sweep::{refine, ContinuousAxis};
+
+    let spec = SystemSpec::builder()
+        .source(0.2, 1.0)
+        .source(0.4, 5.0)
+        .processors(&[2.0, 3.0, 4.0, 5.0, 6.0])
+        .job(100.0)
+        .build()
+        .unwrap();
+    let coarse: Vec<f64> = (1..=6).map(|k| k as f64).collect();
+    let threshold = 0.05;
+
+    // Independent coarse pass through the public facade, walking the
+    // improvement direction (descending link scale) exactly like the
+    // advisor walks m = 1..M.
+    let mut session = Solver::new().build();
+    let mut t = Vec::new();
+    for &v in &coarse {
+        let resp = session
+            .solve(&SolveRequest::new(Family::Frontend, spec.with_scaled_links(v)))
+            .unwrap();
+        t.push(resp.makespan);
+    }
+    let n = coarse.len();
+    let rate =
+        |va: f64, ta: f64, vb: f64, tb: f64| (tb - ta) / (ta.abs().max(1e-12) * (va - vb));
+    let rates: Vec<f64> = (0..n - 1)
+        .map(|i| rate(coarse[n - 1 - i], t[n - 1 - i], coarse[n - 2 - i], t[n - 2 - i]))
+        .collect();
+    let k = knee_interval(&rates, threshold)
+        .expect("the compute-bound floor guarantees a sub-threshold step on this grid");
+    let (clo, chi) = (coarse[n - 2 - k], coarse[n - 1 - k]);
+
+    let tol = 0.05;
+    let r = refine(&spec, TimingModel::FrontEnd, ContinuousAxis::LinkScale, &coarse, threshold, tol)
+        .unwrap();
+    let (lo, hi) = r.knee.expect("refine locates the same knee");
+    assert!(
+        lo >= clo - 1e-9 && hi <= chi + 1e-9,
+        "refined bracket [{lo}, {hi}] escaped the coarse knee interval [{clo}, {chi}]"
+    );
+    assert!(
+        hi - lo <= tol * (chi - clo) + 1e-9,
+        "bracket [{lo}, {hi}] wider than tol x the coarse interval [{clo}, {chi}]"
+    );
+    assert!(r.solves > coarse.len(), "refinement must spend bisection solves");
+}
+
 /// The dense tableau and the revised simplex agree through the facade
 /// (backend selection is per request, warm state is skipped for the
 /// non-default backend only when it cannot use it).

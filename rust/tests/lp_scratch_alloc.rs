@@ -125,4 +125,25 @@ fn warm_scratch_solves_reach_a_flat_allocation_steady_state() {
         "scratch pool should cut warm-solve allocation by well over 10%: pooled \
          {pooled_total}B vs fresh {fresh_total}B over 10 warm solves"
     );
+
+    // The PDHG arm of the same scratch: repeated first-order solves
+    // through one pool must also settle to an exactly flat per-solve
+    // byte count (flat, not zero — the sparse standard form is rebuilt
+    // per instance; the iteration vectors and padded panels are what
+    // the pool recycles). Runs in this same #[test] so the global
+    // counters stay single-threaded.
+    let popts = dlt::pdhg::PdhgOptions { max_blocks: 5, ..Default::default() };
+    for lp in &lps[..5] {
+        dlt::pdhg::solve_rust_scratch(lp, &popts, None, &mut scratch).unwrap();
+    }
+    let mut pdhg_bytes = Vec::new();
+    for _ in 0..10 {
+        pdhg_bytes.push(bytes_during(|| {
+            dlt::pdhg::solve_rust_scratch(probe, &popts, None, &mut scratch).unwrap();
+        }));
+    }
+    assert!(
+        pdhg_bytes.windows(2).all(|w| w[0] == w[1]),
+        "steady-state per-PDHG-solve allocation must be flat: {pdhg_bytes:?}"
+    );
 }

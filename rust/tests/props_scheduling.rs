@@ -179,10 +179,7 @@ fn prop_pdhg_matches_simplex_on_fe_lps() {
         let spec = arb_spec(g, 2, 4);
         let lp = frontend::build_lp(&spec, &Default::default());
         let Ok(exact) = dlt::lp::solve(&lp) else { return Ok(()) };
-        let nv = lp.num_vars().next_power_of_two().max(32);
-        let nc = (lp.num_constraints() * 2).next_power_of_two().max(32);
-        let sol = dlt::pdhg::solve_rust(&lp, nv, nc, &Default::default())
-            .map_err(|e| format!("{e}"))?;
+        let sol = dlt::pdhg::solve_rust(&lp, &Default::default()).map_err(|e| format!("{e}"))?;
         let rel = (sol.objective - exact.objective).abs() / exact.objective.abs().max(1.0);
         if rel < 5e-3 {
             Ok(())

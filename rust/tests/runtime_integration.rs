@@ -52,16 +52,14 @@ fn pdhg_artifact_matches_rust_backend() {
     p.add_constraint(&[(2, 1.0)], Cmp::Ge, 1.0);
     let opts = PdhgOptions::default();
     let art = solve_artifact(&mut rt, &p, &opts).expect("artifact solve");
-    let (nv, nc) = {
-        let v = rt.manifest().pdhg_variant_for(3, 3).unwrap();
-        (v.nv, v.nc)
-    };
-    let rust = solve_rust(&p, nv, nc, &opts).expect("rust solve");
+    let rust = solve_rust(&p, &opts).expect("rust solve");
     assert!(art.converged, "artifact residuals {:?}", art.residuals);
-    // Identical iteration, identical padding, identical step sizes:
-    // trajectories must agree to fp noise.
+    // The artifact path still iterates on zero-padded panels while the
+    // in-process path runs the sparse kernels, so the trajectories are
+    // no longer bit-identical — but both converge to the same optimum
+    // within their residual tolerance.
     assert!(
-        (art.objective - rust.objective).abs() < 1e-8 * rust.objective.abs().max(1.0),
+        (art.objective - rust.objective).abs() < 1e-5 * rust.objective.abs().max(1.0),
         "artifact {} vs rust {}",
         art.objective,
         rust.objective

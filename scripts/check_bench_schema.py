@@ -30,6 +30,13 @@ Two layers, both fatal on failure:
      below 100%; 2x overload must fast-reject (shed rate > 0) while
      the accepted requests keep a finite p99; the 64-client probe must
      force LRU evictions.
+   - pdhg: the first-order tier guards — the sparse CSC matvec must
+     beat the dense row-major matvec >= 4x on the largest cell, the
+     width-16 block panel must deliver >= 2x sequential PDHG
+     throughput, the hybrid sweep's crossover-cleanup pivot total must
+     not exceed the cold-simplex pivot total, and knee refinement must
+     localize a non-degenerate bracket in fewer solves than the
+     equivalent uniform fine grid.
 
 Exit status is non-zero on the first violation.
 """
@@ -241,6 +248,74 @@ def gate_serve(doc, name):
           f"{over['accepted_p99_ms']:.2f}ms; probe evicted {probe['evictions_seen']}")
 
 
+# Cells/sections a BENCH_pdhg_hybrid.json must carry.
+PDHG_MATVEC_KEYS = {
+    "cell", "rows", "vars", "nnz", "dense_ns", "sparse_ns", "speedup",
+}
+PDHG_BLOCK_KEYS = {
+    "width", "sequential_ms", "block_ms", "throughput_ratio", "columns_retired",
+}
+PDHG_HYBRID_KEYS = {
+    "sweep_points", "hybrid_cleanup_pivots", "hybrid_stage_blocks",
+    "cold_simplex_pivots", "hybrid_ms", "cold_ms",
+}
+PDHG_REFINE_KEYS = {
+    "coarse_points", "threshold", "tol", "refine_solves",
+    "fine_grid_equivalent", "knee_lo", "knee_hi",
+}
+
+
+def gate_pdhg(doc, name):
+    cells = doc.get("matvec_cells")
+    if not cells:
+        fail(f"{name}: empty matvec_cells")
+    for c in cells:
+        require_keys(c, PDHG_MATVEC_KEYS, f"{name}: matvec_cells[{c.get('cell')}]")
+        if c["nnz"] <= 0:
+            fail(f"{name}: {c['cell']}: empty constraint matrix")
+    largest = max(cells, key=lambda c: c["rows"] * c["vars"])
+    # The scheduling matrices are overwhelmingly sparse; the CSC kernel
+    # must beat a dense row-major matvec by a wide margin where it
+    # matters most.
+    if largest["speedup"] < 4.0:
+        fail(f"{name}: {largest['cell']}: sparse matvec only "
+             f"{largest['speedup']:.1f}x dense, need >= 4x")
+
+    blocks = {}
+    for c in doc.get("block_cells", []):
+        require_keys(c, PDHG_BLOCK_KEYS, f"{name}: block_cells[width={c.get('width')}]")
+        blocks[c["width"]] = c
+    if 16 not in blocks:
+        fail(f"{name}: block_cells missing the width-16 panel")
+    wide = blocks[16]
+    if wide["throughput_ratio"] < 2.0:
+        fail(f"{name}: block-of-16 only {wide['throughput_ratio']:.2f}x "
+             f"sequential PDHG throughput, need >= 2x")
+
+    hy = doc.get("hybrid")
+    if not hy:
+        fail(f"{name}: missing hybrid section")
+    require_keys(hy, PDHG_HYBRID_KEYS, f"{name}: hybrid")
+    if hy["hybrid_cleanup_pivots"] > hy["cold_simplex_pivots"]:
+        fail(f"{name}: hybrid cleanup spent {hy['hybrid_cleanup_pivots']} pivots, "
+             f"more than the {hy['cold_simplex_pivots']} cold-simplex pivots")
+
+    ref = doc.get("refine")
+    if not ref:
+        fail(f"{name}: missing refine section")
+    require_keys(ref, PDHG_REFINE_KEYS, f"{name}: refine")
+    if not ref["knee_lo"] < ref["knee_hi"]:
+        fail(f"{name}: degenerate knee bracket [{ref['knee_lo']}, {ref['knee_hi']}]")
+    if ref["refine_solves"] >= ref["fine_grid_equivalent"]:
+        fail(f"{name}: refinement spent {ref['refine_solves']} solves, no better "
+             f"than the {ref['fine_grid_equivalent']}-point uniform grid")
+
+    print(f"  gate ok: sparse matvec {largest['speedup']:.1f}x dense on "
+          f"{largest['cell']}; block-of-16 {wide['throughput_ratio']:.2f}x sequential; "
+          f"hybrid cleanup {hy['hybrid_cleanup_pivots']} vs cold "
+          f"{hy['cold_simplex_pivots']} pivots; knee in {ref['refine_solves']} solves")
+
+
 def reject_nonfinite(token):
     fail(f"non-finite literal `{token}` in document")
 
@@ -261,6 +336,8 @@ def main(paths):
             gate_serve(doc, path)
         if doc.get("group") == "sim":
             gate_sim(doc, path)
+        if doc.get("group") == "pdhg":
+            gate_pdhg(doc, path)
         print(f"check_bench_schema: {path}: ok")
 
 
