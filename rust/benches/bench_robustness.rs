@@ -1,0 +1,194 @@
+//! Bench: the fail-operational tier — what robustness costs.
+//!
+//! Three sections:
+//!
+//! - **deadline overhead** — the same warm-session job sweep with an
+//!   unbounded budget vs a generous 60 s deadline. The budget check is
+//!   amortized (`iterations & 63 == 0`), so the bounded sweep must stay
+//!   within 2 % of the unbounded one (the schema gate).
+//! - **ladder engage** — a cold solve vs the same solve handed a
+//!   corrupted (singular / wrong-shape) warm basis: the recovery path
+//!   must fall back cold, land on the same optimum, and record
+//!   `warm_fallback_cold` in `recovery_events` (count gated >= 1).
+//! - **deadline honored** — a PDHG solve that cannot converge
+//!   (`tol = 0`) under a real wall-clock deadline: the typed
+//!   `DeadlineExceeded` must arrive within 2x the deadline.
+//!
+//! With `DLT_BENCH_JSON_DIR=dir` the results land in
+//! `dir/BENCH_robustness.json`; `DLT_BENCH_FAST=1` trims repetitions;
+//! `DLT_BENCH_ASSERT=1` turns the gates into in-process panics (CI
+//! leaves it unset so the JSON artifact survives a regression and the
+//! python step stays the single gate).
+
+use dlt::api::{Family, SolveRequest, Solver};
+use dlt::config::json::Json;
+use dlt::dlt::frontend;
+use dlt::error::Error;
+use dlt::lp::{solve_warm, solve_with, Basis, SimplexOptions};
+use dlt::model::SystemSpec;
+use dlt::pipeline::{self, Backend, PipelineOptions};
+use std::time::Instant;
+
+fn spec(n: usize, m: usize) -> SystemSpec {
+    let mut b = SystemSpec::builder();
+    for i in 0..n {
+        b = b.source(0.2 + 0.1 * i as f64, i as f64);
+    }
+    let a: Vec<f64> = (0..m).map(|k| 2.0 + 0.5 * k as f64).collect();
+    b.processors(&a).job(100.0).build().unwrap()
+}
+
+/// Wall-clock milliseconds for one warm-session sweep of `solves`
+/// job-scaled requests, every request carrying `timeout_ms`.
+fn sweep_ms(s: &SystemSpec, solves: usize, timeout_ms: Option<u64>) -> f64 {
+    let mut session = Solver::new().build();
+    // Warm the cache outside the timed region.
+    for k in 0..4 {
+        let mut req = SolveRequest::new(Family::Frontend, s.with_job(100.0 + k as f64));
+        req.options.timeout_ms = timeout_ms;
+        session.solve(&req).expect("warmup solve");
+    }
+    let t0 = Instant::now();
+    for k in 0..solves {
+        let mut req =
+            SolveRequest::new(Family::Frontend, s.with_job(100.0 + (k % 8) as f64));
+        req.options.timeout_ms = timeout_ms;
+        std::hint::black_box(session.solve(&req).expect("sweep solve"));
+    }
+    t0.elapsed().as_nanos() as f64 * 1e-6
+}
+
+fn main() {
+    let fast = std::env::var("DLT_BENCH_FAST").is_ok();
+    let assert_gates = std::env::var("DLT_BENCH_ASSERT").is_ok();
+    let solves = if fast { 400 } else { 2_000 };
+    let rounds = if fast { 3 } else { 5 };
+
+    println!("== bench group: robustness (deadline budgets, recovery ladder, degradation) ==");
+
+    // --- deadline-check overhead on the warm hot path ---
+    // Interleaved best-of-`rounds` on both sides so drift hits them
+    // equally; the gate compares the two minima.
+    let s = spec(2, 6);
+    let (mut baseline_ms, mut budgeted_ms) = (f64::INFINITY, f64::INFINITY);
+    for _ in 0..rounds {
+        baseline_ms = baseline_ms.min(sweep_ms(&s, solves, None));
+        budgeted_ms = budgeted_ms.min(sweep_ms(&s, solves, Some(60_000)));
+    }
+    let overhead_pct = (budgeted_ms - baseline_ms) / baseline_ms * 100.0;
+    println!(
+        "deadline overhead: {solves} warm solves, unbounded {baseline_ms:.2}ms vs \
+         60s-budget {budgeted_ms:.2}ms ({overhead_pct:+.2}%)"
+    );
+    if assert_gates {
+        assert!(
+            overhead_pct <= 2.0,
+            "deadline checks cost {overhead_pct:.2}% on the warm hot path (budget: <= 2%)"
+        );
+    }
+
+    // --- recovery-ladder engagement latency ---
+    let lp = frontend::build_lp(&spec(3, 10), &Default::default());
+    let opts = SimplexOptions::default();
+    let reps = if fast { 40 } else { 200 };
+    let (mut cold_ns, mut engage_ns) = (f64::INFINITY, f64::INFINITY);
+    let garbage = Basis { cols: vec![0, 0, 0, 0] };
+    let mut events = 0usize;
+    for _ in 0..rounds {
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            std::hint::black_box(solve_with(&lp, &opts).expect("cold solve"));
+        }
+        cold_ns = cold_ns.min(t0.elapsed().as_nanos() as f64 / reps as f64);
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            let sol = solve_warm(&lp, &opts, Some(&garbage)).expect("recovered solve");
+            events = sol.recovery_events.len();
+            std::hint::black_box(sol);
+        }
+        engage_ns = engage_ns.min(t0.elapsed().as_nanos() as f64 / reps as f64);
+    }
+    let (cold_ms, engage_ms) = (cold_ns * 1e-6, engage_ns * 1e-6);
+    println!(
+        "ladder engage: cold {cold_ms:.3}ms vs corrupted-warm-basis {engage_ms:.3}ms \
+         ({events} recovery event(s) recorded)"
+    );
+    if assert_gates {
+        assert!(events >= 1, "corrupted warm basis recorded no recovery events");
+    }
+
+    // --- deadline honored under a diverging first-order solve ---
+    let timeout_ms: u64 = if fast { 30 } else { 50 };
+    let heavy = spec(3, 40);
+    let popts = PipelineOptions {
+        backend: Backend::Pdhg,
+        timeout_ms: Some(timeout_ms),
+        pdhg: dlt::pdhg::PdhgOptions {
+            tol: 0.0,
+            gap_tol: 0.0,
+            max_blocks: usize::MAX / 2,
+            ..Default::default()
+        },
+        ..PipelineOptions::default()
+    };
+    let t0 = Instant::now();
+    let verdict = pipeline::solve_full(&frontend::FeOptions::default(), &heavy, &popts, None, None);
+    let observed_ms = t0.elapsed().as_nanos() as f64 * 1e-6;
+    let typed = matches!(verdict, Err(Error::DeadlineExceeded { .. }));
+    let within_factor = observed_ms / timeout_ms as f64;
+    println!(
+        "deadline honored: {timeout_ms}ms budget on a non-converging pdhg solve -> \
+         typed={typed} after {observed_ms:.1}ms ({within_factor:.2}x the deadline)"
+    );
+    if assert_gates {
+        assert!(typed, "non-converging solve under deadline did not return DeadlineExceeded");
+        assert!(
+            within_factor <= 2.0,
+            "deadline honored only within {within_factor:.2}x (budget: <= 2x)"
+        );
+    }
+
+    // --- JSON artifact ---
+    let doc = Json::Object(vec![
+        ("group".into(), Json::Str("robustness".into())),
+        (
+            "instance".into(),
+            Json::Str(format!(
+                "fe warm sweep ({solves} solves), corrupted-basis recovery, \
+                 {timeout_ms}ms pdhg deadline"
+            )),
+        ),
+        (
+            "deadline_overhead".into(),
+            Json::Object(vec![
+                ("solves".into(), Json::Num(solves as f64)),
+                ("baseline_ms".into(), Json::Num(baseline_ms)),
+                ("budgeted_ms".into(), Json::Num(budgeted_ms)),
+                ("overhead_pct".into(), Json::Num(overhead_pct)),
+            ]),
+        ),
+        (
+            "ladder".into(),
+            Json::Object(vec![
+                ("cold_ms".into(), Json::Num(cold_ms)),
+                ("engage_ms".into(), Json::Num(engage_ms)),
+                ("recovery_events_count".into(), Json::Num(events as f64)),
+            ]),
+        ),
+        (
+            "deadline_honored".into(),
+            Json::Object(vec![
+                ("timeout_ms".into(), Json::Num(timeout_ms as f64)),
+                ("observed_ms".into(), Json::Num(observed_ms)),
+                ("within_factor".into(), Json::Num(within_factor)),
+                ("typed_error".into(), Json::Bool(typed)),
+            ]),
+        ),
+    ]);
+    if let Ok(dir) = std::env::var("DLT_BENCH_JSON_DIR") {
+        std::fs::create_dir_all(&dir).expect("create bench json dir");
+        let path = std::path::Path::new(&dir).join("BENCH_robustness.json");
+        std::fs::write(&path, doc.to_string_pretty()).expect("write BENCH_robustness.json");
+        println!("   wrote {}", path.display());
+    }
+}

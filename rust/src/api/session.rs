@@ -221,6 +221,7 @@ impl Session {
             backend: o.backend.unwrap_or(cfg.backend),
             simplex,
             pdhg,
+            timeout_ms: o.timeout_ms,
         };
 
         let model: Box<dyn ScenarioModel> = match req.family {
@@ -299,6 +300,7 @@ impl Session {
             comm_end: sched.comm_end.clone(),
             compute_start: sched.compute_start.clone(),
             compute_end: sched.compute_end.clone(),
+            degraded: false,
             diagnostics: Diagnostics {
                 iterations: solved.solution.iterations,
                 phase1_iterations: solved.solution.phase1_iterations,
@@ -315,6 +317,7 @@ impl Session {
                 avg_btran_nnz: solved.solution.avg_btran_nnz,
                 dfs_solves: solved.solution.dfs_solves,
                 scan_solves: solved.solution.scan_solves,
+                recovery_events: solved.solution.recovery_events.clone(),
                 presolve: solved.stats,
                 pdhg: solved.pdhg,
                 serve: None,
@@ -322,6 +325,28 @@ impl Session {
                 solve_ns,
             },
         })
+    }
+
+    /// Degraded solve for the serving tier's overload path: force a
+    /// loosened first-order backend (coarse tolerances, small block
+    /// cap, no deadline) so an overloaded shard can still answer with
+    /// a usable approximate schedule instead of shedding the request.
+    /// The response is flagged `degraded: true`; its makespan may sit
+    /// above the true optimum by the loosened tolerance.
+    pub fn solve_degraded(
+        &mut self,
+        req: &SolveRequest,
+    ) -> std::result::Result<SolveResponse, ApiError> {
+        self.solves += 1;
+        let mut loose = req.clone();
+        loose.options.backend = Some(Backend::Pdhg);
+        loose.options.timeout_ms = None;
+        loose.options.pdhg_tol = Some(req.options.pdhg_tol.map_or(1e-3, |t| t.max(1e-3)));
+        loose.options.pdhg_max_blocks =
+            Some(req.options.pdhg_max_blocks.map_or(40, |b| b.min(40)));
+        let mut resp = self.solve_inner(&loose).map_err(ApiError::from)?;
+        resp.degraded = true;
+        Ok(resp)
     }
 
     /// Solve one request, then replay the resulting schedule through
@@ -572,6 +597,31 @@ mod tests {
             )
             .unwrap_err();
         assert_eq!(err.kind, "usage", "{err}");
+    }
+
+    #[test]
+    fn degraded_solve_is_flagged_and_answers() {
+        let mut session = Solver::new().build();
+        let exact = session.solve(&SolveRequest::new(Family::Frontend, spec())).unwrap();
+        assert!(!exact.degraded, "direct solves are never degraded");
+        let deg = session.solve_degraded(&SolveRequest::new(Family::Frontend, spec())).unwrap();
+        assert!(deg.degraded, "degraded responses must be flagged");
+        assert_eq!(deg.backend, Backend::Pdhg);
+        assert!(deg.makespan.is_finite() && deg.makespan > 0.0, "makespan {}", deg.makespan);
+        // The flag survives the wire roundtrip.
+        let back = SolveResponse::from_json(&deg.to_json()).unwrap();
+        assert!(back.degraded);
+    }
+
+    #[test]
+    fn request_timeout_surfaces_as_deadline_exceeded() {
+        // A zero deadline on a first-order backend cannot finish a
+        // single block; the session must surface the typed kind.
+        let mut req = SolveRequest::new(Family::Frontend, spec());
+        req.options.backend = Some(Backend::Pdhg);
+        req.options.timeout_ms = Some(0);
+        let err = Solver::new().build().solve(&req).unwrap_err();
+        assert_eq!(err.kind, "deadline_exceeded", "{err}");
     }
 
     #[test]

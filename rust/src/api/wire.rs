@@ -137,6 +137,11 @@ pub struct RequestOptions {
     pub pdhg_tol: Option<f64>,
     /// PDHG block-count cap override.
     pub pdhg_max_blocks: Option<usize>,
+    /// Wall-clock deadline for the whole solve, in milliseconds. On
+    /// expiry the pipeline returns a typed `deadline_exceeded` error
+    /// (or, when the serving tier runs in degraded mode, a loosened
+    /// answer flagged `degraded: true`). `None` = unbounded.
+    pub timeout_ms: Option<u64>,
 }
 
 impl RequestOptions {
@@ -179,6 +184,9 @@ impl RequestOptions {
         if let Some(b) = self.pdhg_max_blocks {
             kv.push(("pdhg_max_blocks".into(), Json::Num(b as f64)));
         }
+        if let Some(t) = self.timeout_ms {
+            kv.push(("timeout_ms".into(), Json::Num(t as f64)));
+        }
         Json::Object(kv)
     }
 
@@ -186,7 +194,7 @@ impl RequestOptions {
     /// unknown key is `Error::Config` — a misspelled override must
     /// fail loudly, not silently solve with the defaults.
     pub fn from_json(v: &Json) -> Result<RequestOptions> {
-        const KNOWN: [&str; 12] = [
+        const KNOWN: [&str; 13] = [
             "backend",
             "presolve",
             "factorization",
@@ -199,6 +207,7 @@ impl RequestOptions {
             "proc_ready",
             "pdhg_tol",
             "pdhg_max_blocks",
+            "timeout_ms",
         ];
         let Json::Object(kv) = v else {
             return Err(Error::Config(format!("options must be an object, got {v:?}")));
@@ -259,6 +268,9 @@ impl RequestOptions {
         }
         if let Some(b) = v.get("pdhg_max_blocks") {
             o.pdhg_max_blocks = Some(b.as_usize()?);
+        }
+        if let Some(t) = v.get("timeout_ms") {
+            o.timeout_ms = Some(t.as_usize()? as u64);
         }
         Ok(o)
     }
@@ -365,6 +377,11 @@ pub struct Diagnostics {
     /// Triangular solves answered through the full column scan (the
     /// dense-RHS side of the DFS/scan crossover).
     pub scan_solves: usize,
+    /// Numerical-resilience events the solve recorded, in order:
+    /// recovery-ladder rungs (`markowitz_retry`, `bland_perturbed`,
+    /// `dense_oracle`) and in-solve events (`early_refactorize`,
+    /// `bland_engaged`, `warm_fallback_cold`). Empty on clean solves.
+    pub recovery_events: Vec<String>,
     /// What presolve removed in front of the backend.
     pub presolve: PresolveStats,
     /// First-order convergence details (`pdhg` / `pdhg_block` /
@@ -445,6 +462,10 @@ pub struct SolveResponse {
     pub compute_start: Vec<f64>,
     /// Per-processor compute end times.
     pub compute_end: Vec<f64>,
+    /// Whether this answer came from the serving tier's degraded mode:
+    /// a loosened first-order solve produced under overload instead of
+    /// a shed. Always `false` on direct `Session` solves.
+    pub degraded: bool,
     /// Solver diagnostics.
     pub diagnostics: Diagnostics,
 }
@@ -490,6 +511,10 @@ impl SolveResponse {
             ("avg_btran_nnz".into(), Json::Num(d.avg_btran_nnz)),
             ("dfs_solves".into(), Json::Num(d.dfs_solves as f64)),
             ("scan_solves".into(), Json::Num(d.scan_solves as f64)),
+            (
+                "recovery_events".into(),
+                Json::Array(d.recovery_events.iter().map(|e| Json::Str(e.clone())).collect()),
+            ),
             (
                 "presolve".into(),
                 Json::Object(vec![
@@ -559,6 +584,9 @@ impl SolveResponse {
         kv.push(("comm_end".into(), nums(&self.comm_end)));
         kv.push(("compute_start".into(), nums(&self.compute_start)));
         kv.push(("compute_end".into(), nums(&self.compute_end)));
+        if self.degraded {
+            kv.push(("degraded".into(), Json::Bool(true)));
+        }
         kv.push(("diagnostics".into(), Json::Object(diag)));
         Json::Object(kv)
     }
@@ -635,6 +663,15 @@ impl SolveResponse {
             avg_btran_nnz: d.req("avg_btran_nnz")?.as_f64()?,
             dfs_solves: d.req("dfs_solves")?.as_usize()?,
             scan_solves: d.req("scan_solves")?.as_usize()?,
+            // Tolerant: absent on responses from pre-ladder servers.
+            recovery_events: match d.get("recovery_events") {
+                Some(r) => r
+                    .as_array()?
+                    .iter()
+                    .map(|e| Ok(e.as_str()?.to_string()))
+                    .collect::<Result<Vec<String>>>()?,
+                None => Vec::new(),
+            },
             presolve: PresolveStats {
                 fixed_vars: pres.req("fixed_vars")?.as_usize()?,
                 empty_rows_dropped: pres.req("empty_rows_dropped")?.as_usize()?,
@@ -662,6 +699,10 @@ impl SolveResponse {
             comm_end: v.req("comm_end")?.as_f64_vec()?,
             compute_start: v.req("compute_start")?.as_f64_vec()?,
             compute_end: v.req("compute_end")?.as_f64_vec()?,
+            degraded: match v.get("degraded") {
+                Some(b) => b.as_bool()?,
+                None => false,
+            },
             diagnostics,
         })
     }
@@ -693,6 +734,7 @@ impl From<Error> for ApiError {
             Error::Infeasible(_) => "infeasible",
             Error::Unbounded(_) => "unbounded",
             Error::IterationLimit { .. } => "iteration_limit",
+            Error::DeadlineExceeded { .. } => "deadline_exceeded",
             Error::Numerical(_) => "numerical",
             Error::InvalidSchedule(_) => "invalid_schedule",
             Error::Config(_) => "config",
@@ -729,6 +771,17 @@ impl ApiError {
                 let digits: String =
                     self.message.chars().filter(|c| c.is_ascii_digit()).collect();
                 Error::Overloaded { retry_after_ms: digits.parse().unwrap_or(0) }
+            }
+            "deadline_exceeded" => {
+                // Recover the elapsed time from the canonical Display
+                // text ("deadline exceeded after {ms} ms in {phase}
+                // ({n} iterations)") — the first number is elapsed_ms.
+                let ms = self
+                    .message
+                    .split_whitespace()
+                    .find_map(|w| w.parse::<u64>().ok())
+                    .unwrap_or(0);
+                Error::DeadlineExceeded { elapsed_ms: ms, iterations: 0, phase: "wire".into() }
             }
             _ => Error::Numerical(self.message),
         }
@@ -783,6 +836,7 @@ mod tests {
                 eps: Some(1e-8),
                 mode: Some(Mode::Proportional),
                 pdhg_max_blocks: Some(1234),
+                timeout_ms: Some(250),
                 ..RequestOptions::default()
             },
         };
@@ -826,6 +880,22 @@ mod tests {
         let back = ApiError::from_json(&e.to_json()).unwrap();
         assert_eq!(e, back);
         assert!(matches!(back.into_error(), Error::Infeasible(_)));
+    }
+
+    #[test]
+    fn deadline_error_maps_to_stable_kind_and_back() {
+        let e = ApiError::from(Error::DeadlineExceeded {
+            elapsed_ms: 12,
+            iterations: 34,
+            phase: "simplex".into(),
+        });
+        assert_eq!(e.kind, "deadline_exceeded");
+        let back = ApiError::from_json(&e.to_json()).unwrap();
+        assert_eq!(e, back);
+        match back.into_error() {
+            Error::DeadlineExceeded { elapsed_ms, .. } => assert_eq!(elapsed_ms, 12),
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
     }
 
     #[test]

@@ -13,8 +13,18 @@ pub struct Args {
 }
 
 /// Flags that take no value.
-const BOOL_FLAGS: &[&str] =
-    &["trace", "real-compute", "csv", "quiet", "cold", "steal", "pretty", "json", "asap"];
+const BOOL_FLAGS: &[&str] = &[
+    "trace",
+    "real-compute",
+    "csv",
+    "quiet",
+    "cold",
+    "steal",
+    "pretty",
+    "json",
+    "asap",
+    "degraded",
+];
 
 impl Args {
     /// Parse argv (without the binary name).

@@ -74,6 +74,7 @@ fn solve_spec(
     model: TimingModel,
     solver: &str,
     simplex: SimplexOptions,
+    timeout_ms: Option<u64>,
 ) -> Result<Schedule> {
     let backend = match solver {
         "simplex" => Backend::RevisedSimplex,
@@ -97,9 +98,9 @@ fn solve_spec(
         }
     };
     let mut session = Solver::new().backend(backend).simplex(simplex).build();
-    let resp = session
-        .solve(&SolveRequest::new(Family::from(model), spec.clone()))
-        .map_err(|e| e.into_error())?;
+    let mut req = SolveRequest::new(Family::from(model), spec.clone());
+    req.options.timeout_ms = timeout_ms;
+    let resp = session.solve(&req).map_err(|e| e.into_error())?;
     Ok(resp.schedule())
 }
 
@@ -182,7 +183,8 @@ pub fn solve(a: &Args) -> Result<()> {
     let spec = load(a)?;
     let model = model_of(a)?;
     let solver = a.get_or("solver", "simplex");
-    let sched = solve_spec(&spec, model, &solver, simplex_of(a)?)?;
+    let timeout = a.get_usize("timeout-ms")?.map(|ms| ms as u64);
+    let sched = solve_spec(&spec, model, &solver, simplex_of(a)?, timeout)?;
     println!("model: {model:?}   solver: {solver}");
     println!("T_f = {:.6}", sched.makespan);
     print!("{}", sched.render_beta_table());
@@ -252,7 +254,8 @@ fn simulate_cluster(a: &Args) -> Result<()> {
         Some(m) => synthetic_scale(&load(a)?, m, model)?,
         None => {
             let spec = load(a)?;
-            let sched = solve_spec(&spec, model, &a.get_or("solver", "simplex"), simplex_of(a)?)?;
+            let sched =
+                solve_spec(&spec, model, &a.get_or("solver", "simplex"), simplex_of(a)?, None)?;
             (spec, sched)
         }
     };
@@ -285,7 +288,7 @@ fn simulate_cluster(a: &Args) -> Result<()> {
 fn simulate_legacy(a: &Args) -> Result<()> {
     let spec = load(a)?;
     let model = model_of(a)?;
-    let sched = solve_spec(&spec, model, &a.get_or("solver", "simplex"), simplex_of(a)?)?;
+    let sched = solve_spec(&spec, model, &a.get_or("solver", "simplex"), simplex_of(a)?, None)?;
     let opts = SimOptions {
         model,
         link_jitter: a.get_f64("jitter")?.unwrap_or(0.0),
@@ -307,7 +310,7 @@ fn simulate_legacy(a: &Args) -> Result<()> {
 pub fn cluster(a: &Args) -> Result<()> {
     let spec = load(a)?;
     let model = model_of(a)?;
-    let sched = solve_spec(&spec, model, "simplex", SimplexOptions::default())?;
+    let sched = solve_spec(&spec, model, "simplex", SimplexOptions::default(), None)?;
     let compute = if a.has("real-compute") {
         let dir = a.get_or("artifacts", "artifacts");
         let a_vec = spec.a();
@@ -705,6 +708,10 @@ pub fn serve(a: &Args) -> Result<()> {
     if let Some(ms) = a.get_usize("retry-after-ms")? {
         opts.retry_after_ms = ms as u64;
     }
+    opts.degraded = a.has("degraded");
+    if let Some(ms) = a.get_usize("default-timeout-ms")? {
+        opts.default_timeout_ms = (ms > 0).then_some(ms as u64);
+    }
     opts.solver = Solver::new().backend(backend).simplex(simplex_of(a)?);
 
     let server = Server::start(opts)?;
@@ -720,12 +727,15 @@ pub fn serve(a: &Args) -> Result<()> {
             std::thread::sleep(std::time::Duration::from_secs(secs as u64));
             let stats = server.shutdown();
             eprintln!(
-                "drained: {} conns, {} requests, {} responses, {} shed, {} malformed, \
-                 {} evictions, {}/{} shard hits/misses, {} resident",
+                "drained: {} conns, {} requests, {} responses, {} shed, {} expired, \
+                 {} degraded, {} malformed, {} evictions, {}/{} shard hits/misses, \
+                 {} resident",
                 stats.connections,
                 stats.requests,
                 stats.responses,
                 stats.shed,
+                stats.expired,
+                stats.degraded,
                 stats.malformed,
                 stats.evictions,
                 stats.shard_hits,

@@ -4,7 +4,7 @@
 //! ```text
 //! dlt solve     --spec spec.json [--model fe|nfe] [--solver simplex|pdhg|pdhg-artifact]
 //!               [--factorization product_form_eta|forrest_tomlin|markowitz|bartels_golub]
-//!               [--pricing dantzig|devex|steepest_edge]
+//!               [--pricing dantzig|devex|steepest_edge] [--timeout-ms MS]
 //! dlt batch     [--requests FILE|-] [--backend NAME]
 //!               [--factorization NAME] [--pricing NAME]
 //!               [--threads T] [--pretty]
@@ -24,6 +24,7 @@
 //! dlt artifacts
 //! dlt serve     [--host 127.0.0.1] [--port 4517] [--workers W] [--shards S]
 //!               [--queue-depth Q] [--warm-budget-kb KB] [--retry-after-ms MS]
+//!               [--degraded] [--default-timeout-ms MS]
 //!               [--backend NAME] [--factorization NAME] [--pricing NAME]
 //!               [--max-seconds N]
 //! ```
@@ -88,6 +89,8 @@ COMMON FLAGS
                      markowitz | bartels_golub
   --pricing NAME     simplex pricing rule:
                      dantzig (default) | devex | steepest_edge
+  --timeout-ms MS    wall-clock solve deadline; expiry is a typed
+                     `deadline exceeded` error, not a partial answer
   --csv-dir DIR      also write CSV output
   --exp NAME         experiment id (fig10..fig20; default: all)
 
@@ -149,9 +152,19 @@ SERVE FLAGS
                      are shed with an `overloaded` error (default 64)
   --warm-budget-kb K total warm-session byte budget, split across
                      shards, LRU-evicted when exceeded (default 65536)
-  --retry-after-ms M retry hint attached to shed responses (default 50)
+  --retry-after-ms M base retry hint attached to shed responses,
+                     scaled up with the shard queue depth (default 50)
+  --degraded         degraded mode: absorb up to one extra queue-depth
+                     of overflow with loosened first-order solves
+                     flagged `degraded: true` instead of shedding
+  --default-timeout-ms MS
+                     deadline stamped on requests without their own
+                     `timeout_ms` option (0 / absent: unbounded)
   --max-seconds N    serve for N seconds, drain gracefully, print
                      counters and exit (0 / absent: run forever)
+  (the {\"reload\": {...}} admin frame swaps queue_depth,
+   retry_after_ms, warm_budget_kb, degraded and default_timeout_ms at
+   runtime without dropping connections)
   (--backend / --factorization / --pricing set the session defaults;
    per-request \"options\" override them)
 ";
@@ -199,6 +212,9 @@ mod tests {
         run(&argv(&format!("solve --spec {path} --factorization bartels_golub --model nfe")))
             .unwrap();
         run(&argv(&format!("solve --spec {path} --pricing steepest_edge --model nfe"))).unwrap();
+        // A generous deadline changes nothing; a bad one is usage.
+        run(&argv(&format!("solve --spec {path} --timeout-ms 60000"))).unwrap();
+        assert!(run(&argv(&format!("solve --spec {path} --timeout-ms soon"))).is_err());
         assert!(run(&argv(&format!("solve --spec {path} --factorization qr"))).is_err());
         assert!(run(&argv(&format!("solve --spec {path} --pricing greatest"))).is_err());
         run(&argv(&format!("simulate --spec {path} --model nfe --jitter 0.05"))).unwrap();
@@ -318,6 +334,10 @@ mod tests {
     fn serve_boots_and_drains_on_max_seconds() {
         // Port 0 binds an ephemeral port, so the test never collides.
         run(&argv("serve --port 0 --workers 1 --shards 2 --max-seconds 1")).unwrap();
+        run(&argv(
+            "serve --port 0 --workers 1 --degraded --default-timeout-ms 500 --max-seconds 1",
+        ))
+        .unwrap();
         assert!(run(&argv("serve --port 0 --backend cplex")).is_err());
     }
 }

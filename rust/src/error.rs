@@ -27,6 +27,18 @@ pub enum Error {
     /// Numerical trouble (singular matrix, NaN in the tableau, ...).
     Numerical(String),
 
+    /// The solve's wall-clock budget expired before convergence; the
+    /// partial progress made is carried for diagnostics.
+    DeadlineExceeded {
+        /// Milliseconds elapsed when the budget check fired.
+        elapsed_ms: u64,
+        /// Iterations (pivots / first-order steps) completed.
+        iterations: usize,
+        /// Which stage of the solve expired (`simplex`, `dual_simplex`,
+        /// `dense_tableau`, `pdhg`, `recovery`, `serve_queue`, ...).
+        phase: String,
+    },
+
     /// A schedule failed post-hoc validation against the timing model.
     InvalidSchedule(String),
 
@@ -74,6 +86,13 @@ impl fmt::Display for Error {
                 write!(f, "solver iteration limit reached after {iterations} iterations")
             }
             Error::Numerical(s) => write!(f, "numerical error: {s}"),
+            Error::DeadlineExceeded { elapsed_ms, iterations, phase } => {
+                write!(
+                    f,
+                    "deadline exceeded after {elapsed_ms} ms in {phase} \
+                     ({iterations} iterations)"
+                )
+            }
             Error::InvalidSchedule(s) => write!(f, "schedule validation failed: {s}"),
             Error::Config(s) => write!(f, "config error: {s}"),
             Error::Usage(s) => write!(f, "usage error: {s}"),
@@ -131,6 +150,11 @@ mod tests {
         assert_eq!(
             Error::WorkerPanicked("boom".into()).to_string(),
             "worker panicked: boom"
+        );
+        assert_eq!(
+            Error::DeadlineExceeded { elapsed_ms: 12, iterations: 34, phase: "simplex".into() }
+                .to_string(),
+            "deadline exceeded after 12 ms in simplex (34 iterations)"
         );
     }
 

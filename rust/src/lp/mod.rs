@@ -41,6 +41,7 @@ pub mod factorization;
 pub mod presolve;
 pub mod pricing;
 pub mod problem;
+pub mod recovery;
 pub mod revised;
 pub mod scratch;
 pub mod simplex;
@@ -52,6 +53,7 @@ pub use factorization::{BasisFactorization, Factorization};
 pub use presolve::{presolve, Presolved, PresolveStats};
 pub use pricing::{Pricing, PricingRule};
 pub use problem::{Cmp, Constraint, LpProblem};
+pub use recovery::{solve_with_recovery, SolveBudget};
 pub use revised::Basis;
 pub use scratch::SolverScratch;
 pub use simplex::{solve, solve_warm, solve_warm_scratch, solve_with, SimplexOptions, SolverBackend};

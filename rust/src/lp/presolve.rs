@@ -536,6 +536,7 @@ impl Presolved {
             avg_btran_nnz: sol.avg_btran_nnz,
             dfs_solves: sol.dfs_solves,
             scan_solves: sol.scan_solves,
+            recovery_events: sol.recovery_events.clone(),
             duals,
             basis: sol.basis.clone(),
         }

@@ -1,0 +1,357 @@
+//! Fail-operational solving: wall-clock budgets and the structured
+//! numerical recovery ladder.
+//!
+//! Two pieces live here:
+//!
+//! - [`SolveBudget`] — a wall-clock deadline carried inside
+//!   [`SimplexOptions`] and [`crate::pdhg::PdhgOptions`] and checked
+//!   (amortized, every 64 iterations) inside every solver inner loop.
+//!   Expiry surfaces as a typed [`Error::DeadlineExceeded`] carrying
+//!   the elapsed time, the iterations completed, and the phase that
+//!   expired — never a silent open-loop run. The iteration cap lives
+//!   next door in [`SimplexOptions::max_iters`]; together they bound a
+//!   solve in both time and work.
+//! - [`solve_with_recovery`] — the deterministic escalation ladder the
+//!   revised backend runs behind. A solve that fails *numerically*
+//!   (singular or ill-conditioned refactorization, residual artificial
+//!   mass after phase 2) is retried rung by rung:
+//!
+//!   1. the configured solve itself (which already refactorizes early
+//!      on update breakdown and engages Bland's rule on stalls — both
+//!      recorded as in-solve events);
+//!   2. `markowitz_retry` — a cold restart under Markowitz threshold
+//!      pivoting, the most numerically careful factorization;
+//!   3. `bland_perturbed` — instant Bland anti-cycling over a
+//!      deterministically rhs-perturbed copy of the problem (the
+//!      objective is re-evaluated on the *original* problem);
+//!   4. `dense_oracle` — the dense two-phase tableau, the crate's
+//!      cross-check oracle;
+//!   5. a typed [`Error::Numerical`] listing every rung tried.
+//!
+//!   `Infeasible` / `Unbounded` verdicts and expired deadlines stop
+//!   the ladder immediately — escalation is for numerical trouble
+//!   only. Every rung taken is recorded in
+//!   [`LpSolution::recovery_events`], which rides the wire as
+//!   `Diagnostics.recovery_events`.
+
+use std::time::{Duration, Instant};
+
+use super::factorization::Factorization;
+use super::problem::LpProblem;
+use super::revised::{self, Basis};
+use super::scratch::SolverScratch;
+use super::simplex::{self, SimplexOptions, SolverBackend};
+use super::solution::LpSolution;
+use crate::error::{Error, Result};
+
+/// Wall-clock budget for one solve. `Copy` and two words wide so it
+/// travels inside option structs for free; the unbounded default makes
+/// every existing call site a no-op (one branch per amortized check,
+/// no clock read).
+#[derive(Debug, Clone, Copy)]
+pub struct SolveBudget {
+    started: Instant,
+    deadline: Option<Instant>,
+}
+
+impl Default for SolveBudget {
+    fn default() -> Self {
+        SolveBudget::unbounded()
+    }
+}
+
+impl SolveBudget {
+    /// A budget that never expires (the default).
+    pub fn unbounded() -> SolveBudget {
+        SolveBudget { started: Instant::now(), deadline: None }
+    }
+
+    /// Budget starting now with an optional `timeout_ms` deadline;
+    /// `None` is unbounded.
+    pub fn from_timeout_ms(timeout_ms: Option<u64>) -> SolveBudget {
+        let started = Instant::now();
+        SolveBudget { started, deadline: timeout_ms.map(|ms| started + Duration::from_millis(ms)) }
+    }
+
+    /// True when a deadline is set (bounded budget).
+    pub fn is_bounded(&self) -> bool {
+        self.deadline.is_some()
+    }
+
+    /// True once the deadline has passed. Unbounded budgets never
+    /// expire and never read the clock.
+    #[inline]
+    pub fn expired(&self) -> bool {
+        match self.deadline {
+            Some(d) => Instant::now() >= d,
+            None => false,
+        }
+    }
+
+    /// Milliseconds since the budget was created.
+    pub fn elapsed_ms(&self) -> u64 {
+        self.started.elapsed().as_millis() as u64
+    }
+
+    /// Milliseconds left before expiry (`None` when unbounded, 0 once
+    /// expired). The serving tier uses this to shrink a queued
+    /// request's solve budget by its queue age.
+    pub fn remaining_ms(&self) -> Option<u64> {
+        self.deadline.map(|d| d.saturating_duration_since(Instant::now()).as_millis() as u64)
+    }
+
+    /// Return [`Error::DeadlineExceeded`] if the budget expired. Call
+    /// sites amortize this (`iterations & 63 == 0`) so the hot path
+    /// pays one integer branch per pivot, not a clock read.
+    #[inline]
+    pub fn check(&self, iterations: usize, phase: &str) -> Result<()> {
+        if self.expired() {
+            return Err(Error::DeadlineExceeded {
+                elapsed_ms: self.elapsed_ms(),
+                iterations,
+                phase: phase.into(),
+            });
+        }
+        Ok(())
+    }
+}
+
+/// Ladder rung names as they appear in `recovery_events` (the wire
+/// names — keep stable).
+pub const MARKOWITZ_RETRY: &str = "markowitz_retry";
+/// See [`MARKOWITZ_RETRY`].
+pub const BLAND_PERTURBED: &str = "bland_perturbed";
+/// See [`MARKOWITZ_RETRY`].
+pub const DENSE_ORACLE: &str = "dense_oracle";
+
+/// The revised backend's front door: the configured solve, then the
+/// recovery ladder on numerical failure. This is what
+/// [`simplex::solve_warm`] / [`simplex::solve_warm_scratch`] route the
+/// [`SolverBackend::RevisedSparse`] arm through, so every caller —
+/// warm caches, the pipeline, the API and serve tiers — inherits the
+/// ladder without opting in.
+pub fn solve_with_recovery(
+    p: &LpProblem,
+    opts: &SimplexOptions,
+    warm: Option<&Basis>,
+    scratch: &mut SolverScratch,
+) -> Result<LpSolution> {
+    match revised::solve_revised_scratch(p, opts, warm, scratch) {
+        Ok(sol) => Ok(sol),
+        Err(Error::Numerical(msg)) => escalate(p, opts, scratch, msg),
+        Err(e) => Err(e),
+    }
+}
+
+/// Rungs 2..4 of the ladder, in order, stopping at the first success
+/// (or the first non-numerical verdict, which is authoritative).
+fn escalate(
+    p: &LpProblem,
+    opts: &SimplexOptions,
+    scratch: &mut SolverScratch,
+    first: String,
+) -> Result<LpSolution> {
+    let mut events: Vec<String> = Vec::new();
+    let mut last = first;
+
+    events.push(MARKOWITZ_RETRY.into());
+    opts.budget.check(0, "recovery")?;
+    match rung_markowitz(p, opts, scratch) {
+        Ok(sol) => return Ok(finish(sol, events)),
+        Err(Error::Numerical(msg)) => last = msg,
+        Err(e) => return Err(e),
+    }
+
+    events.push(BLAND_PERTURBED.into());
+    opts.budget.check(0, "recovery")?;
+    match rung_bland_perturbed(p, opts, scratch) {
+        Ok(sol) => return Ok(finish(sol, events)),
+        Err(Error::Numerical(msg)) => last = msg,
+        Err(e) => return Err(e),
+    }
+
+    events.push(DENSE_ORACLE.into());
+    opts.budget.check(0, "recovery")?;
+    match rung_dense(p, opts) {
+        Ok(sol) => return Ok(finish(sol, events)),
+        Err(Error::Numerical(msg)) => last = msg,
+        Err(e) => return Err(e),
+    }
+
+    Err(Error::Numerical(format!(
+        "recovery ladder exhausted ({}): {last}",
+        events.join(", ")
+    )))
+}
+
+/// Prepend the ladder rungs taken to the solution's own in-solve
+/// events (the rung engaged first, then whatever its solve recorded).
+fn finish(mut sol: LpSolution, mut events: Vec<String>) -> LpSolution {
+    events.append(&mut sol.recovery_events);
+    sol.recovery_events = events;
+    sol
+}
+
+/// Cold restart under Markowitz threshold pivoting — the most
+/// numerically defensive factorization (fresh pivot order per factor,
+/// explicit stability threshold).
+fn rung_markowitz(
+    p: &LpProblem,
+    opts: &SimplexOptions,
+    scratch: &mut SolverScratch,
+) -> Result<LpSolution> {
+    let o = SimplexOptions { factorization: Factorization::Markowitz, ..opts.clone() };
+    revised::solve_revised_scratch(p, &o, None, scratch)
+}
+
+/// Instant Bland anti-cycling (`stall_limit: 0`) over a
+/// deterministically rhs-perturbed copy of the problem: the tiny
+/// relative perturbation breaks the exact degeneracy that drives
+/// cycling and pivot-order pathologies, and the objective is
+/// re-evaluated on the *original* problem so callers never see the
+/// perturbed value.
+fn rung_bland_perturbed(
+    p: &LpProblem,
+    opts: &SimplexOptions,
+    scratch: &mut SolverScratch,
+) -> Result<LpSolution> {
+    let o = SimplexOptions {
+        factorization: Factorization::Markowitz,
+        stall_limit: 0,
+        ..opts.clone()
+    };
+    let mut sol = revised::solve_revised_scratch(&perturbed(p), &o, None, scratch)?;
+    sol.objective = p.objective_at(&sol.x);
+    Ok(sol)
+}
+
+/// The dense two-phase tableau oracle (never recurses back into the
+/// ladder: only the revised arm routes through recovery).
+fn rung_dense(p: &LpProblem, opts: &SimplexOptions) -> Result<LpSolution> {
+    let o = SimplexOptions { backend: SolverBackend::DenseTableau, ..opts.clone() };
+    simplex::solve_warm(p, &o, None)
+}
+
+/// Copy of `p` with each rhs scaled by `1 + 1e-9·(k mod 97 + 1)` — a
+/// deterministic, row-dependent perturbation far below the solver's
+/// feasibility tolerance.
+fn perturbed(p: &LpProblem) -> LpProblem {
+    let mut q = LpProblem::new(p.num_vars());
+    q.set_objective(p.objective());
+    for (k, c) in p.constraints().iter().enumerate() {
+        let scale = 1.0 + 1e-9 * (k % 97 + 1) as f64;
+        q.add_labeled(&c.coeffs, c.cmp, c.rhs * scale, c.label.clone());
+    }
+    q
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lp::problem::Cmp;
+
+    fn textbook() -> LpProblem {
+        // max 3x + 5y st x<=4, 2y<=12, 3x+2y<=18 -> obj -36.
+        let mut p = LpProblem::new(2);
+        p.set_objective(&[-3.0, -5.0]);
+        p.add_constraint(&[(0, 1.0)], Cmp::Le, 4.0);
+        p.add_constraint(&[(1, 2.0)], Cmp::Le, 12.0);
+        p.add_constraint(&[(0, 3.0), (1, 2.0)], Cmp::Le, 18.0);
+        p
+    }
+
+    #[test]
+    fn unbounded_budget_never_expires() {
+        let b = SolveBudget::default();
+        assert!(!b.is_bounded());
+        assert!(!b.expired());
+        assert_eq!(b.remaining_ms(), None);
+        b.check(1_000_000, "simplex").unwrap();
+    }
+
+    #[test]
+    fn zero_timeout_expires_immediately() {
+        let b = SolveBudget::from_timeout_ms(Some(0));
+        assert!(b.is_bounded());
+        assert!(b.expired());
+        assert_eq!(b.remaining_ms(), Some(0));
+        match b.check(7, "simplex") {
+            Err(Error::DeadlineExceeded { iterations: 7, phase, .. }) => {
+                assert_eq!(phase, "simplex");
+            }
+            other => panic!("expected deadline exceeded, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn generous_timeout_does_not_expire() {
+        let b = SolveBudget::from_timeout_ms(Some(60_000));
+        assert!(!b.expired());
+        assert!(b.remaining_ms().unwrap() <= 60_000);
+        b.check(0, "simplex").unwrap();
+    }
+
+    #[test]
+    fn clean_solves_report_no_events() {
+        let p = textbook();
+        let mut scratch = SolverScratch::new();
+        let sol =
+            solve_with_recovery(&p, &SimplexOptions::default(), None, &mut scratch).unwrap();
+        assert!((sol.objective + 36.0).abs() < 1e-7);
+        assert!(sol.recovery_events.is_empty(), "events: {:?}", sol.recovery_events);
+    }
+
+    #[test]
+    fn ladder_recovers_from_numerical_failure() {
+        // Fabricate a rung-1 numerical failure: the ladder must land on
+        // the Markowitz retry and record exactly that rung.
+        let p = textbook();
+        let mut scratch = SolverScratch::new();
+        let sol =
+            escalate(&p, &SimplexOptions::default(), &mut scratch, "fabricated".into()).unwrap();
+        assert!((sol.objective + 36.0).abs() < 1e-7);
+        assert_eq!(sol.recovery_events, vec![MARKOWITZ_RETRY.to_string()]);
+    }
+
+    #[test]
+    fn perturbed_rung_matches_unperturbed_optimum() {
+        let p = textbook();
+        let mut scratch = SolverScratch::new();
+        let sol = rung_bland_perturbed(&p, &SimplexOptions::default(), &mut scratch).unwrap();
+        assert!((sol.objective + 36.0).abs() < 1e-6, "objective {}", sol.objective);
+        assert!(p.check_feasible(&sol.x, 1e-6).is_none());
+    }
+
+    #[test]
+    fn dense_rung_is_exact() {
+        let p = textbook();
+        let sol = rung_dense(&p, &SimplexOptions::default()).unwrap();
+        assert!((sol.objective + 36.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn infeasible_verdict_stops_the_ladder() {
+        let mut p = LpProblem::new(1);
+        p.add_constraint(&[(0, 1.0)], Cmp::Le, 1.0);
+        p.add_constraint(&[(0, 1.0)], Cmp::Ge, 2.0);
+        let mut scratch = SolverScratch::new();
+        match escalate(&p, &SimplexOptions::default(), &mut scratch, "fabricated".into()) {
+            Err(Error::Infeasible(_)) => {}
+            other => panic!("expected infeasible, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn expired_budget_stops_the_ladder() {
+        let p = textbook();
+        let opts = SimplexOptions {
+            budget: SolveBudget::from_timeout_ms(Some(0)),
+            ..SimplexOptions::default()
+        };
+        let mut scratch = SolverScratch::new();
+        match escalate(&p, &opts, &mut scratch, "fabricated".into()) {
+            Err(Error::DeadlineExceeded { phase, .. }) => assert_eq!(phase, "recovery"),
+            other => panic!("expected deadline exceeded, got {other:?}"),
+        }
+    }
+}

@@ -181,6 +181,14 @@ struct Revised<'a> {
     feas_eps: f64,
     max_iters: usize,
     stall_limit: usize,
+    /// Wall-clock budget, checked every 64 iterations in the primal
+    /// and dual loops.
+    budget: super::recovery::SolveBudget,
+    /// In-solve fallbacks taken (`early_refactorize`, `bland_engaged`,
+    /// `warm_fallback_cold`), drained into the solution on extract.
+    /// Fresh (empty, unallocated) per solve — not pooled — so the
+    /// scratch pool stays invisible to results.
+    recovery_events: Vec<String>,
     iterations: usize,
     phase1_iters: usize,
     dual_iters: usize,
@@ -308,6 +316,8 @@ impl<'a> Revised<'a> {
             feas_eps: opts.feas_eps,
             max_iters,
             stall_limit: opts.stall_limit,
+            budget: opts.budget,
+            recovery_events: Vec::new(),
             iterations: 0,
             phase1_iters: 0,
             dual_iters: 0,
@@ -375,16 +385,23 @@ impl<'a> Revised<'a> {
                     let before = self.iterations;
                     match self.dual_simplex() {
                         Ok(true) => warmed = true,
+                        // An expired deadline is not a numerical wobble
+                        // — falling back to a cold start would only run
+                        // longer past the budget.
+                        Err(e @ Error::DeadlineExceeded { .. }) => return Err(e),
                         // Gave up (dual-infeasible basis, stall, or a
                         // numerical wobble): pretend the warm attempt
                         // never happened and fall back to a cold start.
                         Ok(false) | Err(_) => {
                             self.iterations = before;
                             self.dual_iters = 0;
+                            self.recovery_events.push("warm_fallback_cold".into());
                         }
                     }
                 }
-                WarmStart::Unusable => {}
+                WarmStart::Unusable => {
+                    self.recovery_events.push("warm_fallback_cold".into());
+                }
             }
         }
         if !warmed {
@@ -510,6 +527,9 @@ impl<'a> Revised<'a> {
             }
             self.iterations += 1;
             self.dual_iters += 1;
+            if self.iterations & 63 == 0 {
+                self.budget.check(self.iterations, "dual_simplex")?;
+            }
 
             // Pivot row rho = B^{-T} e_r (a hypersparse BTRAN) ...
             self.btran_unit(r);
@@ -717,6 +737,7 @@ impl<'a> Revised<'a> {
         if self.fact.update(r, &self.w).is_err() {
             // Numerical breakdown inside the update: rebuild from the
             // already-updated basis at full accuracy.
+            self.recovery_events.push("early_refactorize".into());
             self.refactorize()?;
         }
         self.peak_update_len = self.peak_update_len.max(self.fact.update_len());
@@ -792,6 +813,9 @@ impl<'a> Revised<'a> {
             self.iterations += 1;
             if self.iterations > self.max_iters {
                 return Err(Error::IterationLimit { iterations: self.iterations });
+            }
+            if self.iterations & 63 == 0 {
+                self.budget.check(self.iterations, "simplex")?;
             }
 
             // BTRAN for the pricing vector y = B^{-T} c_B.
@@ -901,8 +925,9 @@ impl<'a> Revised<'a> {
                 stall = 0;
             } else {
                 stall += 1;
-                if stall > self.stall_limit {
+                if stall > self.stall_limit && !bland {
                     bland = true;
+                    self.recovery_events.push("bland_engaged".into());
                 }
             }
 
@@ -1028,6 +1053,7 @@ impl<'a> Revised<'a> {
             },
             dfs_solves: self.fact.dfs_solves() - self.dfs0,
             scan_solves: self.fact.scan_solves() - self.scan0,
+            recovery_events: std::mem::take(&mut self.recovery_events),
             duals,
             basis: Some(basis),
         })
@@ -1244,9 +1270,44 @@ mod tests {
         let junk = Basis { cols: vec![0, 0, 0] }; // singular
         let s = solve_revised(&p, &opts(), Some(&junk)).unwrap();
         assert_close(s.objective, -36.0);
+        assert!(
+            s.recovery_events.iter().any(|e| e == "warm_fallback_cold"),
+            "singular warm basis must record the cold fallback: {:?}",
+            s.recovery_events
+        );
         let wrong_len = Basis { cols: vec![0] };
         let s = solve_revised(&p, &opts(), Some(&wrong_len)).unwrap();
         assert_close(s.objective, -36.0);
+        assert!(s.recovery_events.iter().any(|e| e == "warm_fallback_cold"));
+    }
+
+    #[test]
+    fn deadline_budget_stops_the_primal_loop() {
+        use crate::lp::recovery::SolveBudget;
+        // An already-expired budget must surface as DeadlineExceeded
+        // from the first amortized check, not run to optimality.
+        let p = textbook();
+        let o = SimplexOptions {
+            budget: SolveBudget::from_timeout_ms(Some(0)),
+            ..opts()
+        };
+        match solve_revised(&p, &o, None) {
+            // Tiny solves can finish before iteration 64 (the first
+            // amortized check): both outcomes are legal, but a bounded
+            // budget must never panic.
+            Ok(s) => assert_close(s.objective, -36.0),
+            Err(Error::DeadlineExceeded { phase, .. }) => {
+                assert!(phase == "simplex" || phase == "dual_simplex");
+            }
+            other => panic!("unexpected outcome {other:?}"),
+        }
+    }
+
+    #[test]
+    fn clean_cold_solves_record_no_events() {
+        let p = textbook();
+        let s = solve_revised(&p, &opts(), None).unwrap();
+        assert!(s.recovery_events.is_empty(), "events: {:?}", s.recovery_events);
     }
 
     #[test]

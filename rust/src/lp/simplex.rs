@@ -21,7 +21,8 @@
 use super::factorization::Factorization;
 use super::pricing::Pricing;
 use super::problem::LpProblem;
-use super::revised::{self, Basis};
+use super::recovery::{self, SolveBudget};
+use super::revised::Basis;
 use super::scratch::SolverScratch;
 use super::solution::LpSolution;
 use super::standard::{AuxKind, StandardForm};
@@ -63,6 +64,10 @@ pub struct SimplexOptions {
     /// per iteration; the dense tableau always prices Dantzig and
     /// ignores this).
     pub pricing: Pricing,
+    /// Wall-clock budget checked (amortized) inside both backends'
+    /// inner loops; unbounded by default. Expiry returns
+    /// [`Error::DeadlineExceeded`].
+    pub budget: SolveBudget,
 }
 
 impl Default for SimplexOptions {
@@ -76,6 +81,7 @@ impl Default for SimplexOptions {
             backend: SolverBackend::default(),
             factorization: Factorization::default(),
             pricing: Pricing::default(),
+            budget: SolveBudget::default(),
         }
     }
 }
@@ -103,7 +109,10 @@ pub fn solve_with(p: &LpProblem, opts: &SimplexOptions) -> Result<LpSolution> {
 /// call. The dense backend ignores the hint.
 pub fn solve_warm(p: &LpProblem, opts: &SimplexOptions, warm: Option<&Basis>) -> Result<LpSolution> {
     match opts.backend {
-        SolverBackend::RevisedSparse => revised::solve_revised(p, opts, warm),
+        SolverBackend::RevisedSparse => {
+            let mut scratch = SolverScratch::new();
+            recovery::solve_with_recovery(p, opts, warm, &mut scratch)
+        }
         SolverBackend::DenseTableau => solve_dense(p, opts),
     }
 }
@@ -119,7 +128,7 @@ pub fn solve_warm_scratch(
     scratch: &mut SolverScratch,
 ) -> Result<LpSolution> {
     match opts.backend {
-        SolverBackend::RevisedSparse => revised::solve_revised_scratch(p, opts, warm, scratch),
+        SolverBackend::RevisedSparse => recovery::solve_with_recovery(p, opts, warm, scratch),
         SolverBackend::DenseTableau => solve_dense(p, opts),
     }
 }
@@ -152,6 +161,8 @@ struct Tableau {
     feas_eps: f64,
     max_iters: usize,
     stall_limit: usize,
+    /// Wall-clock budget, checked every 64 iterations.
+    budget: SolveBudget,
     iterations: usize,
     phase1_iters: usize,
     /// Pivot-row scratch buffer (reused across pivots).
@@ -220,6 +231,7 @@ impl Tableau {
             feas_eps: opts.feas_eps,
             max_iters,
             stall_limit: opts.stall_limit,
+            budget: opts.budget,
             iterations: 0,
             phase1_iters: 0,
             scratch: Vec::with_capacity(width + 1),
@@ -280,6 +292,9 @@ impl Tableau {
             self.iterations += 1;
             if self.iterations > self.max_iters {
                 return Err(Error::IterationLimit { iterations: self.iterations });
+            }
+            if self.iterations & 63 == 0 {
+                self.budget.check(self.iterations, "dense_tableau")?;
             }
             since_refresh += 1;
             if since_refresh == 256 {
@@ -502,6 +517,7 @@ impl Tableau {
             avg_btran_nnz: 0.0,
             dfs_solves: 0,
             scan_solves: 0,
+            recovery_events: Vec::new(),
             duals,
             basis: Some(Basis { cols: basis_cols }),
         })

@@ -55,6 +55,11 @@ pub struct LpSolution {
     /// Triangular solves answered through the full column scan during
     /// this solve (the dense-RHS side of the DFS/scan crossover).
     pub scan_solves: usize,
+    /// Recovery-ladder rungs and in-solve fallbacks taken to produce
+    /// this solution, in the order they fired (`early_refactorize`,
+    /// `bland_engaged`, `warm_fallback_cold`, `markowitz_retry`,
+    /// `bland_perturbed`, `dense_oracle`). Empty on a clean solve.
+    pub recovery_events: Vec<String>,
     /// Dual values per constraint (if requested and extractable).
     pub duals: Option<Vec<f64>>,
     /// Optimal basis, usable to warm-start the next solve of a

@@ -203,7 +203,7 @@ fn solve_shared(
         if !active.is_empty() {
             retired += removed;
         }
-        if active.is_empty() || blocks >= opts.max_blocks {
+        if active.is_empty() || blocks >= opts.max_blocks || opts.budget.expired() {
             break;
         }
 

@@ -22,11 +22,23 @@ pub struct PdhgOptions {
     pub max_blocks: usize,
     /// Step-size safety factor (`tau = sigma = factor / ||A||`).
     pub step_factor: f64,
+    /// Wall-clock budget checked on block boundaries; unbounded by
+    /// default. Expiry stops the iteration where it stands — the
+    /// caller decides whether a non-converged point is an error
+    /// ([`crate::pipeline`] returns `DeadlineExceeded`) or a usable
+    /// degraded answer (the serving tier's degraded mode).
+    pub budget: crate::lp::SolveBudget,
 }
 
 impl Default for PdhgOptions {
     fn default() -> Self {
-        PdhgOptions { tol: 1e-7, gap_tol: 1e-6, max_blocks: 400, step_factor: 0.9 }
+        PdhgOptions {
+            tol: 1e-7,
+            gap_tol: 1e-6,
+            max_blocks: 400,
+            step_factor: 0.9,
+            budget: crate::lp::SolveBudget::default(),
+        }
     }
 }
 
@@ -94,6 +106,9 @@ fn solve_sparse(
             && r.gap < opts.gap_tol * (r.objective.abs() + 1.0)
     };
     while blocks < opts.max_blocks && !converged_at(&res) {
+        if opts.budget.expired() {
+            break;
+        }
         res = rust_impl::run_block_with(
             &pool.lp,
             &mut pool.x,
@@ -154,6 +169,9 @@ pub fn solve_artifact(rt: &mut Runtime, p: &LpProblem, opts: &PdhgOptions) -> Re
     let mut blocks = 0;
     let mut res = (f64::INFINITY, f64::INFINITY, f64::INFINITY);
     while blocks < opts.max_blocks {
+        if opts.budget.expired() {
+            break;
+        }
         let out = exec.run_block(
             &pad.a, &pad.at, &pad.b, &pad.c, &pad.eq_mask, &x, &y, tau, tau,
         )?;

@@ -160,6 +160,13 @@ pub struct PipelineOptions {
     pub simplex: SimplexOptions,
     /// PDHG tuning for [`Backend::Pdhg`].
     pub pdhg: PdhgOptions,
+    /// Wall-clock deadline for the whole solve, in milliseconds
+    /// (`None` = unbounded). A [`crate::lp::SolveBudget`] is started
+    /// when the solve enters the pipeline and stamped into the simplex
+    /// and PDHG option budgets, so a hybrid solve's stages share one
+    /// deadline. Expiry surfaces as
+    /// [`crate::error::Error::DeadlineExceeded`].
+    pub timeout_ms: Option<u64>,
 }
 
 impl Default for PipelineOptions {
@@ -169,6 +176,7 @@ impl Default for PipelineOptions {
             backend: Backend::default(),
             simplex: SimplexOptions::default(),
             pdhg: PdhgOptions::default(),
+            timeout_ms: None,
         }
     }
 }
@@ -272,6 +280,9 @@ pub fn solve_full_scratch<S: ScenarioModel + ?Sized>(
     scratch: &mut SolverScratch,
 ) -> Result<Solved> {
     spec.validate()?;
+    // One budget for the whole solve: presolve, every backend stage
+    // (both halves of a hybrid), and the recovery ladder share it.
+    let budget = crate::lp::SolveBudget::from_timeout_ms(opts.timeout_ms);
     let lp = model.build_lp(spec);
 
     let pre = if opts.presolve { Some(presolve(&lp)?) } else { None };
@@ -279,10 +290,11 @@ pub fn solve_full_scratch<S: ScenarioModel + ?Sized>(
 
     let (sol, pdhg) = match opts.backend {
         Backend::Pdhg | Backend::PdhgBlock | Backend::Hybrid => {
-            solve_first_order(target, opts, cache, seed, scratch)?
+            solve_first_order(target, opts, budget, cache, seed, scratch)?
         }
         simplex_backend => {
             let mut sopts = opts.simplex.clone();
+            sopts.budget = budget;
             sopts.backend = match simplex_backend {
                 Backend::DenseTableau => SolverBackend::DenseTableau,
                 _ => SolverBackend::RevisedSparse,
@@ -344,9 +356,28 @@ fn pdhg_lp_solution(ps: crate::pdhg::PdhgSolution, opts: &PipelineOptions) -> Lp
         avg_btran_nnz: 0.0,
         dfs_solves: 0,
         scan_solves: 0,
+        recovery_events: Vec::new(),
         duals: None,
         basis: None,
     }
+}
+
+/// Non-converged first-order result with the deadline gone: a typed
+/// [`crate::error::Error::DeadlineExceeded`] — a normal block-cap
+/// non-convergence (no deadline, or deadline not yet hit) still flows
+/// through as a diagnosed solution like before.
+fn first_order_deadline_guard(
+    ps: &crate::pdhg::PdhgSolution,
+    budget: crate::lp::SolveBudget,
+) -> Result<()> {
+    if !ps.converged && budget.expired() {
+        return Err(crate::error::Error::DeadlineExceeded {
+            elapsed_ms: budget.elapsed_ms(),
+            iterations: ps.blocks * crate::pdhg::BLOCK_STEPS,
+            phase: "pdhg".into(),
+        });
+    }
+    Ok(())
 }
 
 /// Dispatch for the three first-order backends: warm-point lookup
@@ -355,6 +386,7 @@ fn pdhg_lp_solution(ps: crate::pdhg::PdhgSolution, opts: &PipelineOptions) -> Lp
 fn solve_first_order(
     target: &LpProblem,
     opts: &PipelineOptions,
+    budget: crate::lp::SolveBudget,
     cache: Option<&mut WarmCache>,
     seed: Option<(&LpProblem, &Basis)>,
     scratch: &mut SolverScratch,
@@ -364,11 +396,14 @@ fn solve_first_order(
         Some((_, x)) => Some(x.to_vec()),
         None => c.points().find_map(|(p, x)| project::project_point(p, target, x)),
     });
+    let mut popts = opts.pdhg.clone();
+    popts.budget = budget;
 
     match opts.backend {
         Backend::PdhgBlock => {
-            let blk = crate::pdhg::solve_block(std::slice::from_ref(target), &opts.pdhg)?;
+            let blk = crate::pdhg::solve_block(std::slice::from_ref(target), &popts)?;
             let ps = blk.columns.into_iter().next().expect("width-1 block has one column");
+            first_order_deadline_guard(&ps, budget)?;
             if let Some(c) = cache {
                 c.store_point(target, &ps.x);
             }
@@ -384,18 +419,21 @@ fn solve_first_order(
         }
         Backend::Hybrid => {
             // Stage 1: loose, capped PDHG to localize the active set.
-            // Accuracy is the simplex finish's job.
+            // Accuracy is the simplex finish's job. An expired deadline
+            // is left to the simplex stage's own budget check — the
+            // stages share `budget`.
             let stage = crate::pdhg::PdhgOptions {
-                tol: opts.pdhg.tol.max(1e-4),
-                gap_tol: opts.pdhg.gap_tol.max(1e-5),
-                max_blocks: opts.pdhg.max_blocks.min(100),
-                ..opts.pdhg.clone()
+                tol: popts.tol.max(1e-4),
+                gap_tol: popts.gap_tol.max(1e-5),
+                max_blocks: popts.max_blocks.min(100),
+                ..popts.clone()
             };
             let ps = crate::pdhg::solve_rust_scratch(target, &stage, warm_x.as_deref(), scratch)?;
             // Stage 2: crossover to a basis guess, exact warm-simplex
             // finish (an unusable guess falls back inside solve_warm).
             let guess = project::crossover_basis(target, &ps.x, 1e-6);
             let mut sopts = opts.simplex.clone();
+            sopts.budget = budget;
             sopts.backend = SolverBackend::RevisedSparse;
             let sol = match cache {
                 Some(c) => {
@@ -422,7 +460,8 @@ fn solve_first_order(
         }
         _ => {
             let ps =
-                crate::pdhg::solve_rust_scratch(target, &opts.pdhg, warm_x.as_deref(), scratch)?;
+                crate::pdhg::solve_rust_scratch(target, &popts, warm_x.as_deref(), scratch)?;
+            first_order_deadline_guard(&ps, budget)?;
             if let Some(c) = cache {
                 c.store_point(target, &ps.x);
             }
@@ -542,6 +581,43 @@ mod tests {
             exact.makespan,
             diag.converged
         );
+    }
+
+    #[test]
+    fn timeout_on_first_order_backend_returns_deadline_exceeded() {
+        // Zero budget: the PDHG loop cannot run a single block, the
+        // zero start is infeasible, and the pipeline must surface the
+        // typed deadline error rather than an unconverged answer.
+        let spec = table1();
+        let opts = PipelineOptions {
+            backend: Backend::Pdhg,
+            timeout_ms: Some(0),
+            ..PipelineOptions::default()
+        };
+        match solve_full(&FeOptions::default(), &spec, &opts, None, None) {
+            Err(crate::error::Error::DeadlineExceeded { phase, .. }) => {
+                assert_eq!(phase, "pdhg");
+            }
+            other => panic!("expected deadline exceeded, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn generous_timeout_changes_nothing() {
+        let spec = table1();
+        let plain =
+            solve_full(&FeOptions::default(), &spec, &PipelineOptions::default(), None, None)
+                .unwrap();
+        let budgeted = solve_full(
+            &FeOptions::default(),
+            &spec,
+            &PipelineOptions { timeout_ms: Some(60_000), ..PipelineOptions::default() },
+            None,
+            None,
+        )
+        .unwrap();
+        assert!((plain.schedule.makespan - budgeted.schedule.makespan).abs() < 1e-12);
+        assert!(budgeted.solution.recovery_events.is_empty());
     }
 
     #[test]

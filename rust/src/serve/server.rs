@@ -40,7 +40,7 @@ use std::io::{ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Serving-tier configuration.
 #[derive(Debug, Clone)]
@@ -65,6 +65,15 @@ pub struct ServeOptions {
     /// Largest request line buffered per connection; longer lines are
     /// discarded and answered with a `config` error.
     pub max_frame_bytes: usize,
+    /// Degraded mode: instead of shedding at a full queue, admit up to
+    /// one extra queue-depth of overflow and answer those requests
+    /// with a loosened first-order solve flagged `degraded: true`
+    /// ([`crate::api::Session::solve_degraded`]). `queue_depth == 0`
+    /// still sheds everything.
+    pub degraded: bool,
+    /// Server-wide deadline stamped on requests that carry no
+    /// `timeout_ms` of their own; `None` leaves them unbounded.
+    pub default_timeout_ms: Option<u64>,
     /// Solver configuration stamped onto every per-client session.
     pub solver: Solver,
 }
@@ -79,6 +88,8 @@ impl Default for ServeOptions {
             warm_budget_bytes: 64 * 1024 * 1024,
             retry_after_ms: 50,
             max_frame_bytes: 1024 * 1024,
+            degraded: false,
+            default_timeout_ms: None,
             solver: Solver::new(),
         }
     }
@@ -106,6 +117,12 @@ pub struct StatsSnapshot {
     pub shard_misses: u64,
     /// Client sessions currently resident across all shards.
     pub resident_sessions: u64,
+    /// Admitted jobs shed at dequeue because their deadline passed
+    /// while they waited in the queue (`deadline_exceeded`).
+    pub expired: u64,
+    /// Overflow requests answered by the degraded path instead of
+    /// being shed.
+    pub degraded: u64,
 }
 
 struct Job {
@@ -115,6 +132,14 @@ struct Job {
     seq: u64,
     client: String,
     req: SolveRequest,
+    /// When the job entered the queue (for expiry diagnostics).
+    admitted: Instant,
+    /// Absolute solve deadline (request `timeout_ms`, or the server
+    /// default); checked again at dequeue so queue time counts.
+    deadline: Option<Instant>,
+    /// Admitted through the degraded overflow path: answer with a
+    /// loosened first-order solve instead of the full pipeline.
+    degraded: bool,
 }
 
 struct Completion {
@@ -144,6 +169,18 @@ struct Shared {
     responses: AtomicU64,
     shed: AtomicU64,
     malformed: AtomicU64,
+    expired: AtomicU64,
+    degraded_served: AtomicU64,
+    /// Reloadable knobs, seeded from [`ServeOptions`] and swappable at
+    /// runtime through the `{"reload": ...}` admin frame without
+    /// dropping connections.
+    queue_depth: AtomicUsize,
+    retry_after_ms: AtomicU64,
+    /// Per-shard warm byte budget (total budget / shard count).
+    per_shard_budget: AtomicUsize,
+    degraded: AtomicBool,
+    /// Server-wide default deadline in ms; `0` = none.
+    default_timeout_ms: AtomicU64,
 }
 
 /// A running server. Dropping the handle does **not** stop the worker
@@ -178,6 +215,8 @@ impl Server {
             .collect();
         let completions = (0..nworkers).map(|_| Mutex::new(VecDeque::new())).collect();
 
+        let (queue_depth, retry_after_ms) = (opts.queue_depth, opts.retry_after_ms);
+        let (degraded, default_timeout) = (opts.degraded, opts.default_timeout_ms.unwrap_or(0));
         let shared = Arc::new(Shared {
             opts,
             nworkers,
@@ -191,6 +230,13 @@ impl Server {
             responses: AtomicU64::new(0),
             shed: AtomicU64::new(0),
             malformed: AtomicU64::new(0),
+            expired: AtomicU64::new(0),
+            degraded_served: AtomicU64::new(0),
+            queue_depth: AtomicUsize::new(queue_depth),
+            retry_after_ms: AtomicU64::new(retry_after_ms),
+            per_shard_budget: AtomicUsize::new(per_shard_budget),
+            degraded: AtomicBool::new(degraded),
+            default_timeout_ms: AtomicU64::new(default_timeout),
         });
 
         let mut handles = Vec::with_capacity(nworkers);
@@ -253,6 +299,8 @@ fn snapshot(shared: &Shared) -> StatsSnapshot {
         responses: shared.responses.load(Ordering::Relaxed),
         shed: shared.shed.load(Ordering::Relaxed),
         malformed: shared.malformed.load(Ordering::Relaxed),
+        expired: shared.expired.load(Ordering::Relaxed),
+        degraded: shared.degraded_served.load(Ordering::Relaxed),
         ..StatsSnapshot::default()
     };
     for shard in &shared.shards {
@@ -343,6 +391,16 @@ fn error_line(seq: u64, err: &ApiError, retry_after_ms: Option<u64>) -> String {
     }
     with_seq(&mut doc, seq);
     doc.to_string_compact()
+}
+
+/// Back-off hint for shed responses: the configured base scaled by the
+/// shard queue length at shed time, so clients back off harder the
+/// deeper the backlog — bounded above (32× the base, and one minute)
+/// so a momentary spike cannot park clients forever. An empty queue
+/// returns exactly the base.
+fn adaptive_retry_ms(base: u64, queue_len: usize) -> u64 {
+    let base = base.max(1);
+    base.saturating_mul(1 + queue_len as u64).min(base.saturating_mul(32)).min(60_000)
 }
 
 const MAX_SOLVES_PER_PASS: usize = 4;
@@ -469,6 +527,9 @@ fn handle_frame(w: usize, conn_id: u64, conn: &mut Conn, frame: Frame, sh: &Shar
                     admit_request(w, conn_id, conn, item, sh);
                 }
             }
+            // An admin frame ({"reload": {...}}) swaps the reloadable
+            // serving knobs in place; everything else is a request.
+            Ok(doc) if doc.get("reload").is_some() => handle_reload(conn, &doc, sh),
             Ok(doc) => admit_request(w, conn_id, conn, &doc, sh),
             Err(e) => {
                 let seq = conn.take_seq();
@@ -523,19 +584,119 @@ fn admit_request(w: usize, conn_id: u64, conn: &mut Conn, doc: &Json, sh: &Share
         None => format!("conn-{conn_id}"),
     };
     let shard = shard_of(&client, sh.shards.len());
+    // Deadline: the request's own timeout, falling back to the server
+    // default. Stamped as an absolute instant so time spent queued
+    // counts against it.
+    let timeout_ms = req.options.timeout_ms.or({
+        let d = sh.default_timeout_ms.load(Ordering::Relaxed);
+        (d > 0).then_some(d)
+    });
+    let admitted = Instant::now();
+    let deadline = timeout_ms.map(|ms| admitted + Duration::from_millis(ms));
+    let depth = sh.queue_depth.load(Ordering::Relaxed);
     let mut queue = lock_unpoisoned(&sh.shards[shard].queue);
-    if queue.len() >= sh.opts.queue_depth {
+    let qlen = queue.len();
+    let overflow = qlen >= depth;
+    // Degraded mode absorbs up to one extra queue-depth of overflow
+    // with loosened solves; `depth == 0` still sheds everything.
+    let degraded =
+        overflow && sh.degraded.load(Ordering::Relaxed) && qlen < depth.saturating_mul(2);
+    if overflow && !degraded {
         drop(queue);
         sh.shed.fetch_add(1, Ordering::Relaxed);
-        let ms = sh.opts.retry_after_ms;
+        let ms = adaptive_retry_ms(sh.retry_after_ms.load(Ordering::Relaxed), qlen);
         let err = ApiError::from(Error::Overloaded { retry_after_ms: ms });
         conn.queue_line(&error_line(seq, &err, Some(ms)));
         return;
     }
-    queue.push_back(Job { worker: w, conn: conn_id, seq, client, req });
+    queue.push_back(Job {
+        worker: w,
+        conn: conn_id,
+        seq,
+        client,
+        req,
+        admitted,
+        deadline,
+        degraded,
+    });
     drop(queue);
     sh.pending.fetch_add(1, Ordering::SeqCst);
     conn.inflight += 1;
+}
+
+/// Apply a `{"reload": {...}}` admin frame: swap the reloadable
+/// serving knobs (`queue_depth`, `retry_after_ms`, `warm_budget_kb`,
+/// `degraded`, `default_timeout_ms`; the latter `0` clears the
+/// default) without dropping a single connection. A shrunken warm
+/// budget takes effect on each shard's next post-solve eviction pass.
+/// Unknown keys are a typed `config` error; the ack echoes every
+/// effective value.
+fn handle_reload(conn: &mut Conn, doc: &Json, sh: &Shared) {
+    let seq = conn.take_seq();
+    let applied = (|| -> Result<()> {
+        let r = doc.req("reload")?;
+        const KNOWN: [&str; 5] =
+            ["queue_depth", "retry_after_ms", "warm_budget_kb", "degraded", "default_timeout_ms"];
+        let Json::Object(kv) = r else {
+            return Err(Error::Config(format!("reload must be an object, got {r:?}")));
+        };
+        if let Some((k, _)) = kv.iter().find(|(k, _)| !KNOWN.contains(&k.as_str())) {
+            return Err(Error::Config(format!("unknown reload key `{k}`")));
+        }
+        if let Some(v) = r.get("queue_depth") {
+            sh.queue_depth.store(v.as_usize()?, Ordering::Relaxed);
+        }
+        if let Some(v) = r.get("retry_after_ms") {
+            sh.retry_after_ms.store(v.as_usize()? as u64, Ordering::Relaxed);
+        }
+        if let Some(v) = r.get("warm_budget_kb") {
+            let per_shard = (v.as_usize()? * 1024 / sh.shards.len()).max(1);
+            sh.per_shard_budget.store(per_shard, Ordering::Relaxed);
+            for shard in &sh.shards {
+                lock_unpoisoned(&shard.sessions).set_budget(per_shard);
+            }
+        }
+        if let Some(v) = r.get("degraded") {
+            sh.degraded.store(v.as_bool()?, Ordering::Relaxed);
+        }
+        if let Some(v) = r.get("default_timeout_ms") {
+            sh.default_timeout_ms.store(v.as_usize()? as u64, Ordering::Relaxed);
+        }
+        Ok(())
+    })();
+    match applied {
+        Ok(()) => {
+            let per_shard = sh.per_shard_budget.load(Ordering::Relaxed);
+            let mut doc = Json::Object(vec![(
+                "reloaded".into(),
+                Json::Object(vec![
+                    (
+                        "queue_depth".into(),
+                        Json::Num(sh.queue_depth.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
+                        "retry_after_ms".into(),
+                        Json::Num(sh.retry_after_ms.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
+                        "warm_budget_bytes".into(),
+                        Json::Num((per_shard * sh.shards.len()) as f64),
+                    ),
+                    ("degraded".into(), Json::Bool(sh.degraded.load(Ordering::Relaxed))),
+                    (
+                        "default_timeout_ms".into(),
+                        Json::Num(sh.default_timeout_ms.load(Ordering::Relaxed) as f64),
+                    ),
+                ]),
+            )]);
+            with_seq(&mut doc, seq);
+            conn.queue_line(&doc.to_string_compact());
+        }
+        Err(e) => {
+            sh.malformed.fetch_add(1, Ordering::Relaxed);
+            conn.queue_line(&error_line(seq, &ApiError::from(e), None));
+        }
+    }
 }
 
 fn drain_completions(w: usize, conns: &mut HashMap<u64, Conn>, sh: &Shared) -> bool {
@@ -567,27 +728,33 @@ fn solve_some(w: usize, conns: &mut HashMap<u64, Conn>, sh: &Shared) -> bool {
                 continue;
             }
             while solved < MAX_SOLVES_PER_PASS {
-                let job = {
+                let (job, qlen) = {
                     let mut queue = lock_unpoisoned(&shard.queue);
-                    if own {
-                        queue.pop_front()
-                    } else {
-                        queue.pop_back()
-                    }
+                    let j = if own { queue.pop_front() } else { queue.pop_back() };
+                    let remaining = queue.len();
+                    (j, remaining)
                 };
                 let Some(job) = job else { break };
+                // A job whose deadline passed while it queued is shed
+                // here, with a back-off hint, without consuming one of
+                // this pass's solve slots — expiry must not starve the
+                // live jobs behind it.
+                if job.deadline.is_some_and(|dl| Instant::now() >= dl) {
+                    sh.expired.fetch_add(1, Ordering::Relaxed);
+                    sh.responses.fetch_add(1, Ordering::Relaxed);
+                    let ms =
+                        adaptive_retry_ms(sh.retry_after_ms.load(Ordering::Relaxed), qlen);
+                    let err = ApiError::from(Error::DeadlineExceeded {
+                        elapsed_ms: job.admitted.elapsed().as_millis() as u64,
+                        iterations: 0,
+                        phase: "queue".into(),
+                    });
+                    deliver(w, conns, sh, &job, error_line(job.seq, &err, Some(ms)));
+                    continue;
+                }
                 solved += 1;
                 let line = solve_job(s, &job, sh);
-                if job.worker == w {
-                    if let Some(conn) = conns.get_mut(&job.conn) {
-                        conn.queue_line(&line);
-                        conn.inflight = conn.inflight.saturating_sub(1);
-                    }
-                    sh.pending.fetch_sub(1, Ordering::SeqCst);
-                } else {
-                    lock_unpoisoned(&sh.completions[job.worker])
-                        .push_back(Completion { conn: job.conn, line });
-                }
+                deliver(w, conns, sh, &job, line);
             }
             if solved >= MAX_SOLVES_PER_PASS {
                 break;
@@ -600,16 +767,45 @@ fn solve_some(w: usize, conns: &mut HashMap<u64, Conn>, sh: &Shared) -> bool {
     solved > 0
 }
 
+/// Route a finished line back to the job's connection: directly when
+/// this worker owns it, through the owner's completion inbox
+/// otherwise.
+fn deliver(w: usize, conns: &mut HashMap<u64, Conn>, sh: &Shared, job: &Job, line: String) {
+    if job.worker == w {
+        if let Some(conn) = conns.get_mut(&job.conn) {
+            conn.queue_line(&line);
+            conn.inflight = conn.inflight.saturating_sub(1);
+        }
+        sh.pending.fetch_sub(1, Ordering::SeqCst);
+    } else {
+        lock_unpoisoned(&sh.completions[job.worker])
+            .push_back(Completion { conn: job.conn, line });
+    }
+}
+
 /// Solve one admitted job on its shard's warm session and render the
 /// response line. A panicking solve costs the client its warm session
 /// and yields a `worker_panicked` error — never a dead worker.
 fn solve_job(shard_idx: usize, job: &Job, sh: &Shared) -> String {
     let shard = &sh.shards[shard_idx];
+    // Re-stamp the deadline as the time still remaining, so the solve
+    // budget accounts for time already spent in the queue.
+    let mut req = job.req.clone();
+    if let Some(dl) = job.deadline {
+        let left = dl.saturating_duration_since(Instant::now());
+        req.options.timeout_ms = Some(left.as_millis() as u64);
+    }
     let (outcome, shard_hit, evictions, resident) = {
         let mut sessions = lock_unpoisoned(&shard.sessions);
         let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             let (session, hit) = sessions.session_for(&job.client);
-            (session.solve(&job.req), hit)
+            let out = if job.degraded {
+                sh.degraded_served.fetch_add(1, Ordering::Relaxed);
+                session.solve_degraded(&req)
+            } else {
+                session.solve(&req)
+            };
+            (out, hit)
         }));
         match caught {
             Ok((result, hit)) => {
@@ -652,6 +848,21 @@ mod tests {
                 assert_eq!(s, shard_of(client, nshards), "stable");
             }
         }
+    }
+
+    #[test]
+    fn adaptive_retry_hint_scales_with_queue_and_is_bounded() {
+        // Empty queue: exactly the configured base (pinned by the
+        // framing tests' zero-depth shed case).
+        assert_eq!(adaptive_retry_ms(17, 0), 17);
+        // Deeper queue => larger hint.
+        assert!(adaptive_retry_ms(17, 4) > adaptive_retry_ms(17, 1));
+        assert!(adaptive_retry_ms(17, 1) > adaptive_retry_ms(17, 0));
+        // Bounded above: 32x the base, and one minute overall.
+        assert_eq!(adaptive_retry_ms(17, 1_000_000), 17 * 32);
+        assert_eq!(adaptive_retry_ms(50_000, 1_000_000), 60_000);
+        // A zero base still yields a finite, nonzero hint.
+        assert!(adaptive_retry_ms(0, 5) >= 1);
     }
 
     #[test]

@@ -119,6 +119,13 @@ impl SessionShard {
     pub fn budget_bytes(&self) -> usize {
         self.budget_bytes
     }
+
+    /// Swap the byte budget (hot reload). Nothing is evicted eagerly;
+    /// a shrunken budget takes effect on the next
+    /// [`SessionShard::evict_to_budget`] call after a solve.
+    pub fn set_budget(&mut self, bytes: usize) {
+        self.budget_bytes = bytes.max(1);
+    }
 }
 
 #[cfg(test)]

@@ -37,6 +37,9 @@ fn arb_options(g: &mut Gen, family: Family, m: usize) -> RequestOptions {
         o.pdhg_max_blocks = Some(g.usize_in(1, 5000));
     }
     if g.bool() {
+        o.timeout_ms = Some(g.usize_in(1, 600_000) as u64);
+    }
+    if g.bool() {
         o.factorization = Some(match g.usize_in(0, 4) {
             0 => Factorization::ProductFormEta,
             1 => Factorization::ForrestTomlin,
@@ -135,6 +138,8 @@ fn response_roundtrip_all_families() {
         assert_eq!(back.makespan, resp.makespan);
         assert_eq!(back.diagnostics.iterations, resp.diagnostics.iterations);
         assert_eq!(back.diagnostics.presolve, resp.diagnostics.presolve);
+        assert_eq!(back.diagnostics.recovery_events, resp.diagnostics.recovery_events);
+        assert_eq!(back.degraded, resp.degraded);
         // And the reconstructed schedule is self-consistent.
         let sched = back.schedule();
         assert_eq!(sched.model, family.timing_model());
@@ -163,6 +168,51 @@ fn response_roundtrip_with_sim_diagnostics() {
     let back = SolveResponse::from_json(&Json::parse(&text).unwrap()).unwrap();
     let back_sim = back.diagnostics.sim.expect("sim diagnostics decoded");
     assert_eq!(back_sim, sim);
+}
+
+/// Robustness fields survive the wire: `recovery_events` and the
+/// `degraded` flag round-trip when present, and responses encoded
+/// before those fields existed still decode (absent => empty/false).
+#[test]
+fn response_roundtrip_robustness_fields() {
+    let spec = dlt::model::SystemSpec::builder()
+        .source(0.2, 0.0)
+        .source(0.3, 2.0)
+        .processors(&[2.0, 3.0, 4.0])
+        .job(100.0)
+        .build()
+        .unwrap();
+    let mut session = Solver::new().build();
+    let req = SolveRequest::new(Family::NoFrontend, spec);
+    let mut resp = session.solve(&req).unwrap();
+    resp.degraded = true;
+    resp.diagnostics.recovery_events =
+        vec!["early_refactorize".to_string(), "markowitz_retry".to_string()];
+    let text = resp.to_json().to_string_compact();
+    assert!(text.contains("\"degraded\""), "{text}");
+    assert!(text.contains("\"recovery_events\""), "{text}");
+    let back = SolveResponse::from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert!(back.degraded);
+    assert_eq!(back.diagnostics.recovery_events, resp.diagnostics.recovery_events);
+    // Legacy payloads predate both fields: strip them and re-decode.
+    let doc = Json::parse(&text).unwrap();
+    let Json::Object(pairs) = doc else { panic!("response is not an object") };
+    let legacy: Vec<(String, Json)> = pairs
+        .into_iter()
+        .map(|(k, v)| {
+            if k == "diagnostics" {
+                let Json::Object(dp) = v else { panic!("diagnostics is not an object") };
+                let kept = dp.into_iter().filter(|(dk, _)| dk != "recovery_events").collect();
+                (k, Json::Object(kept))
+            } else {
+                (k, v)
+            }
+        })
+        .filter(|(k, _)| k != "degraded")
+        .collect();
+    let old = SolveResponse::from_json(&Json::Object(legacy)).unwrap();
+    assert!(!old.degraded);
+    assert!(old.diagnostics.recovery_events.is_empty());
 }
 
 /// Malformed JSON documents are `Error::Config`, never a panic:

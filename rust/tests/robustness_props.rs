@@ -1,0 +1,213 @@
+//! Fail-operational properties: pathological LPs — degenerate,
+//! infeasible, unbounded, near-singular — must land on *typed*
+//! verdicts (never a panic) under every factorization × pricing arm,
+//! the dense oracle, and the first-order backends; zero deadlines are
+//! typed `DeadlineExceeded` through every pipeline backend; corrupted
+//! warm bases fall back cold and say so in `recovery_events`.
+
+use dlt::dlt::frontend::FeOptions;
+use dlt::error::Error;
+use dlt::lp::{
+    solve_warm, solve_with, Basis, Cmp, Factorization, LpProblem, LpSolution, Pricing,
+    SimplexOptions, SolverBackend,
+};
+use dlt::pdhg::{self, PdhgOptions};
+use dlt::pipeline::{self, Backend, PipelineOptions};
+use dlt::testkit::{arb_spec, props, Gen};
+
+const ALL_FACTS: [Factorization; 4] = [
+    Factorization::ProductFormEta,
+    Factorization::ForrestTomlin,
+    Factorization::Markowitz,
+    Factorization::BartelsGolub,
+];
+
+const ALL_PRICINGS: [Pricing; 4] =
+    [Pricing::Dantzig, Pricing::Devex, Pricing::SteepestEdge, Pricing::Partial];
+
+/// Random raw LP biased toward solver-hostile structure: duplicate
+/// rows (exact degeneracy), near-parallel rows scaled by `1 + 1e-12`
+/// (ill-conditioned bases), random `Eq`/`Ge` mixes (often infeasible),
+/// and an occasional forced infeasible pair or free improving ray.
+fn arb_pathological(g: &mut Gen) -> LpProblem {
+    let n = g.usize_in(2, 7);
+    let mut p = LpProblem::new(n);
+    let obj: Vec<f64> = (0..n).map(|_| g.f64_in(-3.0, 3.0)).collect();
+    p.set_objective(&obj);
+    for _ in 0..g.usize_in(1, 9) {
+        let mut coeffs: Vec<(usize, f64)> = Vec::new();
+        for j in 0..n {
+            if g.bool() {
+                coeffs.push((j, g.f64_in(-2.0, 2.0)));
+            }
+        }
+        if coeffs.is_empty() {
+            coeffs.push((g.usize_in(0, n), g.f64_in(-2.0, 2.0)));
+        }
+        let cmp = match g.usize_in(0, 3) {
+            0 => Cmp::Le,
+            1 => Cmp::Ge,
+            _ => Cmp::Eq,
+        };
+        let rhs = g.f64_in(-5.0, 5.0);
+        p.add_constraint(&coeffs, cmp, rhs);
+        if g.bool() && g.bool() {
+            p.add_constraint(&coeffs, cmp, rhs);
+        }
+        if g.bool() && g.bool() {
+            let near: Vec<(usize, f64)> =
+                coeffs.iter().map(|&(j, v)| (j, v * (1.0 + 1e-12))).collect();
+            p.add_constraint(&near, cmp, rhs * (1.0 + 1e-12));
+        }
+    }
+    match g.usize_in(0, 4) {
+        0 => {
+            // Deterministically infeasible pair.
+            p.add_constraint(&[(0, 1.0)], Cmp::Le, 1.0);
+            p.add_constraint(&[(0, 1.0)], Cmp::Ge, 2.0);
+        }
+        1 => {
+            // Improving direction that is often unconstrained above.
+            p.set_objective_coeff(n - 1, -1.0);
+        }
+        _ => {}
+    }
+    p
+}
+
+/// `Ok` must be a genuinely feasible finite point; `Err` must be one
+/// of the typed solver verdicts. Anything else fails the property
+/// (and a panic fails the test on its own).
+fn typed_verdict(
+    label: &str,
+    p: &LpProblem,
+    r: Result<LpSolution, Error>,
+) -> Result<(), String> {
+    match r {
+        Ok(s) => {
+            if !s.objective.is_finite() {
+                return Err(format!("{label}: non-finite objective {}", s.objective));
+            }
+            if let Some(v) = p.check_feasible(&s.x, 1e-5) {
+                return Err(format!("{label}: claimed optimal but infeasible: {v}"));
+            }
+            Ok(())
+        }
+        Err(
+            Error::Infeasible(_)
+            | Error::Unbounded(_)
+            | Error::Numerical(_)
+            | Error::IterationLimit { .. }
+            | Error::DeadlineExceeded { .. },
+        ) => Ok(()),
+        Err(e) => Err(format!("{label}: untyped verdict {e:?}")),
+    }
+}
+
+/// Every factorization × pricing arm, the dense tableau oracle, and
+/// raw sparse PDHG on solver-hostile random LPs: typed verdicts only.
+#[test]
+fn prop_pathological_lps_yield_typed_verdicts_never_panics() {
+    props("pathological lps -> typed verdicts", 30, |g| {
+        let p = arb_pathological(g);
+        for f in ALL_FACTS {
+            for pr in ALL_PRICINGS {
+                let opts = SimplexOptions {
+                    factorization: f,
+                    pricing: pr,
+                    ..SimplexOptions::default()
+                };
+                let label = format!("{}/{}", f.as_str(), pr.as_str());
+                typed_verdict(&label, &p, solve_with(&p, &opts))?;
+            }
+        }
+        let dense = SimplexOptions {
+            backend: SolverBackend::DenseTableau,
+            ..SimplexOptions::default()
+        };
+        typed_verdict("dense_tableau", &p, solve_with(&p, &dense))?;
+        // PDHG has no infeasibility certificate — it must still return
+        // (bounded blocks, typed error or a point), never panic.
+        let popts = PdhgOptions { max_blocks: 40, ..PdhgOptions::default() };
+        match pdhg::solve_rust(&p, &popts) {
+            Ok(ps) => {
+                if ps.converged && !ps.objective.is_finite() {
+                    return Err(format!("pdhg: converged to {}", ps.objective));
+                }
+            }
+            Err(e) => {
+                typed_verdict("pdhg", &p, Err(e))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+/// A zero deadline is a typed `DeadlineExceeded` through *every*
+/// pipeline backend — simplex arms, the dense oracle, sparse PDHG,
+/// the block driver, and the hybrid — never a silent full solve.
+#[test]
+fn prop_zero_deadline_is_typed_across_all_backends() {
+    const BACKENDS: [Backend; 5] = [
+        Backend::RevisedSimplex,
+        Backend::DenseTableau,
+        Backend::Pdhg,
+        Backend::PdhgBlock,
+        Backend::Hybrid,
+    ];
+    props("zero deadline -> DeadlineExceeded on every backend", 20, |g| {
+        let spec = arb_spec(g, 3, 5);
+        let model = FeOptions::default();
+        for backend in BACKENDS {
+            let opts =
+                PipelineOptions { backend, timeout_ms: Some(0), ..PipelineOptions::default() };
+            match pipeline::solve_full(&model, &spec, &opts, None, None) {
+                Err(Error::DeadlineExceeded { .. }) => {}
+                other => {
+                    return Err(format!(
+                        "{}: expected DeadlineExceeded, got {:?}",
+                        backend.as_str(),
+                        other.map(|s| s.schedule.makespan)
+                    ))
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Crafted singular / corrupted warm bases: the warm path must fall
+/// back to a cold start, reach the same optimum, and record the
+/// `warm_fallback_cold` recovery event (the same strings the session
+/// clones onto the wire `Diagnostics.recovery_events`).
+#[test]
+fn prop_corrupted_warm_bases_recover_cold_and_record_events() {
+    props("corrupt warm basis -> cold fallback + event", 25, |g| {
+        let spec = arb_spec(g, 3, 5);
+        let lp = dlt::dlt::frontend::build_lp(&spec, &FeOptions::default());
+        let opts = SimplexOptions::default();
+        let cold = solve_with(&lp, &opts).map_err(|e| format!("cold solve: {e}"))?;
+        let garbage = [
+            Basis { cols: vec![0] },                // wrong length
+            Basis { cols: vec![usize::MAX; 4] },    // all-artificial rows
+            Basis { cols: vec![0, 0, 0, 0] },       // duplicate (singular) columns
+        ];
+        for (k, basis) in garbage.iter().enumerate() {
+            let s = solve_warm(&lp, &opts, Some(basis))
+                .map_err(|e| format!("garbage basis #{k}: {e}"))?;
+            if (s.objective - cold.objective).abs() > 1e-7 * (1.0 + cold.objective.abs()) {
+                return Err(format!(
+                    "garbage basis #{k}: {} vs cold {}",
+                    s.objective, cold.objective
+                ));
+            }
+            if !s.recovery_events.iter().any(|e| e == "warm_fallback_cold") {
+                return Err(format!(
+                    "garbage basis #{k}: missing warm_fallback_cold in {:?}",
+                    s.recovery_events
+                ));
+            }
+        }
+        Ok(())
+    });
+}

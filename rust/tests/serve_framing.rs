@@ -305,6 +305,115 @@ fn tiny_budget_evicts_and_revisits_come_back_cold() {
 }
 
 #[test]
+fn degraded_mode_absorbs_overflow_with_flagged_answers() {
+    // One worker, one shard, queue depth 1: a batch array frame admits
+    // all its items back-to-back with no solving in between, so the
+    // overflow pattern is deterministic — 1 admitted, 1 degraded
+    // (queue_depth of overflow), 4 shed.
+    let (server, mut stream, mut reader) = boot(|o| {
+        o.workers = 1;
+        o.shards = 1;
+        o.queue_depth = 1;
+        o.degraded = true;
+        o.retry_after_ms = 10;
+    });
+    let items: Vec<String> = (0..6).map(|k| request_text("burst", &format!("b{k}"))).collect();
+    stream.write_all(format!("[{}]\n", items.join(", ")).as_bytes()).unwrap();
+    let docs = read_docs(&mut reader, 6);
+    let (mut normal, mut degraded, mut shed) = (0, 0, 0);
+    for doc in &docs {
+        match error_kind(doc) {
+            Some("overloaded") => {
+                shed += 1;
+                // The shard queue held 2 jobs at shed time, so the
+                // adaptive hint sits above the base and under its cap.
+                let hint = doc.req("retry_after_ms").unwrap().as_usize().unwrap();
+                assert!(hint > 10 && hint <= 10 * 32, "adaptive hint out of range: {hint}");
+            }
+            Some(k) => panic!("unexpected error kind `{k}`"),
+            None => {
+                assert!(doc.req("makespan").unwrap().as_f64().unwrap() > 0.0);
+                let flagged =
+                    doc.get("degraded").map(|d| d.as_bool().unwrap()).unwrap_or(false);
+                if flagged {
+                    degraded += 1;
+                } else {
+                    normal += 1;
+                }
+            }
+        }
+    }
+    assert_eq!((normal, degraded, shed), (1, 1, 4));
+    let stats = server.shutdown();
+    assert_eq!(stats.shed, 4);
+    assert_eq!(stats.degraded, 1);
+    assert_eq!(stats.responses, 2);
+}
+
+#[test]
+fn reload_swaps_knobs_without_dropping_the_connection() {
+    let (server, mut stream, mut reader) = boot(|o| {
+        o.workers = 1;
+        o.shards = 1;
+        o.retry_after_ms = 17;
+    });
+    // seq 0: a normal solve before the reload.
+    stream.write_all(format!("{}\n", request_text("alice", "pre")).as_bytes()).unwrap();
+    assert!(error_kind(&read_docs(&mut reader, 1)[0]).is_none());
+
+    // seq 1: the admin frame; the ack echoes the effective values.
+    stream
+        .write_all(b"{\"reload\": {\"queue_depth\": 0, \"retry_after_ms\": 23}}\n")
+        .unwrap();
+    let ack = &read_docs(&mut reader, 1)[0];
+    assert_eq!(seq_of(ack), 1);
+    let r = ack.req("reloaded").unwrap();
+    assert_eq!(r.req("queue_depth").unwrap().as_usize().unwrap(), 0);
+    assert_eq!(r.req("retry_after_ms").unwrap().as_usize().unwrap(), 23);
+
+    // seq 2: the same connection now sheds, with the new base hint.
+    stream.write_all(format!("{}\n", request_text("alice", "post")).as_bytes()).unwrap();
+    let post = &read_docs(&mut reader, 1)[0];
+    assert_eq!(error_kind(post), Some("overloaded"));
+    assert_eq!(post.req("retry_after_ms").unwrap().as_usize().unwrap(), 23);
+
+    // seq 3: an unknown reload key is a typed config error.
+    stream.write_all(b"{\"reload\": {\"shard_count\": 9}}\n").unwrap();
+    assert_eq!(error_kind(&read_docs(&mut reader, 1)[0]), Some("config"));
+
+    // seq 4-5: reload the depth back up and solve again — the
+    // connection was never dropped.
+    stream.write_all(b"{\"reload\": {\"queue_depth\": 8}}\n").unwrap();
+    let ack2 = &read_docs(&mut reader, 1)[0];
+    assert_eq!(
+        ack2.req("reloaded").unwrap().req("queue_depth").unwrap().as_usize().unwrap(),
+        8
+    );
+    stream.write_all(format!("{}\n", request_text("alice", "after")).as_bytes()).unwrap();
+    let after = &read_docs(&mut reader, 1)[0];
+    assert_eq!(seq_of(after), 5);
+    assert!(error_kind(after).is_none());
+
+    let stats = server.shutdown();
+    assert_eq!(stats.shed, 1);
+}
+
+#[test]
+fn zero_deadline_requests_answer_deadline_exceeded() {
+    let (server, mut stream, mut reader) = boot(|_| {});
+    let mut req = SolveRequest::new(Family::Frontend, spec());
+    req.id = Some("dl-0".into());
+    req.options.backend = Some(dlt::pipeline::Backend::Pdhg);
+    req.options.timeout_ms = Some(0);
+    stream.write_all(format!("{}\n", req.to_json().to_string_compact()).as_bytes()).unwrap();
+    // Whether the deadline fires in the queue or inside the solve, the
+    // wire answer is the same typed kind.
+    let doc = &read_docs(&mut reader, 1)[0];
+    assert_eq!(error_kind(doc), Some("deadline_exceeded"), "{doc:?}");
+    server.shutdown();
+}
+
+#[test]
 fn graceful_shutdown_answers_every_admitted_request() {
     let (server, mut stream, mut reader) = boot(|_| {});
     for k in 0..6 {

@@ -1,0 +1,284 @@
+#!/usr/bin/env python3
+"""Chaos smoke against a live `dlt serve` — stdlib only.
+
+Boot a server (CI boots it with `--degraded --queue-depth 16
+--default-timeout-ms 2000`), then run:
+
+    python3 scripts/chaos_smoke.py --port 4519 --clients 8 --requests 40
+
+Each client thread drives one persistent connection with a seeded
+random mix of traffic: normal solves across all four families, solves
+carrying a real `timeout_ms` deadline, zero-deadline solves that must
+come back as typed `deadline_exceeded` (or `degraded: true` when the
+server absorbs them), malformed/garbage lines, an oversize frame, and
+`{"reload": {...}}` admin frames swapping server knobs mid-load. Two
+extra connections disconnect abruptly mid-stream without reading.
+
+Hard gates (non-zero exit on the first violation):
+
+- lost == 0: every frame sent on a surviving connection receives
+  exactly one response line (the per-connection `seq` stamps must
+  cover the send order with no gaps).
+- every shed (`overloaded`) response carries a finite
+  `retry_after_ms` in [1, 60000].
+- every deadline-cohort response arrives within 2x its deadline of
+  being sent (success, `degraded: true`, or `deadline_exceeded`).
+- at least one response across the run is `deadline_exceeded` or
+  `degraded: true` (the end-to-end deadline proof).
+- every reload frame is acknowledged with a `reloaded` echo.
+- clean drain: after the chaos, a fresh connection still gets a
+  correct solve from the same server.
+"""
+
+import argparse
+import json
+import random
+import socket
+import sys
+import threading
+import time
+
+SPEC = {
+    "sources": [{"g": 0.2, "release": 10.0}, {"g": 0.4, "release": 50.0}],
+    "processors": [{"a": 2.0}, {"a": 3.0}, {"a": 4.0}],
+    "job": 100.0,
+}
+
+FAMILIES = ["frontend", "no_frontend", "concurrent", "multi_job"]
+
+GARBAGE_LINES = [
+    "this is not json",
+    '{"family": 42, "spec": null}',
+    '{"truncated": ',
+    '"just a string"',
+]
+
+RELOAD_FRAMES = [
+    {"reload": {"degraded": True}},
+    {"reload": {"retry_after_ms": 25}},
+    {"reload": {"queue_depth": 16, "degraded": True}},
+]
+
+
+def build_solve(client, k, rng, timeout_ms=None, backend=None):
+    req = {
+        "client": client,
+        "id": f"{client}-{k}",
+        "family": rng.choice(FAMILIES),
+        "spec": dict(SPEC, job=100.0 + 25.0 * rng.randrange(8)),
+        "options": {},
+    }
+    if req["family"] == "multi_job":
+        req["options"]["proc_ready"] = [0.25] * len(SPEC["processors"])
+    if timeout_ms is not None:
+        req["options"]["timeout_ms"] = timeout_ms
+    if backend is not None:
+        req["options"]["backend"] = backend
+    return json.dumps(req)
+
+
+class ClientResult:
+    def __init__(self):
+        self.sent = 0
+        self.received = 0
+        self.ok = 0
+        self.shed = 0
+        self.deadline_exceeded = 0
+        self.degraded = 0
+        self.other_errors = 0
+        self.reload_acks = 0
+        self.failures = []
+
+
+def classify(resp, kind, sent_at, deadline_ms, out):
+    """Count one response line against the gates."""
+    out.received += 1
+    if "reloaded" in resp:
+        out.reload_acks += 1
+        return
+    if kind == "timed" and deadline_ms:
+        waited_ms = (time.monotonic() - sent_at) * 1e3
+        if waited_ms > 2 * deadline_ms:
+            out.failures.append(
+                f"timed request answered after {waited_ms:.0f}ms, "
+                f"deadline was {deadline_ms}ms (> 2x)")
+    if resp.get("degraded") is True:
+        out.degraded += 1
+    err = resp.get("error")
+    if err is None:
+        if "makespan" in resp:
+            out.ok += 1
+        return
+    k = err.get("kind")
+    if k == "overloaded":
+        out.shed += 1
+        retry = resp.get("retry_after_ms")
+        if not isinstance(retry, (int, float)) or not (1 <= retry <= 60_000):
+            out.failures.append(f"shed response without a sane retry hint: {resp}")
+    elif k == "deadline_exceeded":
+        out.deadline_exceeded += 1
+    else:
+        out.other_errors += 1
+
+
+def drain(wire, pending, out, deadline_ms):
+    """Read one response per pending frame, matching on `seq`."""
+    for _ in range(len(pending)):
+        line = wire.readline()
+        if not line:
+            out.failures.append(f"connection closed with {len(pending)} in flight")
+            return False
+        resp = json.loads(line)
+        seq = resp.get("seq")
+        if seq not in pending:
+            out.failures.append(f"response with unknown seq {seq}: {line[:120]}")
+            return False
+        kind, sent_at = pending.pop(seq)
+        classify(resp, kind, sent_at, deadline_ms, out)
+    return True
+
+
+def run_client(idx, args, results):
+    rng = random.Random(args.seed * 1000 + idx)
+    out = ClientResult()
+    results[idx] = out
+    try:
+        with socket.create_connection((args.host, args.port), timeout=60) as sock:
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            wire = sock.makefile("rw", encoding="utf-8", newline="\n")
+            pending = {}  # seq -> (kind, sent_at)
+            seq = 0
+            for k in range(args.requests):
+                roll = rng.random()
+                if idx == 0 and k == 3:
+                    # One oversize frame: dropped server-side, answered
+                    # with a typed config error, stream must recover.
+                    kind, line = "garbage", "x" * (args.oversize_bytes)
+                elif roll < 0.60:
+                    kind, line = "normal", build_solve(f"chaos-{idx}", k, rng)
+                elif roll < 0.75:
+                    kind, line = "timed", build_solve(
+                        f"chaos-{idx}", k, rng, timeout_ms=args.deadline_ms)
+                elif roll < 0.85:
+                    # Zero budget on a first-order backend: typed
+                    # deadline_exceeded (or absorbed as degraded).
+                    kind, line = "timed", build_solve(
+                        f"chaos-{idx}", k, rng, timeout_ms=0, backend="pdhg")
+                elif roll < 0.95:
+                    kind, line = "garbage", rng.choice(GARBAGE_LINES)
+                else:
+                    kind, line = "reload", json.dumps(rng.choice(RELOAD_FRAMES))
+                wire.write(line + "\n")
+                wire.flush()
+                pending[seq] = (kind, time.monotonic())
+                out.sent += 1
+                seq += 1
+                if len(pending) >= args.window:
+                    if not drain(wire, pending, out, args.deadline_ms):
+                        return
+            drain(wire, pending, out, args.deadline_ms)
+    except OSError as e:
+        out.failures.append(f"client {idx}: connection error: {e}")
+
+
+def run_disconnector(idx, args):
+    """Send a few frames and vanish without reading; the server must
+    absorb the half-closed connection without taking anyone down."""
+    rng = random.Random(args.seed * 7000 + idx)
+    try:
+        sock = socket.create_connection((args.host, args.port), timeout=10)
+        wire = sock.makefile("w", encoding="utf-8", newline="\n")
+        for k in range(3):
+            wire.write(build_solve(f"vanish-{idx}", k, rng) + "\n")
+        wire.flush()
+        # Half a truncated frame, then an abrupt close.
+        sock.sendall(b'{"family": "frontend", "spec"')
+        sock.close()
+    except OSError:
+        pass  # a reset here is the server's prerogative
+
+
+def final_probe(args):
+    """Clean-drain proof: the same server still solves correctly."""
+    with socket.create_connection((args.host, args.port), timeout=30) as sock:
+        wire = sock.makefile("rw", encoding="utf-8", newline="\n")
+        rng = random.Random(args.seed)
+        wire.write(build_solve("probe", 0, rng) + "\n")
+        # Restore a sane post-chaos config while we are here.
+        wire.write(json.dumps({"reload": {"queue_depth": 16}}) + "\n")
+        wire.flush()
+        saw_solve, saw_ack = False, False
+        for _ in range(2):
+            resp = json.loads(wire.readline())
+            if "makespan" in resp and resp["makespan"] > 0:
+                saw_solve = True
+            if "reloaded" in resp:
+                saw_ack = True
+        return saw_solve and saw_ack
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=4519)
+    ap.add_argument("--seed", type=int, default=42)
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=40, help="frames per client")
+    ap.add_argument("--window", type=int, default=4, help="max frames in flight")
+    ap.add_argument("--deadline-ms", type=int, default=500)
+    ap.add_argument("--oversize-bytes", type=int, default=1024 * 1024 + 64)
+    args = ap.parse_args()
+
+    results = [None] * args.clients
+    threads = [
+        threading.Thread(target=run_client, args=(i, args, results))
+        for i in range(args.clients)
+    ]
+    threads += [
+        threading.Thread(target=run_disconnector, args=(i, args)) for i in range(2)
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+
+    failures = []
+    totals = ClientResult()
+    for i, r in enumerate(results):
+        if r is None:
+            failures.append(f"client {i} never ran")
+            continue
+        failures.extend(r.failures)
+        if r.received != r.sent:
+            failures.append(
+                f"client {i}: lost {r.sent - r.received} of {r.sent} frames")
+        for field in ("sent", "received", "ok", "shed", "deadline_exceeded",
+                      "degraded", "other_errors", "reload_acks"):
+            setattr(totals, field, getattr(totals, field) + getattr(r, field))
+
+    print(f"chaos_smoke: {totals.sent} frames -> {totals.received} responses "
+          f"({totals.ok} ok, {totals.shed} shed, "
+          f"{totals.deadline_exceeded} deadline_exceeded, "
+          f"{totals.degraded} degraded, {totals.other_errors} other errors, "
+          f"{totals.reload_acks} reload acks)")
+
+    if totals.deadline_exceeded + totals.degraded == 0:
+        failures.append("no deadline_exceeded or degraded response in the "
+                        "entire run — the deadline path never engaged")
+    try:
+        if not final_probe(args):
+            failures.append("post-chaos probe did not get a solve + reload ack")
+    except (OSError, ValueError) as e:
+        failures.append(f"post-chaos probe failed: {e}")
+
+    if failures:
+        for f in failures:
+            print(f"chaos_smoke: FAIL: {f}", file=sys.stderr)
+        return 1
+    print("chaos_smoke: ok (lost=0, retry hints finite, deadlines honored, "
+          "server survived)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

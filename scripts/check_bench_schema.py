@@ -37,6 +37,11 @@ Two layers, both fatal on failure:
      not exceed the cold-simplex pivot total, and knee refinement must
      localize a non-degenerate bracket in fewer solves than the
      equivalent uniform fine grid.
+   - robustness: the fail-operational guards — the amortized deadline
+     check must cost <= 2% on the warm hot path, a corrupted warm
+     basis must record at least one recovery event while falling back
+     cold, and a non-converging solve under a wall-clock deadline must
+     return the typed error within 2x the deadline.
 
 Exit status is non-zero on the first violation.
 """
@@ -316,6 +321,52 @@ def gate_pdhg(doc, name):
           f"{hy['cold_simplex_pivots']} pivots; knee in {ref['refine_solves']} solves")
 
 
+# Sections a BENCH_robustness.json must carry.
+ROBUSTNESS_OVERHEAD_KEYS = {"solves", "baseline_ms", "budgeted_ms", "overhead_pct"}
+ROBUSTNESS_LADDER_KEYS = {"cold_ms", "engage_ms", "recovery_events_count"}
+ROBUSTNESS_DEADLINE_KEYS = {"timeout_ms", "observed_ms", "within_factor", "typed_error"}
+
+
+def gate_robustness(doc, name):
+    over = doc.get("deadline_overhead")
+    if not over:
+        fail(f"{name}: missing deadline_overhead section")
+    require_keys(over, ROBUSTNESS_OVERHEAD_KEYS, f"{name}: deadline_overhead")
+    if over["baseline_ms"] <= 0 or over["budgeted_ms"] <= 0:
+        fail(f"{name}: deadline_overhead sweeps did not run")
+    # The amortized check is one integer branch per pivot plus a rare
+    # clock read; the warm hot path must not feel it.
+    if over["overhead_pct"] > 2.0:
+        fail(f"{name}: deadline checks cost {over['overhead_pct']:.2f}% on the "
+             f"warm hot path, budget is <= 2%")
+
+    ladder = doc.get("ladder")
+    if not ladder:
+        fail(f"{name}: missing ladder section")
+    require_keys(ladder, ROBUSTNESS_LADDER_KEYS, f"{name}: ladder")
+    if ladder["recovery_events_count"] <= 0:
+        fail(f"{name}: corrupted warm basis recorded no recovery events")
+    if ladder["engage_ms"] <= 0:
+        fail(f"{name}: ladder engagement was not measured")
+
+    dl = doc.get("deadline_honored")
+    if not dl:
+        fail(f"{name}: missing deadline_honored section")
+    require_keys(dl, ROBUSTNESS_DEADLINE_KEYS, f"{name}: deadline_honored")
+    if not dl["typed_error"]:
+        fail(f"{name}: non-converging solve under deadline did not return "
+             f"the typed DeadlineExceeded error")
+    if dl["within_factor"] > 2.0:
+        fail(f"{name}: deadline honored only within {dl['within_factor']:.2f}x "
+             f"of the {dl['timeout_ms']}ms budget, need <= 2x")
+
+    print(f"  gate ok: deadline checks {over['overhead_pct']:+.2f}% on "
+          f"{over['solves']:.0f} warm solves; recovery recorded "
+          f"{ladder['recovery_events_count']:.0f} event(s) at "
+          f"{ladder['engage_ms']:.3f}ms; {dl['timeout_ms']:.0f}ms deadline honored "
+          f"within {dl['within_factor']:.2f}x")
+
+
 def reject_nonfinite(token):
     fail(f"non-finite literal `{token}` in document")
 
@@ -338,6 +389,8 @@ def main(paths):
             gate_sim(doc, path)
         if doc.get("group") == "pdhg":
             gate_pdhg(doc, path)
+        if doc.get("group") == "robustness":
+            gate_robustness(doc, path)
         print(f"check_bench_schema: {path}: ok")
 
 
